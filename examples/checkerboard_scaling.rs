@@ -1,0 +1,85 @@
+//! The §5.5 scalability story in miniature: train KronSVM and the explicit
+//! SMO baseline on growing checkerboard subsets, report train time, predict
+//! time and AUC — the data behind Fig. 7. Sizes are scaled to this container
+//! (pass `--max-m 800` etc. to push further).
+//!
+//! Run with: `cargo run --release --example checkerboard_scaling`
+
+use kronvt::baselines::{ExplicitSvm, ExplicitSvmConfig};
+use kronvt::data::checkerboard::CheckerboardConfig;
+use kronvt::eval::auc::auc;
+use kronvt::kernels::KernelKind;
+use kronvt::train::{KronSvm, SvmConfig};
+use kronvt::util::args::Args;
+use kronvt::util::timer::Timer;
+
+fn main() {
+    let args = Args::parse();
+    let max_m = args.get_usize("max-m", 400);
+    let baseline_cap = args.get_usize("baseline-cap", 4000);
+    let gaussian = KernelKind::Gaussian { gamma: 1.0 };
+
+    println!(
+        "{:>6} {:>8} | {:>12} {:>12} {:>7} | {:>12} {:>12} {:>7}",
+        "m=q", "edges", "kron train", "kron pred", "AUC", "smo train", "smo pred", "AUC"
+    );
+
+    let mut m = 50;
+    while m <= max_m {
+        let data = CheckerboardConfig { m, q: m, density: 0.25, noise: 0.2, seed: 9, ..Default::default() }.generate();
+        let (train, test) = data.zero_shot_split(0.3, 3);
+
+        // KronSVM (10 outer × 10 inner, λ = 2⁻⁷, as §5.5)
+        let timer = Timer::start();
+        let kron = KronSvm::new(SvmConfig {
+            lambda: 2f64.powi(-7),
+            kernel_d: gaussian,
+            kernel_t: gaussian,
+            outer_iters: 10,
+            inner_iters: 10,
+            ..Default::default()
+        })
+        .fit(&train)
+        .expect("kron train");
+        let kron_train = timer.elapsed_secs();
+        let timer = Timer::start();
+        let kron_scores = kron.predict(&test);
+        let kron_pred = timer.elapsed_secs();
+        let kron_auc = auc(&test.labels, &kron_scores);
+
+        // Explicit SMO baseline — only up to the cap (quadratic blow-up).
+        let (smo_train, smo_pred, smo_auc) = if train.n_edges() <= baseline_cap {
+            let timer = Timer::start();
+            let smo = ExplicitSvm::fit(
+                &train,
+                &ExplicitSvmConfig { c: 100.0, kernel: gaussian, ..Default::default() },
+            )
+            .expect("smo train");
+            let t_train = timer.elapsed_secs();
+            let timer = Timer::start();
+            let scores = smo.predict(&test);
+            let t_pred = timer.elapsed_secs();
+            (
+                format!("{t_train:>11.2}s"),
+                format!("{t_pred:>11.2}s"),
+                format!("{:>7.3}", auc(&test.labels, &scores)),
+            )
+        } else {
+            (format!("{:>12}", "(skipped)"), format!("{:>12}", "-"), format!("{:>7}", "-"))
+        };
+
+        println!(
+            "{:>6} {:>8} | {:>11.2}s {:>11.3}s {:>7.3} | {} {} {}",
+            m,
+            train.n_edges(),
+            kron_train,
+            kron_pred,
+            kron_auc,
+            smo_train,
+            smo_pred,
+            smo_auc
+        );
+        m *= 2;
+    }
+    println!("checkerboard_scaling OK");
+}

@@ -1,0 +1,163 @@
+"""AOT pipeline: lower the Layer-2 graphs to HLO **text** artifacts + a
+manifest the Rust runtime can discover.
+
+HLO text — NOT `lowered.compile()` / serialized protos — is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids, which the
+`xla` crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, args) -> str:
+    """Lower a jitted function to XLA HLO text via StableHLO."""
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+# Shape buckets. The Rust registry pads any smaller problem up to the next
+# bucket; keep the set small so `make artifacts` stays fast. ridge_train
+# buckets leave one vertex of padding headroom (bm > m callers use) — see
+# runtime/artifacts.rs::ridge_train.
+KRON_MV_BUCKETS = [
+    (64, 64, 1024),
+    (128, 128, 4096),
+    (256, 256, 8192),
+]
+GAUSSIAN_BUCKETS = [
+    (128, 128, 8),
+    (256, 256, 32),
+]
+RIDGE_BUCKETS = [
+    # (m, q, n, iters)
+    (128, 128, 4096, 50),
+]
+PREDICT_BUCKETS = [
+    # (u, v, t, m, q, n): test starts, test ends, test edges, train dims
+    (64, 64, 1024, 128, 128, 4096),
+]
+
+
+def build_artifacts(out_dir: str) -> list[dict]:
+    entries = []
+
+    for m, q, n in KRON_MV_BUCKETS:
+        name = f"kron_mv_m{m}_q{q}_n{n}"
+        text = to_hlo_text(
+            model.kron_mv_fn, (f32(m, m), f32(q, q), i32(n), i32(n), f32(n))
+        )
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            {"name": name, "kind": "kron_mv", "file": fname, "m": m, "q": q, "n": n}
+        )
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    for rows, cols, dim in GAUSSIAN_BUCKETS:
+        name = f"gaussian_kernel_r{rows}_c{cols}_d{dim}"
+        text = to_hlo_text(
+            model.gaussian_kernel_fn, (f32(rows, dim), f32(cols, dim), f32())
+        )
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "kind": "gaussian_kernel",
+                "file": fname,
+                "rows": rows,
+                "cols": cols,
+                "dim": dim,
+            }
+        )
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    for m, q, n, iters in RIDGE_BUCKETS:
+        name = f"ridge_train_m{m}_q{q}_n{n}_it{iters}"
+        text = to_hlo_text(
+            model.make_ridge_train_fn(iters),
+            (f32(m, m), f32(q, q), i32(n), i32(n), f32(n), f32()),
+        )
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "kind": "ridge_train",
+                "file": fname,
+                "m": m,
+                "q": q,
+                "n": n,
+                "iters": iters,
+            }
+        )
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    for u, v, t, m, q, n in PREDICT_BUCKETS:
+        name = f"predict_u{u}_v{v}_t{t}_m{m}_q{q}_n{n}"
+        text = to_hlo_text(
+            model.predict_fn,
+            (f32(u, m), f32(v, q), i32(n), i32(n), i32(t), i32(t), f32(n)),
+        )
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "kind": "predict",
+                "file": fname,
+                "u": u,
+                "v": v,
+                "t": t,
+                "m": m,
+                "q": q,
+                "n": n,
+            }
+        )
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    return entries
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    print(f"lowering artifacts to {args.out}")
+    entries = build_artifacts(args.out)
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(entries)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

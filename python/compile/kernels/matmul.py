@@ -1,0 +1,79 @@
+"""Layer-1 Pallas kernel: MXU-tiled matrix multiplication.
+
+This is the compute hot-spot of the dense generalized-vec-trick path
+(`P = K·V·Gᵀ`, DESIGN.md §Hardware-Adaptation). The paper's Algorithm 1 is a
+CPU-oriented per-edge gather/scatter; on TPU the profitable mapping is dense
+GEMMs on the MXU, so the kernel below tiles the operands into
+(block_m × block_k)·(block_k × block_n) VMEM blocks and accumulates over the
+K grid axis in f32.
+
+VMEM budget (per grid step, f32, 128³ blocks): 3 · 128·128·4 B = 192 KiB —
+comfortably under the ~16 MiB VMEM of a TPU core, leaving room for
+double-buffering by the Mosaic pipeliner. Arithmetic intensity at 128-blocks
+is 128/3 ≈ 43 flops/byte, above the MXU roofline knee, so the kernel is
+compute-bound on real hardware (interpret=True on CPU is for correctness
+only; see DESIGN.md §Perf).
+
+`interpret=True` is mandatory in this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, k_steps: int):
+    """One (i, j, k) grid step: o[i,j] (+)= x[i,k] @ y[k,j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _block(dim: int, preferred: int) -> int:
+    """Largest divisor of `dim` that is ≤ preferred (prefers MXU-native 128)."""
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def matmul(x: jax.Array, y: jax.Array, *, block: int = 128) -> jax.Array:
+    """`x @ y` via the Pallas tiled kernel (f32).
+
+    Shapes need not be multiples of `block`; the block size is shrunk to the
+    largest divisor ≤ `block` per dimension (AOT buckets are chosen so this
+    stays at 64/128 — see `aot.py`).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"matmul shape mismatch: {x.shape} @ {y.shape}"
+    bm = _block(m, block)
+    bk = _block(k, block)
+    bn = _block(n, block)
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def matmul_nt(x: jax.Array, y: jax.Array, *, block: int = 128) -> jax.Array:
+    """`x @ yᵀ` (convenience wrapper used by the kron_mv graph)."""
+    return matmul(x, y.T, block=block)

@@ -1,0 +1,59 @@
+"""Layer-1 Pallas kernel: tiled Gaussian (RBF) kernel matrix.
+
+Computes `K[i,j] = exp(-γ‖x_i − y_j‖²)` blockwise via the Gram-matrix
+identity `‖x−y‖² = ‖x‖² + ‖y‖² − 2⟨x,y⟩`: each grid step loads a
+(block_r × d) row panel and a (block_c × d) column panel into VMEM, runs the
+inner-product block on the MXU, and applies the exp on the VPU. The feature
+dimension `d` stays whole inside the block (kernel feature dims here are
+small: 1–64 padded to 8/32 lanes).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pairwise_kernel(x_ref, y_ref, gamma_ref, o_ref):
+    x = x_ref[...]  # (br, d)
+    y = y_ref[...]  # (bc, d)
+    gamma = gamma_ref[0]
+    xx = jnp.sum(x * x, axis=1, keepdims=True)  # (br, 1)
+    yy = jnp.sum(y * y, axis=1, keepdims=True).T  # (1, bc)
+    xy = jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+    sq = jnp.maximum(xx + yy - 2.0 * xy, 0.0)
+    o_ref[...] = jnp.exp(-gamma * sq)
+
+
+def _block(dim: int, preferred: int) -> int:
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def gaussian_matrix(
+    x: jax.Array, y: jax.Array, gamma: jax.Array, *, block: int = 128
+) -> jax.Array:
+    """Gaussian kernel matrix between row-feature arrays (f32)."""
+    r, d = x.shape
+    c, d2 = y.shape
+    assert d == d2, f"feature dim mismatch: {x.shape} vs {y.shape}"
+    br = _block(r, block)
+    bc = _block(c, block)
+    grid = (r // br, c // bc)
+    gamma_arr = jnp.asarray(gamma, jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        _pairwise_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bc, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), y.astype(jnp.float32), gamma_arr)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 graphs.
+
+Everything here is the "obviously correct" formulation; pytest asserts the
+Pallas kernels and the AOT graphs match these within f32 tolerance.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Plain jnp matmul in f32."""
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def gaussian_matrix_ref(x, y, gamma):
+    """Gaussian kernel matrix via explicit pairwise differences."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    diff = x[:, None, :] - y[None, :, :]
+    sq = jnp.sum(diff * diff, axis=-1)
+    return jnp.exp(-jnp.asarray(gamma, jnp.float32) * sq)
+
+
+def kron_mv_ref(k, g, start, end, v):
+    """u_h = Σ_l G[e_h, e_l]·K[s_h, s_l]·v_l — the direct O(n²) formulation
+    (small test sizes only)."""
+    kk = k[start[:, None], start[None, :]]  # (n, n)
+    gg = g[end[:, None], end[None, :]]
+    return (kk * gg) @ v
+
+
+def predict_ref(khat, ghat, train_start, train_end, test_start, test_end, a):
+    """Zero-shot prediction oracle: p_h = Σ_l Ĝ[te_h, e_l]·K̂[ts_h, s_l]·a_l."""
+    kk = khat[test_start[:, None], train_start[None, :]]  # (t, n)
+    gg = ghat[test_end[:, None], train_end[None, :]]
+    return (kk * gg) @ a
+
+
+def ridge_train_ref(k, g, start, end, y, lam, iters):
+    """Fixed-iteration CG on (R(G⊗K)Rᵀ + λI)a = y, matching model.ridge_train
+    step-for-step but with the dense kron_mv oracle."""
+    kk = k[start[:, None], start[None, :]]
+    gg = g[end[:, None], end[None, :]]
+    q = kk * gg
+
+    def mv(x):
+        return q @ x + lam * x
+
+    a = jnp.zeros_like(y)
+    r = y - mv(a)
+    p = r
+    rs = r @ r
+    for _ in range(iters):
+        qp = mv(p)
+        alpha = rs / jnp.maximum(p @ qp, 1e-30)
+        a = a + alpha * p
+        r = r - alpha * qp
+        rs_new = r @ r
+        p = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
+        rs = rs_new
+    return a

@@ -1,0 +1,123 @@
+"""Layer-2 JAX graphs: the dense generalized-vec-trick path and a complete
+fixed-iteration Kronecker ridge trainer, built on the Layer-1 Pallas kernels.
+
+Each public function here is a *shape-static* computation that `aot.py`
+lowers to HLO text for the Rust runtime. Semantics mirror the native Rust
+implementations exactly (modulo f32):
+
+* `kron_mv`    — `u = R(G⊗K)Rᵀ v` via scatter → `K·V·Gᵀ` (Pallas matmuls) →
+  gather. This is the proof-of-Theorem-1 identity `R vec(N V Mᵀ)` executed
+  densely (DESIGN.md §Hardware-Adaptation).
+* `gaussian_kernel` — kernel-matrix computation (Pallas pairwise kernel).
+* `predict`    — zero-shot prediction `R̂(Ĝ⊗K̂)Rᵀ a`.
+* `ridge_train`— full CG solve of `(R(G⊗K)Rᵀ + λI)a = y` with a fixed
+  iteration count (`lax.fori_loop`, rolled — constant artifact size).
+
+Index conventions match the Rust side: each edge h carries a start-vertex
+index `start[h] ∈ [m]` (rows of K) and an end-vertex index `end[h] ∈ [q]`
+(rows of G).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.matmul import matmul
+from .kernels.pairwise import gaussian_matrix
+
+
+def kron_mv(k, g, start, end, v):
+    """`u = R(G⊗K)Rᵀ v` (dense path).
+
+    Args:
+      k: (m, m) f32 start-vertex kernel matrix.
+      g: (q, q) f32 end-vertex kernel matrix.
+      start: (n,) i32 start-vertex index per edge.
+      end: (n,) i32 end-vertex index per edge.
+      v: (n,) f32 input vector.
+
+    Returns:
+      (n,) f32 output `u_h = Σ_l K[s_h,s_l]·G[e_h,e_l]·v_l`.
+    """
+    m = k.shape[0]
+    q = g.shape[0]
+    v_mat = jnp.zeros((m, q), jnp.float32).at[start, end].add(v)
+    p = matmul(matmul(k, v_mat), g.T)  # K V Gᵀ, MXU-tiled
+    return p[start, end]
+
+
+def gaussian_kernel(x1, x2, gamma):
+    """Gaussian kernel matrix (Pallas pairwise kernel)."""
+    return gaussian_matrix(x1, x2, gamma)
+
+
+def predict(khat, ghat, train_start, train_end, test_start, test_end, a):
+    """Zero-shot prediction `p = R̂(Ĝ⊗K̂)Rᵀ a` (dense path).
+
+    Args:
+      khat: (u, m) f32 test×train start-vertex kernel block.
+      ghat: (v, q) f32 test×train end-vertex kernel block.
+      train_start/train_end: (n,) i32 training-edge indices.
+      test_start/test_end: (t,) i32 test-edge indices (into khat/ghat rows).
+      a: (n,) f32 dual coefficients.
+    """
+    m = khat.shape[1]
+    q = ghat.shape[1]
+    v_mat = jnp.zeros((m, q), jnp.float32).at[train_start, train_end].add(a)
+    p = matmul(matmul(khat, v_mat), ghat.T)  # K̂ V Ĝᵀ  (u × v)
+    return p[test_start, test_end]
+
+
+def ridge_train(k, g, start, end, y, lam, *, iters: int):
+    """Dual Kronecker ridge regression: `iters` CG steps on
+    `(R(G⊗K)Rᵀ + λI) a = y`, entirely on-device.
+
+    The CG state is carried through `lax.fori_loop`, so the lowered HLO has
+    constant size regardless of `iters`.
+    """
+
+    def mv(x):
+        return kron_mv(k, g, start, end, x) + lam * x
+
+    a0 = jnp.zeros_like(y)
+    r0 = y - mv(a0)
+    p0 = r0
+    rs0 = r0 @ r0
+
+    def body(_, state):
+        a, r, p, rs = state
+        qp = mv(p)
+        denom = jnp.maximum(p @ qp, 1e-30)
+        alpha = rs / denom
+        a = a + alpha * p
+        r = r - alpha * qp
+        rs_new = r @ r
+        beta = rs_new / jnp.maximum(rs, 1e-30)
+        p = r + beta * p
+        return (a, r, p, rs_new)
+
+    a, _, _, _ = lax.fori_loop(0, iters, body, (a0, r0, p0, rs0))
+    return a
+
+
+# ---------------------------------------------------------------------------
+# jit wrappers with the tuple outputs the AOT pipeline expects
+# ---------------------------------------------------------------------------
+
+def kron_mv_fn(k, g, start, end, v):
+    return (kron_mv(k, g, start, end, v),)
+
+
+def gaussian_kernel_fn(x1, x2, gamma):
+    return (gaussian_kernel(x1, x2, gamma),)
+
+
+def predict_fn(khat, ghat, train_start, train_end, test_start, test_end, a):
+    return (predict(khat, ghat, train_start, train_end, test_start, test_end, a),)
+
+
+def make_ridge_train_fn(iters: int):
+    def ridge_train_fn(k, g, start, end, y, lam):
+        return (ridge_train(k, g, start, end, y, lam, iters=iters),)
+
+    return ridge_train_fn

@@ -1,0 +1,77 @@
+"""Pallas tiled matmul vs the pure-jnp oracle (hypothesis shape/dtype sweep)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import matmul, matmul_nt, _block
+from compile.kernels.ref import matmul_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_random_shapes(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, k)
+    y = rand(rng, k, n)
+    got = matmul(x, y, block=32)
+    want = matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(128, 128, 128), (256, 64, 128), (64, 256, 192)])
+def test_matmul_bucket_shapes(shape):
+    m, k, n = shape
+    rng = np.random.default_rng(7)
+    x = rand(rng, m, k)
+    y = rand(rng, k, n)
+    np.testing.assert_allclose(matmul(x, y), matmul_ref(x, y), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64, jnp.bfloat16])
+def test_matmul_dtype_coercion(dtype):
+    # inputs of any float dtype are computed in f32
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((16, 16)), dtype)
+    y = jnp.asarray(rng.standard_normal((16, 16)), dtype)
+    got = matmul(x, y, block=16)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(
+        got, matmul_ref(x.astype(jnp.float32), y.astype(jnp.float32)),
+        rtol=2e-2, atol=2e-2,  # loose for bf16 inputs
+    )
+
+
+def test_matmul_nt():
+    rng = np.random.default_rng(5)
+    x = rand(rng, 24, 8)
+    y = rand(rng, 40, 8)
+    np.testing.assert_allclose(
+        matmul_nt(x, y), matmul_ref(x, y.T), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_block_divisor_helper():
+    assert _block(256, 128) == 128
+    assert _block(100, 128) == 100
+    assert _block(96, 64) == 48
+    assert _block(7, 128) == 7
+    assert _block(1, 128) == 1
+
+
+def test_matmul_rejects_mismatched_shapes():
+    with pytest.raises(AssertionError):
+        matmul(jnp.zeros((4, 5)), jnp.zeros((6, 4)))

@@ -1,0 +1,93 @@
+"""Layer-2 graphs vs oracles: kron_mv identity, prediction, ridge training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_psd(rng, n):
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    k = a @ a.T / n + np.eye(n, dtype=np.float32)
+    return jnp.asarray(k)
+
+
+def random_edges(rng, m, q, n):
+    start = jnp.asarray(rng.integers(0, m, n), jnp.int32)
+    end = jnp.asarray(rng.integers(0, q, n), jnp.int32)
+    return start, end
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(2, 24),
+    q=st.integers(2, 24),
+    n=st.integers(1, 60),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kron_mv_matches_oracle(m, q, n, seed):
+    rng = np.random.default_rng(seed)
+    k = random_psd(rng, m)
+    g = random_psd(rng, q)
+    start, end = random_edges(rng, m, q, n)
+    v = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    got = model.kron_mv(k, g, start, end, v)
+    want = ref.kron_mv_ref(k, g, start, end, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_kron_mv_accumulates_duplicate_edges():
+    rng = np.random.default_rng(23)
+    k = random_psd(rng, 4)
+    g = random_psd(rng, 4)
+    start = jnp.asarray([0, 0, 1], jnp.int32)
+    end = jnp.asarray([1, 1, 2], jnp.int32)  # duplicate edge (0, 1)
+    v = jnp.asarray([1.0, 2.0, 3.0], jnp.float32)
+    got = model.kron_mv(k, g, start, end, v)
+    want = ref.kron_mv_ref(k, g, start, end, v)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_predict_matches_oracle():
+    rng = np.random.default_rng(29)
+    m, q, n = 12, 10, 30
+    u, v_dim, t = 8, 6, 14
+    khat = jnp.asarray(rng.standard_normal((u, m)), jnp.float32)
+    ghat = jnp.asarray(rng.standard_normal((v_dim, q)), jnp.float32)
+    tr_s, tr_e = random_edges(rng, m, q, n)
+    te_s = jnp.asarray(rng.integers(0, u, t), jnp.int32)
+    te_e = jnp.asarray(rng.integers(0, v_dim, t), jnp.int32)
+    a = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    got = model.predict(khat, ghat, tr_s, tr_e, te_s, te_e, a)
+    want = ref.predict_ref(khat, ghat, tr_s, tr_e, te_s, te_e, a)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_ridge_train_matches_oracle_cg():
+    rng = np.random.default_rng(31)
+    m, q, n = 10, 9, 40
+    k = random_psd(rng, m)
+    g = random_psd(rng, q)
+    start, end = random_edges(rng, m, q, n)
+    y = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    got = model.ridge_train(k, g, start, end, y, 0.5, iters=25)
+    want = ref.ridge_train_ref(k, g, start, end, y, 0.5, 25)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_ridge_train_solves_system():
+    rng = np.random.default_rng(37)
+    m, q, n = 8, 8, 25
+    k = random_psd(rng, m)
+    g = random_psd(rng, q)
+    start, end = random_edges(rng, m, q, n)
+    y = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    lam = 1.0
+    a = model.ridge_train(k, g, start, end, y, lam, iters=150)
+    resid = ref.kron_mv_ref(k, g, start, end, a) + lam * a - y
+    assert float(jnp.linalg.norm(resid)) < 1e-3 * float(jnp.linalg.norm(y))

@@ -1,0 +1,75 @@
+"""Pallas Gaussian-kernel-matrix kernel vs the pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pairwise import gaussian_matrix
+from compile.kernels.ref import gaussian_matrix_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    r=st.integers(1, 64),
+    c=st.integers(1, 64),
+    d=st.integers(1, 16),
+    gamma=st.floats(1e-3, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gaussian_matches_ref_random_shapes(r, c, d, gamma, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((r, d)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((c, d)), jnp.float32)
+    got = gaussian_matrix(x, y, gamma, block=32)
+    want = gaussian_matrix_ref(x, y, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_bucket_shape_128():
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((128, 8)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((128, 8)), jnp.float32)
+    got = gaussian_matrix(x, y, 0.5)
+    want = gaussian_matrix_ref(x, y, 0.5)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_diagonal_is_one():
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.standard_normal((32, 4)), jnp.float32)
+    k = gaussian_matrix(x, x, 2.0, block=32)
+    # the Gram-matrix formulation leaves f32 round-off on the diagonal
+    np.testing.assert_allclose(jnp.diag(k), jnp.ones(32), rtol=2e-5, atol=2e-5)
+
+
+def test_values_in_unit_interval():
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.standard_normal((16, 3)) * 10, jnp.float32)
+    y = jnp.asarray(rng.standard_normal((24, 3)) * 10, jnp.float32)
+    k = np.asarray(gaussian_matrix(x, y, 1.0, block=8))
+    assert (k >= 0).all() and (k <= 1.0 + 1e-6).all()
+
+
+def test_zero_padding_feature_dim_is_exact():
+    # The Rust registry zero-pads feature dims up to the bucket; padding must
+    # not change the kernel values.
+    rng = np.random.default_rng(19)
+    x = jnp.asarray(rng.standard_normal((16, 3)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((16, 3)), jnp.float32)
+    xp = jnp.pad(x, ((0, 0), (0, 5)))
+    yp = jnp.pad(y, ((0, 0), (0, 5)))
+    np.testing.assert_allclose(
+        gaussian_matrix(x, y, 0.7, block=16),
+        gaussian_matrix(xp, yp, 0.7, block=16),
+        rtol=1e-6,
+        atol=1e-6,
+    )
+
+
+def test_feature_dim_mismatch_rejected():
+    with pytest.raises(AssertionError):
+        gaussian_matrix(jnp.zeros((4, 3)), jnp.zeros((4, 2)), 1.0)

@@ -1,0 +1,187 @@
+//! Tables 3 & 4 — complexity of the proposed generalized vec trick vs the
+//! explicit ("Baseline") approach, in the paper's three regimes:
+//!
+//! * Independent: n = m = q (no shared vertices)
+//! * Dependent:   max(m,q) << n << m·q      (the paper's main setting)
+//! * Complete:    n = m·q                   (R = I; plain vec trick)
+//!
+//! Prints measured matvec times and fitted scaling exponents in n for both
+//! the dual (kernel) and primal (feature) operators. Expected shape: equal
+//! asymptotics in the Independent regime; the proposed method wins by
+//! ~n/(m+q) in the Dependent regime; baseline exponent ≈ 2, proposed ≈ 1.
+//!
+//! Run: `cargo bench --bench bench_complexity [-- --full]`
+
+use kronvt::gvt::explicit::explicit_apply_streaming;
+use kronvt::gvt::{gvt_apply_into, GvtWorkspace, KronIndex};
+use kronvt::linalg::Matrix;
+use kronvt::model::primal::PrimalKronOp;
+use kronvt::util::args::Args;
+use kronvt::util::rng::Pcg32;
+use kronvt::util::timer::{fmt_secs, BenchRunner};
+
+fn random_kernel(rng: &mut Pcg32, n: usize) -> Matrix {
+    let x = Matrix::from_fn(n, 4, |_, _| rng.normal());
+    kronvt::kernels::KernelKind::Gaussian { gamma: 0.3 }.square_matrix(&x)
+}
+
+fn random_idx(rng: &mut Pcg32, q: usize, m: usize, n: usize) -> KronIndex {
+    KronIndex::new(
+        (0..n).map(|_| rng.below(q) as u32).collect(),
+        (0..n).map(|_| rng.below(m) as u32).collect(),
+    )
+}
+
+struct Row {
+    regime: &'static str,
+    m: usize,
+    q: usize,
+    n: usize,
+    proposed: f64,
+    baseline: f64,
+}
+
+fn bench_dual(regime: &'static str, m: usize, q: usize, n: usize, rng: &mut Pcg32) -> Row {
+    let k = random_kernel(rng, m);
+    let g = random_kernel(rng, q);
+    let idx = random_idx(rng, q, m, n);
+    let v = rng.normal_vec(n);
+    let mut u = vec![0.0; n];
+    let mut ws = GvtWorkspace::new();
+    let runner = BenchRunner::quick();
+
+    let proposed = runner
+        .run(|| gvt_apply_into(&g, &k, &g, &k, &idx, &idx, &v, &mut u, &mut ws, None))
+        .min_secs;
+    // Baseline cost is O(n²); cap the actual measurement and extrapolate for
+    // very large n so the bench stays tractable.
+    let baseline = if n <= 40_000 {
+        runner.run(|| explicit_apply_streaming(&g, &k, &idx, &idx, &v)).min_secs
+    } else {
+        let n_small = 20_000;
+        let idx_s = random_idx(rng, q, m, n_small);
+        let v_s = rng.normal_vec(n_small);
+        let t = runner.run(|| explicit_apply_streaming(&g, &k, &idx_s, &idx_s, &v_s)).min_secs;
+        t * (n as f64 / n_small as f64).powi(2)
+    };
+    Row { regime, m, q, n, proposed, baseline }
+}
+
+fn fit_exponent(points: &[(f64, f64)]) -> f64 {
+    // least-squares slope of log t vs log n
+    let n = points.len() as f64;
+    let (mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0);
+    for &(x, y) in points {
+        let (lx, ly) = (x.ln(), y.ln());
+        sx += lx;
+        sy += ly;
+        sxx += lx * lx;
+        sxy += lx * ly;
+    }
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+fn main() {
+    let args = Args::parse();
+    let full = args.has("full");
+    let mut rng = Pcg32::seeded(404);
+
+    println!("== Table 3 (dual): R(G⊗K)Rᵀv — proposed (Algorithm 1) vs explicit baseline ==\n");
+    println!(
+        "{:<12} {:>6} {:>6} {:>9} {:>12} {:>12} {:>9}",
+        "regime", "m", "q", "n", "proposed", "baseline", "speedup"
+    );
+
+    let mut rows = Vec::new();
+    // Independent: n = m = q
+    for &n in if full { &[500usize, 1000, 2000, 4000][..] } else { &[500usize, 1000, 2000][..] } {
+        rows.push(bench_dual("independent", n, n, n, &mut rng));
+    }
+    // Dependent: fixed m, q; growing n
+    let (m, q) = (300, 200);
+    let dep_sizes: &[usize] =
+        if full { &[2_000, 8_000, 32_000, 128_000] } else { &[2_000, 8_000, 32_000] };
+    let mut dep_points_prop = Vec::new();
+    let mut dep_points_base = Vec::new();
+    for &n in dep_sizes {
+        let row = bench_dual("dependent", m, q, n, &mut rng);
+        dep_points_prop.push((n as f64, row.proposed));
+        dep_points_base.push((n as f64, row.baseline));
+        rows.push(row);
+    }
+    // Complete: n = m·q
+    for &side in if full { &[60usize, 120, 240][..] } else { &[60usize, 120][..] } {
+        rows.push(bench_dual("complete", side, side, side * side, &mut rng));
+    }
+
+    for r in &rows {
+        println!(
+            "{:<12} {:>6} {:>6} {:>9} {:>12} {:>12} {:>8.1}×",
+            r.regime,
+            r.m,
+            r.q,
+            r.n,
+            fmt_secs(r.proposed),
+            fmt_secs(r.baseline),
+            r.baseline / r.proposed
+        );
+    }
+    println!(
+        "\ndependent-regime scaling exponents (t ~ n^e): proposed e={:.2} (expect ≈1), baseline e={:.2} (expect ≈2)",
+        fit_exponent(&dep_points_prop),
+        fit_exponent(&dep_points_base)
+    );
+
+    // ---- Table 4: primal ----
+    println!("\n== Table 4 (primal): R(T⊗D)w — matrix-free vs explicit row-by-row design ==\n");
+    println!(
+        "{:<12} {:>6} {:>6} {:>9} {:>7} {:>12} {:>12} {:>9}",
+        "regime", "m", "q", "n", "d·r", "proposed", "baseline", "speedup"
+    );
+    let (d_feat, r_feat) = (32usize, 16usize);
+    let primal_sizes: &[usize] = if full { &[2_000, 8_000, 32_000] } else { &[2_000, 8_000] };
+    for &n in primal_sizes {
+        let ds = kronvt::data::Dataset {
+            start_features: Matrix::from_fn(m, d_feat, |_, _| rng.normal()),
+            end_features: Matrix::from_fn(q, r_feat, |_, _| rng.normal()),
+            start_idx: (0..n).map(|_| rng.below(m) as u32).collect(),
+            end_idx: (0..n).map(|_| rng.below(q) as u32).collect(),
+            labels: vec![0.0; n],
+            name: "bench".into(),
+        };
+        let op = PrimalKronOp::new(&ds);
+        let w = rng.normal_vec(op.w_dim());
+        let runner = BenchRunner::quick();
+        let proposed = runner.run(|| op.forward(&w)).min_secs;
+        // Baseline: form each row of X = R(T⊗D) on the fly — O(n·d·r) flops
+        // per matvec with no vertex sharing exploited.
+        let baseline = runner
+            .run(|| {
+                let mut out = vec![0.0; n];
+                for h in 0..n {
+                    let drow = ds.start_features.row(ds.start_idx[h] as usize);
+                    let trow = ds.end_features.row(ds.end_idx[h] as usize);
+                    let mut acc = 0.0;
+                    for (jt, tv) in trow.iter().enumerate() {
+                        let wrow = &w[jt * d_feat..(jt + 1) * d_feat];
+                        acc += tv * kronvt::linalg::vecops::dot(wrow, drow);
+                    }
+                    out[h] = acc;
+                }
+                out
+            })
+            .min_secs;
+        println!(
+            "{:<12} {:>6} {:>6} {:>9} {:>7} {:>12} {:>12} {:>8.1}×",
+            "dependent",
+            m,
+            q,
+            n,
+            d_feat * r_feat,
+            fmt_secs(proposed),
+            fmt_secs(baseline),
+            baseline / proposed
+        );
+    }
+    println!("\nbench_complexity done");
+}

@@ -1,0 +1,111 @@
+//! Figures 3, 4, 5 — regularized risk and zero-shot test AUC as a function
+//! of optimization iterations, over the λ grid the paper plots
+//! (2⁻¹⁰, 2⁻⁵, 2⁰, 2⁵, 2¹⁰), for:
+//!
+//! * Fig. 3: KronRidge (dual, MINRES), up to 100 iterations
+//! * Fig. 4: KronSVM with 10 inner iterations per outer Newton step
+//! * Fig. 5: KronSVM with 100 inner iterations
+//!
+//! Expected shape (matching §5.2): risk decreases monotonically; test AUC
+//! peaks within tens of iterations and then plateaus or degrades; more inner
+//! iterations reduce risk faster per outer step but do not reach better AUC.
+//!
+//! Run: `cargo bench --bench bench_convergence [-- ridge|svm10|svm100] [--full]`
+
+use kronvt::data::dti;
+use kronvt::train::{KronRidge, KronSvm, RidgeConfig, SvmConfig};
+use kronvt::util::args::Args;
+
+const LAMBDAS: [i32; 5] = [-10, -5, 0, 5, 10];
+const PRINT_ITERS: [usize; 8] = [1, 2, 5, 10, 20, 40, 70, 100];
+
+fn datasets(full: bool, seed: u64) -> Vec<(String, kronvt::data::Dataset)> {
+    let mut out = vec![
+        ("GPCR".to_string(), dti::gpcr(seed).generate()),
+        ("IC".to_string(), dti::ic(seed).generate()),
+    ];
+    if full {
+        out.push(("E".to_string(), dti::e(seed).generate()));
+        out.push(("Ki".to_string(), dti::ki(seed).generate()));
+    } else {
+        // scaled-down E/Ki shapes keep the quick run under a few minutes
+        out.push((
+            "E(scaled)".to_string(),
+            dti::DtiConfig { m: 150, q: 220, n: 8200, positives: 90, seed, ..Default::default() }
+                .generate(),
+        ));
+        out.push((
+            "Ki(scaled)".to_string(),
+            dti::DtiConfig { m: 470, q: 52, n: 10300, positives: 350, seed, ..Default::default() }
+                .generate(),
+        ));
+    }
+    out
+}
+
+fn print_trace(label: &str, lambda_exp: i32, trace: &kronvt::train::TrainTrace) {
+    for rec in &trace.records {
+        if PRINT_ITERS.contains(&rec.iter) || rec.iter == trace.records.len() {
+            println!(
+                "{label} lambda=2^{lambda_exp:<3} iter={:>3} risk={:<14.6e} test_auc={:.4}",
+                rec.iter,
+                rec.risk,
+                rec.val_auc.unwrap_or(f64::NAN)
+            );
+        }
+    }
+}
+
+fn main() {
+    let args = Args::parse();
+    let full = args.has("full");
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let seed = args.get_u64("seed", 1);
+
+    for (name, data) in datasets(full, seed) {
+        // zero-shot train/test split in place of one CV fold (Fig. 2 block)
+        let (train, test) = data.zero_shot_split(1.0 / 3.0, seed);
+        println!(
+            "\n### {name}: train n={} (m={}, q={}), test n={} — linear vertex kernels",
+            train.n_edges(),
+            train.m(),
+            train.q(),
+            test.n_edges()
+        );
+
+        if which == "all" || which == "ridge" {
+            println!("--- Fig. 3: KronRidge ---");
+            for exp in LAMBDAS {
+                let cfg = RidgeConfig {
+                    lambda: 2f64.powi(exp),
+                    iterations: 100,
+                    trace: true,
+                    tol: 1e-14,
+                    ..Default::default()
+                };
+                let (_, trace) = KronRidge::new(cfg).fit_traced(&train, Some(&test)).unwrap();
+                print_trace("ridge", exp, &trace);
+            }
+        }
+
+        for (tag, inner) in [("svm10", 10usize), ("svm100", 100usize)] {
+            if which != "all" && which != tag {
+                continue;
+            }
+            println!("--- Fig. {}: KronSVM, {} inner iterations ---",
+                     if inner == 10 { 4 } else { 5 }, inner);
+            for exp in LAMBDAS {
+                let cfg = SvmConfig {
+                    lambda: 2f64.powi(exp),
+                    outer_iters: if full { 100 } else { 40 },
+                    inner_iters: inner,
+                    trace: true,
+                    ..Default::default()
+                };
+                let (_, trace) = KronSvm::new(cfg).fit_traced(&train, Some(&test)).unwrap();
+                print_trace(tag, exp, &trace);
+            }
+        }
+    }
+    println!("\nbench_convergence done");
+}

@@ -1,0 +1,117 @@
+//! §Perf micro-benchmarks of the generalized-vec-trick hot path.
+//!
+//! Measures, per (m, q, n) shape: both branches of Algorithm 1, the
+//! auto-selected branch, the literal pseudocode transcription (strided
+//! loops), the native dense scatter→GEMM→gather path, the explicit baseline,
+//! and — when artifacts are built — the PJRT dense path. Reports effective
+//! GFLOP/s against the Theorem-1 flop model. This is the harness used for
+//! the EXPERIMENTS.md §Perf before/after numbers.
+//!
+//! Run: `cargo bench --bench bench_gvt_micro [-- --full]`
+
+use kronvt::gvt::algorithm::gvt_reference;
+use kronvt::gvt::complexity;
+use kronvt::gvt::dense::dense_apply;
+use kronvt::gvt::explicit::explicit_apply_streaming;
+use kronvt::gvt::{gvt_apply_into, Branch, GvtWorkspace, KronIndex};
+use kronvt::linalg::Matrix;
+use kronvt::runtime::ArtifactRegistry;
+use kronvt::util::args::Args;
+use kronvt::util::rng::Pcg32;
+use kronvt::util::timer::{fmt_secs, BenchRunner};
+
+fn random_kernel(rng: &mut Pcg32, n: usize) -> Matrix {
+    let x = Matrix::from_fn(n, 4, |_, _| rng.normal());
+    kronvt::kernels::KernelKind::Gaussian { gamma: 0.3 }.square_matrix(&x)
+}
+
+fn main() {
+    let args = Args::parse();
+    let full = args.has("full");
+    let mut rng = Pcg32::seeded(777);
+
+    let registry = {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if ArtifactRegistry::available(&dir) {
+            ArtifactRegistry::open(&dir).ok()
+        } else {
+            None
+        }
+    };
+
+    let shapes: &[(usize, usize, usize)] = if full {
+        &[(100, 100, 2_500), (200, 200, 10_000), (400, 400, 40_000), (800, 800, 160_000), (1000, 1000, 250_000)]
+    } else {
+        &[(100, 100, 2_500), (200, 200, 10_000), (400, 400, 40_000)]
+    };
+
+    println!(
+        "{:>5} {:>5} {:>8} | {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} | {:>8}",
+        "m", "q", "n", "branch-T", "branch-S", "auto", "pseudo", "dense", "explicit", "pjrt", "GFLOP/s"
+    );
+
+    for &(m, q, n) in shapes {
+        let k = random_kernel(&mut rng, m);
+        let g = random_kernel(&mut rng, q);
+        let idx = KronIndex::new(
+            (0..n).map(|_| rng.below(q) as u32).collect(),
+            (0..n).map(|_| rng.below(m) as u32).collect(),
+        );
+        let v = rng.normal_vec(n);
+        let mut u = vec![0.0; n];
+        let mut ws = GvtWorkspace::new();
+        let runner = BenchRunner::quick();
+
+        let t_branch_t = runner
+            .run(|| gvt_apply_into(&g, &k, &g, &k, &idx, &idx, &v, &mut u, &mut ws, Some(Branch::T)))
+            .min_secs;
+        let t_branch_s = runner
+            .run(|| gvt_apply_into(&g, &k, &g, &k, &idx, &idx, &v, &mut u, &mut ws, Some(Branch::S)))
+            .min_secs;
+        let t_auto = runner
+            .run(|| gvt_apply_into(&g, &k, &g, &k, &idx, &idx, &v, &mut u, &mut ws, None))
+            .min_secs;
+        let t_pseudo = if n <= 40_000 {
+            fmt_secs(runner.run(|| gvt_reference(&g, &k, &idx, &idx, &v)).min_secs)
+        } else {
+            "-".into()
+        };
+        let t_dense = if m * q <= 1_000_000 {
+            fmt_secs(runner.run(|| dense_apply(&g, &k, &idx, &idx, &v)).min_secs)
+        } else {
+            "-".into()
+        };
+        let t_explicit = if n <= 40_000 {
+            fmt_secs(runner.run(|| explicit_apply_streaming(&g, &k, &idx, &idx, &v)).min_secs)
+        } else {
+            "-".into()
+        };
+        let t_pjrt = registry
+            .as_ref()
+            .and_then(|reg| {
+                reg.find_bucket("kron_mv", &[("m", m), ("q", q), ("n", n)])?;
+                Some(fmt_secs(runner.run(|| reg.kron_mv(&k, &g, &idx, &v).unwrap()).min_secs))
+            })
+            .unwrap_or_else(|| "-".into());
+
+        // Theorem-1 flop model: 2 flops per multiply-add in both stages.
+        let flops = 2.0 * complexity::gvt_cost(q, q, m, m, n, n) as f64;
+        let gflops = flops / t_auto / 1e9;
+
+        println!(
+            "{:>5} {:>5} {:>8} | {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} | {:>8.2}",
+            m,
+            q,
+            n,
+            fmt_secs(t_branch_t),
+            fmt_secs(t_branch_s),
+            fmt_secs(t_auto),
+            t_pseudo,
+            t_dense,
+            t_explicit,
+            t_pjrt,
+            gflops
+        );
+    }
+    println!("\nbench_gvt_micro done");
+}

@@ -1,0 +1,271 @@
+//! k-nearest-neighbour scoring on concatenated `[d, t]` features — the
+//! neighbourhood baseline of §5.6 ([63], [64]).
+//!
+//! Scores are the mean label of the k nearest training edges (a smooth
+//! score, so AUC is informative). Low-dimensional data (the 2-feature
+//! checkerboard) goes through a kd-tree; high-dimensional data falls back to
+//! brute force with a bounded-size max-heap — matching the paper's
+//! observation that KNN "excels" on 2 features and is uncompetitive on the
+//! high-dimensional DTI sets (Table 7).
+
+use crate::data::Dataset;
+use crate::linalg::Matrix;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// KNN configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct KnnConfig {
+    /// Number of neighbours.
+    pub k: usize,
+    /// Use a kd-tree when the feature dimension is at most this.
+    pub kd_tree_max_dim: usize,
+}
+
+impl Default for KnnConfig {
+    fn default() -> Self {
+        KnnConfig { k: 5, kd_tree_max_dim: 8 }
+    }
+}
+
+/// Trained (memorized) KNN model.
+pub struct KnnModel {
+    features: Matrix,
+    labels: Vec<f64>,
+    k: usize,
+    tree: Option<KdTree>,
+}
+
+impl KnnModel {
+    pub fn fit(train: &Dataset, cfg: &KnnConfig) -> Result<KnnModel, String> {
+        train.validate()?;
+        if train.n_edges() == 0 {
+            return Err("empty training set".into());
+        }
+        let features = train.concat_features();
+        let tree = if features.cols() <= cfg.kd_tree_max_dim {
+            Some(KdTree::build(&features))
+        } else {
+            None
+        };
+        Ok(KnnModel { features, labels: train.labels.clone(), k: cfg.k.max(1), tree })
+    }
+
+    /// Mean-label score of the k nearest training edges for each test edge.
+    pub fn predict(&self, test: &Dataset) -> Vec<f64> {
+        let x = test.concat_features();
+        (0..x.rows()).map(|h| self.score_point(x.row(h))).collect()
+    }
+
+    fn score_point(&self, query: &[f64]) -> f64 {
+        let idx = match &self.tree {
+            Some(tree) => tree.knn(&self.features, query, self.k),
+            None => brute_knn(&self.features, query, self.k),
+        };
+        let s: f64 = idx.iter().map(|&i| self.labels[i]).sum();
+        s / idx.len() as f64
+    }
+}
+
+fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// (distance, index) max-heap entry.
+#[derive(PartialEq)]
+struct HeapItem(f64, usize);
+
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.partial_cmp(&other.0).unwrap_or(Ordering::Equal)
+    }
+}
+
+fn brute_knn(features: &Matrix, query: &[f64], k: usize) -> Vec<usize> {
+    let mut heap: BinaryHeap<HeapItem> = BinaryHeap::with_capacity(k + 1);
+    for i in 0..features.rows() {
+        let d = sq_dist(features.row(i), query);
+        if heap.len() < k {
+            heap.push(HeapItem(d, i));
+        } else if d < heap.peek().unwrap().0 {
+            heap.pop();
+            heap.push(HeapItem(d, i));
+        }
+    }
+    heap.into_iter().map(|HeapItem(_, i)| i).collect()
+}
+
+/// Simple kd-tree over row indices of a feature matrix.
+struct KdTree {
+    nodes: Vec<KdNode>,
+    root: usize,
+}
+
+struct KdNode {
+    point: usize, // row index
+    axis: usize,
+    left: Option<usize>,
+    right: Option<usize>,
+}
+
+impl KdTree {
+    fn build(features: &Matrix) -> KdTree {
+        let mut idx: Vec<usize> = (0..features.rows()).collect();
+        let mut nodes = Vec::with_capacity(features.rows());
+        let dim = features.cols();
+        let root = Self::build_rec(features, &mut idx[..], 0, dim, &mut nodes).unwrap();
+        KdTree { nodes, root }
+    }
+
+    fn build_rec(
+        features: &Matrix,
+        idx: &mut [usize],
+        depth: usize,
+        dim: usize,
+        nodes: &mut Vec<KdNode>,
+    ) -> Option<usize> {
+        if idx.is_empty() {
+            return None;
+        }
+        let axis = depth % dim;
+        idx.sort_by(|&a, &b| {
+            features
+                .get(a, axis)
+                .partial_cmp(&features.get(b, axis))
+                .unwrap_or(Ordering::Equal)
+        });
+        let mid = idx.len() / 2;
+        let point = idx[mid];
+        let (left_slice, rest) = idx.split_at_mut(mid);
+        let right_slice = &mut rest[1..];
+        let left = Self::build_rec(features, left_slice, depth + 1, dim, nodes);
+        let right = Self::build_rec(features, right_slice, depth + 1, dim, nodes);
+        nodes.push(KdNode { point, axis, left, right });
+        Some(nodes.len() - 1)
+    }
+
+    fn knn(&self, features: &Matrix, query: &[f64], k: usize) -> Vec<usize> {
+        let mut heap: BinaryHeap<HeapItem> = BinaryHeap::with_capacity(k + 1);
+        self.search(self.root, features, query, k, &mut heap);
+        heap.into_iter().map(|HeapItem(_, i)| i).collect()
+    }
+
+    fn search(
+        &self,
+        node_id: usize,
+        features: &Matrix,
+        query: &[f64],
+        k: usize,
+        heap: &mut BinaryHeap<HeapItem>,
+    ) {
+        let node = &self.nodes[node_id];
+        let d = sq_dist(features.row(node.point), query);
+        if heap.len() < k {
+            heap.push(HeapItem(d, node.point));
+        } else if d < heap.peek().unwrap().0 {
+            heap.pop();
+            heap.push(HeapItem(d, node.point));
+        }
+        let diff = query[node.axis] - features.get(node.point, node.axis);
+        let (near, far) = if diff <= 0.0 {
+            (node.left, node.right)
+        } else {
+            (node.right, node.left)
+        };
+        if let Some(n) = near {
+            self.search(n, features, query, k, heap);
+        }
+        // prune: visit far side only if the splitting plane is closer than
+        // the current k-th distance (or the heap is not full)
+        let worst = heap.peek().map(|h| h.0).unwrap_or(f64::INFINITY);
+        if let Some(f) = far {
+            if heap.len() < k || diff * diff < worst {
+                self.search(f, features, query, k, heap);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::checkerboard::CheckerboardConfig;
+    use crate::eval::auc::auc;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn kdtree_matches_brute_force() {
+        let mut rng = Pcg32::seeded(900);
+        let features = Matrix::from_fn(200, 3, |_, _| rng.normal());
+        let tree = KdTree::build(&features);
+        for _ in 0..25 {
+            let query = rng.normal_vec(3);
+            let mut a = tree.knn(&features, &query, 7);
+            let mut b = brute_knn(&features, &query, 7);
+            a.sort_unstable();
+            b.sort_unstable();
+            // distances must match even if tie-broken differently
+            let da: Vec<f64> = a.iter().map(|&i| sq_dist(features.row(i), &query)).collect();
+            let db: Vec<f64> = b.iter().map(|&i| sq_dist(features.row(i), &query)).collect();
+            let mut da = da;
+            let mut db = db;
+            da.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            db.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            for (x, y) in da.iter().zip(&db) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn knn_solves_checkerboard() {
+        // 2 features → kd-tree path; KNN is strong here (Table 6: 0.68).
+        let data =
+            CheckerboardConfig { m: 80, q: 80, density: 0.5, noise: 0.05, feature_range: 6.0, seed: 3, ..Default::default() }.generate();
+        let (train, test) = data.zero_shot_split(0.3, 4);
+        let model = KnnModel::fit(&train, &KnnConfig { k: 9, ..Default::default() }).unwrap();
+        let a = auc(&test.labels, &model.predict(&test));
+        assert!(a > 0.7, "AUC={a}");
+    }
+
+    #[test]
+    fn brute_force_path_used_for_high_dim() {
+        let mut rng = Pcg32::seeded(901);
+        let ds = Dataset {
+            start_features: Matrix::from_fn(10, 10, |_, _| rng.normal()),
+            end_features: Matrix::from_fn(10, 10, |_, _| rng.normal()),
+            start_idx: (0..30).map(|_| rng.below(10) as u32).collect(),
+            end_idx: (0..30).map(|_| rng.below(10) as u32).collect(),
+            labels: (0..30).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect(),
+            name: "hd".into(),
+        };
+        let model = KnnModel::fit(&ds, &KnnConfig::default()).unwrap();
+        assert!(model.tree.is_none());
+        let preds = model.predict(&ds);
+        assert_eq!(preds.len(), 30);
+        // nearest neighbour of a training point is itself → k=1 would give
+        // its own label; with k=5 scores stay in [-1, 1]
+        assert!(preds.iter().all(|p| (-1.0..=1.0).contains(p)));
+    }
+
+    #[test]
+    fn scores_are_label_means() {
+        let ds = Dataset {
+            start_features: Matrix::from_rows(&[&[0.0], &[10.0]]),
+            end_features: Matrix::from_rows(&[&[0.0], &[10.0]]),
+            start_idx: vec![0, 0, 1, 1],
+            end_idx: vec![0, 1, 0, 1],
+            labels: vec![1.0, -1.0, -1.0, 1.0],
+            name: "t".into(),
+        };
+        let model = KnnModel::fit(&ds, &KnnConfig { k: 1, ..Default::default() }).unwrap();
+        let preds = model.predict(&ds);
+        assert_eq!(preds, ds.labels);
+    }
+}

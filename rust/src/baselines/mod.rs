@@ -1,0 +1,18 @@
+//! Baseline learners the paper compares against (§5.3–§5.6).
+//!
+//! * [`explicit_svm`] — a working-set (SMO) dual SVM over the explicitly
+//!   evaluated edge kernel, our stand-in for LibSVM [58]: it cannot exploit
+//!   the Kronecker structure, so its training cost scales ~quadratically in
+//!   the number of edges (the Fig. 6/7 comparison).
+//! * [`sgd`] — linear models on concatenated `[d,t]` features trained by
+//!   stochastic gradient descent (hinge/logistic), after [47] (Table 6/7).
+//! * [`knn`] — k-nearest-neighbour scoring on concatenated features with a
+//!   kd-tree for low-dimensional data (Table 6/7).
+
+pub mod explicit_svm;
+pub mod sgd;
+pub mod knn;
+
+pub use explicit_svm::{ExplicitSvm, ExplicitSvmConfig};
+pub use sgd::{SgdConfig, SgdLossKind, SgdModel};
+pub use knn::{KnnConfig, KnnModel};

@@ -1,0 +1,206 @@
+//! Compute routing: native GVT loops (L3) vs the PJRT dense-GEMM path
+//! (L1/L2 artifacts).
+//!
+//! Algorithm 1 already branches on `ae + df < ce + bf`; the router lifts the
+//! same idea one level up. The native path costs `O((m+q)·n)` and exploits
+//! edge sparsity; the dense artifact path costs `O(n + mq(m+q))` regardless
+//! of sparsity but runs as GEMMs (MXU on a real TPU). The router picks per
+//! call from the flop model, preferring native when no artifact bucket
+//! covers the shape — so the system degrades gracefully to pure Rust.
+
+use crate::gvt::complexity;
+use crate::gvt::{gvt_apply_into, GvtWorkspace, KronIndex};
+use crate::linalg::Matrix;
+use crate::runtime::ArtifactRegistry;
+use std::cell::RefCell;
+
+/// Which execution path a matvec takes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Cache-blocked CPU loops of Algorithm 1.
+    NativeGvt,
+    /// AOT-compiled scatter→GEMM→gather artifact on PJRT.
+    PjrtDense,
+}
+
+/// Router configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterConfig {
+    /// Multiplicative weight on the dense path's flop count. Dense GEMM
+    /// flops are far cheaper per flop than the native path's scattered
+    /// AXPY/dot flops (contiguous, vectorized, f32 — and MXU-bound on a real
+    /// TPU), so this is < 1; it also absorbs PJRT dispatch + f64↔f32
+    /// conversion overhead. Calibrated against measurements in
+    /// EXPERIMENTS.md §Perf. Larger values bias toward the native path.
+    pub pjrt_overhead: f64,
+    /// Force a specific route (None = decide by cost model).
+    pub force: Option<Route>,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { pjrt_overhead: 0.35, force: None }
+    }
+}
+
+/// Per-route call counters (observability).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RouteStats {
+    pub native_calls: usize,
+    pub pjrt_calls: usize,
+}
+
+/// The router itself. Owns an optional artifact registry; without one every
+/// call routes native.
+pub struct Router {
+    registry: Option<ArtifactRegistry>,
+    cfg: RouterConfig,
+    stats: RefCell<RouteStats>,
+    ws: RefCell<GvtWorkspace>,
+}
+
+impl Router {
+    /// Router with artifacts (PJRT path available).
+    pub fn with_registry(registry: ArtifactRegistry, cfg: RouterConfig) -> Router {
+        Router {
+            registry: Some(registry),
+            cfg,
+            stats: RefCell::new(RouteStats::default()),
+            ws: RefCell::new(GvtWorkspace::new()),
+        }
+    }
+
+    /// Native-only router.
+    pub fn native_only(cfg: RouterConfig) -> Router {
+        Router {
+            registry: None,
+            cfg,
+            stats: RefCell::new(RouteStats::default()),
+            ws: RefCell::new(GvtWorkspace::new()),
+        }
+    }
+
+    /// Open the default registry if present, else run native-only.
+    pub fn auto<P: AsRef<std::path::Path>>(artifact_dir: P, cfg: RouterConfig) -> Router {
+        if ArtifactRegistry::available(&artifact_dir) {
+            match ArtifactRegistry::open(&artifact_dir) {
+                Ok(reg) => return Router::with_registry(reg, cfg),
+                Err(err) => {
+                    crate::log_warn!("artifact registry unavailable ({err}); routing native");
+                }
+            }
+        }
+        Router::native_only(cfg)
+    }
+
+    pub fn stats(&self) -> RouteStats {
+        *self.stats.borrow()
+    }
+
+    pub fn has_pjrt(&self) -> bool {
+        self.registry.is_some()
+    }
+
+    /// Decide the route for the square training matvec `R(G⊗K)Rᵀv`.
+    pub fn decide(&self, m: usize, q: usize, n: usize) -> Route {
+        if let Some(force) = self.cfg.force {
+            return match force {
+                Route::PjrtDense if self.registry.is_none() => Route::NativeGvt,
+                other => other,
+            };
+        }
+        let Some(reg) = &self.registry else {
+            return Route::NativeGvt;
+        };
+        if reg.find_bucket("kron_mv", &[("m", m), ("q", q), ("n", n)]).is_none() {
+            return Route::NativeGvt;
+        }
+        let native = complexity::gvt_cost(q, q, m, m, n, n) as f64;
+        let dense = complexity::dense_path_cost(q, q, m, m, n, n) as f64 * self.cfg.pjrt_overhead;
+        if dense < native {
+            Route::PjrtDense
+        } else {
+            Route::NativeGvt
+        }
+    }
+
+    /// Routed `u = R(G⊗K)Rᵀ v` (K, G symmetric kernel matrices; `idx` the
+    /// `(end, start)` edge index).
+    pub fn kron_mv(&self, k: &Matrix, g: &Matrix, idx: &KronIndex, v: &[f64]) -> Vec<f64> {
+        let route = self.decide(k.rows(), g.rows(), idx.len());
+        match route {
+            Route::PjrtDense => {
+                let reg = self.registry.as_ref().expect("decide() guarantees registry");
+                match reg.kron_mv(k, g, idx, v) {
+                    Ok(u) => {
+                        self.stats.borrow_mut().pjrt_calls += 1;
+                        return u;
+                    }
+                    Err(err) => {
+                        crate::log_warn!("PJRT kron_mv failed ({err}); falling back to native");
+                    }
+                }
+                self.native_mv(k, g, idx, v)
+            }
+            Route::NativeGvt => self.native_mv(k, g, idx, v),
+        }
+    }
+
+    fn native_mv(&self, k: &Matrix, g: &Matrix, idx: &KronIndex, v: &[f64]) -> Vec<f64> {
+        self.stats.borrow_mut().native_calls += 1;
+        let mut u = vec![0.0; idx.len()];
+        let mut ws = self.ws.borrow_mut();
+        gvt_apply_into(g, k, g, k, idx, idx, v, &mut u, &mut ws, None);
+        u
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::solvers::LinOp;
+    use crate::util::rng::Pcg32;
+    use std::sync::Arc;
+
+    fn toy_kernels(seed: u64, m: usize, q: usize, n: usize) -> (Matrix, Matrix, KronIndex) {
+        let mut rng = Pcg32::seeded(seed);
+        let kf = Matrix::from_fn(m, 4, |_, _| rng.normal());
+        let gf = Matrix::from_fn(q, 4, |_, _| rng.normal());
+        let k = crate::kernels::KernelKind::Gaussian { gamma: 0.3 }.square_matrix(&kf);
+        let g = crate::kernels::KernelKind::Gaussian { gamma: 0.3 }.square_matrix(&gf);
+        let idx = KronIndex::new(
+            (0..n).map(|_| rng.below(q) as u32).collect(),
+            (0..n).map(|_| rng.below(m) as u32).collect(),
+        );
+        (k, g, idx)
+    }
+
+    #[test]
+    fn native_only_routes_native() {
+        let router = Router::native_only(RouterConfig::default());
+        assert_eq!(router.decide(100, 100, 1000), Route::NativeGvt);
+        assert!(!router.has_pjrt());
+    }
+
+    #[test]
+    fn native_mv_matches_operator() {
+        let (k, g, idx) = toy_kernels(1000, 8, 7, 30);
+        let mut rng = Pcg32::seeded(1001);
+        let v = rng.normal_vec(30);
+        let router = Router::native_only(RouterConfig::default());
+        let u1 = router.kron_mv(&k, &g, &idx, &v);
+        let op = crate::gvt::KronKernelOp::new(Arc::new(g.clone()), Arc::new(k.clone()), idx);
+        let u2 = op.apply_vec(&v);
+        crate::linalg::vecops::assert_allclose(&u1, &u2, 1e-12, 1e-12);
+        assert_eq!(router.stats().native_calls, 1);
+    }
+
+    #[test]
+    fn forced_pjrt_degrades_to_native_without_registry() {
+        let router = Router::native_only(RouterConfig {
+            force: Some(Route::PjrtDense),
+            ..Default::default()
+        });
+        assert_eq!(router.decide(10, 10, 50), Route::NativeGvt);
+    }
+}

@@ -1,0 +1,332 @@
+//! Batched zero-shot prediction server.
+//!
+//! Serving is where the paper's eq. (5) shortcut pays off operationally: a
+//! request carries *novel* vertices (features never seen in training) plus
+//! the edges to score. The server batches concurrently queued requests into
+//! one prediction call — the generalized vec trick's cost
+//! `O(min(v‖a‖₀ + m·t, u‖a‖₀ + q·t))` amortizes the `‖a‖₀` term across the
+//! whole batch, so batching improves throughput exactly as dynamic batching
+//! does in model-serving systems.
+//!
+//! Architecture: submitters push [`PredictRequest`]s onto an MPSC channel; a
+//! worker thread drains whatever is queued (up to `max_batch_edges`), merges
+//! it into one [`Dataset`], predicts once, and scatters replies.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::data::Dataset;
+use crate::linalg::Matrix;
+use crate::model::DualModel;
+
+/// One prediction request: a private bipartite graph (novel vertices +
+/// edges) to score against the trained model.
+pub struct PredictRequest {
+    /// Start-vertex feature rows (u × d, flattened row-major).
+    pub start_features: Vec<Vec<f64>>,
+    /// End-vertex feature rows (v × r).
+    pub end_features: Vec<Vec<f64>>,
+    /// Edges as (start_row, end_row) into the request's own vertex lists.
+    pub edges: Vec<(u32, u32)>,
+    /// Reply channel for the scores (one per edge, in order).
+    pub reply: Sender<Vec<f64>>,
+}
+
+/// Server configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    /// Edge budget per merged batch.
+    pub max_batch_edges: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_batch_edges: 65_536 }
+    }
+}
+
+/// Running counters.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub requests: AtomicUsize,
+    pub batches: AtomicUsize,
+    pub edges_scored: AtomicUsize,
+}
+
+/// Handle to a running prediction server.
+pub struct PredictServer {
+    tx: Option<Sender<PredictRequest>>,
+    worker: Option<JoinHandle<()>>,
+    stats: Arc<ServerStats>,
+}
+
+impl PredictServer {
+    /// Spawn the worker thread around a trained model.
+    pub fn start(model: DualModel, cfg: ServerConfig) -> PredictServer {
+        let (tx, rx) = channel::<PredictRequest>();
+        let stats = Arc::new(ServerStats::default());
+        let worker_stats = stats.clone();
+        let worker = std::thread::spawn(move || worker_loop(model, cfg, rx, worker_stats));
+        PredictServer { tx: Some(tx), worker: Some(worker), stats }
+    }
+
+    /// Sender handle for asynchronous submission from other threads.
+    ///
+    /// NOTE: every clone must be dropped before [`PredictServer::shutdown`]
+    /// can complete — the worker exits when all senders disconnect.
+    pub fn sender(&self) -> Sender<PredictRequest> {
+        self.tx.as_ref().expect("server running").clone()
+    }
+
+    /// Convenience: submit one request and block for its scores.
+    pub fn predict_blocking(
+        &self,
+        start_features: Vec<Vec<f64>>,
+        end_features: Vec<Vec<f64>>,
+        edges: Vec<(u32, u32)>,
+    ) -> Result<Vec<f64>, String> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .as_ref()
+            .expect("server running")
+            .send(PredictRequest { start_features, end_features, edges, reply: reply_tx })
+            .map_err(|_| "server stopped".to_string())?;
+        reply_rx.recv().map_err(|_| "server dropped request".to_string())
+    }
+
+    /// Observability counters.
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    /// Graceful shutdown: waits for queued work to finish.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for PredictServer {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    model: DualModel,
+    cfg: ServerConfig,
+    rx: Receiver<PredictRequest>,
+    stats: Arc<ServerStats>,
+) {
+    loop {
+        // Block for the first request of the batch.
+        let first = match rx.recv() {
+            Ok(req) => req,
+            Err(_) => return, // all senders gone
+        };
+        let mut batch = vec![first];
+        let mut edge_count = batch[0].edges.len();
+        // Greedily drain whatever else is queued (dynamic batching).
+        while edge_count < cfg.max_batch_edges {
+            match rx.try_recv() {
+                Ok(req) => {
+                    edge_count += req.edges.len();
+                    batch.push(req);
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        serve_batch(&model, batch, &stats);
+    }
+}
+
+fn serve_batch(model: &DualModel, batch: Vec<PredictRequest>, stats: &ServerStats) {
+    // Merge requests into one dataset with offset vertex indices.
+    let d = model.train_start_features.cols();
+    let r = model.train_end_features.cols();
+    let total_starts: usize = batch.iter().map(|b| b.start_features.len()).sum();
+    let total_ends: usize = batch.iter().map(|b| b.end_features.len()).sum();
+    let total_edges: usize = batch.iter().map(|b| b.edges.len()).sum();
+
+    let mut start_features = Matrix::zeros(total_starts, d);
+    let mut end_features = Matrix::zeros(total_ends, r);
+    let mut start_idx = Vec::with_capacity(total_edges);
+    let mut end_idx = Vec::with_capacity(total_edges);
+    let mut start_off = 0u32;
+    let mut end_off = 0u32;
+    let mut spans = Vec::with_capacity(batch.len());
+    let mut bad: Vec<bool> = Vec::with_capacity(batch.len());
+
+    for req in &batch {
+        // validate
+        let valid = req.start_features.iter().all(|f| f.len() == d)
+            && req.end_features.iter().all(|f| f.len() == r)
+            && req.edges.iter().all(|&(s, e)| {
+                (s as usize) < req.start_features.len() && (e as usize) < req.end_features.len()
+            });
+        bad.push(!valid);
+        if !valid {
+            spans.push(0);
+            continue;
+        }
+        for (i, f) in req.start_features.iter().enumerate() {
+            start_features.row_mut(start_off as usize + i).copy_from_slice(f);
+        }
+        for (j, f) in req.end_features.iter().enumerate() {
+            end_features.row_mut(end_off as usize + j).copy_from_slice(f);
+        }
+        for &(s, e) in &req.edges {
+            start_idx.push(start_off + s);
+            end_idx.push(end_off + e);
+        }
+        spans.push(req.edges.len());
+        start_off += req.start_features.len() as u32;
+        end_off += req.end_features.len() as u32;
+    }
+
+    let n_scored = start_idx.len();
+    let scores = if n_scored > 0 {
+        let ds = Dataset {
+            start_features,
+            end_features,
+            start_idx,
+            end_idx,
+            labels: vec![0.0; n_scored],
+            name: "server-batch".into(),
+        };
+        model.predict(&ds)
+    } else {
+        Vec::new()
+    };
+
+    // Update stats BEFORE delivering replies so a client that observed its
+    // reply also observes the counters.
+    stats.requests.fetch_add(batch.len(), Ordering::Relaxed);
+    stats.batches.fetch_add(1, Ordering::Relaxed);
+    stats.edges_scored.fetch_add(n_scored, Ordering::Relaxed);
+
+    // Scatter replies.
+    let mut cursor = 0usize;
+    for (req, (&span, &is_bad)) in batch.iter().zip(spans.iter().zip(&bad)) {
+        if is_bad {
+            let _ = req.reply.send(vec![f64::NAN; req.edges.len()]);
+            continue;
+        }
+        let _ = req.reply.send(scores[cursor..cursor + span].to_vec());
+        cursor += span;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gvt::KronIndex;
+    use crate::kernels::KernelKind;
+    use crate::util::rng::Pcg32;
+
+    fn toy_model(seed: u64) -> DualModel {
+        let mut rng = Pcg32::seeded(seed);
+        let (m, q, n) = (6, 5, 15);
+        DualModel {
+            dual_coef: rng.normal_vec(n),
+            train_start_features: Matrix::from_fn(m, 3, |_, _| rng.normal()),
+            train_end_features: Matrix::from_fn(q, 2, |_, _| rng.normal()),
+            train_idx: KronIndex::new(
+                (0..n).map(|_| rng.below(q) as u32).collect(),
+                (0..n).map(|_| rng.below(m) as u32).collect(),
+            ),
+            kernel_d: KernelKind::Gaussian { gamma: 0.3 },
+            kernel_t: KernelKind::Gaussian { gamma: 0.3 },
+        }
+    }
+
+    fn request_data(rng: &mut Pcg32, u: usize, v: usize, t: usize) -> (Vec<Vec<f64>>, Vec<Vec<f64>>, Vec<(u32, u32)>) {
+        let sf: Vec<Vec<f64>> = (0..u).map(|_| rng.normal_vec(3)).collect();
+        let ef: Vec<Vec<f64>> = (0..v).map(|_| rng.normal_vec(2)).collect();
+        let edges: Vec<(u32, u32)> =
+            (0..t).map(|_| (rng.below(u) as u32, rng.below(v) as u32)).collect();
+        (sf, ef, edges)
+    }
+
+    #[test]
+    fn server_matches_direct_prediction() {
+        let model = toy_model(1100);
+        let mut rng = Pcg32::seeded(1101);
+        let (sf, ef, edges) = request_data(&mut rng, 4, 3, 10);
+
+        // direct prediction for reference
+        let ds = Dataset {
+            start_features: Matrix::from_fn(4, 3, |i, j| sf[i][j]),
+            end_features: Matrix::from_fn(3, 2, |i, j| ef[i][j]),
+            start_idx: edges.iter().map(|&(s, _)| s).collect(),
+            end_idx: edges.iter().map(|&(_, e)| e).collect(),
+            labels: vec![0.0; 10],
+            name: "direct".into(),
+        };
+        let direct = model.predict(&ds);
+
+        let server = PredictServer::start(model, ServerConfig::default());
+        let served = server.predict_blocking(sf, ef, edges).unwrap();
+        crate::linalg::vecops::assert_allclose(&served, &direct, 1e-10, 1e-10);
+        assert_eq!(server.stats().requests.load(Ordering::Relaxed), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_are_all_answered() {
+        let model = toy_model(1102);
+        let server = PredictServer::start(model, ServerConfig { max_batch_edges: 1000 });
+        let sender = server.sender();
+        let mut replies = Vec::new();
+        let mut rng = Pcg32::seeded(1103);
+        for _ in 0..20 {
+            let (sf, ef, edges) = request_data(&mut rng, 3, 3, 6);
+            let (tx, rx) = channel();
+            sender
+                .send(PredictRequest {
+                    start_features: sf,
+                    end_features: ef,
+                    edges,
+                    reply: tx,
+                })
+                .unwrap();
+            replies.push(rx);
+        }
+        drop(sender); // release our clone so shutdown() can disconnect the worker
+        for rx in replies {
+            let scores = rx.recv().unwrap();
+            assert_eq!(scores.len(), 6);
+            assert!(scores.iter().all(|s| s.is_finite()));
+        }
+        let total = server.stats().edges_scored.load(Ordering::Relaxed);
+        assert_eq!(total, 120);
+        server.shutdown();
+    }
+
+    #[test]
+    fn invalid_request_gets_nan_reply_without_poisoning_batch() {
+        let model = toy_model(1104);
+        let server = PredictServer::start(model, ServerConfig::default());
+        // bad: edge references missing vertex
+        let bad = server.predict_blocking(
+            vec![vec![0.0; 3]],
+            vec![vec![0.0; 2]],
+            vec![(0, 5)],
+        );
+        let scores = bad.unwrap();
+        assert!(scores[0].is_nan());
+        // a good request still works afterwards
+        let mut rng = Pcg32::seeded(1105);
+        let (sf, ef, edges) = request_data(&mut rng, 2, 2, 3);
+        let good = server.predict_blocking(sf, ef, edges).unwrap();
+        assert!(good.iter().all(|s| s.is_finite()));
+        server.shutdown();
+    }
+}

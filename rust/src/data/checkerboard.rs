@@ -1,0 +1,176 @@
+//! The Checkerboard simulation of §5.1 — a standard nonlinear benchmark for
+//! large-scale SVM solvers ([61]).
+//!
+//! Start and end vertices each carry a single feature drawn uniformly from
+//! `(0, 100)`. The label of edge `(d, t)` is `+1` when `⌊d⌋` and `⌊t⌋` have
+//! equal parity, `−1` otherwise, and each label is flipped with probability
+//! `noise` (0.2 in the paper). A fraction `density` (0.25 in the paper) of
+//! all `m·q` possible edges is labeled; sampling is per-start-vertex so the
+//! edge count is exact and generation streams in O(n).
+
+use super::dataset::Dataset;
+use crate::linalg::Matrix;
+use crate::util::rng::Pcg32;
+
+/// Configuration for checkerboard generation.
+#[derive(Debug, Clone, Copy)]
+pub struct CheckerboardConfig {
+    /// Number of start vertices (paper: 1000 for Checker, 6400 for Checker+).
+    pub m: usize,
+    /// Number of end vertices (paper: equal to `m`).
+    pub q: usize,
+    /// Fraction of the `m·q` possible edges that receive labels (paper: 0.25).
+    pub density: f64,
+    /// Label-flip probability (paper: 0.2).
+    pub noise: f64,
+    /// Feature range: features are uniform in `(0, feature_range)` and the
+    /// board has `feature_range²` unit cells (paper: 100). Small tests use a
+    /// smaller range so that the vertex density per cell stays high enough
+    /// for zero-shot generalization.
+    pub feature_range: f64,
+    pub seed: u64,
+}
+
+impl Default for CheckerboardConfig {
+    fn default() -> Self {
+        CheckerboardConfig { m: 1000, q: 1000, density: 0.25, noise: 0.2, feature_range: 100.0, seed: 0 }
+    }
+}
+
+/// The paper's `Checker` dataset (1000×1000 vertices, 250 000 edges).
+pub fn checker(seed: u64) -> CheckerboardConfig {
+    CheckerboardConfig { m: 1000, q: 1000, density: 0.25, noise: 0.2, feature_range: 100.0, seed }
+}
+
+/// The paper's `Checker+` dataset (6400×6400 vertices, 10 240 000 edges).
+pub fn checker_plus(seed: u64) -> CheckerboardConfig {
+    CheckerboardConfig { m: 6400, q: 6400, density: 0.25, noise: 0.2, feature_range: 100.0, seed }
+}
+
+/// Noise-free checkerboard label for features `(d, t)`.
+pub fn true_label(d: f64, t: f64) -> f64 {
+    if (d.floor() as i64 + t.floor() as i64) % 2 == 0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+impl CheckerboardConfig {
+    /// Number of edges this config will generate.
+    pub fn n_edges(&self) -> usize {
+        let per_row = ((self.q as f64) * self.density).round() as usize;
+        per_row * self.m
+    }
+
+    /// Generate the dataset.
+    pub fn generate(&self) -> Dataset {
+        let mut rng = Pcg32::seeded(self.seed);
+        let d_feat: Vec<f64> = rng.uniform_vec(self.m, 0.0, self.feature_range);
+        let t_feat: Vec<f64> = rng.uniform_vec(self.q, 0.0, self.feature_range);
+
+        let per_row = ((self.q as f64) * self.density).round() as usize;
+        let n = per_row * self.m;
+        let mut start_idx = Vec::with_capacity(n);
+        let mut end_idx = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+
+        for i in 0..self.m {
+            // exact sample of `per_row` distinct end vertices
+            for j in rng.sample_indices(self.q, per_row) {
+                start_idx.push(i as u32);
+                end_idx.push(j as u32);
+                let mut y = true_label(d_feat[i], t_feat[j]);
+                if rng.bernoulli(self.noise) {
+                    y = -y;
+                }
+                labels.push(y);
+            }
+        }
+
+        Dataset {
+            start_features: Matrix::from_vec(self.m, 1, d_feat),
+            end_features: Matrix::from_vec(self.q, 1, t_feat),
+            start_idx,
+            end_idx,
+            labels,
+            name: format!("checker-{}x{}", self.m, self.q),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_config() {
+        let cfg = CheckerboardConfig { m: 40, q: 50, density: 0.25, noise: 0.2, seed: 1, ..Default::default() };
+        let ds = cfg.generate();
+        ds.validate().unwrap();
+        assert_eq!(ds.m(), 40);
+        assert_eq!(ds.q(), 50);
+        assert_eq!(ds.n_edges(), cfg.n_edges());
+        assert_eq!(ds.n_edges(), 40 * 13); // round(50*0.25)=13 per row
+    }
+
+    #[test]
+    fn paper_shapes() {
+        assert_eq!(checker(0).n_edges(), 250_000);
+        assert_eq!(checker_plus(0).n_edges(), 10_240_000);
+    }
+
+    #[test]
+    fn noise_rate_is_approximately_correct() {
+        let cfg = CheckerboardConfig { m: 100, q: 100, density: 0.5, noise: 0.2, seed: 2, ..Default::default() };
+        let ds = cfg.generate();
+        let flipped = ds
+            .labels
+            .iter()
+            .enumerate()
+            .filter(|(h, &y)| {
+                let d = ds.start_features.get(ds.start_idx[*h] as usize, 0);
+                let t = ds.end_features.get(ds.end_idx[*h] as usize, 0);
+                y != true_label(d, t)
+            })
+            .count();
+        let rate = flipped as f64 / ds.n_edges() as f64;
+        assert!((rate - 0.2).abs() < 0.02, "flip rate={rate}");
+    }
+
+    #[test]
+    fn no_duplicate_edges_within_row() {
+        let cfg = CheckerboardConfig { m: 10, q: 30, density: 0.5, noise: 0.0, seed: 3, ..Default::default() };
+        let ds = cfg.generate();
+        for i in 0..10u32 {
+            let mut ends: Vec<u32> = ds
+                .start_idx
+                .iter()
+                .zip(&ds.end_idx)
+                .filter(|(&s, _)| s == i)
+                .map(|(_, &e)| e)
+                .collect();
+            let len = ends.len();
+            ends.sort_unstable();
+            ends.dedup();
+            assert_eq!(ends.len(), len);
+        }
+    }
+
+    #[test]
+    fn class_balance_is_roughly_even() {
+        let ds = CheckerboardConfig { m: 120, q: 120, density: 0.3, noise: 0.2, seed: 4, ..Default::default() }
+            .generate();
+        let st = ds.stats();
+        let frac = st.positives as f64 / st.edges as f64;
+        assert!((frac - 0.5).abs() < 0.06, "positive fraction={frac}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = CheckerboardConfig { m: 20, q: 20, density: 0.4, noise: 0.1, seed: 9, ..Default::default() }.generate();
+        let b = CheckerboardConfig { m: 20, q: 20, density: 0.4, noise: 0.1, seed: 9, ..Default::default() }.generate();
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.start_idx, b.start_idx);
+    }
+}

@@ -1,0 +1,346 @@
+//! Labeled bipartite-graph dataset container and zero-shot splits.
+//!
+//! A dataset is a sequence of edges `(d_{start_h}, t_{end_h}, y_h)` over `m`
+//! start vertices (features `D ∈ R^{m×d}`) and `q` end vertices
+//! (`T ∈ R^{q×r}`). Vertices are referenced by index; edges may repeat
+//! vertices arbitrarily (the "Dependent" regime that the generalized vec
+//! trick exploits).
+
+use crate::gvt::KronIndex;
+use crate::linalg::Matrix;
+use crate::util::rng::Pcg32;
+
+/// A labeled bipartite graph with vertex features.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Start-vertex features, `m × d`.
+    pub start_features: Matrix,
+    /// End-vertex features, `q × r`.
+    pub end_features: Matrix,
+    /// Edge start-vertex indices (into `start_features` rows).
+    pub start_idx: Vec<u32>,
+    /// Edge end-vertex indices (into `end_features` rows).
+    pub end_idx: Vec<u32>,
+    /// Edge labels (±1 for classification, real for regression).
+    pub labels: Vec<f64>,
+    /// Dataset name for reports.
+    pub name: String,
+}
+
+/// Table-5-style summary statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetStats {
+    pub edges: usize,
+    pub positives: usize,
+    pub negatives: usize,
+    pub start_vertices: usize,
+    pub end_vertices: usize,
+}
+
+impl Dataset {
+    /// Validate internal consistency (index bounds, lengths).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.start_idx.len() != self.end_idx.len() || self.start_idx.len() != self.labels.len()
+        {
+            return Err("edge arrays have mismatched lengths".into());
+        }
+        let m = self.start_features.rows() as u32;
+        let q = self.end_features.rows() as u32;
+        for (h, (&s, &e)) in self.start_idx.iter().zip(&self.end_idx).enumerate() {
+            if s >= m {
+                return Err(format!("edge {h}: start index {s} ≥ m={m}"));
+            }
+            if e >= q {
+                return Err(format!("edge {h}: end index {e} ≥ q={q}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of labeled edges `n`.
+    pub fn n_edges(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Number of start vertices `m`.
+    pub fn m(&self) -> usize {
+        self.start_features.rows()
+    }
+
+    /// Number of end vertices `q`.
+    pub fn q(&self) -> usize {
+        self.end_features.rows()
+    }
+
+    /// The Kronecker index of the edges: `left` = end-vertex index (selects
+    /// rows of `G`), `right` = start-vertex index (rows of `K`) — matching
+    /// the `G ⊗ K` ordering used throughout the crate.
+    pub fn kron_index(&self) -> KronIndex {
+        KronIndex::new(self.end_idx.clone(), self.start_idx.clone())
+    }
+
+    /// Table-5-style statistics.
+    pub fn stats(&self) -> DatasetStats {
+        let positives = self.labels.iter().filter(|&&y| y > 0.0).count();
+        DatasetStats {
+            edges: self.n_edges(),
+            positives,
+            negatives: self.n_edges() - positives,
+            start_vertices: self.m(),
+            end_vertices: self.q(),
+        }
+    }
+
+    /// Graph density `n / (m·q)`.
+    pub fn density(&self) -> f64 {
+        self.n_edges() as f64 / (self.m() as f64 * self.q() as f64)
+    }
+
+    /// Build a new dataset from a subset of edge positions, compacting the
+    /// vertex sets to those incident to at least one kept edge.
+    pub fn subset_by_edges(&self, edge_pos: &[usize], name: &str) -> Dataset {
+        let mut start_map = vec![u32::MAX; self.m()];
+        let mut end_map = vec![u32::MAX; self.q()];
+        let mut kept_starts = Vec::new();
+        let mut kept_ends = Vec::new();
+        let mut start_idx = Vec::with_capacity(edge_pos.len());
+        let mut end_idx = Vec::with_capacity(edge_pos.len());
+        let mut labels = Vec::with_capacity(edge_pos.len());
+        for &h in edge_pos {
+            let s = self.start_idx[h] as usize;
+            let e = self.end_idx[h] as usize;
+            if start_map[s] == u32::MAX {
+                start_map[s] = kept_starts.len() as u32;
+                kept_starts.push(s);
+            }
+            if end_map[e] == u32::MAX {
+                end_map[e] = kept_ends.len() as u32;
+                kept_ends.push(e);
+            }
+            start_idx.push(start_map[s]);
+            end_idx.push(end_map[e]);
+            labels.push(self.labels[h]);
+        }
+        Dataset {
+            start_features: self.start_features.select_rows(&kept_starts),
+            end_features: self.end_features.select_rows(&kept_ends),
+            start_idx,
+            end_idx,
+            labels,
+            name: name.to_string(),
+        }
+    }
+
+    /// Random subsample of `n` edges (for learning-curve benchmarks).
+    pub fn subsample_edges(&self, n: usize, seed: u64) -> Dataset {
+        let mut rng = Pcg32::seeded(seed);
+        let pos = rng.sample_indices(self.n_edges(), n.min(self.n_edges()));
+        self.subset_by_edges(&pos, &format!("{}[n={n}]", self.name))
+    }
+
+    /// Vertex-disjoint (zero-shot) train/test split: `test_frac` of start
+    /// vertices and of end vertices are held out; training edges connect two
+    /// retained vertices, test edges connect two held-out vertices, and all
+    /// mixed edges are discarded (§5.1, Fig. 2 idea with 2×2 blocks).
+    pub fn zero_shot_split(&self, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        assert!((0.0..1.0).contains(&test_frac));
+        let mut rng = Pcg32::seeded(seed);
+        let m_test = ((self.m() as f64) * test_frac).round().max(1.0) as usize;
+        let q_test = ((self.q() as f64) * test_frac).round().max(1.0) as usize;
+        let start_test = mask_from_indices(self.m(), &rng.sample_indices(self.m(), m_test));
+        let end_test = mask_from_indices(self.q(), &rng.sample_indices(self.q(), q_test));
+
+        let mut train_edges = Vec::new();
+        let mut test_edges = Vec::new();
+        for h in 0..self.n_edges() {
+            let s_test = start_test[self.start_idx[h] as usize];
+            let e_test = end_test[self.end_idx[h] as usize];
+            match (s_test, e_test) {
+                (false, false) => train_edges.push(h),
+                (true, true) => test_edges.push(h),
+                _ => {} // discarded: connects train and test vertices
+            }
+        }
+        (
+            self.subset_by_edges(&train_edges, &format!("{}-train", self.name)),
+            self.subset_by_edges(&test_edges, &format!("{}-test", self.name)),
+        )
+    }
+
+    /// The 9-fold zero-shot cross-validation of Fig. 2: start and end vertex
+    /// indices are each partitioned into 3 groups, inducing 9 blocks. Each
+    /// round uses one block as the test fold and the 4 blocks sharing no row
+    /// or column group as training; the remaining 4 blocks are discarded.
+    /// Returns `(train_dataset, test_dataset)` pairs.
+    pub fn ninefold_cv(&self, seed: u64) -> Vec<(Dataset, Dataset)> {
+        let mut rng = Pcg32::seeded(seed);
+        let start_group = random_groups(self.m(), 3, &mut rng);
+        let end_group = random_groups(self.q(), 3, &mut rng);
+
+        let mut folds = Vec::with_capacity(9);
+        for gi in 0..3u8 {
+            for gj in 0..3u8 {
+                let mut train_edges = Vec::new();
+                let mut test_edges = Vec::new();
+                for h in 0..self.n_edges() {
+                    let sg = start_group[self.start_idx[h] as usize];
+                    let eg = end_group[self.end_idx[h] as usize];
+                    if sg == gi && eg == gj {
+                        test_edges.push(h);
+                    } else if sg != gi && eg != gj {
+                        train_edges.push(h);
+                    }
+                }
+                if train_edges.is_empty() || test_edges.is_empty() {
+                    continue;
+                }
+                folds.push((
+                    self.subset_by_edges(&train_edges, &format!("{}-cv{}{}-tr", self.name, gi, gj)),
+                    self.subset_by_edges(&test_edges, &format!("{}-cv{}{}-te", self.name, gi, gj)),
+                ));
+            }
+        }
+        folds
+    }
+
+    /// Concatenated `[d, t]` feature matrix of the edges (what the SGD and
+    /// KNN baselines operate on, §5.6).
+    pub fn concat_features(&self) -> Matrix {
+        let d = self.start_features.cols();
+        let r = self.end_features.cols();
+        let mut out = Matrix::zeros(self.n_edges(), d + r);
+        for h in 0..self.n_edges() {
+            let row = out.row_mut(h);
+            row[..d].copy_from_slice(self.start_features.row(self.start_idx[h] as usize));
+            row[d..].copy_from_slice(self.end_features.row(self.end_idx[h] as usize));
+        }
+        out
+    }
+}
+
+fn mask_from_indices(n: usize, idx: &[usize]) -> Vec<bool> {
+    let mut mask = vec![false; n];
+    for &i in idx {
+        mask[i] = true;
+    }
+    mask
+}
+
+/// Random balanced assignment of `n` items to `k` groups.
+fn random_groups(n: usize, k: u8, rng: &mut Pcg32) -> Vec<u8> {
+    let mut groups: Vec<u8> = (0..n).map(|i| (i % k as usize) as u8).collect();
+    rng.shuffle(&mut groups);
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_dataset(m: usize, q: usize, n: usize, seed: u64) -> Dataset {
+        let mut rng = Pcg32::seeded(seed);
+        let ds = Dataset {
+            start_features: Matrix::from_fn(m, 3, |_, _| rng.normal()),
+            end_features: Matrix::from_fn(q, 2, |_, _| rng.normal()),
+            start_idx: (0..n).map(|_| rng.below(m) as u32).collect(),
+            end_idx: (0..n).map(|_| rng.below(q) as u32).collect(),
+            labels: (0..n).map(|_| if rng.bernoulli(0.3) { 1.0 } else { -1.0 }).collect(),
+            name: "toy".into(),
+        };
+        ds.validate().unwrap();
+        ds
+    }
+
+    #[test]
+    fn stats_and_density() {
+        let ds = toy_dataset(10, 8, 40, 1);
+        let st = ds.stats();
+        assert_eq!(st.edges, 40);
+        assert_eq!(st.positives + st.negatives, 40);
+        assert_eq!(st.start_vertices, 10);
+        assert!((ds.density() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn subset_compacts_vertices() {
+        let ds = toy_dataset(20, 20, 10, 2);
+        let sub = ds.subset_by_edges(&[0, 3, 7], "sub");
+        sub.validate().unwrap();
+        assert_eq!(sub.n_edges(), 3);
+        assert!(sub.m() <= 3);
+        assert!(sub.q() <= 3);
+        // features must follow their vertices
+        for h in 0..3 {
+            let orig_h = [0, 3, 7][h];
+            let orig_row = ds.start_features.row(ds.start_idx[orig_h] as usize);
+            let new_row = sub.start_features.row(sub.start_idx[h] as usize);
+            assert_eq!(orig_row, new_row);
+            assert_eq!(ds.labels[orig_h], sub.labels[h]);
+        }
+    }
+
+    #[test]
+    fn zero_shot_split_is_vertex_disjoint() {
+        let ds = toy_dataset(30, 25, 300, 3);
+        let (train, test) = ds.zero_shot_split(0.3, 7);
+        train.validate().unwrap();
+        test.validate().unwrap();
+        assert!(train.n_edges() > 0);
+        assert!(test.n_edges() > 0);
+        // No feature row of the test vertices may appear among train vertices.
+        for i in 0..test.m() {
+            for j in 0..train.m() {
+                assert_ne!(test.start_features.row(i), train.start_features.row(j));
+            }
+        }
+        for i in 0..test.q() {
+            for j in 0..train.q() {
+                assert_ne!(test.end_features.row(i), train.end_features.row(j));
+            }
+        }
+    }
+
+    #[test]
+    fn ninefold_cv_has_nine_disjoint_folds() {
+        let ds = toy_dataset(30, 30, 500, 4);
+        let folds = ds.ninefold_cv(11);
+        assert_eq!(folds.len(), 9);
+        for (train, test) in &folds {
+            assert!(train.n_edges() > 0);
+            assert!(test.n_edges() > 0);
+            // vertex-disjoint: no shared feature rows
+            for i in 0..test.m() {
+                for j in 0..train.m() {
+                    assert_ne!(test.start_features.row(i), train.start_features.row(j));
+                }
+            }
+        }
+        // Test folds partition a subset of edges: blocks are disjoint, so the
+        // total number of test edges equals n (each edge is in exactly one block).
+        let total_test: usize = folds.iter().map(|(_, te)| te.n_edges()).sum();
+        assert_eq!(total_test, ds.n_edges());
+    }
+
+    #[test]
+    fn concat_features_layout() {
+        let ds = toy_dataset(5, 5, 8, 5);
+        let cf = ds.concat_features();
+        assert_eq!(cf.rows(), 8);
+        assert_eq!(cf.cols(), 5);
+        let h = 3;
+        assert_eq!(
+            &cf.row(h)[..3],
+            ds.start_features.row(ds.start_idx[h] as usize)
+        );
+        assert_eq!(&cf.row(h)[3..], ds.end_features.row(ds.end_idx[h] as usize));
+    }
+
+    #[test]
+    fn subsample_respects_n() {
+        let ds = toy_dataset(10, 10, 50, 6);
+        let sub = ds.subsample_edges(20, 1);
+        assert_eq!(sub.n_edges(), 20);
+        let over = ds.subsample_edges(500, 1);
+        assert_eq!(over.n_edges(), 50);
+    }
+}

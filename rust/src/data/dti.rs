@@ -1,0 +1,278 @@
+//! Synthetic drug–target interaction (DTI) data.
+//!
+//! The paper evaluates on four DTI datasets (Ki [60]; GPCR, IC, E [59])
+//! whose chemical/genomic feature files are not redistributable. This module
+//! generates *shape-exact* synthetic substitutes (same vertex counts, edge
+//! counts and positive rates as Table 5) from a planted model:
+//!
+//! ```text
+//! score(i,j) = ⟨u_i, v_j⟩ + β·(b_i + c_j) + ε
+//! ```
+//!
+//! with latent factors `u, v`, vertex-level "promiscuity" biases `b, c`, and
+//! observed features that are noisy linear views of the latents. The
+//! bilinear term is exactly the structure a Kronecker product kernel can
+//! represent while a linear model on concatenated features `[d, t]` cannot;
+//! the bias term gives linear baselines partial signal — reproducing the
+//! qualitative Table-6 ordering (Kron methods > SGD ≥ KNN) without the
+//! original data. Labels are +1 for the top `positives` scores among the
+//! sampled edges (exact class counts), with a small flip rate for realism.
+
+use super::dataset::Dataset;
+use crate::linalg::Matrix;
+use crate::util::rng::Pcg32;
+
+/// Configuration for synthetic DTI generation.
+#[derive(Debug, Clone, Copy)]
+pub struct DtiConfig {
+    /// Number of start vertices (drugs), `m`.
+    pub m: usize,
+    /// Number of end vertices (targets), `q`.
+    pub q: usize,
+    /// Number of labeled edges, `n`.
+    pub n: usize,
+    /// Number of positive edges.
+    pub positives: usize,
+    /// Observed start-vertex feature dimension `d`.
+    pub d_features: usize,
+    /// Observed end-vertex feature dimension `r`.
+    pub r_features: usize,
+    /// Latent dimension of the planted bilinear model.
+    pub latent: usize,
+    /// Weight of the vertex-bias (linearly learnable) component.
+    pub bias_weight: f64,
+    /// Observation noise on features.
+    pub feature_noise: f64,
+    /// Label flip probability.
+    pub flip: f64,
+    pub seed: u64,
+}
+
+impl Default for DtiConfig {
+    fn default() -> Self {
+        DtiConfig {
+            m: 200,
+            q: 100,
+            n: 5000,
+            positives: 250,
+            d_features: 32,
+            r_features: 32,
+            latent: 8,
+            bias_weight: 0.7,
+            feature_noise: 0.3,
+            flip: 0.05,
+            seed: 0,
+        }
+    }
+}
+
+/// Shape-exact synthetic `Ki` ([60]: 1421 drugs × 156 targets, 93 356 edges,
+/// 3 200 positive).
+pub fn ki(seed: u64) -> DtiConfig {
+    DtiConfig { m: 1421, q: 156, n: 93_356, positives: 3200, seed, ..Default::default() }
+}
+
+/// Shape-exact synthetic `GPCR` ([59]: 223×95, 5 296 edges, 165 positive).
+pub fn gpcr(seed: u64) -> DtiConfig {
+    DtiConfig { m: 223, q: 95, n: 5296, positives: 165, seed, ..Default::default() }
+}
+
+/// Shape-exact synthetic `IC` ([59]: 210×204, 10 710 edges, 369 positive).
+pub fn ic(seed: u64) -> DtiConfig {
+    DtiConfig { m: 210, q: 204, n: 10_710, positives: 369, seed, ..Default::default() }
+}
+
+/// Shape-exact synthetic `E` ([59]: 445×664, 73 870 edges, 732 positive).
+pub fn e(seed: u64) -> DtiConfig {
+    DtiConfig { m: 445, q: 664, n: 73_870, positives: 732, seed, ..Default::default() }
+}
+
+/// All four Table-5 DTI datasets as `(name, config)` pairs.
+pub fn table5_datasets(seed: u64) -> Vec<(&'static str, DtiConfig)> {
+    vec![("Ki", ki(seed)), ("GPCR", gpcr(seed)), ("IC", ic(seed)), ("E", e(seed))]
+}
+
+impl DtiConfig {
+    /// Generate the dataset.
+    pub fn generate(&self) -> Dataset {
+        assert!(self.n <= self.m * self.q, "cannot sample more edges than pairs");
+        assert!(self.positives <= self.n);
+        let mut rng = Pcg32::seeded(self.seed ^ 0xD71);
+
+        // Planted latents and biases.
+        let u = Matrix::from_fn(self.m, self.latent, |_, _| rng.normal());
+        let v = Matrix::from_fn(self.q, self.latent, |_, _| rng.normal());
+        let b: Vec<f64> = rng.normal_vec(self.m);
+        let c: Vec<f64> = rng.normal_vec(self.q);
+
+        // Observed features = latents (+ bias as an extra visible coordinate)
+        // mixed through a random linear map, plus noise. The bias is made
+        // visible so linear baselines have something to learn. Maps are
+        // scaled so observed features (and hence linear-kernel entries) stay
+        // O(1) — real chemical/genomic similarity features are normalized
+        // too, and λ grids are only meaningful on a normalized kernel scale.
+        let d_scale = 1.0 / (((self.latent + 1) * self.d_features) as f64).sqrt();
+        let r_scale = 1.0 / (((self.latent + 1) * self.r_features) as f64).sqrt();
+        let d_map = Matrix::from_fn(self.latent + 1, self.d_features, |_, _| rng.normal() * d_scale);
+        let r_map = Matrix::from_fn(self.latent + 1, self.r_features, |_, _| rng.normal() * r_scale);
+        let mut start_features = Matrix::zeros(self.m, self.d_features);
+        for i in 0..self.m {
+            let mut lat: Vec<f64> = u.row(i).to_vec();
+            lat.push(b[i]);
+            for jf in 0..self.d_features {
+                let mut acc = 0.0;
+                for (l, &lv) in lat.iter().enumerate() {
+                    acc += lv * d_map.get(l, jf);
+                }
+                let noise = self.feature_noise / (self.d_features as f64).sqrt();
+                start_features.set(i, jf, acc + noise * rng.normal());
+            }
+        }
+        let mut end_features = Matrix::zeros(self.q, self.r_features);
+        for j in 0..self.q {
+            let mut lat: Vec<f64> = v.row(j).to_vec();
+            lat.push(c[j]);
+            for jf in 0..self.r_features {
+                let mut acc = 0.0;
+                for (l, &lv) in lat.iter().enumerate() {
+                    acc += lv * r_map.get(l, jf);
+                }
+                let noise = self.feature_noise / (self.r_features as f64).sqrt();
+                end_features.set(j, jf, acc + noise * rng.normal());
+            }
+        }
+
+        // Sample exactly n edges, spread row-wise (each drug is tested
+        // against a subset of targets, as in real interaction panels).
+        let base = self.n / self.m;
+        let rem = self.n % self.m;
+        let mut start_idx = Vec::with_capacity(self.n);
+        let mut end_idx = Vec::with_capacity(self.n);
+        let mut scores = Vec::with_capacity(self.n);
+        for i in 0..self.m {
+            let count = base + usize::from(i < rem);
+            for j in rng.sample_indices(self.q, count.min(self.q)) {
+                start_idx.push(i as u32);
+                end_idx.push(j as u32);
+                let mut s = crate::linalg::vecops::dot(u.row(i), v.row(j));
+                s += self.bias_weight * (b[i] + c[j]);
+                s += 0.1 * rng.normal();
+                scores.push(s);
+            }
+        }
+        let n_actual = scores.len();
+
+        // Threshold at the (n - positives)-th order statistic → exact counts.
+        let mut sorted = scores.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let thresh = sorted[n_actual - self.positives.min(n_actual)];
+        let mut labels: Vec<f64> = scores
+            .iter()
+            .map(|&s| if s >= thresh { 1.0 } else { -1.0 })
+            .collect();
+        // Count-preserving label noise: swap the labels of `k` random
+        // positive and `k` random negative edges, so the Table-5 class
+        // counts stay exact while ~flip of the positives become noise.
+        let pos_idx: Vec<usize> = (0..n_actual).filter(|&h| labels[h] > 0.0).collect();
+        let neg_idx: Vec<usize> = (0..n_actual).filter(|&h| labels[h] < 0.0).collect();
+        let k = ((self.flip * pos_idx.len() as f64).round() as usize)
+            .min(pos_idx.len())
+            .min(neg_idx.len());
+        if k > 0 {
+            for &pi in rng.sample_indices(pos_idx.len(), k).iter() {
+                labels[pos_idx[pi]] = -1.0;
+            }
+            for &ni in rng.sample_indices(neg_idx.len(), k).iter() {
+                labels[neg_idx[ni]] = 1.0;
+            }
+        }
+
+        Dataset {
+            start_features,
+            end_features,
+            start_idx,
+            end_idx,
+            labels,
+            name: format!("dti-{}x{}", self.m, self.q),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_table5() {
+        for (name, cfg) in table5_datasets(1) {
+            // generation itself is tested on the small sets; Ki is big, so
+            // just check config numbers here.
+            match name {
+                "Ki" => {
+                    assert_eq!((cfg.m, cfg.q, cfg.n, cfg.positives), (1421, 156, 93_356, 3200))
+                }
+                "GPCR" => assert_eq!((cfg.m, cfg.q, cfg.n, cfg.positives), (223, 95, 5296, 165)),
+                "IC" => assert_eq!((cfg.m, cfg.q, cfg.n, cfg.positives), (210, 204, 10_710, 369)),
+                "E" => assert_eq!((cfg.m, cfg.q, cfg.n, cfg.positives), (445, 664, 73_870, 732)),
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn gpcr_generation_is_shape_exact() {
+        let ds = gpcr(3).generate();
+        ds.validate().unwrap();
+        let st = ds.stats();
+        assert_eq!(st.edges, 5296);
+        assert_eq!(st.start_vertices, 223);
+        assert_eq!(st.end_vertices, 95);
+        // label noise is count-preserving → exact Table-5 positives
+        assert_eq!(st.positives, 165);
+    }
+
+    #[test]
+    fn imbalance_is_preserved() {
+        let ds = ic(5).generate();
+        let st = ds.stats();
+        let rate = st.positives as f64 / st.edges as f64;
+        assert!(rate < 0.12, "positive rate={rate}"); // IC is ~3.4% positive
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = gpcr(7).generate();
+        let b = gpcr(7).generate();
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.start_idx, b.start_idx);
+        assert_eq!(a.start_features.data(), b.start_features.data());
+    }
+
+    #[test]
+    fn signal_is_learnable_from_features() {
+        // Sanity: a simple nearest-centroid on the *product* structure should
+        // beat chance. We check that edges sharing a positive-heavy drug
+        // correlate — weak proxy executed cheaply: positive edges should have
+        // higher planted-score reconstruction from features. Instead of
+        // re-deriving latents, check label autocorrelation per drug.
+        let ds = gpcr(11).generate();
+        let mut per_drug_pos = vec![0usize; ds.m()];
+        let mut per_drug_tot = vec![0usize; ds.m()];
+        for h in 0..ds.n_edges() {
+            per_drug_tot[ds.start_idx[h] as usize] += 1;
+            if ds.labels[h] > 0.0 {
+                per_drug_pos[ds.start_idx[h] as usize] += 1;
+            }
+        }
+        // Positives cluster on few drugs (bias term) → max per-drug positive
+        // rate far above the global rate.
+        let global = ds.stats().positives as f64 / ds.n_edges() as f64;
+        let max_rate = per_drug_pos
+            .iter()
+            .zip(&per_drug_tot)
+            .filter(|(_, &t)| t >= 5)
+            .map(|(&p, &t)| p as f64 / t as f64)
+            .fold(0.0, f64::max);
+        assert!(max_rate > 3.0 * global, "max={max_rate}, global={global}");
+    }
+}

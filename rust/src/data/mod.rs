@@ -1,0 +1,17 @@
+//! Bipartite-graph datasets: container, generators, and zero-shot splits.
+//!
+//! * [`dataset`] — the labeled edge-list container with vertex feature
+//!   matrices, plus vertex-disjoint (zero-shot) train/test splitting and the
+//!   9-fold cross-validation scheme of Fig. 2.
+//! * [`checkerboard`] — the Checkerboard simulation of §5.1 (exact).
+//! * [`dti`] — synthetic drug–target interaction data matching the Table 5
+//!   dataset shapes (Ki, GPCR, IC, E); see DESIGN.md §3 for the substitution
+//!   rationale.
+
+pub mod dataset;
+pub mod checkerboard;
+pub mod dti;
+
+pub use dataset::Dataset;
+pub use checkerboard::CheckerboardConfig;
+pub use dti::DtiConfig;

@@ -1,0 +1,114 @@
+//! Area under the ROC curve, computed exactly via the rank statistic with
+//! proper tie handling (average ranks). `O(n log n)`.
+
+/// AUC of `scores` against ±1 (or 0/1) `labels`. Returns 0.5 when one class
+/// is absent (undefined AUC — the conventional fallback).
+pub fn auc(labels: &[f64], scores: &[f64]) -> f64 {
+    assert_eq!(labels.len(), scores.len());
+    let n = labels.len();
+    let n_pos = labels.iter().filter(|&&y| y > 0.0).count();
+    let n_neg = n - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+
+    // Sort indices by score; assign average ranks to ties.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| scores[i].partial_cmp(&scores[j]).unwrap_or(std::cmp::Ordering::Equal));
+
+    let mut rank_sum_pos = 0.0;
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[order[j + 1]] == scores[order[i]] {
+            j += 1;
+        }
+        // ranks i+1 ..= j+1 (1-based) share the average rank
+        let avg_rank = (i + 1 + j + 1) as f64 / 2.0;
+        for &idx in &order[i..=j] {
+            if labels[idx] > 0.0 {
+                rank_sum_pos += avg_rank;
+            }
+        }
+        i = j + 1;
+    }
+
+    (rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0) / (n_pos as f64 * n_neg as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Brute-force O(n²) AUC with ½-credit for ties.
+    fn auc_brute(labels: &[f64], scores: &[f64]) -> f64 {
+        let mut wins = 0.0;
+        let mut pairs = 0.0;
+        for i in 0..labels.len() {
+            if labels[i] <= 0.0 {
+                continue;
+            }
+            for j in 0..labels.len() {
+                if labels[j] > 0.0 {
+                    continue;
+                }
+                pairs += 1.0;
+                if scores[i] > scores[j] {
+                    wins += 1.0;
+                } else if scores[i] == scores[j] {
+                    wins += 0.5;
+                }
+            }
+        }
+        wins / pairs
+    }
+
+    #[test]
+    fn perfect_and_inverted() {
+        let labels = vec![1.0, 1.0, -1.0, -1.0];
+        assert_eq!(auc(&labels, &[4.0, 3.0, 2.0, 1.0]), 1.0);
+        assert_eq!(auc(&labels, &[1.0, 2.0, 3.0, 4.0]), 0.0);
+    }
+
+    #[test]
+    fn constant_scores_give_half() {
+        let labels = vec![1.0, -1.0, 1.0, -1.0];
+        assert_eq!(auc(&labels, &[0.5; 4]), 0.5);
+    }
+
+    #[test]
+    fn single_class_returns_half() {
+        assert_eq!(auc(&[1.0, 1.0], &[0.1, 0.9]), 0.5);
+        assert_eq!(auc(&[-1.0, -1.0], &[0.1, 0.9]), 0.5);
+    }
+
+    #[test]
+    fn matches_brute_force_with_ties() {
+        let mut rng = Pcg32::seeded(200);
+        for _ in 0..20 {
+            let n = 3 + rng.below(40);
+            let labels: Vec<f64> =
+                (0..n).map(|_| if rng.bernoulli(0.4) { 1.0 } else { -1.0 }).collect();
+            // quantized scores to force ties
+            let scores: Vec<f64> = (0..n).map(|_| (rng.uniform() * 8.0).round() / 8.0).collect();
+            if labels.iter().all(|&y| y > 0.0) || labels.iter().all(|&y| y <= 0.0) {
+                continue;
+            }
+            let fast = auc(&labels, &scores);
+            let slow = auc_brute(&labels, &scores);
+            assert!((fast - slow).abs() < 1e-12, "{fast} vs {slow}");
+        }
+    }
+
+    #[test]
+    fn invariant_to_monotone_transform() {
+        let mut rng = Pcg32::seeded(201);
+        let n = 50;
+        let labels: Vec<f64> =
+            (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let scores = rng.normal_vec(n);
+        let transformed: Vec<f64> = scores.iter().map(|s| (s * 0.5).exp()).collect();
+        assert!((auc(&labels, &scores) - auc(&labels, &transformed)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,74 @@
+//! Auxiliary metrics: classification accuracy, RMSE, and the regularized
+//! risk `J(f)` tracked by the convergence experiments (Figs. 3–5).
+
+/// Classification accuracy with the sign rule (`ŷ = sign(score)`).
+pub fn accuracy(labels: &[f64], scores: &[f64]) -> f64 {
+    assert_eq!(labels.len(), scores.len());
+    if labels.is_empty() {
+        return 0.0;
+    }
+    let correct = labels
+        .iter()
+        .zip(scores)
+        .filter(|(&y, &s)| (s >= 0.0) == (y > 0.0))
+        .count();
+    correct as f64 / labels.len() as f64
+}
+
+/// Root mean squared error.
+pub fn rmse(labels: &[f64], scores: &[f64]) -> f64 {
+    assert_eq!(labels.len(), scores.len());
+    if labels.is_empty() {
+        return 0.0;
+    }
+    let mse = labels
+        .iter()
+        .zip(scores)
+        .map(|(y, s)| (y - s) * (y - s))
+        .sum::<f64>()
+        / labels.len() as f64;
+    mse.sqrt()
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation (0 for < 2 elements).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mu = mean(xs);
+    (xs.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_signs() {
+        let y = vec![1.0, -1.0, 1.0, -1.0];
+        let s = vec![0.3, -2.0, -0.1, 5.0];
+        assert!((accuracy(&y, &s) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rmse_basic() {
+        assert!((rmse(&[1.0, 2.0], &[1.0, 4.0]) - 2f64.sqrt()).abs() < 1e-12);
+        assert_eq!(rmse(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn mean_stddev() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,8 @@
+//! Evaluation: AUC (the paper's metric throughout §5), auxiliary metrics,
+//! and experiment-result tables.
+
+pub mod auc;
+pub mod metrics;
+
+pub use auc::auc;
+pub use metrics::{accuracy, rmse};

@@ -1,0 +1,111 @@
+//! Flop-count model for Algorithm 1 (Theorem 1) and branch selection.
+//!
+//! Branch **T** (lines 2–11): build `T = V·Mᵀ ∈ R^{d×a}` (cost `a·e`), then
+//! `u_h = N[q_h,:] · T[:,p_h]` (cost `d·f`)  →  total `a·e + d·f`.
+//!
+//! Branch **S** (lines 13–22): build `S = N·V ∈ R^{c×b}` (cost `c·e`), then
+//! `u_h = S[q_h,:] · M[p_h,:]` (cost `b·f`)  →  total `c·e + b·f`.
+//!
+//! The same model (extended with a GEMM term) is what the coordinator's
+//! router uses to choose between the native loops and the PJRT dense path.
+
+/// Which branch of Algorithm 1 to execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Branch {
+    /// `T = V Mᵀ` first (condition `ae + df < ce + bf` true; lines 2–11).
+    T,
+    /// `S = N V` first (lines 13–22).
+    S,
+}
+
+/// `(cost_T, cost_S) = (a·e + d·f, c·e + b·f)` from Theorem 1.
+pub fn branch_costs(a: usize, b: usize, c: usize, d: usize, e: usize, f: usize) -> (u128, u128) {
+    let _ = b; // b enters only cost_S
+    let cost_t = a as u128 * e as u128 + d as u128 * f as u128;
+    let cost_s = c as u128 * e as u128 + b as u128 * f as u128;
+    (cost_t, cost_s)
+}
+
+/// Pick the cheaper branch (the `if` on line 1 of Algorithm 1).
+pub fn choose_branch(a: usize, b: usize, c: usize, d: usize, e: usize, f: usize) -> Branch {
+    let (t, s) = branch_costs(a, b, c, d, e, f);
+    if t < s {
+        Branch::T
+    } else {
+        Branch::S
+    }
+}
+
+/// Cost of the explicit baseline: materializing the `f×e` submatrix costs
+/// `f·e` kernel evaluations (each O(1) given M, N) and the matvec `f·e`.
+pub fn explicit_cost(e: usize, f: usize) -> u128 {
+    2 * (e as u128) * (f as u128)
+}
+
+/// Cost of the dense scatter→GEMM→gather path (DESIGN.md
+/// §Hardware-Adaptation): scatter `e`, GEMM `a·d·(b+?)`… for the square
+/// training case (`M: q×q`, `N: m×m`) this is `e + m·q·(m+q) + f`.
+pub fn dense_path_cost(a: usize, b: usize, c: usize, d: usize, e: usize, f: usize) -> u128 {
+    // V is d×b; K V costs c·d·b; (N V) Mᵀ costs c·b·a.
+    e as u128 + (c as u128 * d as u128 * b as u128) + (c as u128 * b as u128 * a as u128) + f as u128
+}
+
+/// Theorem 1 cost of the chosen branch.
+pub fn gvt_cost(a: usize, b: usize, c: usize, d: usize, e: usize, f: usize) -> u128 {
+    let (t, s) = branch_costs(a, b, c, d, e, f);
+    t.min(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn branch_choice_follows_costs() {
+        // cost_T = a·e + d·f, cost_S = c·e + b·f.
+        // (a=1000, d=1000) → T expensive; (b=10, c=10) → S cheap.
+        assert_eq!(choose_branch(1000, 10, 10, 1000, 500, 500), Branch::S);
+        // (a=10, d=10) → T cheap; (b=1000, c=1000) → S expensive.
+        assert_eq!(choose_branch(10, 1000, 1000, 10, 500, 500), Branch::T);
+    }
+
+    #[test]
+    fn square_case_is_symmetric() {
+        // In the training case M: q×q, N: m×m, e=f=n → costs are (qn+mn, mn+qn): equal.
+        let (t, s) = branch_costs(50, 50, 80, 80, 1000, 1000);
+        assert_eq!(t, 50 * 1000 + 80 * 1000);
+        assert_eq!(s, 80 * 1000 + 50 * 1000);
+        assert_eq!(t, s);
+    }
+
+    #[test]
+    fn gvt_beats_explicit_in_dependent_regime() {
+        // Dependent regime: n=10_000 edges over m=q=200 vertices.
+        let (m, q, n) = (200usize, 200usize, 10_000usize);
+        assert!(gvt_cost(q, q, m, m, n, n) < explicit_cost(n, n));
+    }
+
+    #[test]
+    fn independent_regime_matches_baseline_asymptotics() {
+        // n=m=q: gvt cost = 2n², explicit = 2n² — same order (Table 3 row 1).
+        let n = 500usize;
+        let g = gvt_cost(n, n, n, n, n, n);
+        let e = explicit_cost(n, n);
+        assert_eq!(g, e);
+    }
+
+    #[test]
+    fn dense_path_wins_only_when_dense() {
+        let (m, q) = (128usize, 128usize);
+        let sparse_n = 500;
+        let dense_n = m * q;
+        assert!(
+            gvt_cost(q, q, m, m, sparse_n, sparse_n)
+                < dense_path_cost(q, q, m, m, sparse_n, sparse_n)
+        );
+        // At complete-graph density the two are the same order.
+        let gvt = gvt_cost(q, q, m, m, dense_n, dense_n) as f64;
+        let dense = dense_path_cost(q, q, m, m, dense_n, dense_n) as f64;
+        assert!(dense / gvt < 2.0, "dense={dense}, gvt={gvt}");
+    }
+}

@@ -1,0 +1,141 @@
+//! Dense scatter→GEMM→gather formulation of the generalized vec trick.
+//!
+//! From the proof of Theorem 1: with `V ∈ R^{d×b}` such that
+//! `vec(V) = Cᵀ v` (i.e. `V[t_l, r_l] += v_l`),
+//!
+//! ```text
+//! R (M ⊗ N) Cᵀ v = R vec(N V Mᵀ)      so      u_h = (N V Mᵀ)[q_h, p_h].
+//! ```
+//!
+//! Instead of exploiting sparsity of `V` edge-by-edge (as [`super::algorithm`]
+//! does), this path runs the two products as *dense* GEMMs — `O(cdb + cba)`
+//! flops regardless of how many edges exist. On CPU this only wins near the
+//! complete-graph limit; on TPU it is the right mapping because the GEMMs run
+//! on the MXU (DESIGN.md §Hardware-Adaptation) — this module is the native
+//! mirror of the L1/L2 artifact path, used by the router and for validation.
+
+use super::KronIndex;
+use crate::linalg::Matrix;
+
+/// Scatter edge values into a dense `rows×cols` matrix:
+/// `out[ri[l], ci[l]] += v[l]`.
+pub fn scatter_edges(v: &[f64], ri: &[u32], ci: &[u32], rows: usize, cols: usize) -> Matrix {
+    assert_eq!(v.len(), ri.len());
+    assert_eq!(v.len(), ci.len());
+    let mut out = Matrix::zeros(rows, cols);
+    for l in 0..v.len() {
+        out.add_at(ri[l] as usize, ci[l] as usize, v[l]);
+    }
+    out
+}
+
+/// Gather entries of a dense matrix at edge positions: `u[h] = p[ri[h], ci[h]]`.
+pub fn gather_edges(p: &Matrix, ri: &[u32], ci: &[u32]) -> Vec<f64> {
+    assert_eq!(ri.len(), ci.len());
+    ri.iter().zip(ci).map(|(&r, &c)| p.get(r as usize, c as usize)).collect()
+}
+
+/// `u = R (M ⊗ N) Cᵀ v` via the dense path. Semantics identical to
+/// [`super::algorithm::gvt_apply`].
+pub fn dense_apply(
+    m: &Matrix,
+    n: &Matrix,
+    rows: &KronIndex,
+    cols: &KronIndex,
+    v: &[f64],
+) -> Vec<f64> {
+    let (_a, b) = (m.rows(), m.cols());
+    let (_c, d) = (n.rows(), n.cols());
+    // V ∈ R^{d×b}: V[t_l, r_l] += v_l
+    let v_mat = scatter_edges(v, &cols.right, &cols.left, d, b);
+    // P = N V Mᵀ ∈ R^{c×a}
+    let p = n.matmul(&v_mat).matmul_nt(m);
+    // u_h = P[q_h, p_h]
+    gather_edges(&p, &rows.right, &rows.left)
+}
+
+/// The complete-graph special case (`R = C = I`, Remark 1): the standard vec
+/// trick `(M ⊗ N) vec_rowpair(Q)` as two GEMMs. Input and output vectors use
+/// the row-major pair enumeration `(left·dim_right + right)` consistent with
+/// [`KronIndex::flat`].
+pub fn vec_trick_full(m: &Matrix, n: &Matrix, v: &[f64]) -> Vec<f64> {
+    let (a, b) = (m.rows(), m.cols());
+    let (c, d) = (n.rows(), n.cols());
+    assert_eq!(v.len(), b * d, "v must have length b·d");
+    // v enumerated as (r·d + t) → V[t, r]: V = reshape(v, b×d)ᵀ
+    let v_mat = Matrix::from_fn(d, b, |t, r| v[r * d + t]);
+    let p = n.matmul(&v_mat).matmul_nt(m); // c×a
+    // output enumerated as (p·c + q) → P[q, p]
+    let mut u = vec![0.0; a * c];
+    for pi in 0..a {
+        for qi in 0..c {
+            u[pi * c + qi] = p.get(qi, pi);
+        }
+    }
+    u
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gvt::algorithm::gvt_apply;
+    use crate::gvt::explicit::explicit_apply;
+    use crate::linalg::vecops::assert_allclose;
+    use crate::util::proptest;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn dense_matches_gvt_and_explicit() {
+        let mut rng = Pcg32::seeded(70);
+        let m = Matrix::from_fn(4, 5, |_, _| rng.normal());
+        let n = Matrix::from_fn(3, 6, |_, _| rng.normal());
+        let rows = KronIndex::from_usize(&[0, 3, 2, 1], &[2, 0, 1, 2]);
+        let cols = KronIndex::from_usize(&[4, 1, 0, 2, 3], &[5, 0, 3, 1, 4]);
+        let v = rng.normal_vec(5);
+        let dense = dense_apply(&m, &n, &rows, &cols, &v);
+        let fast = gvt_apply(&m, &n, &rows, &cols, &v);
+        let slow = explicit_apply(&m, &n, &rows, &cols, &v);
+        assert_allclose(&dense, &fast, 1e-10, 1e-10);
+        assert_allclose(&dense, &slow, 1e-10, 1e-10);
+    }
+
+    #[test]
+    fn dense_handles_duplicate_edges() {
+        // Scatter must *accumulate* on repeated (r,t) pairs.
+        let mut rng = Pcg32::seeded(71);
+        let m = Matrix::from_fn(3, 3, |_, _| rng.normal());
+        let n = Matrix::from_fn(3, 3, |_, _| rng.normal());
+        let rows = KronIndex::from_usize(&[0, 1], &[1, 2]);
+        let cols = KronIndex::from_usize(&[1, 1, 2], &[0, 0, 2]); // duplicate (1,0)
+        let v = vec![1.0, 2.0, 3.0];
+        let dense = dense_apply(&m, &n, &rows, &cols, &v);
+        let slow = explicit_apply(&m, &n, &rows, &cols, &v);
+        assert_allclose(&dense, &slow, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn vec_trick_matches_full_kron() {
+        proptest::check_n(0xD1CE, 12, |rng| {
+            let a = 1 + rng.below(5);
+            let b = 1 + rng.below(5);
+            let c = 1 + rng.below(5);
+            let d = 1 + rng.below(5);
+            let m = Matrix::from_fn(a, b, |_, _| rng.normal());
+            let n = Matrix::from_fn(c, d, |_, _| rng.normal());
+            let v = rng.normal_vec(b * d);
+            let fast = vec_trick_full(&m, &n, &v);
+            let full = m.kron(&n).matvec(&v);
+            assert_allclose(&fast, &full, 1e-9, 1e-9);
+        });
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip() {
+        let v = vec![1.0, 2.0, 3.0];
+        let ri = vec![0u32, 2, 1];
+        let ci = vec![1u32, 0, 1];
+        let m = scatter_edges(&v, &ri, &ci, 3, 2);
+        let back = gather_edges(&m, &ri, &ci);
+        assert_eq!(back, v);
+    }
+}

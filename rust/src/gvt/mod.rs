@@ -1,0 +1,130 @@
+//! The **generalized vec trick** (Algorithm 1 of the paper): compute
+//!
+//! ```text
+//! u = R (M ⊗ N) Cᵀ v
+//! ```
+//!
+//! in `O(min(ae + df, ce + bf))` time, where `M ∈ R^{a×b}`, `N ∈ R^{c×d}`,
+//! `R ∈ {0,1}^{f×ac}` is a row index matrix encoded by sequences
+//! `p ∈ [a]^f`, `q ∈ [c]^f`, and `C ∈ {0,1}^{e×bd}` a column index matrix
+//! encoded by `r ∈ [b]^e`, `t ∈ [d]^e` (Lemma 2). Elementwise,
+//!
+//! ```text
+//! u_h = Σ_l  M[p_h, r_l] · N[q_h, t_l] · v_l .
+//! ```
+//!
+//! Submodules:
+//! * [`algorithm`] — the two branches of Algorithm 1 (cache-transposed
+//!   layouts), automatic branch selection, zero-skipping for sparse `v`.
+//! * [`operator`] — [`LinOp`](crate::linalg::LinOp) wrappers: the training
+//!   kernel operator `R(G⊗K)Rᵀ`, Newton-system operators, prediction.
+//! * [`dense`] — the scatter→GEMM→gather formulation used by the TPU/PJRT
+//!   path (see DESIGN.md §Hardware-Adaptation) as a native reference.
+//! * [`explicit`] — materialized baseline (`R(M⊗N)Cᵀ` built explicitly);
+//!   what the paper calls "Baseline" in Tables 3–4. Tests and benches only.
+//! * [`complexity`] — the flop model that drives branch choice and the
+//!   coordinator's native-vs-PJRT routing.
+
+pub mod algorithm;
+pub mod operator;
+pub mod dense;
+pub mod explicit;
+pub mod complexity;
+
+pub use algorithm::{gvt_apply, gvt_apply_into, Branch, GvtWorkspace};
+pub use operator::{KronKernelOp, KronPredictOp, SvmNewtonOp};
+pub use complexity::{branch_costs, choose_branch};
+
+/// Index sequences `(p, q)` (or `(r, t)`) selecting rows (or columns) of a
+/// Kronecker product `M ⊗ N` by factor-matrix indices (Lemma 2). 0-based.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KronIndex {
+    /// Index into the *left* factor (`M`): `p` (rows) or `r` (columns).
+    pub left: Vec<u32>,
+    /// Index into the *right* factor (`N`): `q` (rows) or `t` (columns).
+    pub right: Vec<u32>,
+}
+
+impl KronIndex {
+    /// Construct, validating lengths match.
+    pub fn new(left: Vec<u32>, right: Vec<u32>) -> KronIndex {
+        assert_eq!(left.len(), right.len(), "index sequences must have equal length");
+        KronIndex { left, right }
+    }
+
+    /// Construct from usize slices (convenience).
+    pub fn from_usize(left: &[usize], right: &[usize]) -> KronIndex {
+        KronIndex::new(
+            left.iter().map(|&i| i as u32).collect(),
+            right.iter().map(|&i| i as u32).collect(),
+        )
+    }
+
+    /// Number of indexed rows/columns (`f` or `e` in the paper).
+    pub fn len(&self) -> usize {
+        self.left.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.left.is_empty()
+    }
+
+    /// Check all indices are in-bounds for factor dimensions
+    /// (`left < dim_left`, `right < dim_right`).
+    pub fn validate(&self, dim_left: usize, dim_right: usize) -> Result<(), String> {
+        for (h, (&l, &r)) in self.left.iter().zip(&self.right).enumerate() {
+            if l as usize >= dim_left {
+                return Err(format!("index {h}: left {l} out of bounds ({dim_left})"));
+            }
+            if r as usize >= dim_right {
+                return Err(format!("index {h}: right {r} out of bounds ({dim_right})"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether the sequences are surjective onto `[0, dim_left) × [0, dim_right)`
+    /// *separately* (the assumption of Theorem 1; the algorithm works without
+    /// it but the complexity statement needs it).
+    pub fn is_surjective(&self, dim_left: usize, dim_right: usize) -> bool {
+        let mut seen_l = vec![false; dim_left];
+        let mut seen_r = vec![false; dim_right];
+        for (&l, &r) in self.left.iter().zip(&self.right) {
+            seen_l[l as usize] = true;
+            seen_r[r as usize] = true;
+        }
+        seen_l.iter().all(|&s| s) && seen_r.iter().all(|&s| s)
+    }
+
+    /// The flat row index `(left·dim_right + right)` of each pair in the
+    /// Kronecker product (row-major pair ordering, Lemma 2 with 0-base).
+    pub fn flat(&self, dim_right: usize) -> Vec<usize> {
+        self.left
+            .iter()
+            .zip(&self.right)
+            .map(|(&l, &r)| l as usize * dim_right + r as usize)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kron_index_basics() {
+        let idx = KronIndex::from_usize(&[0, 1, 2], &[1, 0, 1]);
+        assert_eq!(idx.len(), 3);
+        assert!(idx.validate(3, 2).is_ok());
+        assert!(idx.validate(2, 2).is_err());
+        assert!(idx.is_surjective(3, 2));
+        assert!(!idx.is_surjective(4, 2));
+        assert_eq!(idx.flat(2), vec![1, 2, 5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        KronIndex::new(vec![0, 1], vec![0]);
+    }
+}

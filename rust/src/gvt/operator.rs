@@ -1,0 +1,393 @@
+//! Linear operators built from the generalized vec trick.
+//!
+//! * [`KronKernelOp`] — the training kernel matrix `Q = R(G⊗K)Rᵀ` as a
+//!   matrix-free symmetric operator (eq. 7 of the paper).
+//! * [`RidgeSystemOp`] — `Q + λI` (the ridge linear system, §4.1).
+//! * [`SvmNewtonOp`] — `H·Q + λI` with `H = diag(h)`, `h ∈ {0,1}ⁿ` the
+//!   support mask (the L2-SVM Newton system, §4.2) — nonsymmetric, provides
+//!   the transpose `Q·H + λI` for QMR.
+//! * [`KronPredictOp`] — zero-shot prediction `R̂(Ĝ⊗K̂)Rᵀ a` (§3.1) with the
+//!   sparse-coefficient shortcut of eq. (5).
+
+use std::cell::RefCell;
+use std::sync::Arc;
+
+use super::algorithm::{gvt_apply_into, GvtWorkspace};
+use super::{Branch, KronIndex};
+use crate::linalg::solvers::LinOp;
+use crate::linalg::Matrix;
+
+/// The training-kernel operator `Q = R(G⊗K)Rᵀ` (n×n, symmetric PSD).
+///
+/// `G` is the `q×q` end-vertex kernel matrix, `K` the `m×m` start-vertex
+/// kernel matrix, and `idx` maps each training edge to its
+/// (end-vertex, start-vertex) pair — `idx.left ∈ [q]`, `idx.right ∈ [m]`
+/// (matching `G ⊗ K` row ordering). Kernel matrices must be symmetric, so no
+/// transposes are stored and `Aᵀ = A`.
+pub struct KronKernelOp {
+    g: Arc<Matrix>,
+    k: Arc<Matrix>,
+    idx: KronIndex,
+    ws: RefCell<GvtWorkspace>,
+    branch: Option<Branch>,
+}
+
+impl KronKernelOp {
+    pub fn new(g: Arc<Matrix>, k: Arc<Matrix>, idx: KronIndex) -> Self {
+        assert_eq!(g.rows(), g.cols(), "G must be square");
+        assert_eq!(k.rows(), k.cols(), "K must be square");
+        idx.validate(g.rows(), k.rows()).expect("edge indices out of bounds");
+        KronKernelOp { g, k, idx, ws: RefCell::new(GvtWorkspace::new()), branch: None }
+    }
+
+    /// Force a specific branch of Algorithm 1 (benchmarks / tests).
+    pub fn with_branch(mut self, branch: Branch) -> Self {
+        self.branch = Some(branch);
+        self
+    }
+
+    /// Number of training edges `n`.
+    pub fn n_edges(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Number of distinct end vertices `q` (rows of G).
+    pub fn q_vertices(&self) -> usize {
+        self.g.rows()
+    }
+
+    /// Number of distinct start vertices `m` (rows of K).
+    pub fn m_vertices(&self) -> usize {
+        self.k.rows()
+    }
+
+    pub fn index(&self) -> &KronIndex {
+        &self.idx
+    }
+
+    pub fn g(&self) -> &Arc<Matrix> {
+        &self.g
+    }
+
+    pub fn k(&self) -> &Arc<Matrix> {
+        &self.k
+    }
+
+    /// `u ← Q v`. Zero entries of `v` are skipped (sparse shortcut).
+    pub fn apply_into(&self, v: &[f64], u: &mut [f64]) {
+        let mut ws = self.ws.borrow_mut();
+        gvt_apply_into(
+            &self.g, &self.k, &self.g, &self.k, &self.idx, &self.idx, v, u, &mut ws, self.branch,
+        );
+    }
+
+    /// Diagonal of `Q`: `Q[h,h] = G[s_h,s_h]·K[r_h,r_h]` (used by SMO-style
+    /// baselines and for preconditioning).
+    pub fn diagonal(&self) -> Vec<f64> {
+        self.idx
+            .left
+            .iter()
+            .zip(&self.idx.right)
+            .map(|(&s, &r)| self.g.get(s as usize, s as usize) * self.k.get(r as usize, r as usize))
+            .collect()
+    }
+}
+
+impl LinOp for KronKernelOp {
+    fn dim(&self) -> usize {
+        self.idx.len()
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.apply_into(x, y);
+    }
+    // apply_transpose: default (symmetric).
+}
+
+/// `Q + λI` — the Kronecker ridge regression system (§4.1), symmetric PD.
+pub struct RidgeSystemOp<'a> {
+    pub op: &'a KronKernelOp,
+    pub lambda: f64,
+}
+
+impl LinOp for RidgeSystemOp<'_> {
+    fn dim(&self) -> usize {
+        self.op.dim()
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.op.apply_into(x, y);
+        for i in 0..x.len() {
+            y[i] += self.lambda * x[i];
+        }
+    }
+}
+
+/// `H·Q + λI` with `H = diag(mask)` — the L2-SVM Newton system (§4.2).
+///
+/// Nonsymmetric; `Aᵀ = Q·H + λI` is provided so QMR can run. The mask is the
+/// indicator of the current active set `S = {i : y_i·p_i < 1}`.
+pub struct SvmNewtonOp<'a> {
+    op: &'a KronKernelOp,
+    mask: Vec<f64>,
+    lambda: f64,
+}
+
+impl<'a> SvmNewtonOp<'a> {
+    pub fn new(op: &'a KronKernelOp, mask: Vec<f64>, lambda: f64) -> Self {
+        assert_eq!(mask.len(), op.dim());
+        assert!(mask.iter().all(|&m| m == 0.0 || m == 1.0), "mask must be 0/1");
+        SvmNewtonOp { op, mask, lambda }
+    }
+
+    /// Active-set size `|S|`.
+    pub fn active(&self) -> usize {
+        self.mask.iter().filter(|&&m| m != 0.0).count()
+    }
+}
+
+impl LinOp for SvmNewtonOp<'_> {
+    fn dim(&self) -> usize {
+        self.op.dim()
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.op.apply_into(x, y);
+        for i in 0..x.len() {
+            y[i] = self.mask[i] * y[i] + self.lambda * x[i];
+        }
+    }
+
+    fn apply_transpose(&self, x: &[f64], y: &mut [f64]) {
+        // (HQ + λI)ᵀ = Q H + λI  (Q symmetric, H diagonal)
+        let masked: Vec<f64> = x.iter().zip(&self.mask).map(|(xi, mi)| xi * mi).collect();
+        self.op.apply_into(&masked, y);
+        for i in 0..x.len() {
+            y[i] += self.lambda * x[i];
+        }
+    }
+}
+
+/// Zero-shot prediction operator `p = R̂(Ĝ⊗K̂)Rᵀ a` (§3.1).
+///
+/// `K̂ ∈ R^{u×m}` holds kernel evaluations between the `u` *test* start
+/// vertices and the `m` training start vertices; `Ĝ ∈ R^{v×q}` likewise for
+/// end vertices. `test_idx` maps each requested edge to its
+/// (test-end, test-start) pair; `train_idx` maps training edges to
+/// (train-end, train-start) — the same index used at training time.
+///
+/// Cost `O(min(v·n + m·t, u·n + q·t))`, and with a sparse dual vector the
+/// `n` terms become `‖a‖₀` (eq. 5) because stage 1 skips zeros.
+pub struct KronPredictOp {
+    ghat: Matrix,
+    khat: Matrix,
+    ghat_t: Matrix,
+    khat_t: Matrix,
+    test_idx: KronIndex,
+    train_idx: KronIndex,
+    ws: RefCell<GvtWorkspace>,
+}
+
+impl KronPredictOp {
+    pub fn new(ghat: Matrix, khat: Matrix, test_idx: KronIndex, train_idx: KronIndex) -> Self {
+        test_idx.validate(ghat.rows(), khat.rows()).expect("test indices out of bounds");
+        train_idx.validate(ghat.cols(), khat.cols()).expect("train indices out of bounds");
+        let ghat_t = ghat.transpose();
+        let khat_t = khat.transpose();
+        KronPredictOp {
+            ghat,
+            khat,
+            ghat_t,
+            khat_t,
+            test_idx,
+            train_idx,
+            ws: RefCell::new(GvtWorkspace::new()),
+        }
+    }
+
+    /// Number of test edges `t`.
+    pub fn n_test(&self) -> usize {
+        self.test_idx.len()
+    }
+
+    /// Predict scores for all test edges from dual coefficients `a` (length
+    /// n). Zero coefficients are skipped.
+    pub fn predict(&self, a: &[f64]) -> Vec<f64> {
+        let mut p = vec![0.0; self.test_idx.len()];
+        self.predict_into(a, &mut p);
+        p
+    }
+
+    pub fn predict_into(&self, a: &[f64], out: &mut [f64]) {
+        let mut ws = self.ws.borrow_mut();
+        gvt_apply_into(
+            &self.ghat,
+            &self.khat,
+            &self.ghat_t,
+            &self.khat_t,
+            &self.test_idx,
+            &self.train_idx,
+            a,
+            out,
+            &mut ws,
+            None,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gvt::explicit::explicit_apply;
+    use crate::linalg::solvers::{cg, minres, qmr, SolverConfig};
+    use crate::linalg::vecops::assert_allclose;
+    use crate::util::rng::Pcg32;
+
+    /// Random symmetric PSD kernel matrix.
+    fn random_kernel(rng: &mut Pcg32, n: usize) -> Matrix {
+        let g = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let mut k = g.matmul_nt(&g);
+        for i in 0..n {
+            k.add_at(i, i, 1.0);
+        }
+        let scale = 1.0 / (n as f64);
+        k.data_mut().iter_mut().for_each(|v| *v *= scale);
+        k
+    }
+
+    fn random_edges(rng: &mut Pcg32, q: usize, m: usize, n_edges: usize) -> KronIndex {
+        KronIndex::new(
+            (0..n_edges).map(|_| rng.below(q) as u32).collect(),
+            (0..n_edges).map(|_| rng.below(m) as u32).collect(),
+        )
+    }
+
+    #[test]
+    fn kernel_op_matches_explicit() {
+        let mut rng = Pcg32::seeded(80);
+        let (q, m, n) = (6, 5, 18);
+        let g = Arc::new(random_kernel(&mut rng, q));
+        let k = Arc::new(random_kernel(&mut rng, m));
+        let idx = random_edges(&mut rng, q, m, n);
+        let op = KronKernelOp::new(g.clone(), k.clone(), idx.clone());
+        let v = rng.normal_vec(n);
+        let fast = op.apply_vec(&v);
+        let slow = explicit_apply(&g, &k, &idx, &idx, &v);
+        assert_allclose(&fast, &slow, 1e-10, 1e-10);
+    }
+
+    #[test]
+    fn kernel_op_diagonal() {
+        let mut rng = Pcg32::seeded(81);
+        let (q, m, n) = (4, 4, 10);
+        let g = Arc::new(random_kernel(&mut rng, q));
+        let k = Arc::new(random_kernel(&mut rng, m));
+        let idx = random_edges(&mut rng, q, m, n);
+        let op = KronKernelOp::new(g.clone(), k.clone(), idx.clone());
+        let diag = op.diagonal();
+        let full = crate::gvt::explicit::explicit_submatrix(&g, &k, &idx, &idx);
+        for h in 0..n {
+            assert!((diag[h] - full.get(h, h)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn ridge_system_solvable_by_cg_and_minres() {
+        let mut rng = Pcg32::seeded(82);
+        let (q, m, n) = (8, 7, 30);
+        let g = Arc::new(random_kernel(&mut rng, q));
+        let k = Arc::new(random_kernel(&mut rng, m));
+        let idx = random_edges(&mut rng, q, m, n);
+        let op = KronKernelOp::new(g, k, idx);
+        let sys = RidgeSystemOp { op: &op, lambda: 1.0 };
+        let y = rng.normal_vec(n);
+        let cfg = SolverConfig { max_iters: 500, tol: 1e-12 };
+        let mut a1 = vec![0.0; n];
+        let mut a2 = vec![0.0; n];
+        assert!(cg(&sys, &y, &mut a1, &cfg).converged);
+        assert!(minres(&sys, &y, &mut a2, &cfg).converged);
+        assert_allclose(&a1, &a2, 1e-6, 1e-6);
+        // residual check: (Q+λI)a = y
+        let mut resid = sys.apply_vec(&a1);
+        for i in 0..n {
+            resid[i] -= y[i];
+        }
+        assert!(crate::linalg::vecops::norm2(&resid) < 1e-8);
+    }
+
+    #[test]
+    fn svm_newton_op_transpose_is_consistent() {
+        // <Ax, y> == <x, Aᵀy> for random vectors.
+        let mut rng = Pcg32::seeded(83);
+        let (q, m, n) = (5, 6, 20);
+        let g = Arc::new(random_kernel(&mut rng, q));
+        let k = Arc::new(random_kernel(&mut rng, m));
+        let idx = random_edges(&mut rng, q, m, n);
+        let op = KronKernelOp::new(g, k, idx);
+        let mask: Vec<f64> = (0..n).map(|i| if i % 4 == 0 { 0.0 } else { 1.0 }).collect();
+        let newton = SvmNewtonOp::new(&op, mask, 0.3);
+        let x = rng.normal_vec(n);
+        let y = rng.normal_vec(n);
+        let ax = newton.apply_vec(&x);
+        let mut aty = vec![0.0; n];
+        newton.apply_transpose(&y, &mut aty);
+        let lhs = crate::linalg::vecops::dot(&ax, &y);
+        let rhs = crate::linalg::vecops::dot(&x, &aty);
+        assert!((lhs - rhs).abs() < 1e-8, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn svm_newton_solvable_by_qmr() {
+        let mut rng = Pcg32::seeded(84);
+        let (q, m, n) = (6, 6, 24);
+        let g = Arc::new(random_kernel(&mut rng, q));
+        let k = Arc::new(random_kernel(&mut rng, m));
+        let idx = random_edges(&mut rng, q, m, n);
+        let op = KronKernelOp::new(g, k, idx);
+        let mask: Vec<f64> = (0..n).map(|i| if i % 3 == 0 { 0.0 } else { 1.0 }).collect();
+        let newton = SvmNewtonOp::new(&op, mask, 0.7);
+        let x_true = rng.normal_vec(n);
+        let b = newton.apply_vec(&x_true);
+        let mut x = vec![0.0; n];
+        let stats = qmr(&newton, &b, &mut x, &SolverConfig { max_iters: 800, tol: 1e-12 });
+        assert!(stats.converged, "residual={}", stats.residual_norm);
+        assert_allclose(&x, &x_true, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn predict_op_matches_explicit() {
+        let mut rng = Pcg32::seeded(85);
+        // train: q=4, m=5, n=12; test: v=3, u=6, t=8
+        let (q, m, n) = (4, 5, 12);
+        let (v_test, u_test, t_test) = (3, 6, 8);
+        let train_idx = random_edges(&mut rng, q, m, n);
+        let test_idx = random_edges(&mut rng, v_test, u_test, t_test);
+        let ghat = Matrix::from_fn(v_test, q, |_, _| rng.normal());
+        let khat = Matrix::from_fn(u_test, m, |_, _| rng.normal());
+        let a = rng.normal_vec(n);
+        let op = KronPredictOp::new(ghat.clone(), khat.clone(), test_idx.clone(), train_idx.clone());
+        let fast = op.predict(&a);
+        let slow = explicit_apply(&ghat, &khat, &test_idx, &train_idx, &a);
+        assert_allclose(&fast, &slow, 1e-10, 1e-10);
+    }
+
+    #[test]
+    fn predict_sparse_equals_dense_coefficients() {
+        let mut rng = Pcg32::seeded(86);
+        let (q, m, n) = (4, 4, 15);
+        let train_idx = random_edges(&mut rng, q, m, n);
+        let test_idx = random_edges(&mut rng, 3, 3, 5);
+        let ghat = Matrix::from_fn(3, q, |_, _| rng.normal());
+        let khat = Matrix::from_fn(3, m, |_, _| rng.normal());
+        let mut a = rng.normal_vec(n);
+        for (i, ai) in a.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                *ai = 0.0;
+            }
+        }
+        let op = KronPredictOp::new(ghat.clone(), khat.clone(), test_idx.clone(), train_idx.clone());
+        let fast = op.predict(&a);
+        let slow = explicit_apply(&ghat, &khat, &test_idx, &train_idx, &a);
+        assert_allclose(&fast, &slow, 1e-10, 1e-10);
+    }
+}

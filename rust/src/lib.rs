@@ -1,0 +1,70 @@
+//! # kronvt — Fast Kronecker product kernel methods via the generalized vec trick
+//!
+//! Rust implementation of Airola & Pahikkala, *"Fast Kronecker product kernel
+//! methods via generalized vec trick"* (stat.ML 2016 / IEEE TNNLS 2017).
+//!
+//! The library learns supervised models over labeled bipartite graphs
+//! `(d_i, t_j, y_h)` where start vertices `d` and end vertices `t` each carry
+//! their own feature representation, and the edge kernel is the Kronecker
+//! (product) kernel `k⊗((d,t),(d',t')) = k(d,d')·g(t,t')`.  The central
+//! computational primitive is the **generalized vec trick** ([`gvt`]):
+//!
+//! ```text
+//! u = R (M ⊗ N) Cᵀ v      computed in O(min(ae + df, ce + bf))
+//! ```
+//!
+//! without materializing the Kronecker product, where `R`/`C` are row/column
+//! index matrices selecting the edges that actually occur in the (sparse,
+//! non-complete) training graph.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **Layer 3 (this crate)** — the full learning framework: kernels, losses,
+//!   truncated-Newton training ([`train`]), ridge regression and SVM case
+//!   studies, baselines, data generators, evaluation, and a batched zero-shot
+//!   prediction coordinator ([`coordinator`]).
+//! * **Layer 2 (build-time JAX)** — dense-path compute graphs AOT-lowered to
+//!   HLO text under `artifacts/`, loaded by [`runtime`] via PJRT.
+//! * **Layer 1 (build-time Pallas)** — MXU-tiled matmul / pairwise-distance
+//!   kernels inside the L2 graphs.
+//!
+//! Python never runs at training or serving time; the [`coordinator::Router`]
+//! picks per-operation between the native Rust GVT loops (sparse graphs) and
+//! the PJRT dense-matmul artifacts (dense-ish graphs).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use kronvt::data::checkerboard::CheckerboardConfig;
+//! use kronvt::kernels::KernelKind;
+//! use kronvt::train::ridge::{KronRidge, RidgeConfig};
+//! use kronvt::eval::auc::auc;
+//!
+//! let data = CheckerboardConfig { m: 100, q: 100, density: 0.25, noise: 0.2, feature_range: 12.0, seed: 7 }
+//!     .generate();
+//! let (train, test) = data.zero_shot_split(0.25, 42);
+//! let model = KronRidge::new(RidgeConfig {
+//!     lambda: 2f64.powi(-7),
+//!     kernel_d: KernelKind::Gaussian { gamma: 1.0 },
+//!     kernel_t: KernelKind::Gaussian { gamma: 1.0 },
+//!     iterations: 100,
+//!     ..Default::default()
+//! })
+//! .fit(&train)
+//! .unwrap();
+//! let scores = model.predict(&test);
+//! println!("AUC = {:.3}", auc(&test.labels, &scores));
+//! ```
+
+pub mod util;
+pub mod linalg;
+pub mod gvt;
+pub mod kernels;
+pub mod losses;
+pub mod model;
+pub mod train;
+pub mod baselines;
+pub mod data;
+pub mod eval;
+pub mod runtime;
+pub mod coordinator;

@@ -1,0 +1,467 @@
+//! Row-major dense matrix with a cache-blocked GEMM.
+//!
+//! The explicit-kernel baselines (the methods the paper beats) need real
+//! dense matmuls over matrices with 10⁴–10⁵ rows, so the GEMM here is
+//! blocked for L1/L2 cache and unrolled; it is also what the native Gaussian
+//! kernel computation uses.
+
+use crate::linalg::vecops;
+
+/// Dense row-major `rows × cols` matrix of f64.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from nested rows (testing convenience).
+    pub fn from_rows(rows: &[&[f64]]) -> Matrix {
+        let r = rows.len();
+        let c = if r > 0 { rows[0].len() } else { 0 };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn add_at(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] += v;
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Borrow row `i` mutably.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Raw data (row-major).
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Consume into the raw buffer.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product `y = A x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec dim mismatch");
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// Matrix–vector product into a preallocated output.
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            y[i] = vecops::dot(self.row(i), x);
+        }
+    }
+
+    /// Transposed matrix–vector product `y = Aᵀ x`.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows, "matvec_t dim mismatch");
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi != 0.0 {
+                vecops::axpy(xi, self.row(i), &mut y);
+            }
+        }
+        y
+    }
+
+    /// Matrix product `C = A · B`, cache-blocked.
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows, "matmul dim mismatch");
+        let mut c = Matrix::zeros(self.rows, b.cols);
+        self.matmul_into(b, &mut c);
+        c
+    }
+
+    /// `C = A · B` into a preallocated output (C is overwritten).
+    ///
+    /// i-k-j loop order: the inner j-loop is a contiguous AXPY over rows of B
+    /// and C, which vectorizes well; k is blocked so the active B panel stays
+    /// in cache.
+    pub fn matmul_into(&self, b: &Matrix, c: &mut Matrix) {
+        assert_eq!(self.cols, b.rows);
+        assert_eq!(c.rows, self.rows);
+        assert_eq!(c.cols, b.cols);
+        c.data.iter_mut().for_each(|v| *v = 0.0);
+        const KB: usize = 64;
+        const JB: usize = 256;
+        let (m, k_dim, n) = (self.rows, self.cols, b.cols);
+        for jb in (0..n).step_by(JB) {
+            let jend = (jb + JB).min(n);
+            for kb in (0..k_dim).step_by(KB) {
+                let kend = (kb + KB).min(k_dim);
+                for i in 0..m {
+                    let a_row = &self.data[i * k_dim..(i + 1) * k_dim];
+                    let c_row = &mut c.data[i * n..(i + 1) * n];
+                    for k in kb..kend {
+                        let aik = a_row[k];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let b_row = &b.data[k * n..(k + 1) * n];
+                        for j in jb..jend {
+                            c_row[j] += aik * b_row[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// `C = A · Bᵀ` without forming Bᵀ (rows of A dotted with rows of B).
+    pub fn matmul_nt(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.cols, "matmul_nt dim mismatch");
+        let mut c = Matrix::zeros(self.rows, b.rows);
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            let c_row = c.row_mut(i);
+            for j in 0..b.rows {
+                c_row[j] = vecops::dot(a_row, b.row(j));
+            }
+        }
+        c
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        vecops::dot(&self.data, &self.data).sqrt()
+    }
+
+    /// Symmetrize in place: `A ← (A + Aᵀ)/2` (numerical hygiene for kernel
+    /// matrices).
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = 0.5 * (self.get(i, j) + self.get(j, i));
+                self.set(i, j, v);
+                self.set(j, i, v);
+            }
+        }
+    }
+
+    /// Add `alpha` to the diagonal.
+    pub fn add_diag(&mut self, alpha: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self.data[i * self.cols + i] += alpha;
+        }
+    }
+
+    /// Kronecker product `self ⊗ other` — materializes the full product.
+    /// Only used by tests and the explicit baselines; the whole point of the
+    /// library is to avoid calling this on large inputs.
+    pub fn kron(&self, other: &Matrix) -> Matrix {
+        let (a, b) = (self.rows, self.cols);
+        let (c, d) = (other.rows, other.cols);
+        let mut out = Matrix::zeros(a * c, b * d);
+        for i in 0..a {
+            for j in 0..b {
+                let v = self.get(i, j);
+                if v == 0.0 {
+                    continue;
+                }
+                for k in 0..c {
+                    for l in 0..d {
+                        out.set(i * c + k, j * d + l, v * other.get(k, l));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Cholesky factorization (lower triangular) for SPD matrices.
+    /// Returns `None` if the matrix is not (numerically) positive definite.
+    pub fn cholesky(&self) -> Option<Matrix> {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = self.get(i, j);
+                for k in 0..j {
+                    sum -= l.get(i, k) * l.get(j, k);
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return None;
+                    }
+                    l.set(i, j, sum.sqrt());
+                } else {
+                    l.set(i, j, sum / l.get(j, j));
+                }
+            }
+        }
+        Some(l)
+    }
+
+    /// Solve `A x = b` via Cholesky (A must be SPD). Returns `None` if the
+    /// factorization fails.
+    pub fn solve_spd(&self, b: &[f64]) -> Option<Vec<f64>> {
+        let l = self.cholesky()?;
+        let n = self.rows;
+        // forward solve L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= l.get(i, k) * y[k];
+            }
+            y[i] = sum / l.get(i, i);
+        }
+        // back solve Lᵀ x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in (i + 1)..n {
+                sum -= l.get(k, i) * x[k];
+            }
+            x[i] = sum / l.get(i, i);
+        }
+        Some(x)
+    }
+
+    /// Select rows by index into a new matrix.
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn random_matrix(rng: &mut Pcg32, r: usize, c: usize) -> Matrix {
+        Matrix::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a.get(i, k) * b.get(k, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg32::seeded(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (17, 33, 9), (64, 64, 64), (70, 130, 65)] {
+            let a = random_matrix(&mut rng, m, k);
+            let b = random_matrix(&mut rng, k, n);
+            let c = a.matmul(&b);
+            let c_ref = naive_matmul(&a, &b);
+            assert!((0..m * n).all(|i| (c.data()[i] - c_ref.data()[i]).abs() < 1e-9));
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches() {
+        let mut rng = Pcg32::seeded(2);
+        let a = random_matrix(&mut rng, 13, 7);
+        let b = random_matrix(&mut rng, 11, 7);
+        let c1 = a.matmul_nt(&b);
+        let c2 = a.matmul(&b.transpose());
+        crate::linalg::vecops::assert_allclose(c1.data(), c2.data(), 1e-10, 1e-10);
+    }
+
+    #[test]
+    fn matvec_consistent_with_matmul() {
+        let mut rng = Pcg32::seeded(3);
+        let a = random_matrix(&mut rng, 9, 14);
+        let x: Vec<f64> = (0..14).map(|i| i as f64).collect();
+        let y = a.matvec(&x);
+        let xm = Matrix::from_vec(14, 1, x.clone());
+        let ym = a.matmul(&xm);
+        crate::linalg::vecops::assert_allclose(&y, ym.data(), 1e-10, 1e-10);
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose() {
+        let mut rng = Pcg32::seeded(4);
+        let a = random_matrix(&mut rng, 8, 5);
+        let x: Vec<f64> = (0..8).map(|i| (i as f64).cos()).collect();
+        let y1 = a.matvec_t(&x);
+        let y2 = a.transpose().matvec(&x);
+        crate::linalg::vecops::assert_allclose(&y1, &y2, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg32::seeded(5);
+        let a = random_matrix(&mut rng, 37, 53);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn kron_small() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Matrix::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let k = a.kron(&b);
+        assert_eq!(k.rows(), 4);
+        assert_eq!(k.get(0, 1), 1.0); // a00*b01
+        assert_eq!(k.get(0, 3), 2.0); // a01*b01
+        assert_eq!(k.get(3, 0), 3.0); // a10*b10
+    }
+
+    #[test]
+    fn kron_vec_trick_identity() {
+        // (Nᵀ ⊗ M) vec(Q) = vec(M Q N)  — Roth's column lemma, with vec =
+        // column stacking. Our buffers are row-major, so vec(A) = data of Aᵀ.
+        let mut rng = Pcg32::seeded(6);
+        let m = random_matrix(&mut rng, 3, 4);
+        let q = random_matrix(&mut rng, 4, 2);
+        let n = random_matrix(&mut rng, 2, 5);
+        let vec_q = q.transpose().into_vec(); // column-major vec(Q)
+        let lhs = n.transpose().kron(&m).matvec(&vec_q);
+        let mqn = m.matmul(&q).matmul(&n);
+        let rhs = mqn.transpose().into_vec();
+        crate::linalg::vecops::assert_allclose(&lhs, &rhs, 1e-10, 1e-10);
+    }
+
+    #[test]
+    fn cholesky_solve() {
+        let mut rng = Pcg32::seeded(7);
+        let n = 12;
+        let g = random_matrix(&mut rng, n, n);
+        let mut spd = g.matmul_nt(&g); // G Gᵀ is PSD
+        spd.add_diag(0.5);
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin()).collect();
+        let b = spd.matvec(&x_true);
+        let x = spd.solve_spd(&b).unwrap();
+        crate::linalg::vecops::assert_allclose(&x, &x_true, 1e-8, 1e-8);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(a.cholesky().is_none());
+    }
+
+    #[test]
+    fn select_rows_works() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        let s = a.select_rows(&[2, 0]);
+        assert_eq!(s.row(0), &[5.0, 6.0]);
+        assert_eq!(s.row(1), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn symmetrize_and_diag() {
+        let mut a = Matrix::from_rows(&[&[1.0, 2.0], &[4.0, 1.0]]);
+        a.symmetrize();
+        assert_eq!(a.get(0, 1), 3.0);
+        assert_eq!(a.get(1, 0), 3.0);
+        a.add_diag(1.0);
+        assert_eq!(a.get(0, 0), 2.0);
+    }
+}

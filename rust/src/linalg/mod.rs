@@ -1,0 +1,10 @@
+//! Dense linear algebra substrate: a row-major [`Matrix`] type with a
+//! cache-blocked GEMM, vector helpers, and the iterative solvers used by the
+//! training algorithms (CG, MINRES, QMR, BiCGStab).
+
+pub mod matrix;
+pub mod vecops;
+pub mod solvers;
+
+pub use matrix::Matrix;
+pub use solvers::{LinOp, SolveStats};

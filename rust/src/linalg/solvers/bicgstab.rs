@@ -1,0 +1,119 @@
+//! BiCGStab (van der Vorst 1992) — transpose-free alternative to QMR for
+//! nonsymmetric systems; used as a fallback when an operator cannot provide
+//! `Aᵀx` cheaply.
+
+use super::{LinOp, SolveStats, SolverConfig};
+use crate::linalg::vecops::{axpy, dot, norm2};
+
+/// Solve `A x = b`, starting from `x` (updated in place).
+pub fn bicgstab(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &SolverConfig) -> SolveStats {
+    let n = a.dim();
+    assert_eq!(b.len(), n);
+    assert_eq!(x.len(), n);
+
+    let b_norm = norm2(b);
+    if b_norm == 0.0 {
+        x.iter_mut().for_each(|v| *v = 0.0);
+        return SolveStats { iterations: 0, residual_norm: 0.0, converged: true };
+    }
+    let tol_abs = cfg.tol * b_norm;
+
+    let mut r = vec![0.0; n];
+    a.apply(x, &mut r);
+    for i in 0..n {
+        r[i] = b[i] - r[i];
+    }
+    let r0 = r.clone(); // shadow residual
+    let mut rho_old = 1.0f64;
+    let mut alpha = 1.0f64;
+    let mut omega = 1.0f64;
+    let mut v = vec![0.0; n];
+    let mut p = vec![0.0; n];
+    let mut s = vec![0.0; n];
+    let mut t = vec![0.0; n];
+
+    let mut res_norm = norm2(&r);
+    let mut iters = 0;
+    while iters < cfg.max_iters && res_norm > tol_abs {
+        iters += 1;
+        let rho = dot(&r0, &r);
+        if rho.abs() < f64::MIN_POSITIVE {
+            break; // breakdown
+        }
+        let beta = (rho / rho_old) * (alpha / omega);
+        // p = r + beta (p - omega v)
+        for i in 0..n {
+            p[i] = r[i] + beta * (p[i] - omega * v[i]);
+        }
+        a.apply(&p, &mut v);
+        let r0v = dot(&r0, &v);
+        if r0v.abs() < f64::MIN_POSITIVE {
+            break;
+        }
+        alpha = rho / r0v;
+        for i in 0..n {
+            s[i] = r[i] - alpha * v[i];
+        }
+        if norm2(&s) <= tol_abs {
+            axpy(alpha, &p, x);
+            res_norm = norm2(&s);
+            return SolveStats { iterations: iters, residual_norm: res_norm, converged: true };
+        }
+        a.apply(&s, &mut t);
+        let tt = dot(&t, &t);
+        if tt < f64::MIN_POSITIVE {
+            break;
+        }
+        omega = dot(&t, &s) / tt;
+        for i in 0..n {
+            x[i] += alpha * p[i] + omega * s[i];
+            r[i] = s[i] - omega * t[i];
+        }
+        res_norm = norm2(&r);
+        rho_old = rho;
+        if omega.abs() < f64::MIN_POSITIVE {
+            break;
+        }
+    }
+    SolveStats { iterations: iters, residual_norm: res_norm, converged: res_norm <= tol_abs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::solvers::testutil::{nonsym_system, spd_system};
+    use crate::linalg::vecops::assert_allclose;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn solves_nonsymmetric() {
+        let mut rng = Pcg32::seeded(40);
+        let (a, b, x_true) = nonsym_system(&mut rng, 45);
+        let mut x = vec![0.0; 45];
+        let stats = bicgstab(&a, &b, &mut x, &SolverConfig { max_iters: 300, tol: 1e-12 });
+        assert!(stats.converged, "residual={}", stats.residual_norm);
+        assert_allclose(&x, &x_true, 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn solves_spd() {
+        let mut rng = Pcg32::seeded(41);
+        let (a, b, x_true) = spd_system(&mut rng, 20);
+        let mut x = vec![0.0; 20];
+        let stats = bicgstab(&a, &b, &mut x, &SolverConfig { max_iters: 200, tol: 1e-12 });
+        assert!(stats.converged);
+        assert_allclose(&x, &x_true, 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn agrees_with_qmr() {
+        let mut rng = Pcg32::seeded(42);
+        let (a, b, _) = nonsym_system(&mut rng, 30);
+        let cfg = SolverConfig { max_iters: 500, tol: 1e-12 };
+        let mut x1 = vec![0.0; 30];
+        let mut x2 = vec![0.0; 30];
+        bicgstab(&a, &b, &mut x1, &cfg);
+        crate::linalg::solvers::qmr(&a, &b, &mut x2, &cfg);
+        assert_allclose(&x1, &x2, 1e-5, 1e-5);
+    }
+}

@@ -1,0 +1,119 @@
+//! Conjugate gradient method for SPD systems (Hestenes–Stiefel).
+
+use super::{LinOp, SolveStats, SolverConfig};
+use crate::linalg::vecops::{axpby, axpy, dot, norm2};
+
+/// Solve `A x = b` for SPD `A`, starting from `x` (commonly zeros).
+/// `x` is updated in place; returns solve statistics.
+pub fn cg(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &SolverConfig) -> SolveStats {
+    cg_cb(a, b, x, cfg, None)
+}
+
+/// [`cg`] with an optional per-iteration monitor (used by the convergence
+/// experiments of Figs. 3–5 to trace risk/AUC against iteration count).
+pub fn cg_cb(
+    a: &dyn LinOp,
+    b: &[f64],
+    x: &mut [f64],
+    cfg: &SolverConfig,
+    mut monitor: Option<super::IterMonitor<'_>>,
+) -> SolveStats {
+    let n = a.dim();
+    assert_eq!(b.len(), n);
+    assert_eq!(x.len(), n);
+
+    let b_norm = norm2(b);
+    if b_norm == 0.0 {
+        x.iter_mut().for_each(|v| *v = 0.0);
+        return SolveStats { iterations: 0, residual_norm: 0.0, converged: true };
+    }
+    let tol_abs = cfg.tol * b_norm;
+
+    // r = b - A x
+    let mut r = vec![0.0; n];
+    a.apply(x, &mut r);
+    for i in 0..n {
+        r[i] = b[i] - r[i];
+    }
+    let mut p = r.clone();
+    let mut ap = vec![0.0; n];
+    let mut rs_old = dot(&r, &r);
+
+    let mut iters = 0;
+    while iters < cfg.max_iters {
+        if rs_old.sqrt() <= tol_abs {
+            return SolveStats { iterations: iters, residual_norm: rs_old.sqrt(), converged: true };
+        }
+        a.apply(&p, &mut ap);
+        let pap = dot(&p, &ap);
+        if pap <= 0.0 {
+            // not SPD (or numerical breakdown) — stop with current iterate
+            break;
+        }
+        let alpha = rs_old / pap;
+        axpy(alpha, &p, x);
+        axpy(-alpha, &ap, &mut r);
+        let rs_new = dot(&r, &r);
+        axpby(1.0, &r, rs_new / rs_old, &mut p);
+        rs_old = rs_new;
+        iters += 1;
+        if let Some(mon) = monitor.as_mut() {
+            if !mon(iters, x) {
+                break;
+            }
+        }
+    }
+    SolveStats {
+        iterations: iters,
+        residual_norm: rs_old.sqrt(),
+        converged: rs_old.sqrt() <= tol_abs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::solvers::testutil::spd_system;
+    use crate::linalg::vecops::assert_allclose;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn solves_spd() {
+        let mut rng = Pcg32::seeded(10);
+        let (a, b, x_true) = spd_system(&mut rng, 40);
+        let mut x = vec![0.0; 40];
+        let stats = cg(&a, &b, &mut x, &SolverConfig::default());
+        assert!(stats.converged, "residual={}", stats.residual_norm);
+        assert_allclose(&x, &x_true, 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn zero_rhs() {
+        let mut rng = Pcg32::seeded(11);
+        let (a, _, _) = spd_system(&mut rng, 8);
+        let mut x = vec![1.0; 8];
+        let stats = cg(&a, &vec![0.0; 8], &mut x, &SolverConfig::default());
+        assert!(stats.converged);
+        assert!(x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn respects_iteration_cap() {
+        let mut rng = Pcg32::seeded(12);
+        let (a, b, _) = spd_system(&mut rng, 60);
+        let mut x = vec![0.0; 60];
+        let stats = cg(&a, &b, &mut x, &SolverConfig { max_iters: 3, tol: 1e-14 });
+        assert!(stats.iterations <= 3);
+    }
+
+    #[test]
+    fn warm_start_improves() {
+        let mut rng = Pcg32::seeded(13);
+        let (a, b, x_true) = spd_system(&mut rng, 30);
+        let mut x_cold = vec![0.0; 30];
+        let cold = cg(&a, &b, &mut x_cold, &SolverConfig { max_iters: 2, tol: 1e-16 });
+        let mut x_warm = x_true.iter().map(|v| v * 0.999).collect::<Vec<_>>();
+        let warm = cg(&a, &b, &mut x_warm, &SolverConfig { max_iters: 2, tol: 1e-16 });
+        assert!(warm.residual_norm < cold.residual_norm);
+    }
+}

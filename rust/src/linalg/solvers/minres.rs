@@ -1,0 +1,169 @@
+//! MINRES (Paige & Saunders 1975, [62] in the paper) for symmetric — possibly
+//! indefinite — systems. The paper trains Kronecker ridge regression with
+//! `scipy.sparse.linalg.minres`; this is the same algorithm without
+//! preconditioning.
+
+use super::{LinOp, SolveStats, SolverConfig};
+use crate::linalg::vecops::{axpy, dot, norm2, scale};
+
+/// Solve `A x = b` for symmetric `A`, starting from `x` (updated in place).
+pub fn minres(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &SolverConfig) -> SolveStats {
+    minres_cb(a, b, x, cfg, None)
+}
+
+/// [`minres`] with an optional per-iteration monitor (used by the Fig. 3
+/// ridge convergence experiment).
+pub fn minres_cb(
+    a: &dyn LinOp,
+    b: &[f64],
+    x: &mut [f64],
+    cfg: &SolverConfig,
+    mut monitor: Option<super::IterMonitor<'_>>,
+) -> SolveStats {
+    let n = a.dim();
+    assert_eq!(b.len(), n);
+    assert_eq!(x.len(), n);
+
+    // r1 = b - A x0
+    let mut r1 = vec![0.0; n];
+    a.apply(x, &mut r1);
+    for i in 0..n {
+        r1[i] = b[i] - r1[i];
+    }
+    let beta1 = norm2(&r1);
+    if beta1 == 0.0 {
+        return SolveStats { iterations: 0, residual_norm: 0.0, converged: true };
+    }
+    let tol_abs = cfg.tol * norm2(b).max(f64::MIN_POSITIVE);
+
+    let mut y = r1.clone();
+    let mut r2 = r1.clone();
+
+    let (mut oldb, mut beta) = (0.0f64, beta1);
+    let (mut dbar, mut epsln) = (0.0f64, 0.0f64);
+    let mut phibar = beta1;
+    let (mut cs, mut sn) = (-1.0f64, 0.0f64);
+    let mut w = vec![0.0; n];
+    let mut w2 = vec![0.0; n];
+
+    let mut iters = 0;
+    let mut converged = phibar <= tol_abs;
+
+    while iters < cfg.max_iters && !converged {
+        iters += 1;
+        // Lanczos step
+        let s = 1.0 / beta;
+        let mut v = y.clone();
+        scale(s, &mut v);
+        let mut y_new = vec![0.0; n];
+        a.apply(&v, &mut y_new);
+        if iters >= 2 {
+            axpy(-(beta / oldb), &r1, &mut y_new);
+        }
+        let alfa = dot(&v, &y_new);
+        axpy(-(alfa / beta), &r2, &mut y_new);
+        r1 = std::mem::replace(&mut r2, y_new.clone());
+        let _ = &r1; // r1 now holds the previous r2
+        y = y_new;
+        oldb = beta;
+        beta = norm2(&y);
+
+        // Apply previous rotation
+        let oldeps = epsln;
+        let delta = cs * dbar + sn * alfa;
+        let gbar = sn * dbar - cs * alfa;
+        epsln = sn * beta;
+        dbar = -cs * beta;
+
+        // Compute next rotation
+        let gamma = (gbar * gbar + beta * beta).sqrt().max(f64::EPSILON);
+        cs = gbar / gamma;
+        sn = beta / gamma;
+        let phi = cs * phibar;
+        phibar *= sn;
+
+        // Update solution: w = (v - oldeps*w1 - delta*w2) / gamma
+        let denom = 1.0 / gamma;
+        let w1 = std::mem::replace(&mut w2, w.clone());
+        let mut w_new = v;
+        axpy(-oldeps, &w1, &mut w_new);
+        axpy(-delta, &w2, &mut w_new);
+        scale(denom, &mut w_new);
+        w = w_new;
+        axpy(phi, &w, x);
+        if let Some(mon) = monitor.as_mut() {
+            if !mon(iters, x) {
+                break;
+            }
+        }
+
+        converged = phibar <= tol_abs;
+    }
+
+    SolveStats { iterations: iters, residual_norm: phibar, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::solvers::testutil::spd_system;
+    use crate::linalg::vecops::assert_allclose;
+    use crate::linalg::Matrix;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn solves_spd() {
+        let mut rng = Pcg32::seeded(20);
+        let (a, b, x_true) = spd_system(&mut rng, 35);
+        let mut x = vec![0.0; 35];
+        let stats = minres(&a, &b, &mut x, &SolverConfig { max_iters: 200, tol: 1e-12 });
+        assert!(stats.converged, "residual={}", stats.residual_norm);
+        assert_allclose(&x, &x_true, 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn solves_symmetric_indefinite() {
+        // Diagonal with mixed signs — CG would break down, MINRES must not.
+        let n = 20;
+        let a = Matrix::from_fn(n, n, |i, j| {
+            if i == j {
+                if i % 2 == 0 {
+                    2.0 + i as f64
+                } else {
+                    -(2.0 + i as f64)
+                }
+            } else {
+                0.0
+            }
+        });
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64 * 0.9).sin()).collect();
+        let b = a.matvec(&x_true);
+        let mut x = vec![0.0; n];
+        let stats = minres(&a, &b, &mut x, &SolverConfig { max_iters: 100, tol: 1e-12 });
+        assert!(stats.converged);
+        assert_allclose(&x, &x_true, 1e-7, 1e-7);
+    }
+
+    #[test]
+    fn zero_rhs_is_immediate() {
+        let mut rng = Pcg32::seeded(21);
+        let (a, _, _) = spd_system(&mut rng, 6);
+        let mut x = vec![0.0; 6];
+        let stats = minres(&a, &vec![0.0; 6], &mut x, &SolverConfig::default());
+        assert_eq!(stats.iterations, 0);
+        assert!(stats.converged);
+    }
+
+    #[test]
+    fn residual_decreases_with_more_iterations() {
+        let mut rng = Pcg32::seeded(22);
+        let (a, b, _) = spd_system(&mut rng, 50);
+        let mut r_prev = f64::INFINITY;
+        for iters in [1usize, 3, 10, 30] {
+            let mut x = vec![0.0; 50];
+            let stats = minres(&a, &b, &mut x, &SolverConfig { max_iters: iters, tol: 1e-16 });
+            assert!(stats.residual_norm <= r_prev + 1e-12);
+            r_prev = stats.residual_norm;
+        }
+    }
+}

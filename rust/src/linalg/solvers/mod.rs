@@ -1,0 +1,148 @@
+//! Iterative solvers for `A x = b` where `A` is available only as a linear
+//! operator (matrix–vector product).
+//!
+//! The paper trains ridge regression with MINRES [62] and the SVM's inner
+//! Newton system with QMR [50]; CG and BiCGStab are provided as alternatives
+//! and for testing. All solvers are matrix-free: they only require a
+//! [`LinOp`], which the [`crate::gvt`] module implements without ever
+//! materializing the Kronecker product.
+
+pub mod cg;
+pub mod minres;
+pub mod qmr;
+pub mod bicgstab;
+
+pub use cg::{cg, cg_cb};
+pub use minres::{minres, minres_cb};
+pub use qmr::qmr;
+pub use bicgstab::bicgstab;
+
+/// Per-iteration monitor: called with (iteration, current solution); return
+/// `false` to stop the solver early (early-stopping regularization, §3.3).
+pub type IterMonitor<'a> = &'a mut dyn FnMut(usize, &[f64]) -> bool;
+
+use crate::linalg::Matrix;
+
+/// A square linear operator `R^n → R^n`.
+pub trait LinOp {
+    /// Operator dimension `n`.
+    fn dim(&self) -> usize;
+
+    /// `y ← A x`.
+    fn apply(&self, x: &[f64], y: &mut [f64]);
+
+    /// `y ← Aᵀ x`. Default assumes a symmetric operator; nonsymmetric
+    /// operators (e.g. the SVM Newton system `H·Q + λI`) must override.
+    fn apply_transpose(&self, x: &[f64], y: &mut [f64]) {
+        self.apply(x, y)
+    }
+
+    /// Allocating convenience wrapper.
+    fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.dim()];
+        self.apply(x, &mut y);
+        y
+    }
+}
+
+impl LinOp for Matrix {
+    fn dim(&self) -> usize {
+        assert_eq!(self.rows(), self.cols(), "LinOp requires a square matrix");
+        self.rows()
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.matvec_into(x, y);
+    }
+
+    fn apply_transpose(&self, x: &[f64], y: &mut [f64]) {
+        let yt = self.matvec_t(x);
+        y.copy_from_slice(&yt);
+    }
+}
+
+/// Operator defined by closures (used by tests and by operator compositions).
+pub struct FnOp<F, G>
+where
+    F: Fn(&[f64], &mut [f64]),
+    G: Fn(&[f64], &mut [f64]),
+{
+    pub n: usize,
+    pub fwd: F,
+    pub tr: G,
+}
+
+impl<F, G> LinOp for FnOp<F, G>
+where
+    F: Fn(&[f64], &mut [f64]),
+    G: Fn(&[f64], &mut [f64]),
+{
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        (self.fwd)(x, y)
+    }
+
+    fn apply_transpose(&self, x: &[f64], y: &mut [f64]) {
+        (self.tr)(x, y)
+    }
+}
+
+/// Outcome of an iterative solve.
+#[derive(Debug, Clone, Copy)]
+pub struct SolveStats {
+    /// Iterations actually performed.
+    pub iterations: usize,
+    /// Final residual norm ‖b − A x‖ (or the solver's internal estimate).
+    pub residual_norm: f64,
+    /// Whether the tolerance was met before the iteration cap.
+    pub converged: bool,
+}
+
+/// Common solver configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SolverConfig {
+    /// Maximum number of iterations (the paper's "inner iterations").
+    pub max_iters: usize,
+    /// Relative residual tolerance ‖r‖ ≤ tol·‖b‖.
+    pub tol: f64,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig { max_iters: 100, tol: 1e-10 }
+    }
+}
+
+impl SolverConfig {
+    pub fn with_iters(max_iters: usize) -> Self {
+        SolverConfig { max_iters, ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Random SPD system with known solution.
+    pub fn spd_system(rng: &mut Pcg32, n: usize) -> (Matrix, Vec<f64>, Vec<f64>) {
+        let g = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let mut a = g.matmul_nt(&g);
+        a.add_diag(n as f64); // well conditioned
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).sin()).collect();
+        let b = a.matvec(&x_true);
+        (a, b, x_true)
+    }
+
+    /// Random diagonally dominant nonsymmetric system with known solution.
+    pub fn nonsym_system(rng: &mut Pcg32, n: usize) -> (Matrix, Vec<f64>, Vec<f64>) {
+        let mut a = Matrix::from_fn(n, n, |_, _| rng.normal() * 0.3);
+        a.add_diag(n as f64 * 0.5);
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).cos()).collect();
+        let b = a.matvec(&x_true);
+        (a, b, x_true)
+    }
+}

@@ -1,0 +1,198 @@
+//! QMR — quasi-minimal residual method (Freund & Nachtigal 1991, [50] in the
+//! paper) for general nonsymmetric systems, used as the inner solver of the
+//! Kronecker SVM truncated-Newton loop (the Newton system
+//! `H·R(G⊗K)Rᵀ + λI` is nonsymmetric because H is a 0/1 mask).
+//!
+//! Unpreconditioned two-sided Lanczos formulation following Barrett et al.,
+//! *Templates for the Solution of Linear Systems*, §2.3.6. Requires both
+//! `A·x` and `Aᵀ·x` products, which every operator in this crate provides.
+
+use super::{LinOp, SolveStats, SolverConfig};
+use crate::linalg::vecops::{axpby, axpy, norm2, dot};
+
+/// Solve `A x = b`, starting from `x` (updated in place).
+pub fn qmr(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &SolverConfig) -> SolveStats {
+    let n = a.dim();
+    assert_eq!(b.len(), n);
+    assert_eq!(x.len(), n);
+
+    let b_norm = norm2(b);
+    if b_norm == 0.0 {
+        x.iter_mut().for_each(|v| *v = 0.0);
+        return SolveStats { iterations: 0, residual_norm: 0.0, converged: true };
+    }
+    let tol_abs = cfg.tol * b_norm;
+
+    // r = b - A x
+    let mut r = vec![0.0; n];
+    a.apply(x, &mut r);
+    for i in 0..n {
+        r[i] = b[i] - r[i];
+    }
+    let mut res_norm = norm2(&r);
+    if res_norm <= tol_abs {
+        return SolveStats { iterations: 0, residual_norm: res_norm, converged: true };
+    }
+
+    let mut v_t = r.clone(); // ṽ
+    let mut rho = norm2(&v_t);
+    let mut w_t = r.clone(); // w̃
+    let mut xi = norm2(&w_t);
+    let mut gamma = 1.0f64;
+    let mut eta = -1.0f64;
+    let mut theta = 0.0f64;
+    let mut eps = 1.0f64;
+
+    let mut p = vec![0.0; n];
+    let mut q = vec![0.0; n];
+    let mut d = vec![0.0; n];
+    let mut s = vec![0.0; n];
+    let mut p_t = vec![0.0; n]; // A p
+
+    let mut iters = 0;
+    while iters < cfg.max_iters {
+        iters += 1;
+        if rho.abs() < f64::MIN_POSITIVE || xi.abs() < f64::MIN_POSITIVE {
+            break; // Lanczos breakdown
+        }
+        // v = ṽ/ρ, w = w̃/ξ  (no preconditioner: y = v, z = w)
+        let mut v = v_t.clone();
+        for vi in &mut v {
+            *vi /= rho;
+        }
+        let mut w = w_t.clone();
+        for wi in &mut w {
+            *wi /= xi;
+        }
+        let delta = dot(&w, &v);
+        if delta.abs() < f64::MIN_POSITIVE {
+            break;
+        }
+        if iters == 1 {
+            p.copy_from_slice(&v);
+            q.copy_from_slice(&w);
+        } else {
+            // p = v − (ξ δ / ε) p ;  q = w − (ρ δ / ε) q
+            axpby(1.0, &v, -(xi * delta / eps), &mut p);
+            axpby(1.0, &w, -(rho * delta / eps), &mut q);
+        }
+        a.apply(&p, &mut p_t);
+        eps = dot(&q, &p_t);
+        if eps.abs() < f64::MIN_POSITIVE {
+            break;
+        }
+        let beta = eps / delta;
+        if beta.abs() < f64::MIN_POSITIVE {
+            break;
+        }
+        // ṽ = A p − β v
+        v_t.copy_from_slice(&p_t);
+        axpy(-beta, &v, &mut v_t);
+        let rho_old = rho;
+        rho = norm2(&v_t);
+        // w̃ = Aᵀ q − β w
+        a.apply_transpose(&q, &mut w_t);
+        axpy(-beta, &w, &mut w_t);
+        xi = norm2(&w_t);
+
+        let theta_old = theta;
+        let gamma_old = gamma;
+        theta = rho / (gamma_old * beta.abs());
+        gamma = 1.0 / (1.0 + theta * theta).sqrt();
+        if gamma.abs() < f64::MIN_POSITIVE {
+            break;
+        }
+        eta = -eta * rho_old * gamma * gamma / (beta * gamma_old * gamma_old);
+
+        let tg2 = (theta_old * gamma) * (theta_old * gamma);
+        if iters == 1 {
+            for i in 0..n {
+                d[i] = eta * p[i];
+                s[i] = eta * p_t[i];
+            }
+        } else {
+            for i in 0..n {
+                d[i] = eta * p[i] + tg2 * d[i];
+                s[i] = eta * p_t[i] + tg2 * s[i];
+            }
+        }
+        axpy(1.0, &d, x);
+        axpy(-1.0, &s, &mut r);
+        res_norm = norm2(&r);
+        if res_norm <= tol_abs {
+            return SolveStats { iterations: iters, residual_norm: res_norm, converged: true };
+        }
+    }
+    SolveStats { iterations: iters, residual_norm: res_norm, converged: res_norm <= tol_abs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::solvers::testutil::{nonsym_system, spd_system};
+    use crate::linalg::vecops::assert_allclose;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn solves_nonsymmetric() {
+        let mut rng = Pcg32::seeded(30);
+        let (a, b, x_true) = nonsym_system(&mut rng, 40);
+        let mut x = vec![0.0; 40];
+        let stats = qmr(&a, &b, &mut x, &SolverConfig { max_iters: 300, tol: 1e-12 });
+        assert!(stats.converged, "residual={}", stats.residual_norm);
+        assert_allclose(&x, &x_true, 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn solves_spd_too() {
+        let mut rng = Pcg32::seeded(31);
+        let (a, b, x_true) = spd_system(&mut rng, 25);
+        let mut x = vec![0.0; 25];
+        let stats = qmr(&a, &b, &mut x, &SolverConfig { max_iters: 300, tol: 1e-12 });
+        assert!(stats.converged);
+        assert_allclose(&x, &x_true, 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn masked_newton_like_system() {
+        // System of the exact form the SVM produces: diag(h)·Q + λI with Q
+        // SPD and h a 0/1 mask — nonsymmetric, must still converge.
+        let mut rng = Pcg32::seeded(32);
+        let n = 30;
+        let (q, _, _) = spd_system(&mut rng, n);
+        let mask: Vec<f64> = (0..n).map(|i| if i % 3 == 0 { 0.0 } else { 1.0 }).collect();
+        let lambda = 0.5;
+        let mut a = crate::linalg::Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let v = mask[i] * q.get(i, j) + if i == j { lambda } else { 0.0 };
+                a.set(i, j, v);
+            }
+        }
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let b = a.matvec(&x_true);
+        let mut x = vec![0.0; n];
+        let stats = qmr(&a, &b, &mut x, &SolverConfig { max_iters: 500, tol: 1e-12 });
+        assert!(stats.converged, "residual={}", stats.residual_norm);
+        assert_allclose(&x, &x_true, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn zero_rhs() {
+        let mut rng = Pcg32::seeded(33);
+        let (a, _, _) = nonsym_system(&mut rng, 10);
+        let mut x = vec![3.0; 10];
+        let stats = qmr(&a, &vec![0.0; 10], &mut x, &SolverConfig::default());
+        assert!(stats.converged);
+        assert!(x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn iteration_cap_respected() {
+        let mut rng = Pcg32::seeded(34);
+        let (a, b, _) = nonsym_system(&mut rng, 50);
+        let mut x = vec![0.0; 50];
+        let stats = qmr(&a, &b, &mut x, &SolverConfig { max_iters: 4, tol: 1e-16 });
+        assert!(stats.iterations <= 4);
+    }
+}

@@ -1,0 +1,401 @@
+//! Loss functions of Table 2, with (sub)gradients and (generalized) Hessians
+//! with respect to the prediction vector `p`.
+//!
+//! The truncated-Newton framework (§3.2–3.3) only touches a loss through
+//! `value`, `gradient` and Hessian–vector products, so any [`Loss`] plugs
+//! into both the dual and primal trainers. For univariate losses the Hessian
+//! is diagonal; RankRLS overrides the Hessian–vector product with its
+//! efficient decomposition `H = nI − 𝟙𝟙ᵀ` ([42]).
+
+/// A convex loss `L(p, y)` over prediction and label vectors.
+pub trait Loss: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Loss value.
+    fn value(&self, p: &[f64], y: &[f64]) -> f64;
+
+    /// (Sub)gradient `g = ∂L/∂p`, written into `g`.
+    fn gradient(&self, p: &[f64], y: &[f64], g: &mut [f64]);
+
+    /// Diagonal of the (generalized) Hessian `∂²L/∂p²`. For non-diagonal
+    /// Hessians this is just the diagonal; use [`Loss::hessian_vec`] for
+    /// products.
+    fn hessian_diag(&self, p: &[f64], y: &[f64], h: &mut [f64]);
+
+    /// Hessian–vector product `out = H·v`. Default: diagonal Hessian.
+    fn hessian_vec(&self, p: &[f64], y: &[f64], v: &[f64], out: &mut [f64]) {
+        let mut h = vec![0.0; p.len()];
+        self.hessian_diag(p, y, &mut h);
+        for i in 0..v.len() {
+            out[i] = h[i] * v[i];
+        }
+    }
+
+    /// Whether the Hessian is diagonal (enables the masked Newton-system
+    /// shortcut used by the SVM trainer).
+    fn diagonal_hessian(&self) -> bool {
+        true
+    }
+}
+
+/// Squared loss `½‖p − y‖²` (ridge regression / regularized least squares).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RidgeLoss;
+
+impl Loss for RidgeLoss {
+    fn name(&self) -> &'static str {
+        "ridge"
+    }
+
+    fn value(&self, p: &[f64], y: &[f64]) -> f64 {
+        0.5 * p.iter().zip(y).map(|(pi, yi)| (pi - yi) * (pi - yi)).sum::<f64>()
+    }
+
+    fn gradient(&self, p: &[f64], y: &[f64], g: &mut [f64]) {
+        for i in 0..p.len() {
+            g[i] = p[i] - y[i];
+        }
+    }
+
+    fn hessian_diag(&self, p: &[f64], _y: &[f64], h: &mut [f64]) {
+        h[..p.len()].fill(1.0);
+    }
+}
+
+/// Hinge loss `Σ max(0, 1 − p·y)` (L1-SVM). Subdifferentiable only; its
+/// generalized Hessian is zero, so it pairs with first-order methods.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct L1SvmLoss;
+
+impl Loss for L1SvmLoss {
+    fn name(&self) -> &'static str {
+        "l1svm"
+    }
+
+    fn value(&self, p: &[f64], y: &[f64]) -> f64 {
+        p.iter().zip(y).map(|(pi, yi)| (1.0 - pi * yi).max(0.0)).sum()
+    }
+
+    fn gradient(&self, p: &[f64], y: &[f64], g: &mut [f64]) {
+        for i in 0..p.len() {
+            g[i] = if p[i] * y[i] < 1.0 { -y[i] } else { 0.0 };
+        }
+    }
+
+    fn hessian_diag(&self, p: &[f64], _y: &[f64], h: &mut [f64]) {
+        h[..p.len()].fill(0.0);
+    }
+}
+
+/// Squared hinge `½ Σ max(0, 1 − p·y)²` (L2-SVM) — the paper's SVM case
+/// study (§4.2). For `y ∈ {−1,1}`: `gᵢ = pᵢ − yᵢ` on the active set
+/// `S = {i : pᵢ·yᵢ < 1}`, generalized Hessian `diag(1_S)`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct L2SvmLoss;
+
+impl L2SvmLoss {
+    /// Active-set mask `1[pᵢ·yᵢ < 1]`.
+    pub fn active_mask(p: &[f64], y: &[f64]) -> Vec<f64> {
+        p.iter().zip(y).map(|(pi, yi)| if pi * yi < 1.0 { 1.0 } else { 0.0 }).collect()
+    }
+}
+
+impl Loss for L2SvmLoss {
+    fn name(&self) -> &'static str {
+        "l2svm"
+    }
+
+    fn value(&self, p: &[f64], y: &[f64]) -> f64 {
+        0.5 * p
+            .iter()
+            .zip(y)
+            .map(|(pi, yi)| {
+                let m = (1.0 - pi * yi).max(0.0);
+                m * m
+            })
+            .sum::<f64>()
+    }
+
+    fn gradient(&self, p: &[f64], y: &[f64], g: &mut [f64]) {
+        for i in 0..p.len() {
+            // -y(1-py) = p·y² - y = p - y for y ∈ {-1,1}
+            g[i] = if p[i] * y[i] < 1.0 { p[i] - y[i] } else { 0.0 };
+        }
+    }
+
+    fn hessian_diag(&self, p: &[f64], y: &[f64], h: &mut [f64]) {
+        for i in 0..p.len() {
+            h[i] = if p[i] * y[i] < 1.0 { 1.0 } else { 0.0 };
+        }
+    }
+}
+
+/// Logistic loss `Σ log(1 + e^{−y·p})`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LogisticLoss;
+
+impl Loss for LogisticLoss {
+    fn name(&self) -> &'static str {
+        "logistic"
+    }
+
+    fn value(&self, p: &[f64], y: &[f64]) -> f64 {
+        p.iter()
+            .zip(y)
+            .map(|(pi, yi)| {
+                let z = -yi * pi;
+                // numerically stable log(1+e^z)
+                if z > 0.0 {
+                    z + (1.0 + (-z).exp()).ln()
+                } else {
+                    (1.0 + z.exp()).ln()
+                }
+            })
+            .sum()
+    }
+
+    fn gradient(&self, p: &[f64], y: &[f64], g: &mut [f64]) {
+        for i in 0..p.len() {
+            g[i] = -y[i] / (1.0 + (y[i] * p[i]).exp());
+        }
+    }
+
+    fn hessian_diag(&self, p: &[f64], y: &[f64], h: &mut [f64]) {
+        for i in 0..p.len() {
+            let e = (y[i] * p[i]).exp();
+            let d = 1.0 + e;
+            h[i] = e / (d * d);
+        }
+    }
+}
+
+/// RankRLS / magnitude-preserving pairwise ranking loss ([42]):
+/// `L = ¼ Σᵢ Σⱼ (yᵢ − pᵢ − yⱼ + pⱼ)²`. The Hessian is `n·I − 𝟙𝟙ᵀ`, so
+/// Hessian–vector products cost `O(n)`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RankRlsLoss;
+
+impl Loss for RankRlsLoss {
+    fn name(&self) -> &'static str {
+        "rankrls"
+    }
+
+    fn value(&self, p: &[f64], y: &[f64]) -> f64 {
+        // ¼ ΣᵢΣⱼ (eᵢ − eⱼ)² = ½ (n Σe² − (Σe)²) with e = y − p
+        let n = p.len() as f64;
+        let (mut se, mut se2) = (0.0, 0.0);
+        for (pi, yi) in p.iter().zip(y) {
+            let e = yi - pi;
+            se += e;
+            se2 += e * e;
+        }
+        0.5 * (n * se2 - se * se)
+    }
+
+    fn gradient(&self, p: &[f64], y: &[f64], g: &mut [f64]) {
+        // gᵢ = Σⱼ(yⱼ − pⱼ) + n(pᵢ − yᵢ)   (Table 2)
+        let n = p.len() as f64;
+        let se: f64 = p.iter().zip(y).map(|(pi, yi)| yi - pi).sum();
+        for i in 0..p.len() {
+            g[i] = se + n * (p[i] - y[i]);
+        }
+    }
+
+    fn hessian_diag(&self, p: &[f64], _y: &[f64], h: &mut [f64]) {
+        let n = p.len() as f64;
+        h[..p.len()].fill(n - 1.0);
+    }
+
+    fn hessian_vec(&self, p: &[f64], _y: &[f64], v: &[f64], out: &mut [f64]) {
+        // H v = n·v − (Σv)·𝟙  (here H_{ii}=n−1, H_{ij}=−1)
+        let n = p.len() as f64;
+        let sv: f64 = v.iter().sum();
+        for i in 0..v.len() {
+            out[i] = n * v[i] - sv;
+        }
+    }
+
+    fn diagonal_hessian(&self) -> bool {
+        false
+    }
+}
+
+/// All Table-2 losses by name (CLI / config lookup).
+pub fn loss_by_name(name: &str) -> Option<Box<dyn Loss>> {
+    match name {
+        "ridge" => Some(Box::new(RidgeLoss)),
+        "l1svm" | "hinge" => Some(Box::new(L1SvmLoss)),
+        "l2svm" | "squared_hinge" => Some(Box::new(L2SvmLoss)),
+        "logistic" => Some(Box::new(LogisticLoss)),
+        "rankrls" => Some(Box::new(RankRlsLoss)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Central finite-difference gradient check.
+    fn check_gradient(loss: &dyn Loss, p: &[f64], y: &[f64], tol: f64) {
+        let n = p.len();
+        let mut g = vec![0.0; n];
+        loss.gradient(p, y, &mut g);
+        let eps = 1e-6;
+        for i in 0..n {
+            let mut pp = p.to_vec();
+            pp[i] += eps;
+            let up = loss.value(&pp, y);
+            pp[i] -= 2.0 * eps;
+            let dn = loss.value(&pp, y);
+            let fd = (up - dn) / (2.0 * eps);
+            assert!(
+                (g[i] - fd).abs() < tol * (1.0 + fd.abs()),
+                "{} grad[{i}]: {} vs fd {}",
+                loss.name(),
+                g[i],
+                fd
+            );
+        }
+    }
+
+    /// Finite-difference Hessian-vector check (for twice-differentiable
+    /// points).
+    fn check_hessian_vec(loss: &dyn Loss, p: &[f64], y: &[f64], tol: f64) {
+        let n = p.len();
+        let mut rng = Pcg32::seeded(7);
+        let v = rng.normal_vec(n);
+        let mut hv = vec![0.0; n];
+        loss.hessian_vec(p, y, &v, &mut hv);
+        let eps = 1e-6;
+        let mut p_up = p.to_vec();
+        let mut p_dn = p.to_vec();
+        for i in 0..n {
+            p_up[i] += eps * v[i];
+            p_dn[i] -= eps * v[i];
+        }
+        let mut g_up = vec![0.0; n];
+        let mut g_dn = vec![0.0; n];
+        loss.gradient(&p_up, y, &mut g_up);
+        loss.gradient(&p_dn, y, &mut g_dn);
+        for i in 0..n {
+            let fd = (g_up[i] - g_dn[i]) / (2.0 * eps);
+            assert!(
+                (hv[i] - fd).abs() < tol * (1.0 + fd.abs()),
+                "{} Hv[{i}]: {} vs fd {}",
+                loss.name(),
+                hv[i],
+                fd
+            );
+        }
+    }
+
+    fn labels(n: usize, rng: &mut Pcg32) -> Vec<f64> {
+        (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect()
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut rng = Pcg32::seeded(100);
+        let n = 12;
+        // Keep predictions away from hinge kinks (p·y = 1).
+        let p: Vec<f64> = (0..n).map(|_| rng.normal() * 2.0 + 0.01).collect();
+        let y = labels(n, &mut rng);
+        for loss in
+            [&RidgeLoss as &dyn Loss, &L2SvmLoss, &LogisticLoss, &RankRlsLoss, &L1SvmLoss]
+        {
+            // skip points too near a kink for hinge losses
+            let safe = p
+                .iter()
+                .zip(&y)
+                .all(|(pi, yi)| (pi * yi - 1.0).abs() > 1e-3);
+            if safe || loss.diagonal_hessian() && loss.name() == "ridge" {
+                check_gradient(loss, &p, &y, 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn hessians_match_finite_differences() {
+        let mut rng = Pcg32::seeded(101);
+        let n = 10;
+        let p: Vec<f64> = (0..n).map(|_| rng.normal() * 2.0 + 0.013).collect();
+        let y = labels(n, &mut rng);
+        let safe = p.iter().zip(&y).all(|(pi, yi)| (pi * yi - 1.0).abs() > 1e-3);
+        assert!(safe, "test setup landed on a kink; change seed");
+        for loss in [&RidgeLoss as &dyn Loss, &L2SvmLoss, &LogisticLoss, &RankRlsLoss] {
+            check_hessian_vec(loss, &p, &y, 1e-4);
+        }
+    }
+
+    #[test]
+    fn l2svm_zero_loss_region() {
+        let p = vec![2.0, -3.0];
+        let y = vec![1.0, -1.0];
+        let loss = L2SvmLoss;
+        assert_eq!(loss.value(&p, &y), 0.0);
+        let mut g = vec![9.0; 2];
+        loss.gradient(&p, &y, &mut g);
+        assert_eq!(g, vec![0.0, 0.0]);
+        assert_eq!(L2SvmLoss::active_mask(&p, &y), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn l2svm_active_mask_matches_hessian() {
+        let mut rng = Pcg32::seeded(102);
+        let n = 20;
+        let p = rng.normal_vec(n);
+        let y = labels(n, &mut rng);
+        let mask = L2SvmLoss::active_mask(&p, &y);
+        let mut h = vec![0.0; n];
+        L2SvmLoss.hessian_diag(&p, &y, &mut h);
+        assert_eq!(mask, h);
+    }
+
+    #[test]
+    fn rankrls_value_matches_double_sum() {
+        let mut rng = Pcg32::seeded(103);
+        let n = 8;
+        let p = rng.normal_vec(n);
+        let y = rng.normal_vec(n);
+        let mut brute = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                let d = y[i] - p[i] - y[j] + p[j];
+                brute += d * d;
+            }
+        }
+        brute *= 0.25;
+        // our closed form counts each unordered pair twice, like the paper's ¼ΣΣ
+        assert!((RankRlsLoss.value(&p, &y) - brute).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rankrls_is_translation_invariant() {
+        let mut rng = Pcg32::seeded(104);
+        let n = 9;
+        let p = rng.normal_vec(n);
+        let y = rng.normal_vec(n);
+        let shifted: Vec<f64> = p.iter().map(|v| v + 5.0).collect();
+        assert!((RankRlsLoss.value(&p, &y) - RankRlsLoss.value(&shifted, &y)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn logistic_is_stable_at_extremes() {
+        let loss = LogisticLoss;
+        let v = loss.value(&[1000.0, -1000.0], &[-1.0, 1.0]);
+        assert!(v.is_finite());
+        assert!((v - 2000.0).abs() < 1e-6);
+        let v2 = loss.value(&[1000.0, -1000.0], &[1.0, -1.0]);
+        assert!(v2.abs() < 1e-12);
+    }
+
+    #[test]
+    fn loss_lookup() {
+        for name in ["ridge", "l1svm", "l2svm", "logistic", "rankrls", "hinge"] {
+            assert!(loss_by_name(name).is_some(), "{name}");
+        }
+        assert!(loss_by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,241 @@
+//! `kronvt` CLI — train, evaluate, and serve Kronecker product kernel
+//! methods.
+//!
+//! ```text
+//! kronvt datasets                          # Table-5 style dataset stats
+//! kronvt train --data checker --method kronsvm --kernel gaussian:1 \
+//!              --lambda 0.0078125 --outer 10 --inner 10
+//! kronvt cv --data gpcr --method kronridge --lambda 1e-4
+//! kronvt serve --data checker --requests 100
+//! kronvt artifacts                         # artifact registry status
+//! ```
+
+use kronvt::baselines::{ExplicitSvm, ExplicitSvmConfig, KnnConfig, KnnModel, SgdConfig, SgdLossKind, SgdModel};
+use kronvt::coordinator::{run_cv_jobs, PredictServer, ServerConfig};
+use kronvt::data::{checkerboard, dti, Dataset};
+use kronvt::eval::auc::auc;
+use kronvt::kernels::KernelKind;
+use kronvt::train::{KronRidge, KronSvm, RidgeConfig, SvmConfig};
+use kronvt::util::args::Args;
+use kronvt::util::rng::Pcg32;
+use kronvt::util::timer::Timer;
+
+fn load_dataset(name: &str, seed: u64, scale: f64) -> Result<Dataset, String> {
+    let ds = match name {
+        "checker" => {
+            let mut cfg = checkerboard::checker(seed);
+            cfg.m = ((cfg.m as f64 * scale) as usize).max(10);
+            cfg.q = cfg.m;
+            cfg.generate()
+        }
+        "checker+" => {
+            let mut cfg = checkerboard::checker_plus(seed);
+            cfg.m = ((cfg.m as f64 * scale) as usize).max(10);
+            cfg.q = cfg.m;
+            cfg.generate()
+        }
+        "ki" => dti::ki(seed).generate(),
+        "gpcr" => dti::gpcr(seed).generate(),
+        "ic" => dti::ic(seed).generate(),
+        "e" => dti::e(seed).generate(),
+        other => return Err(format!("unknown dataset '{other}' (checker, checker+, ki, gpcr, ic, e)")),
+    };
+    Ok(ds)
+}
+
+fn train_and_eval(
+    method: &str,
+    train: &Dataset,
+    test: &Dataset,
+    args: &Args,
+) -> Result<f64, String> {
+    let lambda = args.get_f64("lambda", 1e-4);
+    let kernel = KernelKind::parse(&args.get_str("kernel", "linear"))?;
+    let scores = match method {
+        "kronsvm" => {
+            let cfg = SvmConfig {
+                lambda,
+                kernel_d: kernel,
+                kernel_t: kernel,
+                outer_iters: args.get_usize("outer", 10),
+                inner_iters: args.get_usize("inner", 10),
+                ..Default::default()
+            };
+            KronSvm::new(cfg).fit(train)?.predict(test)
+        }
+        "kronridge" => {
+            let cfg = RidgeConfig {
+                lambda,
+                kernel_d: kernel,
+                kernel_t: kernel,
+                iterations: args.get_usize("iterations", 100),
+                ..Default::default()
+            };
+            KronRidge::new(cfg).fit(train)?.predict(test)
+        }
+        "libsvm" => {
+            let cfg = ExplicitSvmConfig {
+                c: args.get_f64("c", 1.0),
+                kernel,
+                ..Default::default()
+            };
+            ExplicitSvm::fit(train, &cfg)?.predict(test)
+        }
+        "sgd-hinge" | "sgd-logistic" => {
+            let cfg = SgdConfig {
+                loss: if method == "sgd-hinge" { SgdLossKind::Hinge } else { SgdLossKind::Logistic },
+                lambda,
+                updates: args.get_usize("updates", 1_000_000),
+                ..Default::default()
+            };
+            SgdModel::fit(train, &cfg)?.predict(test)
+        }
+        "knn" => {
+            let cfg = KnnConfig { k: args.get_usize("k", 5), ..Default::default() };
+            KnnModel::fit(train, &cfg)?.predict(test)
+        }
+        other => return Err(format!("unknown method '{other}'")),
+    };
+    Ok(auc(&test.labels, &scores))
+}
+
+fn cmd_datasets(args: &Args) -> Result<(), String> {
+    let seed = args.get_u64("seed", 1);
+    println!("{:<10} {:>9} {:>8} {:>9} {:>8} {:>8}", "dataset", "edges", "pos.", "neg.", "starts", "ends");
+    for name in ["gpcr", "ic", "e", "ki", "checker"] {
+        let ds = load_dataset(name, seed, args.get_f64("scale", 1.0))?;
+        let st = ds.stats();
+        println!(
+            "{:<10} {:>9} {:>8} {:>9} {:>8} {:>8}",
+            name, st.edges, st.positives, st.negatives, st.start_vertices, st.end_vertices
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let data = args.get_str("data", "checker");
+    let method = args.get_str("method", "kronsvm");
+    let seed = args.get_u64("seed", 1);
+    let ds = load_dataset(&data, seed, args.get_f64("scale", 0.1))?;
+    let (train, test) = ds.zero_shot_split(args.get_f64("test-frac", 0.25), seed);
+    println!(
+        "dataset={} train: n={} m={} q={}; test: n={}",
+        data,
+        train.n_edges(),
+        train.m(),
+        train.q(),
+        test.n_edges()
+    );
+    let timer = Timer::start();
+    let auc_val = train_and_eval(&method, &train, &test, args)?;
+    println!("method={method} AUC={auc_val:.4} time={:.2}s", timer.elapsed_secs());
+    Ok(())
+}
+
+fn cmd_cv(args: &Args) -> Result<(), String> {
+    let data = args.get_str("data", "gpcr");
+    let method = args.get_str("method", "kronridge");
+    let seed = args.get_u64("seed", 1);
+    let ds = load_dataset(&data, seed, args.get_f64("scale", 1.0))?;
+    let folds = ds.ninefold_cv(seed);
+    let threads = args.get_usize("threads", 1);
+    let results = run_cv_jobs(&folds, threads, |tr, te| {
+        train_and_eval(&method, tr, te, args).unwrap_or(f64::NAN)
+    });
+    for r in &results {
+        println!(
+            "fold {} AUC={:.4} ({} train, {} test edges, {:.2}s)",
+            r.fold, r.auc, r.train_edges, r.test_edges, r.train_secs
+        );
+    }
+    let mean = kronvt::coordinator::jobs::mean_auc(&results);
+    println!("mean AUC over {} folds: {mean:.4}", results.len());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let seed = args.get_u64("seed", 1);
+    let ds = load_dataset(&args.get_str("data", "checker"), seed, args.get_f64("scale", 0.06))?;
+    let (train, _) = ds.zero_shot_split(0.25, seed);
+    let cfg = SvmConfig {
+        lambda: args.get_f64("lambda", 2f64.powi(-7)),
+        kernel_d: KernelKind::Gaussian { gamma: 1.0 },
+        kernel_t: KernelKind::Gaussian { gamma: 1.0 },
+        ..Default::default()
+    };
+    println!("training model on {} edges...", train.n_edges());
+    let model = KronSvm::new(cfg).fit(&train)?;
+    let d = model.train_start_features.cols();
+    let r = model.train_end_features.cols();
+    let server = PredictServer::start(model, ServerConfig::default());
+
+    let n_requests = args.get_usize("requests", 100);
+    let mut rng = Pcg32::seeded(seed ^ 0x5E7);
+    let timer = Timer::start();
+    for _ in 0..n_requests {
+        let sf: Vec<Vec<f64>> = (0..4).map(|_| rng.uniform_vec(d, 0.0, 100.0)).collect();
+        let ef: Vec<Vec<f64>> = (0..4).map(|_| rng.uniform_vec(r, 0.0, 100.0)).collect();
+        let edges: Vec<(u32, u32)> = (0..8).map(|_| (rng.below(4) as u32, rng.below(4) as u32)).collect();
+        let scores = server.predict_blocking(sf, ef, edges)?;
+        assert_eq!(scores.len(), 8);
+    }
+    let secs = timer.elapsed_secs();
+    let st = server.stats();
+    println!(
+        "served {} requests ({} edges) in {:.3}s — {:.0} edges/s, {} batches",
+        st.requests.load(std::sync::atomic::Ordering::Relaxed),
+        st.edges_scored.load(std::sync::atomic::Ordering::Relaxed),
+        secs,
+        st.edges_scored.load(std::sync::atomic::Ordering::Relaxed) as f64 / secs,
+        st.batches.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<(), String> {
+    let dir = args.get_str("dir", "artifacts");
+    if !kronvt::runtime::ArtifactRegistry::available(&dir) {
+        println!("no artifact manifest at {dir}/ — run `make artifacts` (native paths still work)");
+        return Ok(());
+    }
+    let reg = kronvt::runtime::ArtifactRegistry::open(&dir).map_err(|e| e.to_string())?;
+    println!("{} artifacts in {dir}/:", reg.manifest.artifacts.len());
+    for a in &reg.manifest.artifacts {
+        println!("  {:<40} kind={:<16} file={}", a.name, a.kind, a.file);
+    }
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: kronvt <command> [--flags]\n\
+         commands:\n\
+           datasets   print Table-5 style dataset statistics\n\
+           train      train one method on a zero-shot split and report AUC\n\
+           cv         9-fold zero-shot cross-validation (Fig. 2)\n\
+           serve      run the batched zero-shot prediction server demo\n\
+           artifacts  show the PJRT artifact registry status\n\
+         common flags: --data checker|checker+|ki|gpcr|ic|e --method kronsvm|kronridge|libsvm|sgd-hinge|sgd-logistic|knn\n\
+                       --kernel linear|gaussian:G --lambda L --seed S --scale F"
+    );
+    std::process::exit(2)
+}
+
+fn main() {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let result = match cmd {
+        "datasets" => cmd_datasets(&args),
+        "train" => cmd_train(&args),
+        "cv" => cmd_cv(&args),
+        "serve" => cmd_serve(&args),
+        "artifacts" => cmd_artifacts(&args),
+        _ => usage(),
+    };
+    if let Err(err) = result {
+        eprintln!("error: {err}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,13 @@
+//! Trained predictors.
+//!
+//! * [`dual`] — the dual model `f(d,t) = Σᵢ aᵢ k(d_{rᵢ},d) g(t_{sᵢ},t)`
+//!   with the efficient zero-shot prediction of §3.1 plus an explicit
+//!   ("Baseline") prediction path for the Fig. 6 comparison.
+//! * [`primal`] — the primal model `f(d,t) = ⟨d ⊗ t, w⟩` for linear vertex
+//!   kernels, and the matrix-free primal operators of Algorithm 3.
+
+pub mod dual;
+pub mod primal;
+
+pub use dual::DualModel;
+pub use primal::{PrimalKronOp, PrimalModel};

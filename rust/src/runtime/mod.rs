@@ -1,0 +1,8 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts (produced by
+//! `python/compile/aot.py`) and execute them from the Rust hot path.
+
+pub mod pjrt;
+pub mod artifacts;
+
+pub use artifacts::{ArtifactManifest, ArtifactRegistry};
+pub use pjrt::PjrtExecutable;

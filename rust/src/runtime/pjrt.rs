@@ -1,0 +1,91 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! The interchange format is **HLO text** (not serialized `HloModuleProto`):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
+//! (see `/opt/xla-example/README.md` and `python/compile/aot.py`).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT client (CPU). Construct once and share.
+pub struct PjrtContext {
+    client: xla::PjRtClient,
+}
+
+impl PjrtContext {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<PjrtContext> {
+        Ok(PjrtContext { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text file and compile it into an executable.
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<PjrtExecutable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling HLO module {path:?}"))?;
+        Ok(PjrtExecutable {
+            exe,
+            name: path.file_stem().map(|s| s.to_string_lossy().to_string()).unwrap_or_default(),
+        })
+    }
+}
+
+/// Typed tensor argument for executions.
+pub enum Arg<'a> {
+    F32(&'a [f32], &'a [i64]),
+    I32(&'a [i32], &'a [i64]),
+}
+
+/// A compiled PJRT executable.
+pub struct PjrtExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl PjrtExecutable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with typed inputs; returns each output of the result tuple as
+    /// a flat f32 vector. (All artifacts are lowered with
+    /// `return_tuple=True`, so the single on-device output is a tuple.)
+    pub fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|arg| -> Result<xla::Literal> {
+                Ok(match arg {
+                    Arg::F32(data, dims) => {
+                        xla::Literal::vec1(data).reshape(dims).context("reshaping f32 input")?
+                    }
+                    Arg::I32(data, dims) => {
+                        xla::Literal::vec1(data).reshape(dims).context("reshaping i32 input")?
+                    }
+                })
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals).context("executing")?;
+        let out = result[0][0].to_literal_sync().context("fetching result")?;
+        let parts = out.to_tuple().context("decomposing result tuple")?;
+        parts
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT round-trip tests live in `rust/tests/artifact_roundtrip.rs`
+    // (integration level) because they need `make artifacts` outputs.
+}

@@ -1,0 +1,21 @@
+//! Training algorithms: the truncated-Newton optimization framework of §3.3
+//! (Algorithms 2 and 3) and the two case studies of §4 — Kronecker ridge
+//! regression and the Kronecker L2-SVM.
+//!
+//! All trainers share:
+//! * matrix-free operators from [`crate::gvt`] (dual) /
+//!   [`crate::model::primal`] (primal) — the Kronecker product is never
+//!   materialized;
+//! * per-iteration tracing of regularized risk and validation AUC (the data
+//!   behind Figs. 3–5);
+//! * early stopping on validation AUC (§3.3, §5.2).
+
+pub mod trace;
+pub mod ridge;
+pub mod svm;
+pub mod newton;
+
+pub use ridge::{KronRidge, RidgeConfig};
+pub use svm::{KronSvm, SvmConfig};
+pub use newton::{NewtonConfig, NewtonTrainer};
+pub use trace::{IterRecord, TrainTrace};

@@ -1,0 +1,327 @@
+//! The general truncated-Newton framework of §3.2–3.3 (Algorithms 2 and 3)
+//! for *any* Table-2 loss — ridge and L2-SVM have specialized trainers
+//! ([`super::ridge`], [`super::svm`]); this module additionally enables
+//! logistic regression and RankRLS with the Kronecker product kernel.
+//!
+//! Dual Newton system (eq. 9):  `(H·R(G⊗K)Rᵀ + λI) x = g + λa`.
+//! Primal Newton system:        `(XᵀHX + λI) x = Xᵀg + λw`, `X = R(T⊗D)`.
+
+use crate::data::Dataset;
+use crate::eval::auc::auc;
+use crate::gvt::KronKernelOp;
+use crate::kernels::KernelKind;
+use crate::linalg::solvers::{cg, qmr, FnOp, LinOp, SolverConfig};
+use crate::linalg::vecops::dot;
+use crate::losses::Loss;
+use crate::model::primal::{PrimalKronOp, PrimalNewtonOp};
+use crate::model::{DualModel, PrimalModel};
+use crate::train::ridge::{dual_kernel_op, validation_op};
+use crate::train::trace::{IterRecord, TrainTrace};
+use crate::util::timer::Timer;
+
+/// Configuration for the generic truncated-Newton trainer.
+#[derive(Debug, Clone, Copy)]
+pub struct NewtonConfig {
+    pub lambda: f64,
+    pub kernel_d: KernelKind,
+    pub kernel_t: KernelKind,
+    pub outer_iters: usize,
+    pub inner_iters: usize,
+    /// Step size δ (constant, as in the paper's experiments).
+    pub delta: f64,
+    pub trace: bool,
+    pub patience: usize,
+}
+
+impl Default for NewtonConfig {
+    fn default() -> Self {
+        NewtonConfig {
+            lambda: 1.0,
+            kernel_d: KernelKind::Linear,
+            kernel_t: KernelKind::Linear,
+            outer_iters: 10,
+            inner_iters: 10,
+            delta: 1.0,
+            trace: false,
+            patience: 0,
+        }
+    }
+}
+
+/// Truncated-Newton trainer over an arbitrary [`Loss`].
+pub struct NewtonTrainer<L: Loss> {
+    pub cfg: NewtonConfig,
+    pub loss: L,
+}
+
+impl<L: Loss> NewtonTrainer<L> {
+    pub fn new(loss: L, cfg: NewtonConfig) -> Self {
+        NewtonTrainer { cfg, loss }
+    }
+
+    /// Algorithm 2 (dual).
+    pub fn fit_dual(
+        &self,
+        train: &Dataset,
+        val: Option<&Dataset>,
+    ) -> Result<(DualModel, TrainTrace), String> {
+        train.validate()?;
+        let n = train.n_edges();
+        if n == 0 {
+            return Err("empty training set".into());
+        }
+        let timer = Timer::start();
+        let op = dual_kernel_op(train, self.cfg.kernel_d, self.cfg.kernel_t);
+        let val_op = val.map(|v| validation_op(train, v, self.cfg.kernel_d, self.cfg.kernel_t));
+        let y = &train.labels;
+
+        let mut a = vec![0.0; n];
+        let mut p = vec![0.0; n];
+        let mut g = vec![0.0; n];
+        let mut trace = TrainTrace::default();
+        let inner_cfg = SolverConfig { max_iters: self.cfg.inner_iters, tol: 1e-12 };
+
+        for outer in 1..=self.cfg.outer_iters {
+            self.loss.gradient(&p, y, &mut g);
+            let rhs: Vec<f64> = (0..n).map(|i| g[i] + self.cfg.lambda * a[i]).collect();
+            // Newton operator x ↦ H·(Q x) + λx; transpose x ↦ Q·(H x) + λx.
+            let lambda = self.cfg.lambda;
+            let loss = &self.loss;
+            let p_ref = &p;
+            let op_ref = &op;
+            let newton = FnOp {
+                n,
+                fwd: move |x: &[f64], out: &mut [f64]| {
+                    let qx = op_ref.apply_vec(x);
+                    loss.hessian_vec(p_ref, y, &qx, out);
+                    for i in 0..x.len() {
+                        out[i] += lambda * x[i];
+                    }
+                },
+                tr: move |x: &[f64], out: &mut [f64]| {
+                    let mut hx = vec![0.0; x.len()];
+                    loss.hessian_vec(p_ref, y, x, &mut hx);
+                    op_ref.apply(&hx, out);
+                    for i in 0..x.len() {
+                        out[i] += lambda * x[i];
+                    }
+                },
+            };
+            let mut x = vec![0.0; n];
+            qmr(&newton, &rhs, &mut x, &inner_cfg);
+            for i in 0..n {
+                a[i] -= self.cfg.delta * x[i];
+            }
+            op.apply_into(&a, &mut p);
+
+            if self.cfg.trace || (val.is_some() && self.cfg.patience > 0) {
+                let risk = self.loss.value(&p, y) + 0.5 * self.cfg.lambda * dot(&a, &p);
+                let val_auc =
+                    val_op.as_ref().zip(val).map(|(vo, v)| auc(&v.labels, &vo.predict(&a)));
+                trace.push(IterRecord {
+                    iter: outer,
+                    risk,
+                    val_auc,
+                    elapsed_secs: timer.elapsed_secs(),
+                });
+                if trace.should_stop(self.cfg.patience) {
+                    break;
+                }
+            }
+        }
+
+        let model = DualModel {
+            dual_coef: a,
+            train_start_features: train.start_features.clone(),
+            train_end_features: train.end_features.clone(),
+            train_idx: train.kron_index(),
+            kernel_d: self.cfg.kernel_d,
+            kernel_t: self.cfg.kernel_t,
+        };
+        Ok((model, trace))
+    }
+
+    /// Algorithm 3 (primal, linear vertex kernels). Restricted to losses
+    /// with diagonal Hessians (the [`PrimalNewtonOp`] shortcut); RankRLS
+    /// would need a dedicated operator.
+    pub fn fit_primal(
+        &self,
+        train: &Dataset,
+        val: Option<&Dataset>,
+    ) -> Result<(PrimalModel, TrainTrace), String> {
+        if !self.loss.diagonal_hessian() {
+            return Err(format!(
+                "primal Newton supports diagonal-Hessian losses only (got {})",
+                self.loss.name()
+            ));
+        }
+        train.validate()?;
+        let n = train.n_edges();
+        if n == 0 {
+            return Err("empty training set".into());
+        }
+        let timer = Timer::start();
+        let op = PrimalKronOp::new(train);
+        let y = &train.labels;
+        let d_features = train.start_features.cols();
+        let r_features = train.end_features.cols();
+
+        let mut w = vec![0.0; op.w_dim()];
+        let mut p = vec![0.0; n];
+        let mut g = vec![0.0; n];
+        let mut h = vec![0.0; n];
+        let mut trace = TrainTrace::default();
+        let inner_cfg = SolverConfig { max_iters: self.cfg.inner_iters, tol: 1e-12 };
+
+        for outer in 1..=self.cfg.outer_iters {
+            self.loss.gradient(&p, y, &mut g);
+            self.loss.hessian_diag(&p, y, &mut h);
+            let mut rhs = op.adjoint(&g);
+            for i in 0..rhs.len() {
+                rhs[i] += self.cfg.lambda * w[i];
+            }
+            let newton =
+                PrimalNewtonOp { op: &op, hess_diag: h.clone(), lambda: self.cfg.lambda };
+            let mut x = vec![0.0; op.w_dim()];
+            cg(&newton, &rhs, &mut x, &inner_cfg);
+            for i in 0..w.len() {
+                w[i] -= self.cfg.delta * x[i];
+            }
+            p = op.forward(&w);
+
+            if self.cfg.trace || (val.is_some() && self.cfg.patience > 0) {
+                let risk = self.loss.value(&p, y) + 0.5 * self.cfg.lambda * dot(&w, &w);
+                let val_auc = val.map(|v| {
+                    let pm = PrimalModel { w: w.clone(), d_features, r_features };
+                    auc(&v.labels, &pm.predict(v))
+                });
+                trace.push(IterRecord {
+                    iter: outer,
+                    risk,
+                    val_auc,
+                    elapsed_secs: timer.elapsed_secs(),
+                });
+                if trace.should_stop(self.cfg.patience) {
+                    break;
+                }
+            }
+        }
+
+        Ok((PrimalModel { w, d_features, r_features }, trace))
+    }
+
+    /// Training-kernel operator access for diagnostics.
+    pub fn kernel_op(&self, train: &Dataset) -> KronKernelOp {
+        dual_kernel_op(train, self.cfg.kernel_d, self.cfg.kernel_t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::losses::{L2SvmLoss, LogisticLoss, RankRlsLoss, RidgeLoss};
+    use crate::train::ridge::{ridge_exact_dual, RidgeConfig};
+    use crate::util::rng::Pcg32;
+
+    fn toy_train(seed: u64, m: usize, q: usize, n: usize) -> Dataset {
+        let mut rng = Pcg32::seeded(seed);
+        Dataset {
+            start_features: crate::linalg::Matrix::from_fn(m, 3, |_, _| rng.normal()),
+            end_features: crate::linalg::Matrix::from_fn(q, 2, |_, _| rng.normal()),
+            start_idx: (0..n).map(|_| rng.below(m) as u32).collect(),
+            end_idx: (0..n).map(|_| rng.below(q) as u32).collect(),
+            labels: (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect(),
+            name: "toy".into(),
+        }
+    }
+
+    #[test]
+    fn ridge_loss_newton_matches_exact_ridge() {
+        // With the squared loss the Newton step is exact in one outer
+        // iteration (given enough inner iterations).
+        let train = toy_train(600, 8, 8, 26);
+        let cfg = NewtonConfig {
+            lambda: 0.7,
+            outer_iters: 3,
+            inner_iters: 400,
+            ..Default::default()
+        };
+        let (model, _) = NewtonTrainer::new(RidgeLoss, cfg).fit_dual(&train, None).unwrap();
+        let exact = ridge_exact_dual(
+            &train,
+            &RidgeConfig { lambda: 0.7, ..Default::default() },
+        );
+        crate::linalg::vecops::assert_allclose(&model.dual_coef, &exact, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn logistic_newton_decreases_risk() {
+        let train = toy_train(601, 10, 10, 50);
+        let cfg = NewtonConfig {
+            lambda: 0.1,
+            outer_iters: 12,
+            inner_iters: 30,
+            trace: true,
+            ..Default::default()
+        };
+        let (_, trace) = NewtonTrainer::new(LogisticLoss, cfg).fit_dual(&train, None).unwrap();
+        let first = trace.records.first().unwrap().risk;
+        let last = trace.records.last().unwrap().risk;
+        assert!(last < first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn rankrls_newton_decreases_risk() {
+        let mut train = toy_train(602, 9, 9, 40);
+        // regression-style labels for ranking
+        let mut rng = Pcg32::seeded(603);
+        for y in train.labels.iter_mut() {
+            *y = rng.normal();
+        }
+        let cfg = NewtonConfig {
+            lambda: 0.5,
+            outer_iters: 8,
+            inner_iters: 40,
+            trace: true,
+            ..Default::default()
+        };
+        let (_, trace) = NewtonTrainer::new(RankRlsLoss, cfg).fit_dual(&train, None).unwrap();
+        // risk of the zero model
+        let zero_risk = RankRlsLoss.value(&vec![0.0; train.n_edges()], &train.labels);
+        let last = trace.records.last().unwrap().risk;
+        assert!(last < 0.95 * zero_risk, "{zero_risk} -> {last}");
+    }
+
+    #[test]
+    fn generic_l2svm_agrees_with_specialized_trainer() {
+        let train = toy_train(604, 10, 9, 45);
+        let ncfg = NewtonConfig {
+            lambda: 0.8,
+            outer_iters: 25,
+            inner_iters: 50,
+            ..Default::default()
+        };
+        let (generic, _) = NewtonTrainer::new(L2SvmLoss, ncfg).fit_dual(&train, None).unwrap();
+        let scfg = crate::train::svm::SvmConfig {
+            lambda: 0.8,
+            outer_iters: 25,
+            inner_iters: 50,
+            sparsity_threshold: 0.0,
+            ..Default::default()
+        };
+        let special = crate::train::svm::KronSvm::new(scfg).fit(&train).unwrap();
+        crate::linalg::vecops::assert_allclose(
+            &generic.dual_coef,
+            &special.dual_coef,
+            1e-4,
+            1e-3,
+        );
+    }
+
+    #[test]
+    fn primal_rejects_non_diagonal_hessian() {
+        let train = toy_train(605, 5, 5, 12);
+        let cfg = NewtonConfig::default();
+        assert!(NewtonTrainer::new(RankRlsLoss, cfg).fit_primal(&train, None).is_err());
+    }
+}

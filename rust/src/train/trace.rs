@@ -1,0 +1,121 @@
+//! Per-iteration training traces (regularized risk, validation AUC,
+//! wall-clock) — the raw data behind the convergence figures (Figs. 3–5) and
+//! the early-stopping rule.
+
+/// One optimization-iteration record.
+#[derive(Debug, Clone, Copy)]
+pub struct IterRecord {
+    /// Outer iteration number (1-based).
+    pub iter: usize,
+    /// Regularized risk `J(f) = L(p,y) + (λ/2)‖f‖²`.
+    pub risk: f64,
+    /// AUC on the validation set, if one was supplied.
+    pub val_auc: Option<f64>,
+    /// Seconds since training started.
+    pub elapsed_secs: f64,
+}
+
+/// Training trace plus early-stopping bookkeeping.
+#[derive(Debug, Clone, Default)]
+pub struct TrainTrace {
+    pub records: Vec<IterRecord>,
+}
+
+impl TrainTrace {
+    pub fn push(&mut self, rec: IterRecord) {
+        self.records.push(rec);
+    }
+
+    /// Best validation AUC seen (if any records carry one).
+    pub fn best_val_auc(&self) -> Option<f64> {
+        self.records.iter().filter_map(|r| r.val_auc).fold(None, |best, v| {
+            Some(best.map_or(v, |b: f64| b.max(v)))
+        })
+    }
+
+    /// Iteration index (1-based) of the best validation AUC.
+    pub fn best_iter(&self) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for r in &self.records {
+            if let Some(v) = r.val_auc {
+                if best.map_or(true, |(_, b)| v > b) {
+                    best = Some((r.iter, v));
+                }
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Whether validation AUC has failed to improve for `patience`
+    /// consecutive records (the early-stopping criterion).
+    pub fn should_stop(&self, patience: usize) -> bool {
+        if patience == 0 {
+            return false;
+        }
+        let with_auc: Vec<(usize, f64)> = self
+            .records
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| r.val_auc.map(|v| (i, v)))
+            .collect();
+        if with_auc.len() <= patience {
+            return false;
+        }
+        let best_pos = with_auc
+            .iter()
+            .enumerate()
+            .max_by(|(_, (_, a)), (_, (_, b))| a.partial_cmp(b).unwrap())
+            .map(|(pos, _)| pos)
+            .unwrap();
+        with_auc.len() - 1 - best_pos >= patience
+    }
+
+    /// Final risk (∞ when empty).
+    pub fn final_risk(&self) -> f64 {
+        self.records.last().map(|r| r.risk).unwrap_or(f64::INFINITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(iter: usize, risk: f64, auc: Option<f64>) -> IterRecord {
+        IterRecord { iter, risk, val_auc: auc, elapsed_secs: 0.0 }
+    }
+
+    #[test]
+    fn best_tracking() {
+        let mut t = TrainTrace::default();
+        t.push(rec(1, 10.0, Some(0.6)));
+        t.push(rec(2, 5.0, Some(0.75)));
+        t.push(rec(3, 3.0, Some(0.7)));
+        assert_eq!(t.best_val_auc(), Some(0.75));
+        assert_eq!(t.best_iter(), Some(2));
+        assert_eq!(t.final_risk(), 3.0);
+    }
+
+    #[test]
+    fn early_stop_patience() {
+        let mut t = TrainTrace::default();
+        t.push(rec(1, 9.0, Some(0.8)));
+        assert!(!t.should_stop(2));
+        t.push(rec(2, 8.0, Some(0.7)));
+        assert!(!t.should_stop(2));
+        t.push(rec(3, 7.0, Some(0.71)));
+        assert!(t.should_stop(2));
+        assert!(!t.should_stop(3));
+        // patience 0 disables
+        assert!(!t.should_stop(0));
+    }
+
+    #[test]
+    fn no_auc_means_no_stop() {
+        let mut t = TrainTrace::default();
+        for i in 0..10 {
+            t.push(rec(i, 1.0, None));
+        }
+        assert!(!t.should_stop(2));
+        assert_eq!(t.best_val_auc(), None);
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained utilities (the build is fully offline, so the crate
+//! hand-rolls what would normally come from `rand`, `serde_json`, `clap`,
+//! `criterion`, …).
+
+pub mod rng;
+pub mod timer;
+pub mod json;
+pub mod args;
+pub mod logging;
+pub mod proptest;

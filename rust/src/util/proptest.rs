@@ -1,0 +1,71 @@
+//! Hand-rolled property-testing harness (the `proptest` crate is unavailable
+//! offline).
+//!
+//! A property is a closure over a seeded [`Pcg32`]; the harness runs it for
+//! `cases` independent seeds and reports the first failing seed so failures
+//! are reproducible with `check_seeded`.
+
+use super::rng::Pcg32;
+
+/// Number of cases to run per property (overridable via `KRONVT_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("KRONVT_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(32)
+}
+
+/// Run `prop` for `cases` random seeds derived from `base_seed`. The property
+/// should panic (e.g. via `assert!`) on failure; the harness re-panics with
+/// the failing seed in the message.
+pub fn check_n(base_seed: u64, cases: usize, prop: impl Fn(&mut Pcg32)) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Pcg32::seeded(seed);
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Run with the default number of cases.
+pub fn check(base_seed: u64, prop: impl Fn(&mut Pcg32)) {
+    check_n(base_seed, default_cases(), prop);
+}
+
+/// Re-run a single failing case.
+pub fn check_seeded(seed: u64, prop: impl Fn(&mut Pcg32)) {
+    let mut rng = Pcg32::seeded(seed);
+    prop(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_n(1, 16, |rng| {
+            let x = rng.uniform();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check_n(2, 16, |rng| {
+                let x = rng.below(10);
+                assert!(x < 5, "x={x}");
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("seed"), "msg={msg}");
+    }
+}

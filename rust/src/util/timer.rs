@@ -1,0 +1,143 @@
+//! Wall-clock timing helpers and a tiny benchmark runner (criterion is not
+//! available offline; `cargo bench` targets use [`BenchRunner`] instead).
+
+use std::time::{Duration, Instant};
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since construction.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timeit<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_secs())
+}
+
+/// Statistics over repeated measurements.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+    pub stddev_secs: f64,
+}
+
+impl BenchStats {
+    pub fn from_samples(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty());
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        BenchStats {
+            iters: samples.len(),
+            mean_secs: mean,
+            min_secs: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            max_secs: samples.iter().cloned().fold(0.0, f64::max),
+            stddev_secs: var.sqrt(),
+        }
+    }
+}
+
+/// Minimal benchmark runner: warms up, then samples until `target_time` is
+/// spent or `max_iters` reached, whichever comes first (min 3 samples).
+pub struct BenchRunner {
+    pub warmup: usize,
+    pub target_time: Duration,
+    pub max_iters: usize,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        BenchRunner { warmup: 1, target_time: Duration::from_secs(2), max_iters: 50 }
+    }
+}
+
+impl BenchRunner {
+    pub fn quick() -> Self {
+        BenchRunner { warmup: 1, target_time: Duration::from_millis(500), max_iters: 20 }
+    }
+
+    /// Run `f` repeatedly and report stats. `f` should perform one complete
+    /// unit of the benchmarked work.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> BenchStats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let budget = Timer::start();
+        while samples.len() < 3
+            || (budget.elapsed() < self.target_time && samples.len() < self.max_iters)
+        {
+            let t = Timer::start();
+            std::hint::black_box(f());
+            samples.push(t.elapsed_secs());
+        }
+        BenchStats::from_samples(&samples)
+    }
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeit_measures() {
+        let ((), secs) = timeit(|| std::thread::sleep(Duration::from_millis(10)));
+        assert!(secs >= 0.009, "secs={secs}");
+    }
+
+    #[test]
+    fn bench_stats() {
+        let s = BenchStats::from_samples(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.iters, 3);
+        assert!((s.mean_secs - 2.0).abs() < 1e-12);
+        assert!((s.min_secs - 1.0).abs() < 1e-12);
+        assert!((s.max_secs - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn runner_runs_at_least_three() {
+        let r = BenchRunner { warmup: 0, target_time: Duration::from_millis(1), max_iters: 5 };
+        let stats = r.run(|| 1 + 1);
+        assert!(stats.iters >= 3);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(2.5).ends_with('s'));
+        assert!(fmt_secs(0.002).ends_with("ms"));
+        assert!(fmt_secs(2e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+    }
+}

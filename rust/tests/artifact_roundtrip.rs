@@ -1,0 +1,142 @@
+//! Integration: the AOT artifacts produced by `make artifacts` load through
+//! PJRT and agree numerically with the native Rust implementations.
+//!
+//! These tests are skipped (with a notice) when `artifacts/manifest.json` is
+//! missing so that `cargo test` works in a pure-Rust checkout; run
+//! `make artifacts` first for full coverage.
+
+use kronvt::coordinator::{Route, Router, RouterConfig};
+use kronvt::gvt::{gvt_apply, KronIndex};
+use kronvt::kernels::{kernel_matrix, KernelKind};
+use kronvt::linalg::vecops::assert_allclose;
+use kronvt::linalg::Matrix;
+use kronvt::runtime::ArtifactRegistry;
+use kronvt::util::rng::Pcg32;
+
+fn registry() -> Option<ArtifactRegistry> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !ArtifactRegistry::available(&dir) {
+        eprintln!("NOTE: artifacts/ missing — run `make artifacts`; skipping PJRT round-trip");
+        return None;
+    }
+    Some(ArtifactRegistry::open(&dir).expect("open registry"))
+}
+
+fn random_kernel(rng: &mut Pcg32, n: usize, feat: usize) -> Matrix {
+    let x = Matrix::from_fn(n, feat, |_, _| rng.normal());
+    KernelKind::Gaussian { gamma: 0.3 }.square_matrix(&x)
+}
+
+fn random_idx(rng: &mut Pcg32, q: usize, m: usize, n: usize) -> KronIndex {
+    KronIndex::new(
+        (0..n).map(|_| rng.below(q) as u32).collect(),
+        (0..n).map(|_| rng.below(m) as u32).collect(),
+    )
+}
+
+#[test]
+fn kron_mv_artifact_matches_native() {
+    let Some(reg) = registry() else { return };
+    let mut rng = Pcg32::seeded(2000);
+    // deliberately not a bucket size: exercises padding
+    let (m, q, n) = (50, 37, 700);
+    let k = random_kernel(&mut rng, m, 4);
+    let g = random_kernel(&mut rng, q, 4);
+    let idx = random_idx(&mut rng, q, m, n);
+    let v = rng.normal_vec(n);
+
+    let pjrt = reg.kron_mv(&k, &g, &idx, &v).expect("pjrt kron_mv");
+    let native = gvt_apply(&g, &k, &idx, &idx, &v);
+    // f32 on the PJRT side
+    assert_allclose(&pjrt, &native, 1e-3, 1e-3);
+}
+
+#[test]
+fn kron_mv_artifact_exact_bucket_size() {
+    let Some(reg) = registry() else { return };
+    let mut rng = Pcg32::seeded(2001);
+    let (m, q, n) = (64, 64, 1024);
+    let k = random_kernel(&mut rng, m, 4);
+    let g = random_kernel(&mut rng, q, 4);
+    let idx = random_idx(&mut rng, q, m, n);
+    let v = rng.normal_vec(n);
+    let pjrt = reg.kron_mv(&k, &g, &idx, &v).expect("pjrt kron_mv");
+    let native = gvt_apply(&g, &k, &idx, &idx, &v);
+    assert_allclose(&pjrt, &native, 1e-3, 1e-3);
+}
+
+#[test]
+fn gaussian_kernel_artifact_matches_native() {
+    let Some(reg) = registry() else { return };
+    let mut rng = Pcg32::seeded(2002);
+    let x1 = Matrix::from_fn(33, 5, |_, _| rng.normal());
+    let x2 = Matrix::from_fn(21, 5, |_, _| rng.normal());
+    let gamma = 0.7;
+    let pjrt = reg.gaussian_kernel(&x1, &x2, gamma).expect("pjrt gaussian");
+    let native = kernel_matrix(KernelKind::Gaussian { gamma }, &x1, &x2);
+    assert_allclose(pjrt.data(), native.data(), 2e-3, 2e-3);
+}
+
+#[test]
+fn ridge_train_artifact_matches_native_solution() {
+    let Some(reg) = registry() else { return };
+    let mut rng = Pcg32::seeded(2003);
+    let (m, q, n) = (40, 30, 500);
+    let k = random_kernel(&mut rng, m, 4);
+    let g = random_kernel(&mut rng, q, 4);
+    let idx = random_idx(&mut rng, q, m, n);
+    let y: Vec<f64> = (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+    let lambda = 1.0;
+
+    let a_pjrt = reg.ridge_train(&k, &g, &idx, &y, lambda).expect("pjrt ridge_train");
+
+    // native: solve the same system well past 50 CG iterations
+    use kronvt::gvt::operator::RidgeSystemOp;
+    use kronvt::gvt::KronKernelOp;
+    use kronvt::linalg::solvers::{minres, LinOp, SolverConfig};
+    use std::sync::Arc;
+    let op = KronKernelOp::new(Arc::new(g.clone()), Arc::new(k.clone()), idx.clone());
+    let sys = RidgeSystemOp { op: &op, lambda };
+    let mut a_native = vec![0.0; n];
+    minres(&sys, &y, &mut a_native, &SolverConfig { max_iters: 400, tol: 1e-12 });
+
+    // The artifact runs exactly 50 f32 CG iterations; compare loosely and on
+    // predictions rather than coefficients.
+    let p_pjrt = op.apply_vec(&a_pjrt);
+    let p_native = op.apply_vec(&a_native);
+    assert_allclose(&p_pjrt, &p_native, 5e-2, 5e-2);
+}
+
+#[test]
+fn router_dispatches_and_falls_back() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let router = Router::auto(&dir, RouterConfig::default());
+    let mut rng = Pcg32::seeded(2004);
+    let (m, q) = (48, 48);
+    let k = random_kernel(&mut rng, m, 4);
+    let g = random_kernel(&mut rng, q, 4);
+
+    // dense graph → dense route is at least *considered*; sparse → native
+    let sparse_idx = random_idx(&mut rng, q, m, 200);
+    assert_eq!(router.decide(m, q, 200), Route::NativeGvt);
+
+    let dense_n = m * q; // complete graph
+    let dense_idx = random_idx(&mut rng, q, m, dense_n);
+    let v_sparse = rng.normal_vec(200);
+    let v_dense = rng.normal_vec(dense_n);
+
+    // whatever the route, results must match native
+    let u1 = router.kron_mv(&k, &g, &sparse_idx, &v_sparse);
+    let u1_ref = gvt_apply(&g, &k, &sparse_idx, &sparse_idx, &v_sparse);
+    assert_allclose(&u1, &u1_ref, 1e-3, 1e-3);
+
+    let u2 = router.kron_mv(&k, &g, &dense_idx, &v_dense);
+    let u2_ref = gvt_apply(&g, &k, &dense_idx, &dense_idx, &v_dense);
+    assert_allclose(&u2, &u2_ref, 1e-3, 1e-2);
+
+    if router.has_pjrt() {
+        // the complete-graph case should actually prefer the GEMM path
+        assert_eq!(router.decide(m, q, dense_n), Route::PjrtDense);
+        assert!(router.stats().pjrt_calls >= 1);
+    }
+}
