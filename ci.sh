@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# CI entry point — run from the repo root. Mirrors .github/workflows/ci.yml.
+#
+# Checks, in order:
+#   1. cargo fmt --check        formatting
+#   2. cargo clippy -D warnings lints (includes missing_docs via lib.rs)
+#   3. cargo build --release    the tier-1 build
+#   4. cargo test -q            unit + integration tests
+#   5. cargo test --doc         doc tests (keeps the lib.rs quickstart compiling)
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+run() {
+    echo "==> $*"
+    "$@"
+}
+
+run cargo fmt --check
+run cargo clippy --all-targets -- -D warnings
+run cargo build --release
+run cargo test -q
+run cargo test --doc
+
+echo "ci.sh: all checks passed"

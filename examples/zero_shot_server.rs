@@ -38,7 +38,9 @@ fn main() {
     .fit(&train)
     .expect("training");
 
-    let server = PredictServer::start(model, ServerConfig { max_batch_edges: 4096 });
+    let threads = args.get_usize("threads", 0);
+    let server =
+        PredictServer::start(model, ServerConfig { max_batch_edges: 4096, threads });
 
     // Fire requests with brand-new vertices; collect latency + correctness.
     let mut rng = Pcg32::seeded(77);

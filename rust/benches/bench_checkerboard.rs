@@ -10,17 +10,43 @@
 //!
 //! Sizes default to this container's budget; `--full` pushes to the paper's
 //! 1000-vertex Checker scale and beyond (`--max-m 6400` for Checker+ if you
-//! have hours).
+//! have hours). `--threads N` shards the GVT matvecs inside KronSVM training
+//! across N worker threads (0 = all cores); at the largest size the bench
+//! additionally times serial-vs-parallel training and records the speedup
+//! into `BENCH_gvt_parallel.json` under the `"checkerboard"` key.
 //!
-//! Run: `cargo bench --bench bench_checkerboard [-- --full] [--max-m M]`
+//! Run: `cargo bench --bench bench_checkerboard [-- --full] [--max-m M] [--threads N]`
 
 use kronvt::baselines::{ExplicitSvm, ExplicitSvmConfig};
 use kronvt::data::checkerboard::CheckerboardConfig;
+use kronvt::data::Dataset;
 use kronvt::eval::auc::auc;
 use kronvt::kernels::KernelKind;
 use kronvt::train::{KronSvm, SvmConfig};
 use kronvt::util::args::Args;
+use kronvt::util::json::{update_json_file, Json};
 use kronvt::util::timer::{fmt_secs, Timer};
+
+/// Train KronSVM with the paper's Fig. 7 settings; returns (model, secs).
+fn train_kron(
+    train: &Dataset,
+    gaussian: KernelKind,
+    threads: usize,
+) -> (kronvt::model::DualModel, f64) {
+    let t = Timer::start();
+    let model = KronSvm::new(SvmConfig {
+        lambda: 2f64.powi(-7),
+        kernel_d: gaussian,
+        kernel_t: gaussian,
+        outer_iters: 10,
+        inner_iters: 10,
+        threads,
+        ..Default::default()
+    })
+    .fit(train)
+    .expect("kron train");
+    (model, t.elapsed_secs())
+}
 
 fn main() {
     let args = Args::parse();
@@ -28,6 +54,7 @@ fn main() {
     let max_m = args.get_usize("max-m", if full { 1000 } else { 400 });
     let baseline_cap_edges = args.get_usize("baseline-cap", if full { 16_000 } else { 4_000 });
     let seed = args.get_u64("seed", 1);
+    let threads = args.get_usize("threads", 4);
     let gaussian = KernelKind::Gaussian { gamma: 1.0 };
 
     println!(
@@ -58,22 +85,42 @@ fn main() {
         .generate();
         let n = train.n_edges();
 
+        let (kron, kron_train) = train_kron(&train, gaussian, threads);
         let t = Timer::start();
-        let kron = KronSvm::new(SvmConfig {
-            lambda: 2f64.powi(-7),
-            kernel_d: gaussian,
-            kernel_t: gaussian,
-            outer_iters: 10,
-            inner_iters: 10,
-            ..Default::default()
-        })
-        .fit(&train)
-        .expect("kron train");
-        let kron_train = t.elapsed_secs();
-        let t = Timer::start();
-        let scores = kron.predict(&test);
+        let scores = kron.predict_threaded(&test, threads);
         let kron_pred = t.elapsed_secs();
         let kron_auc = auc(&test.labels, &scores);
+
+        // At the largest size, also time a fully serial training run and
+        // record the serial-vs-parallel speedup (the models are bitwise
+        // identical, so this is a pure walltime comparison).
+        if m * 2 > max_m && threads != 1 {
+            let (serial_model, serial_secs) = train_kron(&train, gaussian, 1);
+            assert_eq!(serial_model.dual_coef, kron.dual_coef, "parallel must match serial");
+            let speedup = serial_secs / kron_train;
+            println!(
+                "   parallel check @ m={m}: serial train {} vs {} threads {} — {:.2}x speedup",
+                fmt_secs(serial_secs),
+                threads,
+                fmt_secs(kron_train),
+                speedup
+            );
+            let section = Json::obj(vec![
+                ("bench", Json::from("bench_checkerboard")),
+                ("m", Json::from(m)),
+                ("n", Json::from(n)),
+                ("threads", Json::from(threads)),
+                ("serial_train_secs", Json::from(serial_secs)),
+                ("parallel_train_secs", Json::from(kron_train)),
+                ("speedup", Json::from(speedup)),
+            ]);
+            let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+                .join("..")
+                .join("BENCH_gvt_parallel.json");
+            if let Err(err) = update_json_file(&out, "checkerboard", section) {
+                eprintln!("failed to write {}: {err}", out.display());
+            }
+        }
 
         let (smo_train, smo_pred, smo_auc) = if n <= baseline_cap_edges {
             let t = Timer::start();

@@ -4,8 +4,13 @@
 //! auto-selected branch, the literal pseudocode transcription (strided
 //! loops), the native dense scatter→GEMM→gather path, the explicit baseline,
 //! and — when artifacts are built — the PJRT dense path. Reports effective
-//! GFLOP/s against the Theorem-1 flop model. This is the harness used for
-//! the EXPERIMENTS.md §Perf before/after numbers.
+//! GFLOP/s against the Theorem-1 flop model.
+//!
+//! A second table measures the [`GvtEngine`] parallel path (serial vs 2/4/8
+//! worker threads, precomputed [`EdgePlan`]) and records the serial-vs-
+//! parallel speedups into `BENCH_gvt_parallel.json` at the repo root under
+//! the `"micro"` key — the perf-trajectory convention described in
+//! `docs/BENCHMARKS.md`.
 //!
 //! Run: `cargo bench --bench bench_gvt_micro [-- --full]`
 
@@ -13,12 +18,15 @@ use kronvt::gvt::algorithm::gvt_reference;
 use kronvt::gvt::complexity;
 use kronvt::gvt::dense::dense_apply;
 use kronvt::gvt::explicit::explicit_apply_streaming;
-use kronvt::gvt::{gvt_apply_into, Branch, GvtWorkspace, KronIndex};
+use kronvt::gvt::{gvt_apply_into, Branch, EdgePlan, GvtEngine, GvtWorkspace, KronIndex};
 use kronvt::linalg::Matrix;
 use kronvt::runtime::ArtifactRegistry;
 use kronvt::util::args::Args;
+use kronvt::util::json::{update_json_file, Json};
 use kronvt::util::rng::Pcg32;
 use kronvt::util::timer::{fmt_secs, BenchRunner};
+
+const PAR_THREADS: [usize; 3] = [2, 4, 8];
 
 fn random_kernel(rng: &mut Pcg32, n: usize) -> Matrix {
     let x = Matrix::from_fn(n, 4, |_, _| rng.normal());
@@ -49,6 +57,10 @@ fn main() {
         "{:>5} {:>5} {:>8} | {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} | {:>8}",
         "m", "q", "n", "branch-T", "branch-S", "auto", "pseudo", "dense", "explicit", "pjrt", "GFLOP/s"
     );
+
+    // kept alive across the serial table for reuse in the parallel table
+    let mut problems: Vec<(usize, usize, usize, Matrix, Matrix, KronIndex, Vec<f64>, f64)> =
+        Vec::new();
 
     for &(m, q, n) in shapes {
         let k = random_kernel(&mut rng, m);
@@ -112,6 +124,76 @@ fn main() {
             t_pjrt,
             gflops
         );
+        problems.push((m, q, n, k, g, idx, v, t_auto));
     }
-    println!("\nbench_gvt_micro done");
+
+    // ---- Parallel engine scaling (serial vs GvtEngine at 2/4/8 threads) ----
+    println!();
+    println!(
+        "{:>5} {:>5} {:>8} | {:>10} {:>10} {:>10} {:>10} | {:>7} {:>7} {:>7}",
+        "m", "q", "n", "serial", "2t", "4t", "8t", "spd-2t", "spd-4t", "spd-8t"
+    );
+    let mut json_rows = Vec::new();
+    let mut largest: Option<Json> = None;
+    for (m, q, n, k, g, idx, v, t_serial) in &problems {
+        let plan = EdgePlan::build(idx, g.cols(), k.cols());
+        let mut u = vec![0.0; *n];
+        let mut ws = GvtWorkspace::new();
+        let runner = BenchRunner::quick();
+        let mut par_secs = Vec::new();
+        for &threads in &PAR_THREADS {
+            let engine = GvtEngine::new(threads);
+            let secs = runner
+                .run(|| {
+                    engine.apply_planned(g, k, g, k, idx, idx, &plan, v, &mut u, &mut ws, None)
+                })
+                .min_secs;
+            par_secs.push(secs);
+        }
+        println!(
+            "{:>5} {:>5} {:>8} | {:>10} {:>10} {:>10} {:>10} | {:>6.2}x {:>6.2}x {:>6.2}x",
+            m,
+            q,
+            n,
+            fmt_secs(*t_serial),
+            fmt_secs(par_secs[0]),
+            fmt_secs(par_secs[1]),
+            fmt_secs(par_secs[2]),
+            t_serial / par_secs[0],
+            t_serial / par_secs[1],
+            t_serial / par_secs[2],
+        );
+        let row = Json::obj(vec![
+            ("m", Json::from(*m)),
+            ("q", Json::from(*q)),
+            ("n", Json::from(*n)),
+            ("serial_secs", Json::from(*t_serial)),
+            ("threads_2_secs", Json::from(par_secs[0])),
+            ("threads_4_secs", Json::from(par_secs[1])),
+            ("threads_8_secs", Json::from(par_secs[2])),
+            ("speedup_2t", Json::from(t_serial / par_secs[0])),
+            ("speedup_4t", Json::from(t_serial / par_secs[1])),
+            ("speedup_8t", Json::from(t_serial / par_secs[2])),
+        ]);
+        largest = Some(row.clone());
+        json_rows.push(row);
+    }
+
+    let host_threads =
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let section = Json::obj(vec![
+        ("bench", Json::from("bench_gvt_micro")),
+        ("host_threads", Json::from(host_threads)),
+        ("full", Json::from(full)),
+        ("rows", Json::Arr(json_rows)),
+        ("largest", largest.unwrap_or(Json::Null)),
+    ]);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_gvt_parallel.json");
+    match update_json_file(&out, "micro", section) {
+        Ok(()) => println!("\nwrote serial-vs-parallel results to {}", out.display()),
+        Err(err) => eprintln!("\nfailed to write {}: {err}", out.display()),
+    }
+    println!("bench_gvt_micro done");
 }

@@ -87,6 +87,7 @@ pub struct ExplicitSvm {
     /// Training concatenated features (support-vector rows are the ones
     /// with non-zero `coef`).
     pub features: Matrix,
+    /// Kernel on the concatenated `[d,t]` features.
     pub kernel: KernelKind,
     /// SMO iterations actually executed.
     pub iterations: usize,

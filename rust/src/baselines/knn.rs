@@ -37,6 +37,7 @@ pub struct KnnModel {
 }
 
 impl KnnModel {
+    /// Memorize the training edges (builds a kd-tree when low-dimensional).
     pub fn fit(train: &Dataset, cfg: &KnnConfig) -> Result<KnnModel, String> {
         train.validate()?;
         if train.n_edges() == 0 {

@@ -13,13 +13,16 @@ use crate::util::rng::Pcg32;
 /// SGD loss selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SgdLossKind {
+    /// Hinge loss (L1-SVM).
     Hinge,
+    /// Logistic loss.
     Logistic,
 }
 
 /// SGD configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct SgdConfig {
+    /// Loss to optimize.
     pub loss: SgdLossKind,
     /// L2 regularization strength.
     pub lambda: f64,
@@ -27,6 +30,7 @@ pub struct SgdConfig {
     pub eta0: f64,
     /// Total number of stochastic updates (paper: 10⁶, or ≥ one epoch).
     pub updates: usize,
+    /// RNG seed for the sampling order.
     pub seed: u64,
 }
 
@@ -45,8 +49,11 @@ impl Default for SgdConfig {
 /// Trained linear SGD model.
 #[derive(Debug, Clone)]
 pub struct SgdModel {
+    /// Weights over concatenated `[d, t]` features.
     pub w: Vec<f64>,
+    /// Unregularized bias term.
     pub bias: f64,
+    /// Loss the model was trained with.
     pub loss: SgdLossKind,
 }
 

@@ -7,10 +7,15 @@ use crate::data::Dataset;
 /// Result of one CV fold job.
 #[derive(Debug, Clone)]
 pub struct CvJobResult {
+    /// Fold index (input order).
     pub fold: usize,
+    /// Test AUC the job returned.
     pub auc: f64,
+    /// Wall-clock seconds the job took.
     pub train_secs: f64,
+    /// Training edges in the fold.
     pub train_edges: usize,
+    /// Test edges in the fold.
     pub test_edges: usize,
 }
 

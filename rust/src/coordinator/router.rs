@@ -46,7 +46,9 @@ impl Default for RouterConfig {
 /// Per-route call counters (observability).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct RouteStats {
+    /// Matvecs executed by the native GVT loops.
     pub native_calls: usize,
+    /// Matvecs executed by PJRT artifacts.
     pub pjrt_calls: usize,
 }
 
@@ -93,10 +95,12 @@ impl Router {
         Router::native_only(cfg)
     }
 
+    /// Per-route call counters so far.
     pub fn stats(&self) -> RouteStats {
         *self.stats.borrow()
     }
 
+    /// Whether a PJRT artifact registry is attached.
     pub fn has_pjrt(&self) -> bool {
         self.registry.is_some()
     }

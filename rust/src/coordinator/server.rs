@@ -39,19 +39,26 @@ pub struct PredictRequest {
 pub struct ServerConfig {
     /// Edge budget per merged batch.
     pub max_batch_edges: usize,
+    /// Worker threads per batched prediction matvec (`0` = all cores,
+    /// `1` = serial). The trained model is shared, not copied — the GVT
+    /// operators are `Sync`, so sharding a batch costs no extra memory.
+    pub threads: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_batch_edges: 65_536 }
+        ServerConfig { max_batch_edges: 65_536, threads: 1 }
     }
 }
 
 /// Running counters.
 #[derive(Debug, Default)]
 pub struct ServerStats {
+    /// Requests answered.
     pub requests: AtomicUsize,
+    /// Merged batches executed.
     pub batches: AtomicUsize,
+    /// Total edges scored.
     pub edges_scored: AtomicUsize,
 }
 
@@ -143,11 +150,11 @@ fn worker_loop(
                 Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
             }
         }
-        serve_batch(&model, batch, &stats);
+        serve_batch(&model, batch, &stats, cfg.threads);
     }
 }
 
-fn serve_batch(model: &DualModel, batch: Vec<PredictRequest>, stats: &ServerStats) {
+fn serve_batch(model: &DualModel, batch: Vec<PredictRequest>, stats: &ServerStats, threads: usize) {
     // Merge requests into one dataset with offset vertex indices.
     let d = model.train_start_features.cols();
     let r = model.train_end_features.cols();
@@ -201,7 +208,7 @@ fn serve_batch(model: &DualModel, batch: Vec<PredictRequest>, stats: &ServerStat
             labels: vec![0.0; n_scored],
             name: "server-batch".into(),
         };
-        model.predict(&ds)
+        model.predict_threaded(&ds, threads)
     } else {
         Vec::new()
     };
@@ -282,7 +289,8 @@ mod tests {
     #[test]
     fn concurrent_requests_are_all_answered() {
         let model = toy_model(1102);
-        let server = PredictServer::start(model, ServerConfig { max_batch_edges: 1000 });
+        let server =
+            PredictServer::start(model, ServerConfig { max_batch_edges: 1000, threads: 2 });
         let sender = server.sender();
         let mut replies = Vec::new();
         let mut rng = Pcg32::seeded(1103);

@@ -28,6 +28,7 @@ pub struct CheckerboardConfig {
     /// smaller range so that the vertex density per cell stays high enough
     /// for zero-shot generalization.
     pub feature_range: f64,
+    /// RNG seed (features, edge sampling, label noise).
     pub seed: u64,
 }
 

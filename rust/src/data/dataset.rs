@@ -30,10 +30,15 @@ pub struct Dataset {
 /// Table-5-style summary statistics.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DatasetStats {
+    /// Labeled edges `n`.
     pub edges: usize,
+    /// Edges with label > 0.
     pub positives: usize,
+    /// Edges with label ≤ 0.
     pub negatives: usize,
+    /// Start vertices `m`.
     pub start_vertices: usize,
+    /// End vertices `q`.
     pub end_vertices: usize,
 }
 

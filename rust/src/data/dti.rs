@@ -45,6 +45,7 @@ pub struct DtiConfig {
     pub feature_noise: f64,
     /// Label flip probability.
     pub flip: f64,
+    /// RNG seed (latents, features, edge sampling, label noise).
     pub seed: u64,
 }
 

@@ -35,8 +35,22 @@ pub struct GvtWorkspace {
 }
 
 impl GvtWorkspace {
+    /// Empty workspace; buffers grow on first use and are then reused.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Like `grab`, but without clearing: callers (the parallel engine's
+    /// stage-1 workers) are responsible for zeroing every region they
+    /// accumulate into.
+    pub(crate) fn grab_uncleared(&mut self, n1: usize, n2: usize) -> (&mut [f64], &mut [f64]) {
+        if self.stage.len() < n1 {
+            self.stage.resize(n1, 0.0);
+        }
+        if self.stage_t.len() < n2 {
+            self.stage_t.resize(n2, 0.0);
+        }
+        (&mut self.stage[..n1], &mut self.stage_t[..n2])
     }
 
     fn grab(&mut self, n1: usize, n2: usize) -> (&mut [f64], &mut [f64]) {
@@ -53,7 +67,8 @@ impl GvtWorkspace {
 }
 
 /// Blocked out-of-place transpose of a `rows×cols` row-major buffer.
-fn transpose_into(src: &[f64], rows: usize, cols: usize, dst: &mut [f64]) {
+/// Shared with [`super::engine`]'s parallel transpose as its serial fallback.
+pub(crate) fn transpose_into(src: &[f64], rows: usize, cols: usize, dst: &mut [f64]) {
     debug_assert_eq!(src.len(), rows * cols);
     debug_assert!(dst.len() >= rows * cols);
     const B: usize = 32;
@@ -147,6 +162,34 @@ pub fn gvt_apply_into(
             }
         }
     }
+}
+
+/// Multi-threaded [`gvt_apply_into`]: shards stage 1 by accumulation row,
+/// the blocked transpose by column blocks, and stage 2 by output chunks
+/// across `threads` scoped worker threads (see [`super::engine`]).
+///
+/// This convenience entry point builds the [`super::engine::EdgePlan`] on
+/// every call; loops should build the plan once and go through
+/// [`super::engine::GvtEngine::apply_planned`] (as [`super::operator`]'s
+/// operators do). The result is bitwise identical to the serial
+/// [`gvt_apply_into`] for every thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn gvt_apply_into_parallel(
+    m: &Matrix,
+    n: &Matrix,
+    m_t: &Matrix,
+    n_t: &Matrix,
+    rows: &KronIndex,
+    cols: &KronIndex,
+    v: &[f64],
+    u: &mut [f64],
+    ws: &mut GvtWorkspace,
+    branch: Option<Branch>,
+    threads: usize,
+) {
+    let plan = super::engine::EdgePlan::build(cols, m.cols(), n.cols());
+    super::engine::GvtEngine::new(threads)
+        .apply_planned(m, n, m_t, n_t, rows, cols, &plan, v, u, ws, branch);
 }
 
 /// Allocating convenience wrapper around [`gvt_apply_into`]; computes the

@@ -16,8 +16,12 @@
 //! Submodules:
 //! * [`algorithm`] — the two branches of Algorithm 1 (cache-transposed
 //!   layouts), automatic branch selection, zero-skipping for sparse `v`.
+//! * [`engine`] — the multi-threaded execution engine ([`GvtEngine`]) with
+//!   conflict-free stage-1 sharding via a precomputed [`EdgePlan`];
+//!   bitwise-deterministic for every thread count.
 //! * [`operator`] — [`LinOp`](crate::linalg::LinOp) wrappers: the training
 //!   kernel operator `R(G⊗K)Rᵀ`, Newton-system operators, prediction.
+//!   All operators are `Sync` and carry a `threads` knob.
 //! * [`dense`] — the scatter→GEMM→gather formulation used by the TPU/PJRT
 //!   path (see DESIGN.md §Hardware-Adaptation) as a native reference.
 //! * [`explicit`] — materialized baseline (`R(M⊗N)Cᵀ` built explicitly);
@@ -26,12 +30,14 @@
 //!   coordinator's native-vs-PJRT routing.
 
 pub mod algorithm;
+pub mod engine;
 pub mod operator;
 pub mod dense;
 pub mod explicit;
 pub mod complexity;
 
-pub use algorithm::{gvt_apply, gvt_apply_into, Branch, GvtWorkspace};
+pub use algorithm::{gvt_apply, gvt_apply_into, gvt_apply_into_parallel, Branch, GvtWorkspace};
+pub use engine::{EdgePlan, GvtEngine, WorkspacePool};
 pub use operator::{KronKernelOp, KronPredictOp, SvmNewtonOp};
 pub use complexity::{branch_costs, choose_branch};
 
@@ -65,6 +71,7 @@ impl KronIndex {
         self.left.len()
     }
 
+    /// Whether the index selects zero rows/columns.
     pub fn is_empty(&self) -> bool {
         self.left.is_empty()
     }

@@ -8,11 +8,18 @@
 //!   the transpose `Q·H + λI` for QMR.
 //! * [`KronPredictOp`] — zero-shot prediction `R̂(Ĝ⊗K̂)Rᵀ a` (§3.1) with the
 //!   sparse-coefficient shortcut of eq. (5).
+//!
+//! Every operator executes through the [`GvtEngine`](super::engine::GvtEngine)
+//! with a precomputed [`EdgePlan`](super::engine::EdgePlan); the `threads`
+//! knob (via [`KronKernelOp::with_threads`] / [`KronPredictOp::with_threads`])
+//! shards each matvec across cores with bitwise-deterministic results.
+//! Scratch buffers come from a [`WorkspacePool`], so the operators are `Sync`
+//! — `LinOp` consumers and the coordinator's batch worker can share one
+//! trained operator across threads.
 
-use std::cell::RefCell;
 use std::sync::Arc;
 
-use super::algorithm::{gvt_apply_into, GvtWorkspace};
+use super::engine::{EdgePlan, GvtEngine, WorkspacePool};
 use super::{Branch, KronIndex};
 use crate::linalg::solvers::LinOp;
 use crate::linalg::Matrix;
@@ -24,26 +31,57 @@ use crate::linalg::Matrix;
 /// (end-vertex, start-vertex) pair — `idx.left ∈ [q]`, `idx.right ∈ [m]`
 /// (matching `G ⊗ K` row ordering). Kernel matrices must be symmetric, so no
 /// transposes are stored and `Aᵀ = A`.
+///
+/// The operator is `Sync`: one trained operator may be applied from many
+/// threads at once (each apply draws its own scratch workspace from an
+/// internal pool), and each apply can itself be sharded across threads via
+/// [`KronKernelOp::with_threads`].
 pub struct KronKernelOp {
     g: Arc<Matrix>,
     k: Arc<Matrix>,
     idx: KronIndex,
-    ws: RefCell<GvtWorkspace>,
+    plan: EdgePlan,
+    engine: GvtEngine,
+    pool: WorkspacePool,
     branch: Option<Branch>,
 }
 
 impl KronKernelOp {
+    /// Build the operator from symmetric kernel matrices and the training
+    /// edge index. Runs single-threaded until [`KronKernelOp::with_threads`]
+    /// is applied.
     pub fn new(g: Arc<Matrix>, k: Arc<Matrix>, idx: KronIndex) -> Self {
         assert_eq!(g.rows(), g.cols(), "G must be square");
         assert_eq!(k.rows(), k.cols(), "K must be square");
         idx.validate(g.rows(), k.rows()).expect("edge indices out of bounds");
-        KronKernelOp { g, k, idx, ws: RefCell::new(GvtWorkspace::new()), branch: None }
+        let plan = EdgePlan::build(&idx, g.cols(), k.cols());
+        KronKernelOp {
+            g,
+            k,
+            idx,
+            plan,
+            engine: GvtEngine::serial(),
+            pool: WorkspacePool::new(),
+            branch: None,
+        }
     }
 
     /// Force a specific branch of Algorithm 1 (benchmarks / tests).
     pub fn with_branch(mut self, branch: Branch) -> Self {
         self.branch = Some(branch);
         self
+    }
+
+    /// Shard every matvec over `threads` worker threads (`0` = all cores,
+    /// `1` = serial). Results are bitwise identical for every thread count.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.engine = GvtEngine::new(threads);
+        self
+    }
+
+    /// Worker threads used per matvec.
+    pub fn threads(&self) -> usize {
+        self.engine.threads()
     }
 
     /// Number of training edges `n`.
@@ -61,24 +99,29 @@ impl KronKernelOp {
         self.k.rows()
     }
 
+    /// The training edge index.
     pub fn index(&self) -> &KronIndex {
         &self.idx
     }
 
+    /// The end-vertex kernel matrix `G`.
     pub fn g(&self) -> &Arc<Matrix> {
         &self.g
     }
 
+    /// The start-vertex kernel matrix `K`.
     pub fn k(&self) -> &Arc<Matrix> {
         &self.k
     }
 
     /// `u ← Q v`. Zero entries of `v` are skipped (sparse shortcut).
     pub fn apply_into(&self, v: &[f64], u: &mut [f64]) {
-        let mut ws = self.ws.borrow_mut();
-        gvt_apply_into(
-            &self.g, &self.k, &self.g, &self.k, &self.idx, &self.idx, v, u, &mut ws, self.branch,
-        );
+        self.pool.with(|ws| {
+            self.engine.apply_planned(
+                &self.g, &self.k, &self.g, &self.k, &self.idx, &self.idx, &self.plan, v, u, ws,
+                self.branch,
+            );
+        });
     }
 
     /// Diagonal of `Q`: `Q[h,h] = G[s_h,s_h]·K[r_h,r_h]` (used by SMO-style
@@ -106,7 +149,9 @@ impl LinOp for KronKernelOp {
 
 /// `Q + λI` — the Kronecker ridge regression system (§4.1), symmetric PD.
 pub struct RidgeSystemOp<'a> {
+    /// The kernel operator `Q`.
     pub op: &'a KronKernelOp,
+    /// Regularization parameter λ.
     pub lambda: f64,
 }
 
@@ -134,6 +179,7 @@ pub struct SvmNewtonOp<'a> {
 }
 
 impl<'a> SvmNewtonOp<'a> {
+    /// Wrap the kernel operator with an active-set mask (0/1 entries) and λ.
     pub fn new(op: &'a KronKernelOp, mask: Vec<f64>, lambda: f64) -> Self {
         assert_eq!(mask.len(), op.dim());
         assert!(mask.iter().all(|&m| m == 0.0 || m == 1.0), "mask must be 0/1");
@@ -178,6 +224,10 @@ impl LinOp for SvmNewtonOp<'_> {
 ///
 /// Cost `O(min(v·n + m·t, u·n + q·t))`, and with a sparse dual vector the
 /// `n` terms become `‖a‖₀` (eq. 5) because stage 1 skips zeros.
+///
+/// Like [`KronKernelOp`], the operator is `Sync` and shards each prediction
+/// across threads via [`KronPredictOp::with_threads`] — this is what lets
+/// the serving coordinator score batches with one shared trained model.
 pub struct KronPredictOp {
     ghat: Matrix,
     khat: Matrix,
@@ -185,15 +235,21 @@ pub struct KronPredictOp {
     khat_t: Matrix,
     test_idx: KronIndex,
     train_idx: KronIndex,
-    ws: RefCell<GvtWorkspace>,
+    plan: EdgePlan,
+    engine: GvtEngine,
+    pool: WorkspacePool,
 }
 
 impl KronPredictOp {
+    /// Build the prediction operator from test–train kernel blocks and the
+    /// two edge indices. Runs single-threaded until
+    /// [`KronPredictOp::with_threads`] is applied.
     pub fn new(ghat: Matrix, khat: Matrix, test_idx: KronIndex, train_idx: KronIndex) -> Self {
         test_idx.validate(ghat.rows(), khat.rows()).expect("test indices out of bounds");
         train_idx.validate(ghat.cols(), khat.cols()).expect("train indices out of bounds");
         let ghat_t = ghat.transpose();
         let khat_t = khat.transpose();
+        let plan = EdgePlan::build(&train_idx, ghat.cols(), khat.cols());
         KronPredictOp {
             ghat,
             khat,
@@ -201,8 +257,17 @@ impl KronPredictOp {
             khat_t,
             test_idx,
             train_idx,
-            ws: RefCell::new(GvtWorkspace::new()),
+            plan,
+            engine: GvtEngine::serial(),
+            pool: WorkspacePool::new(),
         }
+    }
+
+    /// Shard every prediction over `threads` worker threads (`0` = all
+    /// cores, `1` = serial).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.engine = GvtEngine::new(threads);
+        self
     }
 
     /// Number of test edges `t`.
@@ -218,20 +283,23 @@ impl KronPredictOp {
         p
     }
 
+    /// [`KronPredictOp::predict`] into a preallocated output buffer.
     pub fn predict_into(&self, a: &[f64], out: &mut [f64]) {
-        let mut ws = self.ws.borrow_mut();
-        gvt_apply_into(
-            &self.ghat,
-            &self.khat,
-            &self.ghat_t,
-            &self.khat_t,
-            &self.test_idx,
-            &self.train_idx,
-            a,
-            out,
-            &mut ws,
-            None,
-        );
+        self.pool.with(|ws| {
+            self.engine.apply_planned(
+                &self.ghat,
+                &self.khat,
+                &self.ghat_t,
+                &self.khat_t,
+                &self.test_idx,
+                &self.train_idx,
+                &self.plan,
+                a,
+                out,
+                ws,
+                None,
+            );
+        });
     }
 }
 
@@ -239,7 +307,7 @@ impl KronPredictOp {
 mod tests {
     use super::*;
     use crate::gvt::explicit::explicit_apply;
-    use crate::linalg::solvers::{cg, minres, qmr, SolverConfig};
+    use crate::linalg::solvers::{cg, minres, qmr, LinOp, SolverConfig};
     use crate::linalg::vecops::assert_allclose;
     use crate::util::rng::Pcg32;
 
@@ -262,6 +330,16 @@ mod tests {
         )
     }
 
+    fn assert_sync<T: Sync>() {}
+
+    #[test]
+    fn operators_are_sync() {
+        assert_sync::<KronKernelOp>();
+        assert_sync::<KronPredictOp>();
+        assert_sync::<RidgeSystemOp<'static>>();
+        assert_sync::<SvmNewtonOp<'static>>();
+    }
+
     #[test]
     fn kernel_op_matches_explicit() {
         let mut rng = Pcg32::seeded(80);
@@ -274,6 +352,48 @@ mod tests {
         let fast = op.apply_vec(&v);
         let slow = explicit_apply(&g, &k, &idx, &idx, &v);
         assert_allclose(&fast, &slow, 1e-10, 1e-10);
+    }
+
+    #[test]
+    fn threaded_kernel_op_matches_serial() {
+        let mut rng = Pcg32::seeded(87);
+        let (q, m, n) = (12, 11, 3000);
+        let g = Arc::new(random_kernel(&mut rng, q));
+        let k = Arc::new(random_kernel(&mut rng, m));
+        let idx = random_edges(&mut rng, q, m, n);
+        let v = rng.normal_vec(n);
+        let serial = KronKernelOp::new(g.clone(), k.clone(), idx.clone());
+        let expect = serial.apply_vec(&v);
+        for threads in [2, 4] {
+            let op = KronKernelOp::new(g.clone(), k.clone(), idx.clone()).with_threads(threads);
+            assert_eq!(op.threads(), threads);
+            assert_eq!(op.apply_vec(&v), expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn shared_operator_serves_concurrent_callers() {
+        let mut rng = Pcg32::seeded(88);
+        let (q, m, n) = (10, 10, 2500);
+        let g = Arc::new(random_kernel(&mut rng, q));
+        let k = Arc::new(random_kernel(&mut rng, m));
+        let idx = random_edges(&mut rng, q, m, n);
+        let op = Arc::new(KronKernelOp::new(g, k, idx).with_threads(2));
+        let vs: Vec<Vec<f64>> = (0..4).map(|_| rng.normal_vec(n)).collect();
+        let expect: Vec<Vec<f64>> = vs.iter().map(|v| op.apply_vec(v)).collect();
+        let results: Vec<Vec<f64>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = vs
+                .iter()
+                .map(|v| {
+                    let op = Arc::clone(&op);
+                    scope.spawn(move || op.apply_vec(v))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (got, want) in results.iter().zip(&expect) {
+            assert_eq!(got, want);
+        }
     }
 
     #[test]

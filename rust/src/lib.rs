@@ -15,7 +15,9 @@
 //!
 //! without materializing the Kronecker product, where `R`/`C` are row/column
 //! index matrices selecting the edges that actually occur in the (sparse,
-//! non-complete) training graph.
+//! non-complete) training graph. The [`gvt::GvtEngine`] shards that matvec
+//! across cores with bitwise-deterministic results; every trainer exposes it
+//! as a `threads` knob (see the quickstart below).
 //!
 //! ## Architecture (three layers)
 //!
@@ -48,6 +50,7 @@
 //!     kernel_d: KernelKind::Gaussian { gamma: 1.0 },
 //!     kernel_t: KernelKind::Gaussian { gamma: 1.0 },
 //!     iterations: 100,
+//!     threads: 0, // shard every GVT matvec across all cores
 //!     ..Default::default()
 //! })
 //! .fit(&train)
@@ -55,6 +58,8 @@
 //! let scores = model.predict(&test);
 //! println!("AUC = {:.3}", auc(&test.labels, &scores));
 //! ```
+
+#![warn(missing_docs)]
 
 pub mod util;
 pub mod linalg;

@@ -59,28 +59,33 @@ impl Matrix {
         Matrix { rows: r, cols: c, data }
     }
 
+    /// Number of rows.
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns.
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Element at `(i, j)`.
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> f64 {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[i * self.cols + j]
     }
 
+    /// Overwrite element `(i, j)`.
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, v: f64) {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[i * self.cols + j] = v;
     }
 
+    /// Accumulate `v` into element `(i, j)`.
     #[inline]
     pub fn add_at(&mut self, i: usize, j: usize, v: f64) {
         debug_assert!(i < self.rows && j < self.cols);
@@ -106,6 +111,7 @@ impl Matrix {
         &self.data
     }
 
+    /// Mutable raw data (row-major).
     pub fn data_mut(&mut self) -> &mut [f64] {
         &mut self.data
     }

@@ -67,8 +67,11 @@ where
     F: Fn(&[f64], &mut [f64]),
     G: Fn(&[f64], &mut [f64]),
 {
+    /// Operator dimension.
     pub n: usize,
+    /// Forward product `y ← A x`.
     pub fwd: F,
+    /// Transpose product `y ← Aᵀ x`.
     pub tr: G,
 }
 
@@ -117,6 +120,7 @@ impl Default for SolverConfig {
 }
 
 impl SolverConfig {
+    /// Default tolerance with an explicit iteration cap.
     pub fn with_iters(max_iters: usize) -> Self {
         SolverConfig { max_iters, ..Default::default() }
     }

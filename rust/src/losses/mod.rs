@@ -9,6 +9,7 @@
 
 /// A convex loss `L(p, y)` over prediction and label vectors.
 pub trait Loss: Send + Sync {
+    /// Short name for CLI lookup and logs.
     fn name(&self) -> &'static str;
 
     /// Loss value.

@@ -51,6 +51,9 @@ fn train_and_eval(
 ) -> Result<f64, String> {
     let lambda = args.get_f64("lambda", 1e-4);
     let kernel = KernelKind::parse(&args.get_str("kernel", "linear"))?;
+    // GVT matvec parallelism (0 = all cores); results are identical for
+    // every thread count, only faster.
+    let threads = args.get_usize("threads", 1);
     let scores = match method {
         "kronsvm" => {
             let cfg = SvmConfig {
@@ -59,9 +62,10 @@ fn train_and_eval(
                 kernel_t: kernel,
                 outer_iters: args.get_usize("outer", 10),
                 inner_iters: args.get_usize("inner", 10),
+                threads,
                 ..Default::default()
             };
-            KronSvm::new(cfg).fit(train)?.predict(test)
+            KronSvm::new(cfg).fit(train)?.predict_threaded(test, threads)
         }
         "kronridge" => {
             let cfg = RidgeConfig {
@@ -69,9 +73,10 @@ fn train_and_eval(
                 kernel_d: kernel,
                 kernel_t: kernel,
                 iterations: args.get_usize("iterations", 100),
+                threads,
                 ..Default::default()
             };
-            KronRidge::new(cfg).fit(train)?.predict(test)
+            KronRidge::new(cfg).fit(train)?.predict_threaded(test, threads)
         }
         "libsvm" => {
             let cfg = ExplicitSvmConfig {
@@ -139,8 +144,16 @@ fn cmd_cv(args: &Args) -> Result<(), String> {
     let seed = args.get_u64("seed", 1);
     let ds = load_dataset(&data, seed, args.get_f64("scale", 1.0))?;
     let folds = ds.ninefold_cv(seed);
-    let threads = args.get_usize("threads", 1);
-    let results = run_cv_jobs(&folds, threads, |tr, te| {
+    // Fold-level parallelism; combine with --threads (per-matvec sharding)
+    // carefully — the product of the two should not exceed the core count.
+    let fold_workers = args.get_usize("fold-workers", 1);
+    if args.has("threads") && !args.has("fold-workers") {
+        eprintln!(
+            "note: `cv --threads` now shards each GVT matvec; use --fold-workers N \
+             to train folds concurrently (the pre-engine meaning of --threads)"
+        );
+    }
+    let results = run_cv_jobs(&folds, fold_workers, |tr, te| {
         train_and_eval(&method, tr, te, args).unwrap_or(f64::NAN)
     });
     for r in &results {
@@ -158,17 +171,19 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let seed = args.get_u64("seed", 1);
     let ds = load_dataset(&args.get_str("data", "checker"), seed, args.get_f64("scale", 0.06))?;
     let (train, _) = ds.zero_shot_split(0.25, seed);
+    let threads = args.get_usize("threads", 0);
     let cfg = SvmConfig {
         lambda: args.get_f64("lambda", 2f64.powi(-7)),
         kernel_d: KernelKind::Gaussian { gamma: 1.0 },
         kernel_t: KernelKind::Gaussian { gamma: 1.0 },
+        threads,
         ..Default::default()
     };
     println!("training model on {} edges...", train.n_edges());
     let model = KronSvm::new(cfg).fit(&train)?;
     let d = model.train_start_features.cols();
     let r = model.train_end_features.cols();
-    let server = PredictServer::start(model, ServerConfig::default());
+    let server = PredictServer::start(model, ServerConfig { threads, ..Default::default() });
 
     let n_requests = args.get_usize("requests", 100);
     let mut rng = Pcg32::seeded(seed ^ 0x5E7);
@@ -200,10 +215,17 @@ fn cmd_artifacts(args: &Args) -> Result<(), String> {
         println!("no artifact manifest at {dir}/ — run `make artifacts` (native paths still work)");
         return Ok(());
     }
-    let reg = kronvt::runtime::ArtifactRegistry::open(&dir).map_err(|e| e.to_string())?;
-    println!("{} artifacts in {dir}/:", reg.manifest.artifacts.len());
-    for a in &reg.manifest.artifacts {
+    // List the manifest without opening a PJRT client, so this works even in
+    // builds without the `pjrt` feature.
+    let manifest = kronvt::runtime::ArtifactManifest::load(std::path::Path::new(&dir))
+        .map_err(|e| e.to_string())?;
+    println!("{} artifacts in {dir}/:", manifest.artifacts.len());
+    for a in &manifest.artifacts {
         println!("  {:<40} kind={:<16} file={}", a.name, a.kind, a.file);
+    }
+    match kronvt::runtime::ArtifactRegistry::open(&dir) {
+        Ok(_) => println!("PJRT client: available"),
+        Err(err) => println!("PJRT client: unavailable ({err}); native GVT paths still work"),
     }
     Ok(())
 }
@@ -218,7 +240,9 @@ fn usage() -> ! {
            serve      run the batched zero-shot prediction server demo\n\
            artifacts  show the PJRT artifact registry status\n\
          common flags: --data checker|checker+|ki|gpcr|ic|e --method kronsvm|kronridge|libsvm|sgd-hinge|sgd-logistic|knn\n\
-                       --kernel linear|gaussian:G --lambda L --seed S --scale F"
+                       --kernel linear|gaussian:G --lambda L --seed S --scale F\n\
+                       --threads N   GVT matvec worker threads (0 = all cores; identical results, just faster)\n\
+                       --fold-workers N   (cv only) train folds concurrently"
     );
     std::process::exit(2)
 }

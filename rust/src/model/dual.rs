@@ -67,6 +67,13 @@ impl DualModel {
         self.predict_op(test).predict(&self.dual_coef)
     }
 
+    /// [`DualModel::predict`] with the GVT matvec sharded over `threads`
+    /// worker threads (`0` = all cores, `1` = serial). Scores are bitwise
+    /// identical to the serial path for every thread count.
+    pub fn predict_threaded(&self, test: &Dataset, threads: usize) -> Vec<f64> {
+        self.predict_op(test).with_threads(threads).predict(&self.dual_coef)
+    }
+
     /// Explicit ("Baseline") decision function: evaluates the edge kernel
     /// between every test edge and every support vector, `O(t·‖a‖₀)` kernel
     /// evaluations — the decision function a standard kernel-SVM package

@@ -67,6 +67,7 @@ pub struct PrimalKronOp {
 }
 
 impl PrimalKronOp {
+    /// Operator over a dataset's features and edges (copies both).
     pub fn new(dataset: &Dataset) -> PrimalKronOp {
         PrimalKronOp {
             d: dataset.start_features.clone(),
@@ -76,6 +77,7 @@ impl PrimalKronOp {
         }
     }
 
+    /// Number of training edges `n`.
     pub fn n_edges(&self) -> usize {
         self.start_idx.len()
     }
@@ -124,10 +126,12 @@ impl PrimalKronOp {
 /// The primal Newton-system operator `Xᵀ·diag(h)·X + λI` (line 5 of
 /// Algorithm 3) — symmetric PSD, solvable by CG/MINRES.
 pub struct PrimalNewtonOp<'a> {
+    /// The primal design operator `X`.
     pub op: &'a PrimalKronOp,
     /// Diagonal of the loss Hessian at the current point (`h ∈ {0,1}ⁿ` for
     /// L2-SVM, all-ones for ridge).
     pub hess_diag: Vec<f64>,
+    /// Regularization parameter λ.
     pub lambda: f64,
 }
 

@@ -8,13 +8,13 @@
 //! gracefully when the registry is absent — the native GVT path is always
 //! available.
 
-use anyhow::{anyhow, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 use super::pjrt::{Arg, PjrtContext, PjrtExecutable};
+use super::{Result, RuntimeError};
 use crate::gvt::KronIndex;
 use crate::linalg::Matrix;
 use crate::util::json::Json;
@@ -22,14 +22,18 @@ use crate::util::json::Json;
 /// One artifact entry from the manifest.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// Artifact name (manifest key, also the compile-cache key).
     pub name: String,
+    /// Artifact kind (`kron_mv`, `gaussian_kernel`, `ridge_train`, …).
     pub kind: String,
+    /// HLO-text file name relative to the artifact directory.
     pub file: String,
     /// Static dimensions (e.g. m, q, n, iters, rows, cols, dim).
     pub dims: HashMap<String, usize>,
 }
 
 impl ArtifactSpec {
+    /// Static dimension by key (0 when absent).
     pub fn dim(&self, key: &str) -> usize {
         *self.dims.get(key).unwrap_or(&0)
     }
@@ -38,15 +42,19 @@ impl ArtifactSpec {
 /// Parsed `manifest.json`.
 #[derive(Debug, Clone)]
 pub struct ArtifactManifest {
+    /// All artifact entries, in manifest order.
     pub artifacts: Vec<ArtifactSpec>,
 }
 
 impl ArtifactManifest {
+    /// Parse `manifest.json` under `dir`.
     pub fn load(dir: &Path) -> Result<ArtifactManifest> {
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
-        let json = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            RuntimeError::msg(format!("reading {path:?} (run `make artifacts`): {e}"))
+        })?;
+        let json =
+            Json::parse(&text).map_err(|e| RuntimeError::msg(format!("parsing manifest: {e}")))?;
         let mut artifacts = Vec::new();
         for item in json.get("artifacts").and_then(|a| a.as_arr()).unwrap_or(&[]) {
             let name = item.get("name").and_then(|v| v.as_str()).unwrap_or_default().to_string();
@@ -69,6 +77,7 @@ impl ArtifactManifest {
 /// Lazily-compiling artifact registry.
 pub struct ArtifactRegistry {
     dir: PathBuf,
+    /// The parsed manifest (artifact names, kinds, files, dims).
     pub manifest: ArtifactManifest,
     ctx: PjrtContext,
     cache: RefCell<HashMap<String, Rc<PjrtExecutable>>>,
@@ -116,7 +125,9 @@ impl ArtifactRegistry {
         let (m, q, n) = (k.rows(), g.rows(), idx.len());
         let spec = self
             .find_bucket("kron_mv", &[("m", m), ("q", q), ("n", n)])
-            .ok_or_else(|| anyhow!("no kron_mv bucket covers m={m}, q={q}, n={n}"))?
+            .ok_or_else(|| {
+                RuntimeError::msg(format!("no kron_mv bucket covers m={m}, q={q}, n={n}"))
+            })?
             .clone();
         let (bm, bq, bn) = (spec.dim("m"), spec.dim("q"), spec.dim("n"));
         let exe = self.executable(&spec)?;
@@ -149,7 +160,9 @@ impl ArtifactRegistry {
         assert_eq!(x2.cols(), d);
         let spec = self
             .find_bucket("gaussian_kernel", &[("rows", r1), ("cols", r2), ("dim", d)])
-            .ok_or_else(|| anyhow!("no gaussian_kernel bucket covers {r1}x{r2} d={d}"))?
+            .ok_or_else(|| {
+                RuntimeError::msg(format!("no gaussian_kernel bucket covers {r1}x{r2} d={d}"))
+            })?
             .clone();
         let (br, bc, bd) = (spec.dim("rows"), spec.dim("cols"), spec.dim("dim"));
         let exe = self.executable(&spec)?;
@@ -185,7 +198,9 @@ impl ArtifactRegistry {
         let (m, q, n) = (k.rows(), g.rows(), idx.len());
         let spec = self
             .find_bucket("ridge_train", &[("m", m), ("q", q), ("n", n)])
-            .ok_or_else(|| anyhow!("no ridge_train bucket covers m={m}, q={q}, n={n}"))?
+            .ok_or_else(|| {
+                RuntimeError::msg(format!("no ridge_train bucket covers m={m}, q={q}, n={n}"))
+            })?
             .clone();
         let (bm, bq, bn) = (spec.dim("m"), spec.dim("q"), spec.dim("n"));
         let exe = self.executable(&spec)?;
@@ -217,9 +232,9 @@ impl ArtifactRegistry {
         // If there is no padded vertex (bm == m), padded edges would alias a
         // real vertex; guard against that combination.
         if bn > n && (bm == m || bq == q) {
-            return Err(anyhow!(
+            return Err(RuntimeError::msg(format!(
                 "ridge_train bucket lacks padding headroom (bm={bm}, m={m}, bq={bq}, q={q})"
-            ));
+            )));
         }
         let lambda32 = [lambda as f32];
         let outputs = exe.run(&[

@@ -1,8 +1,38 @@
 //! PJRT runtime: load AOT-compiled HLO-text artifacts (produced by
 //! `python/compile/aot.py`) and execute them from the Rust hot path.
+//!
+//! The actual XLA/PJRT backing is gated behind the `pjrt` cargo feature
+//! (it needs the external `xla` crate, unavailable in offline builds).
+//! Without it, [`pjrt::PjrtContext::cpu`] returns an error and every caller
+//! — the [`coordinator::Router`](crate::coordinator::Router), the benches,
+//! the CLI — degrades gracefully to the native GVT path, which is always
+//! available.
 
 pub mod pjrt;
 pub mod artifacts;
 
 pub use artifacts::{ArtifactManifest, ArtifactRegistry};
 pub use pjrt::PjrtExecutable;
+
+/// Error raised by the artifact/PJRT runtime (manifest parsing, compilation,
+/// execution, or the `pjrt` feature being disabled).
+#[derive(Debug, Clone)]
+pub struct RuntimeError(String);
+
+impl RuntimeError {
+    /// Build an error from any displayable message.
+    pub fn msg(msg: impl Into<String>) -> RuntimeError {
+        RuntimeError(msg.into())
+    }
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Result alias for runtime operations.
+pub type Result<T> = std::result::Result<T, RuntimeError>;

@@ -1,91 +1,171 @@
-//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//! Thin wrapper over the `xla` crate's PJRT CPU client, gated behind the
+//! `pjrt` cargo feature.
 //!
 //! The interchange format is **HLO text** (not serialized `HloModuleProto`):
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
 //! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
 //! (see `/opt/xla-example/README.md` and `python/compile/aot.py`).
+//!
+//! Without the feature (the default — the `xla` crate is not vendored), the
+//! same API surface exists but every entry point returns a
+//! [`RuntimeError`](super::RuntimeError), so callers keep a single code path
+//! and fall back to the native GVT loops.
 
-use anyhow::{Context, Result};
 use std::path::Path;
 
-/// A PJRT client (CPU). Construct once and share.
-pub struct PjrtContext {
-    client: xla::PjRtClient,
-}
-
-impl PjrtContext {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<PjrtContext> {
-        Ok(PjrtContext { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
-    }
-
-    pub fn platform_name(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load an HLO-text file and compile it into an executable.
-    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<PjrtExecutable> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling HLO module {path:?}"))?;
-        Ok(PjrtExecutable {
-            exe,
-            name: path.file_stem().map(|s| s.to_string_lossy().to_string()).unwrap_or_default(),
-        })
-    }
-}
+use super::{Result, RuntimeError};
 
 /// Typed tensor argument for executions.
 pub enum Arg<'a> {
+    /// f32 buffer with its dimensions.
     F32(&'a [f32], &'a [i64]),
+    /// i32 buffer with its dimensions.
     I32(&'a [i32], &'a [i64]),
 }
 
-/// A compiled PJRT executable.
-pub struct PjrtExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    name: String,
-}
+#[cfg(feature = "pjrt")]
+mod backed {
+    use super::*;
 
-impl PjrtExecutable {
-    pub fn name(&self) -> &str {
-        &self.name
+    /// A PJRT client (CPU). Construct once and share.
+    pub struct PjrtContext {
+        client: xla::PjRtClient,
     }
 
-    /// Execute with typed inputs; returns each output of the result tuple as
-    /// a flat f32 vector. (All artifacts are lowered with
-    /// `return_tuple=True`, so the single on-device output is a tuple.)
-    pub fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
-        let literals: Vec<xla::Literal> = args
-            .iter()
-            .map(|arg| -> Result<xla::Literal> {
-                Ok(match arg {
-                    Arg::F32(data, dims) => {
-                        xla::Literal::vec1(data).reshape(dims).context("reshaping f32 input")?
-                    }
-                    Arg::I32(data, dims) => {
-                        xla::Literal::vec1(data).reshape(dims).context("reshaping i32 input")?
-                    }
-                })
+    impl PjrtContext {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<PjrtContext> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| RuntimeError::msg(format!("creating PJRT CPU client: {e}")))?;
+            Ok(PjrtContext { client })
+        }
+
+        /// Platform name reported by the client (e.g. "cpu").
+        pub fn platform_name(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load an HLO-text file and compile it into an executable.
+        pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<PjrtExecutable> {
+            let path = path.as_ref();
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| RuntimeError::msg(format!("parsing HLO text {path:?}: {e}")))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| RuntimeError::msg(format!("compiling HLO module {path:?}: {e}")))?;
+            Ok(PjrtExecutable {
+                exe,
+                name: path.file_stem().map(|s| s.to_string_lossy().to_string()).unwrap_or_default(),
             })
-            .collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals).context("executing")?;
-        let out = result[0][0].to_literal_sync().context("fetching result")?;
-        let parts = out.to_tuple().context("decomposing result tuple")?;
-        parts
-            .into_iter()
-            .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
-            .collect()
+        }
+    }
+
+    /// A compiled PJRT executable.
+    pub struct PjrtExecutable {
+        exe: xla::PjRtLoadedExecutable,
+        name: String,
+    }
+
+    impl PjrtExecutable {
+        /// The artifact's file-stem name.
+        pub fn name(&self) -> &str {
+            &self.name
+        }
+
+        /// Execute with typed inputs; returns each output of the result
+        /// tuple as a flat f32 vector. (All artifacts are lowered with
+        /// `return_tuple=True`, so the single on-device output is a tuple.)
+        pub fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+            let err = |what: &str| move |e| RuntimeError::msg(format!("{what}: {e}"));
+            let literals: Vec<xla::Literal> = args
+                .iter()
+                .map(|arg| -> Result<xla::Literal> {
+                    Ok(match arg {
+                        Arg::F32(data, dims) => xla::Literal::vec1(data)
+                            .reshape(dims)
+                            .map_err(err("reshaping f32 input"))?,
+                        Arg::I32(data, dims) => xla::Literal::vec1(data)
+                            .reshape(dims)
+                            .map_err(err("reshaping i32 input"))?,
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let result = self.exe.execute::<xla::Literal>(&literals).map_err(err("executing"))?;
+            let out = result[0][0].to_literal_sync().map_err(err("fetching result"))?;
+            let parts = out.to_tuple().map_err(err("decomposing result tuple"))?;
+            parts
+                .into_iter()
+                .map(|lit| lit.to_vec::<f32>().map_err(err("reading f32 output")))
+                .collect()
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod backed {
+    use super::*;
+
+    const DISABLED: &str =
+        "kronvt was built without the `pjrt` feature; PJRT artifacts are unavailable \
+         (the native GVT path covers every operation)";
+
+    /// A PJRT client (CPU). Stub: construction always fails without the
+    /// `pjrt` feature, and callers fall back to the native path.
+    pub struct PjrtContext {
+        _private: (),
+    }
+
+    impl PjrtContext {
+        /// Create a CPU PJRT client. Always errors in this build.
+        pub fn cpu() -> Result<PjrtContext> {
+            Err(RuntimeError::msg(DISABLED))
+        }
+
+        /// Platform name reported by the client.
+        pub fn platform_name(&self) -> String {
+            "disabled".to_string()
+        }
+
+        /// Load an HLO-text file and compile it into an executable. Always
+        /// errors in this build.
+        pub fn load_hlo_text<P: AsRef<Path>>(&self, _path: P) -> Result<PjrtExecutable> {
+            Err(RuntimeError::msg(DISABLED))
+        }
+    }
+
+    /// A compiled PJRT executable (stub: cannot be constructed without the
+    /// `pjrt` feature).
+    pub struct PjrtExecutable {
+        _private: (),
+    }
+
+    impl PjrtExecutable {
+        /// The artifact's file-stem name.
+        pub fn name(&self) -> &str {
+            "disabled"
+        }
+
+        /// Execute with typed inputs. Unreachable in this build (the stub
+        /// executable cannot be constructed), provided for API parity.
+        pub fn run(&self, _args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+            Err(RuntimeError::msg(DISABLED))
+        }
+    }
+}
+
+pub use backed::{PjrtContext, PjrtExecutable};
 
 #[cfg(test)]
 mod tests {
     // PJRT round-trip tests live in `rust/tests/artifact_roundtrip.rs`
     // (integration level) because they need `make artifacts` outputs.
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_context_reports_disabled() {
+        let err = super::PjrtContext::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("pjrt"));
+    }
 }

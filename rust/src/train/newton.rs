@@ -22,15 +22,25 @@ use crate::util::timer::Timer;
 /// Configuration for the generic truncated-Newton trainer.
 #[derive(Debug, Clone, Copy)]
 pub struct NewtonConfig {
+    /// Regularization parameter λ.
     pub lambda: f64,
+    /// Start-vertex kernel `k`.
     pub kernel_d: KernelKind,
+    /// End-vertex kernel `g`.
     pub kernel_t: KernelKind,
+    /// Outer (truncated Newton) iterations.
     pub outer_iters: usize,
+    /// Inner (QMR / CG) iterations per Newton step.
     pub inner_iters: usize,
     /// Step size δ (constant, as in the paper's experiments).
     pub delta: f64,
+    /// Record per-outer-iteration risk/AUC.
     pub trace: bool,
+    /// Early-stopping patience on validation AUC (0 disables).
     pub patience: usize,
+    /// Worker threads per GVT matvec (`0` = all cores, `1` = serial).
+    /// Results are bitwise identical for every thread count.
+    pub threads: usize,
 }
 
 impl Default for NewtonConfig {
@@ -44,17 +54,21 @@ impl Default for NewtonConfig {
             delta: 1.0,
             trace: false,
             patience: 0,
+            threads: 1,
         }
     }
 }
 
 /// Truncated-Newton trainer over an arbitrary [`Loss`].
 pub struct NewtonTrainer<L: Loss> {
+    /// Training configuration.
     pub cfg: NewtonConfig,
+    /// The loss being optimized.
     pub loss: L,
 }
 
 impl<L: Loss> NewtonTrainer<L> {
+    /// Trainer for `loss` with the given configuration.
     pub fn new(loss: L, cfg: NewtonConfig) -> Self {
         NewtonTrainer { cfg, loss }
     }
@@ -71,8 +85,9 @@ impl<L: Loss> NewtonTrainer<L> {
             return Err("empty training set".into());
         }
         let timer = Timer::start();
-        let op = dual_kernel_op(train, self.cfg.kernel_d, self.cfg.kernel_t);
-        let val_op = val.map(|v| validation_op(train, v, self.cfg.kernel_d, self.cfg.kernel_t));
+        let op = dual_kernel_op(train, self.cfg.kernel_d, self.cfg.kernel_t, self.cfg.threads);
+        let val_op = val
+            .map(|v| validation_op(train, v, self.cfg.kernel_d, self.cfg.kernel_t, self.cfg.threads));
         let y = &train.labels;
 
         let mut a = vec![0.0; n];
@@ -212,7 +227,7 @@ impl<L: Loss> NewtonTrainer<L> {
 
     /// Training-kernel operator access for diagnostics.
     pub fn kernel_op(&self, train: &Dataset) -> KronKernelOp {
-        dual_kernel_op(train, self.cfg.kernel_d, self.cfg.kernel_t)
+        dual_kernel_op(train, self.cfg.kernel_d, self.cfg.kernel_t, self.cfg.threads)
     }
 }
 

@@ -38,6 +38,9 @@ pub struct RidgeConfig {
     pub trace: bool,
     /// Early-stopping patience on validation AUC (0 disables).
     pub patience: usize,
+    /// Worker threads per GVT matvec (`0` = all cores, `1` = serial).
+    /// Results are bitwise identical for every thread count.
+    pub threads: usize,
 }
 
 impl Default for RidgeConfig {
@@ -50,6 +53,7 @@ impl Default for RidgeConfig {
             tol: 1e-9,
             trace: false,
             patience: 0,
+            threads: 1,
         }
     }
 }
@@ -57,18 +61,21 @@ impl Default for RidgeConfig {
 /// Kronecker ridge regression trainer.
 #[derive(Debug, Clone)]
 pub struct KronRidge {
+    /// Training configuration.
     pub cfg: RidgeConfig,
 }
 
-/// Build the dual training operator from a dataset.
+/// Build the dual training operator from a dataset, sharding matvecs over
+/// `threads` worker threads.
 pub(crate) fn dual_kernel_op(
     train: &Dataset,
     kernel_d: KernelKind,
     kernel_t: KernelKind,
+    threads: usize,
 ) -> KronKernelOp {
     let k = Arc::new(kernel_d.square_matrix(&train.start_features));
     let g = Arc::new(kernel_t.square_matrix(&train.end_features));
-    KronKernelOp::new(g, k, train.kron_index())
+    KronKernelOp::new(g, k, train.kron_index()).with_threads(threads)
 }
 
 /// Build a zero-shot prediction operator from training to validation edges.
@@ -77,13 +84,15 @@ pub(crate) fn validation_op(
     val: &Dataset,
     kernel_d: KernelKind,
     kernel_t: KernelKind,
+    threads: usize,
 ) -> KronPredictOp {
     let khat = kernel_matrix(kernel_d, &val.start_features, &train.start_features);
     let ghat = kernel_matrix(kernel_t, &val.end_features, &train.end_features);
-    KronPredictOp::new(ghat, khat, val.kron_index(), train.kron_index())
+    KronPredictOp::new(ghat, khat, val.kron_index(), train.kron_index()).with_threads(threads)
 }
 
 impl KronRidge {
+    /// Trainer with the given configuration.
     pub fn new(cfg: RidgeConfig) -> Self {
         KronRidge { cfg }
     }
@@ -106,8 +115,9 @@ impl KronRidge {
             return Err("empty training set".into());
         }
         let timer = Timer::start();
-        let op = dual_kernel_op(train, self.cfg.kernel_d, self.cfg.kernel_t);
-        let val_op = val.map(|v| validation_op(train, v, self.cfg.kernel_d, self.cfg.kernel_t));
+        let op = dual_kernel_op(train, self.cfg.kernel_d, self.cfg.kernel_t, self.cfg.threads);
+        let val_op = val
+            .map(|v| validation_op(train, v, self.cfg.kernel_d, self.cfg.kernel_t, self.cfg.threads));
         let sys = crate::gvt::operator::RidgeSystemOp { op: &op, lambda: self.cfg.lambda };
         let y = &train.labels;
         let mut a = vec![0.0; train.n_edges()];
@@ -203,7 +213,7 @@ impl KronRidge {
 /// Exact (direct) dual ridge solve via Cholesky on the materialized kernel
 /// matrix — `O(n³)`; testing oracle for small problems.
 pub fn ridge_exact_dual(train: &Dataset, cfg: &RidgeConfig) -> Vec<f64> {
-    let op = dual_kernel_op(train, cfg.kernel_d, cfg.kernel_t);
+    let op = dual_kernel_op(train, cfg.kernel_d, cfg.kernel_t, 1);
     let idx = train.kron_index();
     let mut q = crate::gvt::explicit::explicit_submatrix(op.g(), op.k(), &idx, &idx);
     q.add_diag(cfg.lambda);
@@ -311,5 +321,19 @@ mod tests {
     fn rejects_empty_training_set() {
         let ds = toy_train(404, 5, 5, 10).subset_by_edges(&[], "empty");
         assert!(KronRidge::new(RidgeConfig::default()).fit(&ds).is_err());
+    }
+
+    #[test]
+    fn threaded_training_matches_serial() {
+        // The threads knob must not change the trained model: parallel GVT
+        // matvecs are bitwise identical to serial ones, and MINRES is fully
+        // deterministic given identical matvecs.
+        let train = toy_train(405, 40, 40, 2600);
+        let base = RidgeConfig { lambda: 0.3, iterations: 40, tol: 1e-12, ..Default::default() };
+        let serial = KronRidge::new(base).fit(&train).unwrap();
+        for threads in [2, 4] {
+            let par = KronRidge::new(RidgeConfig { threads, ..base }).fit(&train).unwrap();
+            assert_eq!(serial.dual_coef, par.dual_coef, "threads={threads}");
+        }
     }
 }

@@ -29,7 +29,9 @@ use crate::util::timer::Timer;
 pub struct SvmConfig {
     /// Regularization parameter λ.
     pub lambda: f64,
+    /// Start-vertex kernel `k`.
     pub kernel_d: KernelKind,
+    /// End-vertex kernel `g`.
     pub kernel_t: KernelKind,
     /// Outer (truncated Newton) iterations — paper default 10.
     pub outer_iters: usize,
@@ -45,6 +47,9 @@ pub struct SvmConfig {
     /// each Newton step (inactive coordinates converge to 0; truncated inner
     /// solves leave numerical dust that would defeat the sparse shortcut).
     pub sparsity_threshold: f64,
+    /// Worker threads per GVT matvec (`0` = all cores, `1` = serial).
+    /// Results are bitwise identical for every thread count.
+    pub threads: usize,
 }
 
 impl Default for SvmConfig {
@@ -59,6 +64,7 @@ impl Default for SvmConfig {
             trace: false,
             patience: 0,
             sparsity_threshold: 1e-12,
+            threads: 1,
         }
     }
 }
@@ -66,10 +72,12 @@ impl Default for SvmConfig {
 /// Kronecker L2-SVM trainer.
 #[derive(Debug, Clone)]
 pub struct KronSvm {
+    /// Training configuration.
     pub cfg: SvmConfig,
 }
 
 impl KronSvm {
+    /// Trainer with the given configuration.
     pub fn new(cfg: SvmConfig) -> Self {
         KronSvm { cfg }
     }
@@ -96,8 +104,9 @@ impl KronSvm {
             }
         }
         let timer = Timer::start();
-        let op = dual_kernel_op(train, self.cfg.kernel_d, self.cfg.kernel_t);
-        let val_op = val.map(|v| validation_op(train, v, self.cfg.kernel_d, self.cfg.kernel_t));
+        let op = dual_kernel_op(train, self.cfg.kernel_d, self.cfg.kernel_t, self.cfg.threads);
+        let val_op = val
+            .map(|v| validation_op(train, v, self.cfg.kernel_d, self.cfg.kernel_t, self.cfg.threads));
         let y = &train.labels;
         let loss = L2SvmLoss;
 
@@ -275,7 +284,7 @@ mod tests {
             ..Default::default()
         };
         let model = KronSvm::new(cfg).fit(&train).unwrap();
-        let op = dual_kernel_op(&train, cfg.kernel_d, cfg.kernel_t);
+        let op = dual_kernel_op(&train, cfg.kernel_d, cfg.kernel_t, 1);
         let p = op.apply_vec(&model.dual_coef);
         let mask = L2SvmLoss::active_mask(&p, &train.labels);
         let resid: Vec<f64> = (0..30)
@@ -343,6 +352,17 @@ mod tests {
         let pd = dual.predict(&test);
         let pp = primal.predict(&test);
         assert_allclose(&pd, &pp, 2e-3, 2e-2);
+    }
+
+    #[test]
+    fn threaded_training_matches_serial() {
+        // Truncated Newton + QMR is deterministic given identical matvecs,
+        // and parallel matvecs are bitwise identical to serial ones.
+        let train = toy_train(505, 35, 35, 2200);
+        let base = SvmConfig { lambda: 0.1, outer_iters: 5, inner_iters: 8, ..Default::default() };
+        let serial = KronSvm::new(base).fit(&train).unwrap();
+        let par = KronSvm::new(SvmConfig { threads: 4, ..base }).fit(&train).unwrap();
+        assert_eq!(serial.dual_coef, par.dual_coef);
     }
 
     #[test]

@@ -18,10 +18,12 @@ pub struct IterRecord {
 /// Training trace plus early-stopping bookkeeping.
 #[derive(Debug, Clone, Default)]
 pub struct TrainTrace {
+    /// Per-iteration records, in iteration order.
     pub records: Vec<IterRecord>,
 }
 
 impl TrainTrace {
+    /// Append one iteration record.
     pub fn push(&mut self, rec: IterRecord) {
         self.records.push(rec);
     }

@@ -8,7 +8,9 @@ use std::collections::BTreeMap;
 /// Parsed command-line arguments.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// Positional arguments, in order.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` / boolean `--flag` pairs.
     pub flags: BTreeMap<String, String>,
 }
 
@@ -43,30 +45,37 @@ impl Args {
         Self::parse_from(std::env::args().skip(1))
     }
 
+    /// Whether `--key` was passed (with or without a value).
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
 
+    /// Raw value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// String value of `--key`, or `default`.
     pub fn get_str(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// `usize` value of `--key`, or `default` (also on parse failure).
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `u64` value of `--key`, or `default` (also on parse failure).
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `f64` value of `--key`, or `default` (also on parse failure).
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Boolean value of `--key` (`true|1|yes` / `false|0|no`), or `default`.
     pub fn get_bool(&self, key: &str, default: bool) -> bool {
         match self.get(key) {
             Some("true") | Some("1") | Some("yes") => true,

@@ -10,15 +10,22 @@ use std::fmt;
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys for deterministic output).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -26,10 +33,12 @@ impl Json {
         }
     }
 
+    /// Numeric value truncated to `usize`, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -37,6 +46,7 @@ impl Json {
         }
     }
 
+    /// Array items, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -44,6 +54,7 @@ impl Json {
         }
     }
 
+    /// Key–value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -51,6 +62,7 @@ impl Json {
         }
     }
 
+    /// Object member by key (None for non-objects and missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.as_obj().and_then(|o| o.get(key))
     }
@@ -67,14 +79,31 @@ impl Json {
         Ok(v)
     }
 
-    /// Convenience constructors.
+    /// Object from `(key, value)` pairs (convenience constructor).
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Numeric array from a slice (convenience constructor).
     pub fn num_arr(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
+}
+
+/// Read–modify–write one section of a `BENCH_*.json` results file (the
+/// repo's convention for tracking the perf trajectory, see
+/// `docs/BENCHMARKS.md`): parse `path` if it exists (an unreadable or
+/// non-object file is replaced by an empty object), set the top-level `key`
+/// to `value`, and write the result back. Each bench owns one top-level key,
+/// so different benches can share a file without clobbering each other.
+pub fn update_json_file(path: &std::path::Path, key: &str, value: Json) -> std::io::Result<()> {
+    let mut root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .and_then(|json| json.as_obj().cloned())
+        .unwrap_or_default();
+    root.insert(key.to_string(), value);
+    std::fs::write(path, format!("{}\n", Json::Obj(root)))
 }
 
 impl From<f64> for Json {
@@ -357,6 +386,20 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn update_json_file_merges_sections() {
+        let path = std::env::temp_dir().join("kronvt_bench_json_test.json");
+        let _ = std::fs::remove_file(&path);
+        update_json_file(&path, "micro", Json::obj(vec![("speedup", Json::Num(2.5))])).unwrap();
+        update_json_file(&path, "checker", Json::obj(vec![("speedup", Json::Num(1.9))])).unwrap();
+        // overwrite one section, keep the other
+        update_json_file(&path, "micro", Json::obj(vec![("speedup", Json::Num(3.0))])).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("micro").unwrap().get("speedup").unwrap().as_f64(), Some(3.0));
+        assert_eq!(parsed.get("checker").unwrap().get("speedup").unwrap().as_f64(), Some(1.9));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -6,17 +6,24 @@
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::{SystemTime, UNIX_EPOCH};
 
+/// Log severity, ordered from most to least severe.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum Level {
+    /// Unrecoverable problems.
     Error = 0,
+    /// Degraded-but-continuing conditions (e.g. PJRT fallback).
     Warn = 1,
+    /// High-level progress (default level).
     Info = 2,
+    /// Per-operation details.
     Debug = 3,
+    /// Everything.
     Trace = 4,
 }
 
 impl Level {
+    /// Parse a level name (unknown names fall back to `Info`).
     pub fn from_str(s: &str) -> Level {
         match s.to_ascii_lowercase().as_str() {
             "error" => Level::Error,
@@ -27,6 +34,7 @@ impl Level {
         }
     }
 
+    /// Canonical upper-case name.
     pub fn name(self) -> &'static str {
         match self {
             Level::Error => "ERROR",
@@ -76,6 +84,7 @@ pub fn log(level: Level, module: &str, msg: std::fmt::Arguments) {
     }
 }
 
+/// Log at [`Level::Info`](crate::util::logging::Level::Info) with `format!` syntax.
 #[macro_export]
 macro_rules! log_info {
     ($($arg:tt)*) => {
@@ -83,6 +92,7 @@ macro_rules! log_info {
     };
 }
 
+/// Log at [`Level::Warn`](crate::util::logging::Level::Warn) with `format!` syntax.
 #[macro_export]
 macro_rules! log_warn {
     ($($arg:tt)*) => {
@@ -90,6 +100,7 @@ macro_rules! log_warn {
     };
 }
 
+/// Log at [`Level::Debug`](crate::util::logging::Level::Debug) with `format!` syntax.
 #[macro_export]
 macro_rules! log_debug {
     ($($arg:tt)*) => {
@@ -97,6 +108,7 @@ macro_rules! log_debug {
     };
 }
 
+/// Log at [`Level::Error`](crate::util::logging::Level::Error) with `format!` syntax.
 #[macro_export]
 macro_rules! log_error {
     ($($arg:tt)*) => {

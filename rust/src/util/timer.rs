@@ -9,6 +9,7 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Self {
         Timer { start: Instant::now() }
     }
@@ -18,6 +19,7 @@ impl Timer {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// Elapsed time since construction.
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
@@ -33,14 +35,20 @@ pub fn timeit<T>(f: impl FnOnce() -> T) -> (T, f64) {
 /// Statistics over repeated measurements.
 #[derive(Debug, Clone, Copy)]
 pub struct BenchStats {
+    /// Number of samples taken.
     pub iters: usize,
+    /// Mean seconds per sample.
     pub mean_secs: f64,
+    /// Fastest sample (the number benches report).
     pub min_secs: f64,
+    /// Slowest sample.
     pub max_secs: f64,
+    /// Population standard deviation of the samples.
     pub stddev_secs: f64,
 }
 
 impl BenchStats {
+    /// Aggregate raw per-sample timings (panics on empty input).
     pub fn from_samples(samples: &[f64]) -> Self {
         assert!(!samples.is_empty());
         let n = samples.len() as f64;
@@ -59,8 +67,11 @@ impl BenchStats {
 /// Minimal benchmark runner: warms up, then samples until `target_time` is
 /// spent or `max_iters` reached, whichever comes first (min 3 samples).
 pub struct BenchRunner {
+    /// Untimed warm-up runs before sampling.
     pub warmup: usize,
+    /// Sampling stops once this much time is spent (min 3 samples).
     pub target_time: Duration,
+    /// Hard cap on samples.
     pub max_iters: usize,
 }
 
@@ -71,6 +82,7 @@ impl Default for BenchRunner {
 }
 
 impl BenchRunner {
+    /// Faster settings for CI / container runs (0.5 s budget, 20 samples).
     pub fn quick() -> Self {
         BenchRunner { warmup: 1, target_time: Duration::from_millis(500), max_iters: 20 }
     }

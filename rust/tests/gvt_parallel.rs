@@ -1,0 +1,263 @@
+//! Integration tests for the parallel GVT execution engine: serial/parallel
+//! equivalence across branches, thread counts, sparsity patterns and
+//! degenerate shapes, determinism of repeated applies, and cross-thread
+//! sharing of the `Sync` operators.
+
+use std::sync::Arc;
+
+use kronvt::gvt::{
+    gvt_apply_into, gvt_apply_into_parallel, Branch, EdgePlan, GvtEngine, GvtWorkspace,
+    KronIndex, KronKernelOp, KronPredictOp,
+};
+use kronvt::kernels::KernelKind;
+use kronvt::linalg::solvers::LinOp;
+use kronvt::linalg::vecops::assert_allclose;
+use kronvt::linalg::Matrix;
+use kronvt::util::rng::Pcg32;
+
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+struct Problem {
+    m: Matrix,
+    n: Matrix,
+    m_t: Matrix,
+    n_t: Matrix,
+    rows: KronIndex,
+    cols: KronIndex,
+    v: Vec<f64>,
+}
+
+impl Problem {
+    fn random(seed: u64, a: usize, b: usize, c: usize, d: usize, e: usize, f: usize) -> Problem {
+        let mut rng = Pcg32::seeded(seed);
+        let m = Matrix::from_fn(a, b, |_, _| rng.normal());
+        let n = Matrix::from_fn(c, d, |_, _| rng.normal());
+        let rows = KronIndex::new(
+            (0..f).map(|_| rng.below(a) as u32).collect(),
+            (0..f).map(|_| rng.below(c) as u32).collect(),
+        );
+        let cols = KronIndex::new(
+            (0..e).map(|_| rng.below(b) as u32).collect(),
+            (0..e).map(|_| rng.below(d) as u32).collect(),
+        );
+        let v = rng.normal_vec(e);
+        Problem { m_t: m.transpose(), n_t: n.transpose(), m, n, rows, cols, v }
+    }
+
+    fn serial(&self, branch: Option<Branch>) -> Vec<f64> {
+        let mut u = vec![0.0; self.rows.len()];
+        let mut ws = GvtWorkspace::new();
+        gvt_apply_into(
+            &self.m, &self.n, &self.m_t, &self.n_t, &self.rows, &self.cols, &self.v, &mut u,
+            &mut ws, branch,
+        );
+        u
+    }
+
+    fn parallel(&self, branch: Option<Branch>, threads: usize) -> Vec<f64> {
+        let mut u = vec![0.0; self.rows.len()];
+        let mut ws = GvtWorkspace::new();
+        gvt_apply_into_parallel(
+            &self.m, &self.n, &self.m_t, &self.n_t, &self.rows, &self.cols, &self.v, &mut u,
+            &mut ws, branch, threads,
+        );
+        u
+    }
+}
+
+#[test]
+fn parallel_matches_serial_both_branches_all_thread_counts() {
+    // Large enough (e + f ≥ 2048) that the engine actually shards.
+    let p = Problem::random(9000, 15, 11, 9, 13, 4096, 3000);
+    for branch in [Branch::T, Branch::S] {
+        let serial = p.serial(Some(branch));
+        for threads in THREAD_COUNTS {
+            let par = p.parallel(Some(branch), threads);
+            // acceptance bound 1e-10; in fact bitwise identical
+            assert_allclose(&par, &serial, 1e-10, 1e-10);
+            assert_eq!(par, serial, "branch {branch:?} threads {threads}");
+        }
+    }
+    // auto branch selection too
+    let serial = p.serial(None);
+    for threads in THREAD_COUNTS {
+        assert_eq!(p.parallel(None, threads), serial);
+    }
+}
+
+#[test]
+fn parallel_matches_serial_with_sparse_v() {
+    let mut p = Problem::random(9001, 10, 10, 10, 10, 5000, 5000);
+    for (l, vl) in p.v.iter_mut().enumerate() {
+        if l % 5 != 0 {
+            *vl = 0.0; // 80% zeros — the eq. (5) sparse shortcut path
+        }
+    }
+    for branch in [Some(Branch::T), Some(Branch::S), None] {
+        let serial = p.serial(branch);
+        for threads in THREAD_COUNTS {
+            assert_eq!(p.parallel(branch, threads), serial, "branch {branch:?}");
+        }
+    }
+}
+
+#[test]
+fn degenerate_shapes_e1_f1_and_unit_dims() {
+    // e = 1 (a single column edge), f = 1 (a single output edge), and
+    // 1×1 factor matrices. All far below the parallel threshold, so the
+    // engine must fall back to serial without panicking; the convenience
+    // wrapper still goes through plan construction.
+    for &(a, b, c, d, e, f) in
+        &[(3usize, 4usize, 5usize, 2usize, 1usize, 7usize), (3, 4, 5, 2, 7, 1), (1, 1, 1, 1, 1, 1)]
+    {
+        let p = Problem::random(9002 + (a + e + f) as u64, a, b, c, d, e, f);
+        for branch in [Some(Branch::T), Some(Branch::S), None] {
+            let serial = p.serial(branch);
+            for threads in THREAD_COUNTS {
+                assert_eq!(p.parallel(branch, threads), serial);
+            }
+        }
+    }
+}
+
+#[test]
+fn empty_bucket_rows_are_handled() {
+    // Concentrate all column indices on a handful of rows so most stage-1
+    // buckets are empty; workers owning empty rows must still zero them.
+    let mut rng = Pcg32::seeded(9003);
+    let (a, b, c, d, e, f) = (8, 40, 8, 40, 3000, 3000);
+    let m = Matrix::from_fn(a, b, |_, _| rng.normal());
+    let n = Matrix::from_fn(c, d, |_, _| rng.normal());
+    let rows = KronIndex::new(
+        (0..f).map(|_| rng.below(a) as u32).collect(),
+        (0..f).map(|_| rng.below(c) as u32).collect(),
+    );
+    // only 2 of 40 possible left values / 3 of 40 right values occur
+    let cols = KronIndex::new(
+        (0..e).map(|_| [0u32, 39][rng.below(2)]).collect(),
+        (0..e).map(|_| [5u32, 6, 38][rng.below(3)]).collect(),
+    );
+    let v = rng.normal_vec(e);
+    let p = Problem { m_t: m.transpose(), n_t: n.transpose(), m, n, rows, cols, v };
+    for branch in [Some(Branch::T), Some(Branch::S)] {
+        let serial = p.serial(branch);
+        for threads in THREAD_COUNTS {
+            assert_eq!(p.parallel(branch, threads), serial);
+        }
+    }
+}
+
+#[test]
+fn repeated_parallel_applies_are_deterministic() {
+    // Same plan + workspace reused across applies: results must be
+    // identical run over run (solver convergence depends on this).
+    let p = Problem::random(9004, 12, 14, 13, 11, 6000, 5500);
+    let plan = EdgePlan::build(&p.cols, p.m.cols(), p.n.cols());
+    let engine = GvtEngine::new(4);
+    let mut ws = GvtWorkspace::new();
+    let mut first = vec![0.0; p.rows.len()];
+    engine.apply_planned(
+        &p.m, &p.n, &p.m_t, &p.n_t, &p.rows, &p.cols, &plan, &p.v, &mut first, &mut ws, None,
+    );
+    for _ in 0..5 {
+        let mut again = vec![0.0; p.rows.len()];
+        engine.apply_planned(
+            &p.m, &p.n, &p.m_t, &p.n_t, &p.rows, &p.cols, &plan, &p.v, &mut again, &mut ws, None,
+        );
+        assert_eq!(again, first);
+    }
+}
+
+fn toy_kernel(rng: &mut Pcg32, n: usize) -> Matrix {
+    let x = Matrix::from_fn(n, 3, |_, _| rng.normal());
+    KernelKind::Gaussian { gamma: 0.4 }.square_matrix(&x)
+}
+
+#[test]
+fn kernel_operator_threads_knob_is_transparent() {
+    let mut rng = Pcg32::seeded(9005);
+    let (q, m, n) = (30, 25, 4000);
+    let g = Arc::new(toy_kernel(&mut rng, q));
+    let k = Arc::new(toy_kernel(&mut rng, m));
+    let idx = KronIndex::new(
+        (0..n).map(|_| rng.below(q) as u32).collect(),
+        (0..n).map(|_| rng.below(m) as u32).collect(),
+    );
+    let v = rng.normal_vec(n);
+    let baseline = KronKernelOp::new(g.clone(), k.clone(), idx.clone()).apply_vec(&v);
+    for threads in THREAD_COUNTS {
+        let op = KronKernelOp::new(g.clone(), k.clone(), idx.clone()).with_threads(threads);
+        assert_eq!(op.apply_vec(&v), baseline, "threads={threads}");
+        // forced branches through the operator too
+        for branch in [Branch::T, Branch::S] {
+            let forced = KronKernelOp::new(g.clone(), k.clone(), idx.clone())
+                .with_branch(branch)
+                .with_threads(threads);
+            let serial_forced =
+                KronKernelOp::new(g.clone(), k.clone(), idx.clone()).with_branch(branch);
+            assert_eq!(forced.apply_vec(&v), serial_forced.apply_vec(&v));
+        }
+    }
+}
+
+#[test]
+fn predict_operator_threads_knob_is_transparent() {
+    let mut rng = Pcg32::seeded(9006);
+    let (q, m, n) = (20, 20, 2500);
+    let (v_test, u_test, t_test) = (15, 15, 2500);
+    let train_idx = KronIndex::new(
+        (0..n).map(|_| rng.below(q) as u32).collect(),
+        (0..n).map(|_| rng.below(m) as u32).collect(),
+    );
+    let test_idx = KronIndex::new(
+        (0..t_test).map(|_| rng.below(v_test) as u32).collect(),
+        (0..t_test).map(|_| rng.below(u_test) as u32).collect(),
+    );
+    let ghat = Matrix::from_fn(v_test, q, |_, _| rng.normal());
+    let khat = Matrix::from_fn(u_test, m, |_, _| rng.normal());
+    let mut a = rng.normal_vec(n);
+    for (i, ai) in a.iter_mut().enumerate() {
+        if i % 3 == 0 {
+            *ai = 0.0; // sparse dual coefficients
+        }
+    }
+    let baseline =
+        KronPredictOp::new(ghat.clone(), khat.clone(), test_idx.clone(), train_idx.clone())
+            .predict(&a);
+    for threads in THREAD_COUNTS {
+        let op = KronPredictOp::new(ghat.clone(), khat.clone(), test_idx.clone(), train_idx.clone())
+            .with_threads(threads);
+        assert_eq!(op.predict(&a), baseline, "threads={threads}");
+    }
+}
+
+#[test]
+fn one_shared_operator_across_many_threads() {
+    // The refactored operators are Sync: a single trained operator can be
+    // applied concurrently from many threads (each apply may itself be
+    // multi-threaded) without locks around the caller.
+    let mut rng = Pcg32::seeded(9007);
+    let (q, m, n) = (18, 18, 3000);
+    let g = Arc::new(toy_kernel(&mut rng, q));
+    let k = Arc::new(toy_kernel(&mut rng, m));
+    let idx = KronIndex::new(
+        (0..n).map(|_| rng.below(q) as u32).collect(),
+        (0..n).map(|_| rng.below(m) as u32).collect(),
+    );
+    let op = Arc::new(KronKernelOp::new(g, k, idx).with_threads(2));
+    let inputs: Vec<Vec<f64>> = (0..8).map(|_| rng.normal_vec(n)).collect();
+    let expected: Vec<Vec<f64>> = inputs.iter().map(|v| op.apply_vec(v)).collect();
+    let got: Vec<Vec<f64>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = inputs
+            .iter()
+            .map(|v| {
+                let op = Arc::clone(&op);
+                scope.spawn(move || op.apply_vec(v))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (g_out, e_out) in got.iter().zip(&expected) {
+        assert_eq!(g_out, e_out);
+    }
+}
