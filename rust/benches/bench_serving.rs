@@ -1,0 +1,189 @@
+//! Serving-pipeline benchmark: batched zero-shot throughput with a cold vs
+//! warm per-vertex kernel-row cache.
+//!
+//! Trains one KronRidge model on a synthetic DTI dataset (32-D features —
+//! the regime where computing a vertex's `K̂`/`Ĝ` row dominates the batch
+//! matvec), then replays a stream of requests whose vertices repeat across a
+//! bounded pool (the drug–target / collaborative-filtering traffic pattern
+//! the cache targets):
+//!
+//! * **cold** — a fresh [`PredictContext`](kronvt::model::PredictContext)
+//!   with the cache disabled scores the stream (every batch recomputes its
+//!   kernel rows);
+//! * **warm** — a context with the cache enabled scores the same stream
+//!   after one prewarming pass (every vertex row is a hit).
+//!
+//! Both paths produce bitwise-identical scores (asserted); on repeat-vertex
+//! traffic the warm path is expected ≥2× faster per batch. A third section
+//! measures end-to-end [`PredictServer`] throughput (merger + scoring pool).
+//! Results go to `BENCH_serving.json` at the repo root under `"serving"` —
+//! the perf-trajectory convention of `docs/BENCHMARKS.md`.
+//!
+//! Run: `cargo bench --bench bench_serving [-- --full --threads N --workers W]`
+
+use kronvt::coordinator::{PredictServer, ServerConfig};
+use kronvt::data::dti::DtiConfig;
+use kronvt::data::Dataset;
+use kronvt::kernels::KernelKind;
+use kronvt::linalg::Matrix;
+use kronvt::train::{KronRidge, RidgeConfig};
+use kronvt::util::args::Args;
+use kronvt::util::json::{update_json_file, Json};
+use kronvt::util::rng::Pcg32;
+use kronvt::util::timer::{fmt_secs, Timer};
+
+fn main() {
+    let args = Args::parse();
+    let full = args.has("full");
+    let threads = args.get_usize("threads", 1);
+    let workers = args.get_usize("workers", 2);
+    let (dti, requests, edges_per_request, pool_size) = if full {
+        (kronvt::data::dti::gpcr(7), 400, 64, 48)
+    } else {
+        (
+            DtiConfig { m: 90, q: 70, n: 1800, positives: 120, seed: 7, ..Default::default() },
+            120,
+            32,
+            24,
+        )
+    };
+    let cache_cap = 4 * pool_size;
+
+    let data = dti.generate();
+    println!("training KronRidge on {} ({} edges)...", data.name, data.n_edges());
+    let (train, _) = data.zero_shot_split(0.2, 5);
+    let gaussian = KernelKind::Gaussian { gamma: 0.5 };
+    let model = KronRidge::new(RidgeConfig {
+        lambda: 2f64.powi(-4),
+        kernel_d: gaussian,
+        kernel_t: gaussian,
+        iterations: 50,
+        threads,
+        ..Default::default()
+    })
+    .fit(&train)
+    .expect("training");
+
+    // Request stream over a bounded vertex pool (repeat-vertex traffic).
+    // Pool vertices are novel O(1)-scale feature vectors, like the training
+    // features the DTI generator emits.
+    let d = model.train_start_features.cols();
+    let r = model.train_end_features.cols();
+    let mut rng = Pcg32::seeded(1234);
+    let start_pool: Vec<Vec<f64>> =
+        (0..pool_size).map(|_| rng.normal_vec(d).iter().map(|x| 0.3 * x).collect()).collect();
+    let end_pool: Vec<Vec<f64>> =
+        (0..pool_size).map(|_| rng.normal_vec(r).iter().map(|x| 0.3 * x).collect()).collect();
+    let batches: Vec<Dataset> = (0..requests)
+        .map(|b| {
+            let (u, v) = (6, 6);
+            let su: Vec<usize> = (0..u).map(|_| rng.below(pool_size)).collect();
+            let ev: Vec<usize> = (0..v).map(|_| rng.below(pool_size)).collect();
+            Dataset {
+                start_features: Matrix::from_fn(u, d, |i, j| start_pool[su[i]][j]),
+                end_features: Matrix::from_fn(v, r, |i, j| end_pool[ev[i]][j]),
+                start_idx: (0..edges_per_request).map(|_| rng.below(u) as u32).collect(),
+                end_idx: (0..edges_per_request).map(|_| rng.below(v) as u32).collect(),
+                labels: vec![0.0; edges_per_request],
+                name: format!("bench-batch-{b}"),
+            }
+        })
+        .collect();
+    let total_edges = requests * edges_per_request;
+
+    // ---- cold vs warm PredictContext (min over a few stream replays) ----
+    let stream_secs = |ctx: &kronvt::model::PredictContext| -> (f64, Vec<Vec<f64>>) {
+        let t = Timer::start();
+        let scores: Vec<Vec<f64>> = batches.iter().map(|b| ctx.predict_batch(b)).collect();
+        (t.elapsed_secs(), scores)
+    };
+    let reps = if full { 5 } else { 3 };
+
+    let mut cold_secs = f64::INFINITY;
+    let mut cold_scores = Vec::new();
+    for _ in 0..reps {
+        let ctx = model.predict_context(threads, 0); // fresh: no cache at all
+        let (secs, scores) = stream_secs(&ctx);
+        cold_secs = cold_secs.min(secs);
+        cold_scores = scores;
+    }
+
+    let warm_ctx = model.predict_context(threads, cache_cap);
+    let (_, prewarm_scores) = stream_secs(&warm_ctx); // populate the cache
+    let mut warm_secs = f64::INFINITY;
+    let mut warm_scores = Vec::new();
+    for _ in 0..reps {
+        let (secs, scores) = stream_secs(&warm_ctx);
+        warm_secs = warm_secs.min(secs);
+        warm_scores = scores;
+    }
+    assert_eq!(cold_scores, prewarm_scores, "cold and caching runs must agree bitwise");
+    assert_eq!(cold_scores, warm_scores, "warm-cache scores must be bitwise identical");
+    let hits = warm_ctx.cache_hits();
+    let misses = warm_ctx.cache_misses();
+    let hit_rate = hits as f64 / (hits + misses).max(1) as f64;
+    let speedup = cold_secs / warm_secs;
+
+    println!(
+        "{requests} batches x {edges_per_request} edges, vertex pool {pool_size}/side, threads={threads}"
+    );
+    println!(
+        "cold (no cache): {}/stream  {:>8.0} edges/s",
+        fmt_secs(cold_secs),
+        total_edges as f64 / cold_secs
+    );
+    println!(
+        "warm (cached):   {}/stream  {:>8.0} edges/s  speedup {speedup:.2}x  hit rate {:.0}%",
+        fmt_secs(warm_secs),
+        total_edges as f64 / warm_secs,
+        100.0 * hit_rate
+    );
+
+    // ---- end-to-end server throughput (merger + scoring pool + cache) ----
+    let server = PredictServer::start(
+        model,
+        ServerConfig { threads, workers, cache_vertices: cache_cap, ..Default::default() },
+    );
+    let t = Timer::start();
+    for b in &batches {
+        let sf: Vec<Vec<f64>> = (0..b.m()).map(|i| b.start_features.row(i).to_vec()).collect();
+        let ef: Vec<Vec<f64>> = (0..b.q()).map(|i| b.end_features.row(i).to_vec()).collect();
+        let edges: Vec<(u32, u32)> =
+            b.start_idx.iter().zip(&b.end_idx).map(|(&s, &e)| (s, e)).collect();
+        let scores = server.predict_blocking(sf, ef, edges).expect("served");
+        assert_eq!(scores.len(), edges_per_request);
+    }
+    let server_secs = t.elapsed_secs();
+    let server_eps = total_edges as f64 / server_secs;
+    println!(
+        "server ({workers} workers): {} for {total_edges} edges  {server_eps:>8.0} edges/s",
+        fmt_secs(server_secs)
+    );
+    server.shutdown();
+
+    let host_threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let section = Json::obj(vec![
+        ("bench", Json::from("bench_serving")),
+        ("host_threads", Json::from(host_threads)),
+        ("full", Json::from(full)),
+        ("threads", Json::from(threads)),
+        ("workers", Json::from(workers)),
+        ("requests", Json::from(requests)),
+        ("edges_per_request", Json::from(edges_per_request)),
+        ("vertex_pool", Json::from(pool_size)),
+        ("cold_stream_secs", Json::from(cold_secs)),
+        ("warm_stream_secs", Json::from(warm_secs)),
+        ("warm_speedup", Json::from(speedup)),
+        ("cache_hit_rate", Json::from(hit_rate)),
+        ("server_edges_per_sec", Json::from(server_eps)),
+        ("bitwise_identical", Json::from(true)),
+    ]);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_serving.json");
+    match update_json_file(&out, "serving", section) {
+        Ok(()) => println!("\nwrote cold-vs-warm serving results to {}", out.display()),
+        Err(err) => eprintln!("\nfailed to write {}: {err}", out.display()),
+    }
+    println!("bench_serving done");
+}

@@ -1,8 +1,112 @@
 //! Training-job orchestration: run cross-validation folds (or any
 //! train→evaluate closure) across worker threads with deterministic result
-//! ordering.
+//! ordering — plus a small long-lived [`WorkerPool`] used by the serving
+//! coordinator's scoring shards.
+
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 
 use crate::data::Dataset;
+
+/// A small, long-lived pool of worker threads draining jobs from one shared
+/// bounded queue.
+///
+/// Unlike [`run_cv_jobs`] (scoped, one-shot, result-ordered), the pool lives
+/// for the owner's lifetime and processes an open-ended job stream — the
+/// prediction server uses it to shard merged batches across scoring workers.
+/// The queue is a [`sync_channel`], so `queue_cap` bounds in-flight jobs and
+/// [`WorkerPool::submit`] blocks when the pool is saturated (backpressure
+/// that propagates to upstream submitters).
+///
+/// Dropping the pool is a graceful shutdown: the queue disconnects, workers
+/// finish whatever is already queued, and the drop joins them.
+pub struct WorkerPool<J: Send + 'static> {
+    tx: Option<SyncSender<J>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl<J: Send + 'static> WorkerPool<J> {
+    /// Spawn `workers` threads (min 1) running `handler` on each job.
+    /// `queue_cap` bounds the number of submitted-but-unclaimed jobs.
+    pub fn spawn<F>(workers: usize, queue_cap: usize, handler: F) -> WorkerPool<J>
+    where
+        F: Fn(J) + Send + Sync + 'static,
+    {
+        let (tx, rx) = sync_channel::<J>(queue_cap.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let handler = Arc::new(handler);
+        let workers = (0..workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let handler = Arc::clone(&handler);
+                std::thread::spawn(move || loop {
+                    // Hold the lock only while waiting for one job; recv
+                    // returns Err once the pool (the only sender) is dropped.
+                    let job = {
+                        let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => handler(job),
+                        Err(_) => return,
+                    }
+                })
+            })
+            .collect();
+        WorkerPool { tx: Some(tx), workers }
+    }
+
+    /// Submit one job, blocking while the queue is full. `Err` only after
+    /// every worker has exited (panic in the handler).
+    pub fn submit(&self, job: J) -> Result<(), String> {
+        self.tx
+            .as_ref()
+            .expect("pool running")
+            .send(job)
+            .map_err(|_| "worker pool stopped".to_string())
+    }
+
+    /// Non-blocking [`WorkerPool::submit`]: [`TrySendError::Full`] returns
+    /// the job back when the queue is full so the caller can shed load
+    /// instead of waiting; [`TrySendError::Disconnected`] means every worker
+    /// has exited (panic in the handler) and retrying is pointless.
+    pub fn try_submit(&self, job: J) -> Result<(), TrySendError<J>> {
+        self.tx.as_ref().expect("pool running").try_send(job)
+    }
+
+    /// A cloneable submission handle, so another thread can feed the pool
+    /// while the owner keeps it for shutdown. The pool's workers exit only
+    /// after *every* handle (including the pool's own) is dropped and the
+    /// queue has drained.
+    pub fn sender(&self) -> SyncSender<J> {
+        self.tx.as_ref().expect("pool running").clone()
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Graceful shutdown: stop accepting jobs, finish the queue, join the
+    /// workers. (Dropping the pool does the same.)
+    pub fn shutdown(mut self) {
+        self.join();
+    }
+
+    fn join(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl<J: Send + 'static> Drop for WorkerPool<J> {
+    fn drop(&mut self) {
+        self.join();
+    }
+}
 
 /// Result of one CV fold job.
 #[derive(Debug, Clone)]
@@ -97,6 +201,52 @@ mod tests {
             assert_eq!(a.fold, b.fold);
             assert_eq!(a.auc, b.auc);
         }
+    }
+
+    #[test]
+    fn worker_pool_processes_all_jobs() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let done = Arc::new(AtomicUsize::new(0));
+        let sum = Arc::new(AtomicUsize::new(0));
+        let pool = {
+            let (done, sum) = (done.clone(), sum.clone());
+            WorkerPool::spawn(3, 4, move |j: usize| {
+                sum.fetch_add(j, Ordering::Relaxed);
+                done.fetch_add(1, Ordering::Relaxed);
+            })
+        };
+        assert_eq!(pool.workers(), 3);
+        for j in 0..50 {
+            pool.submit(j).unwrap();
+        }
+        pool.shutdown(); // joins → every queued job ran
+        assert_eq!(done.load(Ordering::Relaxed), 50);
+        assert_eq!(sum.load(Ordering::Relaxed), (0..50).sum::<usize>());
+    }
+
+    #[test]
+    fn worker_pool_try_submit_sheds_load_when_full() {
+        let gate = Arc::new(Mutex::new(()));
+        let guard = gate.lock().unwrap();
+        let pool = {
+            let gate = gate.clone();
+            WorkerPool::spawn(1, 1, move |_: usize| {
+                let _unblock = gate.lock().unwrap();
+            })
+        };
+        // First job occupies the worker (blocked on the gate), second fills
+        // the queue; eventually try_submit must report Full.
+        pool.submit(0).unwrap();
+        let mut rejected = false;
+        for j in 1..10 {
+            if pool.try_submit(j).is_err() {
+                rejected = true;
+                break;
+            }
+        }
+        assert!(rejected, "bounded queue must eventually reject");
+        drop(guard);
+        pool.shutdown();
     }
 
     #[test]

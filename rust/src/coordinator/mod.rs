@@ -1,11 +1,11 @@
 //! Layer-3 coordinator: routing between the native GVT loops and the PJRT
-//! dense path, a batched zero-shot prediction server, and the training-job
-//! orchestrator behind the CLI.
+//! dense path, a batched + cached + sharded zero-shot prediction server, and
+//! the training-job orchestrator behind the CLI.
 
 pub mod router;
 pub mod server;
 pub mod jobs;
 
 pub use router::{Route, Router, RouterConfig};
-pub use server::{PredictServer, ServerConfig, ServerStats};
-pub use jobs::{run_cv_jobs, CvJobResult};
+pub use server::{PredictRequest, PredictServer, ServerConfig, ServerStats};
+pub use jobs::{run_cv_jobs, CvJobResult, WorkerPool};

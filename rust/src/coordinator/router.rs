@@ -9,10 +9,10 @@
 //! covers the shape — so the system degrades gracefully to pure Rust.
 
 use crate::gvt::complexity;
-use crate::gvt::{gvt_apply_into, GvtWorkspace, KronIndex};
+use crate::gvt::{gvt_apply_into, KronIndex, WorkspacePool};
 use crate::linalg::Matrix;
 use crate::runtime::ArtifactRegistry;
-use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Which execution path a matvec takes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -54,11 +54,16 @@ pub struct RouteStats {
 
 /// The router itself. Owns an optional artifact registry; without one every
 /// call routes native.
+///
+/// Scratch buffers come from a [`WorkspacePool`] and the counters are
+/// atomics, so routing state never blocks concurrent use (the registry
+/// itself remains the only non-`Sync` member, and only when attached).
 pub struct Router {
     registry: Option<ArtifactRegistry>,
     cfg: RouterConfig,
-    stats: RefCell<RouteStats>,
-    ws: RefCell<GvtWorkspace>,
+    native_calls: AtomicUsize,
+    pjrt_calls: AtomicUsize,
+    pool: WorkspacePool,
 }
 
 impl Router {
@@ -67,8 +72,9 @@ impl Router {
         Router {
             registry: Some(registry),
             cfg,
-            stats: RefCell::new(RouteStats::default()),
-            ws: RefCell::new(GvtWorkspace::new()),
+            native_calls: AtomicUsize::new(0),
+            pjrt_calls: AtomicUsize::new(0),
+            pool: WorkspacePool::new(),
         }
     }
 
@@ -77,8 +83,9 @@ impl Router {
         Router {
             registry: None,
             cfg,
-            stats: RefCell::new(RouteStats::default()),
-            ws: RefCell::new(GvtWorkspace::new()),
+            native_calls: AtomicUsize::new(0),
+            pjrt_calls: AtomicUsize::new(0),
+            pool: WorkspacePool::new(),
         }
     }
 
@@ -97,7 +104,10 @@ impl Router {
 
     /// Per-route call counters so far.
     pub fn stats(&self) -> RouteStats {
-        *self.stats.borrow()
+        RouteStats {
+            native_calls: self.native_calls.load(Ordering::Relaxed),
+            pjrt_calls: self.pjrt_calls.load(Ordering::Relaxed),
+        }
     }
 
     /// Whether a PJRT artifact registry is attached.
@@ -137,7 +147,7 @@ impl Router {
                 let reg = self.registry.as_ref().expect("decide() guarantees registry");
                 match reg.kron_mv(k, g, idx, v) {
                     Ok(u) => {
-                        self.stats.borrow_mut().pjrt_calls += 1;
+                        self.pjrt_calls.fetch_add(1, Ordering::Relaxed);
                         return u;
                     }
                     Err(err) => {
@@ -151,10 +161,9 @@ impl Router {
     }
 
     fn native_mv(&self, k: &Matrix, g: &Matrix, idx: &KronIndex, v: &[f64]) -> Vec<f64> {
-        self.stats.borrow_mut().native_calls += 1;
+        self.native_calls.fetch_add(1, Ordering::Relaxed);
         let mut u = vec![0.0; idx.len()];
-        let mut ws = self.ws.borrow_mut();
-        gvt_apply_into(g, k, g, k, idx, idx, v, &mut u, &mut ws, None);
+        self.pool.with(|ws| gvt_apply_into(g, k, g, k, idx, idx, v, &mut u, ws, None));
         u
     }
 }

@@ -1,25 +1,45 @@
-//! Batched zero-shot prediction server.
+//! Batched, cache-aware, sharded zero-shot prediction server.
 //!
 //! Serving is where the paper's eq. (5) shortcut pays off operationally: a
 //! request carries *novel* vertices (features never seen in training) plus
 //! the edges to score. The server batches concurrently queued requests into
 //! one prediction call — the generalized vec trick's cost
 //! `O(min(v‖a‖₀ + m·t, u‖a‖₀ + q·t))` amortizes the `‖a‖₀` term across the
-//! whole batch, so batching improves throughput exactly as dynamic batching
-//! does in model-serving systems.
+//! whole batch, exactly as dynamic batching does in model-serving systems.
 //!
-//! Architecture: submitters push [`PredictRequest`]s onto an MPSC channel; a
-//! worker thread drains whatever is queued (up to `max_batch_edges`), merges
-//! it into one [`Dataset`], predicts once, and scatters replies.
+//! Architecture (three stages, backpressure end to end):
+//!
+//! 1. Submitters push [`PredictRequest`]s onto a **bounded** MPSC queue
+//!    ([`ServerConfig::max_queue`]); when the pipeline is saturated, sends
+//!    block — load shedding belongs to the caller via
+//!    [`PredictServer::sender`]'s `try_send`.
+//! 2. A **merger** thread drains whatever is queued (up to
+//!    [`ServerConfig::max_batch_edges`]), validates and merges it into one
+//!    batch dataset with offset vertex indices.
+//! 3. A small **scoring pool** ([`ServerConfig::workers`], a
+//!    [`WorkerPool`]) shards merged batches across workers. All workers
+//!    share one [`PredictContext`]: the pruned model, the prebuilt train-side
+//!    `EdgePlan`, pooled workspaces, and the per-vertex kernel-row LRU cache
+//!    ([`ServerConfig::cache_vertices`]) — vertices repeated across requests
+//!    never recompute their `K̂`/`Ĝ` rows. Each batch's matvec is itself
+//!    sharded over [`ServerConfig::threads`].
+//!
+//! Scores are **bitwise identical** for a given batch whether the cache is
+//! cold, warm, or disabled, and for every `threads`/`workers` setting (the
+//! GVT engine is bitwise deterministic and cached rows match freshly
+//! computed ones exactly). Batch *composition* depends on arrival timing, as
+//! in any dynamic batcher; submit one request at a time for fully
+//! reproducible runs.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use super::jobs::WorkerPool;
 use crate::data::Dataset;
 use crate::linalg::Matrix;
-use crate::model::DualModel;
+use crate::model::{DualModel, PredictContext};
 
 /// One prediction request: a private bipartite graph (novel vertices +
 /// edges) to score against the trained model.
@@ -43,11 +63,27 @@ pub struct ServerConfig {
     /// `1` = serial). The trained model is shared, not copied — the GVT
     /// operators are `Sync`, so sharding a batch costs no extra memory.
     pub threads: usize,
+    /// Scoring workers: merged batches are scored concurrently by this many
+    /// pool threads (min 1). Distinct from `threads`, which shards *within*
+    /// one batch; `workers` overlaps independent batches.
+    pub workers: usize,
+    /// Bound on queued-but-unmerged requests. Submission blocks (or
+    /// `try_send` fails) once the queue is full — the backpressure knob.
+    pub max_queue: usize,
+    /// Per-side capacity (in vertices) of the kernel-row LRU cache shared by
+    /// the scoring workers; `0` disables caching.
+    pub cache_vertices: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_batch_edges: 65_536, threads: 1 }
+        ServerConfig {
+            max_batch_edges: 65_536,
+            threads: 1,
+            workers: 1,
+            max_queue: 1024,
+            cache_vertices: 1024,
+        }
     }
 }
 
@@ -60,30 +96,62 @@ pub struct ServerStats {
     pub batches: AtomicUsize,
     /// Total edges scored.
     pub edges_scored: AtomicUsize,
+    /// Kernel-row cache hits (start + end side). Shared with the context's
+    /// caches, hence the `Arc`.
+    pub cache_hits: Arc<AtomicUsize>,
+    /// Kernel-row cache misses (start + end side).
+    pub cache_misses: Arc<AtomicUsize>,
+}
+
+/// A validated, merged batch en route to the scoring pool.
+struct MergedBatch {
+    ds: Option<Dataset>,
+    /// Edge count per request (0 for invalid ones).
+    spans: Vec<usize>,
+    /// Requests flagged invalid during merging (replied to with NaNs).
+    bad: Vec<bool>,
+    requests: Vec<PredictRequest>,
 }
 
 /// Handle to a running prediction server.
 pub struct PredictServer {
-    tx: Option<Sender<PredictRequest>>,
-    worker: Option<JoinHandle<()>>,
+    tx: Option<SyncSender<PredictRequest>>,
+    merger: Option<JoinHandle<()>>,
+    pool: Option<WorkerPool<MergedBatch>>,
     stats: Arc<ServerStats>,
 }
 
 impl PredictServer {
-    /// Spawn the worker thread around a trained model.
+    /// Spawn the merger thread and scoring pool around a trained model.
     pub fn start(model: DualModel, cfg: ServerConfig) -> PredictServer {
-        let (tx, rx) = channel::<PredictRequest>();
         let stats = Arc::new(ServerStats::default());
-        let worker_stats = stats.clone();
-        let worker = std::thread::spawn(move || worker_loop(model, cfg, rx, worker_stats));
-        PredictServer { tx: Some(tx), worker: Some(worker), stats }
+        let ctx = Arc::new(
+            model
+                .predict_context(cfg.threads, cfg.cache_vertices)
+                .with_cache_counters(stats.cache_hits.clone(), stats.cache_misses.clone()),
+        );
+        let (d, r) = ctx_dims(&model);
+        let pool = {
+            let stats = stats.clone();
+            WorkerPool::spawn(cfg.workers, cfg.workers.max(1) * 2, move |batch: MergedBatch| {
+                score_batch(&ctx, batch, &stats)
+            })
+        };
+        let (tx, rx) = sync_channel::<PredictRequest>(cfg.max_queue.max(1));
+        let merger = {
+            let pool_tx = pool.sender();
+            std::thread::spawn(move || merger_loop(d, r, cfg.max_batch_edges, rx, pool_tx))
+        };
+        PredictServer { tx: Some(tx), merger: Some(merger), pool: Some(pool), stats }
     }
 
-    /// Sender handle for asynchronous submission from other threads.
+    /// Sender handle for asynchronous submission from other threads. The
+    /// queue is bounded: `send` blocks when the server is saturated,
+    /// `try_send` fails instead (caller-side load shedding).
     ///
     /// NOTE: every clone must be dropped before [`PredictServer::shutdown`]
-    /// can complete — the worker exits when all senders disconnect.
-    pub fn sender(&self) -> Sender<PredictRequest> {
+    /// can complete — the merger exits when all senders disconnect.
+    pub fn sender(&self) -> SyncSender<PredictRequest> {
         self.tx.as_ref().expect("server running").clone()
     }
 
@@ -94,7 +162,7 @@ impl PredictServer {
         end_features: Vec<Vec<f64>>,
         edges: Vec<(u32, u32)>,
     ) -> Result<Vec<f64>, String> {
-        let (reply_tx, reply_rx) = channel();
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
         self.tx
             .as_ref()
             .expect("server running")
@@ -110,27 +178,37 @@ impl PredictServer {
 
     /// Graceful shutdown: waits for queued work to finish.
     pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
         drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        if let Some(m) = self.merger.take() {
+            let _ = m.join(); // merger drains the queue, then drops its pool sender
+        }
+        if let Some(pool) = self.pool.take() {
+            pool.shutdown(); // scores everything the merger submitted
         }
     }
 }
 
 impl Drop for PredictServer {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.stop();
     }
 }
 
-fn worker_loop(
-    model: DualModel,
-    cfg: ServerConfig,
+/// Trained-side feature dimensions `(d, r)` the merger validates against.
+fn ctx_dims(model: &DualModel) -> (usize, usize) {
+    (model.train_start_features.cols(), model.train_end_features.cols())
+}
+
+fn merger_loop(
+    d: usize,
+    r: usize,
+    max_batch_edges: usize,
     rx: Receiver<PredictRequest>,
-    stats: Arc<ServerStats>,
+    pool_tx: SyncSender<MergedBatch>,
 ) {
     loop {
         // Block for the first request of the batch.
@@ -141,7 +219,7 @@ fn worker_loop(
         let mut batch = vec![first];
         let mut edge_count = batch[0].edges.len();
         // Greedily drain whatever else is queued (dynamic batching).
-        while edge_count < cfg.max_batch_edges {
+        while edge_count < max_batch_edges {
             match rx.try_recv() {
                 Ok(req) => {
                     edge_count += req.edges.len();
@@ -150,17 +228,35 @@ fn worker_loop(
                 Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
             }
         }
-        serve_batch(&model, batch, &stats, cfg.threads);
+        // Blocks when the scoring pool is saturated — backpressure that
+        // propagates to the bounded request queue and its submitters.
+        if pool_tx.send(merge_batch(d, r, batch)).is_err() {
+            return; // scoring pool gone (worker panic)
+        }
     }
 }
 
-fn serve_batch(model: &DualModel, batch: Vec<PredictRequest>, stats: &ServerStats, threads: usize) {
-    // Merge requests into one dataset with offset vertex indices.
-    let d = model.train_start_features.cols();
-    let r = model.train_end_features.cols();
-    let total_starts: usize = batch.iter().map(|b| b.start_features.len()).sum();
-    let total_ends: usize = batch.iter().map(|b| b.end_features.len()).sum();
-    let total_edges: usize = batch.iter().map(|b| b.edges.len()).sum();
+/// Validate each request and merge the batch into one dataset with offset
+/// vertex indices. Invalid requests are flagged and excluded from scoring —
+/// the merged matrices are sized to the *valid* requests only, so no kernel
+/// row is ever computed (or cached) for a phantom vertex.
+fn merge_batch(d: usize, r: usize, batch: Vec<PredictRequest>) -> MergedBatch {
+    let bad: Vec<bool> = batch
+        .iter()
+        .map(|req| {
+            let valid = req.start_features.iter().all(|f| f.len() == d)
+                && req.end_features.iter().all(|f| f.len() == r)
+                && req.edges.iter().all(|&(s, e)| {
+                    (s as usize) < req.start_features.len()
+                        && (e as usize) < req.end_features.len()
+                });
+            !valid
+        })
+        .collect();
+    let valid_reqs = || batch.iter().zip(&bad).filter(|(_, &b)| !b).map(|(req, _)| req);
+    let total_starts: usize = valid_reqs().map(|b| b.start_features.len()).sum();
+    let total_ends: usize = valid_reqs().map(|b| b.end_features.len()).sum();
+    let total_edges: usize = valid_reqs().map(|b| b.edges.len()).sum();
 
     let mut start_features = Matrix::zeros(total_starts, d);
     let mut end_features = Matrix::zeros(total_ends, r);
@@ -169,17 +265,9 @@ fn serve_batch(model: &DualModel, batch: Vec<PredictRequest>, stats: &ServerStat
     let mut start_off = 0u32;
     let mut end_off = 0u32;
     let mut spans = Vec::with_capacity(batch.len());
-    let mut bad: Vec<bool> = Vec::with_capacity(batch.len());
 
-    for req in &batch {
-        // validate
-        let valid = req.start_features.iter().all(|f| f.len() == d)
-            && req.end_features.iter().all(|f| f.len() == r)
-            && req.edges.iter().all(|&(s, e)| {
-                (s as usize) < req.start_features.len() && (e as usize) < req.end_features.len()
-            });
-        bad.push(!valid);
-        if !valid {
+    for (req, &is_bad) in batch.iter().zip(&bad) {
+        if is_bad {
             spans.push(0);
             continue;
         }
@@ -199,29 +287,35 @@ fn serve_batch(model: &DualModel, batch: Vec<PredictRequest>, stats: &ServerStat
     }
 
     let n_scored = start_idx.len();
-    let scores = if n_scored > 0 {
-        let ds = Dataset {
-            start_features,
-            end_features,
-            start_idx,
-            end_idx,
-            labels: vec![0.0; n_scored],
-            name: "server-batch".into(),
-        };
-        model.predict_threaded(&ds, threads)
-    } else {
-        Vec::new()
+    let ds = (n_scored > 0).then(|| Dataset {
+        start_features,
+        end_features,
+        start_idx,
+        end_idx,
+        labels: vec![0.0; n_scored],
+        name: "server-batch".into(),
+    });
+    MergedBatch { ds, spans, bad, requests: batch }
+}
+
+/// Score one merged batch on a pool worker and scatter the replies.
+fn score_batch(ctx: &PredictContext, batch: MergedBatch, stats: &ServerStats) {
+    let scores = match &batch.ds {
+        Some(ds) => ctx.predict_batch(ds),
+        None => Vec::new(),
     };
+    let n_scored = scores.len();
 
     // Update stats BEFORE delivering replies so a client that observed its
     // reply also observes the counters.
-    stats.requests.fetch_add(batch.len(), Ordering::Relaxed);
+    stats.requests.fetch_add(batch.requests.len(), Ordering::Relaxed);
     stats.batches.fetch_add(1, Ordering::Relaxed);
     stats.edges_scored.fetch_add(n_scored, Ordering::Relaxed);
 
-    // Scatter replies.
     let mut cursor = 0usize;
-    for (req, (&span, &is_bad)) in batch.iter().zip(spans.iter().zip(&bad)) {
+    for (req, (&span, &is_bad)) in
+        batch.requests.iter().zip(batch.spans.iter().zip(&batch.bad))
+    {
         if is_bad {
             let _ = req.reply.send(vec![f64::NAN; req.edges.len()]);
             continue;
@@ -237,6 +331,7 @@ mod tests {
     use crate::gvt::KronIndex;
     use crate::kernels::KernelKind;
     use crate::util::rng::Pcg32;
+    use std::sync::mpsc::channel;
 
     fn toy_model(seed: u64) -> DualModel {
         let mut rng = Pcg32::seeded(seed);
@@ -254,7 +349,12 @@ mod tests {
         }
     }
 
-    fn request_data(rng: &mut Pcg32, u: usize, v: usize, t: usize) -> (Vec<Vec<f64>>, Vec<Vec<f64>>, Vec<(u32, u32)>) {
+    fn request_data(
+        rng: &mut Pcg32,
+        u: usize,
+        v: usize,
+        t: usize,
+    ) -> (Vec<Vec<f64>>, Vec<Vec<f64>>, Vec<(u32, u32)>) {
         let sf: Vec<Vec<f64>> = (0..u).map(|_| rng.normal_vec(3)).collect();
         let ef: Vec<Vec<f64>> = (0..v).map(|_| rng.normal_vec(2)).collect();
         let edges: Vec<(u32, u32)> =
@@ -281,16 +381,40 @@ mod tests {
 
         let server = PredictServer::start(model, ServerConfig::default());
         let served = server.predict_blocking(sf, ef, edges).unwrap();
-        crate::linalg::vecops::assert_allclose(&served, &direct, 1e-10, 1e-10);
+        // the toy model has no zero duals, so this is exact, not just close
+        assert_eq!(served, direct);
         assert_eq!(server.stats().requests.load(Ordering::Relaxed), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn warm_cache_replies_are_bitwise_identical_to_cold() {
+        let model = toy_model(1106);
+        let mut rng = Pcg32::seeded(1107);
+        let (sf, ef, edges) = request_data(&mut rng, 4, 4, 12);
+        let server = PredictServer::start(
+            model,
+            ServerConfig { cache_vertices: 64, threads: 2, ..Default::default() },
+        );
+        let cold = server.predict_blocking(sf.clone(), ef.clone(), edges.clone()).unwrap();
+        let warm = server.predict_blocking(sf, ef, edges).unwrap();
+        assert_eq!(cold, warm);
+        let st = server.stats();
+        let hits = st.cache_hits.load(Ordering::Relaxed);
+        let misses = st.cache_misses.load(Ordering::Relaxed);
+        assert_eq!(hits + misses, 16, "two rounds × 4+4 vertex lookups");
+        assert!(misses <= 8, "only the cold request may compute rows, got {misses}");
+        assert!(hits >= 8, "the warm request must hit, got {hits}");
         server.shutdown();
     }
 
     #[test]
     fn concurrent_requests_are_all_answered() {
         let model = toy_model(1102);
-        let server =
-            PredictServer::start(model, ServerConfig { max_batch_edges: 1000, threads: 2 });
+        let server = PredictServer::start(
+            model,
+            ServerConfig { max_batch_edges: 1000, threads: 2, workers: 3, ..Default::default() },
+        );
         let sender = server.sender();
         let mut replies = Vec::new();
         let mut rng = Pcg32::seeded(1103);
@@ -298,16 +422,11 @@ mod tests {
             let (sf, ef, edges) = request_data(&mut rng, 3, 3, 6);
             let (tx, rx) = channel();
             sender
-                .send(PredictRequest {
-                    start_features: sf,
-                    end_features: ef,
-                    edges,
-                    reply: tx,
-                })
+                .send(PredictRequest { start_features: sf, end_features: ef, edges, reply: tx })
                 .unwrap();
             replies.push(rx);
         }
-        drop(sender); // release our clone so shutdown() can disconnect the worker
+        drop(sender); // release our clone so shutdown() can disconnect the merger
         for rx in replies {
             let scores = rx.recv().unwrap();
             assert_eq!(scores.len(), 6);
@@ -323,18 +442,49 @@ mod tests {
         let model = toy_model(1104);
         let server = PredictServer::start(model, ServerConfig::default());
         // bad: edge references missing vertex
-        let bad = server.predict_blocking(
-            vec![vec![0.0; 3]],
-            vec![vec![0.0; 2]],
-            vec![(0, 5)],
-        );
+        let bad = server.predict_blocking(vec![vec![0.0; 3]], vec![vec![0.0; 2]], vec![(0, 5)]);
         let scores = bad.unwrap();
         assert!(scores[0].is_nan());
+        // bad: wrong feature dimension
+        let bad_dim = server.predict_blocking(vec![vec![0.0; 7]], vec![vec![0.0; 2]], vec![(0, 0)]);
+        assert!(bad_dim.unwrap()[0].is_nan());
         // a good request still works afterwards
         let mut rng = Pcg32::seeded(1105);
         let (sf, ef, edges) = request_data(&mut rng, 2, 2, 3);
         let good = server.predict_blocking(sf, ef, edges).unwrap();
         assert!(good.iter().all(|s| s.is_finite()));
         server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_after_heavy_traffic_loses_nothing() {
+        let model = toy_model(1108);
+        let server = PredictServer::start(
+            model,
+            ServerConfig {
+                max_batch_edges: 64,
+                workers: 4,
+                threads: 1,
+                max_queue: 8,
+                cache_vertices: 16,
+            },
+        );
+        let mut rng = Pcg32::seeded(1109);
+        let mut replies = Vec::new();
+        let sender = server.sender();
+        for _ in 0..40 {
+            let (sf, ef, edges) = request_data(&mut rng, 2, 2, 4);
+            let (tx, rx) = channel();
+            sender
+                .send(PredictRequest { start_features: sf, end_features: ef, edges, reply: tx })
+                .unwrap();
+            replies.push(rx);
+        }
+        drop(sender);
+        server.shutdown(); // graceful: drains queue + pool before returning
+        for rx in replies {
+            let scores = rx.recv().expect("reply delivered before shutdown completed");
+            assert_eq!(scores.len(), 4);
+        }
     }
 }

@@ -158,15 +158,32 @@ impl DtiConfig {
                 let mut s = crate::linalg::vecops::dot(u.row(i), v.row(j));
                 s += self.bias_weight * (b[i] + c[j]);
                 s += 0.1 * rng.normal();
+                // A NaN/∞ affinity (e.g. a NaN `bias_weight` or
+                // `feature_noise` in the config) would silently scramble the
+                // order statistic below; reject it with a clear error.
+                assert!(
+                    s.is_finite(),
+                    "non-finite affinity {s} for edge ({i},{j}) — check DtiConfig \
+                     (bias_weight={}, feature_noise={}, flip={})",
+                    self.bias_weight,
+                    self.feature_noise,
+                    self.flip
+                );
                 scores.push(s);
             }
         }
         let n_actual = scores.len();
 
-        // Threshold at the (n - positives)-th order statistic → exact counts.
+        // Threshold at the (n - positives)-th order statistic → exact
+        // counts. total_cmp: a total order, so sorting can never panic.
+        // With no positives requested (or no edges) every label is negative.
         let mut sorted = scores.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let thresh = sorted[n_actual - self.positives.min(n_actual)];
+        sorted.sort_by(f64::total_cmp);
+        let thresh = if self.positives == 0 || n_actual == 0 {
+            f64::INFINITY
+        } else {
+            sorted[n_actual - self.positives.min(n_actual)]
+        };
         let mut labels: Vec<f64> = scores
             .iter()
             .map(|&s| if s >= thresh { 1.0 } else { -1.0 })
@@ -238,6 +255,22 @@ mod tests {
         let st = ds.stats();
         let rate = st.positives as f64 / st.edges as f64;
         assert!(rate < 0.12, "positive rate={rate}"); // IC is ~3.4% positive
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite affinity")]
+    fn nan_affinity_is_rejected_with_clear_error() {
+        // regression: a NaN bias_weight used to surface as an opaque
+        // `partial_cmp(b).unwrap()` panic deep inside the sort
+        let cfg = DtiConfig {
+            m: 5,
+            q: 5,
+            n: 10,
+            positives: 3,
+            bias_weight: f64::NAN,
+            ..Default::default()
+        };
+        let _ = cfg.generate();
     }
 
     #[test]

@@ -3,18 +3,26 @@
 
 /// AUC of `scores` against ±1 (or 0/1) `labels`. Returns 0.5 when one class
 /// is absent (undefined AUC — the conventional fallback).
+///
+/// A NaN score has no rank, so any NaN in `scores` makes the statistic
+/// undefined and the function returns NaN — a broken model must surface as
+/// a broken metric, not silently rank its NaN outputs as ties.
 pub fn auc(labels: &[f64], scores: &[f64]) -> f64 {
     assert_eq!(labels.len(), scores.len());
     let n = labels.len();
+    if scores.iter().any(|s| s.is_nan()) {
+        return f64::NAN;
+    }
     let n_pos = labels.iter().filter(|&&y| y > 0.0).count();
     let n_neg = n - n_pos;
     if n_pos == 0 || n_neg == 0 {
         return 0.5;
     }
 
-    // Sort indices by score; assign average ranks to ties.
+    // Sort indices by score (total_cmp: no NaN left by the guard above, and
+    // the comparator stays a total order regardless).
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&i, &j| scores[i].partial_cmp(&scores[j]).unwrap_or(std::cmp::Ordering::Equal));
+    order.sort_by(|&i, &j| scores[i].total_cmp(&scores[j]));
 
     let mut rank_sum_pos = 0.0;
     let mut i = 0;
@@ -81,6 +89,17 @@ mod tests {
     fn single_class_returns_half() {
         assert_eq!(auc(&[1.0, 1.0], &[0.1, 0.9]), 0.5);
         assert_eq!(auc(&[-1.0, -1.0], &[0.1, 0.9]), 0.5);
+    }
+
+    #[test]
+    fn nan_scores_surface_as_nan() {
+        // regression: NaN used to be treated as a tie with everything,
+        // silently corrupting the ranking
+        let labels = vec![1.0, -1.0, 1.0, -1.0];
+        assert!(auc(&labels, &[0.9, 0.1, f64::NAN, 0.4]).is_nan());
+        assert!(auc(&labels, &[f64::NAN; 4]).is_nan());
+        // infinities are legitimate scores with a well-defined rank
+        assert_eq!(auc(&labels, &[f64::INFINITY, 0.1, 0.9, f64::NEG_INFINITY]), 1.0);
     }
 
     #[test]

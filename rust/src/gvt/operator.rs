@@ -234,10 +234,10 @@ pub struct KronPredictOp {
     ghat_t: Matrix,
     khat_t: Matrix,
     test_idx: KronIndex,
-    train_idx: KronIndex,
-    plan: EdgePlan,
+    train_idx: Arc<KronIndex>,
+    plan: Arc<EdgePlan>,
     engine: GvtEngine,
-    pool: WorkspacePool,
+    pool: Arc<WorkspacePool>,
 }
 
 impl KronPredictOp {
@@ -245,11 +245,49 @@ impl KronPredictOp {
     /// two edge indices. Runs single-threaded until
     /// [`KronPredictOp::with_threads`] is applied.
     pub fn new(ghat: Matrix, khat: Matrix, test_idx: KronIndex, train_idx: KronIndex) -> Self {
-        test_idx.validate(ghat.rows(), khat.rows()).expect("test indices out of bounds");
         train_idx.validate(ghat.cols(), khat.cols()).expect("train indices out of bounds");
+        let plan = Arc::new(EdgePlan::build(&train_idx, ghat.cols(), khat.cols()));
+        KronPredictOp::with_shared(
+            ghat,
+            khat,
+            test_idx,
+            Arc::new(train_idx),
+            plan,
+            Arc::new(WorkspacePool::new()),
+        )
+    }
+
+    /// Like [`KronPredictOp::new`], but reusing the trained-side state — the
+    /// edge index, its prebuilt [`EdgePlan`], and a shared [`WorkspacePool`].
+    /// This is the serving fast path: that state never changes between
+    /// batches, so a long-lived prediction context builds it once and stamps
+    /// out one cheap operator per incoming test batch (only the test-side
+    /// transposes and validations remain per-batch; the train index is
+    /// validated in debug builds only — it is trusted context state, unlike
+    /// the per-request test index).
+    ///
+    /// Panics if `plan` was built for a different train index (length
+    /// mismatch; [`GvtEngine::apply_planned`] asserts the same invariant).
+    pub fn with_shared(
+        ghat: Matrix,
+        khat: Matrix,
+        test_idx: KronIndex,
+        train_idx: Arc<KronIndex>,
+        plan: Arc<EdgePlan>,
+        pool: Arc<WorkspacePool>,
+    ) -> Self {
+        test_idx.validate(ghat.rows(), khat.rows()).expect("test indices out of bounds");
+        debug_assert!(
+            train_idx.validate(ghat.cols(), khat.cols()).is_ok(),
+            "train indices out of bounds"
+        );
+        assert_eq!(
+            plan.len(),
+            train_idx.len(),
+            "edge plan was built for a different train index"
+        );
         let ghat_t = ghat.transpose();
         let khat_t = khat.transpose();
-        let plan = EdgePlan::build(&train_idx, ghat.cols(), khat.cols());
         KronPredictOp {
             ghat,
             khat,
@@ -259,7 +297,7 @@ impl KronPredictOp {
             train_idx,
             plan,
             engine: GvtEngine::serial(),
-            pool: WorkspacePool::new(),
+            pool,
         }
     }
 
@@ -275,6 +313,11 @@ impl KronPredictOp {
         self.test_idx.len()
     }
 
+    /// Number of training edges `n` (the required dual-coefficient length).
+    pub fn n_train(&self) -> usize {
+        self.train_idx.len()
+    }
+
     /// Predict scores for all test edges from dual coefficients `a` (length
     /// n). Zero coefficients are skipped.
     pub fn predict(&self, a: &[f64]) -> Vec<f64> {
@@ -284,7 +327,26 @@ impl KronPredictOp {
     }
 
     /// [`KronPredictOp::predict`] into a preallocated output buffer.
+    ///
+    /// Panics unless `a.len()` equals the number of training edges and
+    /// `out.len()` the number of test edges — a mismatched dual vector would
+    /// otherwise index out of bounds inside stage 1 or silently truncate the
+    /// scores.
     pub fn predict_into(&self, a: &[f64], out: &mut [f64]) {
+        assert_eq!(
+            a.len(),
+            self.train_idx.len(),
+            "dual coefficient vector has length {} but the model was trained on {} edges",
+            a.len(),
+            self.train_idx.len()
+        );
+        assert_eq!(
+            out.len(),
+            self.test_idx.len(),
+            "output buffer has length {} but {} test edges were requested",
+            out.len(),
+            self.test_idx.len()
+        );
         self.pool.with(|ws| {
             self.engine.apply_planned(
                 &self.ghat,
@@ -489,6 +551,64 @@ mod tests {
         let fast = op.predict(&a);
         let slow = explicit_apply(&ghat, &khat, &test_idx, &train_idx, &a);
         assert_allclose(&fast, &slow, 1e-10, 1e-10);
+    }
+
+    #[test]
+    #[should_panic(expected = "dual coefficient vector has length")]
+    fn predict_rejects_wrong_dual_length() {
+        let mut rng = Pcg32::seeded(89);
+        let train_idx = random_edges(&mut rng, 4, 5, 12);
+        let test_idx = random_edges(&mut rng, 3, 6, 8);
+        let ghat = Matrix::from_fn(3, 4, |_, _| rng.normal());
+        let khat = Matrix::from_fn(6, 5, |_, _| rng.normal());
+        let op = KronPredictOp::new(ghat, khat, test_idx, train_idx);
+        // 11 coefficients for 12 training edges: must panic, not truncate
+        let _ = op.predict(&rng.normal_vec(11));
+    }
+
+    #[test]
+    #[should_panic(expected = "output buffer has length")]
+    fn predict_into_rejects_wrong_output_length() {
+        let mut rng = Pcg32::seeded(90);
+        let train_idx = random_edges(&mut rng, 4, 5, 12);
+        let test_idx = random_edges(&mut rng, 3, 6, 8);
+        let ghat = Matrix::from_fn(3, 4, |_, _| rng.normal());
+        let khat = Matrix::from_fn(6, 5, |_, _| rng.normal());
+        let op = KronPredictOp::new(ghat, khat, test_idx, train_idx);
+        let a = rng.normal_vec(12);
+        let mut out = vec![0.0; 7];
+        op.predict_into(&a, &mut out);
+    }
+
+    #[test]
+    fn shared_plan_operator_matches_fresh_operator() {
+        let mut rng = Pcg32::seeded(91);
+        let (q, m, n) = (5, 6, 20);
+        let train_idx = random_edges(&mut rng, q, m, n);
+        let shared_idx = Arc::new(train_idx.clone());
+        let plan = Arc::new(EdgePlan::build(&train_idx, q, m));
+        let pool = Arc::new(WorkspacePool::new());
+        let a = rng.normal_vec(n);
+        // two different "batches" sharing one index + plan + pool
+        for seed in [0u64, 1] {
+            let mut brng = Pcg32::seeded(92 + seed);
+            let test_idx = random_edges(&mut brng, 3, 4, 7);
+            let ghat = Matrix::from_fn(3, q, |_, _| brng.normal());
+            let khat = Matrix::from_fn(4, m, |_, _| brng.normal());
+            let fresh =
+                KronPredictOp::new(ghat.clone(), khat.clone(), test_idx.clone(), train_idx.clone())
+                    .predict(&a);
+            let shared = KronPredictOp::with_shared(
+                ghat,
+                khat,
+                test_idx,
+                shared_idx.clone(),
+                plan.clone(),
+                pool.clone(),
+            )
+            .predict(&a);
+            assert_eq!(fresh, shared, "batch {seed}");
+        }
     }
 
     #[test]

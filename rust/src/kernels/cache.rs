@@ -1,0 +1,375 @@
+//! Content-hashed per-vertex kernel-row cache for the serving pipeline.
+//!
+//! Serving traffic for drug–target and collaborative-filtering workloads
+//! repeats vertices across requests far more often than it repeats whole
+//! requests, so the cache sits in front of the test–train kernel blocks
+//! `K̂` / `Ĝ` at *vertex* granularity: the key is the vertex's feature vector
+//! (by content — the exact `f64` bit patterns), the value is its kernel row
+//! against the training vertices. Rows are produced by
+//! [`kernel_row_into`](super::compute::kernel_row_into), which is bitwise
+//! identical to the corresponding [`kernel_matrix`](super::kernel_matrix)
+//! row, so mixing cached and freshly computed rows cannot perturb scores.
+//!
+//! The cache is a bounded LRU (intrusive doubly-linked list over a slab, so
+//! touch and evict are O(1)) behind a [`Mutex`]; hit/miss counters are
+//! atomics shared with the owner (the server surfaces them in
+//! `ServerStats`). Lookups clone out an [`Arc`] of the row, so the lock is
+//! never held while a caller computes a missing row.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Sentinel for "no neighbor" in the intrusive LRU list.
+const NIL: usize = usize::MAX;
+
+/// Cache key: the vertex's feature vector by content. Comparing the raw bit
+/// patterns (rather than `f64` values) keeps `Eq`/`Hash` total — two NaN
+/// features with the same payload are the same vertex, `0.0` and `-0.0` are
+/// distinct — and guarantees a hit returns a row computed from *identical*
+/// input bits.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct FeatureKey(Box<[u64]>);
+
+impl FeatureKey {
+    fn new(features: &[f64]) -> FeatureKey {
+        FeatureKey(features.iter().map(|f| f.to_bits()).collect())
+    }
+}
+
+/// One slab entry: the key (kept for removal on eviction), the cached kernel
+/// row, and the intrusive list links (`prev` is toward the MRU end).
+struct Slot {
+    key: FeatureKey,
+    row: Arc<[f64]>,
+    prev: usize,
+    next: usize,
+}
+
+/// Map + slab + list head/tail, all guarded by one lock.
+struct LruInner {
+    map: HashMap<FeatureKey, usize>,
+    slots: Vec<Slot>,
+    /// Slab indices available for reuse after eviction.
+    free: Vec<usize>,
+    /// Most recently used slot (NIL when empty).
+    head: usize,
+    /// Least recently used slot (NIL when empty).
+    tail: usize,
+}
+
+impl LruInner {
+    /// Unlink `i` from the list (it must be linked).
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.slots[i].prev, self.slots[i].next);
+        if prev == NIL {
+            self.head = next;
+        } else {
+            self.slots[prev].next = next;
+        }
+        if next == NIL {
+            self.tail = prev;
+        } else {
+            self.slots[next].prev = prev;
+        }
+    }
+
+    /// Link `i` at the MRU end.
+    fn push_front(&mut self, i: usize) {
+        self.slots[i].prev = NIL;
+        self.slots[i].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+}
+
+/// Bounded LRU cache of per-vertex kernel rows, keyed by feature content.
+///
+/// Thread-safe: lookups and inserts take an internal lock only long enough to
+/// touch the index; the row itself is shared via [`Arc`], and a missing row
+/// is computed by the caller *outside* the lock (two racing misses both
+/// compute the row — harmless, the values are identical by construction).
+pub struct KernelRowCache {
+    capacity: usize,
+    inner: Mutex<LruInner>,
+    hits: Arc<AtomicUsize>,
+    misses: Arc<AtomicUsize>,
+}
+
+impl std::fmt::Debug for KernelRowCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KernelRowCache")
+            .field("capacity", &self.capacity)
+            .field("len", &self.len())
+            .field("hits", &self.hits())
+            .field("misses", &self.misses())
+            .finish()
+    }
+}
+
+impl KernelRowCache {
+    /// Cache holding at most `capacity` vertex rows (`0` caches nothing —
+    /// every lookup misses).
+    pub fn new(capacity: usize) -> KernelRowCache {
+        KernelRowCache::with_counters(
+            capacity,
+            Arc::new(AtomicUsize::new(0)),
+            Arc::new(AtomicUsize::new(0)),
+        )
+    }
+
+    /// Like [`KernelRowCache::new`], but incrementing externally owned
+    /// hit/miss counters (the server passes its `ServerStats` fields so both
+    /// per-side caches aggregate into one pair).
+    pub fn with_counters(
+        capacity: usize,
+        hits: Arc<AtomicUsize>,
+        misses: Arc<AtomicUsize>,
+    ) -> KernelRowCache {
+        KernelRowCache {
+            capacity,
+            inner: Mutex::new(LruInner {
+                map: HashMap::new(),
+                slots: Vec::new(),
+                free: Vec::new(),
+                head: NIL,
+                tail: NIL,
+            }),
+            hits,
+            misses,
+        }
+    }
+
+    /// Maximum number of cached rows.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Number of rows currently cached.
+    pub fn len(&self) -> usize {
+        self.lock().map.len()
+    }
+
+    /// Whether the cache currently holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cache hits so far.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses so far.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, LruInner> {
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Look up the cached row for `features`, marking it most recently used.
+    /// Counts a hit or a miss.
+    pub fn lookup(&self, features: &[f64]) -> Option<Arc<[f64]>> {
+        if self.capacity == 0 {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let key = FeatureKey::new(features);
+        let mut inner = self.lock();
+        if let Some(&i) = inner.map.get(&key) {
+            inner.unlink(i);
+            inner.push_front(i);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            Some(inner.slots[i].row.clone())
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Insert a freshly computed row, evicting the least recently used entry
+    /// if the cache is full. If another thread inserted the same key in the
+    /// meantime, the existing row wins (the values are identical anyway).
+    pub fn insert(&self, features: &[f64], row: Arc<[f64]>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let key = FeatureKey::new(features);
+        let mut inner = self.lock();
+        if inner.map.contains_key(&key) {
+            return;
+        }
+        if inner.map.len() >= self.capacity {
+            let lru = inner.tail;
+            debug_assert_ne!(lru, NIL);
+            inner.unlink(lru);
+            let old_key = inner.slots[lru].key.clone();
+            inner.map.remove(&old_key);
+            inner.free.push(lru);
+        }
+        let slot = Slot { key: key.clone(), row, prev: NIL, next: NIL };
+        let i = match inner.free.pop() {
+            Some(i) => {
+                inner.slots[i] = slot;
+                i
+            }
+            None => {
+                inner.slots.push(slot);
+                inner.slots.len() - 1
+            }
+        };
+        inner.push_front(i);
+        inner.map.insert(key, i);
+    }
+
+    /// Convenience: [`KernelRowCache::lookup`] or compute-and-[`insert`]
+    /// (`compute` fills the row; it runs without holding the cache lock).
+    ///
+    /// [`insert`]: KernelRowCache::insert
+    pub fn get_or_compute(
+        &self,
+        features: &[f64],
+        row_len: usize,
+        compute: impl FnOnce(&mut [f64]),
+    ) -> Arc<[f64]> {
+        if let Some(row) = self.lookup(features) {
+            return row;
+        }
+        let mut row = vec![0.0; row_len];
+        compute(&mut row);
+        let row: Arc<[f64]> = row.into();
+        self.insert(features, row.clone());
+        row
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(v: f64, n: usize) -> Arc<[f64]> {
+        vec![v; n].into()
+    }
+
+    #[test]
+    fn lookup_after_insert_hits() {
+        let cache = KernelRowCache::new(4);
+        assert!(cache.lookup(&[1.0, 2.0]).is_none());
+        cache.insert(&[1.0, 2.0], row(7.0, 3));
+        let got = cache.lookup(&[1.0, 2.0]).expect("hit");
+        assert_eq!(&got[..], &[7.0; 3]);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+    }
+
+    #[test]
+    fn keys_are_content_hashed() {
+        let cache = KernelRowCache::new(4);
+        cache.insert(&[1.0, 2.0], row(1.0, 2));
+        // equal content, different allocation: still a hit
+        let same = [1.0, 2.0];
+        assert!(cache.lookup(&same).is_some());
+        // different content misses; -0.0 is a distinct bit pattern from 0.0
+        assert!(cache.lookup(&[1.0, 2.5]).is_none());
+        cache.insert(&[0.0], row(2.0, 1));
+        assert!(cache.lookup(&[-0.0]).is_none());
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let cache = KernelRowCache::new(2);
+        cache.insert(&[1.0], row(1.0, 1));
+        cache.insert(&[2.0], row(2.0, 1));
+        // touch [1.0] so [2.0] becomes the LRU entry
+        assert!(cache.lookup(&[1.0]).is_some());
+        cache.insert(&[3.0], row(3.0, 1));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.lookup(&[2.0]).is_none(), "LRU entry must be evicted");
+        assert!(cache.lookup(&[1.0]).is_some());
+        assert!(cache.lookup(&[3.0]).is_some());
+    }
+
+    #[test]
+    fn eviction_churn_keeps_exactly_capacity() {
+        let cache = KernelRowCache::new(3);
+        for i in 0..20 {
+            cache.insert(&[i as f64], row(i as f64, 2));
+            assert!(cache.len() <= 3);
+        }
+        assert_eq!(cache.len(), 3);
+        // the last three inserted survive, in MRU order 19, 18, 17
+        for i in 17..20 {
+            let got = cache.lookup(&[i as f64]).expect("recent entry cached");
+            assert_eq!(got[0], i as f64);
+        }
+        assert!(cache.lookup(&[16.0]).is_none());
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let cache = KernelRowCache::new(0);
+        cache.insert(&[1.0], row(1.0, 1));
+        assert!(cache.lookup(&[1.0]).is_none());
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.misses(), 1);
+    }
+
+    #[test]
+    fn get_or_compute_computes_once() {
+        let cache = KernelRowCache::new(4);
+        let mut calls = 0;
+        for _ in 0..3 {
+            let got = cache.get_or_compute(&[5.0, 6.0], 2, |out| {
+                calls += 1;
+                out.copy_from_slice(&[5.0, 6.0]);
+            });
+            assert_eq!(&got[..], &[5.0, 6.0]);
+        }
+        assert_eq!(calls, 1);
+        assert_eq!(cache.hits(), 2);
+        assert_eq!(cache.misses(), 1);
+    }
+
+    #[test]
+    fn shared_counters_aggregate() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let misses = Arc::new(AtomicUsize::new(0));
+        let a = KernelRowCache::with_counters(2, hits.clone(), misses.clone());
+        let b = KernelRowCache::with_counters(2, hits.clone(), misses.clone());
+        a.insert(&[1.0], row(1.0, 1));
+        b.insert(&[2.0], row(2.0, 1));
+        a.lookup(&[1.0]);
+        b.lookup(&[2.0]);
+        b.lookup(&[9.0]);
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+        assert_eq!(misses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn concurrent_access_is_consistent() {
+        let cache = Arc::new(KernelRowCache::new(8));
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let cache = Arc::clone(&cache);
+                scope.spawn(move || {
+                    for i in 0..50 {
+                        let feat = [(i % 10) as f64, t as f64 % 2.0];
+                        let got = cache.get_or_compute(&feat, 2, |out| {
+                            out.copy_from_slice(&feat);
+                        });
+                        assert_eq!(&got[..], &feat);
+                    }
+                });
+            }
+        });
+        assert!(cache.len() <= 8);
+        assert_eq!(cache.hits() + cache.misses(), 200);
+    }
+}

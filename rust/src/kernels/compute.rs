@@ -37,6 +37,57 @@ pub fn kernel_value(kind: KernelKind, x: &[f64], y: &[f64]) -> f64 {
     }
 }
 
+/// Squared Euclidean norms of every row of `x` — the per-vertex
+/// precomputation shared by [`kernel_matrix`] and [`kernel_row_into`].
+pub fn row_sq_norms(x: &Matrix) -> Vec<f64> {
+    (0..x.rows()).map(|i| dot(x.row(i), x.row(i))).collect()
+}
+
+/// One kernel-matrix row `out[j] = k(x, x2_j)` against every row of `x2`.
+///
+/// `sq2` must be [`row_sq_norms`]`(x2)` (it is only read by the Gaussian and
+/// Tanimoto kernels, but callers should always pass it so the signature stays
+/// kernel-agnostic). The result is **bitwise identical** to the corresponding
+/// row of [`kernel_matrix`]: both compute each entry from the same
+/// [`dot`]-product and apply the same scalar formula in the same order, and
+/// `matmul_nt` evaluates output rows independently. This is what lets the
+/// serving-side per-vertex row cache ([`super::cache::KernelRowCache`]) mix
+/// cached and freshly computed rows without perturbing scores.
+pub fn kernel_row_into(kind: KernelKind, x: &[f64], x2: &Matrix, sq2: &[f64], out: &mut [f64]) {
+    assert_eq!(x.len(), x2.cols(), "feature dim mismatch");
+    assert_eq!(out.len(), x2.rows(), "output length mismatch");
+    debug_assert_eq!(sq2.len(), x2.rows());
+    match kind {
+        KernelKind::Linear => {
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = dot(x, x2.row(j));
+            }
+        }
+        KernelKind::Gaussian { gamma } => {
+            let si = dot(x, x);
+            for (j, o) in out.iter_mut().enumerate() {
+                let ip = dot(x, x2.row(j));
+                // clamp tiny negative round-off in the squared distance
+                let d2 = (si + sq2[j] - 2.0 * ip).max(0.0);
+                *o = (-gamma * d2).exp();
+            }
+        }
+        KernelKind::Polynomial { gamma, coef0, degree } => {
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = (gamma * dot(x, x2.row(j)) + coef0).powi(degree as i32);
+            }
+        }
+        KernelKind::Tanimoto => {
+            let si = dot(x, x);
+            for (j, o) in out.iter_mut().enumerate() {
+                let ip = dot(x, x2.row(j));
+                let denom = si + sq2[j] - ip;
+                *o = if denom <= 0.0 { 0.0 } else { ip / denom };
+            }
+        }
+    }
+}
+
 /// Kernel matrix `K[i,j] = k(x1_i, x2_j)` for row-feature matrices.
 pub fn kernel_matrix(kind: KernelKind, x1: &Matrix, x2: &Matrix) -> Matrix {
     assert_eq!(x1.cols(), x2.cols(), "feature dim mismatch");
@@ -46,8 +97,8 @@ pub fn kernel_matrix(kind: KernelKind, x1: &Matrix, x2: &Matrix) -> Matrix {
             let mut k = x1.matmul_nt(x2); // inner products
             let n1 = x1.rows();
             let n2 = x2.rows();
-            let sq1: Vec<f64> = (0..n1).map(|i| dot(x1.row(i), x1.row(i))).collect();
-            let sq2: Vec<f64> = (0..n2).map(|j| dot(x2.row(j), x2.row(j))).collect();
+            let sq1 = row_sq_norms(x1);
+            let sq2 = row_sq_norms(x2);
             for i in 0..n1 {
                 let row = k.row_mut(i);
                 let si = sq1[i];
@@ -68,8 +119,8 @@ pub fn kernel_matrix(kind: KernelKind, x1: &Matrix, x2: &Matrix) -> Matrix {
             let mut k = x1.matmul_nt(x2);
             let n1 = x1.rows();
             let n2 = x2.rows();
-            let sq1: Vec<f64> = (0..n1).map(|i| dot(x1.row(i), x1.row(i))).collect();
-            let sq2: Vec<f64> = (0..n2).map(|j| dot(x2.row(j), x2.row(j))).collect();
+            let sq1 = row_sq_norms(x1);
+            let sq2 = row_sq_norms(x2);
             for i in 0..n1 {
                 let row = k.row_mut(i);
                 for j in 0..n2 {
@@ -115,6 +166,33 @@ mod tests {
                             k.get(i, j)
                         );
                     }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn kernel_row_is_bitwise_identical_to_matrix_row() {
+        // The serving-side vertex cache depends on this exact equality: a row
+        // computed in isolation must match the row `kernel_matrix` produces.
+        proptest::check_n(0xCA5E, 8, |rng| {
+            let n1 = 1 + rng.below(5);
+            let n2 = 1 + rng.below(7);
+            let d = 1 + rng.below(6);
+            let x1 = random_features(rng, n1, d);
+            let x2 = random_features(rng, n2, d);
+            let sq2 = row_sq_norms(&x2);
+            for kind in [
+                KernelKind::Linear,
+                KernelKind::Gaussian { gamma: 0.7 },
+                KernelKind::Polynomial { gamma: 0.5, coef0: 1.0, degree: 3 },
+                KernelKind::Tanimoto,
+            ] {
+                let k = kernel_matrix(kind, &x1, &x2);
+                let mut row = vec![0.0; n2];
+                for i in 0..n1 {
+                    kernel_row_into(kind, x1.row(i), &x2, &sq2, &mut row);
+                    assert_eq!(row.as_slice(), k.row(i), "{kind:?} row {i}");
                 }
             }
         });

@@ -8,9 +8,11 @@
 //! (Tanimoto is the standard choice for chemical fingerprints, the kind of
 //! feature the original Ki/GPCR/IC/E data carries).
 
+pub mod cache;
 pub mod compute;
 
-pub use compute::{kernel_matrix, kernel_value};
+pub use cache::KernelRowCache;
+pub use compute::{kernel_matrix, kernel_row_into, kernel_value, row_sq_norms};
 
 use crate::linalg::Matrix;
 

@@ -183,20 +183,40 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let model = KronSvm::new(cfg).fit(&train)?;
     let d = model.train_start_features.cols();
     let r = model.train_end_features.cols();
-    let server = PredictServer::start(model, ServerConfig { threads, ..Default::default() });
+    let server = PredictServer::start(
+        model,
+        ServerConfig {
+            threads,
+            workers: args.get_usize("serve-workers", 2),
+            cache_vertices: args.get_usize("cache-vertices", 1024),
+            max_queue: args.get_usize("max-queue", 1024),
+            ..Default::default()
+        },
+    );
 
+    // Real serving traffic repeats vertices across requests (the same drug
+    // against new targets, the same user against new items); draw request
+    // vertices from a bounded pool so the kernel-row cache sees that pattern.
     let n_requests = args.get_usize("requests", 100);
+    let pool_size = args.get_usize("vertex-pool", 16).max(4);
     let mut rng = Pcg32::seeded(seed ^ 0x5E7);
+    let start_pool: Vec<Vec<f64>> =
+        (0..pool_size).map(|_| rng.uniform_vec(d, 0.0, 100.0)).collect();
+    let end_pool: Vec<Vec<f64>> = (0..pool_size).map(|_| rng.uniform_vec(r, 0.0, 100.0)).collect();
     let timer = Timer::start();
     for _ in 0..n_requests {
-        let sf: Vec<Vec<f64>> = (0..4).map(|_| rng.uniform_vec(d, 0.0, 100.0)).collect();
-        let ef: Vec<Vec<f64>> = (0..4).map(|_| rng.uniform_vec(r, 0.0, 100.0)).collect();
-        let edges: Vec<(u32, u32)> = (0..8).map(|_| (rng.below(4) as u32, rng.below(4) as u32)).collect();
+        let sf: Vec<Vec<f64>> =
+            (0..4).map(|_| start_pool[rng.below(pool_size)].clone()).collect();
+        let ef: Vec<Vec<f64>> = (0..4).map(|_| end_pool[rng.below(pool_size)].clone()).collect();
+        let edges: Vec<(u32, u32)> =
+            (0..8).map(|_| (rng.below(4) as u32, rng.below(4) as u32)).collect();
         let scores = server.predict_blocking(sf, ef, edges)?;
         assert_eq!(scores.len(), 8);
     }
     let secs = timer.elapsed_secs();
     let st = server.stats();
+    let hits = st.cache_hits.load(std::sync::atomic::Ordering::Relaxed);
+    let misses = st.cache_misses.load(std::sync::atomic::Ordering::Relaxed);
     println!(
         "served {} requests ({} edges) in {:.3}s — {:.0} edges/s, {} batches",
         st.requests.load(std::sync::atomic::Ordering::Relaxed),
@@ -204,6 +224,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         secs,
         st.edges_scored.load(std::sync::atomic::Ordering::Relaxed) as f64 / secs,
         st.batches.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    println!(
+        "kernel-row cache: {hits} hits / {misses} misses ({:.0}% hit rate)",
+        100.0 * hits as f64 / (hits + misses).max(1) as f64
     );
     server.shutdown();
     Ok(())
@@ -242,7 +266,11 @@ fn usage() -> ! {
          common flags: --data checker|checker+|ki|gpcr|ic|e --method kronsvm|kronridge|libsvm|sgd-hinge|sgd-logistic|knn\n\
                        --kernel linear|gaussian:G --lambda L --seed S --scale F\n\
                        --threads N   GVT matvec worker threads (0 = all cores; identical results, just faster)\n\
-                       --fold-workers N   (cv only) train folds concurrently"
+                       --fold-workers N   (cv only) train folds concurrently\n\
+         serve flags:  --serve-workers N   scoring-pool threads (batches scored concurrently)\n\
+                       --cache-vertices N  per-side kernel-row LRU capacity (0 = off)\n\
+                       --max-queue N       request-queue bound (backpressure)\n\
+                       --vertex-pool P     distinct request vertices per side (repeat-vertex traffic)"
     );
     std::process::exit(2)
 }

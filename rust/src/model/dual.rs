@@ -6,9 +6,14 @@
 //! versus `O(t·‖a‖₀)` for the explicit decision function (eq. 6) — the
 //! comparison of Fig. 6 (middle).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
 use crate::data::Dataset;
-use crate::gvt::{KronIndex, KronPredictOp};
-use crate::kernels::{kernel_matrix, kernel_value, KernelKind};
+use crate::gvt::{EdgePlan, KronIndex, KronPredictOp, WorkspacePool};
+use crate::kernels::{
+    kernel_matrix, kernel_row_into, kernel_value, row_sq_norms, KernelKind, KernelRowCache,
+};
 use crate::linalg::Matrix;
 
 /// A trained dual model. Stores the training vertex features (to evaluate
@@ -62,6 +67,42 @@ impl DualModel {
         KronPredictOp::new(ghat, khat, test.kron_index(), self.train_idx.clone())
     }
 
+    /// Build a long-lived serving context around this model: prunes zero
+    /// coefficients once, prebuilds the train-side [`EdgePlan`], precomputes
+    /// the per-vertex squared norms the kernel rows need, and (when
+    /// `cache_vertices > 0`) attaches a per-side LRU kernel-row cache. Every
+    /// incoming test batch then pays only for its own test-side work — see
+    /// [`PredictContext`].
+    ///
+    /// `threads` shards each batch's GVT matvec (`0` = all cores, `1` =
+    /// serial); `cache_vertices` bounds each side's cache in vertices.
+    pub fn predict_context(&self, threads: usize, cache_vertices: usize) -> PredictContext {
+        let pruned = self.pruned();
+        let q_train = pruned.train_end_features.rows();
+        let m_train = pruned.train_start_features.rows();
+        let plan = Arc::new(EdgePlan::build(&pruned.train_idx, q_train, m_train));
+        let hits = Arc::new(AtomicUsize::new(0));
+        let misses = Arc::new(AtomicUsize::new(0));
+        PredictContext {
+            start_sq: row_sq_norms(&pruned.train_start_features),
+            end_sq: row_sq_norms(&pruned.train_end_features),
+            dual_coef: pruned.dual_coef,
+            train_idx: Arc::new(pruned.train_idx),
+            train_start_features: pruned.train_start_features,
+            train_end_features: pruned.train_end_features,
+            kernel_d: pruned.kernel_d,
+            kernel_t: pruned.kernel_t,
+            plan,
+            pool: Arc::new(WorkspacePool::new()),
+            threads,
+            cache_vertices,
+            start_cache: make_cache(cache_vertices, &hits, &misses),
+            end_cache: make_cache(cache_vertices, &hits, &misses),
+            hits,
+            misses,
+        }
+    }
+
     /// Predict scores for all edges of `test` via the generalized vec trick.
     pub fn predict(&self, test: &Dataset) -> Vec<f64> {
         self.predict_op(test).predict(&self.dual_coef)
@@ -97,6 +138,152 @@ impl DualModel {
             out[h] = acc;
         }
         out
+    }
+}
+
+fn make_cache(
+    capacity: usize,
+    hits: &Arc<AtomicUsize>,
+    misses: &Arc<AtomicUsize>,
+) -> Option<KernelRowCache> {
+    (capacity > 0).then(|| KernelRowCache::with_counters(capacity, hits.clone(), misses.clone()))
+}
+
+/// Long-lived, cache-aware serving state for a trained [`DualModel`].
+///
+/// [`DualModel::predict_op`] rebuilds the full test–train kernel blocks and a
+/// fresh [`EdgePlan`] for every batch; this context hoists everything that
+/// depends only on the *trained* side out of the per-batch path:
+///
+/// * **pruned coefficients + edge index** — zero duals are dropped once, so
+///   every batch pays `O(‖a‖₀)` instead of `O(n)` in stage 1 (eq. 5);
+/// * **prebuilt [`EdgePlan`]** — the stage-1 bucketing of the train edges,
+///   shared by every batch operator;
+/// * **pooled workspaces** — scratch buffers recycled across batches (and
+///   across concurrent callers: the context is `Sync`);
+/// * **per-vertex kernel-row LRU caches** — a test vertex seen before (by
+///   feature content) reuses its `K̂`/`Ĝ` row instead of recomputing it.
+///
+/// Cached, sharded, and cold-path results are all **bitwise identical** for
+/// a given batch: cached rows are produced by
+/// [`kernel_row_into`], which matches [`kernel_matrix`] rows exactly, and the
+/// GVT engine is bitwise deterministic across thread counts. (Relative to
+/// [`DualModel::predict`], pruning can flip the Algorithm-1 branch choice
+/// when the model holds explicit zeros, which changes accumulation order at
+/// the ~1e-16 level; models without zero duals match `predict` bitwise.)
+pub struct PredictContext {
+    dual_coef: Vec<f64>,
+    /// Pruned training edge index, shared (not copied) into every batch
+    /// operator.
+    train_idx: Arc<KronIndex>,
+    train_start_features: Matrix,
+    train_end_features: Matrix,
+    kernel_d: KernelKind,
+    kernel_t: KernelKind,
+    /// Squared row norms of the train features (Gaussian/Tanimoto rows).
+    start_sq: Vec<f64>,
+    end_sq: Vec<f64>,
+    plan: Arc<EdgePlan>,
+    pool: Arc<WorkspacePool>,
+    threads: usize,
+    cache_vertices: usize,
+    start_cache: Option<KernelRowCache>,
+    end_cache: Option<KernelRowCache>,
+    hits: Arc<AtomicUsize>,
+    misses: Arc<AtomicUsize>,
+}
+
+impl PredictContext {
+    /// Rebind the cache hit/miss counters to externally owned atomics (the
+    /// prediction server passes its `ServerStats` fields). Resets the caches;
+    /// call right after [`DualModel::predict_context`].
+    pub fn with_cache_counters(
+        mut self,
+        hits: Arc<AtomicUsize>,
+        misses: Arc<AtomicUsize>,
+    ) -> Self {
+        self.start_cache = make_cache(self.cache_vertices, &hits, &misses);
+        self.end_cache = make_cache(self.cache_vertices, &hits, &misses);
+        self.hits = hits;
+        self.misses = misses;
+        self
+    }
+
+    /// Number of non-zero dual coefficients retained (`‖a‖₀`).
+    pub fn nnz(&self) -> usize {
+        self.dual_coef.len()
+    }
+
+    /// Worker threads used per batch matvec.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Kernel-row cache hits so far (both sides combined).
+    pub fn cache_hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Kernel-row cache misses so far (both sides combined).
+    pub fn cache_misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Fill `block` (`rows × train.rows()`) with kernel rows for the test
+    /// `features`, through the cache when one is attached.
+    fn kernel_block(
+        &self,
+        kind: KernelKind,
+        features: &Matrix,
+        train: &Matrix,
+        train_sq: &[f64],
+        cache: &Option<KernelRowCache>,
+    ) -> Matrix {
+        let mut block = Matrix::zeros(features.rows(), train.rows());
+        for i in 0..features.rows() {
+            let x = features.row(i);
+            match cache {
+                Some(cache) => {
+                    let row = cache.get_or_compute(x, train.rows(), |out| {
+                        kernel_row_into(kind, x, train, train_sq, out)
+                    });
+                    block.row_mut(i).copy_from_slice(&row);
+                }
+                None => kernel_row_into(kind, x, train, train_sq, block.row_mut(i)),
+            }
+        }
+        block
+    }
+
+    /// Predict scores for one batch of test edges. Per-batch cost is the
+    /// test-side kernel rows (cache misses only), two small transposes, and
+    /// one GVT matvec sharded over the context's threads — the train-side
+    /// index, plan, and workspaces are shared by reference, not rebuilt.
+    pub fn predict_batch(&self, test: &Dataset) -> Vec<f64> {
+        let khat = self.kernel_block(
+            self.kernel_d,
+            &test.start_features,
+            &self.train_start_features,
+            &self.start_sq,
+            &self.start_cache,
+        );
+        let ghat = self.kernel_block(
+            self.kernel_t,
+            &test.end_features,
+            &self.train_end_features,
+            &self.end_sq,
+            &self.end_cache,
+        );
+        KronPredictOp::with_shared(
+            ghat,
+            khat,
+            test.kron_index(),
+            self.train_idx.clone(),
+            self.plan.clone(),
+            self.pool.clone(),
+        )
+        .with_threads(self.threads)
+        .predict(&self.dual_coef)
     }
 }
 
@@ -140,6 +327,64 @@ mod tests {
             let slow = model.predict_explicit(&test);
             assert_allclose(&fast, &slow, 1e-9, 1e-9);
         }
+    }
+
+    #[test]
+    fn context_matches_predict_bitwise_without_zero_duals() {
+        // No zero coefficients → pruning is a no-op → the context must be
+        // bitwise identical to DualModel::predict, cold or warm, any threads.
+        for kernel in [KernelKind::Linear, KernelKind::Gaussian { gamma: 0.4 }] {
+            let (model, test) = toy_model_and_test(310, kernel);
+            let direct = model.predict(&test);
+            for threads in [1, 2, 4] {
+                for cache_vertices in [0, 64] {
+                    let ctx = model.predict_context(threads, cache_vertices);
+                    let cold = ctx.predict_batch(&test);
+                    let warm = ctx.predict_batch(&test);
+                    assert_eq!(cold, direct, "{kernel:?} t={threads} c={cache_vertices}");
+                    assert_eq!(warm, direct, "{kernel:?} warm t={threads} c={cache_vertices}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn context_cache_counts_hits_and_misses() {
+        let (model, test) = toy_model_and_test(311, KernelKind::Gaussian { gamma: 0.3 });
+        let ctx = model.predict_context(1, 64);
+        assert_eq!(ctx.cache_hits() + ctx.cache_misses(), 0);
+        ctx.predict_batch(&test);
+        let vertices = test.m() + test.q();
+        let cold_misses = ctx.cache_misses();
+        assert_eq!(ctx.cache_hits() + cold_misses, vertices, "cold batch looks up every vertex");
+        assert!(cold_misses > 0, "a cold cache must miss");
+        ctx.predict_batch(&test);
+        assert_eq!(ctx.cache_misses(), cold_misses, "warm batch recomputes nothing");
+        assert_eq!(ctx.cache_hits() + cold_misses, 2 * vertices);
+    }
+
+    #[test]
+    fn context_with_tiny_cache_still_correct_under_eviction() {
+        let (model, test) = toy_model_and_test(312, KernelKind::Gaussian { gamma: 0.5 });
+        let direct = model.predict(&test);
+        let ctx = model.predict_context(1, 1); // evicts on every other vertex
+        for round in 0..3 {
+            assert_eq!(ctx.predict_batch(&test), direct, "round {round}");
+        }
+    }
+
+    #[test]
+    fn context_prunes_zero_duals() {
+        let (mut model, test) = toy_model_and_test(313, KernelKind::Gaussian { gamma: 0.2 });
+        for i in 0..model.dual_coef.len() {
+            if i % 3 == 0 {
+                model.dual_coef[i] = 0.0;
+            }
+        }
+        let ctx = model.predict_context(1, 0);
+        assert_eq!(ctx.nnz(), model.nnz());
+        // pruning may flip the Algorithm-1 branch → allclose, not bitwise
+        assert_allclose(&ctx.predict_batch(&test), &model.predict(&test), 1e-10, 1e-10);
     }
 
     #[test]

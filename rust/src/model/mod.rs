@@ -9,5 +9,5 @@
 pub mod dual;
 pub mod primal;
 
-pub use dual::DualModel;
+pub use dual::{DualModel, PredictContext};
 pub use primal::{PrimalKronOp, PrimalModel};

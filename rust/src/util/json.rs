@@ -33,9 +33,19 @@ impl Json {
         }
     }
 
-    /// Numeric value truncated to `usize`, if this is a number.
+    /// Numeric value as `usize`, if this is a number that is an exact
+    /// non-negative integer in range. Fractional, negative, non-finite, or
+    /// too-large numbers return `None` — `{"threads": -1}` must be rejected
+    /// by the caller, not silently truncated to a garbage value.
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|n| n as usize)
+        let n = self.as_f64()?;
+        // NaN fails the fract test; `usize::MAX as f64` rounds to 2^64, so
+        // the strict upper bound also rejects the saturating-cast edge case.
+        if n >= 0.0 && n.fract() == 0.0 && n < usize::MAX as f64 {
+            Some(n as usize)
+        } else {
+            None
+        }
     }
 
     /// String value, if this is a string.
@@ -366,6 +376,24 @@ mod tests {
         assert_eq!(v.get("s").unwrap().as_str(), Some("x"));
         assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 2);
         assert!(v.get("missing").is_none());
+    }
+
+    #[test]
+    fn as_usize_rejects_non_integers() {
+        // regression: `"threads": -1` used to truncate to a garbage value
+        assert_eq!(Json::parse("-1").unwrap().as_usize(), None);
+        assert_eq!(Json::parse("1.5").unwrap().as_usize(), None);
+        assert_eq!(Json::parse("-0.25").unwrap().as_usize(), None);
+        assert_eq!(Json::parse("1e30").unwrap().as_usize(), None, "beyond usize range");
+        assert_eq!(Json::Num(f64::NAN).as_usize(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_usize(), None);
+        assert_eq!(Json::Num(18_446_744_073_709_551_616.0).as_usize(), None, "2^64 saturates");
+        // exact integers still pass, including 0 and -0
+        assert_eq!(Json::parse("0").unwrap().as_usize(), Some(0));
+        assert_eq!(Json::Num(-0.0).as_usize(), Some(0));
+        assert_eq!(Json::parse("42").unwrap().as_usize(), Some(42));
+        assert_eq!(Json::parse("1e3").unwrap().as_usize(), Some(1000));
+        assert_eq!(Json::Str("3".into()).as_usize(), None, "strings are not numbers");
     }
 
     #[test]

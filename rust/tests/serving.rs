@@ -1,0 +1,269 @@
+//! Integration tests for the vertex-cached, sharded prediction pipeline:
+//! bitwise equivalence of cold / warm / uncached / sharded serving, mixed
+//! valid-and-invalid traffic under the scoring pool, and LRU behavior under
+//! eviction pressure.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::channel;
+
+use kronvt::coordinator::{PredictRequest, PredictServer, ServerConfig};
+use kronvt::data::checkerboard::CheckerboardConfig;
+use kronvt::data::Dataset;
+use kronvt::kernels::KernelKind;
+use kronvt::linalg::Matrix;
+use kronvt::model::DualModel;
+use kronvt::train::{KronRidge, RidgeConfig};
+use kronvt::util::rng::Pcg32;
+
+/// A ridge model (no explicit zero duals → pruning is a no-op → serving must
+/// be bitwise identical to `DualModel::predict`).
+fn trained_model() -> DualModel {
+    let data = CheckerboardConfig {
+        m: 40,
+        q: 40,
+        density: 0.3,
+        noise: 0.15,
+        feature_range: 12.0,
+        seed: 9,
+    }
+    .generate();
+    let (train, _) = data.zero_shot_split(0.25, 3);
+    KronRidge::new(RidgeConfig {
+        lambda: 2f64.powi(-5),
+        kernel_d: KernelKind::Gaussian { gamma: 1.0 },
+        kernel_t: KernelKind::Gaussian { gamma: 1.0 },
+        iterations: 40,
+        ..Default::default()
+    })
+    .fit(&train)
+    .expect("training")
+}
+
+fn request_data(
+    rng: &mut Pcg32,
+    u: usize,
+    v: usize,
+    t: usize,
+) -> (Vec<Vec<f64>>, Vec<Vec<f64>>, Vec<(u32, u32)>) {
+    let sf: Vec<Vec<f64>> = (0..u).map(|_| vec![rng.uniform_in(0.0, 12.0)]).collect();
+    let ef: Vec<Vec<f64>> = (0..v).map(|_| vec![rng.uniform_in(0.0, 12.0)]).collect();
+    let edges: Vec<(u32, u32)> =
+        (0..t).map(|_| (rng.below(u) as u32, rng.below(v) as u32)).collect();
+    (sf, ef, edges)
+}
+
+fn direct_predict(
+    model: &DualModel,
+    sf: &[Vec<f64>],
+    ef: &[Vec<f64>],
+    edges: &[(u32, u32)],
+) -> Vec<f64> {
+    let ds = Dataset {
+        start_features: Matrix::from_fn(sf.len(), sf[0].len(), |i, j| sf[i][j]),
+        end_features: Matrix::from_fn(ef.len(), ef[0].len(), |i, j| ef[i][j]),
+        start_idx: edges.iter().map(|&(s, _)| s).collect(),
+        end_idx: edges.iter().map(|&(_, e)| e).collect(),
+        labels: vec![0.0; edges.len()],
+        name: "direct".into(),
+    };
+    model.predict(&ds)
+}
+
+/// Every serving configuration — cache off/on, cold/warm, serial/sharded
+/// matvec, one/many scoring workers — must return bitwise-identical scores
+/// for the same requests.
+#[test]
+fn all_serving_configurations_are_bitwise_identical() {
+    let model = trained_model();
+    let mut rng = Pcg32::seeded(100);
+    let requests: Vec<_> = (0..6).map(|_| request_data(&mut rng, 5, 4, 12)).collect();
+    let expected: Vec<Vec<f64>> =
+        requests.iter().map(|(sf, ef, e)| direct_predict(&model, sf, ef, e)).collect();
+
+    for (threads, workers, cache_vertices) in [
+        (1, 1, 0),   // the uncached serial reference path
+        (1, 1, 256), // cached
+        (2, 1, 0),   // sharded matvec
+        (4, 3, 256), // cached + sharded + pooled
+        (0, 2, 1),   // all cores, eviction on every vertex
+    ] {
+        let server = PredictServer::start(
+            model.clone(),
+            ServerConfig { threads, workers, cache_vertices, ..Default::default() },
+        );
+        // submit one at a time → deterministic batch composition
+        for round in 0..2 {
+            for (i, (sf, ef, edges)) in requests.iter().enumerate() {
+                let got = server
+                    .predict_blocking(sf.clone(), ef.clone(), edges.clone())
+                    .expect("served");
+                assert_eq!(
+                    got, expected[i],
+                    "request {i} round {round} (threads={threads} workers={workers} cache={cache_vertices})"
+                );
+            }
+        }
+        server.shutdown();
+    }
+}
+
+/// Repeat-vertex traffic must actually hit the cache, and the hits must not
+/// change a single bit of the replies.
+#[test]
+fn cache_hits_leave_scores_bitwise_unchanged() {
+    let model = trained_model();
+    let mut rng = Pcg32::seeded(101);
+    let (sf, ef, edges) = request_data(&mut rng, 6, 6, 20);
+    let direct = direct_predict(&model, &sf, &ef, &edges);
+
+    let server = PredictServer::start(
+        model,
+        ServerConfig { cache_vertices: 64, threads: 2, ..Default::default() },
+    );
+    for round in 0..5 {
+        let got = server.predict_blocking(sf.clone(), ef.clone(), edges.clone()).unwrap();
+        assert_eq!(got, direct, "round {round}");
+    }
+    let st = server.stats();
+    let hits = st.cache_hits.load(Ordering::Relaxed);
+    let misses = st.cache_misses.load(Ordering::Relaxed);
+    assert_eq!(hits + misses, 60, "5 rounds × 12 vertex lookups");
+    assert!(misses <= 12, "only the first round may compute the 6+6 vertex rows, got {misses}");
+    assert!(hits >= 48, "warm rounds must hit, got {hits}");
+    server.shutdown();
+}
+
+/// A tiny cache under constant eviction (capacity 1 per side, alternating
+/// vertex sets) must stay correct — eviction may cost hits, never bits.
+#[test]
+fn eviction_pressure_never_corrupts_scores() {
+    let model = trained_model();
+    let mut rng = Pcg32::seeded(102);
+    let reqs: Vec<_> = (0..3).map(|_| request_data(&mut rng, 3, 3, 8)).collect();
+    let expected: Vec<Vec<f64>> =
+        reqs.iter().map(|(sf, ef, e)| direct_predict(&model, sf, ef, e)).collect();
+    let server = PredictServer::start(
+        model,
+        ServerConfig { cache_vertices: 1, ..Default::default() },
+    );
+    for round in 0..4 {
+        for (i, (sf, ef, edges)) in reqs.iter().enumerate() {
+            let got = server.predict_blocking(sf.clone(), ef.clone(), edges.clone()).unwrap();
+            assert_eq!(got, expected[i], "request {i} round {round}");
+        }
+    }
+    server.shutdown();
+}
+
+/// Mixed valid/invalid requests under the sharded worker pool: invalid ones
+/// get NaN replies, valid ones exact scores, nothing is lost or misrouted.
+#[test]
+fn mixed_traffic_under_sharded_pool() {
+    let model = trained_model();
+    let mut rng = Pcg32::seeded(103);
+    let server = PredictServer::start(
+        model.clone(),
+        ServerConfig {
+            threads: 2,
+            workers: 4,
+            cache_vertices: 32,
+            max_batch_edges: 64,
+            ..Default::default()
+        },
+    );
+    let sender = server.sender();
+
+    let mut expected = Vec::new(); // None = invalid request
+    let mut replies = Vec::new();
+    for i in 0..30 {
+        let (tx, rx) = channel();
+        if i % 5 == 2 {
+            // invalid: edge references a vertex the request doesn't carry
+            sender
+                .send(PredictRequest {
+                    start_features: vec![vec![0.5]],
+                    end_features: vec![vec![0.5]],
+                    edges: vec![(0, 9)],
+                    reply: tx,
+                })
+                .unwrap();
+            expected.push(None);
+        } else if i % 7 == 3 {
+            // invalid: wrong feature dimensionality
+            sender
+                .send(PredictRequest {
+                    start_features: vec![vec![0.5, 0.5, 0.5]],
+                    end_features: vec![vec![0.5]],
+                    edges: vec![(0, 0), (0, 0)],
+                    reply: tx,
+                })
+                .unwrap();
+            expected.push(None);
+        } else {
+            let (sf, ef, edges) = request_data(&mut rng, 3, 3, 7);
+            expected.push(Some(direct_predict(&model, &sf, &ef, &edges)));
+            sender
+                .send(PredictRequest { start_features: sf, end_features: ef, edges, reply: tx })
+                .unwrap();
+        }
+        replies.push(rx);
+    }
+    drop(sender);
+
+    for (i, (rx, want)) in replies.into_iter().zip(&expected).enumerate() {
+        let got = rx.recv().expect("every request answered");
+        match want {
+            None => assert!(got.iter().all(|s| s.is_nan()), "request {i} must get NaNs"),
+            Some(want) => assert_eq!(&got, want, "request {i}"),
+        }
+    }
+    let st = server.stats();
+    assert_eq!(st.requests.load(Ordering::Relaxed), 30);
+    server.shutdown();
+}
+
+/// The bounded queue plus scoring pool must survive a burst far larger than
+/// `max_queue` (senders block, nothing is dropped) and shut down gracefully.
+#[test]
+fn backpressure_burst_is_lossless() {
+    let model = trained_model();
+    let server = PredictServer::start(
+        model,
+        ServerConfig {
+            threads: 1,
+            workers: 2,
+            max_queue: 4,
+            max_batch_edges: 32,
+            cache_vertices: 16,
+            ..Default::default()
+        },
+    );
+    let mut rng = Pcg32::seeded(104);
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let sender = server.sender();
+            let reqs: Vec<_> = (0..25).map(|_| request_data(&mut rng, 2, 2, 5)).collect();
+            scope.spawn(move || {
+                let mut rxs = Vec::new();
+                for (sf, ef, edges) in reqs {
+                    let (tx, rx) = channel();
+                    sender
+                        .send(PredictRequest {
+                            start_features: sf,
+                            end_features: ef,
+                            edges,
+                            reply: tx,
+                        })
+                        .unwrap();
+                    rxs.push(rx);
+                }
+                rxs.into_iter().map(|rx| rx.recv().unwrap().len()).sum::<usize>()
+            });
+        }
+    });
+    // scope joined: all submitter threads done, every reply received
+    let st = server.stats();
+    assert_eq!(st.requests.load(Ordering::Relaxed), 100);
+    assert_eq!(st.edges_scored.load(Ordering::Relaxed), 500);
+    server.shutdown();
+}
