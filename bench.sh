@@ -1,0 +1,46 @@
+#!/usr/bin/env bash
+# Bench runner — executes the bench_* targets and rewrites the repo-root
+# BENCH_*.json result files (see docs/BENCHMARKS.md for the convention;
+# sections written by a real run drop their 'placeholder' flag).
+#
+# Usage:
+#   ./bench.sh            # every bench target, quick mode
+#   ./bench.sh --full     # every bench target, paper-scale settings
+#   ./bench.sh --smoke    # only the fast JSON-writing benches, quick mode
+#                         # (what ci.sh runs so bench targets can't bit-rot)
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+MODE="--quick"
+SMOKE=0
+for arg in "$@"; do
+    case "$arg" in
+        --full) MODE="--full" ;;
+        --quick) MODE="--quick" ;;
+        --smoke) SMOKE=1 ;;
+        *) echo "unknown flag: $arg (expected --quick, --full, --smoke)" >&2; exit 2 ;;
+    esac
+done
+
+if [[ "$SMOKE" == 1 ]]; then
+    BENCHES=(bench_gemm bench_gvt_micro)
+else
+    BENCHES=(
+        bench_gemm
+        bench_gvt_micro
+        bench_complexity
+        bench_convergence
+        bench_checkerboard
+        bench_drug_target
+        bench_serving
+        bench_table6
+    )
+fi
+
+for b in "${BENCHES[@]}"; do
+    echo "==> cargo bench --bench $b -- $MODE"
+    cargo bench --bench "$b" -- "$MODE"
+done
+
+echo "bench.sh: done — refreshed BENCH_*.json files:"
+ls -1 ../BENCH_*.json

@@ -7,6 +7,8 @@
 #   3. cargo build --release    the tier-1 build
 #   4. cargo test -q            unit + integration tests
 #   5. cargo test --doc         doc tests (keeps the lib.rs quickstart compiling)
+#   6. ./bench.sh --smoke       quick-mode run of the JSON-writing benches so
+#                               the bench targets can't bit-rot
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -20,5 +22,6 @@ run cargo clippy --all-targets -- -D warnings
 run cargo build --release
 run cargo test -q
 run cargo test --doc
+run ../bench.sh --smoke
 
 echo "ci.sh: all checks passed"

@@ -1,0 +1,168 @@
+//! GEMM core micro-benchmark: the packed, register-blocked GEMM
+//! (`linalg::gemm`) against the naive loops it replaced.
+//!
+//! Per (m, n, k) shape:
+//! * **naive-nt** — the pre-GEMM `matmul_nt`: one `dot` per output element,
+//!   no blocking (what every `kernel_matrix` call used to run on);
+//! * **packed-nt** — `gemm_nt_into`, serial, then sharded over 2/4/8 worker
+//!   threads;
+//! * **axpy-nn** — the pre-GEMM `matmul_into` (i-k-j AXPY loops with k/j
+//!   cache blocks and the since-removed zero-skip branch);
+//! * **packed-nn** — `gemm_nn_into` (transpose-pack + NT core), serial.
+//!
+//! Asserts the packed results are bitwise identical to the per-element `dot`
+//! reference before timing anything, and records the speedups into
+//! `BENCH_batched_gvt.json` (section `"gemm"`, see `docs/BENCHMARKS.md`).
+//!
+//! Run: `cargo bench --bench bench_gemm [-- --quick|--full]`
+
+use kronvt::linalg::gemm::{gemm_nn_into, gemm_nt_into, pack_transpose};
+use kronvt::linalg::vecops::dot;
+use kronvt::util::args::Args;
+use kronvt::util::json::{update_json_file, Json};
+use kronvt::util::rng::Pcg32;
+use kronvt::util::timer::{fmt_secs, BenchRunner};
+
+const NT_THREADS: [usize; 3] = [2, 4, 8];
+
+/// The pre-GEMM `matmul_nt`: an unblocked dot-product loop.
+fn naive_nt(a: &[f64], b: &[f64], m: usize, k: usize, n: usize, c: &mut [f64]) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            c[i * n + j] = dot(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// The pre-GEMM `matmul_into`: i-k-j AXPY loops with k/j cache blocking and
+/// the (since-removed) zero-skip branch.
+fn axpy_blocked_nn(a: &[f64], b: &[f64], m: usize, k_dim: usize, n: usize, c: &mut [f64]) {
+    c.iter_mut().for_each(|v| *v = 0.0);
+    const KB: usize = 64;
+    const JB: usize = 256;
+    for jb in (0..n).step_by(JB) {
+        let jend = (jb + JB).min(n);
+        for kb in (0..k_dim).step_by(KB) {
+            let kend = (kb + KB).min(k_dim);
+            for i in 0..m {
+                let a_row = &a[i * k_dim..(i + 1) * k_dim];
+                let c_row = &mut c[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let aik = a_row[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b[kk * n..(kk + 1) * n];
+                    for j in jb..jend {
+                        c_row[j] += aik * b_row[j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn main() {
+    let args = Args::parse();
+    let full = args.has("full");
+    let quick = args.has("quick");
+    let mut rng = Pcg32::seeded(4242);
+
+    let shapes: &[(usize, usize, usize)] = if full {
+        &[(256, 256, 128), (512, 512, 256), (768, 768, 384), (1024, 1024, 256)]
+    } else if quick {
+        &[(128, 128, 64), (256, 256, 128)]
+    } else {
+        &[(256, 256, 128), (512, 512, 256)]
+    };
+
+    println!(
+        "{:>5} {:>5} {:>5} | {:>10} {:>10} {:>7} | {:>10} {:>10} {:>10} | {:>10} {:>10} {:>7} | {:>8}",
+        "m", "n", "k", "naive-nt", "packed-nt", "spd", "nt-2t", "nt-4t", "nt-8t", "axpy-nn",
+        "packed-nn", "spd", "GFLOP/s"
+    );
+
+    let mut json_rows = Vec::new();
+    let mut largest: Option<Json> = None;
+    for &(m, n, k) in shapes {
+        let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+        let bt: Vec<f64> = (0..n * k).map(|_| rng.normal()).collect();
+        let bn = pack_transpose(&bt, n, k); // k×n row-major for the NN path
+        let mut c = vec![0.0; m * n];
+        let mut c_ref = vec![0.0; m * n];
+
+        // correctness gate: packed == per-element dot reference, bitwise
+        naive_nt(&a, &bt, m, k, n, &mut c_ref);
+        gemm_nt_into(&a, &bt, m, k, n, &mut c, 1);
+        assert_eq!(c, c_ref, "packed NT diverged from the dot reference");
+        gemm_nt_into(&a, &bt, m, k, n, &mut c, 4);
+        assert_eq!(c, c_ref, "threaded NT diverged from serial");
+        gemm_nn_into(&a, &bn, m, k, n, &mut c, 1);
+        assert_eq!(c, c_ref, "packed NN diverged from the dot reference");
+
+        let runner = BenchRunner::quick();
+        let t_naive_nt = runner.run(|| naive_nt(&a, &bt, m, k, n, &mut c)).min_secs;
+        let t_packed_nt = runner.run(|| gemm_nt_into(&a, &bt, m, k, n, &mut c, 1)).min_secs;
+        let mut t_nt_threads = Vec::new();
+        for &t in &NT_THREADS {
+            t_nt_threads.push(runner.run(|| gemm_nt_into(&a, &bt, m, k, n, &mut c, t)).min_secs);
+        }
+        let t_axpy_nn = runner.run(|| axpy_blocked_nn(&a, &bn, m, k, n, &mut c)).min_secs;
+        let t_packed_nn = runner.run(|| gemm_nn_into(&a, &bn, m, k, n, &mut c, 1)).min_secs;
+
+        let gflops = 2.0 * (m * n * k) as f64 / t_packed_nt / 1e9;
+        println!(
+            "{:>5} {:>5} {:>5} | {:>10} {:>10} {:>6.2}x | {:>10} {:>10} {:>10} | {:>10} {:>10} {:>6.2}x | {:>8.2}",
+            m,
+            n,
+            k,
+            fmt_secs(t_naive_nt),
+            fmt_secs(t_packed_nt),
+            t_naive_nt / t_packed_nt,
+            fmt_secs(t_nt_threads[0]),
+            fmt_secs(t_nt_threads[1]),
+            fmt_secs(t_nt_threads[2]),
+            fmt_secs(t_axpy_nn),
+            fmt_secs(t_packed_nn),
+            t_axpy_nn / t_packed_nn,
+            gflops
+        );
+
+        let row = Json::obj(vec![
+            ("m", Json::from(m)),
+            ("n", Json::from(n)),
+            ("k", Json::from(k)),
+            ("naive_nt_secs", Json::from(t_naive_nt)),
+            ("packed_nt_secs", Json::from(t_packed_nt)),
+            ("speedup_nt", Json::from(t_naive_nt / t_packed_nt)),
+            ("packed_nt_2t_secs", Json::from(t_nt_threads[0])),
+            ("packed_nt_4t_secs", Json::from(t_nt_threads[1])),
+            ("packed_nt_8t_secs", Json::from(t_nt_threads[2])),
+            ("axpy_nn_secs", Json::from(t_axpy_nn)),
+            ("packed_nn_secs", Json::from(t_packed_nn)),
+            ("speedup_nn", Json::from(t_axpy_nn / t_packed_nn)),
+            ("packed_nt_gflops", Json::from(gflops)),
+        ]);
+        largest = Some(row.clone());
+        json_rows.push(row);
+    }
+
+    let host_threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let section = Json::obj(vec![
+        ("bench", Json::from("bench_gemm")),
+        ("host_threads", Json::from(host_threads)),
+        ("full", Json::from(full)),
+        ("quick", Json::from(quick)),
+        ("rows", Json::Arr(json_rows)),
+        ("largest", largest.unwrap_or(Json::Null)),
+    ]);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_batched_gvt.json");
+    match update_json_file(&out, "gemm", section) {
+        Ok(()) => println!("\nwrote GEMM results to {}", out.display()),
+        Err(err) => eprintln!("\nfailed to write {}: {err}", out.display()),
+    }
+    println!("bench_gemm done");
+}

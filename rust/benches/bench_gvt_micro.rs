@@ -12,7 +12,13 @@
 //! the `"micro"` key — the perf-trajectory convention described in
 //! `docs/BENCHMARKS.md`.
 //!
-//! Run: `cargo bench --bench bench_gvt_micro [-- --full]`
+//! A third table measures the **multi-RHS batched apply**
+//! (`apply_planned_multi`, k = 8 right-hand sides in one sweep) against k
+//! repeated single applies, serially and at 4 threads, asserting bitwise
+//! per-column equality first, and records the batched speedups into
+//! `BENCH_batched_gvt.json` (section `"multi_rhs"`).
+//!
+//! Run: `cargo bench --bench bench_gvt_micro [-- --quick|--full]`
 
 use kronvt::gvt::algorithm::gvt_reference;
 use kronvt::gvt::complexity;
@@ -36,6 +42,7 @@ fn random_kernel(rng: &mut Pcg32, n: usize) -> Matrix {
 fn main() {
     let args = Args::parse();
     let full = args.has("full");
+    let quick = args.has("quick");
     let mut rng = Pcg32::seeded(777);
 
     let registry = {
@@ -49,6 +56,8 @@ fn main() {
 
     let shapes: &[(usize, usize, usize)] = if full {
         &[(100, 100, 2_500), (200, 200, 10_000), (400, 400, 40_000), (800, 800, 160_000), (1000, 1000, 250_000)]
+    } else if quick {
+        &[(100, 100, 2_500), (200, 200, 10_000)]
     } else {
         &[(100, 100, 2_500), (200, 200, 10_000), (400, 400, 40_000)]
     };
@@ -194,6 +203,101 @@ fn main() {
     match update_json_file(&out, "micro", section) {
         Ok(()) => println!("\nwrote serial-vs-parallel results to {}", out.display()),
         Err(err) => eprintln!("\nfailed to write {}: {err}", out.display()),
+    }
+
+    // ---- Multi-RHS: k=8 batched apply vs 8 repeated single applies ----
+    const K_RHS: usize = 8;
+    println!();
+    println!(
+        "{:>5} {:>5} {:>8} | {:>10} {:>10} {:>7} | {:>10} {:>10} {:>7}",
+        "m", "q", "n", "8xsingle", "multi-1t", "spd", "8xsing-4t", "multi-4t", "spd"
+    );
+    let mut multi_rows = Vec::new();
+    let mut multi_largest: Option<Json> = None;
+    for (m, q, n, k, g, idx, _, _) in &problems {
+        let plan = EdgePlan::build_full(idx, idx, g.rows(), g.cols(), k.rows(), k.cols());
+        let mut vrng = Pcg32::seeded(0xBA7C + *n as u64);
+        let v = vrng.normal_vec(n * K_RHS);
+        let mut u_single = vec![0.0; n * K_RHS];
+        let mut u_multi = vec![0.0; n * K_RHS];
+        let mut ws = GvtWorkspace::new();
+        let runner = BenchRunner::quick();
+
+        // correctness gate: every column bitwise equal to its single apply
+        for threads in [1usize, 4] {
+            let engine = GvtEngine::new(threads);
+            for j in 0..K_RHS {
+                let (vj, uj) =
+                    (&v[j * n..(j + 1) * n], &mut u_single[j * n..(j + 1) * n]);
+                engine.apply_planned(g, k, g, k, idx, idx, &plan, vj, uj, &mut ws, None);
+            }
+            engine.apply_planned_multi(
+                g, k, g, k, idx, idx, &plan, &v, &mut u_multi, K_RHS, &mut ws, None,
+            );
+            assert_eq!(u_single, u_multi, "multi-RHS diverged at {threads} threads");
+        }
+
+        let mut secs = [[0.0f64; 2]; 2]; // [threads 1|4][single|multi]
+        for (ti, &threads) in [1usize, 4].iter().enumerate() {
+            let engine = GvtEngine::new(threads);
+            secs[ti][0] = runner
+                .run(|| {
+                    for j in 0..K_RHS {
+                        let (vj, uj) =
+                            (&v[j * n..(j + 1) * n], &mut u_single[j * n..(j + 1) * n]);
+                        engine.apply_planned(g, k, g, k, idx, idx, &plan, vj, uj, &mut ws, None);
+                    }
+                })
+                .min_secs;
+            secs[ti][1] = runner
+                .run(|| {
+                    engine.apply_planned_multi(
+                        g, k, g, k, idx, idx, &plan, &v, &mut u_multi, K_RHS, &mut ws, None,
+                    )
+                })
+                .min_secs;
+        }
+        println!(
+            "{:>5} {:>5} {:>8} | {:>10} {:>10} {:>6.2}x | {:>10} {:>10} {:>6.2}x",
+            m,
+            q,
+            n,
+            fmt_secs(secs[0][0]),
+            fmt_secs(secs[0][1]),
+            secs[0][0] / secs[0][1],
+            fmt_secs(secs[1][0]),
+            fmt_secs(secs[1][1]),
+            secs[1][0] / secs[1][1],
+        );
+        let row = Json::obj(vec![
+            ("m", Json::from(*m)),
+            ("q", Json::from(*q)),
+            ("n", Json::from(*n)),
+            ("k_rhs", Json::from(K_RHS)),
+            ("single_1t_secs", Json::from(secs[0][0])),
+            ("multi_1t_secs", Json::from(secs[0][1])),
+            ("speedup_1t", Json::from(secs[0][0] / secs[0][1])),
+            ("single_4t_secs", Json::from(secs[1][0])),
+            ("multi_4t_secs", Json::from(secs[1][1])),
+            ("speedup_4t", Json::from(secs[1][0] / secs[1][1])),
+        ]);
+        multi_largest = Some(row.clone());
+        multi_rows.push(row);
+    }
+    let multi_section = Json::obj(vec![
+        ("bench", Json::from("bench_gvt_micro")),
+        ("host_threads", Json::from(host_threads)),
+        ("full", Json::from(full)),
+        ("k_rhs", Json::from(K_RHS)),
+        ("rows", Json::Arr(multi_rows)),
+        ("largest", multi_largest.unwrap_or(Json::Null)),
+    ]);
+    let out_multi = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_batched_gvt.json");
+    match update_json_file(&out_multi, "multi_rhs", multi_section) {
+        Ok(()) => println!("\nwrote multi-RHS results to {}", out_multi.display()),
+        Err(err) => eprintln!("\nfailed to write {}: {err}", out_multi.display()),
     }
     println!("bench_gvt_micro done");
 }

@@ -123,23 +123,37 @@ pub struct CvJobResult {
     pub test_edges: usize,
 }
 
-/// Run `job(train, test) -> auc` over every fold, using up to `threads`
-/// worker threads (scoped; results return in fold order). `threads = 0` or
-/// `1` runs inline.
-pub fn run_cv_jobs<F>(folds: &[(Dataset, Dataset)], threads: usize, job: F) -> Vec<CvJobResult>
+/// Result of one multi-λ (regularization-path) CV fold job: one AUC per
+/// hyper-parameter evaluated through the batched compute path.
+#[derive(Debug, Clone)]
+pub struct CvPathJobResult {
+    /// Fold index (input order).
+    pub fold: usize,
+    /// Per-hyper-parameter test AUCs the job returned (one per λ).
+    pub aucs: Vec<f64>,
+    /// Wall-clock seconds the job took.
+    pub train_secs: f64,
+    /// Training edges in the fold.
+    pub train_edges: usize,
+    /// Test edges in the fold.
+    pub test_edges: usize,
+}
+
+/// Shared fold fan-out: runs `job` over every fold with up to `threads`
+/// scoped workers and returns `(fold, output, seconds)` in fold order.
+fn run_fold_jobs<R, F>(
+    folds: &[(Dataset, Dataset)],
+    threads: usize,
+    job: F,
+) -> Vec<(usize, R, f64)>
 where
-    F: Fn(&Dataset, &Dataset) -> f64 + Sync,
+    R: Send,
+    F: Fn(&Dataset, &Dataset) -> R + Sync,
 {
-    let run_one = |fold: usize, train: &Dataset, test: &Dataset| -> CvJobResult {
+    let run_one = |fold: usize, train: &Dataset, test: &Dataset| -> (usize, R, f64) {
         let t = crate::util::timer::Timer::start();
-        let auc = job(train, test);
-        CvJobResult {
-            fold,
-            auc,
-            train_secs: t.elapsed_secs(),
-            train_edges: train.n_edges(),
-            test_edges: test.n_edges(),
-        }
+        let out = job(train, test);
+        (fold, out, t.elapsed_secs())
     };
 
     if threads <= 1 || folds.len() <= 1 {
@@ -150,7 +164,7 @@ where
             .collect();
     }
 
-    let mut results: Vec<Option<CvJobResult>> = (0..folds.len()).map(|_| None).collect();
+    let mut results: Vec<Option<(usize, R, f64)>> = (0..folds.len()).map(|_| None).collect();
     let next = std::sync::atomic::AtomicUsize::new(0);
     let results_mx = std::sync::Mutex::new(&mut results);
     std::thread::scope(|scope| {
@@ -169,12 +183,76 @@ where
     results.into_iter().map(|r| r.expect("every fold executed")).collect()
 }
 
+/// Run `job(train, test) -> auc` over every fold, using up to `threads`
+/// worker threads (scoped; results return in fold order). `threads = 0` or
+/// `1` runs inline.
+pub fn run_cv_jobs<F>(folds: &[(Dataset, Dataset)], threads: usize, job: F) -> Vec<CvJobResult>
+where
+    F: Fn(&Dataset, &Dataset) -> f64 + Sync,
+{
+    run_fold_jobs(folds, threads, job)
+        .into_iter()
+        .map(|(fold, auc, train_secs)| CvJobResult {
+            fold,
+            auc,
+            train_secs,
+            train_edges: folds[fold].0.n_edges(),
+            test_edges: folds[fold].1.n_edges(),
+        })
+        .collect()
+}
+
+/// Run `job(train, test) -> per-λ AUCs` over every fold — the batched
+/// (regularization-path) sibling of [`run_cv_jobs`]: each fold job trains a
+/// whole λ grid through the multi-RHS compute core and scores every model in
+/// one batched prediction, so the fold pays one kernel build and one solver
+/// run for the entire grid.
+pub fn run_cv_path_jobs<F>(
+    folds: &[(Dataset, Dataset)],
+    threads: usize,
+    job: F,
+) -> Vec<CvPathJobResult>
+where
+    F: Fn(&Dataset, &Dataset) -> Vec<f64> + Sync,
+{
+    run_fold_jobs(folds, threads, job)
+        .into_iter()
+        .map(|(fold, aucs, train_secs)| CvPathJobResult {
+            fold,
+            aucs,
+            train_secs,
+            train_edges: folds[fold].0.n_edges(),
+            test_edges: folds[fold].1.n_edges(),
+        })
+        .collect()
+}
+
 /// Mean AUC across fold results.
 pub fn mean_auc(results: &[CvJobResult]) -> f64 {
     if results.is_empty() {
         return 0.0;
     }
     results.iter().map(|r| r.auc).sum::<f64>() / results.len() as f64
+}
+
+/// Per-λ mean AUC across path fold results (entry `j` averages `aucs[j]`
+/// over the folds). Panics if folds disagree on the grid length.
+pub fn mean_auc_path(results: &[CvPathJobResult]) -> Vec<f64> {
+    let Some(first) = results.first() else {
+        return Vec::new();
+    };
+    let k = first.aucs.len();
+    let mut means = vec![0.0; k];
+    for r in results {
+        assert_eq!(r.aucs.len(), k, "folds evaluated different λ grids");
+        for (m, &a) in means.iter_mut().zip(&r.aucs) {
+            *m += a;
+        }
+    }
+    for m in &mut means {
+        *m /= results.len() as f64;
+    }
+    means
 }
 
 #[cfg(test)]
@@ -247,6 +325,25 @@ mod tests {
         assert!(rejected, "bounded queue must eventually reject");
         drop(guard);
         pool.shutdown();
+    }
+
+    #[test]
+    fn path_jobs_inline_and_threaded_agree() {
+        let folds = folds();
+        let job = |tr: &Dataset, te: &Dataset| -> Vec<f64> {
+            vec![(tr.n_edges() % 13) as f64, (te.n_edges() % 11) as f64]
+        };
+        let seq = run_cv_path_jobs(&folds, 1, job);
+        let par = run_cv_path_jobs(&folds, 4, job);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.fold, b.fold);
+            assert_eq!(a.aucs, b.aucs);
+            assert!(a.train_edges > 0 && a.test_edges > 0);
+        }
+        let means = mean_auc_path(&seq);
+        assert_eq!(means.len(), 2);
+        assert!(mean_auc_path(&[]).is_empty());
     }
 
     #[test]

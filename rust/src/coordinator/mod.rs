@@ -8,4 +8,4 @@ pub mod jobs;
 
 pub use router::{Route, Router, RouterConfig};
 pub use server::{PredictRequest, PredictServer, ServerConfig, ServerStats};
-pub use jobs::{run_cv_jobs, CvJobResult, WorkerPool};
+pub use jobs::{run_cv_jobs, run_cv_path_jobs, CvJobResult, CvPathJobResult, WorkerPool};

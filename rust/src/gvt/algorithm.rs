@@ -164,6 +164,119 @@ pub fn gvt_apply_into(
     }
 }
 
+/// Multi-RHS [`gvt_apply_into`]: computes `u_j = R(M⊗N)Cᵀ v_j` for `k_rhs`
+/// right-hand sides in **one sweep** over the edge index.
+///
+/// `v` holds `k_rhs` column *planes* of length `e` (`v[j·e + l]` is entry
+/// `l` of RHS `j`) and `u` receives `k_rhs` planes of length `f` — the
+/// layout block solvers want (each RHS a contiguous vector).
+///
+/// Compared to `k_rhs` separate applies, stage 1 traverses the edge index
+/// once, loading each edge's `Mᵀ`/`Nᵀ` row a single time and scale-adding it
+/// into all `k_rhs` accumulator planes (a k-wide panel update); the blocked
+/// transpose moves all planes; and stage 2 loads each output edge's `N`/`M`
+/// row once for all `k_rhs` dots.
+///
+/// **Column `j` of the result is bitwise identical to a single-RHS
+/// [`gvt_apply_into`] on plane `j`** (tested): per plane, the accumulation
+/// order, the eq.-5 zero-skip, and every dot's reduction are exactly the
+/// single-RHS ones — so solvers batched through this path retrace their
+/// single-RHS trajectories bit for bit.
+#[allow(clippy::too_many_arguments)]
+pub fn gvt_apply_multi_into(
+    m: &Matrix,
+    n: &Matrix,
+    m_t: &Matrix,
+    n_t: &Matrix,
+    rows: &KronIndex,
+    cols: &KronIndex,
+    v: &[f64],
+    u: &mut [f64],
+    k_rhs: usize,
+    ws: &mut GvtWorkspace,
+    branch: Option<Branch>,
+) {
+    let (a, b) = (m.rows(), m.cols());
+    let (c, d) = (n.rows(), n.cols());
+    debug_assert_eq!(m_t.rows(), b);
+    debug_assert_eq!(m_t.cols(), a);
+    debug_assert_eq!(n_t.rows(), d);
+    debug_assert_eq!(n_t.cols(), c);
+    let e = cols.len();
+    let f = rows.len();
+    assert_eq!(v.len(), e * k_rhs, "v must hold k_rhs planes of length e");
+    assert_eq!(u.len(), f * k_rhs, "u must hold k_rhs planes of length f");
+    if k_rhs == 0 {
+        return;
+    }
+    debug_assert!(rows.validate(a, c).is_ok(), "row indices out of bounds");
+    debug_assert!(cols.validate(b, d).is_ok(), "col indices out of bounds");
+
+    let branch = branch.unwrap_or_else(|| complexity::choose_branch(a, b, c, d, e, f));
+    match branch {
+        CBranch::T => {
+            let plane = d * a;
+            let (t_buf, tt_buf) = ws.grab(plane * k_rhs, plane * k_rhs);
+            // Stage 1 (one edge traversal, k-wide panel update):
+            //   T_j[t_l, :] += v_j[l] · Mᵀ[r_l, :]
+            for l in 0..e {
+                let r = cols.left[l] as usize;
+                let t = cols.right[l] as usize;
+                let src = m_t.row(r);
+                for j in 0..k_rhs {
+                    let vl = v[j * e + l];
+                    if vl == 0.0 {
+                        continue;
+                    }
+                    axpy(vl, src, &mut t_buf[j * plane + t * a..j * plane + (t + 1) * a]);
+                }
+            }
+            for j in 0..k_rhs {
+                transpose_into(&t_buf[j * plane..(j + 1) * plane], d, a, &mut tt_buf[j * plane..]);
+            }
+            // Stage 2: u_j[h] = N[q_h, :] · Tᵀ_j[p_h, :], the N row loaded
+            // once per edge for all planes.
+            for h in 0..f {
+                let p = rows.left[h] as usize;
+                let q = rows.right[h] as usize;
+                let nrow = n.row(q);
+                for j in 0..k_rhs {
+                    u[j * f + h] = dot(nrow, &tt_buf[j * plane + p * d..j * plane + (p + 1) * d]);
+                }
+            }
+        }
+        CBranch::S => {
+            let plane = b * c;
+            let (st_buf, s_buf) = ws.grab(plane * k_rhs, plane * k_rhs);
+            // Stage 1: Sᵀ_j[r_l, :] += v_j[l] · Nᵀ[t_l, :]
+            for l in 0..e {
+                let r = cols.left[l] as usize;
+                let t = cols.right[l] as usize;
+                let src = n_t.row(t);
+                for j in 0..k_rhs {
+                    let vl = v[j * e + l];
+                    if vl == 0.0 {
+                        continue;
+                    }
+                    axpy(vl, src, &mut st_buf[j * plane + r * c..j * plane + (r + 1) * c]);
+                }
+            }
+            for j in 0..k_rhs {
+                transpose_into(&st_buf[j * plane..(j + 1) * plane], b, c, &mut s_buf[j * plane..]);
+            }
+            // Stage 2: u_j[h] = S_j[q_h, :] · M[p_h, :]
+            for h in 0..f {
+                let p = rows.left[h] as usize;
+                let q = rows.right[h] as usize;
+                let mrow = m.row(p);
+                for j in 0..k_rhs {
+                    u[j * f + h] = dot(&s_buf[j * plane + q * b..j * plane + (q + 1) * b], mrow);
+                }
+            }
+        }
+    }
+}
+
 /// Multi-threaded [`gvt_apply_into`]: shards stage 1 by accumulation row,
 /// the blocked transpose by column blocks, and stage 2 by output chunks
 /// across `threads` scoped worker threads (see [`super::engine`]).

@@ -26,7 +26,7 @@
 
 use std::sync::Mutex;
 
-use super::algorithm::{gvt_apply_into, GvtWorkspace};
+use super::algorithm::{gvt_apply_into, gvt_apply_multi_into, GvtWorkspace};
 use super::complexity::{self, Branch};
 use super::KronIndex;
 use crate::linalg::vecops::{axpy, dot};
@@ -57,16 +57,71 @@ pub struct EdgePlan {
     s_order: Vec<u32>,
     /// Bucket boundaries into [`EdgePlan::s_order`], length `b + 1`.
     s_offsets: Vec<usize>,
+    /// Number of output edges the output-side buckets were built for
+    /// (`0` when the plan carries no output buckets).
+    f_out: usize,
+    /// Output edge ids grouped by `rows.left` (`p_h`; branch T stage-2
+    /// gather vertices, `a` buckets). Empty unless built by
+    /// [`EdgePlan::build_full`].
+    t_out_order: Vec<u32>,
+    /// Bucket boundaries into [`EdgePlan::t_out_order`], length `a + 1`.
+    t_out_offsets: Vec<usize>,
+    /// Output edge ids grouped by `rows.right` (`q_h`; branch S stage-2
+    /// gather vertices, `c` buckets).
+    s_out_order: Vec<u32>,
+    /// Bucket boundaries into [`EdgePlan::s_out_order`], length `c + 1`.
+    s_out_offsets: Vec<usize>,
 }
 
 impl EdgePlan {
     /// Bucket `cols` for both branches. `b` and `d` are the column counts of
     /// the factor matrices `M ∈ R^{a×b}` and `N ∈ R^{c×d}` (so
-    /// `cols.left < b`, `cols.right < d`).
+    /// `cols.left < b`, `cols.right < d`). The plan carries no output-side
+    /// buckets — use [`EdgePlan::build_full`] when the row index is also
+    /// fixed per operator (it is for training; it is not for the serving
+    /// fast path, where one plan is shared across per-batch test indices).
     pub fn build(cols: &KronIndex, b: usize, d: usize) -> EdgePlan {
         let (t_order, t_offsets) = bucket_stable(&cols.right, d);
         let (s_order, s_offsets) = bucket_stable(&cols.left, b);
-        EdgePlan { e: cols.len(), t_order, t_offsets, s_order, s_offsets }
+        EdgePlan {
+            e: cols.len(),
+            t_order,
+            t_offsets,
+            s_order,
+            s_offsets,
+            f_out: 0,
+            t_out_order: Vec::new(),
+            t_out_offsets: Vec::new(),
+            s_out_order: Vec::new(),
+            s_out_offsets: Vec::new(),
+        }
+    }
+
+    /// [`EdgePlan::build`] plus **output-side bucketing**: output edges are
+    /// additionally grouped by their stage-2 gather vertex (`p_h` for branch
+    /// T, `q_h` for branch S), so the multi-RHS stage 2 loads each stage-1
+    /// result row once per *vertex* instead of once per *edge*. `a` and `c`
+    /// are the row counts of `M` and `N` (so `rows.left < a`,
+    /// `rows.right < c`). The output buckets are tied to this `rows` index;
+    /// [`GvtEngine::apply_planned_multi`] falls back to unbucketed gathers
+    /// when the row index length differs.
+    pub fn build_full(
+        rows: &KronIndex,
+        cols: &KronIndex,
+        a: usize,
+        b: usize,
+        c: usize,
+        d: usize,
+    ) -> EdgePlan {
+        let mut plan = EdgePlan::build(cols, b, d);
+        let (t_out_order, t_out_offsets) = bucket_stable(&rows.left, a);
+        let (s_out_order, s_out_offsets) = bucket_stable(&rows.right, c);
+        plan.f_out = rows.len();
+        plan.t_out_order = t_out_order;
+        plan.t_out_offsets = t_out_offsets;
+        plan.s_out_order = s_out_order;
+        plan.s_out_offsets = s_out_offsets;
+        plan
     }
 
     /// Number of edges the plan covers (`e`).
@@ -79,11 +134,29 @@ impl EdgePlan {
         self.e == 0
     }
 
+    /// Whether the plan carries output-side stage-2 buckets
+    /// ([`EdgePlan::build_full`]).
+    pub fn has_output_buckets(&self) -> bool {
+        !self.t_out_offsets.is_empty()
+    }
+
     /// `(order, offsets)` for the requested branch's stage-1 buckets.
     fn buckets(&self, branch: Branch) -> (&[u32], &[usize]) {
         match branch {
             Branch::T => (&self.t_order, &self.t_offsets),
             Branch::S => (&self.s_order, &self.s_offsets),
+        }
+    }
+
+    /// `(order, offsets)` for the requested branch's stage-2 output buckets,
+    /// if present and built for a row index of length `f`.
+    fn out_buckets(&self, branch: Branch, f: usize) -> Option<(&[u32], &[usize])> {
+        if !self.has_output_buckets() || self.f_out != f {
+            return None;
+        }
+        match branch {
+            Branch::T => Some((&self.t_out_order, &self.t_out_offsets)),
+            Branch::S => Some((&self.s_out_order, &self.s_out_offsets)),
         }
     }
 }
@@ -300,6 +373,115 @@ impl GvtEngine {
             }
         }
     }
+
+    /// Multi-RHS [`GvtEngine::apply_planned`]: computes `u_j = R(M⊗N)Cᵀ v_j`
+    /// for `k_rhs` column planes (see
+    /// [`gvt_apply_multi_into`](super::algorithm::gvt_apply_multi_into) for
+    /// the plane layout) in one sharded sweep.
+    ///
+    /// * **Stage 1** fans out over disjoint accumulation-row ranges exactly
+    ///   like the single-RHS path, but each worker replays its edges once,
+    ///   scale-adding every edge's factor row into all `k_rhs` planes — a
+    ///   k-wide panel update amortizing the edge-index traversal.
+    /// * The **blocked transpose** moves each plane with the parallel
+    ///   column-block kernel.
+    /// * **Stage 2** gathers per plane; when `plan` was built by
+    ///   [`EdgePlan::build_full`] the output edges are visited grouped by
+    ///   their gather vertex, so each stage-1 result row (`Tᵀ[p,:]` /
+    ///   `S[q,:]`) is loaded once per vertex rather than once per edge.
+    ///   Workers shard by plane groups when `k_rhs ≥ threads`, else by
+    ///   output ranges.
+    ///
+    /// **Column `j` of `u` is bitwise identical to
+    /// [`GvtEngine::apply_planned`] on plane `j`, for every thread count and
+    /// both branches** (tested) — batching can never perturb a solver
+    /// trajectory.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_planned_multi(
+        &self,
+        m: &Matrix,
+        n: &Matrix,
+        m_t: &Matrix,
+        n_t: &Matrix,
+        rows: &KronIndex,
+        cols: &KronIndex,
+        plan: &EdgePlan,
+        v: &[f64],
+        u: &mut [f64],
+        k_rhs: usize,
+        ws: &mut GvtWorkspace,
+        branch: Option<Branch>,
+    ) {
+        let (a, b) = (m.rows(), m.cols());
+        let (c, d) = (n.rows(), n.cols());
+        let e = cols.len();
+        let f = rows.len();
+        assert_eq!(plan.len(), e, "plan was built for a different column index");
+        if k_rhs == 0 {
+            return;
+        }
+        // The batch multiplies the work: a problem just under the single-RHS
+        // cutoff is still worth sharding when it carries k_rhs planes.
+        if self.threads <= 1 || (e + f).saturating_mul(k_rhs) < MIN_PARALLEL_EDGES {
+            gvt_apply_multi_into(m, n, m_t, n_t, rows, cols, v, u, k_rhs, ws, branch);
+            return;
+        }
+        assert_eq!(v.len(), e * k_rhs, "v must hold k_rhs planes of length e");
+        assert_eq!(u.len(), f * k_rhs, "u must hold k_rhs planes of length f");
+        debug_assert_eq!(m_t.rows(), b);
+        debug_assert_eq!(m_t.cols(), a);
+        debug_assert_eq!(n_t.rows(), d);
+        debug_assert_eq!(n_t.cols(), c);
+
+        let branch = branch.unwrap_or_else(|| complexity::choose_branch(a, b, c, d, e, f));
+        let (order, offsets) = plan.buckets(branch);
+        let out = plan.out_buckets(branch, f);
+        let threads = self.threads;
+        match branch {
+            Branch::T => {
+                let plane = d * a;
+                let (t_buf, tt_buf) = ws.grab_uncleared(plane * k_rhs, plane * k_rhs);
+                stage1_parallel_multi(
+                    t_buf, a, order, offsets, &cols.left, m_t, v, e, k_rhs, threads,
+                );
+                for j in 0..k_rhs {
+                    transpose_into_parallel(
+                        &t_buf[j * plane..(j + 1) * plane],
+                        d,
+                        a,
+                        &mut tt_buf[j * plane..(j + 1) * plane],
+                        threads,
+                    );
+                }
+                let tt = &tt_buf[..plane * k_rhs];
+                let (hl, hr) = (&rows.left, &rows.right);
+                stage2_parallel_multi(u, f, k_rhs, hl, hr, out, threads, |j, p, q| {
+                    dot(n.row(q), &tt[j * plane + p * d..j * plane + (p + 1) * d])
+                });
+            }
+            Branch::S => {
+                let plane = b * c;
+                let (st_buf, s_buf) = ws.grab_uncleared(plane * k_rhs, plane * k_rhs);
+                stage1_parallel_multi(
+                    st_buf, c, order, offsets, &cols.right, n_t, v, e, k_rhs, threads,
+                );
+                for j in 0..k_rhs {
+                    transpose_into_parallel(
+                        &st_buf[j * plane..(j + 1) * plane],
+                        b,
+                        c,
+                        &mut s_buf[j * plane..(j + 1) * plane],
+                        threads,
+                    );
+                }
+                let s = &s_buf[..plane * k_rhs];
+                let (hl, hr) = (&rows.left, &rows.right);
+                stage2_parallel_multi(u, f, k_rhs, hl, hr, out, threads, |j, p, q| {
+                    dot(&s[j * plane + q * b..j * plane + (q + 1) * b], m.row(p))
+                });
+            }
+        }
+    }
 }
 
 /// Stage 1 worker fan-out: each scoped thread owns a contiguous range of
@@ -343,6 +525,169 @@ fn stage1_parallel(
     });
 }
 
+/// Split `buf` (holding `k_rhs` planes of `plane_len` doubles) at the given
+/// contiguous, ascending `ranges` (in units of `width` doubles), returning
+/// one `Vec` of per-plane slabs per range. Lets scoped workers own the same
+/// row/edge range across *every* plane without locks.
+fn split_planes_at<'a>(
+    buf: &'a mut [f64],
+    plane_len: usize,
+    k_rhs: usize,
+    ranges: &[(usize, usize)],
+    width: usize,
+) -> Vec<Vec<&'a mut [f64]>> {
+    if plane_len == 0 || ranges.is_empty() {
+        return Vec::new();
+    }
+    let mut rests: Vec<&'a mut [f64]> =
+        buf[..plane_len * k_rhs].chunks_mut(plane_len).collect();
+    let mut out = Vec::with_capacity(ranges.len());
+    for &(r0, r1) in ranges {
+        let take = (r1 - r0) * width;
+        let mut slabs = Vec::with_capacity(k_rhs);
+        for rest in rests.iter_mut() {
+            let taken = std::mem::take(rest);
+            let (slab, tail) = taken.split_at_mut(take);
+            *rest = tail;
+            slabs.push(slab);
+        }
+        out.push(slabs);
+    }
+    out
+}
+
+/// Multi-RHS stage-1 fan-out: workers own the same contiguous destination-row
+/// range in every plane of the `rows×width×k_rhs` accumulator (zeroing their
+/// slabs first), and replay their buckets' edges **once**, scale-adding each
+/// edge's `factor_t` row into all planes (zero entries skipped per plane,
+/// eq. 5). Bucketed edge order makes every plane bitwise identical to its
+/// serial single-RHS accumulation.
+#[allow(clippy::too_many_arguments)]
+fn stage1_parallel_multi(
+    buf: &mut [f64],
+    width: usize,
+    order: &[u32],
+    offsets: &[usize],
+    gather: &[u32],
+    factor_t: &Matrix,
+    v: &[f64],
+    e: usize,
+    k_rhs: usize,
+    threads: usize,
+) {
+    let rows = offsets.len() - 1;
+    debug_assert!(buf.len() >= rows * width * k_rhs);
+    let ranges = edge_balanced_chunks(offsets, threads);
+    let worker_slabs = split_planes_at(buf, rows * width, k_rhs, &ranges, width);
+    std::thread::scope(|scope| {
+        for (&(r0, r1), slabs) in ranges.iter().zip(worker_slabs) {
+            scope.spawn(move || {
+                let mut slabs = slabs;
+                for slab in slabs.iter_mut() {
+                    slab.fill(0.0);
+                }
+                for row in r0..r1 {
+                    let base = (row - r0) * width;
+                    for &l in &order[offsets[row]..offsets[row + 1]] {
+                        let l = l as usize;
+                        let src = factor_t.row(gather[l] as usize);
+                        for (j, slab) in slabs.iter_mut().enumerate() {
+                            let vl = v[j * e + l];
+                            if vl == 0.0 {
+                                continue;
+                            }
+                            axpy(vl, src, &mut slab[base..base + width]);
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Multi-RHS stage-2 fan-out. `score(j, p, q)` evaluates output plane `j`
+/// against the shared stage-1 result. With `k_rhs ≥ threads`, workers own
+/// contiguous plane groups and walk the output-side vertex buckets (when
+/// present), loading each gather row once per vertex; otherwise workers own
+/// output-edge ranges across all planes, loading each edge's factor row once
+/// for all `k_rhs` dots.
+#[allow(clippy::too_many_arguments)]
+fn stage2_parallel_multi(
+    u: &mut [f64],
+    f: usize,
+    k_rhs: usize,
+    left: &[u32],
+    right: &[u32],
+    out: Option<(&[u32], &[usize])>,
+    threads: usize,
+    score: impl Fn(usize, usize, usize) -> f64 + Sync,
+) {
+    if f == 0 {
+        return;
+    }
+    let score = &score;
+    if k_rhs >= threads {
+        let groups = even_chunks(k_rhs, threads);
+        std::thread::scope(|scope| {
+            let mut rest = &mut u[..f * k_rhs];
+            for &(j0, j1) in &groups {
+                let (chunk, tail) = rest.split_at_mut((j1 - j0) * f);
+                rest = tail;
+                scope.spawn(move || {
+                    for (jj, uplane) in chunk.chunks_mut(f).enumerate() {
+                        stage2_plane(uplane, j0 + jj, left, right, out, score);
+                    }
+                });
+            }
+        });
+    } else {
+        let ranges = even_chunks(f, threads);
+        let worker_slabs = split_planes_at(u, f, k_rhs, &ranges, 1);
+        std::thread::scope(|scope| {
+            for (&(h0, h1), slabs) in ranges.iter().zip(worker_slabs) {
+                scope.spawn(move || {
+                    let mut slabs = slabs;
+                    for h in h0..h1 {
+                        let (p, q) = (left[h] as usize, right[h] as usize);
+                        for (j, slab) in slabs.iter_mut().enumerate() {
+                            slab[h - h0] = score(j, p, q);
+                        }
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// One output plane of multi-RHS stage 2: vertex-bucketed gather order when
+/// output buckets are available (each stage-1 row stays hot across its
+/// bucket), plain edge order otherwise. The per-edge value is identical
+/// either way — bucketing only reorders independent writes.
+fn stage2_plane(
+    uplane: &mut [f64],
+    j: usize,
+    left: &[u32],
+    right: &[u32],
+    out: Option<(&[u32], &[usize])>,
+    score: &(impl Fn(usize, usize, usize) -> f64 + Sync),
+) {
+    match out {
+        Some((order, offsets)) => {
+            for vertex in 0..offsets.len() - 1 {
+                for &h in &order[offsets[vertex]..offsets[vertex + 1]] {
+                    let h = h as usize;
+                    uplane[h] = score(j, left[h] as usize, right[h] as usize);
+                }
+            }
+        }
+        None => {
+            for (h, uh) in uplane.iter_mut().enumerate() {
+                *uh = score(j, left[h] as usize, right[h] as usize);
+            }
+        }
+    }
+}
+
 /// Stage 2 fan-out: contiguous chunks of `u`, each worker evaluating
 /// `score(p_h, q_h)` for its edges against the shared stage-1 result.
 fn stage2_parallel(
@@ -370,25 +715,61 @@ fn stage2_parallel(
     });
 }
 
+/// Default retention bound for [`WorkspacePool`] — enough for a healthy
+/// scoring pool's steady state without letting a one-off concurrency burst
+/// pin its high-watermark of scratch memory forever.
+const DEFAULT_POOL_RETENTION: usize = 8;
+
 /// Lock-protected stack of [`GvtWorkspace`] scratch buffers.
 ///
 /// The GVT operators hand one workspace to each in-flight apply, so a single
 /// trained operator can serve concurrent callers (`Sync`) without sharing
 /// accumulation buffers. The lock is held only to pop/push a workspace, never
 /// during the matvec itself.
-#[derive(Debug, Default)]
+///
+/// The free list is **bounded**: at most `retention` idle workspaces are
+/// kept (default [`DEFAULT_POOL_RETENTION`]); workspaces returned beyond
+/// that are dropped. Without the bound the pool grows to the high-watermark
+/// of *concurrent* applies ever seen and never shrinks — a burst of traffic
+/// would pin its peak scratch memory for the life of the operator.
+#[derive(Debug)]
 pub struct WorkspacePool {
     free: Mutex<Vec<GvtWorkspace>>,
+    retention: usize,
+}
+
+impl Default for WorkspacePool {
+    fn default() -> Self {
+        WorkspacePool::with_retention(DEFAULT_POOL_RETENTION)
+    }
 }
 
 impl WorkspacePool {
-    /// Empty pool; workspaces are created on demand and recycled.
+    /// Empty pool; workspaces are created on demand and recycled, keeping at
+    /// most [`DEFAULT_POOL_RETENTION`] idle.
     pub fn new() -> WorkspacePool {
         WorkspacePool::default()
     }
 
+    /// Empty pool keeping at most `retention` idle workspaces (`0` disables
+    /// recycling entirely).
+    pub fn with_retention(retention: usize) -> WorkspacePool {
+        WorkspacePool { free: Mutex::new(Vec::new()), retention }
+    }
+
+    /// Maximum number of idle workspaces this pool retains.
+    pub fn retention(&self) -> usize {
+        self.retention
+    }
+
+    /// Number of idle workspaces currently pooled (≤ retention).
+    pub fn pooled(&self) -> usize {
+        self.free.lock().unwrap_or_else(|poisoned| poisoned.into_inner()).len()
+    }
+
     /// Run `f` with a pooled workspace, returning the workspace to the pool
-    /// afterwards.
+    /// afterwards (or dropping it if the free list is at its retention
+    /// bound).
     pub fn with<R>(&self, f: impl FnOnce(&mut GvtWorkspace) -> R) -> R {
         let mut ws = self
             .free
@@ -397,7 +778,10 @@ impl WorkspacePool {
             .pop()
             .unwrap_or_default();
         let out = f(&mut ws);
-        self.free.lock().unwrap_or_else(|poisoned| poisoned.into_inner()).push(ws);
+        let mut free = self.free.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        if free.len() < self.retention {
+            free.push(ws);
+        }
         out
     }
 }
@@ -515,6 +899,100 @@ mod tests {
     }
 
     #[test]
+    fn multi_rhs_columns_match_single_rhs_bitwise() {
+        // Every column of apply_planned_multi must be bit-for-bit the
+        // single-RHS apply_planned result — for every thread count, both
+        // branches, with and without output buckets, zeros included.
+        let mut rng = Pcg32::seeded(44);
+        let (a, b, c, d, e, f) = (6, 8, 7, 5, 3200, 2800);
+        let m = Matrix::from_fn(a, b, |_, _| rng.normal());
+        let n = Matrix::from_fn(c, d, |_, _| rng.normal());
+        let m_t = m.transpose();
+        let n_t = n.transpose();
+        let rows = KronIndex::new(
+            (0..f).map(|_| rng.below(a) as u32).collect(),
+            (0..f).map(|_| rng.below(c) as u32).collect(),
+        );
+        let cols = KronIndex::new(
+            (0..e).map(|_| rng.below(b) as u32).collect(),
+            (0..e).map(|_| rng.below(d) as u32).collect(),
+        );
+        let k_rhs = 3;
+        let mut v = rng.normal_vec(e * k_rhs);
+        for (i, vi) in v.iter_mut().enumerate() {
+            if i % 5 == 0 {
+                *vi = 0.0; // exercise the per-plane zero-skip
+            }
+        }
+        let plain = EdgePlan::build(&cols, b, d);
+        let full = EdgePlan::build_full(&rows, &cols, a, b, c, d);
+        assert!(full.has_output_buckets());
+        assert!(!plain.has_output_buckets());
+
+        let mut ws = GvtWorkspace::new();
+        for branch in [None, Some(Branch::T), Some(Branch::S)] {
+            // per-column single-RHS reference
+            let mut singles = vec![0.0; f * k_rhs];
+            for j in 0..k_rhs {
+                let mut uj = vec![0.0; f];
+                gvt_apply_into(
+                    &m, &n, &m_t, &n_t, &rows, &cols, &v[j * e..(j + 1) * e], &mut uj, &mut ws,
+                    branch,
+                );
+                singles[j * f..(j + 1) * f].copy_from_slice(&uj);
+            }
+            for threads in [1, 2, 4, 8] {
+                let engine = GvtEngine::new(threads);
+                for plan in [&plain, &full] {
+                    let mut multi = vec![f64::NAN; f * k_rhs];
+                    let mut ws2 = GvtWorkspace::new();
+                    engine.apply_planned_multi(
+                        &m, &n, &m_t, &n_t, &rows, &cols, plan, &v, &mut multi, k_rhs, &mut ws2,
+                        branch,
+                    );
+                    assert_eq!(
+                        multi, singles,
+                        "branch={branch:?} threads={threads} buckets={}",
+                        plan.has_output_buckets()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_output_buckets_are_ignored_safely() {
+        // A full plan reused with a different-length row index must fall back
+        // to unbucketed gathers, not index out of bounds.
+        let mut rng = Pcg32::seeded(45);
+        let (a, b, c, d, e) = (5, 6, 4, 7, 2600);
+        let m = Matrix::from_fn(a, b, |_, _| rng.normal());
+        let n = Matrix::from_fn(c, d, |_, _| rng.normal());
+        let m_t = m.transpose();
+        let n_t = n.transpose();
+        let cols = KronIndex::new(
+            (0..e).map(|_| rng.below(b) as u32).collect(),
+            (0..e).map(|_| rng.below(d) as u32).collect(),
+        );
+        let rows_build = KronIndex::new(vec![0; 10], vec![0; 10]);
+        let plan = EdgePlan::build_full(&rows_build, &cols, a, b, c, d);
+        let f = 2400;
+        let rows = KronIndex::new(
+            (0..f).map(|_| rng.below(a) as u32).collect(),
+            (0..f).map(|_| rng.below(c) as u32).collect(),
+        );
+        let v = rng.normal_vec(e);
+        let mut ws = GvtWorkspace::new();
+        let mut expect = vec![0.0; f];
+        gvt_apply_into(&m, &n, &m_t, &n_t, &rows, &cols, &v, &mut expect, &mut ws, None);
+        let mut got = vec![0.0; f];
+        GvtEngine::new(4).apply_planned_multi(
+            &m, &n, &m_t, &n_t, &rows, &cols, &plan, &v, &mut got, 1, &mut ws, None,
+        );
+        assert_eq!(got, expect);
+    }
+
+    #[test]
     fn workspace_pool_recycles() {
         let pool = WorkspacePool::new();
         pool.with(|ws| {
@@ -527,5 +1005,38 @@ mod tests {
             let (s, _) = ws.grab_uncleared(16, 16);
             assert_eq!(s.len(), 16);
         });
+        assert_eq!(pool.pooled(), 1);
+    }
+
+    #[test]
+    fn workspace_pool_bounds_its_free_list() {
+        // Regression: a burst of concurrent applies must not pin its
+        // high-watermark of workspaces — the free list stays ≤ retention.
+        let pool = WorkspacePool::with_retention(3);
+        assert_eq!(pool.retention(), 3);
+        let concurrency = 16;
+        let barrier = std::sync::Barrier::new(concurrency);
+        std::thread::scope(|scope| {
+            for _ in 0..concurrency {
+                scope.spawn(|| {
+                    pool.with(|ws| {
+                        let (s, _) = ws.grab_uncleared(8, 8);
+                        s.fill(2.0);
+                        // hold the workspace until all 16 are live, forcing
+                        // 16 distinct workspaces into existence
+                        barrier.wait();
+                    });
+                });
+            }
+        });
+        assert!(
+            pool.pooled() <= 3,
+            "free list grew past retention: {}",
+            pool.pooled()
+        );
+        // zero retention disables recycling entirely
+        let none = WorkspacePool::with_retention(0);
+        none.with(|_| {});
+        assert_eq!(none.pooled(), 0);
     }
 }

@@ -36,7 +36,9 @@ pub mod dense;
 pub mod explicit;
 pub mod complexity;
 
-pub use algorithm::{gvt_apply, gvt_apply_into, gvt_apply_into_parallel, Branch, GvtWorkspace};
+pub use algorithm::{
+    gvt_apply, gvt_apply_into, gvt_apply_into_parallel, gvt_apply_multi_into, Branch, GvtWorkspace,
+};
 pub use engine::{EdgePlan, GvtEngine, WorkspacePool};
 pub use operator::{KronKernelOp, KronPredictOp, SvmNewtonOp};
 pub use complexity::{branch_costs, choose_branch};

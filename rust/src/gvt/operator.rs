@@ -21,7 +21,7 @@ use std::sync::Arc;
 
 use super::engine::{EdgePlan, GvtEngine, WorkspacePool};
 use super::{Branch, KronIndex};
-use crate::linalg::solvers::LinOp;
+use crate::linalg::solvers::{LinOp, MultiLinOp};
 use crate::linalg::Matrix;
 
 /// The training-kernel operator `Q = R(G⊗K)Rᵀ` (n×n, symmetric PSD).
@@ -54,7 +54,9 @@ impl KronKernelOp {
         assert_eq!(g.rows(), g.cols(), "G must be square");
         assert_eq!(k.rows(), k.cols(), "K must be square");
         idx.validate(g.rows(), k.rows()).expect("edge indices out of bounds");
-        let plan = EdgePlan::build(&idx, g.cols(), k.cols());
+        // Rows and columns are the same training-edge index, so the plan can
+        // carry output-side buckets for the batched stage-2 gather too.
+        let plan = EdgePlan::build_full(&idx, &idx, g.rows(), g.cols(), k.rows(), k.cols());
         KronKernelOp {
             g,
             k,
@@ -124,6 +126,19 @@ impl KronKernelOp {
         });
     }
 
+    /// `u_j ← Q v_j` for `k_rhs` column planes in one batched sweep (one
+    /// edge-index traversal for all right-hand sides). Column `j` is bitwise
+    /// identical to [`KronKernelOp::apply_into`] on plane `j`, so the block
+    /// solvers driving this path retrace single-RHS trajectories exactly.
+    pub fn apply_multi_into(&self, v: &[f64], k_rhs: usize, u: &mut [f64]) {
+        self.pool.with(|ws| {
+            self.engine.apply_planned_multi(
+                &self.g, &self.k, &self.g, &self.k, &self.idx, &self.idx, &self.plan, v, u, k_rhs,
+                ws, self.branch,
+            );
+        });
+    }
+
     /// Diagonal of `Q`: `Q[h,h] = G[s_h,s_h]·K[r_h,r_h]` (used by SMO-style
     /// baselines and for preconditioning).
     pub fn diagonal(&self) -> Vec<f64> {
@@ -147,6 +162,12 @@ impl LinOp for KronKernelOp {
     // apply_transpose: default (symmetric).
 }
 
+impl MultiLinOp for KronKernelOp {
+    fn apply_multi(&self, v: &[f64], k_rhs: usize, u: &mut [f64]) {
+        self.apply_multi_into(v, k_rhs, u);
+    }
+}
+
 /// `Q + λI` — the Kronecker ridge regression system (§4.1), symmetric PD.
 pub struct RidgeSystemOp<'a> {
     /// The kernel operator `Q`.
@@ -164,6 +185,17 @@ impl LinOp for RidgeSystemOp<'_> {
         self.op.apply_into(x, y);
         for i in 0..x.len() {
             y[i] += self.lambda * x[i];
+        }
+    }
+}
+
+impl MultiLinOp for RidgeSystemOp<'_> {
+    fn apply_multi(&self, v: &[f64], k_rhs: usize, u: &mut [f64]) {
+        self.op.apply_multi_into(v, k_rhs, u);
+        for (uj, vj) in u.chunks_mut(self.op.dim().max(1)).zip(v.chunks(self.op.dim().max(1))) {
+            for (ui, vi) in uj.iter_mut().zip(vj) {
+                *ui += self.lambda * vi;
+            }
         }
     }
 }
@@ -246,7 +278,19 @@ impl KronPredictOp {
     /// [`KronPredictOp::with_threads`] is applied.
     pub fn new(ghat: Matrix, khat: Matrix, test_idx: KronIndex, train_idx: KronIndex) -> Self {
         train_idx.validate(ghat.cols(), khat.cols()).expect("train indices out of bounds");
-        let plan = Arc::new(EdgePlan::build(&train_idx, ghat.cols(), khat.cols()));
+        test_idx.validate(ghat.rows(), khat.rows()).expect("test indices out of bounds");
+        // The operator owns its test index, so the plan can carry the
+        // output-side stage-2 buckets for batched prediction too. (The
+        // serving fast path shares one `build` plan across per-batch test
+        // indices instead — see `with_shared`.)
+        let plan = Arc::new(EdgePlan::build_full(
+            &test_idx,
+            &train_idx,
+            ghat.rows(),
+            ghat.cols(),
+            khat.rows(),
+            khat.cols(),
+        ));
         KronPredictOp::with_shared(
             ghat,
             khat,
@@ -363,6 +407,56 @@ impl KronPredictOp {
             );
         });
     }
+
+    /// Predict scores for `k_rhs` dual-coefficient vectors (stacked as
+    /// column planes of length `n_train`) in **one batched sweep**: the test
+    /// edges are scored against all coefficient sets with a single stage-1
+    /// edge traversal. Returns `k_rhs` planes of `n_test` scores; plane `j`
+    /// is bitwise identical to [`KronPredictOp::predict`] on coefficient set
+    /// `j`. This is the multi-model / multi-λ serving path (Viljanen et
+    /// al.'s multi-output setting).
+    pub fn predict_multi(&self, duals: &[f64], k_rhs: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.test_idx.len() * k_rhs];
+        self.predict_multi_into(duals, k_rhs, &mut out);
+        out
+    }
+
+    /// [`KronPredictOp::predict_multi`] into a preallocated output buffer
+    /// (`k_rhs` planes of `n_test` scores).
+    pub fn predict_multi_into(&self, duals: &[f64], k_rhs: usize, out: &mut [f64]) {
+        assert_eq!(
+            duals.len(),
+            self.train_idx.len() * k_rhs,
+            "expected {} coefficient planes of length {}, got {} values",
+            k_rhs,
+            self.train_idx.len(),
+            duals.len()
+        );
+        assert_eq!(
+            out.len(),
+            self.test_idx.len() * k_rhs,
+            "expected {} output planes of length {}, got {} slots",
+            k_rhs,
+            self.test_idx.len(),
+            out.len()
+        );
+        self.pool.with(|ws| {
+            self.engine.apply_planned_multi(
+                &self.ghat,
+                &self.khat,
+                &self.ghat_t,
+                &self.khat_t,
+                &self.test_idx,
+                &self.train_idx,
+                &self.plan,
+                duals,
+                out,
+                k_rhs,
+                ws,
+                None,
+            );
+        });
+    }
 }
 
 #[cfg(test)]
@@ -455,6 +549,66 @@ mod tests {
         });
         for (got, want) in results.iter().zip(&expect) {
             assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn apply_multi_columns_match_single_applies() {
+        let mut rng = Pcg32::seeded(95);
+        let (q, m, n) = (9, 8, 2800);
+        let g = Arc::new(random_kernel(&mut rng, q));
+        let k = Arc::new(random_kernel(&mut rng, m));
+        let idx = random_edges(&mut rng, q, m, n);
+        let k_rhs = 4;
+        let v = rng.normal_vec(n * k_rhs);
+        for threads in [1, 2, 4] {
+            let op = KronKernelOp::new(g.clone(), k.clone(), idx.clone()).with_threads(threads);
+            let mut singles = vec![0.0; n * k_rhs];
+            for j in 0..k_rhs {
+                op.apply_into(&v[j * n..(j + 1) * n], &mut singles[j * n..(j + 1) * n]);
+            }
+            let mut multi = vec![0.0; n * k_rhs];
+            op.apply_multi_into(&v, k_rhs, &mut multi);
+            assert_eq!(multi, singles, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn predict_multi_columns_match_single_predicts() {
+        let mut rng = Pcg32::seeded(96);
+        let (q, m, n) = (5, 6, 18);
+        let (v_test, u_test, t_test) = (4, 5, 11);
+        let train_idx = random_edges(&mut rng, q, m, n);
+        let test_idx = random_edges(&mut rng, v_test, u_test, t_test);
+        let ghat = Matrix::from_fn(v_test, q, |_, _| rng.normal());
+        let khat = Matrix::from_fn(u_test, m, |_, _| rng.normal());
+        let op = KronPredictOp::new(ghat, khat, test_idx, train_idx);
+        let k_rhs = 3;
+        let duals = rng.normal_vec(n * k_rhs);
+        let multi = op.predict_multi(&duals, k_rhs);
+        for j in 0..k_rhs {
+            let single = op.predict(&duals[j * n..(j + 1) * n]);
+            assert_eq!(&multi[j * t_test..(j + 1) * t_test], single.as_slice(), "plane {j}");
+        }
+    }
+
+    #[test]
+    fn ridge_multi_op_matches_per_column_apply() {
+        let mut rng = Pcg32::seeded(97);
+        let (q, m, n) = (6, 6, 24);
+        let g = Arc::new(random_kernel(&mut rng, q));
+        let k = Arc::new(random_kernel(&mut rng, m));
+        let idx = random_edges(&mut rng, q, m, n);
+        let op = KronKernelOp::new(g, k, idx);
+        let sys = RidgeSystemOp { op: &op, lambda: 0.7 };
+        let k_rhs = 3;
+        let v = rng.normal_vec(n * k_rhs);
+        let mut multi = vec![0.0; n * k_rhs];
+        MultiLinOp::apply_multi(&sys, &v, k_rhs, &mut multi);
+        for j in 0..k_rhs {
+            let mut single = vec![0.0; n];
+            sys.apply(&v[j * n..(j + 1) * n], &mut single);
+            assert_eq!(&multi[j * n..(j + 1) * n], single.as_slice(), "plane {j}");
         }
     }
 

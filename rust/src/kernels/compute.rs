@@ -1,9 +1,15 @@
 //! Kernel matrix computation.
 //!
-//! The Gaussian kernel is the hot path of the explicit baselines and of
-//! model setup, so it is computed blockwise from the Gram matrix:
-//! `‖x−y‖² = ‖x‖² + ‖y‖² − 2⟨x,y⟩`, with the inner-product matrix from the
-//! cache-blocked GEMM (this mirrors the L1 Pallas `pairwise.py` kernel).
+//! Kernel matrices sit under every training setup, CV fold, and serving
+//! batch, so they are computed blockwise from the Gram matrix:
+//! `‖x−y‖² = ‖x‖² + ‖y‖² − 2⟨x,y⟩`, with the inner-product matrix produced
+//! by the packed, register-blocked GEMM in [`crate::linalg::gemm`]
+//! (`Matrix::matmul_nt`, optionally sharded across threads via
+//! [`kernel_matrix_threaded`]; this mirrors the L1 Pallas `pairwise.py`
+//! kernel). Every GEMM element is bitwise identical to
+//! `dot(x1.row(i), x2.row(j))`, for any thread count — which is exactly what
+//! [`kernel_row_into`] computes, so single rows, full matrices, serial and
+//! threaded builds all agree bit-for-bit.
 
 use super::KernelKind;
 use crate::linalg::vecops::dot;
@@ -90,11 +96,24 @@ pub fn kernel_row_into(kind: KernelKind, x: &[f64], x2: &Matrix, sq2: &[f64], ou
 
 /// Kernel matrix `K[i,j] = k(x1_i, x2_j)` for row-feature matrices.
 pub fn kernel_matrix(kind: KernelKind, x1: &Matrix, x2: &Matrix) -> Matrix {
+    kernel_matrix_threaded(kind, x1, x2, 1)
+}
+
+/// [`kernel_matrix`] with the inner-product GEMM sharded over `threads`
+/// worker threads (`0` = all cores, `1` = serial). The result is bitwise
+/// identical for every thread count, so training setup and CV folds can use
+/// all cores without perturbing solver trajectories.
+pub fn kernel_matrix_threaded(
+    kind: KernelKind,
+    x1: &Matrix,
+    x2: &Matrix,
+    threads: usize,
+) -> Matrix {
     assert_eq!(x1.cols(), x2.cols(), "feature dim mismatch");
     match kind {
-        KernelKind::Linear => x1.matmul_nt(x2),
+        KernelKind::Linear => x1.matmul_nt_threaded(x2, threads),
         KernelKind::Gaussian { gamma } => {
-            let mut k = x1.matmul_nt(x2); // inner products
+            let mut k = x1.matmul_nt_threaded(x2, threads); // inner products
             let n1 = x1.rows();
             let n2 = x2.rows();
             let sq1 = row_sq_norms(x1);
@@ -111,12 +130,12 @@ pub fn kernel_matrix(kind: KernelKind, x1: &Matrix, x2: &Matrix) -> Matrix {
             k
         }
         KernelKind::Polynomial { gamma, coef0, degree } => {
-            let mut k = x1.matmul_nt(x2);
+            let mut k = x1.matmul_nt_threaded(x2, threads);
             k.data_mut().iter_mut().for_each(|v| *v = (gamma * *v + coef0).powi(degree as i32));
             k
         }
         KernelKind::Tanimoto => {
-            let mut k = x1.matmul_nt(x2);
+            let mut k = x1.matmul_nt_threaded(x2, threads);
             let n1 = x1.rows();
             let n2 = x2.rows();
             let sq1 = row_sq_norms(x1);
@@ -196,6 +215,24 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn threaded_kernel_matrix_matches_serial_bitwise() {
+        let mut rng = Pcg32::seeded(95);
+        let x1 = random_features(&mut rng, 23, 7);
+        let x2 = random_features(&mut rng, 31, 7);
+        for kind in [
+            KernelKind::Linear,
+            KernelKind::Gaussian { gamma: 0.6 },
+            KernelKind::Tanimoto,
+        ] {
+            let serial = kernel_matrix(kind, &x1, &x2);
+            for threads in [2, 4] {
+                let par = kernel_matrix_threaded(kind, &x1, &x2, threads);
+                assert_eq!(par, serial, "{kind:?} threads={threads}");
+            }
+        }
     }
 
     #[test]

@@ -12,7 +12,9 @@ pub mod cache;
 pub mod compute;
 
 pub use cache::KernelRowCache;
-pub use compute::{kernel_matrix, kernel_row_into, kernel_value, row_sq_norms};
+pub use compute::{
+    kernel_matrix, kernel_matrix_threaded, kernel_row_into, kernel_value, row_sq_norms,
+};
 
 use crate::linalg::Matrix;
 
@@ -81,7 +83,14 @@ impl KernelKind {
 
     /// Symmetric training kernel matrix of `x (n×d)` with exact symmetry.
     pub fn square_matrix(&self, x: &Matrix) -> Matrix {
-        let mut k = kernel_matrix(*self, x, x);
+        self.square_matrix_threaded(x, 1)
+    }
+
+    /// [`KernelKind::square_matrix`] with the inner-product GEMM sharded over
+    /// `threads` worker threads (`0` = all cores); bitwise identical to the
+    /// serial build for every thread count.
+    pub fn square_matrix_threaded(&self, x: &Matrix, threads: usize) -> Matrix {
+        let mut k = kernel_matrix_threaded(*self, x, x, threads);
         k.symmetrize();
         k
     }

@@ -1,0 +1,379 @@
+//! Packed, register-blocked GEMM — the dense compute core under every
+//! kernel-matrix build and explicit baseline.
+//!
+//! Two entry points cover the shapes the library needs:
+//!
+//! * [`gemm_nt_into`] — `C = A·Bᵀ` with `B` given row-major (`n×k`), i.e.
+//!   rows of `A` dotted with rows of `B`. This is the kernel-matrix shape
+//!   (`kernels::compute::kernel_matrix` inner products) and needs no packing:
+//!   the rows of `B` *are* the packed panel layout.
+//! * [`gemm_nn_into`] — `C = A·B` with `B` row-major (`k×n`). The pack step
+//!   is a blocked transpose of `B` into the same row-panel layout, after
+//!   which the NT core runs unchanged.
+//!
+//! ### Blocking scheme
+//!
+//! * **Register tile** [`MR`]`×`[`NR`] (4×4): the micro-kernel holds the full
+//!   tile of accumulators live across the shared k-loop, reusing each loaded
+//!   `A` value `NR` times and each `B` value `MR` times, with the k-loop
+//!   unrolled 4-wide so every accumulator is itself 4 independent partial
+//!   sums (ILP / SIMD lanes).
+//! * **Cache panel** [`NC`] (64 packed rows): the `j`-loop is blocked so the
+//!   active `B` panel (`NC·k` doubles) stays resident in L1/L2 while the
+//!   whole `A` row range streams past it.
+//! * **Row-panel threads**: workers are std scoped threads (the same style as
+//!   [`crate::gvt::engine`]), each owning a contiguous range of `C` rows —
+//!   disjoint writes, no locks, no atomics.
+//!
+//! ### Determinism
+//!
+//! Every element of `C` is produced by exactly the reduction of
+//! [`vecops::dot`](crate::linalg::vecops::dot): four k-strided partial sums
+//! combined as `(s0+s1)+(s2+s3)+tail`. Consequences, both load-bearing:
+//!
+//! * the result is **bitwise identical for every thread count** (the row
+//!   partition never changes any element's accumulation order), and
+//! * [`gemm_nt_into`] is bitwise identical to a per-element
+//!   `dot(a_row, b_row)` loop — which is what `kernel_row_into` computes, so
+//!   the serving cache's "cached row == matrix row" guarantee survives the
+//!   GEMM rewrite.
+//!
+//! The dense inner loops deliberately contain **no zero-skipping branches**:
+//! on dense kernel data a mispredicted `if x == 0.0` costs more than the
+//! multiply it skips (sparse shortcuts belong to the GVT stage-1 loops,
+//! where they implement eq. 5 of the paper).
+
+use crate::linalg::vecops::dot;
+
+/// Register-tile rows (`A` rows per micro-kernel call).
+pub const MR: usize = 4;
+/// Register-tile columns (packed `B` rows per micro-kernel call).
+pub const NR: usize = 4;
+/// Packed-`B` rows per cache panel; the `j`-loop is blocked at this width so
+/// the active panel (`NC·k` doubles) stays cache-resident.
+pub const NC: usize = 64;
+
+/// Below this many multiply-adds (`m·n·k`) the scoped-thread fan-out is not
+/// worth its spawn cost and the core runs serially.
+const MIN_PARALLEL_FLOPS: usize = 1 << 18;
+
+/// `C = A·Bᵀ` for row-major `A (m×k)`, `B (n×k)`, into row-major `C (m×n)`
+/// (overwritten). `threads = 0` uses all cores, `1` runs serially; results
+/// are bitwise identical for every thread count.
+pub fn gemm_nt_into(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f64],
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k, "A buffer size mismatch");
+    assert_eq!(b.len(), n * k, "B buffer size mismatch");
+    assert_eq!(c.len(), m * n, "C buffer size mismatch");
+    let threads = resolve_threads(threads, m, n, k);
+    if threads <= 1 {
+        gemm_rows(a, b, k, n, 0, m, c);
+        return;
+    }
+    let ranges = row_chunks(m, threads);
+    std::thread::scope(|scope| {
+        let mut rest = c;
+        for &(i0, i1) in &ranges {
+            let (slab, tail) = rest.split_at_mut((i1 - i0) * n);
+            rest = tail;
+            scope.spawn(move || gemm_rows(a, b, k, n, i0, i1, slab));
+        }
+    });
+}
+
+/// `C = A·B` for row-major `A (m×k)`, `B (k×n)`, into row-major `C (m×n)`
+/// (overwritten). Packs `Bᵀ` once (blocked transpose into row-panel layout),
+/// then runs the NT core. Same determinism guarantees as [`gemm_nt_into`].
+pub fn gemm_nn_into(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f64],
+    threads: usize,
+) {
+    assert_eq!(b.len(), k * n, "B buffer size mismatch");
+    let bt = pack_transpose(b, k, n);
+    gemm_nt_into(a, &bt, m, k, n, c, threads);
+}
+
+/// Blocked transpose of a row-major `rows×cols` buffer into a new
+/// `cols×rows` buffer — the pack step that turns `B`'s columns into the
+/// contiguous row panels the micro-kernel consumes.
+pub fn pack_transpose(src: &[f64], rows: usize, cols: usize) -> Vec<f64> {
+    assert_eq!(src.len(), rows * cols, "pack buffer size mismatch");
+    let mut dst = vec![0.0; rows * cols];
+    const B: usize = 32;
+    for ib in (0..rows).step_by(B) {
+        for jb in (0..cols).step_by(B) {
+            for i in ib..(ib + B).min(rows) {
+                for j in jb..(jb + B).min(cols) {
+                    dst[j * rows + i] = src[i * cols + j];
+                }
+            }
+        }
+    }
+    dst
+}
+
+/// `0` → available parallelism; then clamp to what the problem size and row
+/// count can use.
+fn resolve_threads(threads: usize, m: usize, n: usize, k: usize) -> usize {
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        threads
+    };
+    if m.saturating_mul(n).saturating_mul(k) < MIN_PARALLEL_FLOPS {
+        1
+    } else {
+        threads.min(m)
+    }
+}
+
+/// Split `0..m` into at most `parts` contiguous non-empty equal-ish ranges.
+fn row_chunks(m: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, m.max(1));
+    let base = m / parts;
+    let rem = m % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let size = base + usize::from(p < rem);
+        if size > 0 {
+            out.push((start, start + size));
+            start += size;
+        }
+    }
+    out
+}
+
+/// Serial core for `C` rows `i0..i1`: panel-blocked `j`-loop over packed `B`
+/// rows, [`MR`]`×`[`NR`] register tiles inside, per-element [`dot`] fallback
+/// on the tile tails (bitwise-identical reduction either way). `c` is the
+/// slab holding rows `i0..i1` only.
+fn gemm_rows(a: &[f64], bt: &[f64], k: usize, n: usize, i0: usize, i1: usize, c: &mut [f64]) {
+    debug_assert_eq!(c.len(), (i1 - i0) * n);
+    for jb in (0..n).step_by(NC) {
+        let jend = (jb + NC).min(n);
+        let mut i = i0;
+        while i + MR <= i1 {
+            let mut j = jb;
+            while j + NR <= jend {
+                micro_tile(a, bt, k, n, i, j, i0, c);
+                j += NR;
+            }
+            for jj in j..jend {
+                let brow = &bt[jj * k..(jj + 1) * k];
+                for ir in 0..MR {
+                    c[(i + ir - i0) * n + jj] = dot(&a[(i + ir) * k..(i + ir + 1) * k], brow);
+                }
+            }
+            i += MR;
+        }
+        for ii in i..i1 {
+            let arow = &a[ii * k..(ii + 1) * k];
+            for jj in jb..jend {
+                c[(ii - i0) * n + jj] = dot(arow, &bt[jj * k..(jj + 1) * k]);
+            }
+        }
+    }
+}
+
+/// One full [`MR`]`×`[`NR`] register tile at `C[i.., j..]`, accumulated in
+/// exactly [`dot`]'s reduction order per element: 4 k-strided partial sums,
+/// a sequential tail, combined as `(s0+s1)+(s2+s3)+tail`.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn micro_tile(
+    a: &[f64],
+    bt: &[f64],
+    k: usize,
+    n: usize,
+    i: usize,
+    j: usize,
+    i0: usize,
+    c: &mut [f64],
+) {
+    let ar: [&[f64]; MR] = [
+        &a[i * k..(i + 1) * k],
+        &a[(i + 1) * k..(i + 2) * k],
+        &a[(i + 2) * k..(i + 3) * k],
+        &a[(i + 3) * k..(i + 4) * k],
+    ];
+    let br: [&[f64]; NR] = [
+        &bt[j * k..(j + 1) * k],
+        &bt[(j + 1) * k..(j + 2) * k],
+        &bt[(j + 2) * k..(j + 3) * k],
+        &bt[(j + 3) * k..(j + 4) * k],
+    ];
+    let mut acc = [[[0.0f64; 4]; NR]; MR];
+    let kc = k - k % 4;
+    let mut kk = 0;
+    while kk < kc {
+        for ir in 0..MR {
+            let arow = ar[ir];
+            let av = [arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]];
+            for jr in 0..NR {
+                let brow = br[jr];
+                let t = &mut acc[ir][jr];
+                t[0] += av[0] * brow[kk];
+                t[1] += av[1] * brow[kk + 1];
+                t[2] += av[2] * brow[kk + 2];
+                t[3] += av[3] * brow[kk + 3];
+            }
+        }
+        kk += 4;
+    }
+    for ir in 0..MR {
+        let arow = ar[ir];
+        for jr in 0..NR {
+            let brow = br[jr];
+            let mut tail = 0.0;
+            for kt in kc..k {
+                tail += arow[kt] * brow[kt];
+            }
+            let t = acc[ir][jr];
+            c[(i + ir - i0) * n + j + jr] = (t[0] + t[1]) + (t[2] + t[3]) + tail;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Per-element `dot` reference — the reduction the GEMM must match
+    /// bitwise.
+    fn dot_reference_nt(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                c[i * n + j] = dot(&a[i * k..(i + 1) * k], &b[j * k..(j + 1) * k]);
+            }
+        }
+        c
+    }
+
+    /// Plain sequential triple loop (different association → approximate).
+    fn naive_nn(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a[i * k + kk] * b[kk * n + j];
+                }
+                c[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    fn random_vec(rng: &mut Pcg32, len: usize) -> Vec<f64> {
+        (0..len).map(|_| rng.normal()).collect()
+    }
+
+    /// Shapes that hit every tail path: 1×1, primes, exact-tile multiples,
+    /// k % 4 ∈ {0,1,2,3}.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (2, 3, 2),
+        (4, 4, 4),
+        (5, 7, 3),
+        (7, 11, 13),
+        (8, 16, 8),
+        (9, 5, 6),
+        (17, 33, 9),
+        (12, 4, 64),
+        (70, 65, 130),
+    ];
+
+    #[test]
+    fn nt_matches_dot_reference_bitwise() {
+        let mut rng = Pcg32::seeded(0xA11CE);
+        for &(m, k, n) in SHAPES {
+            let a = random_vec(&mut rng, m * k);
+            let b = random_vec(&mut rng, n * k);
+            let reference = dot_reference_nt(&a, &b, m, k, n);
+            for threads in [1, 2, 3, 8] {
+                let mut c = vec![f64::NAN; m * n];
+                gemm_nt_into(&a, &b, m, k, n, &mut c, threads);
+                assert_eq!(c, reference, "m={m} k={k} n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn nn_matches_dot_reference_bitwise() {
+        let mut rng = Pcg32::seeded(0xB0B);
+        for &(m, k, n) in SHAPES {
+            let a = random_vec(&mut rng, m * k);
+            let b = random_vec(&mut rng, k * n);
+            let bt = pack_transpose(&b, k, n);
+            let reference = dot_reference_nt(&a, &bt, m, k, n);
+            for threads in [1, 4] {
+                let mut c = vec![f64::NAN; m * n];
+                gemm_nn_into(&a, &b, m, k, n, &mut c, threads);
+                assert_eq!(c, reference, "m={m} k={k} n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn nn_close_to_sequential_naive() {
+        let mut rng = Pcg32::seeded(0xC0DE);
+        for &(m, k, n) in SHAPES {
+            let a = random_vec(&mut rng, m * k);
+            let b = random_vec(&mut rng, k * n);
+            let mut c = vec![0.0; m * n];
+            gemm_nn_into(&a, &b, m, k, n, &mut c, 1);
+            let naive = naive_nn(&a, &b, m, k, n);
+            crate::linalg::vecops::assert_allclose(&c, &naive, 1e-9, 1e-9);
+        }
+    }
+
+    #[test]
+    fn pack_transpose_is_exact() {
+        let mut rng = Pcg32::seeded(0xFACE);
+        for &(rows, cols) in &[(1usize, 1usize), (3, 5), (33, 40), (64, 64)] {
+            let src = random_vec(&mut rng, rows * cols);
+            let dst = pack_transpose(&src, rows, cols);
+            for i in 0..rows {
+                for j in 0..cols {
+                    assert_eq!(dst[j * rows + i], src[i * cols + j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_k_yields_zeros() {
+        let mut c = vec![f64::NAN; 6];
+        gemm_nt_into(&[], &[], 2, 0, 3, &mut c, 1);
+        assert!(c.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn zero_threads_autodetects() {
+        // threads = 0 must not panic and must match serial bitwise.
+        let mut rng = Pcg32::seeded(0xD1E);
+        let (m, k, n) = (40, 50, 45);
+        let a = random_vec(&mut rng, m * k);
+        let b = random_vec(&mut rng, n * k);
+        let mut serial = vec![0.0; m * n];
+        let mut auto = vec![0.0; m * n];
+        gemm_nt_into(&a, &b, m, k, n, &mut serial, 1);
+        gemm_nt_into(&a, &b, m, k, n, &mut auto, 0);
+        assert_eq!(serial, auto);
+    }
+}

@@ -1,11 +1,14 @@
-//! Row-major dense matrix with a cache-blocked GEMM.
+//! Row-major dense matrix type.
 //!
 //! The explicit-kernel baselines (the methods the paper beats) need real
-//! dense matmuls over matrices with 10⁴–10⁵ rows, so the GEMM here is
-//! blocked for L1/L2 cache and unrolled; it is also what the native Gaussian
-//! kernel computation uses.
+//! dense matmuls over matrices with 10⁴–10⁵ rows, so [`Matrix::matmul`],
+//! [`Matrix::matmul_into`], and [`Matrix::matmul_nt`] all delegate to the
+//! packed, register-blocked GEMM core in [`crate::linalg::gemm`] (which is
+//! also what the native kernel-matrix computation uses); the `*_threaded`
+//! variants shard the same GEMM over scoped worker threads with bitwise
+//! identical results.
 
-use crate::linalg::vecops;
+use crate::linalg::{gemm, vecops};
 
 /// Dense row-major `rows × cols` matrix of f64.
 #[derive(Debug, Clone, PartialEq)]
@@ -156,19 +159,21 @@ impl Matrix {
     }
 
     /// Transposed matrix–vector product `y = Aᵀ x`.
+    ///
+    /// The inner loop is branch-free: on the dense matrices this type holds,
+    /// testing `x[i]` for zero costs more in mispredictions than the skipped
+    /// AXPY saves (sparse shortcuts live in the GVT stage-1 loops instead).
     pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.rows, "matvec_t dim mismatch");
         let mut y = vec![0.0; self.cols];
         for i in 0..self.rows {
-            let xi = x[i];
-            if xi != 0.0 {
-                vecops::axpy(xi, self.row(i), &mut y);
-            }
+            vecops::axpy(x[i], self.row(i), &mut y);
         }
         y
     }
 
-    /// Matrix product `C = A · B`, cache-blocked.
+    /// Matrix product `C = A · B` through the packed, register-blocked GEMM
+    /// ([`crate::linalg::gemm`]).
     pub fn matmul(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.cols, b.rows, "matmul dim mismatch");
         let mut c = Matrix::zeros(self.rows, b.cols);
@@ -176,52 +181,39 @@ impl Matrix {
         c
     }
 
-    /// `C = A · B` into a preallocated output (C is overwritten).
-    ///
-    /// i-k-j loop order: the inner j-loop is a contiguous AXPY over rows of B
-    /// and C, which vectorizes well; k is blocked so the active B panel stays
-    /// in cache.
+    /// [`Matrix::matmul`] sharded over `threads` scoped worker threads
+    /// (`0` = all cores, `1` = serial); bitwise identical for every thread
+    /// count.
+    pub fn matmul_threaded(&self, b: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(self.cols, b.rows, "matmul dim mismatch");
+        let mut c = Matrix::zeros(self.rows, b.cols);
+        gemm::gemm_nn_into(&self.data, &b.data, self.rows, self.cols, b.cols, &mut c.data, threads);
+        c
+    }
+
+    /// `C = A · B` into a preallocated output (C is overwritten). Delegates
+    /// to the packed GEMM core ([`crate::linalg::gemm::gemm_nn_into`]).
     pub fn matmul_into(&self, b: &Matrix, c: &mut Matrix) {
         assert_eq!(self.cols, b.rows);
         assert_eq!(c.rows, self.rows);
         assert_eq!(c.cols, b.cols);
-        c.data.iter_mut().for_each(|v| *v = 0.0);
-        const KB: usize = 64;
-        const JB: usize = 256;
-        let (m, k_dim, n) = (self.rows, self.cols, b.cols);
-        for jb in (0..n).step_by(JB) {
-            let jend = (jb + JB).min(n);
-            for kb in (0..k_dim).step_by(KB) {
-                let kend = (kb + KB).min(k_dim);
-                for i in 0..m {
-                    let a_row = &self.data[i * k_dim..(i + 1) * k_dim];
-                    let c_row = &mut c.data[i * n..(i + 1) * n];
-                    for k in kb..kend {
-                        let aik = a_row[k];
-                        if aik == 0.0 {
-                            continue;
-                        }
-                        let b_row = &b.data[k * n..(k + 1) * n];
-                        for j in jb..jend {
-                            c_row[j] += aik * b_row[j];
-                        }
-                    }
-                }
-            }
-        }
+        gemm::gemm_nn_into(&self.data, &b.data, self.rows, self.cols, b.cols, &mut c.data, 1);
     }
 
-    /// `C = A · Bᵀ` without forming Bᵀ (rows of A dotted with rows of B).
+    /// `C = A · Bᵀ` without forming Bᵀ (rows of A dotted with rows of B),
+    /// through the packed GEMM core. Every output element is bitwise
+    /// identical to `vecops::dot(a.row(i), b.row(j))`.
     pub fn matmul_nt(&self, b: &Matrix) -> Matrix {
+        self.matmul_nt_threaded(b, 1)
+    }
+
+    /// [`Matrix::matmul_nt`] sharded over `threads` scoped worker threads
+    /// (`0` = all cores, `1` = serial); bitwise identical for every thread
+    /// count.
+    pub fn matmul_nt_threaded(&self, b: &Matrix, threads: usize) -> Matrix {
         assert_eq!(self.cols, b.cols, "matmul_nt dim mismatch");
         let mut c = Matrix::zeros(self.rows, b.rows);
-        for i in 0..self.rows {
-            let a_row = self.row(i);
-            let c_row = c.row_mut(i);
-            for j in 0..b.rows {
-                c_row[j] = vecops::dot(a_row, b.row(j));
-            }
-        }
+        gemm::gemm_nt_into(&self.data, &b.data, self.rows, self.cols, b.rows, &mut c.data, threads);
         c
     }
 
@@ -378,6 +370,36 @@ mod tests {
         let c1 = a.matmul_nt(&b);
         let c2 = a.matmul(&b.transpose());
         crate::linalg::vecops::assert_allclose(c1.data(), c2.data(), 1e-10, 1e-10);
+    }
+
+    #[test]
+    fn matmul_nt_is_bitwise_dot_per_element() {
+        // kernel_row_into ↔ kernel_matrix bitwise equality (the serving
+        // cache's contract) rests on this: every matmul_nt element must be
+        // exactly dot(a_row, b_row).
+        let mut rng = Pcg32::seeded(21);
+        let a = random_matrix(&mut rng, 19, 13);
+        let b = random_matrix(&mut rng, 23, 13);
+        let c = a.matmul_nt(&b);
+        for i in 0..19 {
+            for j in 0..23 {
+                assert_eq!(c.get(i, j), crate::linalg::vecops::dot(a.row(i), b.row(j)));
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_matmuls_match_serial_bitwise() {
+        let mut rng = Pcg32::seeded(22);
+        let a = random_matrix(&mut rng, 37, 29);
+        let b = random_matrix(&mut rng, 29, 41);
+        let bt = random_matrix(&mut rng, 41, 29);
+        let serial_nn = a.matmul(&b);
+        let serial_nt = a.matmul_nt(&bt);
+        for threads in [2, 4, 0] {
+            assert_eq!(a.matmul_threaded(&b, threads), serial_nn, "nn threads={threads}");
+            assert_eq!(a.matmul_nt_threaded(&bt, threads), serial_nt, "nt threads={threads}");
+        }
     }
 
     #[test]

@@ -1,10 +1,12 @@
-//! Dense linear algebra substrate: a row-major [`Matrix`] type with a
-//! cache-blocked GEMM, vector helpers, and the iterative solvers used by the
-//! training algorithms (CG, MINRES, QMR, BiCGStab).
+//! Dense linear algebra substrate: a row-major [`Matrix`] type backed by a
+//! packed, register-blocked, thread-parallel GEMM ([`gemm`]), vector
+//! helpers, and the iterative solvers used by the training algorithms (CG,
+//! block CG, MINRES, QMR, BiCGStab).
 
+pub mod gemm;
 pub mod matrix;
 pub mod vecops;
 pub mod solvers;
 
 pub use matrix::Matrix;
-pub use solvers::{LinOp, SolveStats};
+pub use solvers::{LinOp, MultiLinOp, SolveStats};

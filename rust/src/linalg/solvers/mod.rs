@@ -8,11 +8,13 @@
 //! materializing the Kronecker product.
 
 pub mod cg;
+pub mod block_cg;
 pub mod minres;
 pub mod qmr;
 pub mod bicgstab;
 
 pub use cg::{cg, cg_cb};
+pub use block_cg::block_cg;
 pub use minres::{minres, minres_cb};
 pub use qmr::qmr;
 pub use bicgstab::bicgstab;
@@ -45,6 +47,26 @@ pub trait LinOp {
     }
 }
 
+/// A [`LinOp`] that can apply itself to many vectors at once.
+///
+/// `v` and `u` hold `k_rhs` column *planes* of length [`LinOp::dim`] each
+/// (`v[j·n..][..n]` is RHS `j`). Implementors must keep **column `j` of the
+/// batched result bitwise identical to a single [`LinOp::apply`] on plane
+/// `j`** — the block solvers rely on that to retrace single-RHS trajectories
+/// exactly. The default implementation just loops; real implementors (the
+/// GVT kernel operator, [`Matrix`]) batch the traversal/GEMM.
+pub trait MultiLinOp: LinOp {
+    /// `u_j ← A v_j` for `k_rhs` stacked column planes.
+    fn apply_multi(&self, v: &[f64], k_rhs: usize, u: &mut [f64]) {
+        let n = self.dim();
+        assert_eq!(v.len(), n * k_rhs, "v must hold k_rhs planes of length n");
+        assert_eq!(u.len(), n * k_rhs, "u must hold k_rhs planes of length n");
+        for (vj, uj) in v.chunks(n.max(1)).zip(u.chunks_mut(n.max(1))) {
+            self.apply(vj, uj);
+        }
+    }
+}
+
 impl LinOp for Matrix {
     fn dim(&self) -> usize {
         assert_eq!(self.rows(), self.cols(), "LinOp requires a square matrix");
@@ -58,6 +80,19 @@ impl LinOp for Matrix {
     fn apply_transpose(&self, x: &[f64], y: &mut [f64]) {
         let yt = self.matvec_t(x);
         y.copy_from_slice(&yt);
+    }
+}
+
+impl MultiLinOp for Matrix {
+    /// One NT GEMM instead of `k_rhs` matvecs: with `V` the `k_rhs×n` plane
+    /// matrix, `U = V·Aᵀ` gives `U[j,i] = dot(v_j, A.row(i))` — bitwise the
+    /// per-column [`Matrix::matvec_into`] value (IEEE multiplication is
+    /// commutative, and the GEMM uses the same `dot` reduction).
+    fn apply_multi(&self, v: &[f64], k_rhs: usize, u: &mut [f64]) {
+        let n = self.dim();
+        assert_eq!(v.len(), n * k_rhs, "v must hold k_rhs planes of length n");
+        assert_eq!(u.len(), n * k_rhs, "u must hold k_rhs planes of length n");
+        crate::linalg::gemm::gemm_nt_into(v, self.data(), k_rhs, n, n, u, 1);
     }
 }
 

@@ -11,7 +11,7 @@
 //! ```
 
 use kronvt::baselines::{ExplicitSvm, ExplicitSvmConfig, KnnConfig, KnnModel, SgdConfig, SgdLossKind, SgdModel};
-use kronvt::coordinator::{run_cv_jobs, PredictServer, ServerConfig};
+use kronvt::coordinator::{run_cv_jobs, run_cv_path_jobs, PredictServer, ServerConfig};
 use kronvt::data::{checkerboard, dti, Dataset};
 use kronvt::eval::auc::auc;
 use kronvt::kernels::KernelKind;
@@ -153,6 +153,69 @@ fn cmd_cv(args: &Args) -> Result<(), String> {
              to train folds concurrently (the pre-engine meaning of --threads)"
         );
     }
+    // `--lambdas a,b,c` routes each fold through the batched compute core:
+    // one block-CG solve trains the whole λ grid, one multi-RHS prediction
+    // scores every model (kronridge only).
+    if let Some(spec) = args.get("lambdas") {
+        let lambdas: Vec<f64> = spec
+            .split(',')
+            .filter(|t| !t.is_empty())
+            .map(|t| t.parse::<f64>().map_err(|_| format!("bad lambda '{t}'")))
+            .collect::<Result<_, _>>()?;
+        if lambdas.is_empty() {
+            return Err("--lambdas needs at least one value".into());
+        }
+        if method != "kronridge" {
+            return Err(
+                "--lambdas (batched λ-grid CV) currently supports --method kronridge".into()
+            );
+        }
+        let kernel = KernelKind::parse(&args.get_str("kernel", "linear"))?;
+        let cfg = RidgeConfig {
+            kernel_d: kernel,
+            kernel_t: kernel,
+            iterations: args.get_usize("iterations", 100),
+            threads: args.get_usize("threads", 1),
+            ..Default::default()
+        };
+        let results = run_cv_path_jobs(&folds, fold_workers, |tr, te| {
+            KronRidge::new(cfg)
+                .fit_path(tr, &lambdas)
+                .and_then(|models| kronvt::model::predict_path(&models, te))
+                .map(|score_sets| {
+                    score_sets.iter().map(|s| auc(&te.labels, s)).collect::<Vec<f64>>()
+                })
+                .unwrap_or_else(|_| vec![f64::NAN; lambdas.len()])
+        });
+        for r in &results {
+            let row: Vec<String> = r.aucs.iter().map(|a| format!("{a:.4}")).collect();
+            println!(
+                "fold {} AUCs=[{}] ({} train, {} test edges, {:.2}s)",
+                r.fold,
+                row.join(", "),
+                r.train_edges,
+                r.test_edges,
+                r.train_secs
+            );
+        }
+        let means = kronvt::coordinator::jobs::mean_auc_path(&results);
+        let mut best = 0;
+        for (j, &m) in means.iter().enumerate() {
+            println!("lambda={:<12} mean AUC={m:.4}", lambdas[j]);
+            // NaN means (diverged folds) must never win — or block a later
+            // finite mean from displacing them.
+            if !m.is_nan() && (means[best].is_nan() || m > means[best]) {
+                best = j;
+            }
+        }
+        println!(
+            "best lambda={} (mean AUC {:.4} over {} folds)",
+            lambdas[best],
+            means[best],
+            results.len()
+        );
+        return Ok(());
+    }
     let results = run_cv_jobs(&folds, fold_workers, |tr, te| {
         train_and_eval(&method, tr, te, args).unwrap_or(f64::NAN)
     });
@@ -267,6 +330,8 @@ fn usage() -> ! {
                        --kernel linear|gaussian:G --lambda L --seed S --scale F\n\
                        --threads N   GVT matvec worker threads (0 = all cores; identical results, just faster)\n\
                        --fold-workers N   (cv only) train folds concurrently\n\
+                       --lambdas a,b,c    (cv + kronridge) batched λ-grid CV: one block-CG solve\n\
+                                          and one multi-RHS prediction per fold covers every λ\n\
          serve flags:  --serve-workers N   scoring-pool threads (batches scored concurrently)\n\
                        --cache-vertices N  per-side kernel-row LRU capacity (0 = off)\n\
                        --max-queue N       request-queue bound (backpressure)\n\

@@ -141,6 +141,45 @@ impl DualModel {
     }
 }
 
+/// Score several trained models that share one training side (the output of
+/// [`crate::train::KronRidge::fit_path`], or any multi-output family) against
+/// one test batch in a **single batched sweep**: the test–train kernel
+/// blocks are computed once and one multi-RHS GVT apply scores every model's
+/// coefficients together. Returns one score vector per model; entry `j` is
+/// **bitwise identical** to `models[j].predict(test)`.
+///
+/// Errors if `models` is empty or the models do not share their training
+/// edge index, features, and kernels (they must come from one training run).
+pub fn predict_path(models: &[DualModel], test: &Dataset) -> Result<Vec<Vec<f64>>, String> {
+    let first = models.first().ok_or("predict_path needs at least one model")?;
+    for (j, model) in models.iter().enumerate().skip(1) {
+        if model.train_idx != first.train_idx
+            || model.train_start_features != first.train_start_features
+            || model.train_end_features != first.train_end_features
+            || model.kernel_d != first.kernel_d
+            || model.kernel_t != first.kernel_t
+        {
+            return Err(format!(
+                "model {j} does not share the first model's training side; \
+                 predict_path requires models from one training run"
+            ));
+        }
+    }
+    let op = first.predict_op(test);
+    let n = op.n_train();
+    let t = op.n_test();
+    let k = models.len();
+    if t == 0 {
+        return Ok(vec![Vec::new(); k]);
+    }
+    let mut duals = vec![0.0; n * k];
+    for (dj, model) in duals.chunks_mut(n).zip(models) {
+        dj.copy_from_slice(&model.dual_coef);
+    }
+    let scores = op.predict_multi(&duals, k);
+    Ok(scores.chunks(t).map(|c| c.to_vec()).collect())
+}
+
 fn make_cache(
     capacity: usize,
     hits: &Arc<AtomicUsize>,
@@ -385,6 +424,34 @@ mod tests {
         assert_eq!(ctx.nnz(), model.nnz());
         // pruning may flip the Algorithm-1 branch → allclose, not bitwise
         assert_allclose(&ctx.predict_batch(&test), &model.predict(&test), 1e-10, 1e-10);
+    }
+
+    #[test]
+    fn predict_path_columns_match_single_predictions_bitwise() {
+        let (model, test) = toy_model_and_test(314, KernelKind::Gaussian { gamma: 0.3 });
+        let mut rng = Pcg32::seeded(315);
+        // three coefficient sets over the same training side
+        let models: Vec<DualModel> = (0..3)
+            .map(|_| DualModel {
+                dual_coef: rng.normal_vec(model.dual_coef.len()),
+                ..model.clone()
+            })
+            .collect();
+        let batched = predict_path(&models, &test).unwrap();
+        assert_eq!(batched.len(), 3);
+        for (j, scores) in batched.iter().enumerate() {
+            assert_eq!(scores, &models[j].predict(&test), "model {j}");
+        }
+    }
+
+    #[test]
+    fn predict_path_rejects_mismatched_training_sides() {
+        let (model, test) = toy_model_and_test(316, KernelKind::Linear);
+        assert!(predict_path(&[], &test).is_err());
+        // a model with a different kernel cannot share the batched sweep
+        let mut diff_kernel = model.clone();
+        diff_kernel.kernel_d = KernelKind::Gaussian { gamma: 9.0 };
+        assert!(predict_path(&[model, diff_kernel], &test).is_err());
     }
 
     #[test]

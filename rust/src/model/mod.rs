@@ -9,5 +9,5 @@
 pub mod dual;
 pub mod primal;
 
-pub use dual::{DualModel, PredictContext};
+pub use dual::{predict_path, DualModel, PredictContext};
 pub use primal::{PrimalKronOp, PrimalModel};

@@ -12,8 +12,8 @@ use std::sync::Arc;
 use crate::data::Dataset;
 use crate::eval::auc::auc;
 use crate::gvt::{KronKernelOp, KronPredictOp};
-use crate::kernels::{kernel_matrix, KernelKind};
-use crate::linalg::solvers::{cg_cb, minres_cb, SolverConfig};
+use crate::kernels::{kernel_matrix_threaded, KernelKind};
+use crate::linalg::solvers::{block_cg, cg_cb, minres_cb, SolverConfig};
 use crate::linalg::vecops::dot;
 use crate::model::primal::{PrimalKronOp, PrimalNewtonOp};
 use crate::model::{DualModel, PrimalModel};
@@ -66,15 +66,17 @@ pub struct KronRidge {
 }
 
 /// Build the dual training operator from a dataset, sharding matvecs over
-/// `threads` worker threads.
+/// `threads` worker threads. The kernel matrices themselves are built with
+/// the same thread count through the packed GEMM (bitwise identical to the
+/// serial build).
 pub(crate) fn dual_kernel_op(
     train: &Dataset,
     kernel_d: KernelKind,
     kernel_t: KernelKind,
     threads: usize,
 ) -> KronKernelOp {
-    let k = Arc::new(kernel_d.square_matrix(&train.start_features));
-    let g = Arc::new(kernel_t.square_matrix(&train.end_features));
+    let k = Arc::new(kernel_d.square_matrix_threaded(&train.start_features, threads));
+    let g = Arc::new(kernel_t.square_matrix_threaded(&train.end_features, threads));
     KronKernelOp::new(g, k, train.kron_index()).with_threads(threads)
 }
 
@@ -86,8 +88,9 @@ pub(crate) fn validation_op(
     kernel_t: KernelKind,
     threads: usize,
 ) -> KronPredictOp {
-    let khat = kernel_matrix(kernel_d, &val.start_features, &train.start_features);
-    let ghat = kernel_matrix(kernel_t, &val.end_features, &train.end_features);
+    let khat =
+        kernel_matrix_threaded(kernel_d, &val.start_features, &train.start_features, threads);
+    let ghat = kernel_matrix_threaded(kernel_t, &val.end_features, &train.end_features, threads);
     KronPredictOp::new(ghat, khat, val.kron_index(), train.kron_index()).with_threads(threads)
 }
 
@@ -152,6 +155,47 @@ impl KronRidge {
             kernel_t: self.cfg.kernel_t,
         };
         Ok((model, trace))
+    }
+
+    /// Train one dual model per λ in `lambdas` through the **batched
+    /// compute core**: the kernel operator is built once, and a single
+    /// [`block_cg`] solve drives all shifted systems `(Q + λ_j I) a_j = y`
+    /// with one multi-RHS GVT apply per iteration — a whole regularization
+    /// path for little more than the cost of one model (`cfg.lambda` is
+    /// ignored; `cfg.iterations`/`cfg.tol`/`cfg.threads` apply).
+    ///
+    /// Uses CG rather than the single-model path's MINRES, so a
+    /// one-element path is numerically (not bitwise) equivalent to
+    /// [`KronRidge::fit`]; each returned model matches the standalone CG
+    /// solve for its λ bit for bit.
+    pub fn fit_path(&self, train: &Dataset, lambdas: &[f64]) -> Result<Vec<DualModel>, String> {
+        train.validate()?;
+        if train.n_edges() == 0 {
+            return Err("empty training set".into());
+        }
+        if lambdas.is_empty() {
+            return Ok(Vec::new());
+        }
+        let op = dual_kernel_op(train, self.cfg.kernel_d, self.cfg.kernel_t, self.cfg.threads);
+        let n = train.n_edges();
+        let k = lambdas.len();
+        let mut b = vec![0.0; n * k];
+        for bj in b.chunks_mut(n) {
+            bj.copy_from_slice(&train.labels);
+        }
+        let mut duals = vec![0.0; n * k];
+        let solver_cfg = SolverConfig { max_iters: self.cfg.iterations, tol: self.cfg.tol };
+        block_cg(&op, lambdas, &b, &mut duals, &solver_cfg);
+        Ok((0..k)
+            .map(|j| DualModel {
+                dual_coef: duals[j * n..(j + 1) * n].to_vec(),
+                train_start_features: train.start_features.clone(),
+                train_end_features: train.end_features.clone(),
+                train_idx: train.kron_index(),
+                kernel_d: self.cfg.kernel_d,
+                kernel_t: self.cfg.kernel_t,
+            })
+            .collect())
     }
 
     /// Train the primal model (implicitly linear vertex kernels; the
@@ -321,6 +365,40 @@ mod tests {
     fn rejects_empty_training_set() {
         let ds = toy_train(404, 5, 5, 10).subset_by_edges(&[], "empty");
         assert!(KronRidge::new(RidgeConfig::default()).fit(&ds).is_err());
+    }
+
+    #[test]
+    fn fit_path_matches_exact_solutions_per_lambda() {
+        let train = toy_train(406, 8, 7, 26);
+        let lambdas = [0.25, 1.0, 4.0];
+        let cfg = RidgeConfig { iterations: 600, tol: 1e-13, ..Default::default() };
+        let models = KronRidge::new(cfg).fit_path(&train, &lambdas).unwrap();
+        assert_eq!(models.len(), lambdas.len());
+        for (model, &lambda) in models.iter().zip(&lambdas) {
+            let exact = ridge_exact_dual(&train, &RidgeConfig { lambda, ..cfg });
+            assert_allclose(&model.dual_coef, &exact, 1e-6, 1e-6);
+        }
+    }
+
+    #[test]
+    fn fit_path_threaded_matches_serial_bitwise() {
+        let train = toy_train(407, 30, 30, 2400);
+        let lambdas = [0.5, 2.0];
+        let base = RidgeConfig { iterations: 25, tol: 1e-12, ..Default::default() };
+        let serial = KronRidge::new(base).fit_path(&train, &lambdas).unwrap();
+        let par =
+            KronRidge::new(RidgeConfig { threads: 4, ..base }).fit_path(&train, &lambdas).unwrap();
+        for (s, p) in serial.iter().zip(&par) {
+            assert_eq!(s.dual_coef, p.dual_coef);
+        }
+    }
+
+    #[test]
+    fn fit_path_empty_lambdas_returns_no_models() {
+        let train = toy_train(408, 5, 5, 12);
+        let models =
+            KronRidge::new(RidgeConfig::default()).fit_path(&train, &[]).unwrap();
+        assert!(models.is_empty());
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Integration tests for the batched compute core: the packed GEMM, the
+//! multi-RHS GVT apply, block CG, and the batched training/prediction paths
+//! built on them. The two properties everything rests on:
+//!
+//! 1. the packed GEMM equals the per-element `dot` reference **bitwise** at
+//!    awkward shapes (1×1, primes, micro-kernel tails) for every thread
+//!    count, and
+//! 2. every column of a batched apply/solve/prediction equals the
+//!    corresponding single-RHS computation **bitwise** across thread counts
+//!    and both Algorithm-1 branches — so batching can never change a solver
+//!    trajectory or a served score.
+
+use std::sync::Arc;
+
+use kronvt::gvt::{
+    gvt_apply_into, gvt_apply_multi_into, Branch, EdgePlan, GvtEngine, GvtWorkspace, KronIndex,
+    KronKernelOp,
+};
+use kronvt::linalg::gemm::{gemm_nn_into, gemm_nt_into, pack_transpose};
+use kronvt::linalg::solvers::{block_cg, cg, SolverConfig};
+use kronvt::linalg::vecops::dot;
+use kronvt::linalg::Matrix;
+use kronvt::train::{KronRidge, RidgeConfig};
+use kronvt::util::rng::Pcg32;
+
+/// Awkward GEMM shapes: degenerate, prime, and micro-kernel tail sizes
+/// (m % 4, n % 4, k % 4 covering every remainder).
+const GEMM_SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (1, 7, 1),
+    (3, 2, 5),
+    (4, 4, 4),
+    (5, 3, 9),
+    (7, 13, 11),
+    (8, 8, 6),
+    (16, 64, 4),
+    (31, 29, 37),
+    (65, 70, 33),
+];
+
+fn dot_reference_nt(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut c = vec![0.0; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            c[i * n + j] = dot(&a[i * k..(i + 1) * k], &b[j * k..(j + 1) * k]);
+        }
+    }
+    c
+}
+
+#[test]
+fn packed_gemm_equals_reference_at_awkward_shapes() {
+    let mut rng = Pcg32::seeded(0x6E44);
+    for &(m, k, n) in GEMM_SHAPES {
+        let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+        let b_nt: Vec<f64> = (0..n * k).map(|_| rng.normal()).collect();
+        let b_nn = pack_transpose(&b_nt, n, k); // k×n row-major
+        let reference = dot_reference_nt(&a, &b_nt, m, k, n);
+        for threads in [1, 2, 4, 8] {
+            let mut c_nt = vec![f64::NAN; m * n];
+            gemm_nt_into(&a, &b_nt, m, k, n, &mut c_nt, threads);
+            assert_eq!(c_nt, reference, "NT m={m} k={k} n={n} threads={threads}");
+            let mut c_nn = vec![f64::NAN; m * n];
+            gemm_nn_into(&a, &b_nn, m, k, n, &mut c_nn, threads);
+            assert_eq!(c_nn, reference, "NN m={m} k={k} n={n} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn packed_gemm_close_to_plain_triple_loop() {
+    // Different association than the dot reduction → approximate, but tight.
+    let mut rng = Pcg32::seeded(0x6E45);
+    for &(m, k, n) in GEMM_SHAPES {
+        let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+        let mut c = vec![0.0; m * n];
+        gemm_nn_into(&a, &b, m, k, n, &mut c, 1);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a[i * k + kk] * b[kk * n + j];
+                }
+                assert!((c[i * n + j] - s).abs() < 1e-9, "({i},{j}): {} vs {s}", c[i * n + j]);
+            }
+        }
+    }
+}
+
+#[allow(clippy::type_complexity)]
+fn random_gvt_problem(
+    seed: u64,
+    a: usize,
+    b: usize,
+    c: usize,
+    d: usize,
+    e: usize,
+    f: usize,
+) -> (Matrix, Matrix, KronIndex, KronIndex) {
+    let mut rng = Pcg32::seeded(seed);
+    let m = Matrix::from_fn(a, b, |_, _| rng.normal());
+    let n = Matrix::from_fn(c, d, |_, _| rng.normal());
+    let rows = KronIndex::new(
+        (0..f).map(|_| rng.below(a) as u32).collect(),
+        (0..f).map(|_| rng.below(c) as u32).collect(),
+    );
+    let cols = KronIndex::new(
+        (0..e).map(|_| rng.below(b) as u32).collect(),
+        (0..e).map(|_| rng.below(d) as u32).collect(),
+    );
+    (m, n, rows, cols)
+}
+
+#[test]
+fn multi_rhs_apply_bitwise_matches_single_per_column() {
+    // Large enough to engage the parallel engine (e + f ≥ 2048), awkward
+    // enough (k_rhs 1, 3, 8; zeros in v; both branches) to hit every path.
+    let (a, b, c, d, e, f) = (7, 9, 6, 8, 2600, 2200);
+    let (m, n, rows, cols) = random_gvt_problem(0xF00D, a, b, c, d, e, f);
+    let m_t = m.transpose();
+    let n_t = n.transpose();
+    let plan_full = EdgePlan::build_full(&rows, &cols, a, b, c, d);
+    let plan_plain = EdgePlan::build(&cols, b, d);
+    let mut rng = Pcg32::seeded(0xF00E);
+    for k_rhs in [1usize, 3, 8] {
+        let mut v = rng.normal_vec(e * k_rhs);
+        for (i, vi) in v.iter_mut().enumerate() {
+            if i % 7 == 0 {
+                *vi = 0.0;
+            }
+        }
+        for branch in [None, Some(Branch::T), Some(Branch::S)] {
+            // serial single-RHS reference, column by column
+            let mut ws = GvtWorkspace::new();
+            let mut reference = vec![0.0; f * k_rhs];
+            for j in 0..k_rhs {
+                let mut uj = vec![0.0; f];
+                gvt_apply_into(
+                    &m, &n, &m_t, &n_t, &rows, &cols, &v[j * e..(j + 1) * e], &mut uj, &mut ws,
+                    branch,
+                );
+                reference[j * f..(j + 1) * f].copy_from_slice(&uj);
+            }
+            // serial multi
+            let mut u = vec![f64::NAN; f * k_rhs];
+            gvt_apply_multi_into(
+                &m, &n, &m_t, &n_t, &rows, &cols, &v, &mut u, k_rhs, &mut ws, branch,
+            );
+            assert_eq!(u, reference, "serial multi k={k_rhs} branch={branch:?}");
+            // engine, all thread counts, with and without output buckets
+            for threads in [1, 2, 4, 8] {
+                for plan in [&plan_full, &plan_plain] {
+                    let mut u = vec![f64::NAN; f * k_rhs];
+                    let mut ws2 = GvtWorkspace::new();
+                    GvtEngine::new(threads).apply_planned_multi(
+                        &m, &n, &m_t, &n_t, &rows, &cols, plan, &v, &mut u, k_rhs, &mut ws2,
+                        branch,
+                    );
+                    assert_eq!(
+                        u, reference,
+                        "k={k_rhs} branch={branch:?} threads={threads} buckets={}",
+                        plan.has_output_buckets()
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn random_kernel(rng: &mut Pcg32, n: usize) -> Matrix {
+    let x = Matrix::from_fn(n, 3, |_, _| rng.normal());
+    kronvt::kernels::KernelKind::Gaussian { gamma: 0.4 }.square_matrix(&x)
+}
+
+#[test]
+fn block_cg_through_kernel_operator_bitwise_matches_cg() {
+    // The multi-λ ridge workload: (Q + λ_j I) a_j = y through one batched
+    // operator must reproduce each standalone CG solve bit for bit.
+    let mut rng = Pcg32::seeded(0xAB1E);
+    let (q, m_verts, n_edges) = (12, 11, 2600);
+    let g = Arc::new(random_kernel(&mut rng, q));
+    let k = Arc::new(random_kernel(&mut rng, m_verts));
+    let idx = KronIndex::new(
+        (0..n_edges).map(|_| rng.below(q) as u32).collect(),
+        (0..n_edges).map(|_| rng.below(m_verts) as u32).collect(),
+    );
+    let y = rng.normal_vec(n_edges);
+    let shifts = [0.25, 1.0, 4.0];
+    let cfg = SolverConfig { max_iters: 30, tol: 1e-10 };
+    for threads in [1, 4] {
+        let op = KronKernelOp::new(g.clone(), k.clone(), idx.clone()).with_threads(threads);
+        let mut b = vec![0.0; n_edges * shifts.len()];
+        for bj in b.chunks_mut(n_edges) {
+            bj.copy_from_slice(&y);
+        }
+        let mut x = vec![0.0; n_edges * shifts.len()];
+        let stats = block_cg(&op, &shifts, &b, &mut x, &cfg);
+        for (j, &lambda) in shifts.iter().enumerate() {
+            let sys = kronvt::gvt::operator::RidgeSystemOp { op: &op, lambda };
+            let mut x_single = vec![0.0; n_edges];
+            let s = cg(&sys, &y, &mut x_single, &cfg);
+            assert_eq!(
+                &x[j * n_edges..(j + 1) * n_edges],
+                x_single.as_slice(),
+                "λ={lambda} threads={threads}"
+            );
+            assert_eq!(stats[j].iterations, s.iterations, "λ={lambda} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn lambda_path_training_and_batched_prediction_match_singles() {
+    // End to end: fit_path + predict_path over a λ grid give, per λ, the
+    // same scores as training/predicting that λ through the same solver.
+    let mut rng = Pcg32::seeded(0xCAB5);
+    let (m_verts, q_verts, n_edges) = (15, 14, 120);
+    let train = kronvt::data::Dataset {
+        start_features: Matrix::from_fn(m_verts, 3, |_, _| rng.normal()),
+        end_features: Matrix::from_fn(q_verts, 2, |_, _| rng.normal()),
+        start_idx: (0..n_edges).map(|_| rng.below(m_verts) as u32).collect(),
+        end_idx: (0..n_edges).map(|_| rng.below(q_verts) as u32).collect(),
+        labels: (0..n_edges).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect(),
+        name: "train".into(),
+    };
+    let test = kronvt::data::Dataset {
+        start_features: Matrix::from_fn(6, 3, |_, _| rng.normal()),
+        end_features: Matrix::from_fn(5, 2, |_, _| rng.normal()),
+        start_idx: (0..20).map(|_| rng.below(6) as u32).collect(),
+        end_idx: (0..20).map(|_| rng.below(5) as u32).collect(),
+        labels: vec![0.0; 20],
+        name: "test".into(),
+    };
+    let lambdas = [0.5, 2.0, 8.0];
+    let cfg = RidgeConfig { iterations: 200, tol: 1e-12, ..Default::default() };
+    let models = KronRidge::new(cfg).fit_path(&train, &lambdas).unwrap();
+    let batched = kronvt::model::predict_path(&models, &test).unwrap();
+    assert_eq!(batched.len(), lambdas.len());
+    for (j, model) in models.iter().enumerate() {
+        // batched prediction column == that model's own prediction, bitwise
+        assert_eq!(batched[j], model.predict(&test), "λ={} prediction", lambdas[j]);
+        // and the trained coefficients agree with the exact solve
+        let exact = kronvt::train::ridge::ridge_exact_dual(
+            &train,
+            &RidgeConfig { lambda: lambdas[j], ..cfg },
+        );
+        kronvt::linalg::vecops::assert_allclose(&model.dual_coef, &exact, 1e-6, 1e-6);
+    }
+}
