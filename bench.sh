@@ -3,6 +3,9 @@
 # BENCH_*.json result files (see docs/BENCHMARKS.md for the convention;
 # sections written by a real run drop their 'placeholder' flag).
 #
+# bench_gvt_micro additionally covers the pairwise kernel family table
+# (BENCH_pairwise.json), so both --quick and --smoke refresh it.
+#
 # Usage:
 #   ./bench.sh            # every bench target, quick mode
 #   ./bench.sh --full     # every bench target, paper-scale settings

@@ -7,8 +7,11 @@
 #   3. cargo build --release    the tier-1 build
 #   4. cargo test -q            unit + integration tests
 #   5. cargo test --doc         doc tests (keeps the lib.rs quickstart compiling)
-#   6. ./bench.sh --smoke       quick-mode run of the JSON-writing benches so
+#   6. cargo doc --no-deps      rustdoc gate (-D warnings: broken intra-doc
+#                               links / code blocks fail instead of rotting)
+#   7. ./bench.sh --smoke       quick-mode run of the JSON-writing benches so
 #                               the bench targets can't bit-rot
+#   8. python3 -m json.tool     every BENCH_*.json must exist and parse
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -22,6 +25,17 @@ run cargo clippy --all-targets -- -D warnings
 run cargo build --release
 run cargo test -q
 run cargo test --doc
+run env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 run ../bench.sh --smoke
+
+shopt -s nullglob
+bench_files=(../BENCH_*.json)
+if [ "${#bench_files[@]}" -eq 0 ]; then
+    echo "ci.sh: no BENCH_*.json files found" >&2
+    exit 1
+fi
+for f in "${bench_files[@]}"; do
+    run python3 -m json.tool "$f" > /dev/null
+done
 
 echo "ci.sh: all checks passed"

@@ -18,13 +18,26 @@
 //! per-column equality first, and records the batched speedups into
 //! `BENCH_batched_gvt.json` (section `"multi_rhs"`).
 //!
+//! A fourth table measures the **pairwise kernel family**
+//! ([`PairwiseOp`]: Kronecker / symmetric / anti-symmetric / Cartesian
+//! training applies composed from planned GVT applies) against the
+//! materialized dense baseline at small sizes — asserting agreement first —
+//! and records per-variant apply times into `BENCH_pairwise.json`
+//! (section `"pairwise"`).
+//!
 //! Run: `cargo bench --bench bench_gvt_micro [-- --quick|--full]`
+
+use std::sync::Arc;
 
 use kronvt::gvt::algorithm::gvt_reference;
 use kronvt::gvt::complexity;
 use kronvt::gvt::dense::dense_apply;
 use kronvt::gvt::explicit::explicit_apply_streaming;
-use kronvt::gvt::{gvt_apply_into, Branch, EdgePlan, GvtEngine, GvtWorkspace, KronIndex};
+use kronvt::gvt::{
+    gvt_apply_into, Branch, EdgePlan, GvtEngine, GvtWorkspace, KronIndex, PairwiseKernelKind,
+    PairwiseOp,
+};
+use kronvt::linalg::vecops::assert_allclose;
 use kronvt::linalg::Matrix;
 use kronvt::runtime::ArtifactRegistry;
 use kronvt::util::args::Args;
@@ -298,6 +311,104 @@ fn main() {
     match update_json_file(&out_multi, "multi_rhs", multi_section) {
         Ok(()) => println!("\nwrote multi-RHS results to {}", out_multi.display()),
         Err(err) => eprintln!("\nfailed to write {}: {err}", out_multi.display()),
+    }
+
+    // ---- Pairwise kernel family: composed GVT applies vs dense baseline ----
+    // Square homogeneous problems (one vertex set, one kernel matrix); the
+    // dense baseline materializes the pairwise kernel matrix (n×n) and is
+    // only built at small n.
+    const DENSE_CAP: usize = 3_000;
+    let pair_shapes: &[(usize, usize)] = if full {
+        &[(100, 2_500), (200, 10_000), (400, 40_000)]
+    } else if quick {
+        &[(60, 900), (100, 2_500)]
+    } else {
+        &[(100, 2_500), (200, 10_000)]
+    };
+    println!();
+    println!(
+        "{:>5} {:>8} {:>14} | {:>10} {:>10} {:>10} | {:>8}",
+        "verts", "n", "variant", "gvt-1t", "gvt-4t", "dense-mv", "vs-dense"
+    );
+    let variants = [
+        PairwiseKernelKind::Kronecker,
+        PairwiseKernelKind::SymmetricKron,
+        PairwiseKernelKind::AntiSymmetricKron,
+        PairwiseKernelKind::Cartesian,
+    ];
+    let mut pair_rows = Vec::new();
+    for &(nv, n) in pair_shapes {
+        let kmat = Arc::new(random_kernel(&mut rng, nv));
+        let idx = KronIndex::new(
+            (0..n).map(|_| rng.below(nv) as u32).collect(),
+            (0..n).map(|_| rng.below(nv) as u32).collect(),
+        );
+        let v = rng.normal_vec(n);
+        for kind in variants {
+            let cross = kind.needs_cross().then(|| kmat.clone());
+            let op =
+                PairwiseOp::training(kind, kmat.clone(), kmat.clone(), cross.clone(), None, idx.clone())
+                    .expect("valid pairwise training op");
+            let op_4t = PairwiseOp::training(kind, kmat.clone(), kmat.clone(), cross, None, idx.clone())
+                .expect("valid pairwise training op")
+                .with_threads(4);
+            let mut u = vec![0.0; n];
+            let runner = BenchRunner::quick();
+
+            // dense oracle: materialize once, gate correctness, time its matvec
+            let dense_mv_secs = if n <= DENSE_CAP {
+                let dense = op.explicit_dense();
+                op.apply_into(&v, &mut u);
+                assert_allclose(&u, &dense.matvec(&v), 1e-9, 1e-9);
+                Some(runner.run(|| dense.matvec(&v)).min_secs)
+            } else {
+                None
+            };
+
+            let t_1t = runner.run(|| op.apply_into(&v, &mut u)).min_secs;
+            let t_4t = runner.run(|| op_4t.apply_into(&v, &mut u)).min_secs;
+            println!(
+                "{:>5} {:>8} {:>14} | {:>10} {:>10} {:>10} | {:>8}",
+                nv,
+                n,
+                kind.name(),
+                fmt_secs(t_1t),
+                fmt_secs(t_4t),
+                dense_mv_secs.map(fmt_secs).unwrap_or_else(|| "-".into()),
+                dense_mv_secs
+                    .map(|d| format!("{:.2}x", d / t_1t))
+                    .unwrap_or_else(|| "-".into()),
+            );
+            pair_rows.push(Json::obj(vec![
+                ("vertices", Json::from(nv)),
+                ("n", Json::from(n)),
+                ("variant", Json::from(kind.name())),
+                ("terms", Json::from(op.n_terms())),
+                ("gvt_1t_secs", Json::from(t_1t)),
+                ("gvt_4t_secs", Json::from(t_4t)),
+                (
+                    "dense_matvec_secs",
+                    dense_mv_secs.map(Json::from).unwrap_or(Json::Null),
+                ),
+                (
+                    "speedup_vs_dense_1t",
+                    dense_mv_secs.map(|d| Json::from(d / t_1t)).unwrap_or(Json::Null),
+                ),
+            ]));
+        }
+    }
+    let pair_section = Json::obj(vec![
+        ("bench", Json::from("bench_gvt_micro")),
+        ("host_threads", Json::from(host_threads)),
+        ("full", Json::from(full)),
+        ("rows", Json::Arr(pair_rows)),
+    ]);
+    let out_pair = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_pairwise.json");
+    match update_json_file(&out_pair, "pairwise", pair_section) {
+        Ok(()) => println!("\nwrote pairwise-family results to {}", out_pair.display()),
+        Err(err) => eprintln!("\nfailed to write {}: {err}", out_pair.display()),
     }
     println!("bench_gvt_micro done");
 }

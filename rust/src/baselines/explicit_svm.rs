@@ -246,6 +246,7 @@ impl ExplicitSvm {
             train_idx: train.kron_index(),
             kernel_d: KernelKind::Gaussian { gamma },
             kernel_t: KernelKind::Gaussian { gamma },
+            pairwise: crate::gvt::PairwiseKernelKind::Kronecker,
         })
     }
 }

@@ -346,6 +346,7 @@ mod tests {
             ),
             kernel_d: KernelKind::Gaussian { gamma: 0.3 },
             kernel_t: KernelKind::Gaussian { gamma: 0.3 },
+            pairwise: crate::gvt::PairwiseKernelKind::Kronecker,
         }
     }
 

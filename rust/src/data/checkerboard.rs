@@ -7,6 +7,11 @@
 //! `noise` (0.2 in the paper). A fraction `density` (0.25 in the paper) of
 //! all `m·q` possible edges is labeled; sampling is per-start-vertex so the
 //! edge count is exact and generation streams in O(n).
+//!
+//! [`HomogeneousConfig`] additionally generates the **homogeneous-graph**
+//! variant — one shared vertex set on both edge sides with symmetric labels
+//! (the protein–protein / drug–drug setting) — to exercise the symmetric
+//! pairwise kernel family end to end.
 
 use super::dataset::Dataset;
 use crate::linalg::Matrix;
@@ -100,6 +105,90 @@ impl CheckerboardConfig {
     }
 }
 
+/// Configuration for the homogeneous (single-vertex-set) checkerboard: both
+/// edge roles index one vertex set, every labeled pair appears in **both
+/// orientations with one shared label**, and the checkerboard truth
+/// `true_label` is already symmetric in its arguments — the canonical
+/// workload for the symmetric pairwise kernel
+/// ([`PairwiseKernelKind::SymmetricKron`](crate::gvt::PairwiseKernelKind)).
+#[derive(Debug, Clone, Copy)]
+pub struct HomogeneousConfig {
+    /// Number of vertices in the single shared vertex set.
+    pub vertices: usize,
+    /// Approximate fraction of partners sampled per vertex; each kept
+    /// unordered pair emits both directed orientations.
+    pub density: f64,
+    /// Label-flip probability (applied once per unordered pair, so both
+    /// orientations always agree).
+    pub noise: f64,
+    /// Feature range, as in [`CheckerboardConfig`].
+    pub feature_range: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for HomogeneousConfig {
+    fn default() -> Self {
+        HomogeneousConfig { vertices: 300, density: 0.25, noise: 0.2, feature_range: 100.0, seed: 0 }
+    }
+}
+
+/// Default homogeneous checkerboard (300 vertices).
+pub fn homogeneous(seed: u64) -> HomogeneousConfig {
+    HomogeneousConfig { seed, ..Default::default() }
+}
+
+impl HomogeneousConfig {
+    /// Generate the dataset: `start_features` and `end_features` are the
+    /// *same* vertex features, and the edge list holds each sampled pair in
+    /// both orientations with one shared (possibly noise-flipped) label.
+    ///
+    /// [`Dataset::zero_shot_split`](crate::data::Dataset::zero_shot_split)
+    /// and [`Dataset::ninefold_cv`](crate::data::Dataset::ninefold_cv)
+    /// detect the shared vertex set and use one vertex mask for both roles,
+    /// so a pair's two orientations always land in the same fold — no
+    /// mirrored-label leakage between train and test.
+    pub fn generate(&self) -> Dataset {
+        let v = self.vertices;
+        let mut rng = Pcg32::seeded(self.seed);
+        let feat: Vec<f64> = rng.uniform_vec(v, 0.0, self.feature_range);
+        let per_vertex = (((v as f64) * self.density).round() as usize).min(v);
+
+        let mut start_idx = Vec::new();
+        let mut end_idx = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..v {
+            for j in rng.sample_indices(v, per_vertex) {
+                // keep each unordered pair once (emitted below in both
+                // orientations); skip self-loops
+                if j <= i {
+                    continue;
+                }
+                let mut y = true_label(feat[i], feat[j]);
+                if rng.bernoulli(self.noise) {
+                    y = -y;
+                }
+                start_idx.push(i as u32);
+                end_idx.push(j as u32);
+                labels.push(y);
+                start_idx.push(j as u32);
+                end_idx.push(i as u32);
+                labels.push(y);
+            }
+        }
+
+        let features = Matrix::from_vec(v, 1, feat);
+        Dataset {
+            start_features: features.clone(),
+            end_features: features,
+            start_idx,
+            end_idx,
+            labels,
+            name: format!("homo-{v}"),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,6 +254,40 @@ mod tests {
         let st = ds.stats();
         let frac = st.positives as f64 / st.edges as f64;
         assert!((frac - 0.5).abs() < 0.06, "positive fraction={frac}");
+    }
+
+    #[test]
+    fn homogeneous_graph_is_symmetric() {
+        let ds = HomogeneousConfig { vertices: 40, density: 0.3, noise: 0.2, seed: 5, ..Default::default() }
+            .generate();
+        ds.validate().unwrap();
+        assert!(ds.n_edges() > 0);
+        // one shared vertex set on both sides
+        assert_eq!(ds.start_features.data(), ds.end_features.data());
+        // every edge's mirror exists and carries the identical label
+        use std::collections::HashMap;
+        let mut label_of: HashMap<(u32, u32), f64> = HashMap::new();
+        for h in 0..ds.n_edges() {
+            label_of.insert((ds.start_idx[h], ds.end_idx[h]), ds.labels[h]);
+        }
+        for h in 0..ds.n_edges() {
+            let mirror = label_of
+                .get(&(ds.end_idx[h], ds.start_idx[h]))
+                .expect("mirror orientation present");
+            assert_eq!(*mirror, ds.labels[h], "edge {h}");
+            assert_ne!(ds.start_idx[h], ds.end_idx[h], "no self-loops");
+        }
+    }
+
+    #[test]
+    fn homogeneous_graph_is_deterministic() {
+        let a = HomogeneousConfig { vertices: 30, density: 0.4, noise: 0.1, seed: 6, ..Default::default() }
+            .generate();
+        let b = HomogeneousConfig { vertices: 30, density: 0.4, noise: 0.1, seed: 6, ..Default::default() }
+            .generate();
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.start_idx, b.start_idx);
+        assert_eq!(a.end_idx, b.end_idx);
     }
 
     #[test]

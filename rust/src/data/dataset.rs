@@ -101,6 +101,14 @@ impl Dataset {
         self.n_edges() as f64 / (self.m() as f64 * self.q() as f64)
     }
 
+    /// Whether both edge roles index one shared vertex set (identical
+    /// feature matrices) — the homogeneous-graph setting of
+    /// [`crate::data::checkerboard::HomogeneousConfig`]. Splits use one
+    /// shared vertex mask in this case (see [`Dataset::zero_shot_split`]).
+    pub fn is_homogeneous(&self) -> bool {
+        self.start_features == self.end_features
+    }
+
     /// Build a new dataset from a subset of edge positions, compacting the
     /// vertex sets to those incident to at least one kept edge.
     pub fn subset_by_edges(&self, edge_pos: &[usize], name: &str) -> Dataset {
@@ -147,13 +155,24 @@ impl Dataset {
     /// vertices and of end vertices are held out; training edges connect two
     /// retained vertices, test edges connect two held-out vertices, and all
     /// mixed edges are discarded (§5.1, Fig. 2 idea with 2×2 blocks).
+    ///
+    /// On a **homogeneous** dataset ([`Dataset::is_homogeneous`]) the two
+    /// roles share **one** held-out vertex mask. Independent masks would
+    /// leak labels there: an undirected pair is stored in both orientations
+    /// with one label, and with separate masks a test edge's mirror lands in
+    /// training whenever the masks disagree on its endpoints. A shared mask
+    /// keeps every pair's orientations in the same fold.
     pub fn zero_shot_split(&self, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
         assert!((0.0..1.0).contains(&test_frac));
         let mut rng = Pcg32::seeded(seed);
         let m_test = ((self.m() as f64) * test_frac).round().max(1.0) as usize;
         let q_test = ((self.q() as f64) * test_frac).round().max(1.0) as usize;
         let start_test = mask_from_indices(self.m(), &rng.sample_indices(self.m(), m_test));
-        let end_test = mask_from_indices(self.q(), &rng.sample_indices(self.q(), q_test));
+        let end_test = if self.is_homogeneous() {
+            start_test.clone()
+        } else {
+            mask_from_indices(self.q(), &rng.sample_indices(self.q(), q_test))
+        };
 
         let mut train_edges = Vec::new();
         let mut test_edges = Vec::new();
@@ -177,14 +196,25 @@ impl Dataset {
     /// round uses one block as the test fold and the 4 blocks sharing no row
     /// or column group as training; the remaining 4 blocks are discarded.
     /// Returns `(train_dataset, test_dataset)` pairs.
+    ///
+    /// On a **homogeneous** dataset ([`Dataset::is_homogeneous`]) both roles
+    /// share one 3-way vertex grouping and only the **3 diagonal folds** are
+    /// produced: off-diagonal blocks would put a test pair's mirror
+    /// orientation into the training block (label leakage), while a diagonal
+    /// fold keeps both orientations of every pair on the same side.
     pub fn ninefold_cv(&self, seed: u64) -> Vec<(Dataset, Dataset)> {
         let mut rng = Pcg32::seeded(seed);
         let start_group = random_groups(self.m(), 3, &mut rng);
-        let end_group = random_groups(self.q(), 3, &mut rng);
+        let homogeneous = self.is_homogeneous();
+        let end_group =
+            if homogeneous { start_group.clone() } else { random_groups(self.q(), 3, &mut rng) };
 
         let mut folds = Vec::with_capacity(9);
         for gi in 0..3u8 {
             for gj in 0..3u8 {
+                if homogeneous && gi != gj {
+                    continue; // off-diagonal blocks leak mirrored labels
+                }
                 let mut train_edges = Vec::new();
                 let mut test_edges = Vec::new();
                 for h in 0..self.n_edges() {
@@ -324,6 +354,81 @@ mod tests {
         // total number of test edges equals n (each edge is in exactly one block).
         let total_test: usize = folds.iter().map(|(_, te)| te.n_edges()).sum();
         assert_eq!(total_test, ds.n_edges());
+    }
+
+    fn toy_homogeneous(v: usize, pairs_per_vertex: usize, seed: u64) -> Dataset {
+        let mut rng = Pcg32::seeded(seed);
+        let features = Matrix::from_fn(v, 2, |_, _| rng.normal());
+        let mut start_idx = Vec::new();
+        let mut end_idx = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..v {
+            for j in rng.sample_indices(v, pairs_per_vertex) {
+                if j <= i {
+                    continue;
+                }
+                let y = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+                start_idx.push(i as u32);
+                end_idx.push(j as u32);
+                labels.push(y);
+                start_idx.push(j as u32);
+                end_idx.push(i as u32);
+                labels.push(y);
+            }
+        }
+        Dataset {
+            start_features: features.clone(),
+            end_features: features,
+            start_idx,
+            end_idx,
+            labels,
+            name: "toy-homo".into(),
+        }
+    }
+
+    /// Edge identities as (start-feature-bits, end-feature-bits) pairs —
+    /// robust to the vertex compaction `subset_by_edges` performs.
+    fn edge_feature_pairs(ds: &Dataset) -> Vec<(u64, u64)> {
+        (0..ds.n_edges())
+            .map(|h| {
+                let s = ds.start_features.row(ds.start_idx[h] as usize)[0].to_bits();
+                let e = ds.end_features.row(ds.end_idx[h] as usize)[0].to_bits();
+                (s, e)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn homogeneous_zero_shot_split_shares_one_vertex_mask() {
+        // Regression: with independent start/end masks, a homogeneous test
+        // pair's mirror orientation (same label!) could land in training —
+        // label leakage. The shared mask keeps both orientations together.
+        let ds = toy_homogeneous(30, 12, 8);
+        assert!(ds.is_homogeneous());
+        let (train, test) = ds.zero_shot_split(0.3, 7);
+        assert!(train.n_edges() > 0 && test.n_edges() > 0);
+        let train_pairs: std::collections::HashSet<(u64, u64)> =
+            edge_feature_pairs(&train).into_iter().collect();
+        for (s, e) in edge_feature_pairs(&test) {
+            assert!(!train_pairs.contains(&(s, e)), "test edge present in train");
+            assert!(!train_pairs.contains(&(e, s)), "test edge's mirror present in train");
+        }
+    }
+
+    #[test]
+    fn homogeneous_ninefold_cv_uses_diagonal_folds_only() {
+        let ds = toy_homogeneous(36, 14, 9);
+        let folds = ds.ninefold_cv(11);
+        assert_eq!(folds.len(), 3, "homogeneous CV keeps the 3 leak-free diagonal folds");
+        for (train, test) in &folds {
+            assert!(train.n_edges() > 0 && test.n_edges() > 0);
+            let train_pairs: std::collections::HashSet<(u64, u64)> =
+                edge_feature_pairs(train).into_iter().collect();
+            for (s, e) in edge_feature_pairs(test) {
+                assert!(!train_pairs.contains(&(s, e)));
+                assert!(!train_pairs.contains(&(e, s)), "mirror leaked into training fold");
+            }
+        }
     }
 
     #[test]

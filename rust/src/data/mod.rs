@@ -3,7 +3,9 @@
 //! * [`dataset`] — the labeled edge-list container with vertex feature
 //!   matrices, plus vertex-disjoint (zero-shot) train/test splitting and the
 //!   9-fold cross-validation scheme of Fig. 2.
-//! * [`checkerboard`] — the Checkerboard simulation of §5.1 (exact).
+//! * [`checkerboard`] — the Checkerboard simulation of §5.1 (exact), plus
+//!   the homogeneous-graph (single vertex set, symmetric labels) variant
+//!   for the pairwise kernel families.
 //! * [`dti`] — synthetic drug–target interaction data matching the Table 5
 //!   dataset shapes (Ki, GPCR, IC, E); see DESIGN.md §3 for the substitution
 //!   rationale.
@@ -13,5 +15,5 @@ pub mod checkerboard;
 pub mod dti;
 
 pub use dataset::Dataset;
-pub use checkerboard::CheckerboardConfig;
+pub use checkerboard::{CheckerboardConfig, HomogeneousConfig};
 pub use dti::DtiConfig;

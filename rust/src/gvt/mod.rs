@@ -22,6 +22,10 @@
 //! * [`operator`] — [`LinOp`](crate::linalg::LinOp) wrappers: the training
 //!   kernel operator `R(G⊗K)Rᵀ`, Newton-system operators, prediction.
 //!   All operators are `Sync` and carry a `threads` knob.
+//! * [`pairwise`] — the **pairwise kernel operator family**
+//!   ([`PairwiseOp`]): Kronecker, symmetric, anti-symmetric, and Cartesian
+//!   pairwise kernels, each composed from one or two planned GVT applies without
+//!   ever materializing the pairwise kernel matrix.
 //! * [`dense`] — the scatter→GEMM→gather formulation used by the TPU/PJRT
 //!   path (see DESIGN.md §Hardware-Adaptation) as a native reference.
 //! * [`explicit`] — materialized baseline (`R(M⊗N)Cᵀ` built explicitly);
@@ -32,6 +36,7 @@
 pub mod algorithm;
 pub mod engine;
 pub mod operator;
+pub mod pairwise;
 pub mod dense;
 pub mod explicit;
 pub mod complexity;
@@ -41,6 +46,7 @@ pub use algorithm::{
 };
 pub use engine::{EdgePlan, GvtEngine, WorkspacePool};
 pub use operator::{KronKernelOp, KronPredictOp, SvmNewtonOp};
+pub use pairwise::{delta_matrix, PairwiseKernelKind, PairwiseOp, PairwiseShared};
 pub use complexity::{branch_costs, choose_branch};
 
 /// Index sequences `(p, q)` (or `(r, t)`) selecting rows (or columns) of a

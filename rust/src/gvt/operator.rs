@@ -169,29 +169,34 @@ impl MultiLinOp for KronKernelOp {
 }
 
 /// `Q + λI` — the Kronecker ridge regression system (§4.1), symmetric PD.
-pub struct RidgeSystemOp<'a> {
+///
+/// Generic over the wrapped kernel operator so both the plain
+/// [`KronKernelOp`] and the pairwise family
+/// ([`PairwiseOp`](super::pairwise::PairwiseOp)) can drive the same solvers;
+/// `Op` must be a *symmetric* operator.
+pub struct RidgeSystemOp<'a, Op: LinOp = KronKernelOp> {
     /// The kernel operator `Q`.
-    pub op: &'a KronKernelOp,
+    pub op: &'a Op,
     /// Regularization parameter λ.
     pub lambda: f64,
 }
 
-impl LinOp for RidgeSystemOp<'_> {
+impl<Op: LinOp> LinOp for RidgeSystemOp<'_, Op> {
     fn dim(&self) -> usize {
         self.op.dim()
     }
 
     fn apply(&self, x: &[f64], y: &mut [f64]) {
-        self.op.apply_into(x, y);
+        self.op.apply(x, y);
         for i in 0..x.len() {
             y[i] += self.lambda * x[i];
         }
     }
 }
 
-impl MultiLinOp for RidgeSystemOp<'_> {
+impl<Op: MultiLinOp> MultiLinOp for RidgeSystemOp<'_, Op> {
     fn apply_multi(&self, v: &[f64], k_rhs: usize, u: &mut [f64]) {
-        self.op.apply_multi_into(v, k_rhs, u);
+        self.op.apply_multi(v, k_rhs, u);
         for (uj, vj) in u.chunks_mut(self.op.dim().max(1)).zip(v.chunks(self.op.dim().max(1))) {
             for (ui, vi) in uj.iter_mut().zip(vj) {
                 *ui += self.lambda * vi;
@@ -203,16 +208,19 @@ impl MultiLinOp for RidgeSystemOp<'_> {
 /// `H·Q + λI` with `H = diag(mask)` — the L2-SVM Newton system (§4.2).
 ///
 /// Nonsymmetric; `Aᵀ = Q·H + λI` is provided so QMR can run. The mask is the
-/// indicator of the current active set `S = {i : y_i·p_i < 1}`.
-pub struct SvmNewtonOp<'a> {
-    op: &'a KronKernelOp,
+/// indicator of the current active set `S = {i : y_i·p_i < 1}`. Generic over
+/// the wrapped kernel operator (which must be *symmetric* — true of
+/// [`KronKernelOp`] and every training-shaped
+/// [`PairwiseOp`](super::pairwise::PairwiseOp) family member).
+pub struct SvmNewtonOp<'a, Op: LinOp = KronKernelOp> {
+    op: &'a Op,
     mask: Vec<f64>,
     lambda: f64,
 }
 
-impl<'a> SvmNewtonOp<'a> {
+impl<'a, Op: LinOp> SvmNewtonOp<'a, Op> {
     /// Wrap the kernel operator with an active-set mask (0/1 entries) and λ.
-    pub fn new(op: &'a KronKernelOp, mask: Vec<f64>, lambda: f64) -> Self {
+    pub fn new(op: &'a Op, mask: Vec<f64>, lambda: f64) -> Self {
         assert_eq!(mask.len(), op.dim());
         assert!(mask.iter().all(|&m| m == 0.0 || m == 1.0), "mask must be 0/1");
         SvmNewtonOp { op, mask, lambda }
@@ -224,13 +232,13 @@ impl<'a> SvmNewtonOp<'a> {
     }
 }
 
-impl LinOp for SvmNewtonOp<'_> {
+impl<Op: LinOp> LinOp for SvmNewtonOp<'_, Op> {
     fn dim(&self) -> usize {
         self.op.dim()
     }
 
     fn apply(&self, x: &[f64], y: &mut [f64]) {
-        self.op.apply_into(x, y);
+        self.op.apply(x, y);
         for i in 0..x.len() {
             y[i] = self.mask[i] * y[i] + self.lambda * x[i];
         }
@@ -239,7 +247,7 @@ impl LinOp for SvmNewtonOp<'_> {
     fn apply_transpose(&self, x: &[f64], y: &mut [f64]) {
         // (HQ + λI)ᵀ = Q H + λI  (Q symmetric, H diagonal)
         let masked: Vec<f64> = x.iter().zip(&self.mask).map(|(xi, mi)| xi * mi).collect();
-        self.op.apply_into(&masked, y);
+        self.op.apply(&masked, y);
         for i in 0..x.len() {
             y[i] += self.lambda * x[i];
         }

@@ -17,7 +17,10 @@
 //! index matrices selecting the edges that actually occur in the (sparse,
 //! non-complete) training graph. The [`gvt::GvtEngine`] shards that matvec
 //! across cores with bitwise-deterministic results; every trainer exposes it
-//! as a `threads` knob (see the quickstart below).
+//! as a `threads` knob (see the quickstart below). The same apply composes
+//! into a whole **pairwise kernel family** — symmetric, anti-symmetric, and
+//! Cartesian kernels for homogeneous graphs and ranking
+//! ([`gvt::PairwiseOp`], `pairwise` knob on every trainer config).
 //!
 //! ## Architecture (three layers)
 //!

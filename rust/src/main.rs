@@ -14,6 +14,7 @@ use kronvt::baselines::{ExplicitSvm, ExplicitSvmConfig, KnnConfig, KnnModel, Sgd
 use kronvt::coordinator::{run_cv_jobs, run_cv_path_jobs, PredictServer, ServerConfig};
 use kronvt::data::{checkerboard, dti, Dataset};
 use kronvt::eval::auc::auc;
+use kronvt::gvt::PairwiseKernelKind;
 use kronvt::kernels::KernelKind;
 use kronvt::train::{KronRidge, KronSvm, RidgeConfig, SvmConfig};
 use kronvt::util::args::Args;
@@ -34,11 +35,20 @@ fn load_dataset(name: &str, seed: u64, scale: f64) -> Result<Dataset, String> {
             cfg.q = cfg.m;
             cfg.generate()
         }
+        "homo" => {
+            let mut cfg = checkerboard::homogeneous(seed);
+            cfg.vertices = ((cfg.vertices as f64 * scale) as usize).max(10);
+            cfg.generate()
+        }
         "ki" => dti::ki(seed).generate(),
         "gpcr" => dti::gpcr(seed).generate(),
         "ic" => dti::ic(seed).generate(),
         "e" => dti::e(seed).generate(),
-        other => return Err(format!("unknown dataset '{other}' (checker, checker+, ki, gpcr, ic, e)")),
+        other => {
+            return Err(format!(
+                "unknown dataset '{other}' (checker, checker+, homo, ki, gpcr, ic, e)"
+            ))
+        }
     };
     Ok(ds)
 }
@@ -51,9 +61,18 @@ fn train_and_eval(
 ) -> Result<f64, String> {
     let lambda = args.get_f64("lambda", 1e-4);
     let kernel = KernelKind::parse(&args.get_str("kernel", "linear"))?;
+    let pairwise = PairwiseKernelKind::parse(&args.get_str("pairwise", "kron"))?;
     // GVT matvec parallelism (0 = all cores); results are identical for
     // every thread count, only faster.
     let threads = args.get_usize("threads", 1);
+    if pairwise != PairwiseKernelKind::Kronecker
+        && !matches!(method, "kronsvm" | "kronridge")
+    {
+        return Err(format!(
+            "--pairwise {} is only supported by kronsvm/kronridge (got '{method}')",
+            pairwise.name()
+        ));
+    }
     let scores = match method {
         "kronsvm" => {
             let cfg = SvmConfig {
@@ -63,6 +82,7 @@ fn train_and_eval(
                 outer_iters: args.get_usize("outer", 10),
                 inner_iters: args.get_usize("inner", 10),
                 threads,
+                pairwise,
                 ..Default::default()
             };
             KronSvm::new(cfg).fit(train)?.predict_threaded(test, threads)
@@ -74,6 +94,7 @@ fn train_and_eval(
                 kernel_t: kernel,
                 iterations: args.get_usize("iterations", 100),
                 threads,
+                pairwise,
                 ..Default::default()
             };
             KronRidge::new(cfg).fit(train)?.predict_threaded(test, threads)
@@ -107,7 +128,7 @@ fn train_and_eval(
 fn cmd_datasets(args: &Args) -> Result<(), String> {
     let seed = args.get_u64("seed", 1);
     println!("{:<10} {:>9} {:>8} {:>9} {:>8} {:>8}", "dataset", "edges", "pos.", "neg.", "starts", "ends");
-    for name in ["gpcr", "ic", "e", "ki", "checker"] {
+    for name in ["gpcr", "ic", "e", "ki", "checker", "homo"] {
         let ds = load_dataset(name, seed, args.get_f64("scale", 1.0))?;
         let st = ds.stats();
         println!(
@@ -176,6 +197,7 @@ fn cmd_cv(args: &Args) -> Result<(), String> {
             kernel_t: kernel,
             iterations: args.get_usize("iterations", 100),
             threads: args.get_usize("threads", 1),
+            pairwise: PairwiseKernelKind::parse(&args.get_str("pairwise", "kron"))?,
             ..Default::default()
         };
         let results = run_cv_path_jobs(&folds, fold_workers, |tr, te| {
@@ -235,11 +257,13 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let ds = load_dataset(&args.get_str("data", "checker"), seed, args.get_f64("scale", 0.06))?;
     let (train, _) = ds.zero_shot_split(0.25, seed);
     let threads = args.get_usize("threads", 0);
+    let pairwise = PairwiseKernelKind::parse(&args.get_str("pairwise", "kron"))?;
     let cfg = SvmConfig {
         lambda: args.get_f64("lambda", 2f64.powi(-7)),
         kernel_d: KernelKind::Gaussian { gamma: 1.0 },
         kernel_t: KernelKind::Gaussian { gamma: 1.0 },
         threads,
+        pairwise,
         ..Default::default()
     };
     println!("training model on {} edges...", train.n_edges());
@@ -326,8 +350,11 @@ fn usage() -> ! {
            cv         9-fold zero-shot cross-validation (Fig. 2)\n\
            serve      run the batched zero-shot prediction server demo\n\
            artifacts  show the PJRT artifact registry status\n\
-         common flags: --data checker|checker+|ki|gpcr|ic|e --method kronsvm|kronridge|libsvm|sgd-hinge|sgd-logistic|knn\n\
+         common flags: --data checker|checker+|homo|ki|gpcr|ic|e --method kronsvm|kronridge|libsvm|sgd-hinge|sgd-logistic|knn\n\
                        --kernel linear|gaussian:G --lambda L --seed S --scale F\n\
+                       --pairwise kron|symmetric|antisymmetric|cartesian\n\
+                                     pairwise kernel family (kronsvm/kronridge; symmetric and\n\
+                                     antisymmetric need one shared vertex domain, e.g. --data homo)\n\
                        --threads N   GVT matvec worker threads (0 = all cores; identical results, just faster)\n\
                        --fold-workers N   (cv only) train folds concurrently\n\
                        --lambdas a,b,c    (cv + kronridge) batched λ-grid CV: one block-CG solve\n\

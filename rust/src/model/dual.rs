@@ -10,14 +10,16 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::data::Dataset;
-use crate::gvt::{EdgePlan, KronIndex, KronPredictOp, WorkspacePool};
+use crate::gvt::{delta_matrix, KronIndex, PairwiseKernelKind, PairwiseOp, PairwiseShared};
 use crate::kernels::{
-    kernel_matrix, kernel_row_into, kernel_value, row_sq_norms, KernelKind, KernelRowCache,
+    kernel_matrix_threaded, kernel_row_into, kernel_value, row_sq_norms, KernelKind,
+    KernelRowCache,
 };
 use crate::linalg::Matrix;
 
 /// A trained dual model. Stores the training vertex features (to evaluate
-/// test–train kernel blocks), the edge index, and the dual coefficients.
+/// test–train kernel blocks), the edge index, the pairwise kernel family,
+/// and the dual coefficients.
 #[derive(Debug, Clone)]
 pub struct DualModel {
     /// Dual coefficients `a ∈ Rⁿ` (sparse for SVM: many exact zeros).
@@ -32,6 +34,9 @@ pub struct DualModel {
     pub kernel_d: KernelKind,
     /// End-vertex kernel `g`.
     pub kernel_t: KernelKind,
+    /// Pairwise kernel family the model was trained with (`Kronecker`
+    /// reproduces the pre-family scoring bit for bit).
+    pub pairwise: PairwiseKernelKind,
 }
 
 impl DualModel {
@@ -56,20 +61,38 @@ impl DualModel {
             ),
             kernel_d: self.kernel_d,
             kernel_t: self.kernel_t,
+            pairwise: self.pairwise,
         }
     }
 
-    /// Build the prediction operator for a batch of test edges. Useful when
-    /// predicting repeatedly for the same test vertices (serving).
-    pub fn predict_op(&self, test: &Dataset) -> KronPredictOp {
-        let khat = kernel_matrix(self.kernel_d, &test.start_features, &self.train_start_features);
-        let ghat = kernel_matrix(self.kernel_t, &test.end_features, &self.train_end_features);
-        KronPredictOp::new(ghat, khat, test.kron_index(), self.train_idx.clone())
+    /// Build the pairwise prediction operator for a batch of test edges.
+    /// Useful when predicting repeatedly for the same test vertices
+    /// (serving). For `Kronecker` models the operator is bitwise identical
+    /// to the legacy `KronPredictOp` path.
+    ///
+    /// Panics if the model's pairwise configuration is invalid (trainers
+    /// validate it at fit time, so trained models are always valid).
+    pub fn predict_op(&self, test: &Dataset) -> PairwiseOp {
+        PairwiseOp::prediction_from_features(
+            self.pairwise,
+            self.kernel_d,
+            self.kernel_t,
+            &test.start_features,
+            &test.end_features,
+            &self.train_start_features,
+            &self.train_end_features,
+            test.kron_index(),
+            self.train_idx.clone(),
+            1,
+        )
+        .expect("trained model carries a valid pairwise configuration")
     }
 
     /// Build a long-lived serving context around this model: prunes zero
-    /// coefficients once, prebuilds the train-side [`EdgePlan`], precomputes
-    /// the per-vertex squared norms the kernel rows need, and (when
+    /// coefficients once, prebuilds the train-side
+    /// [`EdgePlan`](crate::gvt::EdgePlan)s (via [`PairwiseShared`], including
+    /// the swapped-column plan of the symmetric family), precomputes the
+    /// per-vertex squared norms the kernel rows need, and (when
     /// `cache_vertices > 0`) attaches a per-side LRU kernel-row cache. Every
     /// incoming test batch then pays only for its own test-side work — see
     /// [`PredictContext`].
@@ -80,20 +103,24 @@ impl DualModel {
         let pruned = self.pruned();
         let q_train = pruned.train_end_features.rows();
         let m_train = pruned.train_start_features.rows();
-        let plan = Arc::new(EdgePlan::build(&pruned.train_idx, q_train, m_train));
+        let shared = PairwiseShared::new(
+            self.pairwise,
+            Arc::new(pruned.train_idx),
+            q_train,
+            m_train,
+        );
         let hits = Arc::new(AtomicUsize::new(0));
         let misses = Arc::new(AtomicUsize::new(0));
         PredictContext {
             start_sq: row_sq_norms(&pruned.train_start_features),
             end_sq: row_sq_norms(&pruned.train_end_features),
             dual_coef: pruned.dual_coef,
-            train_idx: Arc::new(pruned.train_idx),
             train_start_features: pruned.train_start_features,
             train_end_features: pruned.train_end_features,
             kernel_d: pruned.kernel_d,
             kernel_t: pruned.kernel_t,
-            plan,
-            pool: Arc::new(WorkspacePool::new()),
+            pairwise: self.pairwise,
+            shared,
             threads,
             cache_vertices,
             start_cache: make_cache(cache_vertices, &hits, &misses),
@@ -108,18 +135,33 @@ impl DualModel {
         self.predict_op(test).predict(&self.dual_coef)
     }
 
-    /// [`DualModel::predict`] with the GVT matvec sharded over `threads`
-    /// worker threads (`0` = all cores, `1` = serial). Scores are bitwise
-    /// identical to the serial path for every thread count.
+    /// [`DualModel::predict`] with both the kernel-block builds and the GVT
+    /// matvec sharded over `threads` worker threads (`0` = all cores, `1` =
+    /// serial). Scores are bitwise identical to the serial path for every
+    /// thread count (the threaded GEMM and the GVT engine are both bitwise
+    /// deterministic).
     pub fn predict_threaded(&self, test: &Dataset, threads: usize) -> Vec<f64> {
-        self.predict_op(test).with_threads(threads).predict(&self.dual_coef)
+        PairwiseOp::prediction_from_features(
+            self.pairwise,
+            self.kernel_d,
+            self.kernel_t,
+            &test.start_features,
+            &test.end_features,
+            &self.train_start_features,
+            &self.train_end_features,
+            test.kron_index(),
+            self.train_idx.clone(),
+            threads,
+        )
+        .expect("trained model carries a valid pairwise configuration")
+        .predict(&self.dual_coef)
     }
 
-    /// Explicit ("Baseline") decision function: evaluates the edge kernel
-    /// between every test edge and every support vector, `O(t·‖a‖₀)` kernel
-    /// evaluations — the decision function a standard kernel-SVM package
-    /// uses. Kept for the Fig. 6 prediction-time comparison and as a
-    /// correctness oracle.
+    /// Explicit ("Baseline") decision function: evaluates the pairwise edge
+    /// kernel between every test edge and every support vector, `O(t·‖a‖₀)`
+    /// kernel evaluations — the decision function a standard kernel-SVM
+    /// package uses. Kept for the Fig. 6 prediction-time comparison and as a
+    /// correctness oracle for every [`PairwiseKernelKind`].
     pub fn predict_explicit(&self, test: &Dataset) -> Vec<f64> {
         let mut out = vec![0.0; test.n_edges()];
         let sv: Vec<usize> =
@@ -129,15 +171,48 @@ impl DualModel {
             let t_feat = test.end_features.row(test.end_idx[h] as usize);
             let mut acc = 0.0;
             for &i in &sv {
-                let si = self.train_idx.right[i] as usize; // start vertex
-                let ei = self.train_idx.left[i] as usize; // end vertex
-                let kd = kernel_value(self.kernel_d, self.train_start_features.row(si), d_feat);
-                let gt = kernel_value(self.kernel_t, self.train_end_features.row(ei), t_feat);
-                acc += self.dual_coef[i] * kd * gt;
+                acc += self.dual_coef[i] * self.pairwise_kernel_value(d_feat, t_feat, i);
             }
             out[h] = acc;
         }
         out
+    }
+
+    /// One explicit pairwise edge-kernel evaluation between the test edge
+    /// `(d_feat, t_feat)` and training edge `i` — the scalar formula each
+    /// [`PairwiseOp`] term set computes through the GVT.
+    fn pairwise_kernel_value(&self, d_feat: &[f64], t_feat: &[f64], i: usize) -> f64 {
+        let si = self.train_idx.left[i] as usize; // end vertex
+        let ri = self.train_idx.right[i] as usize; // start vertex
+        let d_train = self.train_start_features.row(ri);
+        let t_train = self.train_end_features.row(si);
+        match self.pairwise {
+            PairwiseKernelKind::Kronecker => {
+                kernel_value(self.kernel_d, d_train, d_feat)
+                    * kernel_value(self.kernel_t, t_train, t_feat)
+            }
+            PairwiseKernelKind::SymmetricKron | PairwiseKernelKind::AntiSymmetricKron => {
+                let straight = kernel_value(self.kernel_d, d_train, d_feat)
+                    * kernel_value(self.kernel_t, t_train, t_feat);
+                let swapped = kernel_value(self.kernel_d, d_train, t_feat)
+                    * kernel_value(self.kernel_t, t_train, d_feat);
+                if self.pairwise == PairwiseKernelKind::AntiSymmetricKron {
+                    0.5 * (straight - swapped)
+                } else {
+                    0.5 * (straight + swapped)
+                }
+            }
+            PairwiseKernelKind::Cartesian => {
+                let mut acc = 0.0;
+                if t_train == t_feat {
+                    acc += kernel_value(self.kernel_d, d_train, d_feat);
+                }
+                if d_train == d_feat {
+                    acc += kernel_value(self.kernel_t, t_train, t_feat);
+                }
+                acc
+            }
+        }
     }
 }
 
@@ -158,6 +233,7 @@ pub fn predict_path(models: &[DualModel], test: &Dataset) -> Result<Vec<Vec<f64>
             || model.train_end_features != first.train_end_features
             || model.kernel_d != first.kernel_d
             || model.kernel_t != first.kernel_t
+            || model.pairwise != first.pairwise
         {
             return Err(format!(
                 "model {j} does not share the first model's training side; \
@@ -190,14 +266,16 @@ fn make_cache(
 
 /// Long-lived, cache-aware serving state for a trained [`DualModel`].
 ///
-/// [`DualModel::predict_op`] rebuilds the full test–train kernel blocks and a
-/// fresh [`EdgePlan`] for every batch; this context hoists everything that
-/// depends only on the *trained* side out of the per-batch path:
+/// [`DualModel::predict_op`] rebuilds the full test–train kernel blocks and
+/// fresh [`EdgePlan`](crate::gvt::EdgePlan)s for every batch; this context
+/// hoists everything that depends only on the *trained* side out of the
+/// per-batch path:
 ///
 /// * **pruned coefficients + edge index** — zero duals are dropped once, so
 ///   every batch pays `O(‖a‖₀)` instead of `O(n)` in stage 1 (eq. 5);
-/// * **prebuilt [`EdgePlan`]** — the stage-1 bucketing of the train edges,
-///   shared by every batch operator;
+/// * **prebuilt [`EdgePlan`](crate::gvt::EdgePlan)s** ([`PairwiseShared`]) —
+///   the stage-1 bucketing of the train edges (and, for the symmetric
+///   family, of their swapped orientation), shared by every batch operator;
 /// * **pooled workspaces** — scratch buffers recycled across batches (and
 ///   across concurrent callers: the context is `Sync`);
 /// * **per-vertex kernel-row LRU caches** — a test vertex seen before (by
@@ -205,25 +283,27 @@ fn make_cache(
 ///
 /// Cached, sharded, and cold-path results are all **bitwise identical** for
 /// a given batch: cached rows are produced by
-/// [`kernel_row_into`], which matches [`kernel_matrix`] rows exactly, and the
+/// [`kernel_row_into`], which matches
+/// [`kernel_matrix`](crate::kernels::kernel_matrix) rows exactly, and the
 /// GVT engine is bitwise deterministic across thread counts. (Relative to
 /// [`DualModel::predict`], pruning can flip the Algorithm-1 branch choice
 /// when the model holds explicit zeros, which changes accumulation order at
 /// the ~1e-16 level; models without zero duals match `predict` bitwise.)
 pub struct PredictContext {
     dual_coef: Vec<f64>,
-    /// Pruned training edge index, shared (not copied) into every batch
-    /// operator.
-    train_idx: Arc<KronIndex>,
     train_start_features: Matrix,
     train_end_features: Matrix,
     kernel_d: KernelKind,
     kernel_t: KernelKind,
+    /// Pairwise kernel family of the served model.
+    pairwise: PairwiseKernelKind,
+    /// Pruned training edge index, its prebuilt stage-1 plans (including
+    /// the swapped-column plan of the symmetric family), and the pooled
+    /// workspaces — shared (not copied) into every batch operator.
+    shared: PairwiseShared,
     /// Squared row norms of the train features (Gaussian/Tanimoto rows).
     start_sq: Vec<f64>,
     end_sq: Vec<f64>,
-    plan: Arc<EdgePlan>,
-    pool: Arc<WorkspacePool>,
     threads: usize,
     cache_vertices: usize,
     start_cache: Option<KernelRowCache>,
@@ -295,9 +375,17 @@ impl PredictContext {
     }
 
     /// Predict scores for one batch of test edges. Per-batch cost is the
-    /// test-side kernel rows (cache misses only), two small transposes, and
-    /// one GVT matvec sharded over the context's threads — the train-side
-    /// index, plan, and workspaces are shared by reference, not rebuilt.
+    /// test-side kernel rows (cache misses only), the family's auxiliary
+    /// cross / δ blocks, two small transposes per term, and one pairwise
+    /// matvec sharded over the context's threads — the train-side index,
+    /// plans, and workspaces are shared by reference, not rebuilt.
+    ///
+    /// The `K̂`/`Ĝ` blocks go through the per-vertex row cache. The
+    /// symmetric family's cross blocks reuse them directly when the trained
+    /// side is fully homogeneous (one shared feature matrix — they are equal
+    /// bit for bit); otherwise they are computed fresh per batch, since they
+    /// evaluate test vertices against the *other* side's train features and
+    /// cannot share the per-side caches without poisoning them.
     pub fn predict_batch(&self, test: &Dataset) -> Vec<f64> {
         let khat = self.kernel_block(
             self.kernel_d,
@@ -313,16 +401,39 @@ impl PredictContext {
             &self.end_sq,
             &self.end_cache,
         );
-        KronPredictOp::with_shared(
-            ghat,
-            khat,
-            test.kron_index(),
-            self.train_idx.clone(),
-            self.plan.clone(),
-            self.pool.clone(),
-        )
-        .with_threads(self.threads)
-        .predict(&self.dual_coef)
+        let (aux_g, aux_k) = match self.pairwise {
+            PairwiseKernelKind::Kronecker => (None, None),
+            // Fully homogeneous trained side (one shared feature matrix):
+            // the cross blocks equal the cached ghat/khat bit for bit, so
+            // clone them instead of paying two more kernel GEMMs per batch.
+            PairwiseKernelKind::SymmetricKron | PairwiseKernelKind::AntiSymmetricKron
+                if self.train_start_features == self.train_end_features =>
+            {
+                (Some(ghat.clone()), Some(khat.clone()))
+            }
+            PairwiseKernelKind::SymmetricKron | PairwiseKernelKind::AntiSymmetricKron => (
+                Some(kernel_matrix_threaded(
+                    self.kernel_t,
+                    &test.end_features,
+                    &self.train_start_features,
+                    self.threads,
+                )),
+                Some(kernel_matrix_threaded(
+                    self.kernel_d,
+                    &test.start_features,
+                    &self.train_end_features,
+                    self.threads,
+                )),
+            ),
+            PairwiseKernelKind::Cartesian => (
+                Some(delta_matrix(&test.end_features, &self.train_end_features)),
+                Some(delta_matrix(&test.start_features, &self.train_start_features)),
+            ),
+        };
+        PairwiseOp::prediction_shared(ghat, khat, aux_g, aux_k, test.kron_index(), &self.shared)
+            .expect("context built from a valid model")
+            .with_threads(self.threads)
+            .predict(&self.dual_coef)
     }
 }
 
@@ -345,6 +456,7 @@ mod tests {
             ),
             kernel_d: kernel,
             kernel_t: kernel,
+            pairwise: PairwiseKernelKind::Kronecker,
         };
         let (u, v, t) = (4, 3, 9);
         let test = Dataset {
@@ -365,6 +477,74 @@ mod tests {
             let fast = model.predict(&test);
             let slow = model.predict_explicit(&test);
             assert_allclose(&fast, &slow, 1e-9, 1e-9);
+        }
+    }
+
+    /// A homogeneous model/test pair (both roles share one 2-d feature
+    /// space) so every pairwise family is valid.
+    fn homogeneous_model_and_test(seed: u64, pairwise: PairwiseKernelKind) -> (DualModel, Dataset) {
+        let mut rng = Pcg32::seeded(seed);
+        let (v, n) = (6, 16);
+        let features = Matrix::from_fn(v, 2, |_, _| rng.normal());
+        let model = DualModel {
+            dual_coef: rng.normal_vec(n),
+            train_start_features: features.clone(),
+            train_end_features: features,
+            train_idx: KronIndex::new(
+                (0..n).map(|_| rng.below(v) as u32).collect(),
+                (0..n).map(|_| rng.below(v) as u32).collect(),
+            ),
+            kernel_d: KernelKind::Gaussian { gamma: 0.3 },
+            kernel_t: KernelKind::Gaussian { gamma: 0.3 },
+            pairwise,
+        };
+        let (tv, t) = (4, 10);
+        let test_features = Matrix::from_fn(tv, 2, |_, _| rng.normal());
+        let test = Dataset {
+            start_features: test_features.clone(),
+            end_features: test_features,
+            start_idx: (0..t).map(|_| rng.below(tv) as u32).collect(),
+            end_idx: (0..t).map(|_| rng.below(tv) as u32).collect(),
+            labels: vec![0.0; t],
+            name: "homo-test".into(),
+        };
+        (model, test)
+    }
+
+    #[test]
+    fn pairwise_fast_predict_equals_explicit_decision_function() {
+        for (seed, pairwise) in [
+            (320, PairwiseKernelKind::SymmetricKron),
+            (321, PairwiseKernelKind::AntiSymmetricKron),
+            (322, PairwiseKernelKind::Cartesian),
+        ] {
+            let (model, test) = homogeneous_model_and_test(seed, pairwise);
+            let fast = model.predict(&test);
+            let slow = model.predict_explicit(&test);
+            assert_allclose(&fast, &slow, 1e-9, 1e-9);
+        }
+    }
+
+    #[test]
+    fn pairwise_context_matches_direct_predict() {
+        // The serving context's shared-plan path must agree with the direct
+        // per-batch operator for every family (no zero duals → same branch).
+        for (seed, pairwise) in [
+            (330, PairwiseKernelKind::SymmetricKron),
+            (331, PairwiseKernelKind::AntiSymmetricKron),
+            (332, PairwiseKernelKind::Cartesian),
+        ] {
+            let (model, test) = homogeneous_model_and_test(seed, pairwise);
+            let direct = model.predict(&test);
+            for threads in [1, 2] {
+                for cache_vertices in [0, 64] {
+                    let ctx = model.predict_context(threads, cache_vertices);
+                    let cold = ctx.predict_batch(&test);
+                    let warm = ctx.predict_batch(&test);
+                    assert_allclose(&cold, &direct, 1e-12, 1e-12);
+                    assert_eq!(cold, warm, "{pairwise:?} t={threads} c={cache_vertices}");
+                }
+            }
         }
     }
 

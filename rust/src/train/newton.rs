@@ -8,7 +8,7 @@
 
 use crate::data::Dataset;
 use crate::eval::auc::auc;
-use crate::gvt::KronKernelOp;
+use crate::gvt::{PairwiseKernelKind, PairwiseOp};
 use crate::kernels::KernelKind;
 use crate::linalg::solvers::{cg, qmr, FnOp, LinOp, SolverConfig};
 use crate::linalg::vecops::dot;
@@ -41,6 +41,9 @@ pub struct NewtonConfig {
     /// Worker threads per GVT matvec (`0` = all cores, `1` = serial).
     /// Results are bitwise identical for every thread count.
     pub threads: usize,
+    /// Pairwise kernel family composed over the GVT engine
+    /// (`Kronecker` reproduces the pre-family behavior bit for bit).
+    pub pairwise: PairwiseKernelKind,
 }
 
 impl Default for NewtonConfig {
@@ -55,6 +58,7 @@ impl Default for NewtonConfig {
             trace: false,
             patience: 0,
             threads: 1,
+            pairwise: PairwiseKernelKind::Kronecker,
         }
     }
 }
@@ -85,9 +89,25 @@ impl<L: Loss> NewtonTrainer<L> {
             return Err("empty training set".into());
         }
         let timer = Timer::start();
-        let op = dual_kernel_op(train, self.cfg.kernel_d, self.cfg.kernel_t, self.cfg.threads);
+        let op = dual_kernel_op(
+            train,
+            self.cfg.kernel_d,
+            self.cfg.kernel_t,
+            self.cfg.pairwise,
+            self.cfg.threads,
+        )?;
         let val_op = val
-            .map(|v| validation_op(train, v, self.cfg.kernel_d, self.cfg.kernel_t, self.cfg.threads));
+            .map(|v| {
+                validation_op(
+                    train,
+                    v,
+                    self.cfg.kernel_d,
+                    self.cfg.kernel_t,
+                    self.cfg.pairwise,
+                    self.cfg.threads,
+                )
+            })
+            .transpose()?;
         let y = &train.labels;
 
         let mut a = vec![0.0; n];
@@ -152,6 +172,7 @@ impl<L: Loss> NewtonTrainer<L> {
             train_idx: train.kron_index(),
             kernel_d: self.cfg.kernel_d,
             kernel_t: self.cfg.kernel_t,
+            pairwise: self.cfg.pairwise,
         };
         Ok((model, trace))
     }
@@ -168,6 +189,12 @@ impl<L: Loss> NewtonTrainer<L> {
             return Err(format!(
                 "primal Newton supports diagonal-Hessian losses only (got {})",
                 self.loss.name()
+            ));
+        }
+        if self.cfg.pairwise != PairwiseKernelKind::Kronecker {
+            return Err(format!(
+                "the primal path supports the Kronecker pairwise kernel only (got '{}')",
+                self.cfg.pairwise.name()
             ));
         }
         train.validate()?;
@@ -226,8 +253,14 @@ impl<L: Loss> NewtonTrainer<L> {
     }
 
     /// Training-kernel operator access for diagnostics.
-    pub fn kernel_op(&self, train: &Dataset) -> KronKernelOp {
-        dual_kernel_op(train, self.cfg.kernel_d, self.cfg.kernel_t, self.cfg.threads)
+    pub fn kernel_op(&self, train: &Dataset) -> Result<PairwiseOp, String> {
+        dual_kernel_op(
+            train,
+            self.cfg.kernel_d,
+            self.cfg.kernel_t,
+            self.cfg.pairwise,
+            self.cfg.threads,
+        )
     }
 }
 

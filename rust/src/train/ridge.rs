@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use crate::data::Dataset;
 use crate::eval::auc::auc;
-use crate::gvt::{KronKernelOp, KronPredictOp};
+use crate::gvt::{delta_matrix, PairwiseKernelKind, PairwiseOp};
 use crate::kernels::{kernel_matrix_threaded, KernelKind};
 use crate::linalg::solvers::{block_cg, cg_cb, minres_cb, SolverConfig};
 use crate::linalg::vecops::dot;
@@ -41,6 +41,9 @@ pub struct RidgeConfig {
     /// Worker threads per GVT matvec (`0` = all cores, `1` = serial).
     /// Results are bitwise identical for every thread count.
     pub threads: usize,
+    /// Pairwise kernel family composed over the GVT engine
+    /// (`Kronecker` reproduces the pre-family behavior bit for bit).
+    pub pairwise: PairwiseKernelKind,
 }
 
 impl Default for RidgeConfig {
@@ -54,6 +57,7 @@ impl Default for RidgeConfig {
             trace: false,
             patience: 0,
             threads: 1,
+            pairwise: PairwiseKernelKind::Kronecker,
         }
     }
 }
@@ -65,33 +69,72 @@ pub struct KronRidge {
     pub cfg: RidgeConfig,
 }
 
-/// Build the dual training operator from a dataset, sharding matvecs over
-/// `threads` worker threads. The kernel matrices themselves are built with
-/// the same thread count through the packed GEMM (bitwise identical to the
-/// serial build).
+/// Build the dual training operator for the chosen pairwise family from a
+/// dataset, sharding matvecs over `threads` worker threads. The kernel
+/// matrices themselves are built with the same thread count through the
+/// packed GEMM (bitwise identical to the serial build); the symmetric /
+/// anti-symmetric families additionally build the end-vs-start cross-kernel
+/// block.
 pub(crate) fn dual_kernel_op(
     train: &Dataset,
     kernel_d: KernelKind,
     kernel_t: KernelKind,
+    pairwise: PairwiseKernelKind,
     threads: usize,
-) -> KronKernelOp {
+) -> Result<PairwiseOp, String> {
+    pairwise.validate_vertex_domains(
+        kernel_d,
+        kernel_t,
+        train.start_features.cols(),
+        train.end_features.cols(),
+    )?;
     let k = Arc::new(kernel_d.square_matrix_threaded(&train.start_features, threads));
     let g = Arc::new(kernel_t.square_matrix_threaded(&train.end_features, threads));
-    KronKernelOp::new(g, k, train.kron_index()).with_threads(threads)
+    let (aux_g, aux_k) = match pairwise {
+        PairwiseKernelKind::Kronecker => (None, None),
+        PairwiseKernelKind::SymmetricKron | PairwiseKernelKind::AntiSymmetricKron => (
+            Some(Arc::new(kernel_matrix_threaded(
+                kernel_t,
+                &train.end_features,
+                &train.start_features,
+                threads,
+            ))),
+            None,
+        ),
+        // Feature-equality δ blocks (not the index identity), so the trained
+        // kernel agrees with what the prediction path scores when distinct
+        // vertex indices carry identical feature rows.
+        PairwiseKernelKind::Cartesian => (
+            Some(Arc::new(delta_matrix(&train.end_features, &train.end_features))),
+            Some(Arc::new(delta_matrix(&train.start_features, &train.start_features))),
+        ),
+    };
+    Ok(PairwiseOp::training(pairwise, g, k, aux_g, aux_k, train.kron_index())?
+        .with_threads(threads))
 }
 
-/// Build a zero-shot prediction operator from training to validation edges.
+/// Build a zero-shot prediction operator from training to validation edges
+/// for the chosen pairwise family.
 pub(crate) fn validation_op(
     train: &Dataset,
     val: &Dataset,
     kernel_d: KernelKind,
     kernel_t: KernelKind,
+    pairwise: PairwiseKernelKind,
     threads: usize,
-) -> KronPredictOp {
-    let khat =
-        kernel_matrix_threaded(kernel_d, &val.start_features, &train.start_features, threads);
-    let ghat = kernel_matrix_threaded(kernel_t, &val.end_features, &train.end_features, threads);
-    KronPredictOp::new(ghat, khat, val.kron_index(), train.kron_index()).with_threads(threads)
+) -> Result<PairwiseOp, String> {
+    PairwiseOp::prediction_from_features(
+        pairwise,
+        kernel_d,
+        kernel_t,
+        &val.start_features,
+        &val.end_features,
+        &train.start_features,
+        &train.end_features,
+        val.kron_index(),
+        train.kron_index(),
+        threads,
+    )
 }
 
 impl KronRidge {
@@ -118,9 +161,25 @@ impl KronRidge {
             return Err("empty training set".into());
         }
         let timer = Timer::start();
-        let op = dual_kernel_op(train, self.cfg.kernel_d, self.cfg.kernel_t, self.cfg.threads);
+        let op = dual_kernel_op(
+            train,
+            self.cfg.kernel_d,
+            self.cfg.kernel_t,
+            self.cfg.pairwise,
+            self.cfg.threads,
+        )?;
         let val_op = val
-            .map(|v| validation_op(train, v, self.cfg.kernel_d, self.cfg.kernel_t, self.cfg.threads));
+            .map(|v| {
+                validation_op(
+                    train,
+                    v,
+                    self.cfg.kernel_d,
+                    self.cfg.kernel_t,
+                    self.cfg.pairwise,
+                    self.cfg.threads,
+                )
+            })
+            .transpose()?;
         let sys = crate::gvt::operator::RidgeSystemOp { op: &op, lambda: self.cfg.lambda };
         let y = &train.labels;
         let mut a = vec![0.0; train.n_edges()];
@@ -153,6 +212,7 @@ impl KronRidge {
             train_idx: train.kron_index(),
             kernel_d: self.cfg.kernel_d,
             kernel_t: self.cfg.kernel_t,
+            pairwise: self.cfg.pairwise,
         };
         Ok((model, trace))
     }
@@ -176,7 +236,13 @@ impl KronRidge {
         if lambdas.is_empty() {
             return Ok(Vec::new());
         }
-        let op = dual_kernel_op(train, self.cfg.kernel_d, self.cfg.kernel_t, self.cfg.threads);
+        let op = dual_kernel_op(
+            train,
+            self.cfg.kernel_d,
+            self.cfg.kernel_t,
+            self.cfg.pairwise,
+            self.cfg.threads,
+        )?;
         let n = train.n_edges();
         let k = lambdas.len();
         let mut b = vec![0.0; n * k];
@@ -194,6 +260,7 @@ impl KronRidge {
                 train_idx: train.kron_index(),
                 kernel_d: self.cfg.kernel_d,
                 kernel_t: self.cfg.kernel_t,
+                pairwise: self.cfg.pairwise,
             })
             .collect())
     }
@@ -208,6 +275,12 @@ impl KronRidge {
         train.validate()?;
         if train.n_edges() == 0 {
             return Err("empty training set".into());
+        }
+        if self.cfg.pairwise != PairwiseKernelKind::Kronecker {
+            return Err(format!(
+                "the primal path supports the Kronecker pairwise kernel only (got '{}')",
+                self.cfg.pairwise.name()
+            ));
         }
         let timer = Timer::start();
         let op = PrimalKronOp::new(train);
@@ -254,12 +327,12 @@ impl KronRidge {
     }
 }
 
-/// Exact (direct) dual ridge solve via Cholesky on the materialized kernel
-/// matrix — `O(n³)`; testing oracle for small problems.
+/// Exact (direct) dual ridge solve via Cholesky on the materialized pairwise
+/// kernel matrix — `O(n³)`; testing oracle for small problems (any family).
 pub fn ridge_exact_dual(train: &Dataset, cfg: &RidgeConfig) -> Vec<f64> {
-    let op = dual_kernel_op(train, cfg.kernel_d, cfg.kernel_t, 1);
-    let idx = train.kron_index();
-    let mut q = crate::gvt::explicit::explicit_submatrix(op.g(), op.k(), &idx, &idx);
+    let op = dual_kernel_op(train, cfg.kernel_d, cfg.kernel_t, cfg.pairwise, 1)
+        .expect("valid pairwise configuration");
+    let mut q = op.explicit_dense();
     q.add_diag(cfg.lambda);
     q.solve_spd(&train.labels).expect("ridge system should be SPD")
 }
@@ -290,6 +363,66 @@ mod tests {
         let model = KronRidge::new(cfg).fit(&train).unwrap();
         let exact = ridge_exact_dual(&train, &cfg);
         assert_allclose(&model.dual_coef, &exact, 1e-6, 1e-6);
+    }
+
+    /// Homogeneous toy set: both vertex roles share one feature space.
+    fn toy_homogeneous(seed: u64, v: usize, n: usize) -> Dataset {
+        let mut rng = Pcg32::seeded(seed);
+        let features = crate::linalg::Matrix::from_fn(v, 2, |_, _| rng.normal());
+        Dataset {
+            start_features: features.clone(),
+            end_features: features,
+            start_idx: (0..n).map(|_| rng.below(v) as u32).collect(),
+            end_idx: (0..n).map(|_| rng.below(v) as u32).collect(),
+            labels: (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect(),
+            name: "toy-homo".into(),
+        }
+    }
+
+    #[test]
+    fn pairwise_dual_matches_exact_solution_per_family() {
+        // The iterative solve against the matrix-free pairwise operator must
+        // agree with the direct Cholesky solve on the materialized matrix.
+        let train = toy_homogeneous(420, 9, 24);
+        for pairwise in [
+            crate::gvt::PairwiseKernelKind::SymmetricKron,
+            crate::gvt::PairwiseKernelKind::AntiSymmetricKron,
+            crate::gvt::PairwiseKernelKind::Cartesian,
+        ] {
+            let cfg = RidgeConfig {
+                lambda: 1.0,
+                kernel_d: KernelKind::Gaussian { gamma: 0.4 },
+                kernel_t: KernelKind::Gaussian { gamma: 0.4 },
+                iterations: 800,
+                tol: 1e-13,
+                pairwise,
+                ..Default::default()
+            };
+            let model = KronRidge::new(cfg).fit(&train).unwrap();
+            let exact = ridge_exact_dual(&train, &cfg);
+            assert_allclose(&model.dual_coef, &exact, 1e-6, 1e-6);
+        }
+    }
+
+    #[test]
+    fn symmetric_rejects_heterogeneous_feature_spaces() {
+        // toy_train carries 3-d start and 2-d end features — no shared domain.
+        let train = toy_train(421, 6, 6, 20);
+        let cfg = RidgeConfig {
+            pairwise: crate::gvt::PairwiseKernelKind::SymmetricKron,
+            ..Default::default()
+        };
+        let err = KronRidge::new(cfg).fit(&train).unwrap_err();
+        assert!(err.contains("feature space"), "{err}");
+        // mismatched kernels over a shared space are rejected too
+        let homo = toy_homogeneous(422, 6, 18);
+        let cfg = RidgeConfig {
+            kernel_d: KernelKind::Gaussian { gamma: 1.0 },
+            kernel_t: KernelKind::Linear,
+            pairwise: crate::gvt::PairwiseKernelKind::SymmetricKron,
+            ..Default::default()
+        };
+        assert!(KronRidge::new(cfg).fit(&homo).is_err());
     }
 
     #[test]

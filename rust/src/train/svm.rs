@@ -14,6 +14,7 @@
 use crate::data::Dataset;
 use crate::eval::auc::auc;
 use crate::gvt::operator::SvmNewtonOp;
+use crate::gvt::PairwiseKernelKind;
 use crate::kernels::KernelKind;
 use crate::linalg::solvers::{cg, qmr, SolverConfig};
 use crate::linalg::vecops::dot;
@@ -50,6 +51,9 @@ pub struct SvmConfig {
     /// Worker threads per GVT matvec (`0` = all cores, `1` = serial).
     /// Results are bitwise identical for every thread count.
     pub threads: usize,
+    /// Pairwise kernel family composed over the GVT engine
+    /// (`Kronecker` reproduces the pre-family behavior bit for bit).
+    pub pairwise: PairwiseKernelKind,
 }
 
 impl Default for SvmConfig {
@@ -65,6 +69,7 @@ impl Default for SvmConfig {
             patience: 0,
             sparsity_threshold: 1e-12,
             threads: 1,
+            pairwise: PairwiseKernelKind::Kronecker,
         }
     }
 }
@@ -104,9 +109,25 @@ impl KronSvm {
             }
         }
         let timer = Timer::start();
-        let op = dual_kernel_op(train, self.cfg.kernel_d, self.cfg.kernel_t, self.cfg.threads);
+        let op = dual_kernel_op(
+            train,
+            self.cfg.kernel_d,
+            self.cfg.kernel_t,
+            self.cfg.pairwise,
+            self.cfg.threads,
+        )?;
         let val_op = val
-            .map(|v| validation_op(train, v, self.cfg.kernel_d, self.cfg.kernel_t, self.cfg.threads));
+            .map(|v| {
+                validation_op(
+                    train,
+                    v,
+                    self.cfg.kernel_d,
+                    self.cfg.kernel_t,
+                    self.cfg.pairwise,
+                    self.cfg.threads,
+                )
+            })
+            .transpose()?;
         let y = &train.labels;
         let loss = L2SvmLoss;
 
@@ -159,6 +180,7 @@ impl KronSvm {
             train_idx: train.kron_index(),
             kernel_d: self.cfg.kernel_d,
             kernel_t: self.cfg.kernel_t,
+            pairwise: self.cfg.pairwise,
         };
         Ok((model, trace))
     }
@@ -174,6 +196,12 @@ impl KronSvm {
         let n = train.n_edges();
         if n == 0 {
             return Err("empty training set".into());
+        }
+        if self.cfg.pairwise != PairwiseKernelKind::Kronecker {
+            return Err(format!(
+                "the primal path supports the Kronecker pairwise kernel only (got '{}')",
+                self.cfg.pairwise.name()
+            ));
         }
         let timer = Timer::start();
         let op = PrimalKronOp::new(train);
@@ -284,7 +312,7 @@ mod tests {
             ..Default::default()
         };
         let model = KronSvm::new(cfg).fit(&train).unwrap();
-        let op = dual_kernel_op(&train, cfg.kernel_d, cfg.kernel_t, 1);
+        let op = dual_kernel_op(&train, cfg.kernel_d, cfg.kernel_t, cfg.pairwise, 1).unwrap();
         let p = op.apply_vec(&model.dual_coef);
         let mask = L2SvmLoss::active_mask(&p, &train.labels);
         let resid: Vec<f64> = (0..30)

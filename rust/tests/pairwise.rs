@@ -1,0 +1,408 @@
+//! Integration tests for the pairwise kernel operator family: bitwise
+//! equivalence of `PairwiseOp::Kronecker` with the legacy single-kernel
+//! operators (single- and multi-RHS, all thread counts), symmetry /
+//! anti-symmetry invariants under edge-orientation swaps, Cartesian δ
+//! semantics, and the end-to-end train → predict → serve path on the
+//! homogeneous-graph generator.
+
+use std::sync::Arc;
+
+use kronvt::coordinator::{PredictServer, ServerConfig};
+use kronvt::data::checkerboard::HomogeneousConfig;
+use kronvt::data::Dataset;
+use kronvt::eval::auc::auc;
+use kronvt::gvt::{KronIndex, KronKernelOp, KronPredictOp, PairwiseKernelKind, PairwiseOp};
+use kronvt::kernels::KernelKind;
+use kronvt::linalg::vecops::assert_allclose;
+use kronvt::linalg::Matrix;
+use kronvt::train::{KronRidge, KronSvm, RidgeConfig, SvmConfig};
+use kronvt::util::rng::Pcg32;
+
+fn random_kernel(rng: &mut Pcg32, n: usize) -> Matrix {
+    let x = Matrix::from_fn(n, 3, |_, _| rng.normal());
+    KernelKind::Gaussian { gamma: 0.4 }.square_matrix(&x)
+}
+
+fn random_edges(rng: &mut Pcg32, q: usize, m: usize, n_edges: usize) -> KronIndex {
+    KronIndex::new(
+        (0..n_edges).map(|_| rng.below(q) as u32).collect(),
+        (0..n_edges).map(|_| rng.below(m) as u32).collect(),
+    )
+}
+
+/// Property: `PairwiseOp::Kronecker` is **bitwise identical** to the
+/// pre-family `KronKernelOp` apply — single- and multi-RHS, every thread
+/// count, problem large enough to engage the parallel engine path.
+#[test]
+fn kronecker_training_is_bitwise_identical_to_legacy_operator() {
+    let mut rng = Pcg32::seeded(900);
+    let (q, m, n) = (24, 20, 3000);
+    let g = Arc::new(random_kernel(&mut rng, q));
+    let k = Arc::new(random_kernel(&mut rng, m));
+    let idx = random_edges(&mut rng, q, m, n);
+    let k_rhs = 3;
+    let mut v = rng.normal_vec(n * k_rhs);
+    for (i, vi) in v.iter_mut().enumerate() {
+        if i % 7 == 0 {
+            *vi = 0.0; // exercise the zero-skip in both operators
+        }
+    }
+    for threads in [1, 2, 4] {
+        let legacy =
+            KronKernelOp::new(g.clone(), k.clone(), idx.clone()).with_threads(threads);
+        let pairwise = PairwiseOp::training(
+            PairwiseKernelKind::Kronecker,
+            g.clone(),
+            k.clone(),
+            None,
+            None,
+            idx.clone(),
+        )
+        .unwrap()
+        .with_threads(threads);
+        // single-RHS
+        let mut a = vec![0.0; n];
+        let mut b = vec![0.0; n];
+        legacy.apply_into(&v[..n], &mut a);
+        pairwise.apply_into(&v[..n], &mut b);
+        assert_eq!(a, b, "single-RHS, threads={threads}");
+        // multi-RHS
+        let mut am = vec![0.0; n * k_rhs];
+        let mut bm = vec![0.0; n * k_rhs];
+        legacy.apply_multi_into(&v, k_rhs, &mut am);
+        pairwise.apply_multi_into(&v, k_rhs, &mut bm);
+        assert_eq!(am, bm, "multi-RHS, threads={threads}");
+    }
+}
+
+/// Property: the Kronecker prediction path is bitwise identical to
+/// `KronPredictOp` — single and multi-RHS, serial and threaded.
+#[test]
+fn kronecker_prediction_is_bitwise_identical_to_legacy_operator() {
+    let mut rng = Pcg32::seeded(901);
+    let (q, m, n) = (12, 10, 2600);
+    let (v_test, u_test, t_test) = (8, 9, 2400);
+    let train_idx = random_edges(&mut rng, q, m, n);
+    let test_idx = random_edges(&mut rng, v_test, u_test, t_test);
+    let ghat = Matrix::from_fn(v_test, q, |_, _| rng.normal());
+    let khat = Matrix::from_fn(u_test, m, |_, _| rng.normal());
+    let k_rhs = 3;
+    let duals = rng.normal_vec(n * k_rhs);
+    for threads in [1, 2, 4] {
+        let legacy =
+            KronPredictOp::new(ghat.clone(), khat.clone(), test_idx.clone(), train_idx.clone())
+                .with_threads(threads);
+        let pairwise = PairwiseOp::prediction(
+            PairwiseKernelKind::Kronecker,
+            ghat.clone(),
+            khat.clone(),
+            None,
+            None,
+            test_idx.clone(),
+            train_idx.clone(),
+        )
+        .unwrap()
+        .with_threads(threads);
+        assert_eq!(
+            legacy.predict(&duals[..n]),
+            pairwise.predict(&duals[..n]),
+            "predict, threads={threads}"
+        );
+        assert_eq!(
+            legacy.predict_multi(&duals, k_rhs),
+            pairwise.predict_multi(&duals, k_rhs),
+            "predict_multi, threads={threads}"
+        );
+    }
+}
+
+/// Property: the symmetric kernel operator is invariant under swapping any
+/// edge's vertex order — as a materialized matrix (bitwise: products and the
+/// two-term sum commute) and through the fast GVT path (tightly allclose:
+/// stage accumulation orders differ).
+#[test]
+fn symmetric_training_is_invariant_under_edge_orientation_swap() {
+    let mut rng = Pcg32::seeded(902);
+    let (nv, n) = (10, 40);
+    let kmat = Arc::new(random_kernel(&mut rng, nv));
+    let idx = random_edges(&mut rng, nv, nv, n);
+    // swap the orientation of every third edge
+    let mut left = idx.left.clone();
+    let mut right = idx.right.clone();
+    for h in (0..n).step_by(3) {
+        std::mem::swap(&mut left[h], &mut right[h]);
+    }
+    let swapped_idx = KronIndex::new(left, right);
+
+    let op = PairwiseOp::training(
+        PairwiseKernelKind::SymmetricKron,
+        kmat.clone(),
+        kmat.clone(),
+        Some(kmat.clone()),
+        None,
+        idx,
+    )
+    .unwrap();
+    let op_swapped = PairwiseOp::training(
+        PairwiseKernelKind::SymmetricKron,
+        kmat.clone(),
+        kmat.clone(),
+        Some(kmat.clone()),
+        None,
+        swapped_idx,
+    )
+    .unwrap();
+
+    // the materialized matrices agree bit for bit
+    let (dense, dense_swapped) = (op.explicit_dense(), op_swapped.explicit_dense());
+    assert_eq!(dense.data(), dense_swapped.data());
+
+    // and the matrix-free applies agree to accumulation-order noise
+    let v = rng.normal_vec(n);
+    let mut a = vec![0.0; n];
+    let mut b = vec![0.0; n];
+    op.apply_into(&v, &mut a);
+    op_swapped.apply_into(&v, &mut b);
+    assert_allclose(&a, &b, 1e-12, 1e-12);
+}
+
+/// Property: swapping one *output* edge's orientation negates the
+/// anti-symmetric kernel's row (ranking semantics: reversing a directed
+/// pair flips its score).
+#[test]
+fn antisymmetric_prediction_negates_under_orientation_swap() {
+    let mut rng = Pcg32::seeded(903);
+    let (nv, n) = (9, 30);
+    let (tv, t) = (5, 12);
+    let train_features = Matrix::from_fn(nv, 3, |_, _| rng.normal());
+    let test_features = Matrix::from_fn(tv, 3, |_, _| rng.normal());
+    let train_idx = random_edges(&mut rng, nv, nv, n);
+    let test_idx = random_edges(&mut rng, tv, tv, t);
+    let swapped_test = KronIndex::new(test_idx.right.clone(), test_idx.left.clone());
+    let kernel = KernelKind::Gaussian { gamma: 0.3 };
+    let a = rng.normal_vec(n);
+
+    let build = |tidx: KronIndex| {
+        PairwiseOp::prediction_from_features(
+            PairwiseKernelKind::AntiSymmetricKron,
+            kernel,
+            kernel,
+            &test_features,
+            &test_features,
+            &train_features,
+            &train_features,
+            tidx,
+            train_idx.clone(),
+            1,
+        )
+        .unwrap()
+    };
+    let straight = build(test_idx).predict(&a);
+    let reversed = build(swapped_test).predict(&a);
+    let negated: Vec<f64> = reversed.iter().map(|s| -s).collect();
+    assert_allclose(&straight, &negated, 1e-12, 1e-12);
+}
+
+/// The Cartesian kernel's δ factors do not extend to novel vertices: fully
+/// zero-shot scores are identically zero, while scoring the training edges
+/// themselves (shared vertices) is non-trivial and matches the explicit
+/// decision function.
+#[test]
+fn cartesian_delta_semantics_in_and_out_of_sample() {
+    let mut rng = Pcg32::seeded(904);
+    let (nv, n) = (8, 24);
+    let features = Matrix::from_fn(nv, 2, |_, _| rng.normal());
+    let train_idx = random_edges(&mut rng, nv, nv, n);
+    let model = kronvt::model::DualModel {
+        dual_coef: rng.normal_vec(n),
+        train_start_features: features.clone(),
+        train_end_features: features.clone(),
+        train_idx: train_idx.clone(),
+        kernel_d: KernelKind::Gaussian { gamma: 0.5 },
+        kernel_t: KernelKind::Gaussian { gamma: 0.5 },
+        pairwise: PairwiseKernelKind::Cartesian,
+    };
+    // in-sample: score the training edges themselves
+    let in_sample = Dataset {
+        start_features: features.clone(),
+        end_features: features,
+        start_idx: train_idx.right.clone(),
+        end_idx: train_idx.left.clone(),
+        labels: vec![0.0; n],
+        name: "in-sample".into(),
+    };
+    let scores = model.predict(&in_sample);
+    assert!(scores.iter().any(|&s| s != 0.0), "in-sample Cartesian scores must be non-trivial");
+    assert_allclose(&scores, &model.predict_explicit(&in_sample), 1e-10, 1e-10);
+    // zero-shot: novel vertices share no identity with training vertices
+    let novel = Dataset {
+        start_features: Matrix::from_fn(3, 2, |_, _| rng.normal()),
+        end_features: Matrix::from_fn(3, 2, |_, _| rng.normal()),
+        start_idx: vec![0, 1, 2],
+        end_idx: vec![1, 2, 0],
+        labels: vec![0.0; 3],
+        name: "novel".into(),
+    };
+    assert!(model.predict(&novel).iter().all(|&s| s == 0.0));
+}
+
+/// End to end (the acceptance path): ridge with the symmetric kernel on the
+/// homogeneous-graph generator learns a finite, better-than-chance AUC, and
+/// its predictions are invariant to test-edge orientation.
+#[test]
+fn symmetric_ridge_end_to_end_on_homogeneous_graph() {
+    let data = HomogeneousConfig {
+        vertices: 70,
+        density: 0.35,
+        noise: 0.1,
+        feature_range: 8.0,
+        seed: 11,
+    }
+    .generate();
+    let (train, test) = data.zero_shot_split(0.3, 13);
+    let cfg = RidgeConfig {
+        lambda: 2f64.powi(-7),
+        kernel_d: KernelKind::Gaussian { gamma: 1.0 },
+        kernel_t: KernelKind::Gaussian { gamma: 1.0 },
+        iterations: 100,
+        pairwise: PairwiseKernelKind::SymmetricKron,
+        ..Default::default()
+    };
+    let model = KronRidge::new(cfg).fit(&train).unwrap();
+    let scores = model.predict(&test);
+    let test_auc = auc(&test.labels, &scores);
+    assert!(test_auc.is_finite(), "AUC must be finite");
+    assert!(test_auc > 0.6, "AUC={test_auc}");
+    // orientation invariance: swap every test edge's role assignment
+    let swapped = Dataset {
+        start_features: test.end_features.clone(),
+        end_features: test.start_features.clone(),
+        start_idx: test.end_idx.clone(),
+        end_idx: test.start_idx.clone(),
+        labels: test.labels.clone(),
+        name: "swapped".into(),
+    };
+    assert_allclose(&scores, &model.predict(&swapped), 1e-10, 1e-10);
+}
+
+/// End to end: the SVM trainer accepts the symmetric family and the trained
+/// model serves through the batched prediction server with finite scores.
+#[test]
+fn symmetric_svm_trains_and_serves() {
+    let data = HomogeneousConfig {
+        vertices: 50,
+        density: 0.35,
+        noise: 0.1,
+        feature_range: 8.0,
+        seed: 21,
+    }
+    .generate();
+    let (train, test) = data.zero_shot_split(0.3, 23);
+    let cfg = SvmConfig {
+        lambda: 2f64.powi(-7),
+        kernel_d: KernelKind::Gaussian { gamma: 1.0 },
+        kernel_t: KernelKind::Gaussian { gamma: 1.0 },
+        outer_iters: 10,
+        inner_iters: 10,
+        pairwise: PairwiseKernelKind::SymmetricKron,
+        ..Default::default()
+    };
+    let model = KronSvm::new(cfg).fit(&train).unwrap();
+    let test_auc = auc(&test.labels, &model.predict(&test));
+    assert!(test_auc.is_finite() && test_auc > 0.55, "AUC={test_auc}");
+
+    // serve the symmetric model through the full pipeline
+    let direct_model = model.clone();
+    let server = PredictServer::start(
+        model,
+        ServerConfig { threads: 2, workers: 2, cache_vertices: 64, ..Default::default() },
+    );
+    let mut rng = Pcg32::seeded(24);
+    for round in 0..4 {
+        let sf: Vec<Vec<f64>> = (0..3).map(|_| vec![rng.uniform_in(0.0, 8.0)]).collect();
+        let ef: Vec<Vec<f64>> = (0..3).map(|_| vec![rng.uniform_in(0.0, 8.0)]).collect();
+        let edges: Vec<(u32, u32)> =
+            (0..6).map(|_| (rng.below(3) as u32, rng.below(3) as u32)).collect();
+        let served =
+            server.predict_blocking(sf.clone(), ef.clone(), edges.clone()).unwrap();
+        assert!(served.iter().all(|s| s.is_finite()), "round {round}");
+        // cross-check against the direct model on the same batch
+        let ds = Dataset {
+            start_features: Matrix::from_fn(3, 1, |i, _| sf[i][0]),
+            end_features: Matrix::from_fn(3, 1, |i, _| ef[i][0]),
+            start_idx: edges.iter().map(|&(s, _)| s).collect(),
+            end_idx: edges.iter().map(|&(_, e)| e).collect(),
+            labels: vec![0.0; 6],
+            name: "req".into(),
+        };
+        assert_allclose(&served, &direct_model.predict(&ds), 1e-10, 1e-10);
+    }
+    server.shutdown();
+}
+
+/// The batched multi-λ path (`fit_path` + `predict_path`) works through the
+/// pairwise operators: each symmetric-kernel path model matches the exact
+/// Cholesky solve for its λ.
+#[test]
+fn symmetric_fit_path_matches_exact_solutions() {
+    let data = HomogeneousConfig {
+        vertices: 24,
+        density: 0.3,
+        noise: 0.2,
+        feature_range: 6.0,
+        seed: 31,
+    }
+    .generate();
+    let lambdas = [0.5, 2.0];
+    let cfg = RidgeConfig {
+        kernel_d: KernelKind::Gaussian { gamma: 0.8 },
+        kernel_t: KernelKind::Gaussian { gamma: 0.8 },
+        iterations: 900,
+        tol: 1e-13,
+        pairwise: PairwiseKernelKind::SymmetricKron,
+        ..Default::default()
+    };
+    let models = KronRidge::new(cfg).fit_path(&data, &lambdas).unwrap();
+    assert_eq!(models.len(), lambdas.len());
+    for (model, &lambda) in models.iter().zip(&lambdas) {
+        let exact =
+            kronvt::train::ridge::ridge_exact_dual(&data, &RidgeConfig { lambda, ..cfg });
+        assert_allclose(&model.dual_coef, &exact, 1e-5, 1e-5);
+    }
+    // batched prediction over the path agrees with per-model prediction
+    let (_, test) = data.zero_shot_split(0.25, 32);
+    if test.n_edges() > 0 {
+        let batched = kronvt::model::predict_path(&models, &test).unwrap();
+        for (j, scores) in batched.iter().enumerate() {
+            assert_eq!(scores, &models[j].predict(&test), "model {j}");
+        }
+    }
+}
+
+/// The threads knob stays transparent for the pairwise families: threaded
+/// training is bitwise identical to serial training.
+#[test]
+fn symmetric_threaded_training_matches_serial_bitwise() {
+    let data = HomogeneousConfig {
+        vertices: 40,
+        density: 0.5,
+        noise: 0.15,
+        feature_range: 8.0,
+        seed: 41,
+    }
+    .generate();
+    let base = RidgeConfig {
+        lambda: 0.3,
+        kernel_d: KernelKind::Gaussian { gamma: 1.0 },
+        kernel_t: KernelKind::Gaussian { gamma: 1.0 },
+        iterations: 30,
+        tol: 1e-12,
+        pairwise: PairwiseKernelKind::SymmetricKron,
+        ..Default::default()
+    };
+    let serial = KronRidge::new(base).fit(&data).unwrap();
+    for threads in [2, 4] {
+        let par = KronRidge::new(RidgeConfig { threads, ..base }).fit(&data).unwrap();
+        assert_eq!(serial.dual_coef, par.dual_coef, "threads={threads}");
+    }
+}
