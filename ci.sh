@@ -9,9 +9,13 @@
 #   5. cargo test --doc         doc tests (keeps the lib.rs quickstart compiling)
 #   6. cargo doc --no-deps      rustdoc gate (-D warnings: broken intra-doc
 #                               links / code blocks fail instead of rotting)
-#   7. ./bench.sh --smoke       quick-mode run of the JSON-writing benches so
+#   7. example smoke            quickstart + model_lifecycle run end to end
+#   8. model-lifecycle smoke    train --save → predict --model → serve --model
+#                               exercises the kronvt-model/v1 artifact across
+#                               fresh processes
+#   9. ./bench.sh --smoke       quick-mode run of the JSON-writing benches so
 #                               the bench targets can't bit-rot
-#   8. python3 -m json.tool     every BENCH_*.json must exist and parse
+#  10. python3 -m json.tool     every BENCH_*.json must exist and parse
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -26,6 +30,21 @@ run cargo build --release
 run cargo test -q
 run cargo test --doc
 run env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+# Example smoke: the public API surface (Learner / TrainedModel / serving)
+# must run end to end, not merely compile.
+run cargo run --release --example quickstart
+run cargo run --release --example model_lifecycle
+
+# Model-lifecycle smoke over the CLI: a saved artifact must score and serve
+# in fresh processes without retraining.
+model_artifact=$(mktemp "${TMPDIR:-/tmp}/kronvt-model-XXXXXX.json")
+run cargo run --release -- train --data checker --scale 0.05 --seed 3 \
+    --method kronridge --kernel gaussian:1 --lambda 0.0078125 --save "$model_artifact"
+run cargo run --release -- predict --model "$model_artifact" --data checker --scale 0.05 --seed 3
+run cargo run --release -- serve --model "$model_artifact" --requests 20 --threads 1
+rm -f "$model_artifact"
+
 run ../bench.sh --smoke
 
 shopt -s nullglob

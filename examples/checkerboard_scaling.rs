@@ -15,8 +15,9 @@ use kronvt::util::timer::Timer;
 
 fn main() {
     let args = Args::parse();
-    let max_m = args.get_usize("max-m", 400);
-    let baseline_cap = args.get_usize("baseline-cap", 4000);
+    args.expect_known("checkerboard_scaling", &["max-m", "baseline-cap"]).expect("flags");
+    let max_m = args.get_usize("max-m", 400).expect("--max-m");
+    let baseline_cap = args.get_usize("baseline-cap", 4000).expect("--baseline-cap");
     let gaussian = KernelKind::Gaussian { gamma: 1.0 };
 
     println!(

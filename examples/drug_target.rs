@@ -69,8 +69,9 @@ fn method_scores(method: &str, train: &Dataset, test: &Dataset) -> Vec<f64> {
 
 fn main() {
     let args = Args::parse();
+    args.expect_known("drug_target", &["data", "seed"]).expect("flags");
     let which = args.get_str("data", "gpcr,ic");
-    let seed = args.get_u64("seed", 1);
+    let seed = args.get_u64("seed", 1).expect("--seed");
 
     for name in which.split(',') {
         let cfg = match name {

@@ -1,13 +1,15 @@
 //! Quickstart: train Kronecker ridge regression and a Kronecker SVM on the
-//! checkerboard problem, evaluate zero-shot AUC, and show the sparse
-//! prediction shortcut.
+//! checkerboard problem through the unified estimator API
+//! ([`Learner`] → [`TrainedModel`]), evaluate zero-shot AUC, round-trip the
+//! ridge model through the portable `kronvt-model/v1` artifact, and show
+//! the sparse prediction shortcut.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
+use kronvt::api::{Compute, Learner, TrainedModel};
 use kronvt::data::checkerboard::CheckerboardConfig;
 use kronvt::eval::auc::auc;
 use kronvt::kernels::KernelKind;
-use kronvt::train::{KronRidge, KronSvm, RidgeConfig, SvmConfig};
 use kronvt::util::timer::Timer;
 
 fn main() {
@@ -21,48 +23,56 @@ fn main() {
     println!("train: {} edges ({}×{} vertices); test: {} edges", train.n_edges(), train.m(), train.q(), test.n_edges());
 
     let gaussian = KernelKind::Gaussian { gamma: 1.0 };
+    let compute = Compute::all_cores();
 
     // 3. Kronecker ridge regression (§4.1): one linear system, MINRES.
     let timer = Timer::start();
-    let ridge = KronRidge::new(RidgeConfig {
-        lambda: 2f64.powi(-7),
-        kernel_d: gaussian,
-        kernel_t: gaussian,
-        iterations: 100,
-        ..Default::default()
-    })
-    .fit(&train)
-    .expect("ridge training");
+    let ridge = Learner::ridge()
+        .lambda(2f64.powi(-7))
+        .kernel(gaussian)
+        .iterations(100)
+        .compute(compute)
+        .fit(&train)
+        .expect("ridge training");
     let ridge_auc = auc(&test.labels, &ridge.predict(&test));
     println!("KronRidge: AUC={ridge_auc:.3} in {:.2}s", timer.elapsed_secs());
 
     // 4. Kronecker L2-SVM (§4.2): truncated Newton, 10×10 iterations.
     let timer = Timer::start();
-    let svm = KronSvm::new(SvmConfig {
-        lambda: 2f64.powi(-7),
-        kernel_d: gaussian,
-        kernel_t: gaussian,
-        outer_iters: 10,
-        inner_iters: 10,
-        ..Default::default()
-    })
-    .fit(&train)
-    .expect("svm training");
+    let svm = Learner::svm()
+        .lambda(2f64.powi(-7))
+        .kernel(gaussian)
+        .iterations(10)
+        .inner_iterations(10)
+        .compute(compute)
+        .fit(&train)
+        .expect("svm training");
     let svm_auc = auc(&test.labels, &svm.predict(&test));
     println!(
         "KronSVM:   AUC={svm_auc:.3} in {:.2}s ({} of {} dual coefficients non-zero)",
         timer.elapsed_secs(),
-        svm.nnz(),
+        svm.as_dual().expect("dual model").nnz(),
         train.n_edges()
     );
 
-    // 5. The prediction shortcut (eq. 5) vs the explicit decision function
+    // 5. The model lifecycle: save → load reproduces predictions bitwise —
+    //    the artifact another process (kronvt predict / serve --model)
+    //    would load.
+    let path = std::env::temp_dir().join("kronvt_quickstart_model.json");
+    ridge.save(&path).expect("save artifact");
+    let loaded = TrainedModel::load(&path).expect("load artifact");
+    assert_eq!(loaded.predict(&test), ridge.predict(&test), "loaded model must match bitwise");
+    println!("artifact: saved + reloaded {} — predictions bitwise identical", path.display());
+    std::fs::remove_file(&path).ok();
+
+    // 6. The prediction shortcut (eq. 5) vs the explicit decision function
     //    (eq. 6) — same numbers, very different cost.
+    let svm_dual = svm.as_dual().expect("dual model");
     let timer = Timer::start();
-    let fast = svm.predict(&test);
+    let fast = svm_dual.predict(&test);
     let fast_secs = timer.elapsed_secs();
     let timer = Timer::start();
-    let slow = svm.predict_explicit(&test);
+    let slow = svm_dual.predict_explicit(&test);
     let slow_secs = timer.elapsed_secs();
     let max_diff = fast
         .iter()

@@ -9,56 +9,57 @@
 //!
 //! Run with: `cargo run --release --example zero_shot_server`
 
+use kronvt::api::{Compute, Learner};
 use kronvt::coordinator::{PredictServer, ServerConfig};
 use kronvt::data::checkerboard::{true_label, CheckerboardConfig};
 use kronvt::data::Dataset;
 use kronvt::eval::auc::auc;
 use kronvt::kernels::KernelKind;
 use kronvt::linalg::Matrix;
-use kronvt::train::{KronSvm, SvmConfig};
 use kronvt::util::args::Args;
 use kronvt::util::rng::Pcg32;
 use kronvt::util::timer::Timer;
 
 fn main() {
     let args = Args::parse();
-    let n_requests = args.get_usize("requests", 200);
-    let edges_per_request = args.get_usize("edges", 16);
+    args.expect_known(
+        "zero_shot_server",
+        &["requests", "edges", "threads", "workers", "cache-vertices", "vertex-pool"],
+    )
+    .expect("flags");
+    let n_requests = args.get_usize("requests", 200).expect("--requests");
+    let edges_per_request = args.get_usize("edges", 16).expect("--edges");
 
-    // Train on checkerboard data.
+    // Train on checkerboard data through the unified estimator API.
     let data = CheckerboardConfig { m: 120, q: 120, density: 0.3, noise: 0.15, feature_range: 15.0, seed: 21 }
         .generate();
     let (train, _) = data.zero_shot_split(0.2, 4);
     println!("training KronSVM on {} edges...", train.n_edges());
-    let gaussian = KernelKind::Gaussian { gamma: 1.0 };
-    let model = KronSvm::new(SvmConfig {
-        lambda: 2f64.powi(-7),
-        kernel_d: gaussian,
-        kernel_t: gaussian,
-        outer_iters: 10,
-        inner_iters: 10,
-        ..Default::default()
-    })
-    .fit(&train)
-    .expect("training");
+    let compute = Compute::threads(args.get_usize("threads", 0).expect("--threads"))
+        .with_cache_vertices(args.get_usize("cache-vertices", 512).expect("--cache-vertices"));
+    let model = Learner::svm()
+        .lambda(2f64.powi(-7))
+        .kernel(KernelKind::Gaussian { gamma: 1.0 })
+        .iterations(10)
+        .inner_iterations(10)
+        .compute(compute)
+        .fit(&train)
+        .expect("training");
 
-    let threads = args.get_usize("threads", 0);
     let model_check = model.clone(); // for the direct-prediction spot check
-    let server = PredictServer::start(
-        model,
-        ServerConfig {
+    let server: PredictServer = model
+        .serve(ServerConfig {
             max_batch_edges: 4096,
-            threads,
-            workers: args.get_usize("workers", 2),
-            cache_vertices: args.get_usize("cache-vertices", 512),
+            workers: args.get_usize("workers", 2).expect("--workers"),
+            compute,
             ..Default::default()
-        },
-    );
+        })
+        .expect("dual model serves");
 
     // Fire requests whose vertices repeat across a bounded pool (the cache's
     // target traffic pattern); collect latency + correctness.
     let mut rng = Pcg32::seeded(77);
-    let pool = args.get_usize("vertex-pool", 24).max(4);
+    let pool = args.get_usize("vertex-pool", 24).expect("--vertex-pool").max(4);
     let start_pool: Vec<Vec<f64>> =
         (0..pool).map(|_| vec![rng.uniform_in(0.0, 15.0)]).collect();
     let end_pool: Vec<Vec<f64>> = (0..pool).map(|_| vec![rng.uniform_in(0.0, 15.0)]).collect();

@@ -40,9 +40,9 @@ fn train_kron(
         kernel_t: gaussian,
         outer_iters: 10,
         inner_iters: 10,
-        threads,
         ..Default::default()
     })
+    .with_compute(kronvt::api::Compute::threads(threads))
     .fit(train)
     .expect("kron train");
     (model, t.elapsed_secs())
@@ -50,11 +50,18 @@ fn train_kron(
 
 fn main() {
     let args = Args::parse();
+    args.expect_known(
+        "bench_checkerboard",
+        &["bench", "full", "quick", "max-m", "baseline-cap", "seed", "threads"],
+    )
+    .expect("flags");
     let full = args.has("full");
-    let max_m = args.get_usize("max-m", if full { 1000 } else { 400 });
-    let baseline_cap_edges = args.get_usize("baseline-cap", if full { 16_000 } else { 4_000 });
-    let seed = args.get_u64("seed", 1);
-    let threads = args.get_usize("threads", 4);
+    let max_m = args.get_usize("max-m", if full { 1000 } else { 400 }).expect("--max-m");
+    let baseline_cap_edges = args
+        .get_usize("baseline-cap", if full { 16_000 } else { 4_000 })
+        .expect("--baseline-cap");
+    let seed = args.get_u64("seed", 1).expect("--seed");
+    let threads = args.get_usize("threads", 4).expect("--threads");
     let gaussian = KernelKind::Gaussian { gamma: 1.0 };
 
     println!(

@@ -83,6 +83,7 @@ fn fit_exponent(points: &[(f64, f64)]) -> f64 {
 
 fn main() {
     let args = Args::parse();
+    args.expect_known("bench_complexity", &["bench", "full", "quick"]).expect("flags");
     let full = args.has("full");
     let mut rng = Pcg32::seeded(404);
 

@@ -58,9 +58,10 @@ fn print_trace(label: &str, lambda_exp: i32, trace: &kronvt::train::TrainTrace) 
 
 fn main() {
     let args = Args::parse();
+    args.expect_known("bench_convergence", &["bench", "full", "quick", "seed"]).expect("flags");
     let full = args.has("full");
     let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
-    let seed = args.get_u64("seed", 1);
+    let seed = args.get_u64("seed", 1).expect("--seed");
 
     for (name, data) in datasets(full, seed) {
         // zero-shot train/test split in place of one CV fold (Fig. 2 block)

@@ -25,8 +25,9 @@ use kronvt::util::timer::{fmt_secs, Timer};
 
 fn main() {
     let args = Args::parse();
+    args.expect_known("bench_drug_target", &["bench", "full", "quick", "seed"]).expect("flags");
     let full = args.has("full");
-    let seed = args.get_u64("seed", 1);
+    let seed = args.get_u64("seed", 1).expect("--seed");
     // The paper uses γ = 10⁻⁵ on its raw fingerprint features; our synthetic
     // features are normalized to O(1) scale, so the equivalent "informative
     // kernel" criterion of §5.3 (not ≈identity, not ≈all-ones) gives γ ≈ 1.

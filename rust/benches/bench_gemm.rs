@@ -65,6 +65,7 @@ fn axpy_blocked_nn(a: &[f64], b: &[f64], m: usize, k_dim: usize, n: usize, c: &m
 
 fn main() {
     let args = Args::parse();
+    args.expect_known("bench_gemm", &["bench", "full", "quick"]).expect("flags");
     let full = args.has("full");
     let quick = args.has("quick");
     let mut rng = Pcg32::seeded(4242);

@@ -54,6 +54,7 @@ fn random_kernel(rng: &mut Pcg32, n: usize) -> Matrix {
 
 fn main() {
     let args = Args::parse();
+    args.expect_known("bench_gvt_micro", &["bench", "full", "quick"]).expect("flags");
     let full = args.has("full");
     let quick = args.has("quick");
     let mut rng = Pcg32::seeded(777);

@@ -21,6 +21,7 @@
 //!
 //! Run: `cargo bench --bench bench_serving [-- --full --threads N --workers W]`
 
+use kronvt::api::Compute;
 use kronvt::coordinator::{PredictServer, ServerConfig};
 use kronvt::data::dti::DtiConfig;
 use kronvt::data::Dataset;
@@ -34,9 +35,11 @@ use kronvt::util::timer::{fmt_secs, Timer};
 
 fn main() {
     let args = Args::parse();
+    args.expect_known("bench_serving", &["bench", "full", "quick", "threads", "workers"])
+        .expect("flags");
     let full = args.has("full");
-    let threads = args.get_usize("threads", 1);
-    let workers = args.get_usize("workers", 2);
+    let threads = args.get_usize("threads", 1).expect("--threads");
+    let workers = args.get_usize("workers", 2).expect("--workers");
     let (dti, requests, edges_per_request, pool_size) = if full {
         (kronvt::data::dti::gpcr(7), 400, 64, 48)
     } else {
@@ -58,9 +61,9 @@ fn main() {
         kernel_d: gaussian,
         kernel_t: gaussian,
         iterations: 50,
-        threads,
         ..Default::default()
     })
+    .with_compute(Compute::threads(threads))
     .fit(&train)
     .expect("training");
 
@@ -102,13 +105,15 @@ fn main() {
     let mut cold_secs = f64::INFINITY;
     let mut cold_scores = Vec::new();
     for _ in 0..reps {
-        let ctx = model.predict_context(threads, 0); // fresh: no cache at all
+        // fresh: no cache at all
+        let ctx = model.predict_context(&Compute::threads(threads).with_cache_vertices(0));
         let (secs, scores) = stream_secs(&ctx);
         cold_secs = cold_secs.min(secs);
         cold_scores = scores;
     }
 
-    let warm_ctx = model.predict_context(threads, cache_cap);
+    let warm_ctx =
+        model.predict_context(&Compute::threads(threads).with_cache_vertices(cache_cap));
     let (_, prewarm_scores) = stream_secs(&warm_ctx); // populate the cache
     let mut warm_secs = f64::INFINITY;
     let mut warm_scores = Vec::new();
@@ -142,7 +147,11 @@ fn main() {
     // ---- end-to-end server throughput (merger + scoring pool + cache) ----
     let server = PredictServer::start(
         model,
-        ServerConfig { threads, workers, cache_vertices: cache_cap, ..Default::default() },
+        ServerConfig {
+            workers,
+            compute: Compute::threads(threads).with_cache_vertices(cache_cap),
+            ..Default::default()
+        },
     );
     let t = Timer::start();
     for b in &batches {

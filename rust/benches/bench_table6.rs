@@ -78,8 +78,9 @@ struct Cell {
 
 fn main() {
     let args = Args::parse();
+    args.expect_known("bench_table6", &["bench", "full", "quick", "seed"]).expect("flags");
     let full = args.has("full");
-    let seed = args.get_u64("seed", 1);
+    let seed = args.get_u64("seed", 1).expect("--seed");
 
     // --- datasets (Table 5) ---
     let mut datasets: Vec<(String, Dataset, bool, bool)> = Vec::new(); // (name, data, gaussian?, cv?)

@@ -1,0 +1,439 @@
+//! The portable `kronvt-model/v1` artifact: a versioned JSON document
+//! holding everything a fresh process needs to reproduce a trained model's
+//! predictions **bit for bit** — dual coefficients (or primal weights), the
+//! pairwise kernel family, kernel hyperparameters, the training vertex
+//! features and edge index, λ, and the regularization (training) trace.
+//!
+//! Fidelity rests on two properties of [`crate::util::json`]:
+//!
+//! * every `f64` is written with shortest-round-trip decimal encoding
+//!   (including the `-0` sign), so parsing recovers the identical bit
+//!   pattern;
+//! * non-finite numbers are a serialization **error**, never a lossy
+//!   `null`/bare-token stand-in — a model that trained to `NaN` cannot be
+//!   silently persisted. (The optional trace metadata is the one exception:
+//!   a non-finite risk/AUC entry is stored as `null`, since traces are
+//!   diagnostics, not parameters.)
+//!
+//! See `docs/API.md` for the full schema.
+
+use crate::gvt::{KronIndex, PairwiseKernelKind};
+use crate::kernels::KernelKind;
+use crate::linalg::Matrix;
+use crate::model::{DualModel, PrimalModel};
+use crate::train::{IterRecord, TrainTrace};
+use crate::util::json::Json;
+
+use super::trained::ModelInner;
+use super::TrainedModel;
+
+/// The artifact format identifier this build reads and writes.
+pub const FORMAT: &str = "kronvt-model/v1";
+
+/// Error unless every entry of `xs` is finite. Applied on **both** sides of
+/// the round trip: save refuses to write a lossy document, and load refuses
+/// a hand-edited/corrupt one (`1e999` parses to `inf` through the JSON
+/// number grammar, so schema checks alone would let it through).
+fn ensure_finite(xs: &[f64], what: &str) -> Result<(), String> {
+    match xs.iter().position(|x| !x.is_finite()) {
+        Some(i) => Err(format!("{what}[{i}] is non-finite ({})", xs[i])),
+        None => Ok(()),
+    }
+}
+
+fn matrix_to_json(m: &Matrix) -> Json {
+    Json::obj(vec![
+        ("rows", Json::from(m.rows())),
+        ("cols", Json::from(m.cols())),
+        ("data", Json::num_arr(m.data())),
+    ])
+}
+
+fn idx_to_json(idx: &KronIndex) -> Json {
+    Json::obj(vec![
+        ("left", Json::Arr(idx.left.iter().map(|&i| Json::from(i as usize)).collect())),
+        ("right", Json::Arr(idx.right.iter().map(|&i| Json::from(i as usize)).collect())),
+    ])
+}
+
+fn trace_to_json(trace: &TrainTrace) -> Json {
+    let finite_or_null = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+    Json::Arr(
+        trace
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("iter", Json::from(r.iter)),
+                    ("risk", finite_or_null(r.risk)),
+                    ("val_auc", r.val_auc.map(finite_or_null).unwrap_or(Json::Null)),
+                    ("elapsed_secs", finite_or_null(r.elapsed_secs)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Serialize a [`TrainedModel`] to the `kronvt-model/v1` document.
+pub fn to_json(model: &TrainedModel) -> Result<Json, String> {
+    if !model.lambda.is_finite() {
+        return Err(format!("lambda is non-finite ({})", model.lambda));
+    }
+    let mut pairs = vec![
+        ("format", Json::from(FORMAT)),
+        ("lambda", Json::Num(model.lambda)),
+        ("trace", trace_to_json(&model.trace)),
+    ];
+    match &model.inner {
+        ModelInner::Dual(m) => {
+            ensure_finite(&m.dual_coef, "dual_coef")?;
+            ensure_finite(m.train_start_features.data(), "train_start_features.data")?;
+            ensure_finite(m.train_end_features.data(), "train_end_features.data")?;
+            ensure_finite_kernel(m.kernel_d, "kernel_d")?;
+            ensure_finite_kernel(m.kernel_t, "kernel_t")?;
+            pairs.extend([
+                ("kind", Json::from("dual")),
+                ("pairwise", Json::from(m.pairwise.name())),
+                ("kernel_d", Json::from(m.kernel_d.name())),
+                ("kernel_t", Json::from(m.kernel_t.name())),
+                ("dual_coef", Json::num_arr(&m.dual_coef)),
+                ("train_idx", idx_to_json(&m.train_idx)),
+                ("train_start_features", matrix_to_json(&m.train_start_features)),
+                ("train_end_features", matrix_to_json(&m.train_end_features)),
+            ]);
+        }
+        ModelInner::Primal(m) => {
+            ensure_finite(&m.w, "w")?;
+            pairs.extend([
+                ("kind", Json::from("primal")),
+                ("w", Json::num_arr(&m.w)),
+                ("d_features", Json::from(m.d_features)),
+                ("r_features", Json::from(m.r_features)),
+            ]);
+        }
+    }
+    Ok(Json::obj(pairs))
+}
+
+/// The kernel hyperparameters themselves must be finite, or the `name()` /
+/// `parse()` round trip (and the kernel itself) is meaningless.
+fn ensure_finite_kernel(kernel: KernelKind, what: &str) -> Result<(), String> {
+    let ok = match kernel {
+        KernelKind::Linear | KernelKind::Tanimoto => true,
+        KernelKind::Gaussian { gamma } => gamma.is_finite(),
+        KernelKind::Polynomial { gamma, coef0, .. } => gamma.is_finite() && coef0.is_finite(),
+    };
+    if ok {
+        Ok(())
+    } else {
+        Err(format!("{what} has a non-finite hyperparameter"))
+    }
+}
+
+fn require<'a>(json: &'a Json, key: &str) -> Result<&'a Json, String> {
+    json.get(key).ok_or_else(|| format!("artifact is missing '{key}'"))
+}
+
+fn num_field(json: &Json, key: &str) -> Result<f64, String> {
+    require(json, key)?
+        .as_f64()
+        .ok_or_else(|| format!("artifact field '{key}' must be a number"))
+}
+
+fn str_field<'a>(json: &'a Json, key: &str) -> Result<&'a str, String> {
+    require(json, key)?
+        .as_str()
+        .ok_or_else(|| format!("artifact field '{key}' must be a string"))
+}
+
+fn usize_field(json: &Json, key: &str) -> Result<usize, String> {
+    require(json, key)?
+        .as_usize()
+        .ok_or_else(|| format!("artifact field '{key}' must be a non-negative integer"))
+}
+
+fn num_vec(json: &Json, key: &str) -> Result<Vec<f64>, String> {
+    require(json, key)?
+        .as_arr()
+        .ok_or_else(|| format!("artifact field '{key}' must be an array"))?
+        .iter()
+        .enumerate()
+        .map(|(i, v)| {
+            v.as_f64().ok_or_else(|| format!("artifact field '{key}[{i}]' must be a number"))
+        })
+        .collect()
+}
+
+fn u32_vec(json: &Json, key: &str) -> Result<Vec<u32>, String> {
+    require(json, key)?
+        .as_arr()
+        .ok_or_else(|| format!("artifact field '{key}' must be an array"))?
+        .iter()
+        .enumerate()
+        .map(|(i, v)| {
+            v.as_usize()
+                .filter(|&n| n <= u32::MAX as usize)
+                .map(|n| n as u32)
+                .ok_or_else(|| format!("artifact field '{key}[{i}]' must be a vertex index"))
+        })
+        .collect()
+}
+
+fn matrix_from_json(json: &Json, key: &str) -> Result<Matrix, String> {
+    let obj = require(json, key)?;
+    let rows = usize_field(obj, "rows").map_err(|e| format!("{key}: {e}"))?;
+    let cols = usize_field(obj, "cols").map_err(|e| format!("{key}: {e}"))?;
+    let data = num_vec(obj, "data").map_err(|e| format!("{key}: {e}"))?;
+    // checked_mul: a corrupt artifact with absurd dimensions must be
+    // rejected here, not wrap around and panic later inside predict.
+    let expected = rows.checked_mul(cols).ok_or_else(|| {
+        format!("artifact field '{key}' dimensions {rows}x{cols} overflow")
+    })?;
+    if data.len() != expected {
+        return Err(format!(
+            "artifact field '{key}' claims {rows}x{cols} but carries {} values",
+            data.len()
+        ));
+    }
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+fn trace_from_json(json: &Json) -> TrainTrace {
+    // The trace is diagnostic metadata: parse what is well-formed, default
+    // the rest. A missing or malformed trace never fails a model load.
+    let mut trace = TrainTrace::default();
+    if let Some(records) = json.get("trace").and_then(|t| t.as_arr()) {
+        for r in records {
+            trace.push(IterRecord {
+                iter: r.get("iter").and_then(|v| v.as_usize()).unwrap_or(0),
+                risk: r.get("risk").and_then(|v| v.as_f64()).unwrap_or(f64::NAN),
+                val_auc: r.get("val_auc").and_then(|v| v.as_f64()),
+                elapsed_secs: r.get("elapsed_secs").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            });
+        }
+    }
+    trace
+}
+
+/// Deserialize and validate a `kronvt-model/v1` document.
+pub fn from_json(json: &Json) -> Result<TrainedModel, String> {
+    match json.get("format").and_then(|f| f.as_str()) {
+        Some(FORMAT) => {}
+        Some(other) if other.starts_with("kronvt-model/") => {
+            return Err(format!(
+                "unsupported model artifact version '{other}' (this build reads '{FORMAT}')"
+            ))
+        }
+        Some(other) => {
+            return Err(format!("not a kronvt model artifact (format '{other}')"))
+        }
+        None => return Err("not a kronvt model artifact (missing 'format')".into()),
+    }
+    let lambda = num_field(json, "lambda")?;
+    if !lambda.is_finite() {
+        return Err(format!("lambda is non-finite ({lambda})"));
+    }
+    let trace = trace_from_json(json);
+    let inner = match str_field(json, "kind")? {
+        "dual" => ModelInner::Dual(dual_from_json(json)?),
+        "primal" => ModelInner::Primal(primal_from_json(json)?),
+        other => return Err(format!("unknown model kind '{other}' (dual, primal)")),
+    };
+    Ok(TrainedModel { inner, lambda, trace })
+}
+
+fn dual_from_json(json: &Json) -> Result<DualModel, String> {
+    let pairwise = PairwiseKernelKind::parse(str_field(json, "pairwise")?)?;
+    let kernel_d = KernelKind::parse(str_field(json, "kernel_d")?)?;
+    let kernel_t = KernelKind::parse(str_field(json, "kernel_t")?)?;
+    let dual_coef = num_vec(json, "dual_coef")?;
+    let idx_obj = require(json, "train_idx")?;
+    let left = u32_vec(idx_obj, "left").map_err(|e| format!("train_idx: {e}"))?;
+    let right = u32_vec(idx_obj, "right").map_err(|e| format!("train_idx: {e}"))?;
+    if left.len() != right.len() {
+        return Err(format!(
+            "train_idx sides disagree: {} left vs {} right indices",
+            left.len(),
+            right.len()
+        ));
+    }
+    let train_idx = KronIndex::new(left, right);
+    if dual_coef.len() != train_idx.len() {
+        return Err(format!(
+            "dual_coef has {} entries but train_idx has {} edges",
+            dual_coef.len(),
+            train_idx.len()
+        ));
+    }
+    let train_start_features = matrix_from_json(json, "train_start_features")?;
+    let train_end_features = matrix_from_json(json, "train_end_features")?;
+    train_idx
+        .validate(train_end_features.rows(), train_start_features.rows())
+        .map_err(|e| format!("train_idx: {e}"))?;
+    pairwise.validate_vertex_domains(
+        kernel_d,
+        kernel_t,
+        train_start_features.cols(),
+        train_end_features.cols(),
+    )?;
+    // Mirror the save-side finiteness guarantee: a loaded model must never
+    // silently degrade into NaN scores.
+    ensure_finite(&dual_coef, "dual_coef")?;
+    ensure_finite(train_start_features.data(), "train_start_features.data")?;
+    ensure_finite(train_end_features.data(), "train_end_features.data")?;
+    ensure_finite_kernel(kernel_d, "kernel_d")?;
+    ensure_finite_kernel(kernel_t, "kernel_t")?;
+    Ok(DualModel {
+        dual_coef,
+        train_start_features,
+        train_end_features,
+        train_idx,
+        kernel_d,
+        kernel_t,
+        pairwise,
+    })
+}
+
+fn primal_from_json(json: &Json) -> Result<PrimalModel, String> {
+    let w = num_vec(json, "w")?;
+    let d_features = usize_field(json, "d_features")?;
+    let r_features = usize_field(json, "r_features")?;
+    let expected = d_features.checked_mul(r_features).ok_or_else(|| {
+        format!("primal dimensions {d_features}x{r_features} overflow")
+    })?;
+    if w.len() != expected {
+        return Err(format!(
+            "primal weights have {} entries but d_features·r_features = {expected}",
+            w.len()
+        ));
+    }
+    ensure_finite(&w, "w")?;
+    Ok(PrimalModel { w, d_features, r_features })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn toy_dual(seed: u64) -> TrainedModel {
+        let mut rng = Pcg32::seeded(seed);
+        let (m, q, n) = (5, 4, 11);
+        TrainedModel::from_dual(
+            DualModel {
+                dual_coef: rng.normal_vec(n),
+                train_start_features: Matrix::from_fn(m, 3, |_, _| rng.normal()),
+                train_end_features: Matrix::from_fn(q, 2, |_, _| rng.normal()),
+                train_idx: KronIndex::new(
+                    (0..n).map(|_| rng.below(q) as u32).collect(),
+                    (0..n).map(|_| rng.below(m) as u32).collect(),
+                ),
+                kernel_d: KernelKind::Gaussian { gamma: 0.1 + 1.0 / 3.0 },
+                kernel_t: KernelKind::Linear,
+                pairwise: PairwiseKernelKind::Kronecker,
+            },
+            2f64.powi(-7),
+        )
+    }
+
+    #[test]
+    fn dual_document_round_trips_bitwise() {
+        let model = toy_dual(50);
+        let text = to_json(&model).unwrap().dump().unwrap();
+        let back = from_json(&Json::parse(&text).unwrap()).unwrap();
+        let (a, b) = (model.as_dual().unwrap(), back.as_dual().unwrap());
+        assert_eq!(a.dual_coef, b.dual_coef);
+        assert_eq!(a.train_start_features.data(), b.train_start_features.data());
+        assert_eq!(a.train_end_features.data(), b.train_end_features.data());
+        assert_eq!(a.train_idx, b.train_idx);
+        assert_eq!(a.kernel_d, b.kernel_d);
+        assert_eq!(a.kernel_t, b.kernel_t);
+        assert_eq!(a.pairwise, b.pairwise);
+        assert_eq!(model.lambda().to_bits(), back.lambda().to_bits());
+    }
+
+    #[test]
+    fn primal_document_round_trips_bitwise() {
+        let mut rng = Pcg32::seeded(51);
+        let model =
+            TrainedModel::from_primal(PrimalModel { w: rng.normal_vec(6), d_features: 3, r_features: 2 }, 0.5);
+        let text = to_json(&model).unwrap().dump().unwrap();
+        let back = from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(model.as_primal().unwrap().w, back.as_primal().unwrap().w);
+        assert_eq!(back.as_primal().unwrap().d_features, 3);
+    }
+
+    #[test]
+    fn non_finite_parameters_refuse_to_save() {
+        let mut model = toy_dual(52);
+        if let ModelInner::Dual(d) = &mut model.inner {
+            d.dual_coef[3] = f64::NAN;
+        }
+        let err = to_json(&model).unwrap_err();
+        assert!(err.contains("dual_coef[3]"), "{err}");
+    }
+
+    #[test]
+    fn version_and_schema_violations_are_rejected() {
+        let model = toy_dual(53);
+        let good = to_json(&model).unwrap();
+        // over-versioned
+        let mut doc = good.as_obj().unwrap().clone();
+        doc.insert("format".into(), Json::from("kronvt-model/v2"));
+        let err = from_json(&Json::Obj(doc)).unwrap_err();
+        assert!(err.contains("kronvt-model/v2") && err.contains("kronvt-model/v1"), "{err}");
+        // not an artifact at all
+        assert!(from_json(&Json::parse("{}").unwrap()).is_err());
+        // out-of-bounds edge index
+        let mut doc = good.as_obj().unwrap().clone();
+        let mut idx = doc["train_idx"].as_obj().unwrap().clone();
+        idx.insert("left".into(), {
+            let mut left = doc["train_idx"].get("left").unwrap().as_arr().unwrap().to_vec();
+            left[0] = Json::from(999usize);
+            Json::Arr(left)
+        });
+        doc.insert("train_idx".into(), Json::Obj(idx));
+        assert!(from_json(&Json::Obj(doc)).is_err());
+        // coefficient / edge count mismatch
+        let mut doc = good.as_obj().unwrap().clone();
+        doc.insert("dual_coef".into(), Json::num_arr(&[1.0, 2.0]));
+        let err = from_json(&Json::Obj(doc)).unwrap_err();
+        assert!(err.contains("dual_coef"), "{err}");
+    }
+
+    #[test]
+    fn non_finite_values_are_rejected_on_load() {
+        let model = toy_dual(55);
+        let good = to_json(&model).unwrap();
+        // 1e999 passes the JSON number grammar but parses to +inf — the
+        // schema checks alone would let it through.
+        let mut doc = good.as_obj().unwrap().clone();
+        let mut coef = doc["dual_coef"].as_arr().unwrap().to_vec();
+        coef[0] = Json::parse("1e999").unwrap();
+        doc.insert("dual_coef".into(), Json::Arr(coef));
+        let err = from_json(&Json::Obj(doc)).unwrap_err();
+        assert!(err.contains("dual_coef"), "{err}");
+        // NaN kernel hyperparameter ("gaussian:NaN" parses)
+        let mut doc = good.as_obj().unwrap().clone();
+        doc.insert("kernel_d".into(), Json::from("gaussian:NaN"));
+        assert!(from_json(&Json::Obj(doc)).is_err());
+        // non-finite lambda
+        let mut doc = good.as_obj().unwrap().clone();
+        doc.insert("lambda".into(), Json::parse("-1e999").unwrap());
+        assert!(from_json(&Json::Obj(doc)).is_err());
+    }
+
+    #[test]
+    fn trace_survives_with_non_finite_entries_nulled() {
+        let mut trace = TrainTrace::default();
+        trace.push(IterRecord { iter: 1, risk: 2.5, val_auc: Some(0.75), elapsed_secs: 0.1 });
+        trace.push(IterRecord { iter: 2, risk: f64::NAN, val_auc: None, elapsed_secs: 0.2 });
+        let model = toy_dual(54).with_trace(trace);
+        let text = to_json(&model).unwrap().dump().unwrap();
+        let back = from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.trace().records.len(), 2);
+        assert_eq!(back.trace().records[0].risk, 2.5);
+        assert_eq!(back.trace().records[0].val_auc, Some(0.75));
+        assert!(back.trace().records[1].risk.is_nan(), "nulled risk loads as NaN");
+    }
+}

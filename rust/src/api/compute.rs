@@ -1,0 +1,105 @@
+//! The [`Compute`] execution policy — the single home of the knobs that
+//! used to be re-declared on every config struct (`RidgeConfig`,
+//! `SvmConfig`, `NewtonConfig`, `ServerConfig` each carried their own
+//! `threads`, and serving additionally its own cache size).
+
+use crate::gvt::engine::DEFAULT_POOL_RETENTION;
+
+/// Execution policy shared by training, prediction, and serving.
+///
+/// Every knob here is **transparent to results**: threading is bitwise
+/// deterministic (the GVT engine and the packed GEMM replay identical
+/// reductions at every thread count), the workspace retention bound is a
+/// scratch-memory recycling policy, and kernel-row cache hits reproduce
+/// freshly computed rows bit for bit. A `Compute` only changes how fast an
+/// answer arrives and how much memory is held between calls — never the
+/// answer.
+///
+/// Consumers take it **by reference** (`&Compute`): trainers
+/// ([`KronRidge`](crate::train::KronRidge), [`KronSvm`](crate::train::KronSvm),
+/// [`NewtonTrainer`](crate::train::NewtonTrainer) via
+/// `with_compute`), the [`Learner`](super::Learner) builder (`.compute(…)`),
+/// [`DualModel::predict_context`](crate::model::DualModel::predict_context),
+/// and the prediction server
+/// ([`ServerConfig`](crate::coordinator::ServerConfig)`::compute`).
+///
+/// ```
+/// use kronvt::api::Compute;
+/// let policy = Compute::threads(4).with_cache_vertices(512);
+/// assert_eq!(policy.threads, 4);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Compute {
+    /// Worker threads per GVT matvec / kernel GEMM (`0` = all cores,
+    /// `1` = serial). Results are bitwise identical for every value.
+    pub threads: usize,
+    /// Bound on idle scratch workspaces retained by each operator's
+    /// [`WorkspacePool`](crate::gvt::WorkspacePool) (`0` disables
+    /// recycling). Bounds steady-state scratch memory; does not affect
+    /// results.
+    pub workspace_retention: usize,
+    /// Per-side capacity (in vertices) of the serving kernel-row LRU cache
+    /// (`0` disables caching). Only prediction contexts and the server read
+    /// this; cache hits are bitwise identical to recomputed rows.
+    pub cache_vertices: usize,
+}
+
+impl Default for Compute {
+    fn default() -> Self {
+        Compute {
+            threads: 1,
+            workspace_retention: DEFAULT_POOL_RETENTION,
+            cache_vertices: 1024,
+        }
+    }
+}
+
+impl Compute {
+    /// Serial policy (one thread), default retention and cache.
+    pub fn serial() -> Compute {
+        Compute::default()
+    }
+
+    /// Policy sharding every matvec over `n` worker threads (`0` = all
+    /// cores); everything else defaulted.
+    pub fn threads(n: usize) -> Compute {
+        Compute { threads: n, ..Compute::default() }
+    }
+
+    /// Policy using every available core.
+    pub fn all_cores() -> Compute {
+        Compute::threads(0)
+    }
+
+    /// Replace the thread count.
+    pub fn with_threads(mut self, n: usize) -> Compute {
+        self.threads = n;
+        self
+    }
+
+    /// Replace the workspace-pool retention bound.
+    pub fn with_workspace_retention(mut self, retention: usize) -> Compute {
+        self.workspace_retention = retention;
+        self
+    }
+
+    /// Replace the serving kernel-row cache capacity (`0` disables).
+    pub fn with_cache_vertices(mut self, vertices: usize) -> Compute {
+        self.cache_vertices = vertices;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_compose() {
+        let c = Compute::threads(4).with_cache_vertices(64).with_workspace_retention(2);
+        assert_eq!(c, Compute { threads: 4, workspace_retention: 2, cache_vertices: 64 });
+        assert_eq!(Compute::all_cores().threads, 0);
+        assert_eq!(Compute::serial(), Compute::default());
+        assert_eq!(Compute::default().workspace_retention, DEFAULT_POOL_RETENTION);
+    }
+}

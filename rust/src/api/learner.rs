@@ -1,0 +1,363 @@
+//! The fluent [`Learner`] builder and the [`Estimator`] trait — one
+//! training entry point for every model family in the crate.
+//!
+//! ```no_run
+//! use kronvt::api::{Compute, Learner};
+//! use kronvt::data::checkerboard::CheckerboardConfig;
+//! use kronvt::gvt::PairwiseKernelKind;
+//! # let data = CheckerboardConfig { m: 40, q: 40, density: 0.25, noise: 0.2, feature_range: 8.0, seed: 1 }.generate();
+//! let model = Learner::ridge()
+//!     .lambda(1e-2)
+//!     .pairwise(PairwiseKernelKind::Kronecker)
+//!     .compute(Compute::threads(4))
+//!     .fit(&data)
+//!     .unwrap();
+//! ```
+
+use super::{Compute, TrainedModel};
+use crate::data::Dataset;
+use crate::gvt::PairwiseKernelKind;
+use crate::kernels::KernelKind;
+use crate::losses::{L2SvmLoss, LogisticLoss, RankRlsLoss, RidgeLoss};
+use crate::train::{KronRidge, KronSvm, NewtonConfig, NewtonTrainer, RidgeConfig, SvmConfig};
+
+/// Anything that trains a [`TrainedModel`] from a [`Dataset`] — the uniform
+/// estimator interface of the unified API. [`Learner`] is the crate's
+/// implementation; downstream code can implement it for custom trainers and
+/// reuse the same fit → save → load → serve lifecycle.
+pub trait Estimator {
+    /// Train a model on `data`.
+    fn fit(&self, data: &Dataset) -> Result<TrainedModel, String>;
+}
+
+/// Loss selector for the generic truncated-Newton path
+/// ([`Learner::newton`]) — the Table-2 losses of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NewtonLoss {
+    /// Squared loss (ridge regression through Algorithm 2).
+    Ridge,
+    /// Logistic loss.
+    Logistic,
+    /// L2-SVM (squared hinge) loss.
+    L2Svm,
+    /// RankRLS (magnitude-preserving ranking) loss — dual only.
+    RankRls,
+}
+
+impl NewtonLoss {
+    /// Canonical name (matches [`crate::losses::Loss::name`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            NewtonLoss::Ridge => "ridge",
+            NewtonLoss::Logistic => "logistic",
+            NewtonLoss::L2Svm => "l2svm",
+            NewtonLoss::RankRls => "rankrls",
+        }
+    }
+}
+
+/// Which specialized trainer a [`Learner`] drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Ridge,
+    Svm,
+    Newton(NewtonLoss),
+}
+
+/// Fluent builder over every trainer in [`crate::train`]: Kronecker ridge
+/// (dual MINRES, the multi-λ [`Learner::fit_path`], and the primal CG path),
+/// the Kronecker L2-SVM, and the generic truncated-Newton trainers — all
+/// returning one unified [`TrainedModel`].
+///
+/// Method-specific knobs (λ, kernels, iteration budgets) live here; the
+/// execution policy (threads, workspace retention, cache sizing) is a single
+/// [`Compute`] value set via [`Learner::compute`], and the pairwise kernel
+/// family via [`Learner::pairwise`] — neither is duplicated on the
+/// per-method config structs anymore.
+#[derive(Debug, Clone)]
+pub struct Learner {
+    kind: Kind,
+    lambda: f64,
+    kernel_d: KernelKind,
+    kernel_t: KernelKind,
+    /// Ridge: MINRES iterations. SVM / Newton: outer (Newton) iterations.
+    iterations: usize,
+    /// SVM / Newton: inner solver iterations per Newton step.
+    inner_iterations: usize,
+    /// Ridge: residual tolerance of the MINRES solve.
+    tol: f64,
+    /// SVM / Newton: step size δ.
+    delta: f64,
+    /// SVM: snap |aᵢ| below this to exact zero after each step.
+    sparsity_threshold: f64,
+    trace: bool,
+    patience: usize,
+    primal: bool,
+    pairwise: PairwiseKernelKind,
+    compute: Compute,
+}
+
+impl Learner {
+    fn new(kind: Kind, iterations: usize, inner_iterations: usize) -> Learner {
+        Learner {
+            kind,
+            lambda: 1.0,
+            kernel_d: KernelKind::Linear,
+            kernel_t: KernelKind::Linear,
+            iterations,
+            inner_iterations,
+            tol: 1e-9,
+            delta: 1.0,
+            sparsity_threshold: 1e-12,
+            trace: false,
+            patience: 0,
+            primal: false,
+            pairwise: PairwiseKernelKind::Kronecker,
+            compute: Compute::default(),
+        }
+    }
+
+    /// Kronecker ridge regression (§4.1): one MINRES solve, default 100
+    /// iterations.
+    pub fn ridge() -> Learner {
+        Learner::new(Kind::Ridge, 100, 0)
+    }
+
+    /// Kronecker L2-SVM (§4.2): truncated Newton, default 10×10 iterations.
+    pub fn svm() -> Learner {
+        Learner::new(Kind::Svm, 10, 10)
+    }
+
+    /// Generic truncated-Newton trainer (Algorithms 2–3) over a Table-2
+    /// loss, default 10×10 iterations.
+    pub fn newton(loss: NewtonLoss) -> Learner {
+        Learner::new(Kind::Newton(loss), 10, 10)
+    }
+
+    /// Set the regularization parameter λ.
+    pub fn lambda(mut self, lambda: f64) -> Learner {
+        self.lambda = lambda;
+        self
+    }
+
+    /// Use `kernel` for both vertex roles.
+    pub fn kernel(mut self, kernel: KernelKind) -> Learner {
+        self.kernel_d = kernel;
+        self.kernel_t = kernel;
+        self
+    }
+
+    /// Use distinct start- and end-vertex kernels.
+    pub fn kernels(mut self, kernel_d: KernelKind, kernel_t: KernelKind) -> Learner {
+        self.kernel_d = kernel_d;
+        self.kernel_t = kernel_t;
+        self
+    }
+
+    /// Iteration budget: MINRES iterations for ridge, outer Newton
+    /// iterations for SVM / Newton.
+    pub fn iterations(mut self, iterations: usize) -> Learner {
+        self.iterations = iterations;
+        self
+    }
+
+    /// Inner solver iterations per Newton step (SVM / Newton only).
+    pub fn inner_iterations(mut self, inner: usize) -> Learner {
+        self.inner_iterations = inner;
+        self
+    }
+
+    /// Residual tolerance of the ridge MINRES solve.
+    pub fn tol(mut self, tol: f64) -> Learner {
+        self.tol = tol;
+        self
+    }
+
+    /// Newton step size δ (SVM / Newton only; the paper uses the constant 1).
+    pub fn delta(mut self, delta: f64) -> Learner {
+        self.delta = delta;
+        self
+    }
+
+    /// SVM only: snap |aᵢ| below this to exact zero after each Newton step
+    /// (keeps the sparse prediction shortcut effective).
+    pub fn sparsity_threshold(mut self, threshold: f64) -> Learner {
+        self.sparsity_threshold = threshold;
+        self
+    }
+
+    /// Record the per-iteration risk (and validation AUC under
+    /// [`Learner::fit_with_validation`]) into the returned model's trace.
+    pub fn trace(mut self, trace: bool) -> Learner {
+        self.trace = trace;
+        self
+    }
+
+    /// Early-stopping patience on validation AUC (0 disables; takes effect
+    /// under [`Learner::fit_with_validation`]).
+    pub fn patience(mut self, patience: usize) -> Learner {
+        self.patience = patience;
+        self
+    }
+
+    /// Train the primal (linear-kernel, explicit-feature) model instead of
+    /// the dual. Requires the Kronecker pairwise family; the configured
+    /// kernels are ignored (implicitly linear).
+    pub fn primal(mut self, primal: bool) -> Learner {
+        self.primal = primal;
+        self
+    }
+
+    /// Select the pairwise kernel family composed over the GVT engine.
+    pub fn pairwise(mut self, pairwise: PairwiseKernelKind) -> Learner {
+        self.pairwise = pairwise;
+        self
+    }
+
+    /// Set the execution policy (threads, workspace retention, cache
+    /// sizing). Transparent to results — see [`Compute`].
+    pub fn compute(mut self, compute: Compute) -> Learner {
+        self.compute = compute;
+        self
+    }
+
+    fn ridge_cfg(&self) -> RidgeConfig {
+        RidgeConfig {
+            lambda: self.lambda,
+            kernel_d: self.kernel_d,
+            kernel_t: self.kernel_t,
+            iterations: self.iterations,
+            tol: self.tol,
+            trace: self.trace,
+            patience: self.patience,
+        }
+    }
+
+    fn svm_cfg(&self) -> SvmConfig {
+        SvmConfig {
+            lambda: self.lambda,
+            kernel_d: self.kernel_d,
+            kernel_t: self.kernel_t,
+            outer_iters: self.iterations,
+            inner_iters: self.inner_iterations,
+            delta: self.delta,
+            trace: self.trace,
+            patience: self.patience,
+            sparsity_threshold: self.sparsity_threshold,
+        }
+    }
+
+    fn newton_cfg(&self) -> NewtonConfig {
+        NewtonConfig {
+            lambda: self.lambda,
+            kernel_d: self.kernel_d,
+            kernel_t: self.kernel_t,
+            outer_iters: self.iterations,
+            inner_iters: self.inner_iterations,
+            delta: self.delta,
+            trace: self.trace,
+            patience: self.patience,
+        }
+    }
+
+    /// Train on `train`, optionally monitoring `val` for the trace and the
+    /// early-stopping rule. [`Estimator::fit`] is this with `val = None`.
+    pub fn fit_with_validation(
+        &self,
+        train: &Dataset,
+        val: Option<&Dataset>,
+    ) -> Result<TrainedModel, String> {
+        match self.kind {
+            Kind::Ridge => {
+                let trainer = KronRidge::new(self.ridge_cfg())
+                    .with_pairwise(self.pairwise)
+                    .with_compute(self.compute);
+                if self.primal {
+                    let (model, trace) = trainer.fit_primal(train, val)?;
+                    Ok(TrainedModel::from_primal(model, self.lambda).with_trace(trace))
+                } else {
+                    let (model, trace) = trainer.fit_traced(train, val)?;
+                    Ok(TrainedModel::from_dual(model, self.lambda).with_trace(trace))
+                }
+            }
+            Kind::Svm => {
+                let trainer = KronSvm::new(self.svm_cfg())
+                    .with_pairwise(self.pairwise)
+                    .with_compute(self.compute);
+                if self.primal {
+                    let (model, trace) = trainer.fit_primal(train, val)?;
+                    Ok(TrainedModel::from_primal(model, self.lambda).with_trace(trace))
+                } else {
+                    let (model, trace) = trainer.fit_traced(train, val)?;
+                    Ok(TrainedModel::from_dual(model, self.lambda).with_trace(trace))
+                }
+            }
+            Kind::Newton(loss) => self.fit_newton(loss, train, val),
+        }
+    }
+
+    fn fit_newton(
+        &self,
+        loss: NewtonLoss,
+        train: &Dataset,
+        val: Option<&Dataset>,
+    ) -> Result<TrainedModel, String> {
+        let cfg = self.newton_cfg();
+        // One monomorphized trainer per loss; the dispatch happens once here
+        // rather than leaking a trait object into the solver loops.
+        macro_rules! run {
+            ($loss:expr) => {{
+                let trainer = NewtonTrainer::new($loss, cfg)
+                    .with_pairwise(self.pairwise)
+                    .with_compute(self.compute);
+                if self.primal {
+                    let (model, trace) = trainer.fit_primal(train, val)?;
+                    Ok(TrainedModel::from_primal(model, self.lambda).with_trace(trace))
+                } else {
+                    let (model, trace) = trainer.fit_dual(train, val)?;
+                    Ok(TrainedModel::from_dual(model, self.lambda).with_trace(trace))
+                }
+            }};
+        }
+        match loss {
+            NewtonLoss::Ridge => run!(RidgeLoss),
+            NewtonLoss::Logistic => run!(LogisticLoss),
+            NewtonLoss::L2Svm => run!(L2SvmLoss),
+            NewtonLoss::RankRls => run!(RankRlsLoss),
+        }
+    }
+
+    /// Train the whole regularization path in one batched block-CG solve
+    /// (the builder's `lambda` is ignored; one [`TrainedModel`] per λ, see
+    /// [`KronRidge::fit_path`]). Dual ridge only.
+    pub fn fit_path(
+        &self,
+        train: &Dataset,
+        lambdas: &[f64],
+    ) -> Result<Vec<TrainedModel>, String> {
+        if self.kind != Kind::Ridge || self.primal {
+            return Err("fit_path supports the dual ridge learner only".into());
+        }
+        let trainer = KronRidge::new(self.ridge_cfg())
+            .with_pairwise(self.pairwise)
+            .with_compute(self.compute);
+        let models = trainer.fit_path(train, lambdas)?;
+        Ok(models
+            .into_iter()
+            .zip(lambdas)
+            .map(|(model, &lambda)| TrainedModel::from_dual(model, lambda))
+            .collect())
+    }
+
+    /// Train on `data` (no validation monitoring). Also available through
+    /// the [`Estimator`] trait for generic code.
+    pub fn fit(&self, data: &Dataset) -> Result<TrainedModel, String> {
+        self.fit_with_validation(data, None)
+    }
+}
+
+impl Estimator for Learner {
+    fn fit(&self, data: &Dataset) -> Result<TrainedModel, String> {
+        self.fit_with_validation(data, None)
+    }
+}

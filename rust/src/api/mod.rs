@@ -1,0 +1,51 @@
+//! The **unified estimator API**: one builder-based model lifecycle —
+//! **fit → save → load → serve** — over every training scheme in the crate.
+//!
+//! The paper's framework is deliberately general: a single optimization
+//! scheme (Algorithm 2 over the generalized vec trick) instantiated for
+//! ridge, SVM, and arbitrary pairwise-kernel families. This module gives
+//! that generality one public shape:
+//!
+//! * [`Compute`] — the execution policy (threads, workspace-pool retention,
+//!   kernel-row cache sizing), the **single** source of these knobs.
+//!   `RidgeConfig`/`SvmConfig`/`NewtonConfig`/`ServerConfig` no longer carry
+//!   their own copies; trainers and the server consume one `Compute` by
+//!   reference. Every knob is transparent to results.
+//! * [`Estimator`] + [`Learner`] — the uniform trainer interface and its
+//!   fluent builder:
+//!
+//!   ```no_run
+//!   # use kronvt::api::{Compute, Learner};
+//!   # use kronvt::gvt::PairwiseKernelKind;
+//!   # use kronvt::data::checkerboard::CheckerboardConfig;
+//!   # let data = CheckerboardConfig { m: 30, q: 30, density: 0.25, noise: 0.2, feature_range: 8.0, seed: 1 }.generate();
+//!   let model = Learner::ridge()
+//!       .lambda(1e-2)
+//!       .pairwise(PairwiseKernelKind::SymmetricKron)
+//!       .compute(Compute::threads(4))
+//!       .fit(&data)?;
+//!   # Ok::<(), String>(())
+//!   ```
+//!
+//!   covering Kronecker ridge (single-λ and the batched
+//!   [`Learner::fit_path`]), the L2-SVM, and the generic truncated-Newton /
+//!   primal paths.
+//! * [`TrainedModel`] — the unified trained artifact wrapping
+//!   [`DualModel`](crate::model::DualModel) /
+//!   [`PrimalModel`](crate::model::PrimalModel), exposing `predict`,
+//!   `predict_batch`, `into_context()` (serving), and the **versioned
+//!   portable model artifact**: [`TrainedModel::save`] /
+//!   [`TrainedModel::load`] write and read a `kronvt-model/v1` JSON document
+//!   whose exact float encoding makes loaded models predict **bitwise
+//!   identically** — train once, serve anywhere, no in-process handoff
+//!   required.
+
+mod artifact;
+mod compute;
+mod learner;
+mod trained;
+
+pub use artifact::{from_json as artifact_from_json, to_json as artifact_to_json, FORMAT};
+pub use compute::Compute;
+pub use learner::{Estimator, Learner, NewtonLoss};
+pub use trained::TrainedModel;

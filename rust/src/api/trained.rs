@@ -1,0 +1,186 @@
+//! [`TrainedModel`] — the unified result of every [`Estimator`] in the
+//! crate, wrapping either a dual or a primal predictor, carrying its
+//! training metadata (λ, per-iteration trace), and providing the portable
+//! `kronvt-model/v1` persistence used by `train --save` / `predict` /
+//! `serve --model`.
+//!
+//! [`Estimator`]: super::Estimator
+
+use std::path::Path;
+
+use super::artifact;
+use super::Compute;
+use crate::coordinator::{PredictServer, ServerConfig};
+use crate::data::Dataset;
+use crate::model::{DualModel, PredictContext, PrimalModel};
+use crate::train::TrainTrace;
+
+/// The two predictor shapes a [`TrainedModel`] can wrap.
+#[derive(Debug, Clone)]
+pub(crate) enum ModelInner {
+    /// Kernel (dual) predictor: coefficients over the training edges plus
+    /// the training-side features needed to evaluate test–train kernels.
+    Dual(DualModel),
+    /// Linear (primal) predictor: the flat weight vector `w ∈ R^{d·r}`.
+    Primal(PrimalModel),
+}
+
+/// A trained model with one lifecycle: **fit → save → load → serve**.
+///
+/// Produced by [`Learner::fit`](super::Learner::fit) (or the
+/// [`Estimator`](super::Estimator) trait), a `TrainedModel` predicts
+/// in-process ([`TrainedModel::predict`], [`TrainedModel::predict_batch`]),
+/// converts into a long-lived serving context
+/// ([`TrainedModel::into_context`]) or a full prediction server
+/// ([`TrainedModel::serve`]), and round-trips through the versioned
+/// `kronvt-model/v1` JSON artifact ([`TrainedModel::save`] /
+/// [`TrainedModel::load`]) with **bitwise-identical** predictions after
+/// reload — every `f64` (duals, features, kernel hyperparameters) is
+/// serialized with exact shortest-round-trip encoding.
+#[derive(Debug, Clone)]
+pub struct TrainedModel {
+    pub(crate) inner: ModelInner,
+    pub(crate) lambda: f64,
+    pub(crate) trace: TrainTrace,
+}
+
+impl TrainedModel {
+    /// Wrap a dual model trained with regularization `lambda`.
+    pub fn from_dual(model: DualModel, lambda: f64) -> TrainedModel {
+        TrainedModel { inner: ModelInner::Dual(model), lambda, trace: TrainTrace::default() }
+    }
+
+    /// Wrap a primal model trained with regularization `lambda`.
+    pub fn from_primal(model: PrimalModel, lambda: f64) -> TrainedModel {
+        TrainedModel { inner: ModelInner::Primal(model), lambda, trace: TrainTrace::default() }
+    }
+
+    /// Attach the per-iteration training trace (risk / validation AUC) —
+    /// persisted into the artifact as training metadata.
+    pub fn with_trace(mut self, trace: TrainTrace) -> TrainedModel {
+        self.trace = trace;
+        self
+    }
+
+    /// The regularization parameter λ the model was trained with.
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// The per-iteration training trace (empty unless tracing was enabled).
+    pub fn trace(&self) -> &TrainTrace {
+        &self.trace
+    }
+
+    /// Start- and end-vertex feature dimensions `(d, r)` the model expects
+    /// from every prediction batch — callers can validate incoming data
+    /// against these instead of hitting an internal dimension assert.
+    pub fn feature_dims(&self) -> (usize, usize) {
+        match &self.inner {
+            ModelInner::Dual(m) => {
+                (m.train_start_features.cols(), m.train_end_features.cols())
+            }
+            ModelInner::Primal(m) => (m.d_features, m.r_features),
+        }
+    }
+
+    /// `"dual"` or `"primal"` — the artifact `kind` tag.
+    pub fn kind_name(&self) -> &'static str {
+        match &self.inner {
+            ModelInner::Dual(_) => "dual",
+            ModelInner::Primal(_) => "primal",
+        }
+    }
+
+    /// The wrapped dual model, if this is a kernel predictor.
+    pub fn as_dual(&self) -> Option<&DualModel> {
+        match &self.inner {
+            ModelInner::Dual(m) => Some(m),
+            ModelInner::Primal(_) => None,
+        }
+    }
+
+    /// The wrapped primal model, if this is a linear predictor.
+    pub fn as_primal(&self) -> Option<&PrimalModel> {
+        match &self.inner {
+            ModelInner::Primal(m) => Some(m),
+            ModelInner::Dual(_) => None,
+        }
+    }
+
+    /// Unwrap into the dual model, erroring for primal models.
+    pub fn into_dual(self) -> Result<DualModel, String> {
+        match self.inner {
+            ModelInner::Dual(m) => Ok(m),
+            ModelInner::Primal(_) => Err("this artifact holds a primal (linear) model".into()),
+        }
+    }
+
+    /// Predict scores for every edge of `test` (serial; see
+    /// [`TrainedModel::predict_batch`] for the policy-driven path).
+    pub fn predict(&self, test: &Dataset) -> Vec<f64> {
+        match &self.inner {
+            ModelInner::Dual(m) => m.predict(test),
+            ModelInner::Primal(m) => m.predict(test),
+        }
+    }
+
+    /// Predict scores for one batch of test edges under a [`Compute`]
+    /// policy: dual models shard the kernel-block builds and the GVT matvec
+    /// over `compute.threads` (bitwise identical to the serial path); primal
+    /// models score with their single GEMM. For repeated batches against one
+    /// model, build a context once via [`TrainedModel::into_context`]
+    /// instead.
+    pub fn predict_batch(&self, test: &Dataset, compute: &Compute) -> Vec<f64> {
+        match &self.inner {
+            ModelInner::Dual(m) => m.predict_threaded(test, compute.threads),
+            ModelInner::Primal(m) => m.predict(test),
+        }
+    }
+
+    /// Convert into a long-lived serving context
+    /// ([`PredictContext`]): duals pruned once, train-side
+    /// [`EdgePlan`](crate::gvt::EdgePlan)s prebuilt, pooled workspaces
+    /// (bounded by `compute.workspace_retention`), and a per-vertex
+    /// kernel-row LRU of `compute.cache_vertices` per side. Errors for
+    /// primal models, whose per-batch GEMM needs no context.
+    pub fn into_context(self, compute: &Compute) -> Result<PredictContext, String> {
+        match self.inner {
+            ModelInner::Dual(m) => Ok(m.predict_context(compute)),
+            ModelInner::Primal(_) => {
+                Err("serving contexts require a dual model (primal predicts directly)".into())
+            }
+        }
+    }
+
+    /// Spin up a batched prediction server around this model — the
+    /// `serve --model` path: a loaded artifact serves without retraining.
+    /// Errors for primal models.
+    pub fn serve(self, cfg: ServerConfig) -> Result<PredictServer, String> {
+        match self.inner {
+            ModelInner::Dual(m) => Ok(PredictServer::start(m, cfg)),
+            ModelInner::Primal(_) => Err("the prediction server requires a dual model".into()),
+        }
+    }
+
+    /// Write the portable `kronvt-model/v1` JSON artifact. Errors if any
+    /// model parameter is non-finite (the artifact format refuses lossy
+    /// `NaN`/`inf` encodings) or on I/O failure.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        let text = artifact::to_json(self)?.dump()?;
+        std::fs::write(path, format!("{text}\n"))
+            .map_err(|e| format!("write {}: {e}", path.display()))
+    }
+
+    /// Load a `kronvt-model/v1` artifact written by [`TrainedModel::save`].
+    /// The loaded model predicts **bitwise identically** to the one that was
+    /// saved. Corrupted documents, schema violations, and unsupported
+    /// versions are rejected with a clear error.
+    pub fn load(path: &Path) -> Result<TrainedModel, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let json = crate::util::json::Json::parse(&text)
+            .map_err(|e| format!("{}: invalid JSON: {e}", path.display()))?;
+        artifact::from_json(&json).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}

@@ -20,9 +20,9 @@
 //!    [`WorkerPool`]) shards merged batches across workers. All workers
 //!    share one [`PredictContext`]: the pruned model, the prebuilt train-side
 //!    `EdgePlan`, pooled workspaces, and the per-vertex kernel-row LRU cache
-//!    ([`ServerConfig::cache_vertices`]) — vertices repeated across requests
-//!    never recompute their `K̂`/`Ĝ` rows. Each batch's matvec is itself
-//!    sharded over [`ServerConfig::threads`].
+//!    (`compute.cache_vertices` of the shared [`Compute`] policy) — vertices
+//!    repeated across requests never recompute their `K̂`/`Ĝ` rows. Each
+//!    batch's matvec is itself sharded over `compute.threads`.
 //!
 //! Scores are **bitwise identical** for a given batch whether the cache is
 //! cold, warm, or disabled, and for every `threads`/`workers` setting (the
@@ -37,6 +37,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use super::jobs::WorkerPool;
+use crate::api::Compute;
 use crate::data::Dataset;
 use crate::linalg::Matrix;
 use crate::model::{DualModel, PredictContext};
@@ -54,35 +55,37 @@ pub struct PredictRequest {
     pub reply: Sender<Vec<f64>>,
 }
 
-/// Server configuration.
+/// Server configuration. Serving-topology knobs (batching, pool size,
+/// backpressure) live here; the per-batch execution policy — matvec
+/// threads, kernel-row cache capacity, workspace retention — is the shared
+/// [`Compute`] policy, not re-declared per subsystem.
 #[derive(Debug, Clone, Copy)]
 pub struct ServerConfig {
     /// Edge budget per merged batch.
     pub max_batch_edges: usize,
-    /// Worker threads per batched prediction matvec (`0` = all cores,
-    /// `1` = serial). The trained model is shared, not copied — the GVT
-    /// operators are `Sync`, so sharding a batch costs no extra memory.
-    pub threads: usize,
     /// Scoring workers: merged batches are scored concurrently by this many
-    /// pool threads (min 1). Distinct from `threads`, which shards *within*
-    /// one batch; `workers` overlaps independent batches.
+    /// pool threads (min 1). Distinct from `compute.threads`, which shards
+    /// *within* one batch; `workers` overlaps independent batches.
     pub workers: usize,
     /// Bound on queued-but-unmerged requests. Submission blocks (or
     /// `try_send` fails) once the queue is full — the backpressure knob.
     pub max_queue: usize,
-    /// Per-side capacity (in vertices) of the kernel-row LRU cache shared by
-    /// the scoring workers; `0` disables caching.
-    pub cache_vertices: usize,
+    /// Execution policy for the shared [`PredictContext`]:
+    /// `compute.threads` shards each merged batch's matvec (`0` = all
+    /// cores), `compute.cache_vertices` bounds each side's kernel-row LRU
+    /// (`0` disables), `compute.workspace_retention` bounds pooled scratch.
+    /// The trained model is shared, not copied — the GVT operators are
+    /// `Sync`, so sharding a batch costs no extra memory.
+    pub compute: Compute,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             max_batch_edges: 65_536,
-            threads: 1,
             workers: 1,
             max_queue: 1024,
-            cache_vertices: 1024,
+            compute: Compute::default(),
         }
     }
 }
@@ -127,7 +130,7 @@ impl PredictServer {
         let stats = Arc::new(ServerStats::default());
         let ctx = Arc::new(
             model
-                .predict_context(cfg.threads, cfg.cache_vertices)
+                .predict_context(&cfg.compute)
                 .with_cache_counters(stats.cache_hits.clone(), stats.cache_misses.clone()),
         );
         let (d, r) = ctx_dims(&model);
@@ -395,7 +398,10 @@ mod tests {
         let (sf, ef, edges) = request_data(&mut rng, 4, 4, 12);
         let server = PredictServer::start(
             model,
-            ServerConfig { cache_vertices: 64, threads: 2, ..Default::default() },
+            ServerConfig {
+                compute: Compute::threads(2).with_cache_vertices(64),
+                ..Default::default()
+            },
         );
         let cold = server.predict_blocking(sf.clone(), ef.clone(), edges.clone()).unwrap();
         let warm = server.predict_blocking(sf, ef, edges).unwrap();
@@ -414,7 +420,12 @@ mod tests {
         let model = toy_model(1102);
         let server = PredictServer::start(
             model,
-            ServerConfig { max_batch_edges: 1000, threads: 2, workers: 3, ..Default::default() },
+            ServerConfig {
+                max_batch_edges: 1000,
+                workers: 3,
+                compute: Compute::threads(2),
+                ..Default::default()
+            },
         );
         let sender = server.sender();
         let mut replies = Vec::new();
@@ -465,9 +476,8 @@ mod tests {
             ServerConfig {
                 max_batch_edges: 64,
                 workers: 4,
-                threads: 1,
                 max_queue: 8,
-                cache_vertices: 16,
+                compute: Compute::serial().with_cache_vertices(16),
             },
         );
         let mut rng = Pcg32::seeded(1109);

@@ -718,7 +718,7 @@ fn stage2_parallel(
 /// Default retention bound for [`WorkspacePool`] — enough for a healthy
 /// scoring pool's steady state without letting a one-off concurrency burst
 /// pin its high-watermark of scratch memory forever.
-const DEFAULT_POOL_RETENTION: usize = 8;
+pub const DEFAULT_POOL_RETENTION: usize = 8;
 
 /// Lock-protected stack of [`GvtWorkspace`] scratch buffers.
 ///

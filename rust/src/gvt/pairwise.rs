@@ -201,6 +201,25 @@ impl PairwiseShared {
         q: usize,
         m: usize,
     ) -> PairwiseShared {
+        Self::with_pool_retention(
+            kind,
+            train_idx,
+            q,
+            m,
+            super::engine::DEFAULT_POOL_RETENTION,
+        )
+    }
+
+    /// [`PairwiseShared::new`] with an explicit bound on idle pooled
+    /// workspaces (the [`Compute`](crate::api::Compute) policy's
+    /// `workspace_retention` knob).
+    pub fn with_pool_retention(
+        kind: PairwiseKernelKind,
+        train_idx: Arc<KronIndex>,
+        q: usize,
+        m: usize,
+        retention: usize,
+    ) -> PairwiseShared {
         let plan = Arc::new(EdgePlan::build(&train_idx, q, m));
         let (swapped_idx, swapped_plan) = if kind.needs_cross() {
             let swapped =
@@ -216,7 +235,7 @@ impl PairwiseShared {
             swapped_idx,
             plan,
             swapped_plan,
-            pool: Arc::new(WorkspacePool::new()),
+            pool: Arc::new(WorkspacePool::with_retention(retention)),
         }
     }
 
@@ -658,6 +677,16 @@ impl PairwiseOp {
     /// `1` = serial). Results are bitwise identical for every thread count.
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.engine = GvtEngine::new(threads);
+        self
+    }
+
+    /// Replace the operator's scratch pool with one retaining at most
+    /// `retention` idle workspaces (see
+    /// [`WorkspacePool::with_retention`]) — the
+    /// [`Compute`](crate::api::Compute) policy's workspace knob. Purely a
+    /// memory/recycling policy: results are unaffected.
+    pub fn with_pool_retention(mut self, retention: usize) -> Self {
+        self.pool = Arc::new(WorkspacePool::with_retention(retention));
         self
     }
 

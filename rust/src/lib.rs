@@ -16,11 +16,12 @@
 //! without materializing the Kronecker product, where `R`/`C` are row/column
 //! index matrices selecting the edges that actually occur in the (sparse,
 //! non-complete) training graph. The [`gvt::GvtEngine`] shards that matvec
-//! across cores with bitwise-deterministic results; every trainer exposes it
-//! as a `threads` knob (see the quickstart below). The same apply composes
-//! into a whole **pairwise kernel family** — symmetric, anti-symmetric, and
-//! Cartesian kernels for homogeneous graphs and ranking
-//! ([`gvt::PairwiseOp`], `pairwise` knob on every trainer config).
+//! across cores with bitwise-deterministic results; the [`api::Compute`]
+//! execution policy exposes it uniformly to every trainer and the serving
+//! pipeline (see the quickstart below). The same apply composes into a whole
+//! **pairwise kernel family** — symmetric, anti-symmetric, and Cartesian
+//! kernels for homogeneous graphs and ranking ([`gvt::PairwiseOp`],
+//! `pairwise(…)` on every trainer / the [`api::Learner`] builder).
 //!
 //! ## Architecture (three layers)
 //!
@@ -39,27 +40,36 @@
 //!
 //! ## Quickstart
 //!
+//! One builder-based lifecycle — **fit → save → load → serve** — covers
+//! every trainer ([`api`]):
+//!
 //! ```no_run
+//! use kronvt::api::{Compute, Learner, TrainedModel};
 //! use kronvt::data::checkerboard::CheckerboardConfig;
-//! use kronvt::kernels::KernelKind;
-//! use kronvt::train::ridge::{KronRidge, RidgeConfig};
 //! use kronvt::eval::auc::auc;
+//! use kronvt::kernels::KernelKind;
 //!
 //! let data = CheckerboardConfig { m: 100, q: 100, density: 0.25, noise: 0.2, feature_range: 12.0, seed: 7 }
 //!     .generate();
 //! let (train, test) = data.zero_shot_split(0.25, 42);
-//! let model = KronRidge::new(RidgeConfig {
-//!     lambda: 2f64.powi(-7),
-//!     kernel_d: KernelKind::Gaussian { gamma: 1.0 },
-//!     kernel_t: KernelKind::Gaussian { gamma: 1.0 },
-//!     iterations: 100,
-//!     threads: 0, // shard every GVT matvec across all cores
-//!     ..Default::default()
-//! })
-//! .fit(&train)
-//! .unwrap();
+//!
+//! // fit: the fluent Learner builder over ridge / SVM / Newton trainers.
+//! let model = Learner::ridge()
+//!     .lambda(2f64.powi(-7))
+//!     .kernel(KernelKind::Gaussian { gamma: 1.0 })
+//!     .iterations(100)
+//!     .compute(Compute::all_cores()) // shard every GVT matvec; bitwise-identical results
+//!     .fit(&train)
+//!     .unwrap();
 //! let scores = model.predict(&test);
 //! println!("AUC = {:.3}", auc(&test.labels, &scores));
+//!
+//! // save → load: the portable `kronvt-model/v1` artifact predicts
+//! // bitwise-identically in a fresh process (`kronvt predict`, `kronvt
+//! // serve --model`).
+//! model.save(std::path::Path::new("model.json")).unwrap();
+//! let loaded = TrainedModel::load(std::path::Path::new("model.json")).unwrap();
+//! assert_eq!(loaded.predict(&test), scores);
 //! ```
 
 #![warn(missing_docs)]
@@ -71,6 +81,7 @@ pub mod kernels;
 pub mod losses;
 pub mod model;
 pub mod train;
+pub mod api;
 pub mod baselines;
 pub mod data;
 pub mod eval;

@@ -1,22 +1,30 @@
-//! `kronvt` CLI — train, evaluate, and serve Kronecker product kernel
-//! methods.
+//! `kronvt` CLI — train, persist, evaluate, and serve Kronecker product
+//! kernel methods through one model lifecycle: **fit → save → load →
+//! serve**.
 //!
 //! ```text
 //! kronvt datasets                          # Table-5 style dataset stats
 //! kronvt train --data checker --method kronsvm --kernel gaussian:1 \
-//!              --lambda 0.0078125 --outer 10 --inner 10
+//!              --lambda 0.0078125 --outer 10 --inner 10 --save model.json
+//! kronvt predict --model model.json --data checker     # fresh-process scoring
 //! kronvt cv --data gpcr --method kronridge --lambda 1e-4
-//! kronvt serve --data checker --requests 100
+//! kronvt serve --model model.json --requests 100       # serve without retraining
 //! kronvt artifacts                         # artifact registry status
 //! ```
+//!
+//! Unknown flags are rejected per subcommand, and unparsable flag values
+//! are errors — typos fail loudly.
 
+use std::path::Path;
+
+use kronvt::api::{Compute, Learner, TrainedModel};
 use kronvt::baselines::{ExplicitSvm, ExplicitSvmConfig, KnnConfig, KnnModel, SgdConfig, SgdLossKind, SgdModel};
 use kronvt::coordinator::{run_cv_jobs, run_cv_path_jobs, PredictServer, ServerConfig};
 use kronvt::data::{checkerboard, dti, Dataset};
 use kronvt::eval::auc::auc;
 use kronvt::gvt::PairwiseKernelKind;
 use kronvt::kernels::KernelKind;
-use kronvt::train::{KronRidge, KronSvm, RidgeConfig, SvmConfig};
+use kronvt::train::{KronRidge, RidgeConfig};
 use kronvt::util::args::Args;
 use kronvt::util::rng::Pcg32;
 use kronvt::util::timer::Timer;
@@ -53,83 +61,90 @@ fn load_dataset(name: &str, seed: u64, scale: f64) -> Result<Dataset, String> {
     Ok(ds)
 }
 
-fn train_and_eval(
-    method: &str,
-    train: &Dataset,
-    test: &Dataset,
-    args: &Args,
-) -> Result<f64, String> {
-    let lambda = args.get_f64("lambda", 1e-4);
-    let kernel = KernelKind::parse(&args.get_str("kernel", "linear"))?;
-    let pairwise = PairwiseKernelKind::parse(&args.get_str("pairwise", "kron"))?;
-    // GVT matvec parallelism (0 = all cores); results are identical for
-    // every thread count, only faster.
-    let threads = args.get_usize("threads", 1);
-    if pairwise != PairwiseKernelKind::Kronecker
-        && !matches!(method, "kronsvm" | "kronridge")
-    {
-        return Err(format!(
-            "--pairwise {} is only supported by kronsvm/kronridge (got '{method}')",
-            pairwise.name()
-        ));
-    }
-    let scores = match method {
-        "kronsvm" => {
-            let cfg = SvmConfig {
-                lambda,
-                kernel_d: kernel,
-                kernel_t: kernel,
-                outer_iters: args.get_usize("outer", 10),
-                inner_iters: args.get_usize("inner", 10),
-                threads,
-                pairwise,
-                ..Default::default()
-            };
-            KronSvm::new(cfg).fit(train)?.predict_threaded(test, threads)
-        }
-        "kronridge" => {
-            let cfg = RidgeConfig {
-                lambda,
-                kernel_d: kernel,
-                kernel_t: kernel,
-                iterations: args.get_usize("iterations", 100),
-                threads,
-                pairwise,
-                ..Default::default()
-            };
-            KronRidge::new(cfg).fit(train)?.predict_threaded(test, threads)
-        }
-        "libsvm" => {
-            let cfg = ExplicitSvmConfig {
-                c: args.get_f64("c", 1.0),
-                kernel,
-                ..Default::default()
-            };
-            ExplicitSvm::fit(train, &cfg)?.predict(test)
-        }
-        "sgd-hinge" | "sgd-logistic" => {
-            let cfg = SgdConfig {
-                loss: if method == "sgd-hinge" { SgdLossKind::Hinge } else { SgdLossKind::Logistic },
-                lambda,
-                updates: args.get_usize("updates", 1_000_000),
-                ..Default::default()
-            };
-            SgdModel::fit(train, &cfg)?.predict(test)
-        }
-        "knn" => {
-            let cfg = KnnConfig { k: args.get_usize("k", 5), ..Default::default() };
-            KnnModel::fit(train, &cfg)?.predict(test)
-        }
-        other => return Err(format!("unknown method '{other}'")),
-    };
-    Ok(auc(&test.labels, &scores))
+/// A fully parsed training method: every flag is validated up front, so a
+/// typo fails before any dataset is trained (in particular, `cv` maps
+/// per-fold *training* failures to NaN — a bad flag must never hide there).
+enum MethodPlan {
+    /// Kronecker methods through the unified estimator API.
+    Kron(Learner),
+    /// Explicit SMO baseline.
+    Libsvm(ExplicitSvmConfig),
+    /// Linear SGD baselines.
+    Sgd(SgdConfig),
+    /// K-nearest-neighbours baseline.
+    Knn(KnnConfig),
 }
 
+fn parse_method(method: &str, args: &Args, compute: Compute) -> Result<MethodPlan, String> {
+    let lambda = args.get_f64("lambda", 1e-4)?;
+    let kernel = KernelKind::parse(&args.get_str("kernel", "linear"))?;
+    let pairwise = PairwiseKernelKind::parse(&args.get_str("pairwise", "kron"))?;
+    match method {
+        "kronsvm" => Ok(MethodPlan::Kron(
+            Learner::svm()
+                .iterations(args.get_usize("outer", 10)?)
+                .inner_iterations(args.get_usize("inner", 10)?)
+                .lambda(lambda)
+                .kernel(kernel)
+                .pairwise(pairwise)
+                .compute(compute),
+        )),
+        "kronridge" => Ok(MethodPlan::Kron(
+            Learner::ridge()
+                .iterations(args.get_usize("iterations", 100)?)
+                .lambda(lambda)
+                .kernel(kernel)
+                .pairwise(pairwise)
+                .compute(compute),
+        )),
+        _ if pairwise != PairwiseKernelKind::Kronecker => Err(format!(
+            "--pairwise {} is only supported by kronsvm/kronridge (got '{method}')",
+            pairwise.name()
+        )),
+        "libsvm" => Ok(MethodPlan::Libsvm(ExplicitSvmConfig {
+            c: args.get_f64("c", 1.0)?,
+            kernel,
+            ..Default::default()
+        })),
+        "sgd-hinge" | "sgd-logistic" => Ok(MethodPlan::Sgd(SgdConfig {
+            loss: if method == "sgd-hinge" { SgdLossKind::Hinge } else { SgdLossKind::Logistic },
+            lambda,
+            updates: args.get_usize("updates", 1_000_000)?,
+            ..Default::default()
+        })),
+        "knn" => Ok(MethodPlan::Knn(KnnConfig {
+            k: args.get_usize("k", 5)?,
+            ..Default::default()
+        })),
+        other => Err(format!("unknown method '{other}'")),
+    }
+}
+
+/// Train one parsed method and score the test edges. Errors here are
+/// genuine training failures, never flag typos (those fail in
+/// [`parse_method`]).
+fn run_plan(
+    plan: &MethodPlan,
+    train: &Dataset,
+    test: &Dataset,
+    compute: &Compute,
+) -> Result<Vec<f64>, String> {
+    match plan {
+        MethodPlan::Kron(learner) => Ok(learner.fit(train)?.predict_batch(test, compute)),
+        MethodPlan::Libsvm(cfg) => Ok(ExplicitSvm::fit(train, cfg)?.predict(test)),
+        MethodPlan::Sgd(cfg) => Ok(SgdModel::fit(train, cfg)?.predict(test)),
+        MethodPlan::Knn(cfg) => Ok(KnnModel::fit(train, cfg)?.predict(test)),
+    }
+}
+
+const DATASETS_FLAGS: &[&str] = &["seed", "scale"];
+
 fn cmd_datasets(args: &Args) -> Result<(), String> {
-    let seed = args.get_u64("seed", 1);
+    args.expect_known("datasets", DATASETS_FLAGS)?;
+    let seed = args.get_u64("seed", 1)?;
     println!("{:<10} {:>9} {:>8} {:>9} {:>8} {:>8}", "dataset", "edges", "pos.", "neg.", "starts", "ends");
     for name in ["gpcr", "ic", "e", "ki", "checker", "homo"] {
-        let ds = load_dataset(name, seed, args.get_f64("scale", 1.0))?;
+        let ds = load_dataset(name, seed, args.get_f64("scale", 1.0)?)?;
         let st = ds.stats();
         println!(
             "{:<10} {:>9} {:>8} {:>9} {:>8} {:>8}",
@@ -139,12 +154,25 @@ fn cmd_datasets(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+const TRAIN_FLAGS: &[&str] = &[
+    "data", "method", "seed", "scale", "test-frac", "lambda", "kernel", "pairwise", "threads",
+    "outer", "inner", "iterations", "c", "updates", "k", "save",
+];
+
 fn cmd_train(args: &Args) -> Result<(), String> {
+    args.expect_known("train", TRAIN_FLAGS)?;
     let data = args.get_str("data", "checker");
     let method = args.get_str("method", "kronsvm");
-    let seed = args.get_u64("seed", 1);
-    let ds = load_dataset(&data, seed, args.get_f64("scale", 0.1))?;
-    let (train, test) = ds.zero_shot_split(args.get_f64("test-frac", 0.25), seed);
+    let seed = args.get_u64("seed", 1)?;
+    // GVT matvec parallelism (0 = all cores); results are identical for
+    // every thread count, only faster.
+    let compute = Compute::threads(args.get_usize("threads", 1)?);
+    let plan = parse_method(&method, args, compute)?;
+    if args.has("save") && !matches!(plan, MethodPlan::Kron(_)) {
+        return Err(format!("--save persists kronsvm/kronridge models only (got '{method}')"));
+    }
+    let ds = load_dataset(&data, seed, args.get_f64("scale", 0.1)?)?;
+    let (train, test) = ds.zero_shot_split(args.get_f64("test-frac", 0.25)?, seed);
     println!(
         "dataset={} train: n={} m={} q={}; test: n={}",
         data,
@@ -154,20 +182,80 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         test.n_edges()
     );
     let timer = Timer::start();
-    let auc_val = train_and_eval(&method, &train, &test, args)?;
+    let (scores, model) = match &plan {
+        MethodPlan::Kron(learner) => {
+            let model = learner.fit(&train)?;
+            (model.predict_batch(&test, &compute), Some(model))
+        }
+        _ => (run_plan(&plan, &train, &test, &compute)?, None),
+    };
+    let auc_val = auc(&test.labels, &scores);
     println!("method={method} AUC={auc_val:.4} time={:.2}s", timer.elapsed_secs());
+    // Shortest-round-trip sum: a fresh `kronvt predict` on the same split
+    // prints the identical string iff scoring is bitwise reproducible.
+    let score_sum: f64 = scores.iter().sum();
+    println!("test n={} score_sum={score_sum}", test.n_edges());
+    if let Some(path) = args.get("save") {
+        let model = model.expect("checked above: --save implies a Kron plan");
+        model.save(Path::new(path))?;
+        println!("saved kronvt-model/v1 artifact to {path}");
+    }
     Ok(())
 }
 
+const PREDICT_FLAGS: &[&str] = &["model", "data", "seed", "scale", "test-frac", "threads"];
+
+fn cmd_predict(args: &Args) -> Result<(), String> {
+    args.expect_known("predict", PREDICT_FLAGS)?;
+    let path = args.get("model").ok_or("predict requires --model PATH")?;
+    let model = TrainedModel::load(Path::new(path))?;
+    let data = args.get_str("data", "checker");
+    let seed = args.get_u64("seed", 1)?;
+    // Defaults mirror `train`, so the same seed reproduces the same split —
+    // matching score_sum lines prove the save → load round trip is bitwise.
+    let ds = load_dataset(&data, seed, args.get_f64("scale", 0.1)?)?;
+    let (_, test) = ds.zero_shot_split(args.get_f64("test-frac", 0.25)?, seed);
+    // A clean CLI error (not an internal dimension assert) when the chosen
+    // dataset doesn't match the features the artifact was trained on.
+    let (d, r) = model.feature_dims();
+    if test.start_features.cols() != d || test.end_features.cols() != r {
+        return Err(format!(
+            "--data {data} carries {}-d start / {}-d end vertex features but the model \
+             expects {d}-d / {r}-d — score the dataset family the model was trained on",
+            test.start_features.cols(),
+            test.end_features.cols()
+        ));
+    }
+    let compute = Compute::threads(args.get_usize("threads", 1)?);
+    let timer = Timer::start();
+    let scores = model.predict_batch(&test, &compute);
+    let auc_val = auc(&test.labels, &scores);
+    println!(
+        "model={path} kind={} lambda={} AUC={auc_val:.4} time={:.2}s",
+        model.kind_name(),
+        model.lambda(),
+        timer.elapsed_secs()
+    );
+    let score_sum: f64 = scores.iter().sum();
+    println!("test n={} score_sum={score_sum}", test.n_edges());
+    Ok(())
+}
+
+const CV_FLAGS: &[&str] = &[
+    "data", "method", "seed", "scale", "lambda", "lambdas", "kernel", "pairwise", "threads",
+    "fold-workers", "outer", "inner", "iterations", "c", "updates", "k",
+];
+
 fn cmd_cv(args: &Args) -> Result<(), String> {
+    args.expect_known("cv", CV_FLAGS)?;
     let data = args.get_str("data", "gpcr");
     let method = args.get_str("method", "kronridge");
-    let seed = args.get_u64("seed", 1);
-    let ds = load_dataset(&data, seed, args.get_f64("scale", 1.0))?;
+    let seed = args.get_u64("seed", 1)?;
+    let ds = load_dataset(&data, seed, args.get_f64("scale", 1.0)?)?;
     let folds = ds.ninefold_cv(seed);
     // Fold-level parallelism; combine with --threads (per-matvec sharding)
     // carefully — the product of the two should not exceed the core count.
-    let fold_workers = args.get_usize("fold-workers", 1);
+    let fold_workers = args.get_usize("fold-workers", 1)?;
     if args.has("threads") && !args.has("fold-workers") {
         eprintln!(
             "note: `cv --threads` now shards each GVT matvec; use --fold-workers N \
@@ -195,13 +283,15 @@ fn cmd_cv(args: &Args) -> Result<(), String> {
         let cfg = RidgeConfig {
             kernel_d: kernel,
             kernel_t: kernel,
-            iterations: args.get_usize("iterations", 100),
-            threads: args.get_usize("threads", 1),
-            pairwise: PairwiseKernelKind::parse(&args.get_str("pairwise", "kron"))?,
+            iterations: args.get_usize("iterations", 100)?,
             ..Default::default()
         };
+        let pairwise = PairwiseKernelKind::parse(&args.get_str("pairwise", "kron"))?;
+        let compute = Compute::threads(args.get_usize("threads", 1)?);
         let results = run_cv_path_jobs(&folds, fold_workers, |tr, te| {
             KronRidge::new(cfg)
+                .with_pairwise(pairwise)
+                .with_compute(compute)
                 .fit_path(tr, &lambdas)
                 .and_then(|models| kronvt::model::predict_path(&models, te))
                 .map(|score_sets| {
@@ -238,8 +328,14 @@ fn cmd_cv(args: &Args) -> Result<(), String> {
         );
         return Ok(());
     }
+    // Parse every flag once, up front: a typo fails the command here instead
+    // of being folded into a NaN AUC by the per-fold error handling below.
+    let compute = Compute::threads(args.get_usize("threads", 1)?);
+    let plan = parse_method(&method, args, compute)?;
     let results = run_cv_jobs(&folds, fold_workers, |tr, te| {
-        train_and_eval(&method, tr, te, args).unwrap_or(f64::NAN)
+        run_plan(&plan, tr, te, &compute)
+            .map(|scores| auc(&te.labels, &scores))
+            .unwrap_or(f64::NAN)
     });
     for r in &results {
         println!(
@@ -252,40 +348,66 @@ fn cmd_cv(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+const SERVE_FLAGS: &[&str] = &[
+    "data", "seed", "scale", "lambda", "threads", "pairwise", "model", "requests",
+    "serve-workers", "cache-vertices", "max-queue", "vertex-pool",
+];
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
-    let seed = args.get_u64("seed", 1);
-    let ds = load_dataset(&args.get_str("data", "checker"), seed, args.get_f64("scale", 0.06))?;
-    let (train, _) = ds.zero_shot_split(0.25, seed);
-    let threads = args.get_usize("threads", 0);
-    let pairwise = PairwiseKernelKind::parse(&args.get_str("pairwise", "kron"))?;
-    let cfg = SvmConfig {
-        lambda: args.get_f64("lambda", 2f64.powi(-7)),
-        kernel_d: KernelKind::Gaussian { gamma: 1.0 },
-        kernel_t: KernelKind::Gaussian { gamma: 1.0 },
-        threads,
-        pairwise,
-        ..Default::default()
+    args.expect_known("serve", SERVE_FLAGS)?;
+    let seed = args.get_u64("seed", 1)?;
+    let compute = Compute::threads(args.get_usize("threads", 0)?)
+        .with_cache_vertices(args.get_usize("cache-vertices", 1024)?);
+
+    // `--model` serves a saved artifact without retraining — the portable
+    // train-once / serve-anywhere path; otherwise train a demo model.
+    let model: TrainedModel = match args.get("model") {
+        Some(path) => {
+            // These flags configure the demo-training branch only; with
+            // --model the artifact's own settings apply, so accepting them
+            // silently would contradict the fail-loudly flag policy.
+            for flag in ["data", "scale", "lambda", "pairwise"] {
+                if args.has(flag) {
+                    return Err(format!(
+                        "--{flag} has no effect with --model (the saved artifact's own \
+                         training settings apply); drop it or serve without --model"
+                    ));
+                }
+            }
+            let model = TrainedModel::load(Path::new(path))?;
+            println!("loaded {} model from {path} (lambda={})", model.kind_name(), model.lambda());
+            model
+        }
+        None => {
+            let ds =
+                load_dataset(&args.get_str("data", "checker"), seed, args.get_f64("scale", 0.06)?)?;
+            let (train, _) = ds.zero_shot_split(0.25, seed);
+            let pairwise = PairwiseKernelKind::parse(&args.get_str("pairwise", "kron"))?;
+            println!(
+                "training model on {} edges... (pass --model PATH to serve a saved artifact)",
+                train.n_edges()
+            );
+            Learner::svm()
+                .lambda(args.get_f64("lambda", 2f64.powi(-7))?)
+                .kernel(KernelKind::Gaussian { gamma: 1.0 })
+                .pairwise(pairwise)
+                .compute(compute)
+                .fit(&train)?
+        }
     };
-    println!("training model on {} edges...", train.n_edges());
-    let model = KronSvm::new(cfg).fit(&train)?;
-    let d = model.train_start_features.cols();
-    let r = model.train_end_features.cols();
-    let server = PredictServer::start(
-        model,
-        ServerConfig {
-            threads,
-            workers: args.get_usize("serve-workers", 2),
-            cache_vertices: args.get_usize("cache-vertices", 1024),
-            max_queue: args.get_usize("max-queue", 1024),
-            ..Default::default()
-        },
-    );
+    let (d, r) = model.feature_dims();
+    let server: PredictServer = model.serve(ServerConfig {
+        workers: args.get_usize("serve-workers", 2)?,
+        max_queue: args.get_usize("max-queue", 1024)?,
+        compute,
+        ..Default::default()
+    })?;
 
     // Real serving traffic repeats vertices across requests (the same drug
     // against new targets, the same user against new items); draw request
     // vertices from a bounded pool so the kernel-row cache sees that pattern.
-    let n_requests = args.get_usize("requests", 100);
-    let pool_size = args.get_usize("vertex-pool", 16).max(4);
+    let n_requests = args.get_usize("requests", 100)?;
+    let pool_size = args.get_usize("vertex-pool", 16)?.max(4);
     let mut rng = Pcg32::seeded(seed ^ 0x5E7);
     let start_pool: Vec<Vec<f64>> =
         (0..pool_size).map(|_| rng.uniform_vec(d, 0.0, 100.0)).collect();
@@ -320,7 +442,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+const ARTIFACTS_FLAGS: &[&str] = &["dir"];
+
 fn cmd_artifacts(args: &Args) -> Result<(), String> {
+    args.expect_known("artifacts", ARTIFACTS_FLAGS)?;
     let dir = args.get_str("dir", "artifacts");
     if !kronvt::runtime::ArtifactRegistry::available(&dir) {
         println!("no artifact manifest at {dir}/ — run `make artifacts` (native paths still work)");
@@ -346,9 +471,13 @@ fn usage() -> ! {
         "usage: kronvt <command> [--flags]\n\
          commands:\n\
            datasets   print Table-5 style dataset statistics\n\
-           train      train one method on a zero-shot split and report AUC\n\
+           train      train one method on a zero-shot split, report AUC; --save PATH\n\
+                      writes the portable kronvt-model/v1 artifact\n\
+           predict    load --model PATH in a fresh process and score the test split\n\
+                      (bitwise identical to the model that was saved)\n\
            cv         9-fold zero-shot cross-validation (Fig. 2)\n\
-           serve      run the batched zero-shot prediction server demo\n\
+           serve      batched zero-shot prediction server; --model PATH serves a\n\
+                      saved artifact without retraining\n\
            artifacts  show the PJRT artifact registry status\n\
          common flags: --data checker|checker+|homo|ki|gpcr|ic|e --method kronsvm|kronridge|libsvm|sgd-hinge|sgd-logistic|knn\n\
                        --kernel linear|gaussian:G --lambda L --seed S --scale F\n\
@@ -359,6 +488,8 @@ fn usage() -> ! {
                        --fold-workers N   (cv only) train folds concurrently\n\
                        --lambdas a,b,c    (cv + kronridge) batched λ-grid CV: one block-CG solve\n\
                                           and one multi-RHS prediction per fold covers every λ\n\
+         model flags:  --save PATH   (train) persist the trained model artifact\n\
+                       --model PATH  (predict/serve) load a saved artifact\n\
          serve flags:  --serve-workers N   scoring-pool threads (batches scored concurrently)\n\
                        --cache-vertices N  per-side kernel-row LRU capacity (0 = off)\n\
                        --max-queue N       request-queue bound (backpressure)\n\
@@ -373,6 +504,7 @@ fn main() {
     let result = match cmd {
         "datasets" => cmd_datasets(&args),
         "train" => cmd_train(&args),
+        "predict" => cmd_predict(&args),
         "cv" => cmd_cv(&args),
         "serve" => cmd_serve(&args),
         "artifacts" => cmd_artifacts(&args),

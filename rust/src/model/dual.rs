@@ -9,6 +9,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
+use crate::api::Compute;
 use crate::data::Dataset;
 use crate::gvt::{delta_matrix, KronIndex, PairwiseKernelKind, PairwiseOp, PairwiseShared};
 use crate::kernels::{
@@ -97,17 +98,22 @@ impl DualModel {
     /// incoming test batch then pays only for its own test-side work — see
     /// [`PredictContext`].
     ///
-    /// `threads` shards each batch's GVT matvec (`0` = all cores, `1` =
-    /// serial); `cache_vertices` bounds each side's cache in vertices.
-    pub fn predict_context(&self, threads: usize, cache_vertices: usize) -> PredictContext {
+    /// The [`Compute`] policy supplies every execution knob:
+    /// `compute.threads` shards each batch's GVT matvec (`0` = all cores,
+    /// `1` = serial), `compute.cache_vertices` bounds each side's kernel-row
+    /// cache, and `compute.workspace_retention` bounds the pooled scratch
+    /// workspaces. All three are transparent to results.
+    pub fn predict_context(&self, compute: &Compute) -> PredictContext {
+        let (threads, cache_vertices) = (compute.threads, compute.cache_vertices);
         let pruned = self.pruned();
         let q_train = pruned.train_end_features.rows();
         let m_train = pruned.train_start_features.rows();
-        let shared = PairwiseShared::new(
+        let shared = PairwiseShared::with_pool_retention(
             self.pairwise,
             Arc::new(pruned.train_idx),
             q_train,
             m_train,
+            compute.workspace_retention,
         );
         let hits = Arc::new(AtomicUsize::new(0));
         let misses = Arc::new(AtomicUsize::new(0));
@@ -538,7 +544,9 @@ mod tests {
             let direct = model.predict(&test);
             for threads in [1, 2] {
                 for cache_vertices in [0, 64] {
-                    let ctx = model.predict_context(threads, cache_vertices);
+                    let ctx = model.predict_context(
+                        &Compute::threads(threads).with_cache_vertices(cache_vertices),
+                    );
                     let cold = ctx.predict_batch(&test);
                     let warm = ctx.predict_batch(&test);
                     assert_allclose(&cold, &direct, 1e-12, 1e-12);
@@ -557,7 +565,9 @@ mod tests {
             let direct = model.predict(&test);
             for threads in [1, 2, 4] {
                 for cache_vertices in [0, 64] {
-                    let ctx = model.predict_context(threads, cache_vertices);
+                    let ctx = model.predict_context(
+                        &Compute::threads(threads).with_cache_vertices(cache_vertices),
+                    );
                     let cold = ctx.predict_batch(&test);
                     let warm = ctx.predict_batch(&test);
                     assert_eq!(cold, direct, "{kernel:?} t={threads} c={cache_vertices}");
@@ -570,7 +580,7 @@ mod tests {
     #[test]
     fn context_cache_counts_hits_and_misses() {
         let (model, test) = toy_model_and_test(311, KernelKind::Gaussian { gamma: 0.3 });
-        let ctx = model.predict_context(1, 64);
+        let ctx = model.predict_context(&Compute::serial().with_cache_vertices(64));
         assert_eq!(ctx.cache_hits() + ctx.cache_misses(), 0);
         ctx.predict_batch(&test);
         let vertices = test.m() + test.q();
@@ -586,7 +596,8 @@ mod tests {
     fn context_with_tiny_cache_still_correct_under_eviction() {
         let (model, test) = toy_model_and_test(312, KernelKind::Gaussian { gamma: 0.5 });
         let direct = model.predict(&test);
-        let ctx = model.predict_context(1, 1); // evicts on every other vertex
+        // evicts on every other vertex
+        let ctx = model.predict_context(&Compute::serial().with_cache_vertices(1));
         for round in 0..3 {
             assert_eq!(ctx.predict_batch(&test), direct, "round {round}");
         }
@@ -600,7 +611,7 @@ mod tests {
                 model.dual_coef[i] = 0.0;
             }
         }
-        let ctx = model.predict_context(1, 0);
+        let ctx = model.predict_context(&Compute::serial().with_cache_vertices(0));
         assert_eq!(ctx.nnz(), model.nnz());
         // pruning may flip the Algorithm-1 branch → allclose, not bitwise
         assert_allclose(&ctx.predict_batch(&test), &model.predict(&test), 1e-10, 1e-10);

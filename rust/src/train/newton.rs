@@ -6,6 +6,7 @@
 //! Dual Newton system (eq. 9):  `(H·R(G⊗K)Rᵀ + λI) x = g + λa`.
 //! Primal Newton system:        `(XᵀHX + λI) x = Xᵀg + λw`, `X = R(T⊗D)`.
 
+use crate::api::Compute;
 use crate::data::Dataset;
 use crate::eval::auc::auc;
 use crate::gvt::{PairwiseKernelKind, PairwiseOp};
@@ -38,12 +39,6 @@ pub struct NewtonConfig {
     pub trace: bool,
     /// Early-stopping patience on validation AUC (0 disables).
     pub patience: usize,
-    /// Worker threads per GVT matvec (`0` = all cores, `1` = serial).
-    /// Results are bitwise identical for every thread count.
-    pub threads: usize,
-    /// Pairwise kernel family composed over the GVT engine
-    /// (`Kronecker` reproduces the pre-family behavior bit for bit).
-    pub pairwise: PairwiseKernelKind,
 }
 
 impl Default for NewtonConfig {
@@ -57,24 +52,51 @@ impl Default for NewtonConfig {
             delta: 1.0,
             trace: false,
             patience: 0,
-            threads: 1,
-            pairwise: PairwiseKernelKind::Kronecker,
         }
     }
 }
 
 /// Truncated-Newton trainer over an arbitrary [`Loss`].
+///
+/// Method-specific knobs live in [`NewtonConfig`]; the pairwise kernel
+/// family and the execution policy are set with
+/// [`NewtonTrainer::with_pairwise`] / [`NewtonTrainer::with_compute`] (or
+/// through the [`Learner`](crate::api::Learner) builder).
 pub struct NewtonTrainer<L: Loss> {
     /// Training configuration.
     pub cfg: NewtonConfig,
     /// The loss being optimized.
     pub loss: L,
+    /// Pairwise kernel family composed over the GVT engine.
+    pub pairwise: PairwiseKernelKind,
+    /// Execution policy (threads, workspace retention); transparent to
+    /// results.
+    pub compute: Compute,
 }
 
 impl<L: Loss> NewtonTrainer<L> {
-    /// Trainer for `loss` with the given configuration.
+    /// Trainer for `loss` with the given configuration, the Kronecker
+    /// pairwise family, and the default (serial) execution policy.
     pub fn new(loss: L, cfg: NewtonConfig) -> Self {
-        NewtonTrainer { cfg, loss }
+        NewtonTrainer {
+            cfg,
+            loss,
+            pairwise: PairwiseKernelKind::Kronecker,
+            compute: Compute::default(),
+        }
+    }
+
+    /// Select the pairwise kernel family composed over the GVT engine.
+    pub fn with_pairwise(mut self, pairwise: PairwiseKernelKind) -> Self {
+        self.pairwise = pairwise;
+        self
+    }
+
+    /// Set the execution policy (threads, workspace retention). Results are
+    /// bitwise identical for every policy.
+    pub fn with_compute(mut self, compute: Compute) -> Self {
+        self.compute = compute;
+        self
     }
 
     /// Algorithm 2 (dual).
@@ -93,8 +115,8 @@ impl<L: Loss> NewtonTrainer<L> {
             train,
             self.cfg.kernel_d,
             self.cfg.kernel_t,
-            self.cfg.pairwise,
-            self.cfg.threads,
+            self.pairwise,
+            &self.compute,
         )?;
         let val_op = val
             .map(|v| {
@@ -103,8 +125,8 @@ impl<L: Loss> NewtonTrainer<L> {
                     v,
                     self.cfg.kernel_d,
                     self.cfg.kernel_t,
-                    self.cfg.pairwise,
-                    self.cfg.threads,
+                    self.pairwise,
+                    &self.compute,
                 )
             })
             .transpose()?;
@@ -172,7 +194,7 @@ impl<L: Loss> NewtonTrainer<L> {
             train_idx: train.kron_index(),
             kernel_d: self.cfg.kernel_d,
             kernel_t: self.cfg.kernel_t,
-            pairwise: self.cfg.pairwise,
+            pairwise: self.pairwise,
         };
         Ok((model, trace))
     }
@@ -191,10 +213,10 @@ impl<L: Loss> NewtonTrainer<L> {
                 self.loss.name()
             ));
         }
-        if self.cfg.pairwise != PairwiseKernelKind::Kronecker {
+        if self.pairwise != PairwiseKernelKind::Kronecker {
             return Err(format!(
                 "the primal path supports the Kronecker pairwise kernel only (got '{}')",
-                self.cfg.pairwise.name()
+                self.pairwise.name()
             ));
         }
         train.validate()?;
@@ -258,8 +280,8 @@ impl<L: Loss> NewtonTrainer<L> {
             train,
             self.cfg.kernel_d,
             self.cfg.kernel_t,
-            self.cfg.pairwise,
-            self.cfg.threads,
+            self.pairwise,
+            &self.compute,
         )
     }
 }
@@ -298,6 +320,7 @@ mod tests {
         let exact = ridge_exact_dual(
             &train,
             &RidgeConfig { lambda: 0.7, ..Default::default() },
+            PairwiseKernelKind::Kronecker,
         );
         crate::linalg::vecops::assert_allclose(&model.dual_coef, &exact, 1e-5, 1e-5);
     }

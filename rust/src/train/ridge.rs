@@ -9,6 +9,7 @@
 
 use std::sync::Arc;
 
+use crate::api::Compute;
 use crate::data::Dataset;
 use crate::eval::auc::auc;
 use crate::gvt::{delta_matrix, PairwiseKernelKind, PairwiseOp};
@@ -38,12 +39,6 @@ pub struct RidgeConfig {
     pub trace: bool,
     /// Early-stopping patience on validation AUC (0 disables).
     pub patience: usize,
-    /// Worker threads per GVT matvec (`0` = all cores, `1` = serial).
-    /// Results are bitwise identical for every thread count.
-    pub threads: usize,
-    /// Pairwise kernel family composed over the GVT engine
-    /// (`Kronecker` reproduces the pre-family behavior bit for bit).
-    pub pairwise: PairwiseKernelKind,
 }
 
 impl Default for RidgeConfig {
@@ -56,32 +51,44 @@ impl Default for RidgeConfig {
             tol: 1e-9,
             trace: false,
             patience: 0,
-            threads: 1,
-            pairwise: PairwiseKernelKind::Kronecker,
         }
     }
 }
 
 /// Kronecker ridge regression trainer.
+///
+/// Method-specific knobs live in [`RidgeConfig`]; the pairwise kernel family
+/// and the execution policy are set with [`KronRidge::with_pairwise`] /
+/// [`KronRidge::with_compute`] (or through the
+/// [`Learner`](crate::api::Learner) builder) — the config structs no longer
+/// duplicate `threads`/`pairwise`.
 #[derive(Debug, Clone)]
 pub struct KronRidge {
     /// Training configuration.
     pub cfg: RidgeConfig,
+    /// Pairwise kernel family composed over the GVT engine
+    /// (`Kronecker` reproduces the pre-family behavior bit for bit).
+    pub pairwise: PairwiseKernelKind,
+    /// Execution policy (threads, workspace retention); transparent to
+    /// results.
+    pub compute: Compute,
 }
 
 /// Build the dual training operator for the chosen pairwise family from a
-/// dataset, sharding matvecs over `threads` worker threads. The kernel
-/// matrices themselves are built with the same thread count through the
-/// packed GEMM (bitwise identical to the serial build); the symmetric /
-/// anti-symmetric families additionally build the end-vs-start cross-kernel
-/// block.
+/// dataset under a [`Compute`] policy: matvecs shard over
+/// `compute.threads` worker threads, and the operator's scratch pool is
+/// bounded by `compute.workspace_retention`. The kernel matrices themselves
+/// are built with the same thread count through the packed GEMM (bitwise
+/// identical to the serial build); the symmetric / anti-symmetric families
+/// additionally build the end-vs-start cross-kernel block.
 pub(crate) fn dual_kernel_op(
     train: &Dataset,
     kernel_d: KernelKind,
     kernel_t: KernelKind,
     pairwise: PairwiseKernelKind,
-    threads: usize,
+    compute: &Compute,
 ) -> Result<PairwiseOp, String> {
+    let threads = compute.threads;
     pairwise.validate_vertex_domains(
         kernel_d,
         kernel_t,
@@ -110,7 +117,8 @@ pub(crate) fn dual_kernel_op(
         ),
     };
     Ok(PairwiseOp::training(pairwise, g, k, aux_g, aux_k, train.kron_index())?
-        .with_threads(threads))
+        .with_threads(threads)
+        .with_pool_retention(compute.workspace_retention))
 }
 
 /// Build a zero-shot prediction operator from training to validation edges
@@ -121,7 +129,7 @@ pub(crate) fn validation_op(
     kernel_d: KernelKind,
     kernel_t: KernelKind,
     pairwise: PairwiseKernelKind,
-    threads: usize,
+    compute: &Compute,
 ) -> Result<PairwiseOp, String> {
     PairwiseOp::prediction_from_features(
         pairwise,
@@ -133,14 +141,32 @@ pub(crate) fn validation_op(
         &train.end_features,
         val.kron_index(),
         train.kron_index(),
-        threads,
+        compute.threads,
     )
 }
 
 impl KronRidge {
-    /// Trainer with the given configuration.
+    /// Trainer with the given configuration, the Kronecker pairwise family,
+    /// and the default (serial) execution policy.
     pub fn new(cfg: RidgeConfig) -> Self {
-        KronRidge { cfg }
+        KronRidge {
+            cfg,
+            pairwise: PairwiseKernelKind::Kronecker,
+            compute: Compute::default(),
+        }
+    }
+
+    /// Select the pairwise kernel family composed over the GVT engine.
+    pub fn with_pairwise(mut self, pairwise: PairwiseKernelKind) -> Self {
+        self.pairwise = pairwise;
+        self
+    }
+
+    /// Set the execution policy (threads, workspace retention). Results are
+    /// bitwise identical for every policy.
+    pub fn with_compute(mut self, compute: Compute) -> Self {
+        self.compute = compute;
+        self
     }
 
     /// Train the dual model (any kernels).
@@ -165,8 +191,8 @@ impl KronRidge {
             train,
             self.cfg.kernel_d,
             self.cfg.kernel_t,
-            self.cfg.pairwise,
-            self.cfg.threads,
+            self.pairwise,
+            &self.compute,
         )?;
         let val_op = val
             .map(|v| {
@@ -175,8 +201,8 @@ impl KronRidge {
                     v,
                     self.cfg.kernel_d,
                     self.cfg.kernel_t,
-                    self.cfg.pairwise,
-                    self.cfg.threads,
+                    self.pairwise,
+                    &self.compute,
                 )
             })
             .transpose()?;
@@ -212,7 +238,7 @@ impl KronRidge {
             train_idx: train.kron_index(),
             kernel_d: self.cfg.kernel_d,
             kernel_t: self.cfg.kernel_t,
-            pairwise: self.cfg.pairwise,
+            pairwise: self.pairwise,
         };
         Ok((model, trace))
     }
@@ -222,7 +248,8 @@ impl KronRidge {
     /// [`block_cg`] solve drives all shifted systems `(Q + λ_j I) a_j = y`
     /// with one multi-RHS GVT apply per iteration — a whole regularization
     /// path for little more than the cost of one model (`cfg.lambda` is
-    /// ignored; `cfg.iterations`/`cfg.tol`/`cfg.threads` apply).
+    /// ignored; `cfg.iterations`/`cfg.tol` and the trainer's
+    /// [`Compute`] policy apply).
     ///
     /// Uses CG rather than the single-model path's MINRES, so a
     /// one-element path is numerically (not bitwise) equivalent to
@@ -240,8 +267,8 @@ impl KronRidge {
             train,
             self.cfg.kernel_d,
             self.cfg.kernel_t,
-            self.cfg.pairwise,
-            self.cfg.threads,
+            self.pairwise,
+            &self.compute,
         )?;
         let n = train.n_edges();
         let k = lambdas.len();
@@ -260,7 +287,7 @@ impl KronRidge {
                 train_idx: train.kron_index(),
                 kernel_d: self.cfg.kernel_d,
                 kernel_t: self.cfg.kernel_t,
-                pairwise: self.cfg.pairwise,
+                pairwise: self.pairwise,
             })
             .collect())
     }
@@ -276,10 +303,10 @@ impl KronRidge {
         if train.n_edges() == 0 {
             return Err("empty training set".into());
         }
-        if self.cfg.pairwise != PairwiseKernelKind::Kronecker {
+        if self.pairwise != PairwiseKernelKind::Kronecker {
             return Err(format!(
                 "the primal path supports the Kronecker pairwise kernel only (got '{}')",
-                self.cfg.pairwise.name()
+                self.pairwise.name()
             ));
         }
         let timer = Timer::start();
@@ -329,8 +356,12 @@ impl KronRidge {
 
 /// Exact (direct) dual ridge solve via Cholesky on the materialized pairwise
 /// kernel matrix — `O(n³)`; testing oracle for small problems (any family).
-pub fn ridge_exact_dual(train: &Dataset, cfg: &RidgeConfig) -> Vec<f64> {
-    let op = dual_kernel_op(train, cfg.kernel_d, cfg.kernel_t, cfg.pairwise, 1)
+pub fn ridge_exact_dual(
+    train: &Dataset,
+    cfg: &RidgeConfig,
+    pairwise: PairwiseKernelKind,
+) -> Vec<f64> {
+    let op = dual_kernel_op(train, cfg.kernel_d, cfg.kernel_t, pairwise, &Compute::serial())
         .expect("valid pairwise configuration");
     let mut q = op.explicit_dense();
     q.add_diag(cfg.lambda);
@@ -361,7 +392,7 @@ mod tests {
         let train = toy_train(400, 8, 7, 25);
         let cfg = RidgeConfig { lambda: 0.5, iterations: 500, tol: 1e-12, ..Default::default() };
         let model = KronRidge::new(cfg).fit(&train).unwrap();
-        let exact = ridge_exact_dual(&train, &cfg);
+        let exact = ridge_exact_dual(&train, &cfg, PairwiseKernelKind::Kronecker);
         assert_allclose(&model.dual_coef, &exact, 1e-6, 1e-6);
     }
 
@@ -395,11 +426,10 @@ mod tests {
                 kernel_t: KernelKind::Gaussian { gamma: 0.4 },
                 iterations: 800,
                 tol: 1e-13,
-                pairwise,
                 ..Default::default()
             };
-            let model = KronRidge::new(cfg).fit(&train).unwrap();
-            let exact = ridge_exact_dual(&train, &cfg);
+            let model = KronRidge::new(cfg).with_pairwise(pairwise).fit(&train).unwrap();
+            let exact = ridge_exact_dual(&train, &cfg, pairwise);
             assert_allclose(&model.dual_coef, &exact, 1e-6, 1e-6);
         }
     }
@@ -408,21 +438,22 @@ mod tests {
     fn symmetric_rejects_heterogeneous_feature_spaces() {
         // toy_train carries 3-d start and 2-d end features — no shared domain.
         let train = toy_train(421, 6, 6, 20);
-        let cfg = RidgeConfig {
-            pairwise: crate::gvt::PairwiseKernelKind::SymmetricKron,
-            ..Default::default()
-        };
-        let err = KronRidge::new(cfg).fit(&train).unwrap_err();
+        let err = KronRidge::new(RidgeConfig::default())
+            .with_pairwise(crate::gvt::PairwiseKernelKind::SymmetricKron)
+            .fit(&train)
+            .unwrap_err();
         assert!(err.contains("feature space"), "{err}");
         // mismatched kernels over a shared space are rejected too
         let homo = toy_homogeneous(422, 6, 18);
         let cfg = RidgeConfig {
             kernel_d: KernelKind::Gaussian { gamma: 1.0 },
             kernel_t: KernelKind::Linear,
-            pairwise: crate::gvt::PairwiseKernelKind::SymmetricKron,
             ..Default::default()
         };
-        assert!(KronRidge::new(cfg).fit(&homo).is_err());
+        assert!(KronRidge::new(cfg)
+            .with_pairwise(crate::gvt::PairwiseKernelKind::SymmetricKron)
+            .fit(&homo)
+            .is_err());
     }
 
     #[test]
@@ -508,7 +539,11 @@ mod tests {
         let models = KronRidge::new(cfg).fit_path(&train, &lambdas).unwrap();
         assert_eq!(models.len(), lambdas.len());
         for (model, &lambda) in models.iter().zip(&lambdas) {
-            let exact = ridge_exact_dual(&train, &RidgeConfig { lambda, ..cfg });
+            let exact = ridge_exact_dual(
+                &train,
+                &RidgeConfig { lambda, ..cfg },
+                PairwiseKernelKind::Kronecker,
+            );
             assert_allclose(&model.dual_coef, &exact, 1e-6, 1e-6);
         }
     }
@@ -519,8 +554,10 @@ mod tests {
         let lambdas = [0.5, 2.0];
         let base = RidgeConfig { iterations: 25, tol: 1e-12, ..Default::default() };
         let serial = KronRidge::new(base).fit_path(&train, &lambdas).unwrap();
-        let par =
-            KronRidge::new(RidgeConfig { threads: 4, ..base }).fit_path(&train, &lambdas).unwrap();
+        let par = KronRidge::new(base)
+            .with_compute(crate::api::Compute::threads(4))
+            .fit_path(&train, &lambdas)
+            .unwrap();
         for (s, p) in serial.iter().zip(&par) {
             assert_eq!(s.dual_coef, p.dual_coef);
         }
@@ -543,7 +580,10 @@ mod tests {
         let base = RidgeConfig { lambda: 0.3, iterations: 40, tol: 1e-12, ..Default::default() };
         let serial = KronRidge::new(base).fit(&train).unwrap();
         for threads in [2, 4] {
-            let par = KronRidge::new(RidgeConfig { threads, ..base }).fit(&train).unwrap();
+            let par = KronRidge::new(base)
+                .with_compute(crate::api::Compute::threads(threads))
+                .fit(&train)
+                .unwrap();
             assert_eq!(serial.dual_coef, par.dual_coef, "threads={threads}");
         }
     }

@@ -11,6 +11,7 @@
 //! Matvecs skip zero coefficients, so as the model becomes sparse the
 //! per-iteration cost falls toward `O(min(q‖a‖₀ + m|S|, m‖a‖₀ + q|S|))`.
 
+use crate::api::Compute;
 use crate::data::Dataset;
 use crate::eval::auc::auc;
 use crate::gvt::operator::SvmNewtonOp;
@@ -48,12 +49,6 @@ pub struct SvmConfig {
     /// each Newton step (inactive coordinates converge to 0; truncated inner
     /// solves leave numerical dust that would defeat the sparse shortcut).
     pub sparsity_threshold: f64,
-    /// Worker threads per GVT matvec (`0` = all cores, `1` = serial).
-    /// Results are bitwise identical for every thread count.
-    pub threads: usize,
-    /// Pairwise kernel family composed over the GVT engine
-    /// (`Kronecker` reproduces the pre-family behavior bit for bit).
-    pub pairwise: PairwiseKernelKind,
 }
 
 impl Default for SvmConfig {
@@ -68,23 +63,49 @@ impl Default for SvmConfig {
             trace: false,
             patience: 0,
             sparsity_threshold: 1e-12,
-            threads: 1,
-            pairwise: PairwiseKernelKind::Kronecker,
         }
     }
 }
 
 /// Kronecker L2-SVM trainer.
+///
+/// Method-specific knobs live in [`SvmConfig`]; the pairwise kernel family
+/// and the execution policy are set with [`KronSvm::with_pairwise`] /
+/// [`KronSvm::with_compute`] (or through the
+/// [`Learner`](crate::api::Learner) builder).
 #[derive(Debug, Clone)]
 pub struct KronSvm {
     /// Training configuration.
     pub cfg: SvmConfig,
+    /// Pairwise kernel family composed over the GVT engine.
+    pub pairwise: PairwiseKernelKind,
+    /// Execution policy (threads, workspace retention); transparent to
+    /// results.
+    pub compute: Compute,
 }
 
 impl KronSvm {
-    /// Trainer with the given configuration.
+    /// Trainer with the given configuration, the Kronecker pairwise family,
+    /// and the default (serial) execution policy.
     pub fn new(cfg: SvmConfig) -> Self {
-        KronSvm { cfg }
+        KronSvm {
+            cfg,
+            pairwise: PairwiseKernelKind::Kronecker,
+            compute: Compute::default(),
+        }
+    }
+
+    /// Select the pairwise kernel family composed over the GVT engine.
+    pub fn with_pairwise(mut self, pairwise: PairwiseKernelKind) -> Self {
+        self.pairwise = pairwise;
+        self
+    }
+
+    /// Set the execution policy (threads, workspace retention). Results are
+    /// bitwise identical for every policy.
+    pub fn with_compute(mut self, compute: Compute) -> Self {
+        self.compute = compute;
+        self
     }
 
     /// Train the dual model.
@@ -113,8 +134,8 @@ impl KronSvm {
             train,
             self.cfg.kernel_d,
             self.cfg.kernel_t,
-            self.cfg.pairwise,
-            self.cfg.threads,
+            self.pairwise,
+            &self.compute,
         )?;
         let val_op = val
             .map(|v| {
@@ -123,8 +144,8 @@ impl KronSvm {
                     v,
                     self.cfg.kernel_d,
                     self.cfg.kernel_t,
-                    self.cfg.pairwise,
-                    self.cfg.threads,
+                    self.pairwise,
+                    &self.compute,
                 )
             })
             .transpose()?;
@@ -180,7 +201,7 @@ impl KronSvm {
             train_idx: train.kron_index(),
             kernel_d: self.cfg.kernel_d,
             kernel_t: self.cfg.kernel_t,
-            pairwise: self.cfg.pairwise,
+            pairwise: self.pairwise,
         };
         Ok((model, trace))
     }
@@ -197,10 +218,10 @@ impl KronSvm {
         if n == 0 {
             return Err("empty training set".into());
         }
-        if self.cfg.pairwise != PairwiseKernelKind::Kronecker {
+        if self.pairwise != PairwiseKernelKind::Kronecker {
             return Err(format!(
                 "the primal path supports the Kronecker pairwise kernel only (got '{}')",
-                self.cfg.pairwise.name()
+                self.pairwise.name()
             ));
         }
         let timer = Timer::start();
@@ -312,7 +333,14 @@ mod tests {
             ..Default::default()
         };
         let model = KronSvm::new(cfg).fit(&train).unwrap();
-        let op = dual_kernel_op(&train, cfg.kernel_d, cfg.kernel_t, cfg.pairwise, 1).unwrap();
+        let op = dual_kernel_op(
+            &train,
+            cfg.kernel_d,
+            cfg.kernel_t,
+            crate::gvt::PairwiseKernelKind::Kronecker,
+            &Compute::serial(),
+        )
+        .unwrap();
         let p = op.apply_vec(&model.dual_coef);
         let mask = L2SvmLoss::active_mask(&p, &train.labels);
         let resid: Vec<f64> = (0..30)
@@ -389,7 +417,10 @@ mod tests {
         let train = toy_train(505, 35, 35, 2200);
         let base = SvmConfig { lambda: 0.1, outer_iters: 5, inner_iters: 8, ..Default::default() };
         let serial = KronSvm::new(base).fit(&train).unwrap();
-        let par = KronSvm::new(SvmConfig { threads: 4, ..base }).fit(&train).unwrap();
+        let par = KronSvm::new(base)
+            .with_compute(Compute::threads(4))
+            .fit(&train)
+            .unwrap();
         assert_eq!(serial.dual_coef, par.dual_coef);
     }
 

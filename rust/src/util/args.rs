@@ -1,7 +1,11 @@
 //! Minimal command-line argument parsing (clap is not available offline).
 //!
 //! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
-//! arguments, which covers every binary in this crate.
+//! arguments, which covers every binary in this crate. Typed getters return
+//! a clear error on unparsable input (`--threads foo` fails loudly instead
+//! of silently falling back to the default), and [`Args::expect_known`]
+//! rejects flags a subcommand does not understand, so typos like `--lamda`
+//! cannot be ignored.
 
 use std::collections::BTreeMap;
 
@@ -60,29 +64,66 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
-    /// `usize` value of `--key`, or `default` (also on parse failure).
-    pub fn get_usize(&self, key: &str, default: usize) -> usize {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
-    }
-
-    /// `u64` value of `--key`, or `default` (also on parse failure).
-    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
-    }
-
-    /// `f64` value of `--key`, or `default` (also on parse failure).
-    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
-    }
-
-    /// Boolean value of `--key` (`true|1|yes` / `false|0|no`), or `default`.
-    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+    /// `usize` value of `--key`, or `default` when absent. Unparsable input
+    /// is an **error**, never a silent fallback.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
         match self.get(key) {
-            Some("true") | Some("1") | Some("yes") => true,
-            Some("false") | Some("0") | Some("no") => false,
-            Some(_) => default,
-            None => default,
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected a non-negative integer, got '{v}'")),
         }
+    }
+
+    /// `u64` value of `--key`, or `default` when absent. Unparsable input is
+    /// an **error**, never a silent fallback.
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected a non-negative integer, got '{v}'")),
+        }
+    }
+
+    /// `f64` value of `--key`, or `default` when absent. Unparsable input is
+    /// an **error**, never a silent fallback.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| format!("--{key}: expected a number, got '{v}'"))
+            }
+        }
+    }
+
+    /// Boolean value of `--key` (`true|1|yes` / `false|0|no`), or `default`
+    /// when absent. Anything else is an **error**.
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(format!("--{key}: expected true/false, got '{v}'")),
+        }
+    }
+
+    /// Reject any flag not in `allowed` — per-subcommand strictness, so a
+    /// typo like `--lamda 0.1` fails loudly instead of being ignored.
+    /// `context` names the subcommand for the error message.
+    pub fn expect_known(&self, context: &str, allowed: &[&str]) -> Result<(), String> {
+        for key in self.flags.keys() {
+            if !allowed.contains(&key.as_str()) {
+                let mut known: Vec<String> =
+                    allowed.iter().map(|a| format!("--{a}")).collect();
+                known.sort();
+                return Err(format!(
+                    "unknown flag --{key} for `{context}` (known flags: {})",
+                    known.join(", ")
+                ));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -97,8 +138,8 @@ mod tests {
     #[test]
     fn key_value_pairs() {
         let a = parse(&["--m", "100", "--lambda=0.5", "train"]);
-        assert_eq!(a.get_usize("m", 0), 100);
-        assert_eq!(a.get_f64("lambda", 0.0), 0.5);
+        assert_eq!(a.get_usize("m", 0).unwrap(), 100);
+        assert_eq!(a.get_f64("lambda", 0.0).unwrap(), 0.5);
         assert_eq!(a.positional, vec!["train"]);
     }
 
@@ -106,9 +147,9 @@ mod tests {
     fn bool_flags() {
         let a = parse(&["--verbose", "--quiet", "--x", "1"]);
         assert!(a.has("verbose"));
-        assert!(a.get_bool("verbose", false));
+        assert!(a.get_bool("verbose", false).unwrap());
         assert!(a.has("quiet"));
-        assert_eq!(a.get_usize("x", 0), 1);
+        assert_eq!(a.get_usize("x", 0).unwrap(), 1);
     }
 
     #[test]
@@ -121,14 +162,41 @@ mod tests {
     #[test]
     fn defaults() {
         let a = parse(&[]);
-        assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
         assert_eq!(a.get_str("name", "dflt"), "dflt");
-        assert!(!a.get_bool("flag", false));
+        assert!(!a.get_bool("flag", false).unwrap());
+        assert_eq!(a.get_u64("seed", 42).unwrap(), 42);
+        assert_eq!(a.get_f64("lambda", 0.25).unwrap(), 0.25);
     }
 
     #[test]
     fn negative_number_values() {
         let a = parse(&["--lambda=-0.5"]);
-        assert_eq!(a.get_f64("lambda", 0.0), -0.5);
+        assert_eq!(a.get_f64("lambda", 0.0).unwrap(), -0.5);
+    }
+
+    #[test]
+    fn unparsable_values_error_instead_of_defaulting() {
+        // regression: `--threads foo` used to silently fall back to the
+        // default, hiding the typo from the user
+        let a = parse(&["--threads", "foo", "--lambda", "abc", "--seed=1.5", "--v", "maybe"]);
+        let err = a.get_usize("threads", 1).unwrap_err();
+        assert!(err.contains("--threads") && err.contains("foo"), "{err}");
+        let err = a.get_f64("lambda", 1.0).unwrap_err();
+        assert!(err.contains("--lambda") && err.contains("abc"), "{err}");
+        assert!(a.get_u64("seed", 1).is_err(), "1.5 is not a u64");
+        assert!(a.get_bool("v", false).is_err());
+        // negative values are invalid for the unsigned getters
+        assert!(parse(&["--n=-3"]).get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_per_subcommand() {
+        let a = parse(&["--lamda", "0.1", "--seed", "3"]);
+        let err = a.expect_known("train", &["lambda", "seed"]).unwrap_err();
+        assert!(err.contains("--lamda") && err.contains("train"), "{err}");
+        assert!(err.contains("--lambda"), "error lists the known flags: {err}");
+        assert!(parse(&["--seed", "3"]).expect_known("train", &["lambda", "seed"]).is_ok());
+        assert!(parse(&[]).expect_known("train", &[]).is_ok());
     }
 }

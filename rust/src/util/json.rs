@@ -98,6 +98,59 @@ impl Json {
     pub fn num_arr(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
+
+    /// Allocation-free scan for any non-finite number — the fast path of
+    /// [`Json::dump`]; the path-building pass below runs only on failure.
+    fn has_non_finite(&self) -> bool {
+        match self {
+            Json::Num(n) => !n.is_finite(),
+            Json::Arr(items) => items.iter().any(Json::has_non_finite),
+            Json::Obj(map) => map.values().any(Json::has_non_finite),
+            _ => false,
+        }
+    }
+
+    /// Path of the first non-finite number in the tree (`"a.b[3]"`), if any.
+    fn first_non_finite(&self, path: &str) -> Option<String> {
+        match self {
+            Json::Num(n) if !n.is_finite() => Some(if path.is_empty() {
+                "<root>".to_string()
+            } else {
+                path.to_string()
+            }),
+            Json::Arr(items) => items
+                .iter()
+                .enumerate()
+                .find_map(|(i, v)| v.first_non_finite(&format!("{path}[{i}]"))),
+            Json::Obj(map) => map.iter().find_map(|(k, v)| {
+                let sub = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                v.first_non_finite(&sub)
+            }),
+            _ => None,
+        }
+    }
+
+    /// Serialize to a JSON string, **rejecting non-finite numbers**: JSON has
+    /// no `NaN`/`Infinity` tokens, so a tree containing one cannot be written
+    /// faithfully — this returns an error naming the offending path instead
+    /// of silently emitting a lossy placeholder.
+    ///
+    /// Finite numbers use shortest-round-trip decimal formatting (Rust's
+    /// `Display` for `f64`, plus an exact-integer fast path and a `-0`
+    /// special case), so `Json::parse(&v.dump()?)` reproduces every `f64`
+    /// **bit for bit** — the property the `kronvt-model/v1` artifacts rely
+    /// on.
+    pub fn dump(&self) -> Result<String, String> {
+        if self.has_non_finite() {
+            let path = self
+                .first_non_finite("")
+                .expect("non-finite number located by the fast scan");
+            return Err(format!(
+                "cannot serialize non-finite number at '{path}' (JSON has no NaN/inf)"
+            ));
+        }
+        Ok(self.to_string())
+    }
 }
 
 /// Read–modify–write one section of a `BENCH_*.json` results file (the
@@ -113,7 +166,10 @@ pub fn update_json_file(path: &std::path::Path, key: &str, value: Json) -> std::
         .and_then(|json| json.as_obj().cloned())
         .unwrap_or_default();
     root.insert(key.to_string(), value);
-    std::fs::write(path, format!("{}\n", Json::Obj(root)))
+    let text = Json::Obj(root)
+        .dump()
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+    std::fs::write(path, format!("{text}\n"))
 }
 
 impl From<f64> for Json {
@@ -312,9 +368,20 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // NaN/±inf are not valid JSON; `Display` cannot fail, so
+                    // degrade to `null` here — [`Json::dump`] rejects these
+                    // trees up front with a proper error.
+                    write!(f, "null")
+                } else if *n == 0.0 && n.is_sign_negative() {
+                    // the exact-integer fast path would lose the sign of -0.0
+                    // (`-0.0 as i64 == 0`), breaking bit-exact round-trips
+                    write!(f, "-0")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     write!(f, "{}", *n as i64)
                 } else {
+                    // Rust's float Display is shortest-round-trip: the parser
+                    // recovers the identical bit pattern
                     write!(f, "{n}")
                 }
             }
@@ -434,5 +501,55 @@ mod tests {
     fn integer_formatting() {
         assert_eq!(Json::Num(3.0).to_string(), "3");
         assert_eq!(Json::Num(3.5).to_string(), "3.5");
+    }
+
+    #[test]
+    fn dump_rejects_non_finite_numbers_with_path() {
+        let err = Json::Num(f64::NAN).dump().unwrap_err();
+        assert!(err.contains("<root>"), "{err}");
+        let nested = Json::obj(vec![(
+            "coef",
+            Json::Arr(vec![Json::Num(1.0), Json::Num(f64::INFINITY)]),
+        )]);
+        let err = nested.dump().unwrap_err();
+        assert!(err.contains("coef[1]"), "{err}");
+        assert!(Json::Num(f64::NEG_INFINITY).dump().is_err());
+        // Display never emits an invalid bare token either
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        // finite trees dump exactly like Display
+        let fine = Json::obj(vec![("x", Json::Num(0.1))]);
+        assert_eq!(fine.dump().unwrap(), fine.to_string());
+    }
+
+    #[test]
+    fn float_formatting_round_trips_bitwise() {
+        // shortest-round-trip property on awkward values, including -0.0,
+        // subnormals, and values near the integer fast-path boundary
+        for &x in &[
+            0.1,
+            -0.0,
+            1.0 / 3.0,
+            2f64.powi(-1074), // smallest subnormal
+            f64::MAX,
+            f64::MIN_POSITIVE,
+            1e15 - 1.0,
+            1e15,
+            -123456.789e-300,
+            std::f64::consts::PI,
+        ] {
+            let text = Json::Num(x).to_string();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x:?} -> {text} -> {back:?}");
+        }
+        assert_eq!(Json::Num(-0.0).to_string(), "-0");
+    }
+
+    #[test]
+    fn update_json_file_refuses_non_finite() {
+        let path = std::env::temp_dir().join("kronvt_json_nonfinite_test.json");
+        let _ = std::fs::remove_file(&path);
+        let err = update_json_file(&path, "bad", Json::Num(f64::NAN)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(!path.exists(), "nothing may be written on error");
     }
 }

@@ -244,6 +244,7 @@ fn lambda_path_training_and_batched_prediction_match_singles() {
         let exact = kronvt::train::ridge::ridge_exact_dual(
             &train,
             &RidgeConfig { lambda: lambdas[j], ..cfg },
+            kronvt::gvt::PairwiseKernelKind::Kronecker,
         );
         kronvt::linalg::vecops::assert_allclose(&model.dual_coef, &exact, 1e-6, 1e-6);
     }

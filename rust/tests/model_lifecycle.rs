@@ -1,0 +1,347 @@
+//! Model-persistence integration tests: the **fit → save → load → serve**
+//! lifecycle must reproduce the in-memory model's predictions **bit for
+//! bit** across every pairwise family, ridge and SVM, serial and threaded
+//! execution — plus rejection of corrupted and over-versioned artifacts,
+//! and a genuine fresh-process round trip through the CLI binary
+//! (`train --save` → `predict --model`).
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use kronvt::api::{Compute, Estimator, Learner, NewtonLoss, TrainedModel};
+use kronvt::data::checkerboard::{CheckerboardConfig, HomogeneousConfig};
+use kronvt::data::Dataset;
+use kronvt::gvt::PairwiseKernelKind;
+use kronvt::kernels::KernelKind;
+
+fn hetero_data() -> Dataset {
+    CheckerboardConfig {
+        m: 30,
+        q: 30,
+        density: 0.35,
+        noise: 0.15,
+        feature_range: 8.0,
+        seed: 71,
+    }
+    .generate()
+}
+
+fn homo_data() -> Dataset {
+    HomogeneousConfig { vertices: 26, density: 0.4, noise: 0.15, feature_range: 6.0, seed: 72 }
+        .generate()
+}
+
+/// Unique temp path per test (tests run concurrently in one process).
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("kronvt_lifecycle_{tag}_{}.json", std::process::id()))
+}
+
+fn save_load(model: &TrainedModel, tag: &str) -> TrainedModel {
+    let path = temp_path(tag);
+    model.save(&path).expect("save");
+    let loaded = TrainedModel::load(&path).expect("load");
+    std::fs::remove_file(&path).ok();
+    loaded
+}
+
+/// The core acceptance matrix: all four pairwise families × {ridge, svm} ×
+/// threads {1, 4}, each asserting the loaded model scores a batch bitwise
+/// identically to the in-memory model.
+#[test]
+fn save_load_predict_is_bitwise_across_families_methods_threads() {
+    let kernel = KernelKind::Gaussian { gamma: 0.8 };
+    for pairwise in [
+        PairwiseKernelKind::Kronecker,
+        PairwiseKernelKind::SymmetricKron,
+        PairwiseKernelKind::AntiSymmetricKron,
+        PairwiseKernelKind::Cartesian,
+    ] {
+        // symmetric / anti-symmetric / Cartesian need one shared vertex
+        // domain; Kronecker exercises the heterogeneous shape.
+        let data = if pairwise == PairwiseKernelKind::Kronecker {
+            hetero_data()
+        } else {
+            homo_data()
+        };
+        let (train, zero_shot) = data.zero_shot_split(0.3, 5);
+        // The Cartesian δ does not extend to novel vertices (zero-shot
+        // scores are identically 0), so score the training edges themselves
+        // — a non-trivial in-sample batch — for that family.
+        let test = if pairwise == PairwiseKernelKind::Cartesian {
+            Dataset { labels: vec![0.0; train.n_edges()], ..train.clone() }
+        } else {
+            zero_shot
+        };
+        for threads in [1usize, 4] {
+            let compute = Compute::threads(threads);
+            for method in ["ridge", "svm"] {
+                let learner = match method {
+                    "ridge" => Learner::ridge().iterations(40),
+                    _ => Learner::svm().iterations(8).inner_iterations(8),
+                }
+                .lambda(2f64.powi(-5))
+                .kernel(kernel)
+                .pairwise(pairwise)
+                .compute(compute);
+                let model = learner.fit(&train).unwrap_or_else(|e| {
+                    panic!("{method}/{pairwise:?}/t{threads}: {e}")
+                });
+                let scores = model.predict_batch(&test, &compute);
+                let loaded =
+                    save_load(&model, &format!("{method}_{}_{threads}", pairwise.name()));
+                // parameters round-trip bitwise...
+                assert_eq!(
+                    model.as_dual().unwrap().dual_coef,
+                    loaded.as_dual().unwrap().dual_coef,
+                    "{method}/{pairwise:?}/t{threads}: duals"
+                );
+                assert_eq!(model.lambda().to_bits(), loaded.lambda().to_bits());
+                // ...and so do the scores, threaded or serial
+                assert_eq!(
+                    scores,
+                    loaded.predict_batch(&test, &compute),
+                    "{method}/{pairwise:?}/t{threads}: scores"
+                );
+            }
+        }
+    }
+}
+
+/// The Estimator trait is the generic entry point; the Newton learner and
+/// the primal path flow through the same TrainedModel + artifact.
+#[test]
+fn newton_and_primal_models_round_trip() {
+    let (train, test) = hetero_data().zero_shot_split(0.3, 9);
+    // generic truncated Newton (logistic), dual
+    let newton: &dyn Estimator =
+        &Learner::newton(NewtonLoss::Logistic).lambda(0.1).iterations(6).inner_iterations(10);
+    let model = newton.fit(&train).unwrap();
+    let loaded = save_load(&model, "newton_logistic");
+    assert_eq!(model.predict(&test), loaded.predict(&test));
+    // primal ridge (linear kernels)
+    let primal = Learner::ridge().lambda(1.0).iterations(60).primal(true).fit(&train).unwrap();
+    assert_eq!(primal.kind_name(), "primal");
+    let loaded = save_load(&primal, "primal_ridge");
+    assert_eq!(primal.as_primal().unwrap().w, loaded.as_primal().unwrap().w);
+    assert_eq!(primal.predict(&test), loaded.predict(&test));
+}
+
+/// The multi-λ path produces one artifact-capable model per λ, each
+/// round-tripping bitwise.
+#[test]
+fn fit_path_models_round_trip() {
+    let (train, test) = hetero_data().zero_shot_split(0.3, 11);
+    let lambdas = [0.25, 4.0];
+    let models = Learner::ridge()
+        .iterations(60)
+        .kernel(KernelKind::Gaussian { gamma: 0.5 })
+        .fit_path(&train, &lambdas)
+        .unwrap();
+    assert_eq!(models.len(), 2);
+    for (j, model) in models.iter().enumerate() {
+        assert_eq!(model.lambda(), lambdas[j]);
+        let loaded = save_load(model, &format!("path_{j}"));
+        assert_eq!(model.predict(&test), loaded.predict(&test), "λ={}", lambdas[j]);
+    }
+}
+
+/// A loaded model serves through the full context/server pipeline with the
+/// same scores the in-memory model produces.
+#[test]
+fn loaded_model_serves_through_context() {
+    let (train, test) = hetero_data().zero_shot_split(0.3, 13);
+    let model = Learner::ridge()
+        .lambda(2f64.powi(-5))
+        .kernel(KernelKind::Gaussian { gamma: 0.8 })
+        .iterations(40)
+        .fit(&train)
+        .unwrap();
+    let direct = model.predict(&test);
+    let loaded = save_load(&model, "serve_ctx");
+    let ctx = loaded
+        .into_context(&Compute::threads(2).with_cache_vertices(64))
+        .expect("dual context");
+    // ridge leaves no explicit zero duals → pruning is a no-op → bitwise
+    assert_eq!(ctx.predict_batch(&test), direct, "cold");
+    assert_eq!(ctx.predict_batch(&test), direct, "warm (cache hits change no bits)");
+}
+
+#[test]
+fn corrupted_and_over_versioned_artifacts_are_rejected() {
+    let (train, _) = hetero_data().zero_shot_split(0.3, 17);
+    let model = Learner::ridge().iterations(10).fit(&train).unwrap();
+    let path = temp_path("reject");
+    model.save(&path).expect("save");
+    let good = std::fs::read_to_string(&path).unwrap();
+
+    // truncated / garbage JSON
+    std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+    assert!(TrainedModel::load(&path).is_err(), "truncated artifact must fail");
+    std::fs::write(&path, "not json at all").unwrap();
+    assert!(TrainedModel::load(&path).is_err(), "garbage must fail");
+
+    // over-versioned format tag → explicit version error
+    std::fs::write(&path, good.replace("kronvt-model/v1", "kronvt-model/v9")).unwrap();
+    let err = TrainedModel::load(&path).unwrap_err();
+    assert!(
+        err.contains("kronvt-model/v9") && err.contains("kronvt-model/v1"),
+        "version mismatch must name both versions: {err}"
+    );
+
+    // schema violation: duals shorter than the edge index
+    std::fs::write(
+        &path,
+        {
+            let json = kronvt::util::json::Json::parse(&good).unwrap();
+            let mut obj = json.as_obj().unwrap().clone();
+            obj.insert("dual_coef".into(), kronvt::util::json::Json::num_arr(&[1.0]));
+            kronvt::util::json::Json::Obj(obj).to_string()
+        },
+    )
+    .unwrap();
+    assert!(TrainedModel::load(&path).is_err(), "coefficient/index mismatch must fail");
+
+    // missing file
+    std::fs::remove_file(&path).ok();
+    assert!(TrainedModel::load(&path).is_err());
+}
+
+#[test]
+fn non_finite_models_refuse_to_save() {
+    let (train, _) = hetero_data().zero_shot_split(0.3, 19);
+    let model = Learner::ridge().iterations(10).fit(&train).unwrap();
+    let mut dual = model.as_dual().unwrap().clone();
+    dual.dual_coef[0] = f64::NAN;
+    let broken = TrainedModel::from_dual(dual, model.lambda());
+    let path = temp_path("nonfinite");
+    let err = broken.save(&path).unwrap_err();
+    assert!(err.contains("dual_coef"), "{err}");
+    assert!(!path.exists(), "nothing may be written for a non-finite model");
+}
+
+/// The real acceptance path: a **fresh process** (the CLI binary) loads what
+/// another process saved and reproduces the training process's test scores
+/// bitwise — asserted by comparing the shortest-round-trip `score_sum`
+/// lines, which match iff the floats match bit for bit.
+#[test]
+fn cli_train_save_predict_round_trip_is_bitwise_across_processes() {
+    let exe = env!("CARGO_BIN_EXE_kronvt");
+    let model_path = temp_path("cli");
+    let common = [
+        "--data",
+        "checker",
+        "--scale",
+        "0.04",
+        "--seed",
+        "3",
+        "--test-frac",
+        "0.25",
+    ];
+
+    let train_out = Command::new(exe)
+        .arg("train")
+        .args(common)
+        .args(["--method", "kronridge", "--kernel", "gaussian:1", "--lambda", "0.0078125"])
+        .args(["--save", model_path.to_str().unwrap()])
+        .output()
+        .expect("run kronvt train");
+    assert!(
+        train_out.status.success(),
+        "train failed: {}",
+        String::from_utf8_lossy(&train_out.stderr)
+    );
+    let train_stdout = String::from_utf8_lossy(&train_out.stdout).to_string();
+    let train_sum = extract_score_sum(&train_stdout);
+
+    let predict_out = Command::new(exe)
+        .arg("predict")
+        .args(common)
+        .args(["--model", model_path.to_str().unwrap()])
+        .output()
+        .expect("run kronvt predict");
+    assert!(
+        predict_out.status.success(),
+        "predict failed: {}",
+        String::from_utf8_lossy(&predict_out.stderr)
+    );
+    let predict_stdout = String::from_utf8_lossy(&predict_out.stdout).to_string();
+    let predict_sum = extract_score_sum(&predict_stdout);
+
+    assert_eq!(
+        train_sum, predict_sum,
+        "fresh-process scores diverged:\n--- train ---\n{train_stdout}\n--- predict ---\n{predict_stdout}"
+    );
+
+    // and the artifact serves without retraining
+    let serve_out = Command::new(exe)
+        .arg("serve")
+        .args(["--model", model_path.to_str().unwrap(), "--requests", "5", "--threads", "1"])
+        .output()
+        .expect("run kronvt serve");
+    assert!(
+        serve_out.status.success(),
+        "serve --model failed: {}",
+        String::from_utf8_lossy(&serve_out.stderr)
+    );
+    assert!(
+        String::from_utf8_lossy(&serve_out.stdout).contains("served 5 requests"),
+        "serve must answer without retraining"
+    );
+
+    // A dataset whose feature dimensions don't match the artifact is a clean
+    // CLI error (`error: ...`, exit 1), never an internal dimension panic.
+    let out = Command::new(exe)
+        .args(["predict", "--model", model_path.to_str().unwrap(), "--data", "gpcr"])
+        .output()
+        .expect("run kronvt predict");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("error:") && stderr.contains("features"),
+        "dim mismatch must be a clean error: {stderr}"
+    );
+
+    // Training-only flags are rejected with --model rather than silently
+    // losing to the artifact's own settings.
+    let out = Command::new(exe)
+        .args(["serve", "--model", model_path.to_str().unwrap(), "--lambda", "0.5"])
+        .output()
+        .expect("run kronvt serve");
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("--lambda"),
+        "dead flag must be named"
+    );
+
+    std::fs::remove_file(&model_path).ok();
+}
+
+/// Typos in CLI flags fail loudly (the util::args satellite, end to end).
+#[test]
+fn cli_rejects_unknown_flags_and_bad_values() {
+    let exe = env!("CARGO_BIN_EXE_kronvt");
+    let out = Command::new(exe)
+        .args(["train", "--lamda", "0.1"]) // typo
+        .output()
+        .expect("run kronvt");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--lamda"), "must name the unknown flag: {stderr}");
+
+    let out = Command::new(exe)
+        .args(["train", "--threads", "foo"])
+        .output()
+        .expect("run kronvt");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--threads"), "must name the bad flag: {stderr}");
+}
+
+fn extract_score_sum(stdout: &str) -> String {
+    stdout
+        .lines()
+        .find_map(|l| l.split("score_sum=").nth(1))
+        .unwrap_or_else(|| panic!("no score_sum line in output:\n{stdout}"))
+        .trim()
+        .to_string()
+}

@@ -7,6 +7,7 @@
 
 use std::sync::Arc;
 
+use kronvt::api::Compute;
 use kronvt::coordinator::{PredictServer, ServerConfig};
 use kronvt::data::checkerboard::HomogeneousConfig;
 use kronvt::data::Dataset;
@@ -265,10 +266,12 @@ fn symmetric_ridge_end_to_end_on_homogeneous_graph() {
         kernel_d: KernelKind::Gaussian { gamma: 1.0 },
         kernel_t: KernelKind::Gaussian { gamma: 1.0 },
         iterations: 100,
-        pairwise: PairwiseKernelKind::SymmetricKron,
         ..Default::default()
     };
-    let model = KronRidge::new(cfg).fit(&train).unwrap();
+    let model = KronRidge::new(cfg)
+        .with_pairwise(PairwiseKernelKind::SymmetricKron)
+        .fit(&train)
+        .unwrap();
     let scores = model.predict(&test);
     let test_auc = auc(&test.labels, &scores);
     assert!(test_auc.is_finite(), "AUC must be finite");
@@ -304,10 +307,12 @@ fn symmetric_svm_trains_and_serves() {
         kernel_t: KernelKind::Gaussian { gamma: 1.0 },
         outer_iters: 10,
         inner_iters: 10,
-        pairwise: PairwiseKernelKind::SymmetricKron,
         ..Default::default()
     };
-    let model = KronSvm::new(cfg).fit(&train).unwrap();
+    let model = KronSvm::new(cfg)
+        .with_pairwise(PairwiseKernelKind::SymmetricKron)
+        .fit(&train)
+        .unwrap();
     let test_auc = auc(&test.labels, &model.predict(&test));
     assert!(test_auc.is_finite() && test_auc > 0.55, "AUC={test_auc}");
 
@@ -315,7 +320,11 @@ fn symmetric_svm_trains_and_serves() {
     let direct_model = model.clone();
     let server = PredictServer::start(
         model,
-        ServerConfig { threads: 2, workers: 2, cache_vertices: 64, ..Default::default() },
+        ServerConfig {
+            workers: 2,
+            compute: Compute::threads(2).with_cache_vertices(64),
+            ..Default::default()
+        },
     );
     let mut rng = Pcg32::seeded(24);
     for round in 0..4 {
@@ -359,14 +368,19 @@ fn symmetric_fit_path_matches_exact_solutions() {
         kernel_t: KernelKind::Gaussian { gamma: 0.8 },
         iterations: 900,
         tol: 1e-13,
-        pairwise: PairwiseKernelKind::SymmetricKron,
         ..Default::default()
     };
-    let models = KronRidge::new(cfg).fit_path(&data, &lambdas).unwrap();
+    let models = KronRidge::new(cfg)
+        .with_pairwise(PairwiseKernelKind::SymmetricKron)
+        .fit_path(&data, &lambdas)
+        .unwrap();
     assert_eq!(models.len(), lambdas.len());
     for (model, &lambda) in models.iter().zip(&lambdas) {
-        let exact =
-            kronvt::train::ridge::ridge_exact_dual(&data, &RidgeConfig { lambda, ..cfg });
+        let exact = kronvt::train::ridge::ridge_exact_dual(
+            &data,
+            &RidgeConfig { lambda, ..cfg },
+            PairwiseKernelKind::SymmetricKron,
+        );
         assert_allclose(&model.dual_coef, &exact, 1e-5, 1e-5);
     }
     // batched prediction over the path agrees with per-model prediction
@@ -397,12 +411,18 @@ fn symmetric_threaded_training_matches_serial_bitwise() {
         kernel_t: KernelKind::Gaussian { gamma: 1.0 },
         iterations: 30,
         tol: 1e-12,
-        pairwise: PairwiseKernelKind::SymmetricKron,
         ..Default::default()
     };
-    let serial = KronRidge::new(base).fit(&data).unwrap();
+    let serial = KronRidge::new(base)
+        .with_pairwise(PairwiseKernelKind::SymmetricKron)
+        .fit(&data)
+        .unwrap();
     for threads in [2, 4] {
-        let par = KronRidge::new(RidgeConfig { threads, ..base }).fit(&data).unwrap();
+        let par = KronRidge::new(base)
+            .with_pairwise(PairwiseKernelKind::SymmetricKron)
+            .with_compute(Compute::threads(threads))
+            .fit(&data)
+            .unwrap();
         assert_eq!(serial.dual_coef, par.dual_coef, "threads={threads}");
     }
 }

@@ -6,6 +6,7 @@
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::channel;
 
+use kronvt::api::Compute;
 use kronvt::coordinator::{PredictRequest, PredictServer, ServerConfig};
 use kronvt::data::checkerboard::CheckerboardConfig;
 use kronvt::data::Dataset;
@@ -89,7 +90,11 @@ fn all_serving_configurations_are_bitwise_identical() {
     ] {
         let server = PredictServer::start(
             model.clone(),
-            ServerConfig { threads, workers, cache_vertices, ..Default::default() },
+            ServerConfig {
+                workers,
+                compute: Compute::threads(threads).with_cache_vertices(cache_vertices),
+                ..Default::default()
+            },
         );
         // submit one at a time → deterministic batch composition
         for round in 0..2 {
@@ -118,7 +123,10 @@ fn cache_hits_leave_scores_bitwise_unchanged() {
 
     let server = PredictServer::start(
         model,
-        ServerConfig { cache_vertices: 64, threads: 2, ..Default::default() },
+        ServerConfig {
+            compute: Compute::threads(2).with_cache_vertices(64),
+            ..Default::default()
+        },
     );
     for round in 0..5 {
         let got = server.predict_blocking(sf.clone(), ef.clone(), edges.clone()).unwrap();
@@ -144,7 +152,7 @@ fn eviction_pressure_never_corrupts_scores() {
         reqs.iter().map(|(sf, ef, e)| direct_predict(&model, sf, ef, e)).collect();
     let server = PredictServer::start(
         model,
-        ServerConfig { cache_vertices: 1, ..Default::default() },
+        ServerConfig { compute: Compute::serial().with_cache_vertices(1), ..Default::default() },
     );
     for round in 0..4 {
         for (i, (sf, ef, edges)) in reqs.iter().enumerate() {
@@ -164,10 +172,9 @@ fn mixed_traffic_under_sharded_pool() {
     let server = PredictServer::start(
         model.clone(),
         ServerConfig {
-            threads: 2,
             workers: 4,
-            cache_vertices: 32,
             max_batch_edges: 64,
+            compute: Compute::threads(2).with_cache_vertices(32),
             ..Default::default()
         },
     );
@@ -230,12 +237,10 @@ fn backpressure_burst_is_lossless() {
     let server = PredictServer::start(
         model,
         ServerConfig {
-            threads: 1,
             workers: 2,
             max_queue: 4,
             max_batch_edges: 32,
-            cache_vertices: 16,
-            ..Default::default()
+            compute: Compute::serial().with_cache_vertices(16),
         },
     );
     let mut rng = Pcg32::seeded(104);
