@@ -5,6 +5,8 @@
 #
 # bench_gvt_micro additionally covers the pairwise kernel family table
 # (BENCH_pairwise.json), so both --quick and --smoke refresh it.
+# bench_convergence writes the eigendecomposition fast-path comparison
+# (BENCH_eigen.json); in smoke mode only that JSON section runs (-- --smoke).
 #
 # Usage:
 #   ./bench.sh            # every bench target, quick mode
@@ -27,6 +29,8 @@ done
 
 if [[ "$SMOKE" == 1 ]]; then
     BENCHES=(bench_gemm bench_gvt_micro)
+    echo "==> cargo bench --bench bench_convergence -- --smoke"
+    cargo bench --bench bench_convergence -- --smoke
 else
     BENCHES=(
         bench_gemm

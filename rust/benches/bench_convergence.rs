@@ -10,11 +10,29 @@
 //! peaks within tens of iterations and then plateaus or degrades; more inner
 //! iterations reduce risk faster per outer step but do not reach better AUC.
 //!
-//! Run: `cargo bench --bench bench_convergence [-- ridge|svm10|svm100] [--full]`
+//! The run finishes with the **eigendecomposition fast-path comparison**
+//! (closed-form exact solve vs. plain CG vs. spectrally preconditioned CG on
+//! complete and near-complete checkerboards), written to `BENCH_eigen.json`
+//! (section `"eigen"`, see `docs/BENCHMARKS.md`). `-- --smoke` runs only
+//! that JSON-writing section (what `ci.sh` exercises).
+//!
+//! Run: `cargo bench --bench bench_convergence [-- ridge|svm10|svm100]
+//! [--full|--smoke]`
 
+use std::sync::Arc;
+
+use kronvt::data::checkerboard::CheckerboardConfig;
 use kronvt::data::dti;
-use kronvt::train::{KronRidge, KronSvm, RidgeConfig, SvmConfig};
+use kronvt::gvt::operator::RidgeSystemOp;
+use kronvt::gvt::{KronKernelOp, KronSpectralPrecond};
+use kronvt::kernels::KernelKind;
+use kronvt::linalg::eigh;
+use kronvt::linalg::solvers::{cg, pcg, SolverConfig};
+use kronvt::linalg::vecops::max_abs_diff;
+use kronvt::train::{KronRidge, KronSvm, RidgeConfig, RidgeSolver, SvmConfig};
 use kronvt::util::args::Args;
+use kronvt::util::json::{update_json_file, Json};
+use kronvt::util::timer::timeit;
 
 const LAMBDAS: [i32; 5] = [-10, -5, 0, 5, 10];
 const PRINT_ITERS: [usize; 8] = [1, 2, 5, 10, 20, 40, 70, 100];
@@ -56,12 +74,121 @@ fn print_trace(label: &str, lambda_exp: i32, trace: &kronvt::train::TrainTrace) 
     }
 }
 
+/// One eigen-comparison case: closed-form exact solve (complete graphs
+/// only), plain CG, and spectrally preconditioned CG on a checkerboard ridge
+/// system, reporting wall-clock, iteration counts, and max-abs solution
+/// differences.
+fn eigen_row(side: usize, density: f64, gamma: f64, lambda: f64, seed: u64) -> Json {
+    let train = CheckerboardConfig {
+        m: side,
+        q: side,
+        density,
+        noise: 0.1,
+        feature_range: 8.0,
+        seed,
+    }
+    .generate();
+    let kernel = KernelKind::Gaussian { gamma };
+    let g = kernel.square_matrix(&train.end_features);
+    let k = kernel.square_matrix(&train.start_features);
+    let idx = train.kron_index();
+    let n = idx.len();
+    let op = KronKernelOp::new(Arc::new(g.clone()), Arc::new(k.clone()), idx.clone());
+    let sys = RidgeSystemOp { op: &op, lambda };
+    let precond = KronSpectralPrecond::new(&eigh(&g), &eigh(&k), idx, lambda);
+    let cfg = SolverConfig { max_iters: 2000, tol: 1e-9 };
+
+    let mut x_cg = vec![0.0; n];
+    let (cg_stats, cg_secs) = timeit(|| cg(&sys, &train.labels, &mut x_cg, &cfg));
+    let mut x_pcg = vec![0.0; n];
+    let (pcg_stats, pcg_secs) = timeit(|| pcg(&sys, &train.labels, &mut x_pcg, &precond, &cfg));
+
+    // Closed form applies only when the graph is complete; its timing
+    // includes the kernel builds and both eigendecompositions (a whole fit).
+    let complete = density >= 1.0;
+    let (exact_secs, diff_exact_pcg, exact_desc) = if complete {
+        let ridge_cfg =
+            RidgeConfig { lambda, kernel_d: kernel, kernel_t: kernel, ..Default::default() };
+        let (model, secs) = timeit(|| {
+            KronRidge::new(ridge_cfg).with_solver(RidgeSolver::Exact).fit(&train).unwrap()
+        });
+        let diff = max_abs_diff(&model.dual_coef, &x_pcg);
+        (Json::from(secs), Json::from(diff), format!("{secs:.3}s (diff {diff:.2e})"))
+    } else {
+        (Json::Null, Json::Null, "n/a (incomplete graph)".to_string())
+    };
+
+    println!(
+        "eigen {side}x{side} density={density} n={n} lambda={lambda:.0e}: \
+         cg {} iters {cg_secs:.3}s | pcg {} iters {pcg_secs:.3}s | exact {exact_desc}",
+        cg_stats.iterations, pcg_stats.iterations
+    );
+    Json::obj(vec![
+        ("side", Json::from(side)),
+        ("density", Json::from(density)),
+        ("n_edges", Json::from(n)),
+        ("gamma", Json::from(gamma)),
+        ("lambda", Json::from(lambda)),
+        ("cg_iters", Json::from(cg_stats.iterations)),
+        ("cg_secs", Json::from(cg_secs)),
+        ("cg_converged", Json::from(cg_stats.converged)),
+        ("pcg_iters", Json::from(pcg_stats.iterations)),
+        ("pcg_secs", Json::from(pcg_secs)),
+        ("pcg_converged", Json::from(pcg_stats.converged)),
+        ("max_abs_diff_cg_pcg", Json::from(max_abs_diff(&x_cg, &x_pcg))),
+        ("exact_fit_secs", exact_secs),
+        ("max_abs_diff_exact_pcg", diff_exact_pcg),
+    ])
+}
+
+/// The eigendecomposition fast-path comparison: complete (closed form is
+/// exact, the preconditioner is the exact inverse) and near-complete
+/// (surrogate preconditioning) checkerboards, written to `BENCH_eigen.json`.
+fn run_eigen(smoke: bool, full: bool, seed: u64) {
+    println!("\n--- eigendecomposition fast paths: exact vs cg vs precond-cg ---");
+    let side = if smoke {
+        16
+    } else if full {
+        48
+    } else {
+        24
+    };
+    let rows = vec![
+        // Complete graph, moderate conditioning.
+        eigen_row(side, 1.0, 0.3, 1e-3, seed),
+        // Near-complete, ill-conditioned: the preconditioner's headline case.
+        eigen_row(side, 0.85, 0.02, 1e-4, seed),
+    ];
+    let host_threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let section = Json::obj(vec![
+        ("bench", Json::from("bench_convergence")),
+        ("host_threads", Json::from(host_threads)),
+        ("smoke", Json::from(smoke)),
+        ("full", Json::from(full)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let out =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_eigen.json");
+    match update_json_file(&out, "eigen", section) {
+        Ok(()) => println!("wrote eigen results to {}", out.display()),
+        Err(err) => eprintln!("failed to write {}: {err}", out.display()),
+    }
+}
+
 fn main() {
     let args = Args::parse();
-    args.expect_known("bench_convergence", &["bench", "full", "quick", "seed"]).expect("flags");
+    args.expect_known("bench_convergence", &["bench", "full", "quick", "seed", "smoke"])
+        .expect("flags");
     let full = args.has("full");
+    let smoke = args.has("smoke");
     let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let seed = args.get_u64("seed", 1).expect("--seed");
+
+    if smoke {
+        run_eigen(true, full, seed);
+        println!("\nbench_convergence done");
+        return;
+    }
 
     for (name, data) in datasets(full, seed) {
         // zero-shot train/test split in place of one CV fold (Fig. 2 block)
@@ -108,5 +235,7 @@ fn main() {
             }
         }
     }
+
+    run_eigen(false, full, seed);
     println!("\nbench_convergence done");
 }

@@ -19,7 +19,9 @@ use crate::data::Dataset;
 use crate::gvt::PairwiseKernelKind;
 use crate::kernels::KernelKind;
 use crate::losses::{L2SvmLoss, LogisticLoss, RankRlsLoss, RidgeLoss};
-use crate::train::{KronRidge, KronSvm, NewtonConfig, NewtonTrainer, RidgeConfig, SvmConfig};
+use crate::train::{
+    KronRidge, KronSvm, NewtonConfig, NewtonTrainer, RidgeConfig, RidgeSolver, SvmConfig,
+};
 
 /// Anything that trains a [`TrainedModel`] from a [`Dataset`] — the uniform
 /// estimator interface of the unified API. [`Learner`] is the crate's
@@ -94,6 +96,7 @@ pub struct Learner {
     patience: usize,
     primal: bool,
     pairwise: PairwiseKernelKind,
+    solver: RidgeSolver,
     compute: Compute,
 }
 
@@ -113,6 +116,7 @@ impl Learner {
             patience: 0,
             primal: false,
             pairwise: PairwiseKernelKind::Kronecker,
+            solver: RidgeSolver::Auto,
             compute: Compute::default(),
         }
     }
@@ -214,6 +218,15 @@ impl Learner {
         self
     }
 
+    /// Select the dual ridge solver (default [`RidgeSolver::Auto`], which
+    /// takes the closed-form eigendecomposition fast path on complete
+    /// training graphs and MINRES otherwise). Dual ridge only; other
+    /// learners ignore it.
+    pub fn solver(mut self, solver: RidgeSolver) -> Learner {
+        self.solver = solver;
+        self
+    }
+
     /// Set the execution policy (threads, workspace retention, cache
     /// sizing). Transparent to results — see [`Compute`].
     pub fn compute(mut self, compute: Compute) -> Learner {
@@ -271,6 +284,7 @@ impl Learner {
             Kind::Ridge => {
                 let trainer = KronRidge::new(self.ridge_cfg())
                     .with_pairwise(self.pairwise)
+                    .with_solver(self.solver)
                     .with_compute(self.compute);
                 if self.primal {
                     let (model, trace) = trainer.fit_primal(train, val)?;
@@ -340,6 +354,7 @@ impl Learner {
         }
         let trainer = KronRidge::new(self.ridge_cfg())
             .with_pairwise(self.pairwise)
+            .with_solver(self.solver)
             .with_compute(self.compute);
         let models = trainer.fit_path(train, lambdas)?;
         Ok(models

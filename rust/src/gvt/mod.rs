@@ -45,7 +45,7 @@ pub use algorithm::{
     gvt_apply, gvt_apply_into, gvt_apply_into_parallel, gvt_apply_multi_into, Branch, GvtWorkspace,
 };
 pub use engine::{EdgePlan, GvtEngine, WorkspacePool};
-pub use operator::{KronKernelOp, KronPredictOp, SvmNewtonOp};
+pub use operator::{KronKernelOp, KronPredictOp, KronSpectralPrecond, SvmNewtonOp};
 pub use pairwise::{delta_matrix, PairwiseKernelKind, PairwiseOp, PairwiseShared};
 pub use complexity::{branch_costs, choose_branch};
 
@@ -120,6 +120,35 @@ impl KronIndex {
             .map(|(&l, &r)| l as usize * dim_right + r as usize)
             .collect()
     }
+
+    /// If this index enumerates the **complete graph** `[0, dim_left) ×
+    /// [0, dim_right)` — every pair exactly once, in any order — return the
+    /// layout mapping each flat grid cell `left·dim_right + right` to the
+    /// edge position `h` that covers it. Otherwise (duplicates, missing
+    /// cells, out-of-bounds indices, or the wrong edge count) return `None`.
+    ///
+    /// A `Some` layout is exactly the condition under which `R` in
+    /// `Q = R(G⊗K)Rᵀ` is a permutation, which is what unlocks the
+    /// eigendecomposition fast paths in [`crate::train::ridge`].
+    pub fn complete_layout(&self, dim_left: usize, dim_right: usize) -> Option<Vec<u32>> {
+        let total = dim_left.checked_mul(dim_right)?;
+        if total == 0 || self.len() != total || total > u32::MAX as usize {
+            return None;
+        }
+        let mut layout = vec![u32::MAX; total];
+        for (h, (&l, &r)) in self.left.iter().zip(&self.right).enumerate() {
+            if l as usize >= dim_left || r as usize >= dim_right {
+                return None;
+            }
+            let pos = l as usize * dim_right + r as usize;
+            if layout[pos] != u32::MAX {
+                return None; // duplicate edge
+            }
+            layout[pos] = h as u32;
+        }
+        // len == total and no duplicates ⇒ every cell is covered (pigeonhole).
+        Some(layout)
+    }
 }
 
 #[cfg(test)]
@@ -141,5 +170,36 @@ mod tests {
     #[should_panic]
     fn mismatched_lengths_panic() {
         KronIndex::new(vec![0, 1], vec![0]);
+    }
+
+    #[test]
+    fn complete_layout_accepts_any_enumeration_order() {
+        // 2×3 grid enumerated in a scrambled order.
+        let idx = KronIndex::from_usize(&[1, 0, 0, 1, 0, 1], &[2, 0, 2, 1, 1, 0]);
+        let layout = idx.complete_layout(2, 3).expect("complete");
+        // layout[l*3 + r] = h such that (left[h], right[h]) = (l, r)
+        assert_eq!(layout, vec![1, 4, 2, 5, 3, 0]);
+        for (h, (&l, &r)) in idx.left.iter().zip(&idx.right).enumerate() {
+            assert_eq!(layout[l as usize * 3 + r as usize] as usize, h);
+        }
+    }
+
+    #[test]
+    fn complete_layout_rejects_incomplete_or_invalid_indices() {
+        // Duplicate edge (0,0) + missing (1,1).
+        let dup = KronIndex::from_usize(&[0, 0, 1, 0], &[0, 0, 0, 1]);
+        assert!(dup.complete_layout(2, 2).is_none());
+        // Wrong edge count.
+        let short = KronIndex::from_usize(&[0, 1], &[0, 1]);
+        assert!(short.complete_layout(2, 2).is_none());
+        // Out-of-bounds index.
+        let oob = KronIndex::from_usize(&[0, 0, 1, 5], &[0, 1, 0, 1]);
+        assert!(oob.complete_layout(2, 2).is_none());
+        // Empty grid is never "complete".
+        let empty = KronIndex::from_usize(&[], &[]);
+        assert!(empty.complete_layout(0, 0).is_none());
+        // Complete 2×2 sanity check.
+        let full = KronIndex::from_usize(&[0, 0, 1, 1], &[0, 1, 0, 1]);
+        assert_eq!(full.complete_layout(2, 2), Some(vec![0, 1, 2, 3]));
     }
 }

@@ -1,0 +1,409 @@
+//! Symmetric eigendecomposition `A = Q Λ Qᵀ` for dense kernel matrices.
+//!
+//! Classical two-stage dense route: Householder tridiagonalization with
+//! accumulated transformations (`tred2`) followed by implicit-shift QL
+//! iteration with eigenvector accumulation (`tql2`) — the EISPACK pair, which
+//! is deterministic, allocation-light, and zero-dependency like the rest of
+//! the crate. `O(n³)` over the *factor* matrices (`q×q` and `m×m`), never
+//! over the `n×n` pairwise kernel matrix.
+//!
+//! This powers the complete-graph fast paths of
+//! [`crate::train::ridge`]: the closed-form ridge solve, the Kronecker
+//! spectral preconditioner
+//! ([`KronSpectralPrecond`](crate::gvt::operator::KronSpectralPrecond)), and
+//! the leave-one-out shortcut — each consumes one [`eigh`] per kernel factor.
+//!
+//! Every decomposition bumps a thread-local counter ([`eigh_count`]) so tests
+//! can pin *how many* decompositions a fast path performs, not just that its
+//! numbers come out right.
+
+use std::cell::Cell;
+
+use crate::linalg::Matrix;
+
+thread_local! {
+    static EIGH_CALLS: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Number of [`eigh`] decompositions performed **by the calling thread** so
+/// far. Thread-local, so concurrently running tests cannot race each other's
+/// counts; read it before and after an operation and compare the delta (e.g.
+/// a whole-λ-grid [`fit_path`](crate::train::KronRidge::fit_path) on a
+/// complete graph must cost exactly two — one per kernel factor).
+pub fn eigh_count() -> usize {
+    EIGH_CALLS.with(|c| c.get())
+}
+
+/// A symmetric eigendecomposition `A = Q Λ Qᵀ`.
+#[derive(Debug, Clone)]
+pub struct EigH {
+    /// Eigenvalues in ascending order.
+    pub values: Vec<f64>,
+    /// Orthonormal eigenvectors, one per **column**: column `j` pairs with
+    /// `values[j]`.
+    pub vectors: Matrix,
+}
+
+impl EigH {
+    /// Rebuild `Q Λ Qᵀ` (testing helper; `≈ A` up to roundoff).
+    pub fn reconstruct(&self) -> Matrix {
+        let n = self.values.len();
+        let mut ql = Matrix::zeros(n, n);
+        for i in 0..n {
+            for (j, &lj) in self.values.iter().enumerate() {
+                ql.set(i, j, self.vectors.get(i, j) * lj);
+            }
+        }
+        ql.matmul_nt(&self.vectors)
+    }
+}
+
+/// Decompose a symmetric matrix into eigenvalues (ascending) and orthonormal
+/// eigenvectors. Only the values actually stored in `a` are read — the caller
+/// is responsible for symmetry (kernel matrices are symmetric by
+/// construction; [`Matrix::symmetrize`] is available otherwise). Deterministic:
+/// identical input bits give identical output bits on every call and thread
+/// count.
+///
+/// Panics if `a` is not square.
+pub fn eigh(a: &Matrix) -> EigH {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "eigh requires a square matrix");
+    EIGH_CALLS.with(|c| c.set(c.get() + 1));
+    if n == 0 {
+        return EigH { values: Vec::new(), vectors: Matrix::zeros(0, 0) };
+    }
+    let mut v = a.data().to_vec();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    tred2(&mut v, &mut d, &mut e, n);
+    tql2(&mut v, &mut d, &mut e, n);
+    EigH { values: d, vectors: Matrix::from_vec(n, n, v) }
+}
+
+/// Iteration cap per eigenvalue in the QL sweep. EISPACK's `tql2` iterates
+/// unboundedly; in IEEE arithmetic the shift strategy converges cubically and
+/// essentially never needs more than a handful of sweeps, so hitting the cap
+/// means the off-diagonal has stalled at roundoff level — we accept the
+/// current (fully converged in practice) value rather than loop forever.
+const MAX_QL_ITERS: usize = 64;
+
+// The two routines below are direct translations of the EISPACK/JAMA
+// `tred2`/`tql2` pair; the index-heavy loops mirror the published algorithm
+// so it can be audited line by line against the reference.
+#[allow(clippy::needless_range_loop)]
+fn tred2(v: &mut [f64], d: &mut [f64], e: &mut [f64], n: usize) {
+    for j in 0..n {
+        d[j] = v[(n - 1) * n + j];
+    }
+
+    // Householder reduction to tridiagonal form.
+    for i in (1..n).rev() {
+        let mut scale = 0.0;
+        let mut h = 0.0;
+        for k in 0..i {
+            scale += d[k].abs();
+        }
+        if scale == 0.0 {
+            e[i] = d[i - 1];
+            for j in 0..i {
+                d[j] = v[(i - 1) * n + j];
+                v[i * n + j] = 0.0;
+                v[j * n + i] = 0.0;
+            }
+        } else {
+            // Generate the Householder vector.
+            for k in 0..i {
+                d[k] /= scale;
+                h += d[k] * d[k];
+            }
+            let f = d[i - 1];
+            let mut g = h.sqrt();
+            if f > 0.0 {
+                g = -g;
+            }
+            e[i] = scale * g;
+            h -= f * g;
+            d[i - 1] = f - g;
+            for j in 0..i {
+                e[j] = 0.0;
+            }
+            // Apply the similarity transformation to the remaining columns.
+            for j in 0..i {
+                let f = d[j];
+                v[j * n + i] = f;
+                let mut g = e[j] + v[j * n + j] * f;
+                for k in j + 1..i {
+                    g += v[k * n + j] * d[k];
+                    e[k] += v[k * n + j] * f;
+                }
+                e[j] = g;
+            }
+            let mut f = 0.0;
+            for j in 0..i {
+                e[j] /= h;
+                f += e[j] * d[j];
+            }
+            let hh = f / (h + h);
+            for j in 0..i {
+                e[j] -= hh * d[j];
+            }
+            for j in 0..i {
+                let f = d[j];
+                let g = e[j];
+                for k in j..i {
+                    v[k * n + j] -= f * e[k] + g * d[k];
+                }
+                d[j] = v[(i - 1) * n + j];
+                v[i * n + j] = 0.0;
+            }
+        }
+        d[i] = h;
+    }
+
+    // Accumulate the transformations.
+    for i in 0..n - 1 {
+        v[(n - 1) * n + i] = v[i * n + i];
+        v[i * n + i] = 1.0;
+        let h = d[i + 1];
+        if h != 0.0 {
+            for k in 0..=i {
+                d[k] = v[k * n + i + 1] / h;
+            }
+            for j in 0..=i {
+                let mut g = 0.0;
+                for k in 0..=i {
+                    g += v[k * n + i + 1] * v[k * n + j];
+                }
+                for k in 0..=i {
+                    v[k * n + j] -= g * d[k];
+                }
+            }
+        }
+        for k in 0..=i {
+            v[k * n + i + 1] = 0.0;
+        }
+    }
+    for j in 0..n {
+        d[j] = v[(n - 1) * n + j];
+        v[(n - 1) * n + j] = 0.0;
+    }
+    v[(n - 1) * n + n - 1] = 1.0;
+    e[0] = 0.0;
+}
+
+#[allow(clippy::needless_range_loop)]
+fn tql2(v: &mut [f64], d: &mut [f64], e: &mut [f64], n: usize) {
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+
+    let mut f = 0.0f64;
+    let mut tst1 = 0.0f64;
+    let eps = f64::EPSILON;
+    for l in 0..n {
+        // Find a small subdiagonal element.
+        tst1 = tst1.max(d[l].abs() + e[l].abs());
+        let mut m = l;
+        while m < n {
+            if e[m].abs() <= eps * tst1 {
+                break;
+            }
+            m += 1;
+        }
+        // An eigenvalue has converged once the subdiagonal at `l` vanishes;
+        // otherwise run implicit-shift QL sweeps on the `l..=m` block.
+        if m > l {
+            let mut iters = 0;
+            loop {
+                iters += 1;
+                // Compute the implicit shift.
+                let g = d[l];
+                let mut p = (d[l + 1] - g) / (2.0 * e[l]);
+                let mut r = p.hypot(1.0);
+                if p < 0.0 {
+                    r = -r;
+                }
+                d[l] = e[l] / (p + r);
+                d[l + 1] = e[l] * (p + r);
+                let dl1 = d[l + 1];
+                let mut h = g - d[l];
+                for i in l + 2..n {
+                    d[i] -= h;
+                }
+                f += h;
+                // Implicit QL sweep with accumulated Givens rotations.
+                p = d[m];
+                let mut c = 1.0f64;
+                let mut c2 = c;
+                let mut c3 = c;
+                let el1 = e[l + 1];
+                let mut s = 0.0f64;
+                let mut s2 = 0.0f64;
+                for i in (l..m).rev() {
+                    c3 = c2;
+                    c2 = c;
+                    s2 = s;
+                    let g = c * e[i];
+                    h = c * p;
+                    r = p.hypot(e[i]);
+                    e[i + 1] = s * r;
+                    s = e[i] / r;
+                    c = p / r;
+                    p = c * d[i] - s * g;
+                    d[i + 1] = h + s * (c * g + s * d[i]);
+                    for k in 0..n {
+                        let h = v[k * n + i + 1];
+                        v[k * n + i + 1] = s * v[k * n + i] + c * h;
+                        v[k * n + i] = c * v[k * n + i] - s * h;
+                    }
+                }
+                p = -s * s2 * c3 * el1 * e[l] / dl1;
+                e[l] = s * p;
+                d[l] = c * p;
+                if e[l].abs() <= eps * tst1 || iters >= MAX_QL_ITERS {
+                    break;
+                }
+            }
+        }
+        d[l] += f;
+        e[l] = 0.0;
+    }
+
+    // Sort eigenvalues ascending, carrying eigenvector columns along.
+    for i in 0..n.saturating_sub(1) {
+        let mut k = i;
+        let mut p = d[i];
+        for j in i + 1..n {
+            if d[j] < p {
+                k = j;
+                p = d[j];
+            }
+        }
+        if k != i {
+            d.swap(i, k);
+            for j in 0..n {
+                v.swap(j * n + i, j * n + k);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::assert_allclose;
+    use crate::util::proptest;
+
+    /// `QᵀQ = I` within `tol`.
+    fn assert_orthonormal(q: &Matrix, tol: f64) {
+        let gram = q.transpose().matmul(q);
+        let n = q.rows();
+        let eye = Matrix::eye(n);
+        assert_allclose(gram.data(), eye.data(), tol, tol);
+    }
+
+    #[test]
+    fn reconstructs_random_spd_matrices() {
+        proptest::check(0xE16, |rng| {
+            let n = 1 + rng.below(20);
+            let a = proptest::spd_matrix(rng, n);
+            let eig = eigh(&a);
+            assert_allclose(eig.reconstruct().data(), a.data(), 1e-10, 1e-10);
+        });
+    }
+
+    #[test]
+    fn eigenvectors_are_orthonormal() {
+        proptest::check(0xE17, |rng| {
+            let n = 1 + rng.below(16);
+            let a = proptest::spd_matrix(rng, n);
+            assert_orthonormal(&eigh(&a).vectors, 1e-10);
+        });
+    }
+
+    #[test]
+    fn eigenvalues_are_ascending_and_positive_for_spd() {
+        proptest::check(0xE18, |rng| {
+            let n = 1 + rng.below(16);
+            let a = proptest::spd_matrix(rng, n);
+            let eig = eigh(&a);
+            for w in eig.values.windows(2) {
+                assert!(w[0] <= w[1], "not ascending: {:?}", eig.values);
+            }
+            assert!(eig.values[0] > 0.0, "SPD matrix with eigenvalue {}", eig.values[0]);
+        });
+    }
+
+    #[test]
+    fn matches_2x2_closed_form() {
+        proptest::check(0xE19, |rng| {
+            let (a, b, c) = (rng.normal(), rng.normal(), rng.normal());
+            let mat = Matrix::from_vec(2, 2, vec![a, b, b, c]);
+            let disc = ((a - c) * (a - c) + 4.0 * b * b).sqrt();
+            let want = [(a + c - disc) / 2.0, (a + c + disc) / 2.0];
+            let eig = eigh(&mat);
+            assert_allclose(&eig.values, &want, 1e-12, 1e-12);
+        });
+    }
+
+    #[test]
+    fn matches_3x3_closed_form() {
+        // Second-difference matrix: eigenvalues 2 − √2, 2, 2 + √2.
+        let a = Matrix::from_vec(3, 3, vec![2.0, -1.0, 0.0, -1.0, 2.0, -1.0, 0.0, -1.0, 2.0]);
+        let eig = eigh(&a);
+        let s = 2.0f64.sqrt();
+        assert_allclose(&eig.values, &[2.0 - s, 2.0, 2.0 + s], 1e-13, 1e-13);
+        assert_orthonormal(&eig.vectors, 1e-13);
+        assert_allclose(eig.reconstruct().data(), a.data(), 1e-13, 1e-13);
+    }
+
+    #[test]
+    fn diagonal_matrix_eigenvalues_are_sorted_diagonal() {
+        let a = Matrix::from_fn(4, 4, |i, j| if i == j { [3.0, -1.0, 7.0, 0.5][i] } else { 0.0 });
+        let eig = eigh(&a);
+        assert_allclose(&eig.values, &[-1.0, 0.5, 3.0, 7.0], 1e-14, 1e-14);
+    }
+
+    #[test]
+    fn handles_indefinite_symmetric_matrices() {
+        proptest::check(0xE1A, |rng| {
+            let n = 2 + rng.below(10);
+            let mut a = Matrix::from_fn(n, n, |_, _| rng.normal());
+            a.symmetrize();
+            let eig = eigh(&a);
+            assert_allclose(eig.reconstruct().data(), a.data(), 1e-10, 1e-10);
+            assert_orthonormal(&eig.vectors, 1e-10);
+        });
+    }
+
+    #[test]
+    fn one_by_one_and_empty_matrices() {
+        let eig = eigh(&Matrix::from_vec(1, 1, vec![4.5]));
+        assert_eq!(eig.values, vec![4.5]);
+        assert_eq!(eig.vectors.get(0, 0), 1.0);
+        let empty = eigh(&Matrix::zeros(0, 0));
+        assert!(empty.values.is_empty());
+    }
+
+    #[test]
+    fn decomposition_is_deterministic() {
+        let mut rng = crate::util::rng::Pcg32::seeded(0xE1B);
+        let a = proptest::spd_matrix(&mut rng, 9);
+        let e1 = eigh(&a);
+        let e2 = eigh(&a);
+        assert_eq!(e1.values, e2.values);
+        assert_eq!(e1.vectors.data(), e2.vectors.data());
+    }
+
+    #[test]
+    fn counter_tracks_calls_on_this_thread() {
+        let mut rng = crate::util::rng::Pcg32::seeded(0xE1C);
+        let a = proptest::spd_matrix(&mut rng, 5);
+        let before = eigh_count();
+        let _ = eigh(&a);
+        let _ = eigh(&a);
+        assert_eq!(eigh_count() - before, 2);
+    }
+}

@@ -1,12 +1,14 @@
 //! Dense linear algebra substrate: a row-major [`Matrix`] type backed by a
 //! packed, register-blocked, thread-parallel GEMM ([`gemm`]), vector
-//! helpers, and the iterative solvers used by the training algorithms (CG,
-//! block CG, MINRES, QMR, BiCGStab).
+//! helpers, a symmetric eigensolver ([`eig`]), and the iterative solvers
+//! used by the training algorithms (CG, block CG, MINRES, QMR, BiCGStab).
 
+pub mod eig;
 pub mod gemm;
 pub mod matrix;
 pub mod vecops;
 pub mod solvers;
 
+pub use eig::{eigh, eigh_count, EigH};
 pub use matrix::Matrix;
 pub use solvers::{LinOp, MultiLinOp, SolveStats};

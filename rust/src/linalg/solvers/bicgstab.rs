@@ -2,7 +2,7 @@
 //! nonsymmetric systems; used as a fallback when an operator cannot provide
 //! `Aᵀx` cheaply.
 
-use super::{LinOp, SolveStats, SolverConfig};
+use super::{LinOp, SolveStats, SolverConfig, Stopping};
 use crate::linalg::vecops::{axpy, dot, norm2};
 
 /// Solve `A x = b`, starting from `x` (updated in place).
@@ -11,12 +11,10 @@ pub fn bicgstab(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &SolverConfig) -> 
     assert_eq!(b.len(), n);
     assert_eq!(x.len(), n);
 
-    let b_norm = norm2(b);
-    if b_norm == 0.0 {
-        x.iter_mut().for_each(|v| *v = 0.0);
-        return SolveStats { iterations: 0, residual_norm: 0.0, converged: true };
+    let stop = Stopping::new(cfg, b);
+    if stop.zero_rhs() {
+        return Stopping::zero_solution(x);
     }
-    let tol_abs = cfg.tol * b_norm;
 
     let mut r = vec![0.0; n];
     a.apply(x, &mut r);
@@ -34,7 +32,7 @@ pub fn bicgstab(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &SolverConfig) -> 
 
     let mut res_norm = norm2(&r);
     let mut iters = 0;
-    while iters < cfg.max_iters && res_norm > tol_abs {
+    while iters < cfg.max_iters && !stop.converged(res_norm) {
         iters += 1;
         let rho = dot(&r0, &r);
         if rho.abs() < f64::MIN_POSITIVE {
@@ -54,7 +52,7 @@ pub fn bicgstab(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &SolverConfig) -> 
         for i in 0..n {
             s[i] = r[i] - alpha * v[i];
         }
-        if norm2(&s) <= tol_abs {
+        if stop.converged(norm2(&s)) {
             axpy(alpha, &p, x);
             res_norm = norm2(&s);
             return SolveStats { iterations: iters, residual_norm: res_norm, converged: true };
@@ -75,7 +73,7 @@ pub fn bicgstab(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &SolverConfig) -> 
             break;
         }
     }
-    SolveStats { iterations: iters, residual_norm: res_norm, converged: res_norm <= tol_abs }
+    SolveStats { iterations: iters, residual_norm: res_norm, converged: stop.converged(res_norm) }
 }
 
 #[cfg(test)]

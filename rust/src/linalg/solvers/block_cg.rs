@@ -15,7 +15,7 @@
 //! Columns that converge (or break down) are frozen — their iterates stop
 //! changing — while the remaining systems keep iterating.
 
-use super::{MultiLinOp, SolveStats, SolverConfig};
+use super::{MultiLinOp, Preconditioner, SolveStats, SolverConfig, Stopping};
 use crate::linalg::vecops::{axpby, axpy, dot, norm2};
 
 /// Solve `(A + shifts[j]·I) x_j = b_j` for all `j` in lockstep.
@@ -41,16 +41,14 @@ pub fn block_cg(
     let mut stats =
         vec![SolveStats { iterations: 0, residual_norm: 0.0, converged: false }; k];
     let mut active = vec![true; k];
-    let mut tol_abs = vec![0.0; k];
+    let mut stops = Vec::with_capacity(k);
     for j in 0..k {
-        let b_norm = norm2(&b[j * n..(j + 1) * n]);
-        if b_norm == 0.0 {
-            x[j * n..(j + 1) * n].iter_mut().for_each(|v| *v = 0.0);
-            stats[j] = SolveStats { iterations: 0, residual_norm: 0.0, converged: true };
+        let stop = Stopping::new(cfg, &b[j * n..(j + 1) * n]);
+        if stop.zero_rhs() {
+            stats[j] = Stopping::zero_solution(&mut x[j * n..(j + 1) * n]);
             active[j] = false;
-        } else {
-            tol_abs[j] = cfg.tol * b_norm;
         }
+        stops.push(stop);
     }
     if active.iter().all(|&a| !a) {
         return stats;
@@ -75,7 +73,7 @@ pub fn block_cg(
     loop {
         // top-of-loop convergence sweep (mirrors cg's check)
         for j in 0..k {
-            if active[j] && rs_old[j].sqrt() <= tol_abs[j] {
+            if active[j] && stops[j].converged(rs_old[j].sqrt()) {
                 stats[j] = SolveStats {
                     iterations: iters,
                     residual_norm: rs_old[j].sqrt(),
@@ -129,7 +127,139 @@ pub fn block_cg(
             stats[j] = SolveStats {
                 iterations: iters,
                 residual_norm: rs_old[j].sqrt(),
-                converged: rs_old[j].sqrt() <= tol_abs[j],
+                converged: stops[j].converged(rs_old[j].sqrt()),
+            };
+        }
+    }
+    stats
+}
+
+/// Preconditioned block CG: like [`block_cg`] but with one
+/// [`Preconditioner`] per shifted system, applied per column plane.
+///
+/// Column `j` retraces the standalone [`pcg`](super::cg::pcg) on
+/// `(A + shifts[j]·I) x = b_j` with `preconds[j]` bit for bit (tested), with
+/// the same freeze semantics as [`block_cg`]. This is the whole-λ-grid
+/// workload when the training graph is *incomplete* and the Kronecker
+/// spectral surrogate preconditioner is in play.
+pub fn block_pcg(
+    a: &dyn MultiLinOp,
+    shifts: &[f64],
+    preconds: &[&dyn Preconditioner],
+    b: &[f64],
+    x: &mut [f64],
+    cfg: &SolverConfig,
+) -> Vec<SolveStats> {
+    let n = a.dim();
+    let k = shifts.len();
+    assert_eq!(preconds.len(), k, "one preconditioner per shift");
+    assert_eq!(b.len(), n * k, "b must hold one plane of length n per shift");
+    assert_eq!(x.len(), n * k, "x must hold one plane of length n per shift");
+    if k == 0 {
+        return Vec::new();
+    }
+    for (j, m) in preconds.iter().enumerate() {
+        assert_eq!(m.dim(), n, "preconditioner {j} dimension mismatch");
+    }
+
+    let mut stats =
+        vec![SolveStats { iterations: 0, residual_norm: 0.0, converged: false }; k];
+    let mut active = vec![true; k];
+    let mut stops = Vec::with_capacity(k);
+    for j in 0..k {
+        let stop = Stopping::new(cfg, &b[j * n..(j + 1) * n]);
+        if stop.zero_rhs() {
+            stats[j] = Stopping::zero_solution(&mut x[j * n..(j + 1) * n]);
+            active[j] = false;
+        }
+        stops.push(stop);
+    }
+    if active.iter().all(|&a| !a) {
+        return stats;
+    }
+
+    // r_j = b_j - (A + shift_j I) x_j, then z_j = M_j r_j (pcg's setup).
+    let mut r = vec![0.0; n * k];
+    a.apply_multi(x, k, &mut r);
+    for (j, rj) in r.chunks_mut(n).enumerate() {
+        let xj = &x[j * n..(j + 1) * n];
+        let bj = &b[j * n..(j + 1) * n];
+        for i in 0..n {
+            rj[i] = bj[i] - (rj[i] + shifts[j] * xj[i]);
+        }
+    }
+    let mut z = vec![0.0; n * k];
+    for (j, zj) in z.chunks_mut(n).enumerate() {
+        preconds[j].apply(&r[j * n..(j + 1) * n], zj);
+    }
+    let mut p = z.clone();
+    let mut ap = vec![0.0; n * k];
+    let mut rz_old: Vec<f64> =
+        (0..k).map(|j| dot(&r[j * n..(j + 1) * n], &z[j * n..(j + 1) * n])).collect();
+    let mut r_norm: Vec<f64> = r.chunks(n).map(norm2).collect();
+
+    let mut iters = 0;
+    loop {
+        // top-of-loop convergence sweep (mirrors pcg's check)
+        for j in 0..k {
+            if active[j] && stops[j].converged(r_norm[j]) {
+                stats[j] =
+                    SolveStats { iterations: iters, residual_norm: r_norm[j], converged: true };
+                active[j] = false;
+                p[j * n..(j + 1) * n].fill(0.0);
+            }
+        }
+        if iters >= cfg.max_iters || active.iter().all(|&a| !a) {
+            break;
+        }
+        a.apply_multi(&p, k, &mut ap);
+        for j in 0..k {
+            if !active[j] {
+                continue;
+            }
+            let apj = &mut ap[j * n..(j + 1) * n];
+            let pj = &p[j * n..(j + 1) * n];
+            for (api, pi) in apj.iter_mut().zip(pj) {
+                *api += shifts[j] * pi;
+            }
+            let pap = dot(pj, apj);
+            if pap <= 0.0 {
+                // breakdown — freeze at the current iterate, exactly as pcg.
+                stats[j] =
+                    SolveStats { iterations: iters, residual_norm: r_norm[j], converged: false };
+                active[j] = false;
+                p[j * n..(j + 1) * n].fill(0.0);
+                continue;
+            }
+            let alpha = rz_old[j] / pap;
+            axpy(alpha, pj, &mut x[j * n..(j + 1) * n]);
+            axpy(-alpha, apj, &mut r[j * n..(j + 1) * n]);
+            r_norm[j] = norm2(&r[j * n..(j + 1) * n]);
+            preconds[j].apply(&r[j * n..(j + 1) * n], &mut z[j * n..(j + 1) * n]);
+            let rz_new = dot(&r[j * n..(j + 1) * n], &z[j * n..(j + 1) * n]);
+            if rz_new <= 0.0 && !stops[j].converged(r_norm[j]) {
+                // preconditioner lost positive-definiteness — pcg counts the
+                // update it just made, then stops.
+                stats[j] = SolveStats {
+                    iterations: iters + 1,
+                    residual_norm: r_norm[j],
+                    converged: false,
+                };
+                active[j] = false;
+                p[j * n..(j + 1) * n].fill(0.0);
+                continue;
+            }
+            axpby(1.0, &z[j * n..(j + 1) * n], rz_new / rz_old[j], &mut p[j * n..(j + 1) * n]);
+            rz_old[j] = rz_new;
+        }
+        iters += 1;
+    }
+    for j in 0..k {
+        if active[j] {
+            stats[j] = SolveStats {
+                iterations: iters,
+                residual_norm: r_norm[j],
+                converged: stops[j].converged(r_norm[j]),
             };
         }
     }
@@ -138,9 +268,9 @@ pub fn block_cg(
 
 #[cfg(test)]
 mod tests {
-    use super::super::cg::cg;
+    use super::super::cg::{cg, pcg};
     use super::super::testutil::spd_system;
-    use super::super::{FnOp, LinOp, MultiLinOp};
+    use super::super::{FnOp, JacobiPrecond, LinOp, MultiLinOp};
     use super::*;
     use crate::util::rng::Pcg32;
 
@@ -246,6 +376,57 @@ mod tests {
         for j in 0..k {
             let single = a.matvec(&v[j * 22..(j + 1) * 22]);
             assert_eq!(&multi[j * 22..(j + 1) * 22], single.as_slice(), "plane {j}");
+        }
+    }
+
+    #[test]
+    fn block_pcg_columns_bitwise_match_single_pcg() {
+        // Column j of the preconditioned block solve must equal the
+        // standalone PCG on (A + shift_j I) x = b_j with the same
+        // per-shift Jacobi preconditioner, bit for bit.
+        let mut rng = Pcg32::seeded(36);
+        let n = 28;
+        let (a, b_base, _) = spd_system(&mut rng, n);
+        let shifts = [0.0, 0.7, 5.0];
+        let k = shifts.len();
+        let preconds: Vec<JacobiPrecond> = shifts
+            .iter()
+            .map(|&s| JacobiPrecond::new(&(0..n).map(|i| a.get(i, i) + s).collect::<Vec<_>>()))
+            .collect();
+        let precond_refs: Vec<&dyn crate::linalg::solvers::Preconditioner> =
+            preconds.iter().map(|m| m as &dyn crate::linalg::solvers::Preconditioner).collect();
+        let mut b = vec![0.0; n * k];
+        for (j, bj) in b.chunks_mut(n).enumerate() {
+            for (i, bi) in bj.iter_mut().enumerate() {
+                *bi = b_base[i] - j as f64 * 0.2;
+            }
+        }
+        let cfg = SolverConfig { max_iters: 60, tol: 1e-11 };
+        let mut x_block = vec![0.0; n * k];
+        let stats = block_pcg(&a, &shifts, &precond_refs, &b, &mut x_block, &cfg);
+        for (j, &shift) in shifts.iter().enumerate() {
+            let a_ref = &a;
+            let shifted = FnOp {
+                n,
+                fwd: move |x: &[f64], y: &mut [f64]| {
+                    a_ref.apply(x, y);
+                    for i in 0..n {
+                        y[i] += shift * x[i];
+                    }
+                },
+                tr: move |x: &[f64], y: &mut [f64]| {
+                    a_ref.apply(x, y);
+                    for i in 0..n {
+                        y[i] += shift * x[i];
+                    }
+                },
+            };
+            let mut x_single = vec![0.0; n];
+            let s = pcg(&shifted, &b[j * n..(j + 1) * n], &mut x_single, &preconds[j], &cfg);
+            assert_eq!(&x_block[j * n..(j + 1) * n], x_single.as_slice(), "column {j}");
+            assert_eq!(stats[j].iterations, s.iterations, "column {j} iterations");
+            assert_eq!(stats[j].converged, s.converged, "column {j} converged");
+            assert_eq!(stats[j].residual_norm, s.residual_norm, "column {j} residual");
         }
     }
 

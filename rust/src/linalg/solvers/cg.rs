@@ -1,6 +1,7 @@
-//! Conjugate gradient method for SPD systems (Hestenes–Stiefel).
+//! Conjugate gradient method for SPD systems (Hestenes–Stiefel), plain and
+//! preconditioned.
 
-use super::{LinOp, SolveStats, SolverConfig};
+use super::{LinOp, Preconditioner, SolveStats, SolverConfig, Stopping};
 use crate::linalg::vecops::{axpby, axpy, dot, norm2};
 
 /// Solve `A x = b` for SPD `A`, starting from `x` (commonly zeros).
@@ -22,12 +23,10 @@ pub fn cg_cb(
     assert_eq!(b.len(), n);
     assert_eq!(x.len(), n);
 
-    let b_norm = norm2(b);
-    if b_norm == 0.0 {
-        x.iter_mut().for_each(|v| *v = 0.0);
-        return SolveStats { iterations: 0, residual_norm: 0.0, converged: true };
+    let stop = Stopping::new(cfg, b);
+    if stop.zero_rhs() {
+        return Stopping::zero_solution(x);
     }
-    let tol_abs = cfg.tol * b_norm;
 
     // r = b - A x
     let mut r = vec![0.0; n];
@@ -41,7 +40,7 @@ pub fn cg_cb(
 
     let mut iters = 0;
     while iters < cfg.max_iters {
-        if rs_old.sqrt() <= tol_abs {
+        if stop.converged(rs_old.sqrt()) {
             return SolveStats { iterations: iters, residual_norm: rs_old.sqrt(), converged: true };
         }
         a.apply(&p, &mut ap);
@@ -66,15 +65,102 @@ pub fn cg_cb(
     SolveStats {
         iterations: iters,
         residual_norm: rs_old.sqrt(),
-        converged: rs_old.sqrt() <= tol_abs,
+        converged: stop.converged(rs_old.sqrt()),
     }
+}
+
+/// Preconditioned conjugate gradient: solve `A x = b` for SPD `A` with an
+/// SPD preconditioner `M ≈ A⁻¹` applied as `z ← M r` each iteration.
+///
+/// With [`super::IdentityPrecond`] this retraces plain [`cg`] **bitwise**
+/// (`z = r` makes every dot product and update identical, since
+/// `‖r‖ = √(r·r)` uses the same reduction), so the preconditioned path can
+/// never silently diverge from the plain one. With the exact inverse
+/// (`M = A⁻¹`) it converges in one iteration.
+pub fn pcg(
+    a: &dyn LinOp,
+    b: &[f64],
+    x: &mut [f64],
+    m: &dyn Preconditioner,
+    cfg: &SolverConfig,
+) -> SolveStats {
+    pcg_cb(a, b, x, m, cfg, None)
+}
+
+/// [`pcg`] with an optional per-iteration monitor.
+pub fn pcg_cb(
+    a: &dyn LinOp,
+    b: &[f64],
+    x: &mut [f64],
+    m: &dyn Preconditioner,
+    cfg: &SolverConfig,
+    mut monitor: Option<super::IterMonitor<'_>>,
+) -> SolveStats {
+    let n = a.dim();
+    assert_eq!(b.len(), n);
+    assert_eq!(x.len(), n);
+    assert_eq!(m.dim(), n, "preconditioner dimension mismatch");
+
+    let stop = Stopping::new(cfg, b);
+    if stop.zero_rhs() {
+        return Stopping::zero_solution(x);
+    }
+
+    // r = b - A x
+    let mut r = vec![0.0; n];
+    a.apply(x, &mut r);
+    for i in 0..n {
+        r[i] = b[i] - r[i];
+    }
+    let mut z = vec![0.0; n];
+    m.apply(&r, &mut z);
+    let mut p = z.clone();
+    let mut ap = vec![0.0; n];
+    let mut rz_old = dot(&r, &z);
+    let mut r_norm = norm2(&r);
+
+    let mut iters = 0;
+    while iters < cfg.max_iters {
+        if stop.converged(r_norm) {
+            return SolveStats { iterations: iters, residual_norm: r_norm, converged: true };
+        }
+        a.apply(&p, &mut ap);
+        let pap = dot(&p, &ap);
+        if pap <= 0.0 {
+            // not SPD (or numerical breakdown) — stop with current iterate
+            break;
+        }
+        let alpha = rz_old / pap;
+        axpy(alpha, &p, x);
+        axpy(-alpha, &ap, &mut r);
+        r_norm = norm2(&r);
+        m.apply(&r, &mut z);
+        let rz_new = dot(&r, &z);
+        if rz_new <= 0.0 && !stop.converged(r_norm) {
+            // M lost positive-definiteness numerically — stop with current
+            // iterate rather than dividing by a nonpositive rz.
+            iters += 1;
+            break;
+        }
+        axpby(1.0, &z, rz_new / rz_old, &mut p);
+        rz_old = rz_new;
+        iters += 1;
+        if let Some(mon) = monitor.as_mut() {
+            if !mon(iters, x) {
+                break;
+            }
+        }
+    }
+    SolveStats { iterations: iters, residual_norm: r_norm, converged: stop.converged(r_norm) }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::linalg::solvers::testutil::spd_system;
+    use crate::linalg::solvers::{IdentityPrecond, JacobiPrecond};
     use crate::linalg::vecops::assert_allclose;
+    use crate::linalg::Matrix;
     use crate::util::rng::Pcg32;
 
     #[test]
@@ -115,5 +201,68 @@ mod tests {
         let mut x_warm = x_true.iter().map(|v| v * 0.999).collect::<Vec<_>>();
         let warm = cg(&a, &b, &mut x_warm, &SolverConfig { max_iters: 2, tol: 1e-16 });
         assert!(warm.residual_norm < cold.residual_norm);
+    }
+
+    #[test]
+    fn pcg_with_identity_matches_cg_bitwise() {
+        let mut rng = Pcg32::seeded(14);
+        let (a, b, _) = spd_system(&mut rng, 25);
+        for cfg in [
+            SolverConfig::default(),
+            SolverConfig { max_iters: 3, tol: 1e-16 },
+            SolverConfig { max_iters: 200, tol: 1e-13 },
+        ] {
+            let mut x_cg = vec![0.0; 25];
+            let s_cg = cg(&a, &b, &mut x_cg, &cfg);
+            let mut x_pcg = vec![0.0; 25];
+            let s_pcg = pcg(&a, &b, &mut x_pcg, &IdentityPrecond { n: 25 }, &cfg);
+            assert_eq!(x_cg, x_pcg, "identity-preconditioned CG diverged from CG");
+            assert_eq!(s_cg.iterations, s_pcg.iterations);
+            assert_eq!(s_cg.converged, s_pcg.converged);
+        }
+    }
+
+    #[test]
+    fn pcg_with_jacobi_solves_spd() {
+        let mut rng = Pcg32::seeded(15);
+        let (a, b, x_true) = spd_system(&mut rng, 40);
+        let diag: Vec<f64> = (0..40).map(|i| a.get(i, i)).collect();
+        let m = JacobiPrecond::new(&diag);
+        let mut x = vec![0.0; 40];
+        let stats = pcg(&a, &b, &mut x, &m, &SolverConfig::default());
+        assert!(stats.converged, "residual={}", stats.residual_norm);
+        assert_allclose(&x, &x_true, 1e-6, 1e-6);
+    }
+
+    /// With `M = A⁻¹`, PCG lands on the solution after a single iteration.
+    #[test]
+    fn pcg_with_exact_inverse_converges_in_one_iteration() {
+        struct DenseInverse(Matrix);
+        impl crate::linalg::solvers::Preconditioner for DenseInverse {
+            fn dim(&self) -> usize {
+                self.0.rows()
+            }
+            fn apply(&self, r: &[f64], z: &mut [f64]) {
+                z.copy_from_slice(&self.0.matvec(r));
+            }
+        }
+        let mut rng = Pcg32::seeded(16);
+        let (a, b, x_true) = spd_system(&mut rng, 12);
+        // Dense inverse via n solves against the identity columns.
+        let mut inv = Matrix::zeros(12, 12);
+        for j in 0..12 {
+            let mut e = vec![0.0; 12];
+            e[j] = 1.0;
+            let col = a.solve_spd(&e).expect("SPD");
+            for i in 0..12 {
+                inv.set(i, j, col[i]);
+            }
+        }
+        let m = DenseInverse(inv);
+        let mut x = vec![0.0; 12];
+        let stats = pcg(&a, &b, &mut x, &m, &SolverConfig { max_iters: 50, tol: 1e-9 });
+        assert!(stats.converged);
+        assert!(stats.iterations <= 2, "exact preconditioner took {} iterations", stats.iterations);
+        assert_allclose(&x, &x_true, 1e-7, 1e-7);
     }
 }

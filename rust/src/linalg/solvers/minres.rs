@@ -3,7 +3,7 @@
 //! `scipy.sparse.linalg.minres`; this is the same algorithm without
 //! preconditioning.
 
-use super::{LinOp, SolveStats, SolverConfig};
+use super::{LinOp, SolveStats, SolverConfig, Stopping};
 use crate::linalg::vecops::{axpy, dot, norm2, scale};
 
 /// Solve `A x = b` for symmetric `A`, starting from `x` (updated in place).
@@ -24,6 +24,14 @@ pub fn minres_cb(
     assert_eq!(b.len(), n);
     assert_eq!(x.len(), n);
 
+    let stop = Stopping::new(cfg, b);
+    if stop.zero_rhs() {
+        // Unified zero-RHS rule (see [`Stopping`]): x = 0, no iterations.
+        // Previously minres fell through with tol_abs floored at
+        // f64::MIN_POSITIVE and burned max_iters from a nonzero warm start.
+        return Stopping::zero_solution(x);
+    }
+
     // r1 = b - A x0
     let mut r1 = vec![0.0; n];
     a.apply(x, &mut r1);
@@ -32,9 +40,9 @@ pub fn minres_cb(
     }
     let beta1 = norm2(&r1);
     if beta1 == 0.0 {
+        // Warm start already exact.
         return SolveStats { iterations: 0, residual_norm: 0.0, converged: true };
     }
-    let tol_abs = cfg.tol * norm2(b).max(f64::MIN_POSITIVE);
 
     let mut y = r1.clone();
     let mut r2 = r1.clone();
@@ -47,7 +55,7 @@ pub fn minres_cb(
     let mut w2 = vec![0.0; n];
 
     let mut iters = 0;
-    let mut converged = phibar <= tol_abs;
+    let mut converged = stop.converged(phibar);
 
     while iters < cfg.max_iters && !converged {
         iters += 1;
@@ -97,7 +105,7 @@ pub fn minres_cb(
             }
         }
 
-        converged = phibar <= tol_abs;
+        converged = stop.converged(phibar);
     }
 
     SolveStats { iterations: iters, residual_norm: phibar, converged }

@@ -13,8 +13,8 @@ pub mod minres;
 pub mod qmr;
 pub mod bicgstab;
 
-pub use cg::{cg, cg_cb};
-pub use block_cg::block_cg;
+pub use cg::{cg, cg_cb, pcg, pcg_cb};
+pub use block_cg::{block_cg, block_pcg};
 pub use minres::{minres, minres_cb};
 pub use qmr::qmr;
 pub use bicgstab::bicgstab;
@@ -161,6 +161,111 @@ impl SolverConfig {
     }
 }
 
+/// Shared residual-norm stopping criterion.
+///
+/// Every Krylov solver in this module stops on the **same** rule: the
+/// (estimated) residual norm falls to `tol · ‖b‖`, and a zero right-hand
+/// side short-circuits to the zero solution. Historically each solver
+/// hand-rolled this arithmetic — `minres` even diverged by folding an
+/// `f64::MIN_POSITIVE` floor into `tol_abs`, which silently burned
+/// `max_iters` iterations on `b = 0` with a nonzero initial guess.
+/// Centralizing the rule here keeps the preconditioned variants bitwise
+/// consistent with the plain ones and gives the rule its own tests.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopping {
+    b_norm: f64,
+    tol_abs: f64,
+}
+
+impl Stopping {
+    /// Build the criterion for right-hand side `b` under `cfg`.
+    pub fn new(cfg: &SolverConfig, b: &[f64]) -> Self {
+        let b_norm = crate::linalg::vecops::norm2(b);
+        Stopping { b_norm, tol_abs: cfg.tol * b_norm }
+    }
+
+    /// `‖b‖ = 0`: the unique solution of an SPD/nonsingular system is
+    /// `x = 0`, no iterations needed.
+    pub fn zero_rhs(&self) -> bool {
+        self.b_norm == 0.0
+    }
+
+    /// Absolute tolerance `tol · ‖b‖` the residual norm is compared against.
+    pub fn tol_abs(&self) -> f64 {
+        self.tol_abs
+    }
+
+    /// Has the residual norm met the tolerance? (Boundary counts: equality
+    /// converges, matching the historical `<=` in every solver.)
+    pub fn converged(&self, residual_norm: f64) -> bool {
+        residual_norm <= self.tol_abs
+    }
+
+    /// Resolve a zero-RHS solve: zero the iterate and report immediate
+    /// convergence with a zero residual.
+    pub fn zero_solution(x: &mut [f64]) -> SolveStats {
+        x.fill(0.0);
+        SolveStats { iterations: 0, residual_norm: 0.0, converged: true }
+    }
+}
+
+/// A symmetric positive-definite preconditioner `z ← M r` (with `M ≈ A⁻¹`),
+/// pluggable into [`pcg`]/[`block_pcg`]. Like [`LinOp`], implementors only
+/// need a product — `M` itself is never materialized.
+pub trait Preconditioner {
+    /// Operator dimension `n`.
+    fn dim(&self) -> usize;
+
+    /// `z ← M r`.
+    fn apply(&self, r: &[f64], z: &mut [f64]);
+}
+
+/// The identity preconditioner `M = I`. [`pcg`] with this preconditioner
+/// retraces plain [`cg`] bitwise (same dot/norm reduction order), which the
+/// tests pin as a regression guard.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IdentityPrecond {
+    /// Operator dimension.
+    pub n: usize,
+}
+
+impl Preconditioner for IdentityPrecond {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn apply(&self, r: &[f64], z: &mut [f64]) {
+        z.copy_from_slice(r);
+    }
+}
+
+/// Diagonal (Jacobi) preconditioner `M = diag(a)⁻¹`.
+#[derive(Debug, Clone)]
+pub struct JacobiPrecond {
+    inv_diag: Vec<f64>,
+}
+
+impl JacobiPrecond {
+    /// Build from the operator's diagonal; every entry must be positive
+    /// (true for SPD systems, and for `Q + λI` with PSD `Q` and `λ > 0`).
+    pub fn new(diag: &[f64]) -> Self {
+        assert!(diag.iter().all(|&d| d > 0.0), "Jacobi preconditioner needs a positive diagonal");
+        JacobiPrecond { inv_diag: diag.iter().map(|d| 1.0 / d).collect() }
+    }
+}
+
+impl Preconditioner for JacobiPrecond {
+    fn dim(&self) -> usize {
+        self.inv_diag.len()
+    }
+
+    fn apply(&self, r: &[f64], z: &mut [f64]) {
+        for ((zi, ri), di) in z.iter_mut().zip(r).zip(&self.inv_diag) {
+            *zi = ri * di;
+        }
+    }
+}
+
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
@@ -183,5 +288,106 @@ pub(crate) mod testutil {
         let x_true: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).cos()).collect();
         let b = a.matvec(&x_true);
         (a, b, x_true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::spd_system;
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn stopping_tol_abs_is_tol_times_b_norm() {
+        let cfg = SolverConfig { max_iters: 10, tol: 1e-6 };
+        let b = vec![3.0, 4.0]; // ‖b‖ = 5
+        let stop = Stopping::new(&cfg, &b);
+        assert_eq!(stop.tol_abs(), 1e-6 * 5.0);
+        assert!(!stop.zero_rhs());
+    }
+
+    #[test]
+    fn stopping_zero_rhs_detected() {
+        let stop = Stopping::new(&SolverConfig::default(), &[0.0; 7]);
+        assert!(stop.zero_rhs());
+        assert!(stop.converged(0.0));
+        let mut x = vec![1.0, -2.0, 3.0];
+        let stats = Stopping::zero_solution(&mut x);
+        assert_eq!(x, vec![0.0; 3]);
+        assert!(stats.converged);
+        assert_eq!(stats.iterations, 0);
+        assert_eq!(stats.residual_norm, 0.0);
+    }
+
+    #[test]
+    fn stopping_boundary_equality_converges() {
+        let cfg = SolverConfig { max_iters: 10, tol: 0.5 };
+        let stop = Stopping::new(&cfg, &[2.0]); // tol_abs = 1.0
+        assert!(stop.converged(1.0));
+        assert!(stop.converged(1.0 - f64::EPSILON));
+        assert!(!stop.converged(1.0 + 1e-15));
+    }
+
+    /// All solvers must map `b = 0` to `x = 0` in zero iterations, even from
+    /// a nonzero warm start (minres previously burned `max_iters` here).
+    #[test]
+    fn zero_rhs_zeroes_warm_start_in_every_solver() {
+        let mut rng = Pcg32::seeded(0x51);
+        let (a, _, _) = spd_system(&mut rng, 8);
+        let b = vec![0.0; 8];
+        let cfg = SolverConfig::default();
+        let warm: Vec<f64> = (0..8).map(|i| 1.0 + i as f64).collect();
+        type Solver = fn(&dyn LinOp, &[f64], &mut [f64], &SolverConfig) -> SolveStats;
+        let solvers: [(&str, Solver); 4] =
+            [("cg", cg), ("minres", minres), ("qmr", qmr), ("bicgstab", bicgstab)];
+        for (name, solve) in solvers {
+            let mut x = warm.clone();
+            let stats = solve(&a, &b, &mut x, &cfg);
+            assert!(stats.converged, "{name} did not converge on b=0");
+            assert_eq!(stats.iterations, 0, "{name} iterated on b=0");
+            assert_eq!(x, vec![0.0; 8], "{name} left a nonzero solution for b=0");
+        }
+        let mut x = warm.clone();
+        let stats = pcg(&a, &b, &mut x, &IdentityPrecond { n: 8 }, &cfg);
+        assert!(stats.converged && stats.iterations == 0 && x == vec![0.0; 8]);
+    }
+
+    /// Starting from the exact solution, every solver must accept immediately.
+    #[test]
+    fn already_converged_start_takes_zero_iterations() {
+        let mut rng = Pcg32::seeded(0x52);
+        let (a, _, _) = spd_system(&mut rng, 8);
+        // Choose x_true, then b = A·x_true so the initial residual is exactly 0.
+        let x_true: Vec<f64> = (0..8).map(|i| (i as f64 * 0.9).cos()).collect();
+        let b = a.apply_vec(&x_true);
+        let cfg = SolverConfig::default();
+        type Solver = fn(&dyn LinOp, &[f64], &mut [f64], &SolverConfig) -> SolveStats;
+        let solvers: [(&str, Solver); 4] =
+            [("cg", cg), ("minres", minres), ("qmr", qmr), ("bicgstab", bicgstab)];
+        for (name, solve) in solvers {
+            let mut x = x_true.clone();
+            let stats = solve(&a, &b, &mut x, &cfg);
+            assert!(stats.converged, "{name} did not converge from exact start");
+            assert_eq!(stats.iterations, 0, "{name} iterated from exact start");
+            assert_eq!(x, x_true, "{name} perturbed an exact solution");
+        }
+        let mut x = x_true.clone();
+        let stats = pcg(&a, &b, &mut x, &IdentityPrecond { n: 8 }, &cfg);
+        assert!(stats.converged && stats.iterations == 0 && x == x_true);
+    }
+
+    #[test]
+    fn jacobi_precond_applies_inverse_diagonal() {
+        let m = JacobiPrecond::new(&[2.0, 4.0, 0.5]);
+        assert_eq!(m.dim(), 3);
+        let mut z = vec![0.0; 3];
+        m.apply(&[2.0, 4.0, 0.5], &mut z);
+        assert_eq!(z, vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn jacobi_precond_rejects_nonpositive_diagonal() {
+        let _ = JacobiPrecond::new(&[1.0, 0.0]);
     }
 }

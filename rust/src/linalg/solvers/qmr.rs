@@ -7,7 +7,7 @@
 //! *Templates for the Solution of Linear Systems*, §2.3.6. Requires both
 //! `A·x` and `Aᵀ·x` products, which every operator in this crate provides.
 
-use super::{LinOp, SolveStats, SolverConfig};
+use super::{LinOp, SolveStats, SolverConfig, Stopping};
 use crate::linalg::vecops::{axpby, axpy, norm2, dot};
 
 /// Solve `A x = b`, starting from `x` (updated in place).
@@ -16,12 +16,10 @@ pub fn qmr(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &SolverConfig) -> Solve
     assert_eq!(b.len(), n);
     assert_eq!(x.len(), n);
 
-    let b_norm = norm2(b);
-    if b_norm == 0.0 {
-        x.iter_mut().for_each(|v| *v = 0.0);
-        return SolveStats { iterations: 0, residual_norm: 0.0, converged: true };
+    let stop = Stopping::new(cfg, b);
+    if stop.zero_rhs() {
+        return Stopping::zero_solution(x);
     }
-    let tol_abs = cfg.tol * b_norm;
 
     // r = b - A x
     let mut r = vec![0.0; n];
@@ -30,7 +28,7 @@ pub fn qmr(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &SolverConfig) -> Solve
         r[i] = b[i] - r[i];
     }
     let mut res_norm = norm2(&r);
-    if res_norm <= tol_abs {
+    if stop.converged(res_norm) {
         return SolveStats { iterations: 0, residual_norm: res_norm, converged: true };
     }
 
@@ -119,11 +117,11 @@ pub fn qmr(a: &dyn LinOp, b: &[f64], x: &mut [f64], cfg: &SolverConfig) -> Solve
         axpy(1.0, &d, x);
         axpy(-1.0, &s, &mut r);
         res_norm = norm2(&r);
-        if res_norm <= tol_abs {
+        if stop.converged(res_norm) {
             return SolveStats { iterations: iters, residual_norm: res_norm, converged: true };
         }
     }
-    SolveStats { iterations: iters, residual_norm: res_norm, converged: res_norm <= tol_abs }
+    SolveStats { iterations: iters, residual_norm: res_norm, converged: stop.converged(res_norm) }
 }
 
 #[cfg(test)]

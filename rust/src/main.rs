@@ -24,7 +24,7 @@ use kronvt::data::{checkerboard, dti, Dataset};
 use kronvt::eval::auc::auc;
 use kronvt::gvt::PairwiseKernelKind;
 use kronvt::kernels::KernelKind;
-use kronvt::train::{KronRidge, RidgeConfig};
+use kronvt::train::{KronRidge, RidgeConfig, RidgeSolver};
 use kronvt::util::args::Args;
 use kronvt::util::rng::Pcg32;
 use kronvt::util::timer::Timer;
@@ -79,6 +79,9 @@ fn parse_method(method: &str, args: &Args, compute: Compute) -> Result<MethodPla
     let lambda = args.get_f64("lambda", 1e-4)?;
     let kernel = KernelKind::parse(&args.get_str("kernel", "linear"))?;
     let pairwise = PairwiseKernelKind::parse(&args.get_str("pairwise", "kron"))?;
+    if args.has("solver") && method != "kronridge" {
+        return Err(format!("--solver applies to --method kronridge only (got '{method}')"));
+    }
     match method {
         "kronsvm" => Ok(MethodPlan::Kron(
             Learner::svm()
@@ -95,6 +98,7 @@ fn parse_method(method: &str, args: &Args, compute: Compute) -> Result<MethodPla
                 .lambda(lambda)
                 .kernel(kernel)
                 .pairwise(pairwise)
+                .solver(RidgeSolver::parse(&args.get_str("solver", "auto"))?)
                 .compute(compute),
         )),
         _ if pairwise != PairwiseKernelKind::Kronecker => Err(format!(
@@ -155,8 +159,8 @@ fn cmd_datasets(args: &Args) -> Result<(), String> {
 }
 
 const TRAIN_FLAGS: &[&str] = &[
-    "data", "method", "seed", "scale", "test-frac", "lambda", "kernel", "pairwise", "threads",
-    "outer", "inner", "iterations", "c", "updates", "k", "save",
+    "data", "method", "seed", "scale", "test-frac", "lambda", "kernel", "pairwise", "solver",
+    "threads", "outer", "inner", "iterations", "c", "updates", "k", "save",
 ];
 
 fn cmd_train(args: &Args) -> Result<(), String> {
@@ -242,8 +246,8 @@ fn cmd_predict(args: &Args) -> Result<(), String> {
 }
 
 const CV_FLAGS: &[&str] = &[
-    "data", "method", "seed", "scale", "lambda", "lambdas", "kernel", "pairwise", "threads",
-    "fold-workers", "outer", "inner", "iterations", "c", "updates", "k",
+    "data", "method", "seed", "scale", "lambda", "lambdas", "kernel", "pairwise", "solver",
+    "threads", "fold-workers", "outer", "inner", "iterations", "c", "updates", "k",
 ];
 
 fn cmd_cv(args: &Args) -> Result<(), String> {
@@ -287,10 +291,14 @@ fn cmd_cv(args: &Args) -> Result<(), String> {
             ..Default::default()
         };
         let pairwise = PairwiseKernelKind::parse(&args.get_str("pairwise", "kron"))?;
+        // On complete training graphs `auto` solves the whole λ grid in
+        // closed form from one eigendecomposition pair per fold.
+        let solver = RidgeSolver::parse(&args.get_str("solver", "auto"))?;
         let compute = Compute::threads(args.get_usize("threads", 1)?);
         let results = run_cv_path_jobs(&folds, fold_workers, |tr, te| {
             KronRidge::new(cfg)
                 .with_pairwise(pairwise)
+                .with_solver(solver)
                 .with_compute(compute)
                 .fit_path(tr, &lambdas)
                 .and_then(|models| kronvt::model::predict_path(&models, te))
@@ -484,6 +492,9 @@ fn usage() -> ! {
                        --pairwise kron|symmetric|antisymmetric|cartesian\n\
                                      pairwise kernel family (kronsvm/kronridge; symmetric and\n\
                                      antisymmetric need one shared vertex domain, e.g. --data homo)\n\
+                       --solver auto|exact|minres|cg|precond-cg\n\
+                                     kronridge dual solver; auto takes the closed-form\n\
+                                     eigendecomposition path on complete training graphs\n\
                        --threads N   GVT matvec worker threads (0 = all cores; identical results, just faster)\n\
                        --fold-workers N   (cv only) train folds concurrently\n\
                        --lambdas a,b,c    (cv + kronridge) batched λ-grid CV: one block-CG solve\n\

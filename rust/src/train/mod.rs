@@ -15,7 +15,7 @@ pub mod ridge;
 pub mod svm;
 pub mod newton;
 
-pub use ridge::{KronRidge, RidgeConfig};
+pub use ridge::{KronRidge, RidgeConfig, RidgeSolver};
 pub use svm::{KronSvm, SvmConfig};
 pub use newton::{NewtonConfig, NewtonTrainer};
 pub use trace::{IterRecord, TrainTrace};

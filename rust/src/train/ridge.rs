@@ -6,16 +6,40 @@
 //! Primal (linear vertex kernels): solve
 //! `((Tᵀ⊗Dᵀ)RᵀR(T⊗D) + λI) w = (Tᵀ⊗Dᵀ)Rᵀ y` with CG —
 //! `O(min(mdr + nr, drq + dn))` per iteration.
+//!
+//! **Eigendecomposition fast paths** (two-step method, arXiv 1606.04275;
+//! comparative study, arXiv 1803.01575): when the training graph is
+//! *complete* — every (end-vertex, start-vertex) pair labeled exactly once —
+//! `R` is a permutation and `Q + λI = R(G⊗K + λI)Rᵀ`, so per-factor
+//! eigendecompositions `G = Q_g Λ_g Q_gᵀ`, `K = Q_k Λ_k Q_kᵀ` give the duals
+//! in closed form:
+//!
+//! ```text
+//! A = Q_g ( (Q_gᵀ Y Q_k) ∘ D⁻¹ ) Q_kᵀ ,   D[i][j] = λg_i·λk_j + λ ,
+//! ```
+//!
+//! with `Y` the labels on the `q × m` grid — no iterations, no `n × n`
+//! objects, one decomposition pair for *every* λ (see
+//! [`KronRidge::fit_path`] and the leave-one-out shortcut
+//! [`KronRidge::loo_path`]). For incomplete graphs the same decompositions
+//! feed the spectral preconditioner
+//! ([`KronSpectralPrecond`](crate::gvt::KronSpectralPrecond)) behind
+//! [`RidgeSolver::PrecondCg`]. Solver choice is [`RidgeSolver`]; the default
+//! `Auto` picks the closed form whenever it applies.
 
 use std::sync::Arc;
 
 use crate::api::Compute;
 use crate::data::Dataset;
 use crate::eval::auc::auc;
-use crate::gvt::{delta_matrix, PairwiseKernelKind, PairwiseOp};
+use crate::gvt::{delta_matrix, KronSpectralPrecond, PairwiseKernelKind, PairwiseOp};
 use crate::kernels::{kernel_matrix_threaded, KernelKind};
-use crate::linalg::solvers::{block_cg, cg_cb, minres_cb, SolverConfig};
+use crate::linalg::eig::{eigh, EigH};
+use crate::linalg::solvers::{
+    block_cg, block_pcg, cg_cb, minres_cb, pcg_cb, Preconditioner, SolverConfig,
+};
 use crate::linalg::vecops::dot;
+use crate::linalg::Matrix;
 use crate::model::primal::{PrimalKronOp, PrimalNewtonOp};
 use crate::model::{DualModel, PrimalModel};
 use crate::train::trace::{IterRecord, TrainTrace};
@@ -55,10 +79,58 @@ impl Default for RidgeConfig {
     }
 }
 
+/// Dual-solver selection for [`KronRidge`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RidgeSolver {
+    /// Pick automatically: the closed-form eigendecomposition solve when the
+    /// training graph is complete (Kronecker family, no per-iteration
+    /// monitoring requested), MINRES otherwise.
+    #[default]
+    Auto,
+    /// Closed-form per-factor eigendecomposition solve. Errors unless the
+    /// training graph is complete (and the family is Kronecker).
+    Exact,
+    /// MINRES (the paper's solver), unconditionally iterative.
+    Minres,
+    /// Plain conjugate gradient.
+    Cg,
+    /// Conjugate gradient with the Kronecker spectral preconditioner
+    /// ([`KronSpectralPrecond`]) built from the complete-graph surrogate.
+    PrecondCg,
+}
+
+impl RidgeSolver {
+    /// Parse a CLI name: `auto`, `exact`, `minres`, `cg`, or `precond-cg`.
+    pub fn parse(s: &str) -> Result<RidgeSolver, String> {
+        match s {
+            "auto" => Ok(RidgeSolver::Auto),
+            "exact" => Ok(RidgeSolver::Exact),
+            "minres" => Ok(RidgeSolver::Minres),
+            "cg" => Ok(RidgeSolver::Cg),
+            "precond-cg" => Ok(RidgeSolver::PrecondCg),
+            other => Err(format!(
+                "unknown solver '{other}' (expected auto, exact, minres, cg, or precond-cg)"
+            )),
+        }
+    }
+
+    /// CLI name of this solver.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RidgeSolver::Auto => "auto",
+            RidgeSolver::Exact => "exact",
+            RidgeSolver::Minres => "minres",
+            RidgeSolver::Cg => "cg",
+            RidgeSolver::PrecondCg => "precond-cg",
+        }
+    }
+}
+
 /// Kronecker ridge regression trainer.
 ///
-/// Method-specific knobs live in [`RidgeConfig`]; the pairwise kernel family
-/// and the execution policy are set with [`KronRidge::with_pairwise`] /
+/// Method-specific knobs live in [`RidgeConfig`]; the pairwise kernel family,
+/// the solver, and the execution policy are set with
+/// [`KronRidge::with_pairwise`] / [`KronRidge::with_solver`] /
 /// [`KronRidge::with_compute`] (or through the
 /// [`Learner`](crate::api::Learner) builder) — the config structs no longer
 /// duplicate `threads`/`pairwise`.
@@ -69,6 +141,9 @@ pub struct KronRidge {
     /// Pairwise kernel family composed over the GVT engine
     /// (`Kronecker` reproduces the pre-family behavior bit for bit).
     pub pairwise: PairwiseKernelKind,
+    /// Dual-solver selection ([`RidgeSolver::Auto`] picks the closed-form
+    /// fast path on complete training graphs).
+    pub solver: RidgeSolver,
     /// Execution policy (threads, workspace retention); transparent to
     /// results.
     pub compute: Compute,
@@ -145,6 +220,121 @@ pub(crate) fn validation_op(
     )
 }
 
+/// Package dual coefficients into a portable model.
+fn make_dual_model(
+    train: &Dataset,
+    cfg: &RidgeConfig,
+    pairwise: PairwiseKernelKind,
+    dual_coef: Vec<f64>,
+) -> DualModel {
+    DualModel {
+        dual_coef,
+        train_start_features: train.start_features.clone(),
+        train_end_features: train.end_features.clone(),
+        train_idx: train.kron_index(),
+        kernel_d: cfg.kernel_d,
+        kernel_t: cfg.kernel_t,
+        pairwise,
+    }
+}
+
+/// Elementwise square of a matrix (`Q ∘ Q`), used by the LOO diagonal GEMMs.
+fn squared_elements(a: &Matrix) -> Matrix {
+    Matrix::from_fn(a.rows(), a.cols(), |i, j| {
+        let v = a.get(i, j);
+        v * v
+    })
+}
+
+/// Per-factor eigendecomposition context for a **complete** training graph:
+/// everything the closed-form ridge solve, the whole-λ-grid path, and the
+/// leave-one-out shortcut share, computed once.
+///
+/// Holds `G = Q_g Λ_g Q_gᵀ` (q×q), `K = Q_k Λ_k Q_kᵀ` (m×m), the
+/// grid-cell→edge layout of the complete edge index, and the rotated labels
+/// `Ỹ = Q_gᵀ Y Q_k` (λ-independent, so a whole regularization path reuses
+/// them).
+struct EigContext {
+    layout: Vec<u32>,
+    g_eig: EigH,
+    k_eig: EigH,
+    ytil: Matrix,
+    threads: usize,
+}
+
+impl EigContext {
+    /// Attempt to build the context: `None` when the training graph is not
+    /// complete (the closed form does not apply). Costs two [`eigh`] calls —
+    /// `O(q³ + m³)` — and two grid GEMMs.
+    fn build(
+        train: &Dataset,
+        kernel_d: KernelKind,
+        kernel_t: KernelKind,
+        compute: &Compute,
+    ) -> Option<EigContext> {
+        let q = train.end_features.rows();
+        let m = train.start_features.rows();
+        let layout = train.kron_index().complete_layout(q, m)?;
+        let threads = compute.threads;
+        let g = kernel_t.square_matrix_threaded(&train.end_features, threads);
+        let k = kernel_d.square_matrix_threaded(&train.start_features, threads);
+        let g_eig = eigh(&g);
+        let k_eig = eigh(&k);
+        let ygrid = Matrix::from_fn(q, m, |s, r| train.labels[layout[s * m + r] as usize]);
+        let ytil = g_eig
+            .vectors
+            .transpose()
+            .matmul_threaded(&ygrid, threads)
+            .matmul_threaded(&k_eig.vectors, threads);
+        Some(EigContext { layout, g_eig, k_eig, ytil, threads })
+    }
+
+    /// Closed-form duals for one λ:
+    /// `A = Q_g (Ỹ ∘ D⁻¹) Q_kᵀ`, `D[i][j] = λg_i·λk_j + λ`, gathered back to
+    /// edge order.
+    fn solve(&self, lambda: f64) -> Vec<f64> {
+        let m = self.k_eig.values.len();
+        let mut w = self.ytil.clone();
+        {
+            let data = w.data_mut();
+            for (i, &gl) in self.g_eig.values.iter().enumerate() {
+                for (j, &kl) in self.k_eig.values.iter().enumerate() {
+                    data[i * m + j] /= gl * kl + lambda;
+                }
+            }
+        }
+        let agrid = self
+            .g_eig
+            .vectors
+            .matmul_threaded(&w, self.threads)
+            .matmul_nt_threaded(&self.k_eig.vectors, self.threads);
+        let mut a = vec![0.0; self.layout.len()];
+        for (pos, &h) in self.layout.iter().enumerate() {
+            a[h as usize] = agrid.data()[pos];
+        }
+        a
+    }
+
+    /// Diagonal of `(Q + λI)⁻¹` in edge order via two grid GEMMs:
+    /// `diag = (Q_g ∘ Q_g) · D⁻¹ · (Q_k ∘ Q_k)ᵀ` — the hat-matrix diagonal
+    /// the leave-one-out identity needs. `qg2`/`qk2` are the elementwise
+    /// squares of the eigenvector matrices (hoisted by the caller because
+    /// they are λ-independent).
+    fn inverse_diagonal(&self, lambda: f64, qg2: &Matrix, qk2: &Matrix) -> Vec<f64> {
+        let q = self.g_eig.values.len();
+        let m = self.k_eig.values.len();
+        let invd = Matrix::from_fn(q, m, |i, j| {
+            1.0 / (self.g_eig.values[i] * self.k_eig.values[j] + lambda)
+        });
+        let grid = qg2.matmul_threaded(&invd, self.threads).matmul_nt_threaded(qk2, self.threads);
+        let mut diag = vec![0.0; self.layout.len()];
+        for (pos, &h) in self.layout.iter().enumerate() {
+            diag[h as usize] = grid.data()[pos];
+        }
+        diag
+    }
+}
+
 impl KronRidge {
     /// Trainer with the given configuration, the Kronecker pairwise family,
     /// and the default (serial) execution policy.
@@ -152,6 +342,7 @@ impl KronRidge {
         KronRidge {
             cfg,
             pairwise: PairwiseKernelKind::Kronecker,
+            solver: RidgeSolver::Auto,
             compute: Compute::default(),
         }
     }
@@ -159,6 +350,12 @@ impl KronRidge {
     /// Select the pairwise kernel family composed over the GVT engine.
     pub fn with_pairwise(mut self, pairwise: PairwiseKernelKind) -> Self {
         self.pairwise = pairwise;
+        self
+    }
+
+    /// Select the dual solver (default [`RidgeSolver::Auto`]).
+    pub fn with_solver(mut self, solver: RidgeSolver) -> Self {
+        self.solver = solver;
         self
     }
 
@@ -175,8 +372,20 @@ impl KronRidge {
     }
 
     /// Train the dual model, tracing risk (and AUC on `val` if given) per
-    /// MINRES iteration. Early-stops on validation AUC when
+    /// solver iteration. Early-stops on validation AUC when
     /// `cfg.patience > 0`.
+    ///
+    /// Solver dispatch ([`KronRidge::with_solver`]):
+    /// * [`RidgeSolver::Exact`] — closed-form eigendecomposition solve;
+    ///   errors unless the graph is complete. Returns an empty trace (there
+    ///   are no iterations to record).
+    /// * [`RidgeSolver::Auto`] (default) — the closed form when the graph is
+    ///   complete, the family is Kronecker, and no per-iteration monitoring
+    ///   is requested (`cfg.trace` / early stopping force the iterative
+    ///   path); MINRES otherwise. Incomplete-graph behavior is unchanged
+    ///   from earlier releases.
+    /// * [`RidgeSolver::Minres`] / [`RidgeSolver::Cg`] /
+    ///   [`RidgeSolver::PrecondCg`] — always iterative.
     pub fn fit_traced(
         &self,
         train: &Dataset,
@@ -186,7 +395,49 @@ impl KronRidge {
         if train.n_edges() == 0 {
             return Err("empty training set".into());
         }
+        let want_monitor = self.cfg.trace || (val.is_some() && self.cfg.patience > 0);
+        let try_closed = match self.solver {
+            RidgeSolver::Exact => true,
+            RidgeSolver::Auto => {
+                self.pairwise == PairwiseKernelKind::Kronecker
+                    && !want_monitor
+                    && self.cfg.lambda > 0.0
+            }
+            _ => false,
+        };
+        if try_closed {
+            if self.pairwise != PairwiseKernelKind::Kronecker {
+                return Err(format!(
+                    "solver 'exact' supports the Kronecker pairwise family only (got '{}')",
+                    self.pairwise.name()
+                ));
+            }
+            if self.cfg.lambda <= 0.0 {
+                return Err("solver 'exact' requires lambda > 0".into());
+            }
+            match EigContext::build(train, self.cfg.kernel_d, self.cfg.kernel_t, &self.compute) {
+                Some(ctx) => {
+                    let a = ctx.solve(self.cfg.lambda);
+                    let model = make_dual_model(train, &self.cfg, self.pairwise, a);
+                    return Ok((model, TrainTrace::default()));
+                }
+                None => {
+                    if self.solver == RidgeSolver::Exact {
+                        return Err("solver 'exact' requires a complete training graph \
+                                    (every (end, start) vertex pair labeled exactly once); \
+                                    use auto, minres, cg, or precond-cg instead"
+                            .into());
+                    }
+                    // Auto on an incomplete graph: fall through to MINRES.
+                }
+            }
+        }
+
         let timer = Timer::start();
+        let precond = match self.solver {
+            RidgeSolver::PrecondCg => Some(self.spectral_precond(train, self.cfg.lambda)?),
+            _ => None,
+        };
         let op = dual_kernel_op(
             train,
             self.cfg.kernel_d,
@@ -211,7 +462,6 @@ impl KronRidge {
         let mut a = vec![0.0; train.n_edges()];
         let mut trace = TrainTrace::default();
 
-        let want_monitor = self.cfg.trace || (val.is_some() && self.cfg.patience > 0);
         let solver_cfg = SolverConfig { max_iters: self.cfg.iterations, tol: self.cfg.tol };
         if want_monitor {
             let mut p = vec![0.0; train.n_edges()];
@@ -226,21 +476,63 @@ impl KronRidge {
                 trace.push(IterRecord { iter, risk, val_auc, elapsed_secs: timer.elapsed_secs() });
                 !trace.should_stop(patience)
             };
-            minres_cb(&sys, y, &mut a, &solver_cfg, Some(&mut monitor));
+            self.run_iterative(&sys, y, &mut a, &solver_cfg, precond.as_ref(), Some(&mut monitor));
         } else {
-            minres_cb(&sys, y, &mut a, &solver_cfg, None);
+            self.run_iterative(&sys, y, &mut a, &solver_cfg, precond.as_ref(), None);
         }
 
-        let model = DualModel {
-            dual_coef: a,
-            train_start_features: train.start_features.clone(),
-            train_end_features: train.end_features.clone(),
-            train_idx: train.kron_index(),
-            kernel_d: self.cfg.kernel_d,
-            kernel_t: self.cfg.kernel_t,
-            pairwise: self.pairwise,
-        };
-        Ok((model, trace))
+        Ok((make_dual_model(train, &self.cfg, self.pairwise, a), trace))
+    }
+
+    /// Dispatch one iterative dual solve according to `self.solver`.
+    /// `precond` must be `Some` iff the solver is [`RidgeSolver::PrecondCg`]
+    /// (the caller builds it so errors surface before the solve starts).
+    fn run_iterative(
+        &self,
+        sys: &dyn crate::linalg::LinOp,
+        y: &[f64],
+        a: &mut [f64],
+        solver_cfg: &SolverConfig,
+        precond: Option<&KronSpectralPrecond>,
+        monitor: Option<crate::linalg::solvers::IterMonitor<'_>>,
+    ) -> crate::linalg::SolveStats {
+        match self.solver {
+            RidgeSolver::Cg => cg_cb(sys, y, a, solver_cfg, monitor),
+            RidgeSolver::PrecondCg => {
+                let pc = precond.expect("precond-cg dispatch requires a preconditioner");
+                pcg_cb(sys, y, a, pc, solver_cfg, monitor)
+            }
+            _ => minres_cb(sys, y, a, solver_cfg, monitor),
+        }
+    }
+
+    /// Per-factor kernel eigendecompositions (`G` then `K`) for the spectral
+    /// preconditioner; Kronecker family only.
+    fn factor_eigs(&self, train: &Dataset) -> Result<(EigH, EigH), String> {
+        if self.pairwise != PairwiseKernelKind::Kronecker {
+            return Err(format!(
+                "solver 'precond-cg' supports the Kronecker pairwise family only (got '{}')",
+                self.pairwise.name()
+            ));
+        }
+        let threads = self.compute.threads;
+        let g = self.cfg.kernel_t.square_matrix_threaded(&train.end_features, threads);
+        let k = self.cfg.kernel_d.square_matrix_threaded(&train.start_features, threads);
+        Ok((eigh(&g), eigh(&k)))
+    }
+
+    /// Build the Kronecker spectral preconditioner for `Q + λI`.
+    fn spectral_precond(
+        &self,
+        train: &Dataset,
+        lambda: f64,
+    ) -> Result<KronSpectralPrecond, String> {
+        if lambda <= 0.0 {
+            return Err("solver 'precond-cg' requires lambda > 0".into());
+        }
+        let (g_eig, k_eig) = self.factor_eigs(train)?;
+        Ok(KronSpectralPrecond::new(&g_eig, &k_eig, train.kron_index(), lambda)
+            .with_threads(self.compute.threads))
     }
 
     /// Train one dual model per λ in `lambdas` through the **batched
@@ -255,6 +547,16 @@ impl KronRidge {
     /// one-element path is numerically (not bitwise) equivalent to
     /// [`KronRidge::fit`]; each returned model matches the standalone CG
     /// solve for its λ bit for bit.
+    ///
+    /// Solver dispatch: with [`RidgeSolver::Auto`]/[`RidgeSolver::Exact`] on
+    /// a complete training graph (Kronecker family, positive λ), the whole
+    /// path is solved **closed-form from one eigendecomposition pair** —
+    /// exactly two [`eigh`] calls no matter how many λ values (asserted via
+    /// [`crate::linalg::eig::eigh_count`] in the test suite).
+    /// [`RidgeSolver::PrecondCg`] runs [`block_pcg`] with one spectral
+    /// preconditioner per λ sharing the same decomposition pair. `Cg`,
+    /// `Minres` (no block MINRES exists; CG is the block iterative
+    /// workhorse), and `Auto` on incomplete graphs run [`block_cg`].
     pub fn fit_path(&self, train: &Dataset, lambdas: &[f64]) -> Result<Vec<DualModel>, String> {
         train.validate()?;
         if train.n_edges() == 0 {
@@ -262,6 +564,29 @@ impl KronRidge {
         }
         if lambdas.is_empty() {
             return Ok(Vec::new());
+        }
+        if matches!(self.solver, RidgeSolver::Auto | RidgeSolver::Exact) {
+            let eligible =
+                self.pairwise == PairwiseKernelKind::Kronecker && lambdas.iter().all(|&l| l > 0.0);
+            let ctx = if eligible {
+                EigContext::build(train, self.cfg.kernel_d, self.cfg.kernel_t, &self.compute)
+            } else {
+                None
+            };
+            if let Some(ctx) = ctx {
+                return Ok(lambdas
+                    .iter()
+                    .map(|&lambda| {
+                        make_dual_model(train, &self.cfg, self.pairwise, ctx.solve(lambda))
+                    })
+                    .collect());
+            }
+            if self.solver == RidgeSolver::Exact {
+                return Err("solver 'exact' requires the Kronecker pairwise family, a complete \
+                            training graph, and positive lambdas; use auto, cg, or precond-cg \
+                            instead"
+                    .into());
+            }
         }
         let op = dual_kernel_op(
             train,
@@ -278,16 +603,79 @@ impl KronRidge {
         }
         let mut duals = vec![0.0; n * k];
         let solver_cfg = SolverConfig { max_iters: self.cfg.iterations, tol: self.cfg.tol };
-        block_cg(&op, lambdas, &b, &mut duals, &solver_cfg);
+        if self.solver == RidgeSolver::PrecondCg {
+            if let Some(&bad) = lambdas.iter().find(|&&l| l <= 0.0) {
+                return Err(format!("solver 'precond-cg' requires lambda > 0 (got {bad})"));
+            }
+            let (g_eig, k_eig) = self.factor_eigs(train)?;
+            let preconds: Vec<KronSpectralPrecond> = lambdas
+                .iter()
+                .map(|&lambda| {
+                    KronSpectralPrecond::new(&g_eig, &k_eig, train.kron_index(), lambda)
+                        .with_threads(self.compute.threads)
+                })
+                .collect();
+            let precond_refs: Vec<&dyn Preconditioner> =
+                preconds.iter().map(|p| p as &dyn Preconditioner).collect();
+            block_pcg(&op, lambdas, &precond_refs, &b, &mut duals, &solver_cfg);
+        } else {
+            block_cg(&op, lambdas, &b, &mut duals, &solver_cfg);
+        }
         Ok((0..k)
-            .map(|j| DualModel {
-                dual_coef: duals[j * n..(j + 1) * n].to_vec(),
-                train_start_features: train.start_features.clone(),
-                train_end_features: train.end_features.clone(),
-                train_idx: train.kron_index(),
-                kernel_d: self.cfg.kernel_d,
-                kernel_t: self.cfg.kernel_t,
-                pairwise: self.pairwise,
+            .map(|j| {
+                make_dual_model(
+                    train,
+                    &self.cfg,
+                    self.pairwise,
+                    duals[j * n..(j + 1) * n].to_vec(),
+                )
+            })
+            .collect())
+    }
+
+    /// Leave-one-out cross-validation shortcut on a **complete** training
+    /// graph: for each λ, the vector of held-out predictions
+    /// `f₋ₕ(xₕ) = yₕ − aₕ / [(Q+λI)⁻¹]ₕₕ` for every edge `h` — the exact
+    /// result of `n` literal refits, from **one** eigendecomposition pair
+    /// for the whole λ grid (two [`eigh`] calls total; each λ then costs
+    /// four `q×m`-grid GEMMs).
+    ///
+    /// Errors if the pairwise family is not Kronecker, any λ is not
+    /// positive, or the training graph is incomplete.
+    pub fn loo_path(&self, train: &Dataset, lambdas: &[f64]) -> Result<Vec<Vec<f64>>, String> {
+        train.validate()?;
+        if train.n_edges() == 0 {
+            return Err("empty training set".into());
+        }
+        if self.pairwise != PairwiseKernelKind::Kronecker {
+            return Err(format!(
+                "the leave-one-out shortcut supports the Kronecker pairwise family only \
+                 (got '{}')",
+                self.pairwise.name()
+            ));
+        }
+        if let Some(&bad) = lambdas.iter().find(|&&l| l <= 0.0) {
+            return Err(format!("the leave-one-out shortcut requires lambda > 0 (got {bad})"));
+        }
+        let ctx = EigContext::build(train, self.cfg.kernel_d, self.cfg.kernel_t, &self.compute)
+            .ok_or_else(|| {
+                "the leave-one-out shortcut requires a complete training graph (every \
+                 (end, start) vertex pair labeled exactly once)"
+                    .to_string()
+            })?;
+        let qg2 = squared_elements(&ctx.g_eig.vectors);
+        let qk2 = squared_elements(&ctx.k_eig.vectors);
+        Ok(lambdas
+            .iter()
+            .map(|&lambda| {
+                let a = ctx.solve(lambda);
+                let diag = ctx.inverse_diagonal(lambda, &qg2, &qk2);
+                train
+                    .labels
+                    .iter()
+                    .zip(a.iter().zip(&diag))
+                    .map(|(y, (ai, di))| y - ai / di)
+                    .collect()
             })
             .collect())
     }
@@ -569,6 +957,148 @@ mod tests {
         let models =
             KronRidge::new(RidgeConfig::default()).fit_path(&train, &[]).unwrap();
         assert!(models.is_empty());
+    }
+
+    #[test]
+    fn solver_names_roundtrip() {
+        for solver in [
+            RidgeSolver::Auto,
+            RidgeSolver::Exact,
+            RidgeSolver::Minres,
+            RidgeSolver::Cg,
+            RidgeSolver::PrecondCg,
+        ] {
+            assert_eq!(RidgeSolver::parse(solver.name()).unwrap(), solver);
+        }
+        let err = RidgeSolver::parse("cholesky").unwrap_err();
+        assert!(err.contains("unknown solver 'cholesky'"), "{err}");
+    }
+
+    #[test]
+    fn auto_uses_closed_form_on_complete_graph_and_matches_oracle() {
+        let mut rng = Pcg32::seeded(430);
+        let train = crate::util::proptest::complete_dataset(&mut rng, 6, 5);
+        let cfg = RidgeConfig {
+            lambda: 0.5,
+            kernel_d: KernelKind::Gaussian { gamma: 0.3 },
+            kernel_t: KernelKind::Gaussian { gamma: 0.3 },
+            ..Default::default()
+        };
+        let before = crate::linalg::eig::eigh_count();
+        let model = KronRidge::new(cfg).fit(&train).unwrap();
+        assert_eq!(
+            crate::linalg::eig::eigh_count() - before,
+            2,
+            "closed form must cost exactly one eigendecomposition pair"
+        );
+        let exact = ridge_exact_dual(&train, &cfg, PairwiseKernelKind::Kronecker);
+        assert_allclose(&model.dual_coef, &exact, 1e-8, 1e-8);
+        // The explicit 'exact' solver takes the identical code path.
+        let em = KronRidge::new(cfg).with_solver(RidgeSolver::Exact).fit(&train).unwrap();
+        assert_eq!(em.dual_coef, model.dual_coef);
+    }
+
+    #[test]
+    fn exact_solver_rejects_ineligible_problems() {
+        // Incomplete graph (duplicate/missing edges).
+        let train = toy_train(431, 6, 5, 20);
+        let err = KronRidge::new(RidgeConfig { lambda: 0.5, ..Default::default() })
+            .with_solver(RidgeSolver::Exact)
+            .fit(&train)
+            .unwrap_err();
+        assert!(err.contains("complete training graph"), "{err}");
+        // Non-positive lambda.
+        let mut rng = Pcg32::seeded(432);
+        let complete = crate::util::proptest::complete_dataset(&mut rng, 4, 4);
+        let err = KronRidge::new(RidgeConfig { lambda: 0.0, ..Default::default() })
+            .with_solver(RidgeSolver::Exact)
+            .fit(&complete)
+            .unwrap_err();
+        assert!(err.contains("lambda > 0"), "{err}");
+        // Non-Kronecker pairwise family.
+        let homo = toy_homogeneous(433, 5, 15);
+        let cfg = RidgeConfig {
+            kernel_d: KernelKind::Gaussian { gamma: 0.4 },
+            kernel_t: KernelKind::Gaussian { gamma: 0.4 },
+            ..Default::default()
+        };
+        let err = KronRidge::new(cfg)
+            .with_pairwise(PairwiseKernelKind::SymmetricKron)
+            .with_solver(RidgeSolver::Exact)
+            .fit(&homo)
+            .unwrap_err();
+        assert!(err.contains("Kronecker pairwise family only"), "{err}");
+    }
+
+    #[test]
+    fn cg_and_precond_cg_match_minres_on_incomplete_graph() {
+        let train = toy_train(434, 8, 7, 25);
+        let cfg = RidgeConfig { lambda: 0.5, iterations: 500, tol: 1e-12, ..Default::default() };
+        let minres = KronRidge::new(cfg).with_solver(RidgeSolver::Minres).fit(&train).unwrap();
+        let cg = KronRidge::new(cfg).with_solver(RidgeSolver::Cg).fit(&train).unwrap();
+        let pcg = KronRidge::new(cfg).with_solver(RidgeSolver::PrecondCg).fit(&train).unwrap();
+        assert_allclose(&cg.dual_coef, &minres.dual_coef, 1e-6, 1e-6);
+        assert_allclose(&pcg.dual_coef, &minres.dual_coef, 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn fit_path_on_complete_graph_uses_one_decomposition_pair() {
+        let mut rng = Pcg32::seeded(435);
+        let train = crate::util::proptest::complete_dataset(&mut rng, 5, 4);
+        let lambdas = [0.1, 1.0, 10.0, 100.0];
+        let cfg = RidgeConfig {
+            kernel_d: KernelKind::Gaussian { gamma: 0.25 },
+            kernel_t: KernelKind::Gaussian { gamma: 0.25 },
+            ..Default::default()
+        };
+        let before = crate::linalg::eig::eigh_count();
+        let models = KronRidge::new(cfg).fit_path(&train, &lambdas).unwrap();
+        assert_eq!(
+            crate::linalg::eig::eigh_count() - before,
+            2,
+            "the whole λ grid must share one eigendecomposition pair"
+        );
+        assert_eq!(models.len(), lambdas.len());
+        for (model, &lambda) in models.iter().zip(&lambdas) {
+            let exact = ridge_exact_dual(
+                &train,
+                &RidgeConfig { lambda, ..cfg },
+                PairwiseKernelKind::Kronecker,
+            );
+            assert_allclose(&model.dual_coef, &exact, 1e-8, 1e-8);
+        }
+    }
+
+    #[test]
+    fn loo_path_requires_complete_graph_and_positive_lambda() {
+        let train = toy_train(436, 5, 4, 12);
+        let err =
+            KronRidge::new(RidgeConfig::default()).loo_path(&train, &[1.0]).unwrap_err();
+        assert!(err.contains("complete training graph"), "{err}");
+        let mut rng = Pcg32::seeded(437);
+        let complete = crate::util::proptest::complete_dataset(&mut rng, 4, 3);
+        let err =
+            KronRidge::new(RidgeConfig::default()).loo_path(&complete, &[0.0]).unwrap_err();
+        assert!(err.contains("lambda > 0"), "{err}");
+    }
+
+    #[test]
+    fn auto_with_trace_still_iterates_on_complete_graph() {
+        // Per-iteration monitoring (trace / early stopping) forces the
+        // iterative path even when the closed form would apply.
+        let mut rng = Pcg32::seeded(438);
+        let train = crate::util::proptest::complete_dataset(&mut rng, 6, 5);
+        let cfg = RidgeConfig {
+            lambda: 0.5,
+            iterations: 50,
+            trace: true,
+            tol: 1e-14,
+            ..Default::default()
+        };
+        let before = crate::linalg::eig::eigh_count();
+        let (_, trace) = KronRidge::new(cfg).fit_traced(&train, None).unwrap();
+        assert_eq!(crate::linalg::eig::eigh_count() - before, 0);
+        assert!(!trace.records.is_empty());
     }
 
     #[test]

@@ -1,11 +1,16 @@
 //! Hand-rolled property-testing harness (the `proptest` crate is unavailable
-//! offline).
+//! offline) plus the shared generators the unit, integration, and property
+//! tests draw their random-but-reproducible inputs from: SPD matrices,
+//! complete/incomplete edge indices, and whole pairwise datasets.
 //!
 //! A property is a closure over a seeded [`Pcg32`]; the harness runs it for
 //! `cases` independent seeds and reports the first failing seed so failures
 //! are reproducible with `check_seeded`.
 
 use super::rng::Pcg32;
+use crate::data::Dataset;
+use crate::gvt::KronIndex;
+use crate::linalg::Matrix;
 
 /// Number of cases to run per property (overridable via `KRONVT_PROP_CASES`).
 pub fn default_cases() -> usize {
@@ -44,6 +49,66 @@ pub fn check_seeded(seed: u64, prop: impl Fn(&mut Pcg32)) {
     prop(&mut rng);
 }
 
+/// Random symmetric positive-definite `n × n` matrix: `G·Gᵀ` plus a random
+/// positive diagonal shift, so eigenvalues are strictly positive but the
+/// conditioning varies from case to case.
+pub fn spd_matrix(rng: &mut Pcg32, n: usize) -> Matrix {
+    let g = Matrix::from_fn(n, n, |_, _| rng.normal());
+    let mut a = g.matmul_nt(&g);
+    a.add_diag(0.1 + rng.uniform() * n as f64);
+    a
+}
+
+/// Edge index enumerating the **complete** `q × m` graph — every
+/// (end-vertex, start-vertex) pair exactly once — in a shuffled order, so
+/// completeness detection can't rely on enumeration order.
+pub fn complete_edge_index(rng: &mut Pcg32, q: usize, m: usize) -> KronIndex {
+    let mut pairs: Vec<(u32, u32)> = (0..q as u32)
+        .flat_map(|g| (0..m as u32).map(move |k| (g, k)))
+        .collect();
+    rng.shuffle(&mut pairs);
+    KronIndex::new(pairs.iter().map(|p| p.0).collect(), pairs.iter().map(|p| p.1).collect())
+}
+
+/// Edge index over `n_edges` **distinct** cells of the `q × m` grid (no
+/// duplicate edges; incomplete whenever `n_edges < q·m`).
+pub fn incomplete_edge_index(rng: &mut Pcg32, q: usize, m: usize, n_edges: usize) -> KronIndex {
+    assert!(n_edges <= q * m, "cannot draw {n_edges} distinct edges from a {q}x{m} grid");
+    let cells = rng.sample_indices(q * m, n_edges);
+    KronIndex::new(
+        cells.iter().map(|&c| (c / m) as u32).collect(),
+        cells.iter().map(|&c| (c % m) as u32).collect(),
+    )
+}
+
+fn dataset_from_index(rng: &mut Pcg32, q: usize, m: usize, idx: KronIndex, name: &str) -> Dataset {
+    let d = 3;
+    let r = 2;
+    let labels = (0..idx.len()).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+    Dataset {
+        start_features: Matrix::from_fn(m, d, |_, _| rng.normal()),
+        end_features: Matrix::from_fn(q, r, |_, _| rng.normal()),
+        start_idx: idx.right,
+        end_idx: idx.left,
+        labels,
+        name: name.to_string(),
+    }
+}
+
+/// Random dataset whose edge index enumerates the complete `q × m` graph in
+/// shuffled order: Gaussian vertex features, ±1 labels.
+pub fn complete_dataset(rng: &mut Pcg32, q: usize, m: usize) -> Dataset {
+    let idx = complete_edge_index(rng, q, m);
+    dataset_from_index(rng, q, m, idx, "proptest-complete")
+}
+
+/// Random dataset over `n_edges` distinct cells of the `q × m` grid:
+/// Gaussian vertex features, ±1 labels.
+pub fn incomplete_dataset(rng: &mut Pcg32, q: usize, m: usize, n_edges: usize) -> Dataset {
+    let idx = incomplete_edge_index(rng, q, m, n_edges);
+    dataset_from_index(rng, q, m, idx, "proptest-incomplete")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -67,5 +132,57 @@ mod tests {
         let err = result.unwrap_err();
         let msg = err.downcast_ref::<String>().unwrap();
         assert!(msg.contains("seed"), "msg={msg}");
+    }
+
+    #[test]
+    fn spd_matrix_is_symmetric_with_positive_diagonal() {
+        check_n(3, 16, |rng| {
+            let n = 1 + rng.below(12);
+            let a = spd_matrix(rng, n);
+            for i in 0..n {
+                assert!(a.get(i, i) > 0.0);
+                for j in 0..n {
+                    assert_eq!(a.get(i, j), a.get(j, i));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn complete_edge_index_is_complete() {
+        check_n(4, 16, |rng| {
+            let q = 1 + rng.below(6);
+            let m = 1 + rng.below(6);
+            let idx = complete_edge_index(rng, q, m);
+            assert_eq!(idx.len(), q * m);
+            assert!(idx.complete_layout(q, m).is_some());
+        });
+    }
+
+    #[test]
+    fn incomplete_edge_index_has_distinct_cells() {
+        check_n(5, 16, |rng| {
+            let (q, m) = (2 + rng.below(5), 2 + rng.below(5));
+            let n_edges = 1 + rng.below(q * m - 1); // strictly fewer than q·m
+            let idx = incomplete_edge_index(rng, q, m, n_edges);
+            assert_eq!(idx.len(), n_edges);
+            assert!(idx.validate(q, m).is_ok());
+            let flats = idx.flat(m);
+            let mut seen = std::collections::HashSet::new();
+            assert!(flats.iter().all(|&f| seen.insert(f)), "duplicate edge");
+            assert!(idx.complete_layout(q, m).is_none());
+        });
+    }
+
+    #[test]
+    fn generated_datasets_validate() {
+        check_n(6, 8, |rng| {
+            let complete = complete_dataset(rng, 3, 4);
+            complete.validate().expect("complete dataset must validate");
+            assert!(complete.kron_index().complete_layout(3, 4).is_some());
+            let sparse = incomplete_dataset(rng, 3, 4, 7);
+            sparse.validate().expect("incomplete dataset must validate");
+            assert!(sparse.kron_index().complete_layout(3, 4).is_none());
+        });
     }
 }

@@ -1,0 +1,228 @@
+//! Oracle suite for the eigendecomposition fast paths: the closed-form
+//! complete-graph ridge solve, the Kronecker spectral preconditioner, and
+//! the leave-one-out shortcut, each pinned against an independent
+//! ground-truth computation:
+//!
+//! 1. closed form vs. the dense Cholesky oracle (`ridge_exact_dual`) and
+//!    vs. iterative CG, bitwise identical across thread counts;
+//! 2. preconditioned CG vs. the oracle, and **strictly fewer iterations**
+//!    than plain CG on an ill-conditioned near-complete checkerboard;
+//! 3. the LOO shortcut vs. `n` literal leave-one-out refits;
+//! 4. a whole λ grid (the `cv --lambdas` workload) costing exactly one
+//!    eigendecomposition pair, asserted via the `eigh` call counter.
+
+use std::sync::Arc;
+
+use kronvt::api::{Compute, Learner};
+use kronvt::data::checkerboard::CheckerboardConfig;
+use kronvt::data::Dataset;
+use kronvt::gvt::operator::RidgeSystemOp;
+use kronvt::gvt::{KronKernelOp, KronSpectralPrecond, PairwiseKernelKind};
+use kronvt::kernels::KernelKind;
+use kronvt::linalg::solvers::{cg, pcg, SolverConfig};
+use kronvt::linalg::vecops::assert_allclose;
+use kronvt::linalg::{eigh, eigh_count, Matrix};
+use kronvt::train::ridge::ridge_exact_dual;
+use kronvt::train::{KronRidge, RidgeConfig, RidgeSolver};
+use kronvt::util::proptest::{complete_dataset, incomplete_dataset};
+use kronvt::util::rng::Pcg32;
+
+const GAUSS: KernelKind = KernelKind::Gaussian { gamma: 0.3 };
+
+fn gauss_cfg(lambda: f64) -> RidgeConfig {
+    RidgeConfig { lambda, kernel_d: GAUSS, kernel_t: GAUSS, ..Default::default() }
+}
+
+/// Materialize the Kronecker training kernel `Q[h][h'] = G[e_h,e_h'] ·
+/// K[s_h,s_h']` — an independent dense reference, no GVT code involved.
+fn dense_q(train: &Dataset) -> Matrix {
+    let g = GAUSS.square_matrix(&train.end_features);
+    let k = GAUSS.square_matrix(&train.start_features);
+    let n = train.n_edges();
+    Matrix::from_fn(n, n, |h1, h2| {
+        g.get(train.end_idx[h1] as usize, train.end_idx[h2] as usize)
+            * k.get(train.start_idx[h1] as usize, train.start_idx[h2] as usize)
+    })
+}
+
+#[test]
+fn closed_form_matches_dense_cholesky_oracle_across_threads() {
+    let mut rng = Pcg32::seeded(0xE161);
+    let train = complete_dataset(&mut rng, 7, 5);
+    let cfg = gauss_cfg(0.5);
+    let oracle = ridge_exact_dual(&train, &cfg, PairwiseKernelKind::Kronecker);
+    let serial = KronRidge::new(cfg).fit(&train).unwrap();
+    assert_allclose(&serial.dual_coef, &oracle, 1e-8, 1e-8);
+    // Bitwise deterministic across thread counts.
+    for threads in [2, 4] {
+        let par = KronRidge::new(cfg)
+            .with_compute(Compute::threads(threads))
+            .fit(&train)
+            .unwrap();
+        assert_eq!(serial.dual_coef, par.dual_coef, "threads={threads}");
+    }
+    // The explicit 'exact' solver takes the identical path.
+    let exact = KronRidge::new(cfg).with_solver(RidgeSolver::Exact).fit(&train).unwrap();
+    assert_eq!(serial.dual_coef, exact.dual_coef);
+}
+
+#[test]
+fn closed_form_agrees_with_iterative_cg() {
+    let mut rng = Pcg32::seeded(0xE162);
+    let train = complete_dataset(&mut rng, 6, 6);
+    let cfg = RidgeConfig { iterations: 800, tol: 1e-13, ..gauss_cfg(0.5) };
+    let closed = KronRidge::new(cfg).with_solver(RidgeSolver::Exact).fit(&train).unwrap();
+    let iterative = KronRidge::new(cfg).with_solver(RidgeSolver::Cg).fit(&train).unwrap();
+    assert_allclose(&closed.dual_coef, &iterative.dual_coef, 1e-8, 1e-8);
+}
+
+#[test]
+fn precond_cg_matches_dense_cholesky_oracle_on_incomplete_graph() {
+    let mut rng = Pcg32::seeded(0xE163);
+    let train = incomplete_dataset(&mut rng, 8, 7, 40);
+    let cfg = RidgeConfig { iterations: 800, tol: 1e-13, ..gauss_cfg(0.5) };
+    let oracle = ridge_exact_dual(&train, &cfg, PairwiseKernelKind::Kronecker);
+    let model = KronRidge::new(cfg).with_solver(RidgeSolver::PrecondCg).fit(&train).unwrap();
+    assert_allclose(&model.dual_coef, &oracle, 1e-8, 1e-8);
+}
+
+#[test]
+fn precond_cg_strictly_beats_plain_cg_when_ill_conditioned() {
+    // Near-complete checkerboard with a wide-spectrum kernel and tiny λ:
+    // plain CG grinds; the complete-graph surrogate inverse clusters the
+    // spectrum near 1.
+    let train = CheckerboardConfig {
+        m: 16,
+        q: 16,
+        density: 0.85,
+        noise: 0.1,
+        feature_range: 8.0,
+        seed: 11,
+    }
+    .generate();
+    let kernel = KernelKind::Gaussian { gamma: 0.02 };
+    let lambda = 1e-4;
+    let g = kernel.square_matrix(&train.end_features);
+    let k = kernel.square_matrix(&train.start_features);
+    let idx = train.kron_index();
+    let n = idx.len();
+    let op = KronKernelOp::new(Arc::new(g.clone()), Arc::new(k.clone()), idx.clone());
+    let sys = RidgeSystemOp { op: &op, lambda };
+    let precond = KronSpectralPrecond::new(&eigh(&g), &eigh(&k), idx, lambda);
+    let cfg = SolverConfig { max_iters: 1000, tol: 1e-9 };
+
+    let mut x_cg = vec![0.0; n];
+    let cg_stats = cg(&sys, &train.labels, &mut x_cg, &cfg);
+    let mut x_pcg = vec![0.0; n];
+    let pcg_stats = pcg(&sys, &train.labels, &mut x_pcg, &precond, &cfg);
+
+    assert!(pcg_stats.converged, "residual={}", pcg_stats.residual_norm);
+    assert!(
+        pcg_stats.iterations < cg_stats.iterations,
+        "preconditioned CG must take strictly fewer iterations ({} vs {})",
+        pcg_stats.iterations,
+        cg_stats.iterations
+    );
+    // Both agree with the dense Cholesky oracle (loosely: the residual
+    // tolerance divided by λ bounds the solution error).
+    let mut q_dense = Matrix::from_fn(n, n, |h1, h2| {
+        g.get(train.end_idx[h1] as usize, train.end_idx[h2] as usize)
+            * k.get(train.start_idx[h1] as usize, train.start_idx[h2] as usize)
+    });
+    q_dense.add_diag(lambda);
+    let oracle = q_dense.solve_spd(&train.labels).unwrap();
+    assert_allclose(&x_pcg, &oracle, 1e-3, 1e-3);
+}
+
+#[test]
+fn precond_cg_is_exact_inverse_on_complete_graph() {
+    // Density 1.0 ⇒ every vertex pair labeled ⇒ R is a permutation and the
+    // preconditioner is the exact inverse: PCG converges almost immediately.
+    let train = CheckerboardConfig {
+        m: 9,
+        q: 8,
+        density: 1.0,
+        noise: 0.1,
+        feature_range: 8.0,
+        seed: 12,
+    }
+    .generate();
+    let lambda = 0.3;
+    let g = GAUSS.square_matrix(&train.end_features);
+    let k = GAUSS.square_matrix(&train.start_features);
+    let idx = train.kron_index();
+    assert!(idx.complete_layout(8, 9).is_some(), "density 1.0 must give a complete graph");
+    let n = idx.len();
+    let op = KronKernelOp::new(Arc::new(g.clone()), Arc::new(k.clone()), idx.clone());
+    let sys = RidgeSystemOp { op: &op, lambda };
+    let precond = KronSpectralPrecond::new(&eigh(&g), &eigh(&k), idx, lambda);
+    let cfg = SolverConfig { max_iters: 100, tol: 1e-10 };
+    let mut x = vec![0.0; n];
+    let stats = pcg(&sys, &train.labels, &mut x, &precond, &cfg);
+    assert!(stats.converged);
+    assert!(stats.iterations <= 3, "exact-inverse preconditioning took {}", stats.iterations);
+    let mut x_cg = vec![0.0; n];
+    cg(&sys, &train.labels, &mut x_cg, &cfg);
+    assert_allclose(&x, &x_cg, 1e-6, 1e-6);
+}
+
+#[test]
+fn loo_path_matches_literal_refits() {
+    let mut rng = Pcg32::seeded(0xE164);
+    let train = complete_dataset(&mut rng, 4, 3);
+    let n = train.n_edges();
+    let lambdas = [0.5, 2.0];
+    let loo = KronRidge::new(gauss_cfg(1.0)).loo_path(&train, &lambdas).unwrap();
+    assert_eq!(loo.len(), lambdas.len());
+    let q_dense = dense_q(&train);
+    for (grid, &lambda) in loo.iter().zip(&lambdas) {
+        assert_eq!(grid.len(), n);
+        for h in 0..n {
+            // Literal refit: drop edge h, solve the (n-1)-edge ridge system
+            // on the materialized kernel, predict edge h.
+            let keep: Vec<usize> = (0..n).filter(|&j| j != h).collect();
+            let mut q_sub =
+                Matrix::from_fn(n - 1, n - 1, |i, j| q_dense.get(keep[i], keep[j]));
+            q_sub.add_diag(lambda);
+            let y_sub: Vec<f64> = keep.iter().map(|&j| train.labels[j]).collect();
+            let a_sub = q_sub.solve_spd(&y_sub).unwrap();
+            let pred: f64 =
+                keep.iter().zip(&a_sub).map(|(&j, aj)| q_dense.get(h, j) * aj).sum();
+            assert!(
+                (grid[h] - pred).abs() <= 1e-8 * (1.0 + pred.abs()),
+                "λ={lambda} edge {h}: shortcut {} vs literal {pred}",
+                grid[h]
+            );
+        }
+    }
+}
+
+#[test]
+fn lambda_grid_costs_one_decomposition_pair() {
+    // The `cv --lambdas` workload: on a complete training graph the whole λ
+    // grid — any length — must cost exactly two eigh calls (one per kernel
+    // factor), both through the raw trainer and the Learner builder.
+    let mut rng = Pcg32::seeded(0xE165);
+    let train = complete_dataset(&mut rng, 6, 5);
+    let lambdas = [0.01, 0.1, 1.0, 10.0, 100.0];
+
+    let before = eigh_count();
+    let models = KronRidge::new(gauss_cfg(1.0)).fit_path(&train, &lambdas).unwrap();
+    assert_eq!(eigh_count() - before, 2, "fit_path must share one decomposition pair");
+    assert_eq!(models.len(), lambdas.len());
+    for (model, &lambda) in models.iter().zip(&lambdas) {
+        let oracle =
+            ridge_exact_dual(&train, &gauss_cfg(lambda), PairwiseKernelKind::Kronecker);
+        assert_allclose(&model.dual_coef, &oracle, 1e-8, 1e-8);
+    }
+
+    let before = eigh_count();
+    let trained = Learner::ridge().kernel(GAUSS).fit_path(&train, &lambdas).unwrap();
+    assert_eq!(eigh_count() - before, 2, "Learner::fit_path must share one pair");
+    assert_eq!(trained.len(), lambdas.len());
+
+    let before = eigh_count();
+    let loo = KronRidge::new(gauss_cfg(1.0)).loo_path(&train, &lambdas).unwrap();
+    assert_eq!(eigh_count() - before, 2, "loo_path must share one pair");
+    assert_eq!(loo.len(), lambdas.len());
+}
