@@ -4,7 +4,8 @@
 # sections written by a real run drop their 'placeholder' flag).
 #
 # bench_gvt_micro additionally covers the pairwise kernel family table
-# (BENCH_pairwise.json), so both --quick and --smoke refresh it.
+# (BENCH_pairwise.json) and the D-way tensor-chain table
+# (BENCH_tensor.json), so both --quick and --smoke refresh them.
 # bench_convergence writes the eigendecomposition fast-path comparison
 # (BENCH_eigen.json); in smoke mode only that JSON section runs (-- --smoke).
 #

@@ -28,10 +28,12 @@ run cargo fmt --check
 run cargo clippy --all-targets -- -D warnings
 run cargo build --release
 run cargo test -q
-# The eigendecomposition fast-path oracle suite by name, so a test-harness
-# filter can never silently drop the closed-form/preconditioner acceptance
-# checks (tests also run as part of `cargo test -q` above).
+# The eigendecomposition fast-path and tensor-chain acceptance suites by
+# name, so a test-harness filter can never silently drop the
+# closed-form/preconditioner checks or the D=2-bitwise / D=3-oracle chain
+# pins (both also run as part of `cargo test -q` above).
 run cargo test -q --test eigen_paths
+run cargo test -q --test tensor_chain
 run cargo test --doc
 run env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 

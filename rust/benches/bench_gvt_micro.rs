@@ -25,6 +25,12 @@
 //! and records per-variant apply times into `BENCH_pairwise.json`
 //! (section `"pairwise"`).
 //!
+//! A fifth table measures the **D-way tensor-chain apply**
+//! ([`TensorKernelOp`] at D = 2 / 3 / 4, matched vertex budgets) serially
+//! and at 4 threads, asserting the D = 2 chain bitwise against the
+//! two-factor operator first, and records per-order apply times into
+//! `BENCH_tensor.json` (section `"tensor_chain"`).
+//!
 //! Run: `cargo bench --bench bench_gvt_micro [-- --quick|--full]`
 
 use std::sync::Arc;
@@ -35,7 +41,7 @@ use kronvt::gvt::dense::dense_apply;
 use kronvt::gvt::explicit::explicit_apply_streaming;
 use kronvt::gvt::{
     gvt_apply_into, Branch, EdgePlan, GvtEngine, GvtWorkspace, KronIndex, PairwiseKernelKind,
-    PairwiseOp,
+    PairwiseOp, TensorIndex, TensorKernelOp,
 };
 use kronvt::linalg::vecops::assert_allclose;
 use kronvt::linalg::Matrix;
@@ -410,6 +416,85 @@ fn main() {
     match update_json_file(&out_pair, "pairwise", pair_section) {
         Ok(()) => println!("\nwrote pairwise-family results to {}", out_pair.display()),
         Err(err) => eprintln!("\nfailed to write {}: {err}", out_pair.display()),
+    }
+
+    // ---- D-way tensor chains: TensorKernelOp applies at D = 2 / 3 / 4 ----
+    // Vertex budgets are matched across orders (Π_d m_d ≈ constant) so the
+    // rows compare chain-pipeline overhead, not problem size. The D = 2 row
+    // is gated bitwise against the two-factor KronKernelOp (it must be the
+    // same pipeline), and every row gates 4-thread against serial bitwise.
+    let chain_n: usize = if full {
+        80_000
+    } else if quick {
+        5_000
+    } else {
+        20_000
+    };
+    let chain_shapes: &[&[usize]] = &[&[200, 200], &[60, 60, 60][..], &[25, 25, 25, 25][..]];
+    println!();
+    println!(
+        "{:>14} {:>8} | {:>10} {:>10} | {:>7}",
+        "dims", "n", "chain-1t", "chain-4t", "spd-4t"
+    );
+    let mut chain_rows = Vec::new();
+    for &dims in chain_shapes {
+        let factors: Vec<Arc<Matrix>> =
+            dims.iter().map(|&d| Arc::new(random_kernel(&mut rng, d))).collect();
+        let idx = TensorIndex::new(
+            dims.iter().map(|&d| (0..chain_n).map(|_| rng.below(d) as u32).collect()).collect(),
+        );
+        let v = rng.normal_vec(chain_n);
+        let op = TensorKernelOp::new(factors.clone(), idx.clone());
+        let op_4t = TensorKernelOp::new(factors.clone(), idx.clone()).with_threads(4);
+        let mut u = vec![0.0; chain_n];
+        let mut u_4t = vec![0.0; chain_n];
+        op.apply_into(&v, &mut u);
+        op_4t.apply_into(&v, &mut u_4t);
+        assert_eq!(u, u_4t, "chain apply diverged across thread counts at D={}", dims.len());
+        if dims.len() == 2 {
+            let kron = kronvt::gvt::KronKernelOp::new(
+                factors[0].clone(),
+                factors[1].clone(),
+                idx.to_kron().expect("two-mode index"),
+            );
+            let mut u_kron = vec![0.0; chain_n];
+            kron.apply_into(&v, &mut u_kron);
+            assert_eq!(u, u_kron, "D=2 chain diverged from the two-factor operator");
+        }
+        let runner = BenchRunner::quick();
+        let t_1t = runner.run(|| op.apply_into(&v, &mut u)).min_secs;
+        let t_4t = runner.run(|| op_4t.apply_into(&v, &mut u_4t)).min_secs;
+        let dims_str =
+            dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x");
+        println!(
+            "{:>14} {:>8} | {:>10} {:>10} | {:>6.2}x",
+            dims_str,
+            chain_n,
+            fmt_secs(t_1t),
+            fmt_secs(t_4t),
+            t_1t / t_4t,
+        );
+        chain_rows.push(Json::obj(vec![
+            ("order", Json::from(dims.len())),
+            ("dims", Json::Arr(dims.iter().map(|&d| Json::from(d)).collect())),
+            ("n", Json::from(chain_n)),
+            ("chain_1t_secs", Json::from(t_1t)),
+            ("chain_4t_secs", Json::from(t_4t)),
+            ("speedup_4t", Json::from(t_1t / t_4t)),
+        ]));
+    }
+    let chain_section = Json::obj(vec![
+        ("bench", Json::from("bench_gvt_micro")),
+        ("host_threads", Json::from(host_threads)),
+        ("full", Json::from(full)),
+        ("rows", Json::Arr(chain_rows)),
+    ]);
+    let out_chain = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_tensor.json");
+    match update_json_file(&out_chain, "tensor_chain", chain_section) {
+        Ok(()) => println!("\nwrote tensor-chain results to {}", out_chain.display()),
+        Err(err) => eprintln!("\nfailed to write {}: {err}", out_chain.display()),
     }
     println!("bench_gvt_micro done");
 }

@@ -1,8 +1,14 @@
-//! The portable `kronvt-model/v1` artifact: a versioned JSON document
-//! holding everything a fresh process needs to reproduce a trained model's
+//! The portable `kronvt-model` artifact: a versioned JSON document holding
+//! everything a fresh process needs to reproduce a trained model's
 //! predictions **bit for bit** — dual coefficients (or primal weights), the
 //! pairwise kernel family, kernel hyperparameters, the training vertex
 //! features and edge index, λ, and the regularization (training) trace.
+//!
+//! Two format versions coexist: dual and primal models write
+//! `kronvt-model/v1` (unchanged from earlier builds, so old readers keep
+//! working), and D-way tensor-chain models write `kronvt-model/v2`, which
+//! stores one kernel, one feature matrix, and one index column **per
+//! mode**. This build loads both.
 //!
 //! Fidelity rests on two properties of [`crate::util::json`]:
 //!
@@ -17,18 +23,22 @@
 //!
 //! See `docs/API.md` for the full schema.
 
-use crate::gvt::{KronIndex, PairwiseKernelKind};
+use crate::gvt::{KronIndex, PairwiseKernelKind, TensorIndex};
 use crate::kernels::KernelKind;
 use crate::linalg::Matrix;
-use crate::model::{DualModel, PrimalModel};
+use crate::model::{DualModel, PrimalModel, TensorModel};
 use crate::train::{IterRecord, TrainTrace};
 use crate::util::json::Json;
 
 use super::trained::ModelInner;
 use super::TrainedModel;
 
-/// The artifact format identifier this build reads and writes.
+/// The artifact format identifier written for dual and primal models.
 pub const FORMAT: &str = "kronvt-model/v1";
+
+/// The artifact format identifier written for tensor-chain models (per-mode
+/// kernels / features / index columns). This build reads both versions.
+pub const FORMAT_V2: &str = "kronvt-model/v2";
 
 /// Error unless every entry of `xs` is finite. Applied on **both** sides of
 /// the round trip: save refuses to write a lossy document, and load refuses
@@ -56,6 +66,18 @@ fn idx_to_json(idx: &KronIndex) -> Json {
     ])
 }
 
+fn tensor_idx_to_json(idx: &TensorIndex) -> Json {
+    Json::obj(vec![(
+        "modes",
+        Json::Arr(
+            idx.modes
+                .iter()
+                .map(|col| Json::Arr(col.iter().map(|&i| Json::from(i as usize)).collect()))
+                .collect(),
+        ),
+    )])
+}
+
 fn trace_to_json(trace: &TrainTrace) -> Json {
     let finite_or_null = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
     Json::Arr(
@@ -74,13 +96,18 @@ fn trace_to_json(trace: &TrainTrace) -> Json {
     )
 }
 
-/// Serialize a [`TrainedModel`] to the `kronvt-model/v1` document.
+/// Serialize a [`TrainedModel`] to its versioned document
+/// (`kronvt-model/v1` for dual / primal, `kronvt-model/v2` for tensor).
 pub fn to_json(model: &TrainedModel) -> Result<Json, String> {
     if !model.lambda.is_finite() {
         return Err(format!("lambda is non-finite ({})", model.lambda));
     }
+    let format = match &model.inner {
+        ModelInner::Tensor(_) => FORMAT_V2,
+        ModelInner::Dual(_) | ModelInner::Primal(_) => FORMAT,
+    };
     let mut pairs = vec![
-        ("format", Json::from(FORMAT)),
+        ("format", Json::from(format)),
         ("lambda", Json::Num(model.lambda)),
         ("trace", trace_to_json(&model.trace)),
     ];
@@ -109,6 +136,29 @@ pub fn to_json(model: &TrainedModel) -> Result<Json, String> {
                 ("w", Json::num_arr(&m.w)),
                 ("d_features", Json::from(m.d_features)),
                 ("r_features", Json::from(m.r_features)),
+            ]);
+        }
+        ModelInner::Tensor(m) => {
+            m.validate()?;
+            ensure_finite(&m.dual_coef, "dual_coef")?;
+            for (d, f) in m.train_features.iter().enumerate() {
+                ensure_finite(f.data(), &format!("train_features[{d}].data"))?;
+            }
+            for (d, &k) in m.kernels.iter().enumerate() {
+                ensure_finite_kernel(k, &format!("mode_kernels[{d}]"))?;
+            }
+            pairs.extend([
+                ("kind", Json::from("tensor")),
+                (
+                    "mode_kernels",
+                    Json::Arr(m.kernels.iter().map(|k| Json::from(k.name())).collect()),
+                ),
+                ("dual_coef", Json::num_arr(&m.dual_coef)),
+                ("train_idx", tensor_idx_to_json(&m.train_idx)),
+                (
+                    "train_features",
+                    Json::Arr(m.train_features.iter().map(matrix_to_json).collect()),
+                ),
             ]);
         }
     }
@@ -164,38 +214,44 @@ fn num_vec(json: &Json, key: &str) -> Result<Vec<f64>, String> {
         .collect()
 }
 
-fn u32_vec(json: &Json, key: &str) -> Result<Vec<u32>, String> {
-    require(json, key)?
-        .as_arr()
-        .ok_or_else(|| format!("artifact field '{key}' must be an array"))?
+fn u32_items(arr: &Json, what: &str) -> Result<Vec<u32>, String> {
+    arr.as_arr()
+        .ok_or_else(|| format!("artifact field '{what}' must be an array"))?
         .iter()
         .enumerate()
         .map(|(i, v)| {
             v.as_usize()
                 .filter(|&n| n <= u32::MAX as usize)
                 .map(|n| n as u32)
-                .ok_or_else(|| format!("artifact field '{key}[{i}]' must be a vertex index"))
+                .ok_or_else(|| format!("artifact field '{what}[{i}]' must be a vertex index"))
         })
         .collect()
 }
 
-fn matrix_from_json(json: &Json, key: &str) -> Result<Matrix, String> {
-    let obj = require(json, key)?;
-    let rows = usize_field(obj, "rows").map_err(|e| format!("{key}: {e}"))?;
-    let cols = usize_field(obj, "cols").map_err(|e| format!("{key}: {e}"))?;
-    let data = num_vec(obj, "data").map_err(|e| format!("{key}: {e}"))?;
+fn u32_vec(json: &Json, key: &str) -> Result<Vec<u32>, String> {
+    u32_items(require(json, key)?, key)
+}
+
+fn matrix_from_obj(obj: &Json, what: &str) -> Result<Matrix, String> {
+    let rows = usize_field(obj, "rows").map_err(|e| format!("{what}: {e}"))?;
+    let cols = usize_field(obj, "cols").map_err(|e| format!("{what}: {e}"))?;
+    let data = num_vec(obj, "data").map_err(|e| format!("{what}: {e}"))?;
     // checked_mul: a corrupt artifact with absurd dimensions must be
     // rejected here, not wrap around and panic later inside predict.
     let expected = rows.checked_mul(cols).ok_or_else(|| {
-        format!("artifact field '{key}' dimensions {rows}x{cols} overflow")
+        format!("artifact field '{what}' dimensions {rows}x{cols} overflow")
     })?;
     if data.len() != expected {
         return Err(format!(
-            "artifact field '{key}' claims {rows}x{cols} but carries {} values",
+            "artifact field '{what}' claims {rows}x{cols} but carries {} values",
             data.len()
         ));
     }
     Ok(Matrix::from_vec(rows, cols, data))
+}
+
+fn matrix_from_json(json: &Json, key: &str) -> Result<Matrix, String> {
+    matrix_from_obj(require(json, key)?, key)
 }
 
 fn trace_from_json(json: &Json) -> TrainTrace {
@@ -215,13 +271,14 @@ fn trace_from_json(json: &Json) -> TrainTrace {
     trace
 }
 
-/// Deserialize and validate a `kronvt-model/v1` document.
+/// Deserialize and validate a `kronvt-model/v1` or `/v2` document.
 pub fn from_json(json: &Json) -> Result<TrainedModel, String> {
     match json.get("format").and_then(|f| f.as_str()) {
-        Some(FORMAT) => {}
+        Some(FORMAT) | Some(FORMAT_V2) => {}
         Some(other) if other.starts_with("kronvt-model/") => {
             return Err(format!(
-                "unsupported model artifact version '{other}' (this build reads '{FORMAT}')"
+                "unsupported model artifact version '{other}' (this build reads \
+                 '{FORMAT}' and '{FORMAT_V2}')"
             ))
         }
         Some(other) => {
@@ -237,7 +294,8 @@ pub fn from_json(json: &Json) -> Result<TrainedModel, String> {
     let inner = match str_field(json, "kind")? {
         "dual" => ModelInner::Dual(dual_from_json(json)?),
         "primal" => ModelInner::Primal(primal_from_json(json)?),
-        other => return Err(format!("unknown model kind '{other}' (dual, primal)")),
+        "tensor" => ModelInner::Tensor(tensor_from_json(json)?),
+        other => return Err(format!("unknown model kind '{other}' (dual, primal, tensor)")),
     };
     Ok(TrainedModel { inner, lambda, trace })
 }
@@ -311,6 +369,61 @@ fn primal_from_json(json: &Json) -> Result<PrimalModel, String> {
     Ok(PrimalModel { w, d_features, r_features })
 }
 
+fn tensor_from_json(json: &Json) -> Result<TensorModel, String> {
+    let kernels: Vec<KernelKind> = require(json, "mode_kernels")?
+        .as_arr()
+        .ok_or_else(|| "artifact field 'mode_kernels' must be an array".to_string())?
+        .iter()
+        .enumerate()
+        .map(|(d, v)| {
+            v.as_str()
+                .ok_or_else(|| format!("artifact field 'mode_kernels[{d}]' must be a string"))
+                .and_then(KernelKind::parse)
+        })
+        .collect::<Result<_, _>>()?;
+    let dual_coef = num_vec(json, "dual_coef")?;
+    let idx_obj = require(json, "train_idx")?;
+    let mode_arrs = require(idx_obj, "modes")
+        .map_err(|e| format!("train_idx: {e}"))?
+        .as_arr()
+        .ok_or_else(|| "artifact field 'train_idx.modes' must be an array".to_string())?;
+    let mut modes = Vec::with_capacity(mode_arrs.len());
+    for (d, col) in mode_arrs.iter().enumerate() {
+        modes.push(u32_items(col, &format!("train_idx.modes[{d}]"))?);
+    }
+    // Pre-check the TensorIndex invariants: a corrupt document must error,
+    // not trip the constructor's assert.
+    if modes.is_empty() {
+        return Err("train_idx.modes must not be empty".into());
+    }
+    if let Some(d) = modes.iter().position(|col| col.len() != modes[0].len()) {
+        return Err(format!(
+            "train_idx.modes[{d}] has {} entries but mode 0 has {}",
+            modes[d].len(),
+            modes[0].len()
+        ));
+    }
+    let train_idx = TensorIndex::new(modes);
+    let train_features = require(json, "train_features")?
+        .as_arr()
+        .ok_or_else(|| "artifact field 'train_features' must be an array".to_string())?
+        .iter()
+        .enumerate()
+        .map(|(d, obj)| matrix_from_obj(obj, &format!("train_features[{d}]")))
+        .collect::<Result<Vec<_>, _>>()?;
+    let model = TensorModel { dual_coef, train_features, train_idx, kernels };
+    model.validate()?;
+    // Mirror the save-side finiteness guarantee.
+    ensure_finite(&model.dual_coef, "dual_coef")?;
+    for (d, f) in model.train_features.iter().enumerate() {
+        ensure_finite(f.data(), &format!("train_features[{d}].data"))?;
+    }
+    for (d, &k) in model.kernels.iter().enumerate() {
+        ensure_finite_kernel(k, &format!("mode_kernels[{d}]"))?;
+    }
+    Ok(model)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -355,8 +468,8 @@ mod tests {
     #[test]
     fn primal_document_round_trips_bitwise() {
         let mut rng = Pcg32::seeded(51);
-        let model =
-            TrainedModel::from_primal(PrimalModel { w: rng.normal_vec(6), d_features: 3, r_features: 2 }, 0.5);
+        let primal = PrimalModel { w: rng.normal_vec(6), d_features: 3, r_features: 2 };
+        let model = TrainedModel::from_primal(primal, 0.5);
         let text = to_json(&model).unwrap().dump().unwrap();
         let back = from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(model.as_primal().unwrap().w, back.as_primal().unwrap().w);
@@ -379,9 +492,9 @@ mod tests {
         let good = to_json(&model).unwrap();
         // over-versioned
         let mut doc = good.as_obj().unwrap().clone();
-        doc.insert("format".into(), Json::from("kronvt-model/v2"));
+        doc.insert("format".into(), Json::from("kronvt-model/v3"));
         let err = from_json(&Json::Obj(doc)).unwrap_err();
-        assert!(err.contains("kronvt-model/v2") && err.contains("kronvt-model/v1"), "{err}");
+        assert!(err.contains("kronvt-model/v3") && err.contains("kronvt-model/v2"), "{err}");
         // not an artifact at all
         assert!(from_json(&Json::parse("{}").unwrap()).is_err());
         // out-of-bounds edge index
@@ -420,6 +533,89 @@ mod tests {
         // non-finite lambda
         let mut doc = good.as_obj().unwrap().clone();
         doc.insert("lambda".into(), Json::parse("-1e999").unwrap());
+        assert!(from_json(&Json::Obj(doc)).is_err());
+    }
+
+    fn toy_tensor(seed: u64) -> TrainedModel {
+        let mut rng = Pcg32::seeded(seed);
+        let dims = [4usize, 3, 5];
+        let n = 9;
+        TrainedModel::from_tensor(
+            TensorModel {
+                dual_coef: rng.normal_vec(n),
+                train_features: dims
+                    .iter()
+                    .map(|&d| Matrix::from_fn(d, 2, |_, _| rng.normal()))
+                    .collect(),
+                train_idx: TensorIndex::new(
+                    dims.iter().map(|&d| (0..n).map(|_| rng.below(d) as u32).collect()).collect(),
+                ),
+                kernels: vec![
+                    KernelKind::Gaussian { gamma: 0.25 },
+                    KernelKind::Linear,
+                    KernelKind::Gaussian { gamma: 1.5 },
+                ],
+            },
+            2f64.powi(-5),
+        )
+    }
+
+    #[test]
+    fn tensor_document_round_trips_bitwise_under_v2() {
+        let model = toy_tensor(60);
+        let doc = to_json(&model).unwrap();
+        assert_eq!(doc.get("format").unwrap().as_str(), Some(FORMAT_V2));
+        assert_eq!(doc.get("kind").unwrap().as_str(), Some("tensor"));
+        let text = doc.dump().unwrap();
+        let back = from_json(&Json::parse(&text).unwrap()).unwrap();
+        let (a, b) = (model.as_tensor().unwrap(), back.as_tensor().unwrap());
+        assert_eq!(a.dual_coef, b.dual_coef);
+        assert_eq!(a.train_idx, b.train_idx);
+        assert_eq!(a.kernels, b.kernels);
+        for (fa, fb) in a.train_features.iter().zip(&b.train_features) {
+            assert_eq!(fa.data(), fb.data());
+        }
+        assert_eq!(model.lambda().to_bits(), back.lambda().to_bits());
+        // dual / primal keep writing v1, so pre-tensor readers still work
+        assert_eq!(to_json(&toy_dual(61)).unwrap().get("format").unwrap().as_str(), Some(FORMAT));
+    }
+
+    #[test]
+    fn corrupt_tensor_documents_are_rejected() {
+        let good = to_json(&toy_tensor(62)).unwrap();
+        // ragged index columns
+        let mut doc = good.as_obj().unwrap().clone();
+        let mut idx = doc["train_idx"].as_obj().unwrap().clone();
+        let mut modes = idx["modes"].as_arr().unwrap().to_vec();
+        let mut col0 = modes[0].as_arr().unwrap().to_vec();
+        col0.pop();
+        modes[0] = Json::Arr(col0);
+        idx.insert("modes".into(), Json::Arr(modes));
+        doc.insert("train_idx".into(), Json::Obj(idx));
+        let err = from_json(&Json::Obj(doc)).unwrap_err();
+        assert!(err.contains("mode 0"), "{err}");
+        // out-of-bounds vertex index
+        let mut doc = good.as_obj().unwrap().clone();
+        let mut idx = doc["train_idx"].as_obj().unwrap().clone();
+        let mut modes = idx["modes"].as_arr().unwrap().to_vec();
+        let mut col1 = modes[1].as_arr().unwrap().to_vec();
+        col1[0] = Json::from(999usize);
+        modes[1] = Json::Arr(col1);
+        idx.insert("modes".into(), Json::Arr(modes));
+        doc.insert("train_idx".into(), Json::Obj(idx));
+        assert!(from_json(&Json::Obj(doc)).is_err());
+        // kernel count / mode count mismatch
+        let mut doc = good.as_obj().unwrap().clone();
+        let mut kernels = doc["mode_kernels"].as_arr().unwrap().to_vec();
+        kernels.pop();
+        doc.insert("mode_kernels".into(), Json::Arr(kernels));
+        let err = from_json(&Json::Obj(doc)).unwrap_err();
+        assert!(err.contains("mode kernels"), "{err}");
+        // non-finite dual coefficient smuggled through the number grammar
+        let mut doc = good.as_obj().unwrap().clone();
+        let mut coef = doc["dual_coef"].as_arr().unwrap().to_vec();
+        coef[0] = Json::parse("1e999").unwrap();
+        doc.insert("dual_coef".into(), Json::Arr(coef));
         assert!(from_json(&Json::Obj(doc)).is_err());
     }
 

@@ -15,12 +15,13 @@
 //! ```
 
 use super::{Compute, TrainedModel};
-use crate::data::Dataset;
+use crate::data::{Dataset, TensorDataset};
 use crate::gvt::PairwiseKernelKind;
 use crate::kernels::KernelKind;
 use crate::losses::{L2SvmLoss, LogisticLoss, RankRlsLoss, RidgeLoss};
 use crate::train::{
     KronRidge, KronSvm, NewtonConfig, NewtonTrainer, RidgeConfig, RidgeSolver, SvmConfig,
+    TensorRidge, TensorRidgeConfig,
 };
 
 /// Anything that trains a [`TrainedModel`] from a [`Dataset`] — the uniform
@@ -30,6 +31,14 @@ use crate::train::{
 pub trait Estimator {
     /// Train a model on `data`.
     fn fit(&self, data: &Dataset) -> Result<TrainedModel, String>;
+
+    /// Train on a D-way grid dataset (a factor list instead of a vertex
+    /// pair). Default implementation errors; estimators that understand
+    /// tensor-product chains (like the ridge [`Learner`]) override it.
+    fn fit_tensor(&self, data: &TensorDataset) -> Result<TrainedModel, String> {
+        let _ = data;
+        Err("this estimator does not support tensor-chain datasets".into())
+    }
 }
 
 /// Loss selector for the generic truncated-Newton path
@@ -98,6 +107,9 @@ pub struct Learner {
     pairwise: PairwiseKernelKind,
     solver: RidgeSolver,
     compute: Compute,
+    /// Tensor path only: one kernel per grid mode (empty = broadcast
+    /// `kernel_d` to every mode).
+    mode_kernels: Vec<KernelKind>,
 }
 
 impl Learner {
@@ -118,6 +130,7 @@ impl Learner {
             pairwise: PairwiseKernelKind::Kronecker,
             solver: RidgeSolver::Auto,
             compute: Compute::default(),
+            mode_kernels: Vec::new(),
         }
     }
 
@@ -231,6 +244,14 @@ impl Learner {
     /// sizing). Transparent to results — see [`Compute`].
     pub fn compute(mut self, compute: Compute) -> Learner {
         self.compute = compute;
+        self
+    }
+
+    /// Tensor path only: set one kernel per grid mode for
+    /// [`Learner::fit_tensor`]. When unset, `kernel_d` (see
+    /// [`Learner::kernel`]) is broadcast to every mode.
+    pub fn mode_kernels(mut self, kernels: Vec<KernelKind>) -> Learner {
+        self.mode_kernels = kernels;
         self
     }
 
@@ -369,10 +390,64 @@ impl Learner {
     pub fn fit(&self, data: &Dataset) -> Result<TrainedModel, String> {
         self.fit_with_validation(data, None)
     }
+
+    fn tensor_cfg(&self, order: usize) -> Result<TensorRidgeConfig, String> {
+        if self.kind != Kind::Ridge || self.primal {
+            return Err("tensor-chain training supports the dual ridge learner only".into());
+        }
+        if self.pairwise != PairwiseKernelKind::Kronecker {
+            return Err(format!(
+                "tensor-chain training requires the Kronecker pairwise family, not {}",
+                self.pairwise.name()
+            ));
+        }
+        let kernels = if self.mode_kernels.is_empty() {
+            vec![self.kernel_d; order]
+        } else {
+            self.mode_kernels.clone()
+        };
+        Ok(TensorRidgeConfig {
+            lambda: self.lambda,
+            kernels,
+            iterations: self.iterations,
+            tol: self.tol,
+        })
+    }
+
+    /// Train ridge regression on a D-way grid dataset — the factor-list
+    /// analogue of [`Learner::fit`]. Uses the per-mode kernels set via
+    /// [`Learner::mode_kernels`] (falling back to broadcasting `kernel_d`).
+    /// Dual ridge only.
+    pub fn fit_tensor(&self, data: &TensorDataset) -> Result<TrainedModel, String> {
+        let cfg = self.tensor_cfg(data.order())?;
+        let model = TensorRidge::new(cfg).with_compute(self.compute).fit(data)?;
+        Ok(TrainedModel::from_tensor(model, self.lambda))
+    }
+
+    /// Train the whole regularization path on a D-way grid dataset in one
+    /// batched block-CG solve (the builder's `lambda` is ignored; one
+    /// [`TrainedModel`] per λ). Dual ridge only.
+    pub fn fit_tensor_path(
+        &self,
+        data: &TensorDataset,
+        lambdas: &[f64],
+    ) -> Result<Vec<TrainedModel>, String> {
+        let cfg = self.tensor_cfg(data.order())?;
+        let models = TensorRidge::new(cfg).with_compute(self.compute).fit_path(data, lambdas)?;
+        Ok(models
+            .into_iter()
+            .zip(lambdas)
+            .map(|(model, &lambda)| TrainedModel::from_tensor(model, lambda))
+            .collect())
+    }
 }
 
 impl Estimator for Learner {
     fn fit(&self, data: &Dataset) -> Result<TrainedModel, String> {
         self.fit_with_validation(data, None)
+    }
+
+    fn fit_tensor(&self, data: &TensorDataset) -> Result<TrainedModel, String> {
+        Learner::fit_tensor(self, data)
     }
 }

@@ -45,7 +45,9 @@ mod compute;
 mod learner;
 mod trained;
 
-pub use artifact::{from_json as artifact_from_json, to_json as artifact_to_json, FORMAT};
+pub use artifact::{
+    from_json as artifact_from_json, to_json as artifact_to_json, FORMAT, FORMAT_V2,
+};
 pub use compute::Compute;
 pub use learner::{Estimator, Learner, NewtonLoss};
 pub use trained::TrainedModel;

@@ -1,8 +1,8 @@
 //! [`TrainedModel`] — the unified result of every [`Estimator`] in the
-//! crate, wrapping either a dual or a primal predictor, carrying its
-//! training metadata (λ, per-iteration trace), and providing the portable
-//! `kronvt-model/v1` persistence used by `train --save` / `predict` /
-//! `serve --model`.
+//! crate, wrapping a dual, primal, or D-way tensor-chain predictor,
+//! carrying its training metadata (λ, per-iteration trace), and providing
+//! the portable `kronvt-model/v1` / `v2` persistence used by
+//! `train --save` / `predict` / `serve --model`.
 //!
 //! [`Estimator`]: super::Estimator
 
@@ -11,8 +11,8 @@ use std::path::Path;
 use super::artifact;
 use super::Compute;
 use crate::coordinator::{PredictServer, ServerConfig};
-use crate::data::Dataset;
-use crate::model::{DualModel, PredictContext, PrimalModel};
+use crate::data::{Dataset, TensorDataset};
+use crate::model::{DualModel, PredictContext, PrimalModel, TensorModel};
 use crate::train::TrainTrace;
 
 /// The two predictor shapes a [`TrainedModel`] can wrap.
@@ -23,6 +23,9 @@ pub(crate) enum ModelInner {
     Dual(DualModel),
     /// Linear (primal) predictor: the flat weight vector `w ∈ R^{d·r}`.
     Primal(PrimalModel),
+    /// D-way tensor-chain (dual) predictor: coefficients over the training
+    /// cells plus per-mode features and kernels.
+    Tensor(TensorModel),
 }
 
 /// A trained model with one lifecycle: **fit → save → load → serve**.
@@ -33,7 +36,7 @@ pub(crate) enum ModelInner {
 /// converts into a long-lived serving context
 /// ([`TrainedModel::into_context`]) or a full prediction server
 /// ([`TrainedModel::serve`]), and round-trips through the versioned
-/// `kronvt-model/v1` JSON artifact ([`TrainedModel::save`] /
+/// `kronvt-model` JSON artifact ([`TrainedModel::save`] /
 /// [`TrainedModel::load`]) with **bitwise-identical** predictions after
 /// reload — every `f64` (duals, features, kernel hyperparameters) is
 /// serialized with exact shortest-round-trip encoding.
@@ -53,6 +56,11 @@ impl TrainedModel {
     /// Wrap a primal model trained with regularization `lambda`.
     pub fn from_primal(model: PrimalModel, lambda: f64) -> TrainedModel {
         TrainedModel { inner: ModelInner::Primal(model), lambda, trace: TrainTrace::default() }
+    }
+
+    /// Wrap a D-way tensor-chain model trained with regularization `lambda`.
+    pub fn from_tensor(model: TensorModel, lambda: f64) -> TrainedModel {
+        TrainedModel { inner: ModelInner::Tensor(model), lambda, trace: TrainTrace::default() }
     }
 
     /// Attach the per-iteration training trace (risk / validation AUC) —
@@ -75,20 +83,26 @@ impl TrainedModel {
     /// Start- and end-vertex feature dimensions `(d, r)` the model expects
     /// from every prediction batch — callers can validate incoming data
     /// against these instead of hitting an internal dimension assert.
+    /// For tensor models this reports modes `(1, 0)`, which matches
+    /// `(start, end)` under the crate's `G ⊗ K` mode ordering.
     pub fn feature_dims(&self) -> (usize, usize) {
         match &self.inner {
             ModelInner::Dual(m) => {
                 (m.train_start_features.cols(), m.train_end_features.cols())
             }
             ModelInner::Primal(m) => (m.d_features, m.r_features),
+            ModelInner::Tensor(m) => {
+                (m.train_features[1].cols(), m.train_features[0].cols())
+            }
         }
     }
 
-    /// `"dual"` or `"primal"` — the artifact `kind` tag.
+    /// `"dual"`, `"primal"`, or `"tensor"` — the artifact `kind` tag.
     pub fn kind_name(&self) -> &'static str {
         match &self.inner {
             ModelInner::Dual(_) => "dual",
             ModelInner::Primal(_) => "primal",
+            ModelInner::Tensor(_) => "tensor",
         }
     }
 
@@ -96,7 +110,7 @@ impl TrainedModel {
     pub fn as_dual(&self) -> Option<&DualModel> {
         match &self.inner {
             ModelInner::Dual(m) => Some(m),
-            ModelInner::Primal(_) => None,
+            _ => None,
         }
     }
 
@@ -104,24 +118,41 @@ impl TrainedModel {
     pub fn as_primal(&self) -> Option<&PrimalModel> {
         match &self.inner {
             ModelInner::Primal(m) => Some(m),
-            ModelInner::Dual(_) => None,
+            _ => None,
         }
     }
 
-    /// Unwrap into the dual model, erroring for primal models.
+    /// The wrapped tensor-chain model, if this is a D-way grid predictor.
+    pub fn as_tensor(&self) -> Option<&TensorModel> {
+        match &self.inner {
+            ModelInner::Tensor(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Unwrap into the dual model, erroring for other model kinds.
     pub fn into_dual(self) -> Result<DualModel, String> {
         match self.inner {
             ModelInner::Dual(m) => Ok(m),
             ModelInner::Primal(_) => Err("this artifact holds a primal (linear) model".into()),
+            ModelInner::Tensor(_) => Err("this artifact holds a tensor-chain model".into()),
         }
     }
 
     /// Predict scores for every edge of `test` (serial; see
     /// [`TrainedModel::predict_batch`] for the policy-driven path).
+    ///
+    /// Tensor models accept a bipartite `test` only at `D = 2` (it is viewed
+    /// as a two-mode grid); higher orders need
+    /// [`TrainedModel::predict_tensor`]. Panics on incompatible test data —
+    /// prevalidate via [`TrainedModel::feature_dims`].
     pub fn predict(&self, test: &Dataset) -> Vec<f64> {
         match &self.inner {
             ModelInner::Dual(m) => m.predict(test),
             ModelInner::Primal(m) => m.predict(test),
+            ModelInner::Tensor(m) => m
+                .predict(&TensorDataset::from_dataset(test))
+                .expect("bipartite test data is incompatible with this tensor model"),
         }
     }
 
@@ -135,6 +166,23 @@ impl TrainedModel {
         match &self.inner {
             ModelInner::Dual(m) => m.predict_threaded(test, compute.threads),
             ModelInner::Primal(m) => m.predict(test),
+            ModelInner::Tensor(m) => m
+                .predict_threaded(&TensorDataset::from_dataset(test), compute.threads)
+                .expect("bipartite test data is incompatible with this tensor model"),
+        }
+    }
+
+    /// Predict scores for the cells of a D-way grid dataset. Tensor models
+    /// only; dual and primal models score bipartite data via
+    /// [`TrainedModel::predict`] / [`TrainedModel::predict_batch`].
+    pub fn predict_tensor(
+        &self,
+        test: &TensorDataset,
+        compute: &Compute,
+    ) -> Result<Vec<f64>, String> {
+        match &self.inner {
+            ModelInner::Tensor(m) => m.predict_threaded(test, compute.threads),
+            _ => Err("this model was trained on bipartite data; use predict/predict_batch".into()),
         }
     }
 
@@ -150,6 +198,11 @@ impl TrainedModel {
             ModelInner::Primal(_) => {
                 Err("serving contexts require a dual model (primal predicts directly)".into())
             }
+            ModelInner::Tensor(_) => Err(
+                "serving contexts require a two-factor dual model (tensor models predict \
+                 directly via predict_tensor)"
+                    .into(),
+            ),
         }
     }
 
@@ -159,12 +212,15 @@ impl TrainedModel {
     pub fn serve(self, cfg: ServerConfig) -> Result<PredictServer, String> {
         match self.inner {
             ModelInner::Dual(m) => Ok(PredictServer::start(m, cfg)),
-            ModelInner::Primal(_) => Err("the prediction server requires a dual model".into()),
+            ModelInner::Primal(_) | ModelInner::Tensor(_) => {
+                Err("the prediction server requires a two-factor dual model".into())
+            }
         }
     }
 
-    /// Write the portable `kronvt-model/v1` JSON artifact. Errors if any
-    /// model parameter is non-finite (the artifact format refuses lossy
+    /// Write the portable JSON artifact (`kronvt-model/v1` for dual and
+    /// primal models, `kronvt-model/v2` for tensor-chain models). Errors if
+    /// any model parameter is non-finite (the artifact format refuses lossy
     /// `NaN`/`inf` encodings) or on I/O failure.
     pub fn save(&self, path: &Path) -> Result<(), String> {
         let text = artifact::to_json(self)?.dump()?;
@@ -172,7 +228,8 @@ impl TrainedModel {
             .map_err(|e| format!("write {}: {e}", path.display()))
     }
 
-    /// Load a `kronvt-model/v1` artifact written by [`TrainedModel::save`].
+    /// Load a `kronvt-model/v1` or `/v2` artifact written by
+    /// [`TrainedModel::save`].
     /// The loaded model predicts **bitwise identically** to the one that was
     /// saved. Corrupted documents, schema violations, and unsupported
     /// versions are rejected with a clear error.

@@ -9,11 +9,15 @@
 //! * [`dti`] — synthetic drug–target interaction data matching the Table 5
 //!   dataset shapes (Ki, GPCR, IC, E); see DESIGN.md §3 for the substitution
 //!   rationale.
+//! * [`tensor`] — D-way grid datasets ([`TensorDataset`]) and the
+//!   spatio-temporal checkerboard generator for tensor-chain workloads.
 
 pub mod dataset;
 pub mod checkerboard;
 pub mod dti;
+pub mod tensor;
 
 pub use dataset::Dataset;
 pub use checkerboard::{CheckerboardConfig, HomogeneousConfig};
 pub use dti::DtiConfig;
+pub use tensor::{GridCheckerboardConfig, TensorDataset};

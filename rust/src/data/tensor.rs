@@ -1,0 +1,383 @@
+//! Grid / tensor datasets for D-way tensor-product chains.
+//!
+//! A [`TensorDataset`] is the D-mode analogue of [`Dataset`]: one vertex
+//! feature matrix **per mode** and a [`TensorIndex`] mapping each labeled
+//! cell to its per-mode vertex tuple. The two-factor container stays the
+//! primary pairwise-learning type; this one feeds the tensor-chain
+//! estimators ([`TensorKernelOp`](crate::gvt::TensorKernelOp) and the
+//! `Learner` grid path).
+//!
+//! [`GridCheckerboardConfig`] generates the **spatio-temporal checkerboard**
+//! — the D-way generalization of the paper's §5.1 Checkerboard simulation:
+//! every mode carries a single uniform feature in `(0, feature_range)`, the
+//! noise-free label of a cell is `+1` when `Σ_d ⌊x_d⌋` is even and `−1`
+//! otherwise (for `D = 2` this is exactly the classic checkerboard truth),
+//! labels flip with probability `noise`, and a fraction `density` of the
+//! `Π_d dims[d]` grid cells is labeled.
+
+use super::dataset::Dataset;
+use crate::gvt::TensorIndex;
+use crate::linalg::Matrix;
+use crate::util::rng::Pcg32;
+
+/// A labeled set of cells on a D-way vertex grid, with one feature matrix
+/// per mode.
+#[derive(Debug, Clone)]
+pub struct TensorDataset {
+    /// One vertex feature matrix per mode; `features[d]` has one row per
+    /// mode-`d` vertex.
+    pub features: Vec<Matrix>,
+    /// Per-mode vertex columns of the labeled cells (one entry per edge).
+    pub index: TensorIndex,
+    /// Labels `y_h ∈ {−1, +1}` (regression targets also allowed).
+    pub labels: Vec<f64>,
+    /// Dataset name (reporting).
+    pub name: String,
+}
+
+impl TensorDataset {
+    /// Number of modes `D`.
+    pub fn order(&self) -> usize {
+        self.features.len()
+    }
+
+    /// Number of labeled cells (edges).
+    pub fn n_edges(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Per-mode vertex counts `(d₁, …, d_D)`.
+    pub fn dims(&self) -> Vec<usize> {
+        self.features.iter().map(|f| f.rows()).collect()
+    }
+
+    /// Structural validation: at least two modes, index/label/feature
+    /// consistency, every index in bounds.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.features.len() < 2 {
+            return Err(format!(
+                "tensor dataset needs at least two modes, got {}",
+                self.features.len()
+            ));
+        }
+        if self.features.len() != self.index.order() {
+            return Err(format!(
+                "{} feature matrices but the index has {} modes",
+                self.features.len(),
+                self.index.order()
+            ));
+        }
+        if self.labels.len() != self.index.len() {
+            return Err(format!(
+                "{} labels but {} indexed cells",
+                self.labels.len(),
+                self.index.len()
+            ));
+        }
+        self.index.validate(&self.dims())
+    }
+
+    /// Whether the labeled cells enumerate the **complete grid** (every cell
+    /// exactly once) — the condition under which closed-form grid methods
+    /// apply; see [`TensorIndex::complete_layout`].
+    pub fn is_complete_grid(&self) -> bool {
+        self.index.complete_layout(&self.dims()).is_some()
+    }
+
+    /// Restrict to the cells at `edge_pos` (in that order), sharing the
+    /// per-mode feature matrices.
+    pub fn subset_by_edges(&self, edge_pos: &[usize], name: &str) -> TensorDataset {
+        TensorDataset {
+            features: self.features.clone(),
+            index: TensorIndex::new(
+                self.index
+                    .modes
+                    .iter()
+                    .map(|col| edge_pos.iter().map(|&h| col[h]).collect())
+                    .collect(),
+            ),
+            labels: edge_pos.iter().map(|&h| self.labels[h]).collect(),
+            name: name.into(),
+        }
+    }
+
+    /// Random cell-level holdout split: `test_frac` of the labeled cells go
+    /// to the test set, the rest to training. Both halves share the vertex
+    /// feature matrices (grid prediction interpolates over the same
+    /// vertices, unlike the two-factor zero-shot protocol).
+    pub fn holdout_split(&self, test_frac: f64, seed: u64) -> (TensorDataset, TensorDataset) {
+        assert!((0.0..1.0).contains(&test_frac), "test_frac must be in [0, 1)");
+        let n = self.n_edges();
+        let mut order: Vec<usize> = (0..n).collect();
+        Pcg32::seeded(seed).shuffle(&mut order);
+        let n_test = ((n as f64) * test_frac).round() as usize;
+        let (test_pos, train_pos) = order.split_at(n_test);
+        let mut train_pos = train_pos.to_vec();
+        let mut test_pos = test_pos.to_vec();
+        // deterministic edge order within each half
+        train_pos.sort_unstable();
+        test_pos.sort_unstable();
+        (
+            self.subset_by_edges(&train_pos, &format!("{}-train", self.name)),
+            self.subset_by_edges(&test_pos, &format!("{}-test", self.name)),
+        )
+    }
+
+    /// View a two-factor [`Dataset`] as a `D = 2` tensor dataset
+    /// (mode 0 = end vertices, mode 1 = start vertices — the `G ⊗ K` row
+    /// ordering used everywhere in the crate).
+    pub fn from_dataset(ds: &Dataset) -> TensorDataset {
+        TensorDataset {
+            features: vec![ds.end_features.clone(), ds.start_features.clone()],
+            index: TensorIndex::from_kron(&ds.kron_index()),
+            labels: ds.labels.clone(),
+            name: ds.name.clone(),
+        }
+    }
+}
+
+/// Noise-free spatio-temporal checkerboard label for one per-mode feature
+/// tuple: `+1` iff `Σ_d ⌊x_d⌋` is even. For two modes this is exactly
+/// [`true_label`](super::checkerboard::true_label).
+pub fn true_grid_label(coords: &[f64]) -> f64 {
+    let parity: i64 = coords.iter().map(|&x| x.floor() as i64).sum();
+    if parity % 2 == 0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// Configuration for the D-way spatio-temporal checkerboard generator.
+#[derive(Debug, Clone)]
+pub struct GridCheckerboardConfig {
+    /// Vertex count per mode (`dims.len()` = the chain order `D ≥ 2`).
+    pub dims: Vec<usize>,
+    /// Fraction of the `Π_d dims[d]` grid cells that receive labels.
+    pub density: f64,
+    /// Label-flip probability.
+    pub noise: f64,
+    /// Features are uniform in `(0, feature_range)` per mode.
+    pub feature_range: f64,
+    /// RNG seed (features, cell sampling, label noise).
+    pub seed: u64,
+}
+
+impl Default for GridCheckerboardConfig {
+    fn default() -> Self {
+        GridCheckerboardConfig {
+            dims: vec![30, 30, 30],
+            density: 0.25,
+            noise: 0.2,
+            feature_range: 8.0,
+            seed: 0,
+        }
+    }
+}
+
+impl GridCheckerboardConfig {
+    /// Generate the dataset: one uniform 1-d feature per mode vertex, then a
+    /// density-sampled subset of grid cells labeled by floor-parity truth
+    /// with noise flips. Deterministic given the seed.
+    pub fn generate(&self) -> TensorDataset {
+        assert!(self.dims.len() >= 2, "grid checkerboard needs at least two modes");
+        assert!(self.dims.iter().all(|&d| d > 0), "every mode needs at least one vertex");
+        let total: usize = self
+            .dims
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .unwrap_or_else(|| panic!("grid size {:?} overflows usize", self.dims));
+        let mut rng = Pcg32::seeded(self.seed);
+        let feats: Vec<Vec<f64>> = self
+            .dims
+            .iter()
+            .map(|&d| rng.uniform_vec(d, 0.0, self.feature_range))
+            .collect();
+
+        let mut modes: Vec<Vec<u32>> = vec![Vec::new(); self.dims.len()];
+        let mut labels = Vec::new();
+        // walk the full grid once; keep each cell with probability `density`
+        let mut coords = vec![0usize; self.dims.len()];
+        for _ in 0..total {
+            if rng.bernoulli(self.density) {
+                let point: Vec<f64> = coords.iter().zip(&feats).map(|(&i, f)| f[i]).collect();
+                let mut y = true_grid_label(&point);
+                if rng.bernoulli(self.noise) {
+                    y = -y;
+                }
+                for (col, &i) in modes.iter_mut().zip(&coords) {
+                    col.push(i as u32);
+                }
+                labels.push(y);
+            }
+            // row-major increment (last mode fastest)
+            for d in (0..coords.len()).rev() {
+                coords[d] += 1;
+                if coords[d] < self.dims[d] {
+                    break;
+                }
+                coords[d] = 0;
+            }
+        }
+
+        TensorDataset {
+            features: self
+                .dims
+                .iter()
+                .zip(feats)
+                .map(|(&d, f)| Matrix::from_vec(d, 1, f))
+                .collect(),
+            index: TensorIndex::new(modes),
+            labels,
+            name: format!(
+                "grid-checker-{}",
+                self.dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+            ),
+        }
+    }
+
+    /// Generate the **complete** grid (density 1, every cell labeled once,
+    /// row-major order) — the workload for complete-grid fast paths and the
+    /// dense-oracle tests.
+    pub fn generate_complete(&self) -> TensorDataset {
+        let mut cfg = self.clone();
+        cfg.density = 1.0;
+        let ds = cfg.generate();
+        debug_assert!(ds.is_complete_grid());
+        ds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_shape_and_determinism() {
+        let cfg = GridCheckerboardConfig {
+            dims: vec![6, 5, 4],
+            density: 0.5,
+            noise: 0.1,
+            feature_range: 4.0,
+            seed: 11,
+        };
+        let a = cfg.generate();
+        a.validate().unwrap();
+        assert_eq!(a.order(), 3);
+        assert_eq!(a.dims(), vec![6, 5, 4]);
+        // density-sampled: roughly half the 120 cells
+        assert!(a.n_edges() > 30 && a.n_edges() < 90, "n={}", a.n_edges());
+        let b = cfg.generate();
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.index, b.index);
+    }
+
+    #[test]
+    fn labels_follow_floor_parity_up_to_noise() {
+        let cfg = GridCheckerboardConfig {
+            dims: vec![10, 10, 10],
+            density: 0.4,
+            noise: 0.0,
+            feature_range: 5.0,
+            seed: 12,
+        };
+        let ds = cfg.generate();
+        for h in 0..ds.n_edges() {
+            let point: Vec<f64> = ds
+                .features
+                .iter()
+                .zip(&ds.index.modes)
+                .map(|(f, col)| f.get(col[h] as usize, 0))
+                .collect();
+            assert_eq!(ds.labels[h], true_grid_label(&point), "cell {h}");
+        }
+    }
+
+    #[test]
+    fn two_mode_truth_matches_classic_checkerboard() {
+        use super::super::checkerboard::true_label;
+        for (d, t) in [(0.4, 1.7), (3.2, 2.9), (5.5, 5.5), (0.0, 1.0)] {
+            assert_eq!(true_grid_label(&[d, t]), true_label(d, t));
+        }
+    }
+
+    #[test]
+    fn complete_grid_generation_and_detection() {
+        let cfg = GridCheckerboardConfig {
+            dims: vec![3, 4, 2],
+            density: 0.3,
+            noise: 0.0,
+            feature_range: 4.0,
+            seed: 13,
+        };
+        let full = cfg.generate_complete();
+        assert_eq!(full.n_edges(), 24);
+        assert!(full.is_complete_grid());
+        let sparse = cfg.generate();
+        assert!(sparse.n_edges() < 24);
+        assert!(!sparse.is_complete_grid());
+    }
+
+    #[test]
+    fn holdout_split_partitions_cells() {
+        let ds = GridCheckerboardConfig {
+            dims: vec![8, 7, 6],
+            density: 0.5,
+            noise: 0.1,
+            feature_range: 4.0,
+            seed: 14,
+        }
+        .generate();
+        let n = ds.n_edges();
+        let (train, test) = ds.holdout_split(0.25, 3);
+        train.validate().unwrap();
+        test.validate().unwrap();
+        assert_eq!(train.n_edges() + test.n_edges(), n);
+        assert_eq!(test.n_edges(), ((n as f64) * 0.25).round() as usize);
+        // both halves share the feature matrices
+        for d in 0..ds.order() {
+            assert_eq!(train.features[d].data(), ds.features[d].data());
+            assert_eq!(test.features[d].data(), ds.features[d].data());
+        }
+    }
+
+    #[test]
+    fn from_dataset_embeds_two_factor_data() {
+        let ds = super::super::checkerboard::CheckerboardConfig {
+            m: 10,
+            q: 8,
+            density: 0.4,
+            noise: 0.1,
+            feature_range: 4.0,
+            seed: 15,
+        }
+        .generate();
+        let t = TensorDataset::from_dataset(&ds);
+        t.validate().unwrap();
+        assert_eq!(t.order(), 2);
+        assert_eq!(t.dims(), vec![ds.q(), ds.m()]);
+        assert_eq!(t.labels, ds.labels);
+        assert_eq!(t.index.to_kron(), Some(ds.kron_index()));
+    }
+
+    #[test]
+    fn validate_rejects_malformed_datasets() {
+        let good = GridCheckerboardConfig {
+            dims: vec![4, 4],
+            density: 0.5,
+            noise: 0.0,
+            feature_range: 4.0,
+            seed: 16,
+        }
+        .generate();
+        let mut short_labels = good.clone();
+        short_labels.labels.pop();
+        assert!(short_labels.validate().is_err());
+        let mut one_mode = good.clone();
+        one_mode.features.truncate(1);
+        assert!(one_mode.validate().is_err());
+        let mut oob = good.clone();
+        oob.index.modes[0][0] = 99;
+        assert!(oob.validate().is_err());
+    }
+}

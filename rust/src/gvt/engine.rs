@@ -24,11 +24,13 @@
 //! (CG/MINRES/QMR are famously sensitive to rounding) deterministic under
 //! the `threads` knob.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use super::algorithm::{gvt_apply_into, gvt_apply_multi_into, GvtWorkspace};
 use super::complexity::{self, Branch};
+use super::tensor::{checked_product, TensorIndex};
 use super::KronIndex;
+use crate::linalg::gemm::gemm_nt_into;
 use crate::linalg::vecops::{axpy, dot};
 use crate::linalg::Matrix;
 
@@ -158,6 +160,253 @@ impl EdgePlan {
             Branch::T => Some((&self.t_out_order, &self.t_out_offsets)),
             Branch::S => Some((&self.s_out_order, &self.s_out_offsets)),
         }
+    }
+}
+
+/// Precomputed execution plan for a **D-way tensor-product chain apply**
+/// `u = R (K₁ ⊗ K₂ ⊗ … ⊗ K_D) Cᵀ v` — the generalization of [`EdgePlan`]
+/// from two factors to arbitrary chains, consumed by
+/// [`GvtEngine::apply_chain`] / [`GvtEngine::apply_chain_multi`].
+///
+/// The pipeline threads an **edge-indexed gather**, `D−1` **mode-product
+/// GEMM stages**, and an **edge-indexed scatter**, keeping the running
+/// buffer in the row-major layout `(j_{d+1}, …, j_D, k₁, …, k_d)` after
+/// contracting mode `d`:
+///
+/// 1. **Stage 1 (scatter):** `T[flat(j₂…j_D), :] += v_l · K₁ᵀ[j₁_l, :]` —
+///    the same conflict-free row bucketing as the two-factor stage 1, with
+///    the "rest" modes `2…D` flattened into the bucket key.
+/// 2. **Modes `d = 2 … D−1`:** blocked transpose (moving mode `d` to the
+///    minor axis) followed by one [`gemm_nt_into`] with `K_d` — a
+///    mode-product GEMM per middle factor.
+/// 3. **Mode `D` (fused gather):** after the last transpose the buffer `Z`
+///    is `(a₁·…·a_{D−1}) × b_D`; each output edge takes one dot product
+///    `u_h = ⟨K_D[p^D_h, :], Z[flat(p¹…p^{D−1})_h, :]⟩`.
+///
+/// Stage-1 bucketing preserves original edge order within each destination
+/// row, every transpose is an exact move, and [`gemm_nt_into`] is bitwise
+/// identical to a per-element dot for every thread count — so chain applies
+/// are **bitwise identical across thread counts**, exactly like the
+/// two-factor path.
+///
+/// **`D = 2` delegates** to the unmodified two-factor pipeline
+/// ([`GvtEngine::apply_planned`], including automatic branch selection and
+/// branch S), so two-factor chain applies are bitwise pinned to the
+/// pre-chain behavior. For `D ≥ 3` the pipeline is the branch-T shape with
+/// the middle modes contracted by GEMMs; no output-side vertex bucketing is
+/// kept for the final gather (the gather is embarrassingly parallel and
+/// deterministic without it).
+///
+/// All dimension products are overflow-checked at build time; bucket keys
+/// and gather prefixes must fit in 32 bits (the same limit as
+/// [`KronIndex::complete_layout`]).
+#[derive(Debug, Clone)]
+pub struct ChainPlan {
+    /// Output edge count `f = |rows|`.
+    f: usize,
+    /// Input edge count `e = |cols|`.
+    e: usize,
+    /// Per-factor row counts `a_d` (`K_d ∈ R^{a_d × b_d}`).
+    dims_a: Vec<usize>,
+    /// Per-factor column counts `b_d`.
+    dims_b: Vec<usize>,
+    /// `D = 2` delegate state: the row/column [`KronIndex`] pair and the
+    /// prebuilt two-factor [`EdgePlan`] the apply hands to
+    /// [`GvtEngine::apply_planned`].
+    kron_rows: Option<Arc<KronIndex>>,
+    kron_cols: Option<Arc<KronIndex>>,
+    kron_plan: Option<Arc<EdgePlan>>,
+    /// `D ≥ 3`: number of stage-1 accumulator rows `b₂·…·b_D`.
+    rest_dim: usize,
+    /// `D ≥ 3`: per-input-edge stage-1 destination row (flat cols modes
+    /// `2…D`), for the serial original-order replay.
+    rest_keys: Vec<u32>,
+    /// `D ≥ 3`: stable bucketing of input edges by [`ChainPlan::rest_keys`].
+    rest_order: Vec<u32>,
+    rest_offsets: Vec<usize>,
+    /// `D ≥ 3`: per-input-edge mode-1 gather column `j¹_l`.
+    col_first: Vec<u32>,
+    /// `D ≥ 3`: per-output-edge fused-gather row (flat rows modes `1…D−1`).
+    prefix_keys: Vec<u32>,
+    /// `D ≥ 3`: per-output-edge mode-D factor row `p^D_h`.
+    row_last: Vec<u32>,
+    /// `D ≥ 3`: doubles per ping-pong workspace buffer (max stage length).
+    max_stage: usize,
+}
+
+impl ChainPlan {
+    /// Build a chain plan from row/column [`TensorIndex`]es and the
+    /// per-factor dimensions (`dims_a[d]` rows × `dims_b[d]` columns of
+    /// `K_d`). Validates mode counts, index bounds, and — with checked
+    /// arithmetic — every dimension product the pipeline will form.
+    pub fn build(
+        rows: &TensorIndex,
+        cols: &TensorIndex,
+        dims_a: &[usize],
+        dims_b: &[usize],
+    ) -> Result<ChainPlan, String> {
+        let order = dims_a.len();
+        if order < 2 {
+            return Err(format!("tensor chain needs at least 2 factors, got {order}"));
+        }
+        if dims_b.len() != order {
+            return Err(format!(
+                "factor dimension lists disagree: {} row counts vs {} column counts",
+                order,
+                dims_b.len()
+            ));
+        }
+        if let Some(d) = dims_a.iter().chain(dims_b).position(|&x| x == 0) {
+            return Err(format!("factor dimension {d} is zero; chain factors must be non-empty"));
+        }
+        if rows.order() != order || cols.order() != order {
+            return Err(format!(
+                "index order mismatch: rows has {} modes, cols {}, factors {}",
+                rows.order(),
+                cols.order(),
+                order
+            ));
+        }
+        rows.validate(dims_a).map_err(|e| format!("row index invalid: {e}"))?;
+        cols.validate(dims_b).map_err(|e| format!("column index invalid: {e}"))?;
+        let (f, e) = (rows.len(), cols.len());
+        if order == 2 {
+            let kr = Arc::new(rows.to_kron().expect("order 2"));
+            let kc = Arc::new(cols.to_kron().expect("order 2"));
+            let plan = Arc::new(EdgePlan::build_full(
+                &kr, &kc, dims_a[0], dims_b[0], dims_a[1], dims_b[1],
+            ));
+            return Ok(ChainPlan {
+                f,
+                e,
+                dims_a: dims_a.to_vec(),
+                dims_b: dims_b.to_vec(),
+                kron_rows: Some(kr),
+                kron_cols: Some(kc),
+                kron_plan: Some(plan),
+                rest_dim: 0,
+                rest_keys: Vec::new(),
+                rest_order: Vec::new(),
+                rest_offsets: Vec::new(),
+                col_first: Vec::new(),
+                prefix_keys: Vec::new(),
+                row_last: Vec::new(),
+                max_stage: 0,
+            });
+        }
+        let rest_dim = checked_product(&dims_b[1..])
+            .ok_or_else(|| format!("stage-1 grid {:?} overflows usize", &dims_b[1..]))?;
+        let rest_keys = cols.flat_range_u32(dims_b, 1, order)?;
+        let (rest_order, rest_offsets) = bucket_stable(&rest_keys, rest_dim);
+        let prefix_keys = rows.flat_range_u32(dims_a, 0, order - 1)?;
+        let max_stage = ChainPlan::max_stage_len(dims_a, dims_b)?;
+        Ok(ChainPlan {
+            f,
+            e,
+            dims_a: dims_a.to_vec(),
+            dims_b: dims_b.to_vec(),
+            kron_rows: None,
+            kron_cols: None,
+            kron_plan: None,
+            rest_dim,
+            rest_keys,
+            rest_order,
+            rest_offsets,
+            col_first: cols.modes[0].clone(),
+            prefix_keys,
+            row_last: rows.modes[order - 1].clone(),
+            max_stage,
+        })
+    }
+
+    /// Like [`ChainPlan::build`] for `D = 2`, but wrapping already-shared
+    /// trained-side state — the serving fast path analogue of
+    /// [`EdgePlan::build`]-based operators: `plan` must have been built for
+    /// `cols` (length-checked), and may omit output-side buckets.
+    pub fn from_shared_kron(
+        rows: Arc<KronIndex>,
+        cols: Arc<KronIndex>,
+        plan: Arc<EdgePlan>,
+        dims_a: [usize; 2],
+        dims_b: [usize; 2],
+    ) -> ChainPlan {
+        assert_eq!(plan.len(), cols.len(), "edge plan was built for a different column index");
+        ChainPlan {
+            f: rows.len(),
+            e: cols.len(),
+            dims_a: dims_a.to_vec(),
+            dims_b: dims_b.to_vec(),
+            kron_rows: Some(rows),
+            kron_cols: Some(cols),
+            kron_plan: Some(plan),
+            rest_dim: 0,
+            rest_keys: Vec::new(),
+            rest_order: Vec::new(),
+            rest_offsets: Vec::new(),
+            col_first: Vec::new(),
+            prefix_keys: Vec::new(),
+            row_last: Vec::new(),
+            max_stage: 0,
+        }
+    }
+
+    /// Largest intermediate-buffer length across the pipeline's stages:
+    /// after contracting modes `1…d` the buffer holds
+    /// `(b_{d+1}·…·b_D) · (a₁·…·a_d)` doubles (the full output grid
+    /// `a₁·…·a_D` is never materialized). Checked arithmetic throughout.
+    fn max_stage_len(dims_a: &[usize], dims_b: &[usize]) -> Result<usize, String> {
+        let order = dims_a.len();
+        let mut max = 0usize;
+        for d in 0..order - 1 {
+            let b_suffix = checked_product(&dims_b[d + 1..])
+                .ok_or_else(|| {
+                    format!("chain suffix grid {:?} overflows usize", &dims_b[d + 1..])
+                })?;
+            let a_prefix = checked_product(&dims_a[..=d])
+                .ok_or_else(|| format!("chain prefix grid {:?} overflows usize", &dims_a[..=d]))?;
+            let len = b_suffix.checked_mul(a_prefix).ok_or_else(|| {
+                format!(
+                    "chain stage {d} buffer ({b_suffix} × {a_prefix} doubles) overflows usize"
+                )
+            })?;
+            max = max.max(len);
+        }
+        Ok(max)
+    }
+
+    /// Number of factors `D` in the chain.
+    pub fn order(&self) -> usize {
+        self.dims_a.len()
+    }
+
+    /// Number of input edges `e` the plan covers.
+    pub fn len(&self) -> usize {
+        self.e
+    }
+
+    /// Whether the plan covers zero input edges.
+    pub fn is_empty(&self) -> bool {
+        self.e == 0
+    }
+
+    /// Number of output edges `f` the plan was built for.
+    pub fn out_len(&self) -> usize {
+        self.f
+    }
+
+    /// Per-factor row counts `a_d`.
+    pub fn dims_a(&self) -> &[usize] {
+        &self.dims_a
+    }
+
+    /// Per-factor column counts `b_d`.
+    pub fn dims_b(&self) -> &[usize] {
+        &self.dims_b
+    }
+
+    /// Whether this plan delegates to the two-factor pipeline (`D = 2`).
+    pub fn is_kron_delegate(&self) -> bool {
+        self.kron_plan.is_some()
     }
 }
 
@@ -481,6 +730,257 @@ impl GvtEngine {
                 });
             }
         }
+    }
+
+    /// Computes the **D-way chain apply** `u = R (K₁⊗…⊗K_D) Cᵀ v` using a
+    /// prebuilt [`ChainPlan`]: edge-indexed gather, `D−1` mode-product GEMM
+    /// stages, edge-indexed scatter (see the [`ChainPlan`] docs for the
+    /// pipeline and its layout invariant).
+    ///
+    /// `factors[d]` is `K_d` (`dims_a[d] × dims_b[d]`) and `factors_t[d]`
+    /// its transpose (for symmetric kernels pass the factor itself). The
+    /// result is **bitwise identical for every thread count**, and at
+    /// `D = 2` it is the unmodified two-factor
+    /// [`GvtEngine::apply_planned`] path — `branch` forwards to it there
+    /// and is ignored for `D ≥ 3`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_chain(
+        &self,
+        factors: &[&Matrix],
+        factors_t: &[&Matrix],
+        plan: &ChainPlan,
+        v: &[f64],
+        u: &mut [f64],
+        ws: &mut GvtWorkspace,
+        branch: Option<Branch>,
+    ) {
+        self.check_chain_args(factors, factors_t, plan);
+        assert_eq!(v.len(), plan.e, "v must have length e = |cols|");
+        assert_eq!(u.len(), plan.f, "u must have length f = |rows|");
+        if let (Some(kr), Some(kc), Some(kp)) =
+            (&plan.kron_rows, &plan.kron_cols, &plan.kron_plan)
+        {
+            self.apply_planned(
+                factors[0], factors[1], factors_t[0], factors_t[1], kr, kc, kp, v, u, ws, branch,
+            );
+            return;
+        }
+        if plan.f == 0 {
+            return;
+        }
+        // Serial fallback mirrors the two-factor cutoff: below it, the
+        // stage-1 replay runs in original edge order (bitwise-equal to the
+        // bucketed replay — per destination row both visit edges in
+        // original order) and every stage runs on one thread.
+        let serial = self.threads <= 1 || plan.e + plan.f < MIN_PARALLEL_EDGES;
+        let threads = if serial { 1 } else { self.threads };
+        let (abuf, bbuf) = ws.grab_uncleared(plan.max_stage, plan.max_stage);
+        let a1 = plan.dims_a[0];
+        if serial {
+            let s1 = plan.rest_dim * a1;
+            abuf[..s1].fill(0.0);
+            let k1_t = factors_t[0];
+            for (l, &vl) in v.iter().enumerate() {
+                if vl == 0.0 {
+                    continue; // sparse shortcut, eq. (5)
+                }
+                let row = plan.rest_keys[l] as usize;
+                axpy(vl, k1_t.row(plan.col_first[l] as usize), &mut abuf[row * a1..(row + 1) * a1]);
+            }
+        } else {
+            stage1_parallel(
+                abuf,
+                a1,
+                &plan.rest_order,
+                &plan.rest_offsets,
+                &plan.col_first,
+                factors_t[0],
+                v,
+                threads,
+            );
+        }
+        let mut cur = plan.rest_dim * a1;
+        chain_tail(factors, plan, abuf, bbuf, &mut cur, 0, threads);
+        // Fused mode-D gather: u_h = ⟨K_D[p^D_h, :], Z[prefix_h, :]⟩.
+        let b_last = plan.dims_b[plan.order() - 1];
+        let z = &bbuf[..cur];
+        let k_last = factors[plan.order() - 1];
+        if serial {
+            for h in 0..plan.f {
+                let p = plan.prefix_keys[h] as usize;
+                u[h] = dot(k_last.row(plan.row_last[h] as usize), &z[p * b_last..(p + 1) * b_last]);
+            }
+        } else {
+            stage2_parallel(u, &plan.prefix_keys, &plan.row_last, threads, |p, q| {
+                dot(k_last.row(q), &z[p * b_last..(p + 1) * b_last])
+            });
+        }
+    }
+
+    /// Multi-RHS [`GvtEngine::apply_chain`]: `k_rhs` column planes in one
+    /// batched sweep (one stage-1 edge traversal and one stacked GEMM per
+    /// middle mode for all right-hand sides). **Plane `j` is bitwise
+    /// identical to [`GvtEngine::apply_chain`] on plane `j`** for every
+    /// thread count — at `D = 2` via the two-factor multi path, at `D ≥ 3`
+    /// because every stage is element-wise identical per plane.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_chain_multi(
+        &self,
+        factors: &[&Matrix],
+        factors_t: &[&Matrix],
+        plan: &ChainPlan,
+        v: &[f64],
+        u: &mut [f64],
+        k_rhs: usize,
+        ws: &mut GvtWorkspace,
+        branch: Option<Branch>,
+    ) {
+        self.check_chain_args(factors, factors_t, plan);
+        if k_rhs == 0 {
+            return;
+        }
+        assert_eq!(v.len(), plan.e * k_rhs, "v must hold k_rhs planes of length e");
+        assert_eq!(u.len(), plan.f * k_rhs, "u must hold k_rhs planes of length f");
+        if let (Some(kr), Some(kc), Some(kp)) =
+            (&plan.kron_rows, &plan.kron_cols, &plan.kron_plan)
+        {
+            self.apply_planned_multi(
+                factors[0], factors[1], factors_t[0], factors_t[1], kr, kc, kp, v, u, k_rhs, ws,
+                branch,
+            );
+            return;
+        }
+        if plan.f == 0 {
+            return;
+        }
+        if self.threads <= 1 || (plan.e + plan.f).saturating_mul(k_rhs) < MIN_PARALLEL_EDGES {
+            // Small problems: per-plane serial applies (bitwise-identical to
+            // the batched path by the per-plane guarantee above).
+            for j in 0..k_rhs {
+                self.apply_chain(
+                    factors,
+                    factors_t,
+                    plan,
+                    &v[j * plan.e..(j + 1) * plan.e],
+                    &mut u[j * plan.f..(j + 1) * plan.f],
+                    ws,
+                    branch,
+                );
+            }
+            return;
+        }
+        let threads = self.threads;
+        let buf_len = plan
+            .max_stage
+            .checked_mul(k_rhs)
+            .expect("chain multi-RHS workspace size overflows usize");
+        let (abuf, bbuf) = ws.grab_uncleared(buf_len, buf_len);
+        let a1 = plan.dims_a[0];
+        stage1_parallel_multi(
+            abuf,
+            a1,
+            &plan.rest_order,
+            &plan.rest_offsets,
+            &plan.col_first,
+            factors_t[0],
+            v,
+            plan.e,
+            k_rhs,
+            threads,
+        );
+        let mut cur = plan.rest_dim * a1;
+        chain_tail(factors, plan, abuf, bbuf, &mut cur, k_rhs, threads);
+        let b_last = plan.dims_b[plan.order() - 1];
+        let plane = cur;
+        let z = &bbuf[..plane * k_rhs];
+        let k_last = factors[plan.order() - 1];
+        stage2_parallel_multi(
+            u,
+            plan.f,
+            k_rhs,
+            &plan.prefix_keys,
+            &plan.row_last,
+            None,
+            threads,
+            |j, p, q| dot(k_last.row(q), &z[j * plane + p * b_last..j * plane + (p + 1) * b_last]),
+        );
+    }
+
+    /// Shared argument validation for the chain applies.
+    fn check_chain_args(&self, factors: &[&Matrix], factors_t: &[&Matrix], plan: &ChainPlan) {
+        let order = plan.order();
+        assert_eq!(factors.len(), order, "one factor matrix per mode required");
+        assert_eq!(factors_t.len(), order, "one transposed factor per mode required");
+        for d in 0..order {
+            assert_eq!(factors[d].rows(), plan.dims_a[d], "factor {d} row count mismatch");
+            assert_eq!(factors[d].cols(), plan.dims_b[d], "factor {d} column count mismatch");
+            debug_assert_eq!(factors_t[d].rows(), plan.dims_b[d]);
+            debug_assert_eq!(factors_t[d].cols(), plan.dims_a[d]);
+        }
+    }
+}
+
+/// The middle of the chain pipeline (modes `2 … D−1` contractions plus the
+/// final mode-D transpose), shared by the single- and multi-RHS applies.
+///
+/// On entry `abuf` holds the stage-1 result — `k_rhs.max(1)` tightly packed
+/// planes of `*cur` doubles in layout `(j₂…j_D, k₁)`. Each middle mode `d`
+/// transposes every plane (moving mode `d`'s column axis to the minor
+/// position) into `bbuf`, then contracts it with one stacked
+/// [`gemm_nt_into`] over all planes (`Y = X·K_dᵀ`, loading `K_d` rows
+/// directly — middle factors need no transposes). On exit `bbuf` holds the
+/// final transposed planes `Z` of `*cur` doubles each in layout
+/// `(k₁…k_{D−1}, j_D)`, ready for the fused gather.
+fn chain_tail(
+    factors: &[&Matrix],
+    plan: &ChainPlan,
+    abuf: &mut [f64],
+    bbuf: &mut [f64],
+    cur: &mut usize,
+    k_rhs: usize,
+    threads: usize,
+) {
+    let order = plan.order();
+    let planes = k_rhs.max(1);
+    for d in 1..order - 1 {
+        let (bd, ad) = (plan.dims_b[d], plan.dims_a[d]);
+        debug_assert_eq!(*cur % bd, 0);
+        let r = *cur / bd;
+        for j in 0..planes {
+            transpose_into_parallel(
+                &abuf[j * *cur..(j + 1) * *cur],
+                bd,
+                r,
+                &mut bbuf[j * *cur..(j + 1) * *cur],
+                threads,
+            );
+        }
+        // One stacked GEMM over all planes: they are tightly packed, so the
+        // stack is a (planes·r) × bd row-major matrix; every output element
+        // is dot(x_row, K_d_row) regardless of the stacking, keeping planes
+        // bitwise identical to their single-RHS applies.
+        gemm_nt_into(
+            &bbuf[..planes * r * bd],
+            factors[d].data(),
+            planes * r,
+            bd,
+            ad,
+            &mut abuf[..planes * r * ad],
+            threads,
+        );
+        *cur = r * ad;
+    }
+    let b_last = plan.dims_b[order - 1];
+    debug_assert_eq!(*cur % b_last, 0);
+    let a_prefix = *cur / b_last;
+    for j in 0..planes {
+        transpose_into_parallel(
+            &abuf[j * *cur..(j + 1) * *cur],
+            b_last,
+            a_prefix,
+            &mut bbuf[j * *cur..(j + 1) * *cur],
+            threads,
+        );
     }
 }
 
@@ -1038,5 +1538,245 @@ mod tests {
         let none = WorkspacePool::with_retention(0);
         none.with(|_| {});
         assert_eq!(none.pooled(), 0);
+    }
+
+    /// Dense chain oracle: `u_h = Σ_l Π_d K_d[rowsᵈ_h, colsᵈ_l] · v_l`.
+    fn chain_oracle(
+        factors: &[&Matrix],
+        rows: &TensorIndex,
+        cols: &TensorIndex,
+        v: &[f64],
+    ) -> Vec<f64> {
+        (0..rows.len())
+            .map(|h| {
+                (0..cols.len())
+                    .map(|l| {
+                        let mut w = v[l];
+                        for (d, k) in factors.iter().enumerate() {
+                            w *= k.get(rows.modes[d][h] as usize, cols.modes[d][l] as usize);
+                        }
+                        w
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+
+    fn random_tensor_index(rng: &mut Pcg32, dims: &[usize], n: usize) -> TensorIndex {
+        TensorIndex::new(
+            dims.iter().map(|&d| (0..n).map(|_| rng.below(d) as u32).collect()).collect(),
+        )
+    }
+
+    #[test]
+    fn d3_chain_matches_dense_oracle() {
+        let mut rng = Pcg32::seeded(50);
+        let dims_a = [3usize, 4, 2];
+        let dims_b = [4usize, 3, 3];
+        let factors: Vec<Matrix> = dims_a
+            .iter()
+            .zip(&dims_b)
+            .map(|(&a, &b)| Matrix::from_fn(a, b, |_, _| rng.normal()))
+            .collect();
+        let factors_t: Vec<Matrix> = factors.iter().map(|f| f.transpose()).collect();
+        let frefs: Vec<&Matrix> = factors.iter().collect();
+        let trefs: Vec<&Matrix> = factors_t.iter().collect();
+        let (e, f) = (25, 18);
+        let rows = random_tensor_index(&mut rng, &dims_a, f);
+        let cols = random_tensor_index(&mut rng, &dims_b, e);
+        let mut v = rng.normal_vec(e);
+        v[3] = 0.0; // exercise the sparse shortcut
+        let plan = ChainPlan::build(&rows, &cols, &dims_a, &dims_b).unwrap();
+        assert!(!plan.is_kron_delegate());
+        assert_eq!(plan.order(), 3);
+        let mut ws = GvtWorkspace::new();
+        let mut u = vec![f64::NAN; f];
+        GvtEngine::serial().apply_chain(&frefs, &trefs, &plan, &v, &mut u, &mut ws, None);
+        let want = chain_oracle(&frefs, &rows, &cols, &v);
+        assert_allclose(&u, &want, 1e-10, 1e-10);
+    }
+
+    #[test]
+    fn d4_chain_matches_dense_oracle() {
+        let mut rng = Pcg32::seeded(51);
+        let dims_a = [2usize, 3, 2, 3];
+        let dims_b = [3usize, 2, 4, 2];
+        let factors: Vec<Matrix> = dims_a
+            .iter()
+            .zip(&dims_b)
+            .map(|(&a, &b)| Matrix::from_fn(a, b, |_, _| rng.normal()))
+            .collect();
+        let factors_t: Vec<Matrix> = factors.iter().map(|f| f.transpose()).collect();
+        let frefs: Vec<&Matrix> = factors.iter().collect();
+        let trefs: Vec<&Matrix> = factors_t.iter().collect();
+        let (e, f) = (30, 22);
+        let rows = random_tensor_index(&mut rng, &dims_a, f);
+        let cols = random_tensor_index(&mut rng, &dims_b, e);
+        let v = rng.normal_vec(e);
+        let plan = ChainPlan::build(&rows, &cols, &dims_a, &dims_b).unwrap();
+        let mut ws = GvtWorkspace::new();
+        let mut u = vec![0.0; f];
+        GvtEngine::serial().apply_chain(&frefs, &trefs, &plan, &v, &mut u, &mut ws, None);
+        assert_allclose(&u, &chain_oracle(&frefs, &rows, &cols, &v), 1e-10, 1e-10);
+    }
+
+    #[test]
+    fn d2_chain_is_bitwise_the_two_factor_path() {
+        let mut rng = Pcg32::seeded(52);
+        let (a, b, c, d, e, f) = (7, 9, 6, 8, 4000, 3500);
+        let m = Matrix::from_fn(a, b, |_, _| rng.normal());
+        let n = Matrix::from_fn(c, d, |_, _| rng.normal());
+        let m_t = m.transpose();
+        let n_t = n.transpose();
+        let rows = KronIndex::new(
+            (0..f).map(|_| rng.below(a) as u32).collect(),
+            (0..f).map(|_| rng.below(c) as u32).collect(),
+        );
+        let cols = KronIndex::new(
+            (0..e).map(|_| rng.below(b) as u32).collect(),
+            (0..e).map(|_| rng.below(d) as u32).collect(),
+        );
+        let v = rng.normal_vec(e);
+        let trows = TensorIndex::from_kron(&rows);
+        let tcols = TensorIndex::from_kron(&cols);
+        let chain = ChainPlan::build(&trows, &tcols, &[a, c], &[b, d]).unwrap();
+        assert!(chain.is_kron_delegate());
+        let edge_plan = EdgePlan::build_full(&rows, &cols, a, b, c, d);
+        let mut ws = GvtWorkspace::new();
+        for threads in [1usize, 2, 4] {
+            let engine = GvtEngine::new(threads);
+            for branch in [None, Some(Branch::T), Some(Branch::S)] {
+                let mut want = vec![0.0; f];
+                engine.apply_planned(
+                    &m, &n, &m_t, &n_t, &rows, &cols, &edge_plan, &v, &mut want, &mut ws, branch,
+                );
+                let mut got = vec![f64::NAN; f];
+                engine.apply_chain(
+                    &[&m, &n],
+                    &[&m_t, &n_t],
+                    &chain,
+                    &v,
+                    &mut got,
+                    &mut ws,
+                    branch,
+                );
+                assert_eq!(got, want, "threads={threads} branch={branch:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn chain_parallel_matches_serial_bitwise() {
+        let mut rng = Pcg32::seeded(53);
+        let dims_a = [5usize, 4, 3];
+        let dims_b = [6usize, 5, 4];
+        let factors: Vec<Matrix> = dims_a
+            .iter()
+            .zip(&dims_b)
+            .map(|(&a, &b)| Matrix::from_fn(a, b, |_, _| rng.normal()))
+            .collect();
+        let factors_t: Vec<Matrix> = factors.iter().map(|f| f.transpose()).collect();
+        let frefs: Vec<&Matrix> = factors.iter().collect();
+        let trefs: Vec<&Matrix> = factors_t.iter().collect();
+        let (e, f) = (4000, 3500);
+        let rows = random_tensor_index(&mut rng, &dims_a, f);
+        let cols = random_tensor_index(&mut rng, &dims_b, e);
+        let mut v = rng.normal_vec(e);
+        for (i, vi) in v.iter_mut().enumerate() {
+            if i % 7 == 0 {
+                *vi = 0.0;
+            }
+        }
+        let plan = ChainPlan::build(&rows, &cols, &dims_a, &dims_b).unwrap();
+        let mut ws = GvtWorkspace::new();
+        let mut serial = vec![0.0; f];
+        GvtEngine::serial().apply_chain(&frefs, &trefs, &plan, &v, &mut serial, &mut ws, None);
+        assert_allclose(
+            &serial,
+            &chain_oracle(&frefs, &rows, &cols, &v),
+            1e-10,
+            1e-10,
+        );
+        for threads in [2, 4, 8] {
+            let mut par = vec![f64::NAN; f];
+            let mut ws2 = GvtWorkspace::new();
+            GvtEngine::new(threads)
+                .apply_chain(&frefs, &trefs, &plan, &v, &mut par, &mut ws2, None);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn chain_multi_planes_match_single_rhs_bitwise() {
+        let mut rng = Pcg32::seeded(54);
+        let dims_a = [4usize, 3, 4];
+        let dims_b = [5usize, 4, 3];
+        let factors: Vec<Matrix> = dims_a
+            .iter()
+            .zip(&dims_b)
+            .map(|(&a, &b)| Matrix::from_fn(a, b, |_, _| rng.normal()))
+            .collect();
+        let factors_t: Vec<Matrix> = factors.iter().map(|f| f.transpose()).collect();
+        let frefs: Vec<&Matrix> = factors.iter().collect();
+        let trefs: Vec<&Matrix> = factors_t.iter().collect();
+        let (e, f) = (3200, 2600);
+        let rows = random_tensor_index(&mut rng, &dims_a, f);
+        let cols = random_tensor_index(&mut rng, &dims_b, e);
+        let k_rhs = 3;
+        let mut v = rng.normal_vec(e * k_rhs);
+        for (i, vi) in v.iter_mut().enumerate() {
+            if i % 5 == 0 {
+                *vi = 0.0; // per-plane zero-skip
+            }
+        }
+        let plan = ChainPlan::build(&rows, &cols, &dims_a, &dims_b).unwrap();
+        let mut ws = GvtWorkspace::new();
+        // per-plane single-RHS reference (serial)
+        let mut singles = vec![0.0; f * k_rhs];
+        for j in 0..k_rhs {
+            let mut uj = vec![0.0; f];
+            GvtEngine::serial().apply_chain(
+                &frefs,
+                &trefs,
+                &plan,
+                &v[j * e..(j + 1) * e],
+                &mut uj,
+                &mut ws,
+                None,
+            );
+            singles[j * f..(j + 1) * f].copy_from_slice(&uj);
+        }
+        for threads in [1, 2, 4, 8] {
+            let mut multi = vec![f64::NAN; f * k_rhs];
+            let mut ws2 = GvtWorkspace::new();
+            GvtEngine::new(threads).apply_chain_multi(
+                &frefs, &trefs, &plan, &v, &mut multi, k_rhs, &mut ws2, None,
+            );
+            assert_eq!(multi, singles, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn chain_plan_rejects_bad_inputs() {
+        let idx2 = TensorIndex::from_usize(&[&[0], &[0]]);
+        let idx3 = TensorIndex::from_usize(&[&[0], &[0], &[0]]);
+        // fewer than two factors
+        let one = TensorIndex::from_usize(&[&[0]]);
+        assert!(ChainPlan::build(&one, &one, &[2], &[2]).is_err());
+        // dimension-list length mismatch
+        assert!(ChainPlan::build(&idx2, &idx2, &[2, 2], &[2]).is_err());
+        // index order mismatch
+        assert!(ChainPlan::build(&idx3, &idx2, &[2, 2], &[2, 2]).is_err());
+        // zero factor dimension
+        assert!(ChainPlan::build(&idx2, &idx2, &[2, 0], &[2, 2]).is_err());
+        // out-of-bounds index
+        let oob = TensorIndex::from_usize(&[&[5], &[0], &[0]]);
+        assert!(ChainPlan::build(&oob, &idx3, &[2, 2, 2], &[2, 2, 2]).is_err());
+        // valid D=3 build carries no kron delegate
+        let ok = ChainPlan::build(&idx3, &idx3, &[2, 2, 2], &[2, 2, 2]).unwrap();
+        assert_eq!((ok.len(), ok.out_len(), ok.order()), (1, 1, 3));
+        assert_eq!(ok.dims_a(), &[2, 2, 2]);
+        assert_eq!(ok.dims_b(), &[2, 2, 2]);
+        assert!(!ok.is_empty());
     }
 }

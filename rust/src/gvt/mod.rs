@@ -37,6 +37,7 @@ pub mod algorithm;
 pub mod engine;
 pub mod operator;
 pub mod pairwise;
+pub mod tensor;
 pub mod dense;
 pub mod explicit;
 pub mod complexity;
@@ -44,9 +45,12 @@ pub mod complexity;
 pub use algorithm::{
     gvt_apply, gvt_apply_into, gvt_apply_into_parallel, gvt_apply_multi_into, Branch, GvtWorkspace,
 };
-pub use engine::{EdgePlan, GvtEngine, WorkspacePool};
-pub use operator::{KronKernelOp, KronPredictOp, KronSpectralPrecond, SvmNewtonOp};
+pub use engine::{ChainPlan, EdgePlan, GvtEngine, WorkspacePool};
+pub use operator::{
+    KronKernelOp, KronPredictOp, KronSpectralPrecond, SvmNewtonOp, TensorKernelOp, TensorPredictOp,
+};
 pub use pairwise::{delta_matrix, PairwiseKernelKind, PairwiseOp, PairwiseShared};
+pub use tensor::TensorIndex;
 pub use complexity::{branch_costs, choose_branch};
 
 /// Index sequences `(p, q)` (or `(r, t)`) selecting rows (or columns) of a
@@ -113,11 +117,27 @@ impl KronIndex {
 
     /// The flat row index `(left·dim_right + right)` of each pair in the
     /// Kronecker product (row-major pair ordering, Lemma 2 with 0-base).
+    ///
+    /// Uses checked arithmetic: a grid large enough that `left·dim_right +
+    /// right` wraps `usize` would silently alias unrelated cells, so
+    /// overflow panics with an explicit message instead (mirroring the
+    /// artifact-load dimension guard).
     pub fn flat(&self, dim_right: usize) -> Vec<usize> {
         self.left
             .iter()
             .zip(&self.right)
-            .map(|(&l, &r)| l as usize * dim_right + r as usize)
+            .enumerate()
+            .map(|(h, (&l, &r))| {
+                (l as usize)
+                    .checked_mul(dim_right)
+                    .and_then(|base| base.checked_add(r as usize))
+                    .unwrap_or_else(|| {
+                        panic!(
+                            "flat index overflow at edge {h}: left {l} × dim_right {dim_right} \
+                             + right {r} exceeds usize"
+                        )
+                    })
+            })
             .collect()
     }
 
@@ -170,6 +190,13 @@ mod tests {
     #[should_panic]
     fn mismatched_lengths_panic() {
         KronIndex::new(vec![0, 1], vec![0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "flat index overflow")]
+    fn flat_overflow_panics_with_message() {
+        let idx = KronIndex::from_usize(&[2], &[0]);
+        let _ = idx.flat(usize::MAX);
     }
 
     #[test]

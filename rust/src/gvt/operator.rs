@@ -1,66 +1,71 @@
 //! Linear operators built from the generalized vec trick.
 //!
-//! * [`KronKernelOp`] — the training kernel matrix `Q = R(G⊗K)Rᵀ` as a
-//!   matrix-free symmetric operator (eq. 7 of the paper).
+//! * [`TensorKernelOp`] — the training kernel matrix of a **D-way chain**
+//!   `Q = R(K₁⊗…⊗K_D)Rᵀ` as a matrix-free symmetric operator; the
+//!   generalization of eq. 7 of the paper to tensor-product grids.
+//! * [`KronKernelOp`] — the two-factor `Q = R(G⊗K)Rᵀ` (eq. 7), now a thin
+//!   `D = 2` wrapper over [`TensorKernelOp`] pinned bitwise to the
+//!   pre-chain two-factor pipeline.
 //! * [`RidgeSystemOp`] — `Q + λI` (the ridge linear system, §4.1).
 //! * [`SvmNewtonOp`] — `H·Q + λI` with `H = diag(h)`, `h ∈ {0,1}ⁿ` the
 //!   support mask (the L2-SVM Newton system, §4.2) — nonsymmetric, provides
 //!   the transpose `Q·H + λI` for QMR.
-//! * [`KronPredictOp`] — zero-shot prediction `R̂(Ĝ⊗K̂)Rᵀ a` (§3.1) with the
+//! * [`TensorPredictOp`] / [`KronPredictOp`] — zero-shot prediction
+//!   `R̂(K̂₁⊗…⊗K̂_D)Rᵀ a` (§3.1, D-way and two-factor) with the
 //!   sparse-coefficient shortcut of eq. (5).
 //!
 //! Every operator executes through the [`GvtEngine`](super::engine::GvtEngine)
-//! with a precomputed [`EdgePlan`](super::engine::EdgePlan); the `threads`
-//! knob (via [`KronKernelOp::with_threads`] / [`KronPredictOp::with_threads`])
-//! shards each matvec across cores with bitwise-deterministic results.
-//! Scratch buffers come from a [`WorkspacePool`], so the operators are `Sync`
-//! — `LinOp` consumers and the coordinator's batch worker can share one
-//! trained operator across threads.
+//! with a precomputed plan ([`ChainPlan`](super::engine::ChainPlan), which
+//! wraps the two-factor [`EdgePlan`](super::engine::EdgePlan) at `D = 2`);
+//! the `threads` knob (via `with_threads`) shards each matvec across cores
+//! with bitwise-deterministic results. Scratch buffers come from a
+//! [`WorkspacePool`], so the operators are `Sync` — `LinOp` consumers and
+//! the coordinator's batch worker can share one trained operator across
+//! threads.
 
 use std::sync::Arc;
 
-use super::engine::{EdgePlan, GvtEngine, WorkspacePool};
+use super::engine::{ChainPlan, EdgePlan, GvtEngine, WorkspacePool};
+use super::tensor::TensorIndex;
 use super::{Branch, KronIndex};
 use crate::linalg::eig::EigH;
 use crate::linalg::solvers::{LinOp, MultiLinOp};
 use crate::linalg::Matrix;
 
-/// The training-kernel operator `Q = R(G⊗K)Rᵀ` (n×n, symmetric PSD).
+/// The training-kernel operator of a D-way tensor-product chain,
+/// `Q = R(K₁⊗…⊗K_D)Rᵀ` (n×n, symmetric PSD).
 ///
-/// `G` is the `q×q` end-vertex kernel matrix, `K` the `m×m` start-vertex
-/// kernel matrix, and `idx` maps each training edge to its
-/// (end-vertex, start-vertex) pair — `idx.left ∈ [q]`, `idx.right ∈ [m]`
-/// (matching `G ⊗ K` row ordering). Kernel matrices must be symmetric, so no
-/// transposes are stored and `Aᵀ = A`.
+/// Each `K_d` is the (symmetric) kernel matrix of one grid mode and `idx`
+/// maps each training edge to its per-mode vertex tuple. This is what lets
+/// ridge / SVM / Newton training run unchanged on grid and tensor workloads
+/// (spatio-temporal, multi-relational): the solvers only see a `LinOp`.
 ///
-/// The operator is `Sync`: one trained operator may be applied from many
-/// threads at once (each apply draws its own scratch workspace from an
-/// internal pool), and each apply can itself be sharded across threads via
-/// [`KronKernelOp::with_threads`].
-pub struct KronKernelOp {
-    g: Arc<Matrix>,
-    k: Arc<Matrix>,
-    idx: KronIndex,
-    plan: EdgePlan,
+/// Like the two-factor operator it generalizes, the operator is `Sync`
+/// (per-apply scratch from an internal pool) and every apply is bitwise
+/// identical for every thread count.
+pub struct TensorKernelOp {
+    factors: Vec<Arc<Matrix>>,
+    idx: TensorIndex,
+    plan: ChainPlan,
     engine: GvtEngine,
     pool: WorkspacePool,
     branch: Option<Branch>,
 }
 
-impl KronKernelOp {
-    /// Build the operator from symmetric kernel matrices and the training
-    /// edge index. Runs single-threaded until [`KronKernelOp::with_threads`]
-    /// is applied.
-    pub fn new(g: Arc<Matrix>, k: Arc<Matrix>, idx: KronIndex) -> Self {
-        assert_eq!(g.rows(), g.cols(), "G must be square");
-        assert_eq!(k.rows(), k.cols(), "K must be square");
-        idx.validate(g.rows(), k.rows()).expect("edge indices out of bounds");
-        // Rows and columns are the same training-edge index, so the plan can
-        // carry output-side buckets for the batched stage-2 gather too.
-        let plan = EdgePlan::build_full(&idx, &idx, g.rows(), g.cols(), k.rows(), k.cols());
-        KronKernelOp {
-            g,
-            k,
+impl TensorKernelOp {
+    /// Build the operator from one symmetric kernel matrix per mode and the
+    /// training edge index (one index column per mode). Runs single-threaded
+    /// until [`TensorKernelOp::with_threads`] is applied.
+    pub fn new(factors: Vec<Arc<Matrix>>, idx: TensorIndex) -> Self {
+        assert!(factors.len() >= 2, "tensor chain needs at least two factors");
+        for (d, k) in factors.iter().enumerate() {
+            assert_eq!(k.rows(), k.cols(), "factor {d} must be square");
+        }
+        let dims: Vec<usize> = factors.iter().map(|k| k.rows()).collect();
+        let plan =
+            ChainPlan::build(&idx, &idx, &dims, &dims).expect("invalid tensor kernel operator");
+        TensorKernelOp {
+            factors,
             idx,
             plan,
             engine: GvtEngine::serial(),
@@ -69,7 +74,8 @@ impl KronKernelOp {
         }
     }
 
-    /// Force a specific branch of Algorithm 1 (benchmarks / tests).
+    /// Force a specific branch of Algorithm 1. Honored at `D = 2` (where the
+    /// chain delegates to the two-factor pipeline); ignored for `D ≥ 3`.
     pub fn with_branch(mut self, branch: Branch) -> Self {
         self.branch = Some(branch);
         self
@@ -87,6 +93,136 @@ impl KronKernelOp {
         self.engine.threads()
     }
 
+    /// Number of factors `D` in the chain.
+    pub fn order(&self) -> usize {
+        self.factors.len()
+    }
+
+    /// Number of training edges `n`.
+    pub fn n_edges(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// The training edge index.
+    pub fn index(&self) -> &TensorIndex {
+        &self.idx
+    }
+
+    /// The per-mode kernel matrices.
+    pub fn factors(&self) -> &[Arc<Matrix>] {
+        &self.factors
+    }
+
+    fn factor_refs(&self) -> Vec<&Matrix> {
+        self.factors.iter().map(|f| f.as_ref()).collect()
+    }
+
+    /// `u ← Q v`. Zero entries of `v` are skipped (sparse shortcut).
+    pub fn apply_into(&self, v: &[f64], u: &mut [f64]) {
+        let refs = self.factor_refs();
+        self.pool.with(|ws| {
+            // symmetric factors are their own transposes
+            self.engine.apply_chain(&refs, &refs, &self.plan, v, u, ws, self.branch);
+        });
+    }
+
+    /// `u_j ← Q v_j` for `k_rhs` column planes in one batched sweep. Column
+    /// `j` is bitwise identical to [`TensorKernelOp::apply_into`] on plane
+    /// `j`, so block solvers retrace single-RHS trajectories exactly.
+    pub fn apply_multi_into(&self, v: &[f64], k_rhs: usize, u: &mut [f64]) {
+        let refs = self.factor_refs();
+        self.pool.with(|ws| {
+            self.engine.apply_chain_multi(&refs, &refs, &self.plan, v, u, k_rhs, ws, self.branch);
+        });
+    }
+
+    /// Diagonal of `Q`: `Q[h,h] = Π_d K_d[i^d_h, i^d_h]`.
+    pub fn diagonal(&self) -> Vec<f64> {
+        (0..self.idx.len())
+            .map(|h| {
+                self.factors
+                    .iter()
+                    .zip(&self.idx.modes)
+                    .map(|(k, col)| k.get(col[h] as usize, col[h] as usize))
+                    .product()
+            })
+            .collect()
+    }
+}
+
+impl LinOp for TensorKernelOp {
+    fn dim(&self) -> usize {
+        self.idx.len()
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.apply_into(x, y);
+    }
+    // apply_transpose: default (symmetric).
+}
+
+impl MultiLinOp for TensorKernelOp {
+    fn apply_multi(&self, v: &[f64], k_rhs: usize, u: &mut [f64]) {
+        self.apply_multi_into(v, k_rhs, u);
+    }
+}
+
+/// The training-kernel operator `Q = R(G⊗K)Rᵀ` (n×n, symmetric PSD).
+///
+/// `G` is the `q×q` end-vertex kernel matrix, `K` the `m×m` start-vertex
+/// kernel matrix, and `idx` maps each training edge to its
+/// (end-vertex, start-vertex) pair — `idx.left ∈ [q]`, `idx.right ∈ [m]`
+/// (matching `G ⊗ K` row ordering). Kernel matrices must be symmetric, so no
+/// transposes are stored and `Aᵀ = A`.
+///
+/// A thin `D = 2` wrapper over [`TensorKernelOp`]: the chain plan delegates
+/// two-factor applies to the unmodified
+/// [`GvtEngine::apply_planned`](super::engine::GvtEngine::apply_planned)
+/// pipeline (automatic branch selection, branch forcing, output-side
+/// stage-2 buckets), so results are **bitwise identical to the pre-chain
+/// operator** at every thread count.
+///
+/// The operator is `Sync`: one trained operator may be applied from many
+/// threads at once (each apply draws its own scratch workspace from an
+/// internal pool), and each apply can itself be sharded across threads via
+/// [`KronKernelOp::with_threads`].
+pub struct KronKernelOp {
+    inner: TensorKernelOp,
+    idx: KronIndex,
+}
+
+impl KronKernelOp {
+    /// Build the operator from symmetric kernel matrices and the training
+    /// edge index. Runs single-threaded until [`KronKernelOp::with_threads`]
+    /// is applied.
+    pub fn new(g: Arc<Matrix>, k: Arc<Matrix>, idx: KronIndex) -> Self {
+        assert_eq!(g.rows(), g.cols(), "G must be square");
+        assert_eq!(k.rows(), k.cols(), "K must be square");
+        idx.validate(g.rows(), k.rows()).expect("edge indices out of bounds");
+        // The D=2 chain plan carries the same full EdgePlan (output-side
+        // buckets included) the pre-chain operator built.
+        let inner = TensorKernelOp::new(vec![g, k], TensorIndex::from_kron(&idx));
+        KronKernelOp { inner, idx }
+    }
+
+    /// Force a specific branch of Algorithm 1 (benchmarks / tests).
+    pub fn with_branch(mut self, branch: Branch) -> Self {
+        self.inner = self.inner.with_branch(branch);
+        self
+    }
+
+    /// Shard every matvec over `threads` worker threads (`0` = all cores,
+    /// `1` = serial). Results are bitwise identical for every thread count.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.inner = self.inner.with_threads(threads);
+        self
+    }
+
+    /// Worker threads used per matvec.
+    pub fn threads(&self) -> usize {
+        self.inner.threads()
+    }
+
     /// Number of training edges `n`.
     pub fn n_edges(&self) -> usize {
         self.idx.len()
@@ -94,12 +230,12 @@ impl KronKernelOp {
 
     /// Number of distinct end vertices `q` (rows of G).
     pub fn q_vertices(&self) -> usize {
-        self.g.rows()
+        self.inner.factors()[0].rows()
     }
 
     /// Number of distinct start vertices `m` (rows of K).
     pub fn m_vertices(&self) -> usize {
-        self.k.rows()
+        self.inner.factors()[1].rows()
     }
 
     /// The training edge index.
@@ -109,22 +245,17 @@ impl KronKernelOp {
 
     /// The end-vertex kernel matrix `G`.
     pub fn g(&self) -> &Arc<Matrix> {
-        &self.g
+        &self.inner.factors()[0]
     }
 
     /// The start-vertex kernel matrix `K`.
     pub fn k(&self) -> &Arc<Matrix> {
-        &self.k
+        &self.inner.factors()[1]
     }
 
     /// `u ← Q v`. Zero entries of `v` are skipped (sparse shortcut).
     pub fn apply_into(&self, v: &[f64], u: &mut [f64]) {
-        self.pool.with(|ws| {
-            self.engine.apply_planned(
-                &self.g, &self.k, &self.g, &self.k, &self.idx, &self.idx, &self.plan, v, u, ws,
-                self.branch,
-            );
-        });
+        self.inner.apply_into(v, u);
     }
 
     /// `u_j ← Q v_j` for `k_rhs` column planes in one batched sweep (one
@@ -132,23 +263,13 @@ impl KronKernelOp {
     /// identical to [`KronKernelOp::apply_into`] on plane `j`, so the block
     /// solvers driving this path retrace single-RHS trajectories exactly.
     pub fn apply_multi_into(&self, v: &[f64], k_rhs: usize, u: &mut [f64]) {
-        self.pool.with(|ws| {
-            self.engine.apply_planned_multi(
-                &self.g, &self.k, &self.g, &self.k, &self.idx, &self.idx, &self.plan, v, u, k_rhs,
-                ws, self.branch,
-            );
-        });
+        self.inner.apply_multi_into(v, k_rhs, u);
     }
 
     /// Diagonal of `Q`: `Q[h,h] = G[s_h,s_h]·K[r_h,r_h]` (used by SMO-style
     /// baselines and for preconditioning).
     pub fn diagonal(&self) -> Vec<f64> {
-        self.idx
-            .left
-            .iter()
-            .zip(&self.idx.right)
-            .map(|(&s, &r)| self.g.get(s as usize, s as usize) * self.k.get(r as usize, r as usize))
-            .collect()
+        self.inner.diagonal()
     }
 }
 
@@ -350,6 +471,150 @@ impl<Op: LinOp> LinOp for SvmNewtonOp<'_, Op> {
     }
 }
 
+/// Zero-shot prediction operator for a D-way chain,
+/// `p = R̂(K̂₁⊗…⊗K̂_D)Rᵀ a` (the §3.1 prediction generalized to tensor
+/// grids).
+///
+/// `K̂_d ∈ R^{û_d×m_d}` holds kernel evaluations between the test and
+/// training vertices of mode `d`; `test_idx` maps each requested edge to
+/// its per-mode test-vertex tuple and `train_idx` maps training edges to
+/// their per-mode training-vertex tuples (the same index used at training
+/// time). With a sparse dual vector the per-edge stage-1 work shrinks to
+/// `‖a‖₀` terms (eq. 5) because the gather skips zeros.
+///
+/// Like [`TensorKernelOp`], the operator is `Sync` and shards each
+/// prediction across threads via [`TensorPredictOp::with_threads`].
+pub struct TensorPredictOp {
+    factors: Vec<Matrix>,
+    factors_t: Vec<Matrix>,
+    plan: Arc<ChainPlan>,
+    engine: GvtEngine,
+    pool: Arc<WorkspacePool>,
+}
+
+impl TensorPredictOp {
+    /// Build the prediction operator from one test×train kernel block per
+    /// mode and the two edge indices. Runs single-threaded until
+    /// [`TensorPredictOp::with_threads`] is applied.
+    pub fn new(factors: Vec<Matrix>, test_idx: TensorIndex, train_idx: TensorIndex) -> Self {
+        assert!(factors.len() >= 2, "tensor chain needs at least two factors");
+        let dims_a: Vec<usize> = factors.iter().map(|k| k.rows()).collect();
+        let dims_b: Vec<usize> = factors.iter().map(|k| k.cols()).collect();
+        let plan = ChainPlan::build(&test_idx, &train_idx, &dims_a, &dims_b)
+            .expect("invalid tensor prediction operator");
+        let factors_t = factors.iter().map(|k| k.transpose()).collect();
+        let pool = Arc::new(WorkspacePool::new());
+        TensorPredictOp::from_parts(factors, factors_t, Arc::new(plan), pool)
+    }
+
+    /// Assemble from prebuilt parts (the shared-state constructor behind
+    /// [`KronPredictOp::with_shared`]).
+    pub(crate) fn from_parts(
+        factors: Vec<Matrix>,
+        factors_t: Vec<Matrix>,
+        plan: Arc<ChainPlan>,
+        pool: Arc<WorkspacePool>,
+    ) -> Self {
+        TensorPredictOp { factors, factors_t, plan, engine: GvtEngine::serial(), pool }
+    }
+
+    /// Shard every prediction over `threads` worker threads (`0` = all
+    /// cores, `1` = serial).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.engine = GvtEngine::new(threads);
+        self
+    }
+
+    /// Number of factors `D` in the chain.
+    pub fn order(&self) -> usize {
+        self.factors.len()
+    }
+
+    /// Number of test edges `t`.
+    pub fn n_test(&self) -> usize {
+        self.plan.out_len()
+    }
+
+    /// Number of training edges `n` (the required dual-coefficient length).
+    pub fn n_train(&self) -> usize {
+        self.plan.len()
+    }
+
+    fn factor_refs(&self) -> (Vec<&Matrix>, Vec<&Matrix>) {
+        (self.factors.iter().collect(), self.factors_t.iter().collect())
+    }
+
+    /// Predict scores for all test edges from dual coefficients `a` (length
+    /// n). Zero coefficients are skipped.
+    pub fn predict(&self, a: &[f64]) -> Vec<f64> {
+        let mut p = vec![0.0; self.n_test()];
+        self.predict_into(a, &mut p);
+        p
+    }
+
+    /// [`TensorPredictOp::predict`] into a preallocated output buffer.
+    ///
+    /// Panics unless `a.len()` equals the number of training edges and
+    /// `out.len()` the number of test edges — a mismatched dual vector would
+    /// otherwise index out of bounds inside stage 1 or silently truncate the
+    /// scores.
+    pub fn predict_into(&self, a: &[f64], out: &mut [f64]) {
+        assert_eq!(
+            a.len(),
+            self.n_train(),
+            "dual coefficient vector has length {} but the model was trained on {} edges",
+            a.len(),
+            self.n_train()
+        );
+        assert_eq!(
+            out.len(),
+            self.n_test(),
+            "output buffer has length {} but {} test edges were requested",
+            out.len(),
+            self.n_test()
+        );
+        let (refs, trefs) = self.factor_refs();
+        self.pool.with(|ws| {
+            self.engine.apply_chain(&refs, &trefs, &self.plan, a, out, ws, None);
+        });
+    }
+
+    /// Predict scores for `k_rhs` dual-coefficient vectors (stacked as
+    /// column planes of length `n_train`) in **one batched sweep**. Returns
+    /// `k_rhs` planes of `n_test` scores; plane `j` is bitwise identical to
+    /// [`TensorPredictOp::predict`] on coefficient set `j`.
+    pub fn predict_multi(&self, duals: &[f64], k_rhs: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.n_test() * k_rhs];
+        self.predict_multi_into(duals, k_rhs, &mut out);
+        out
+    }
+
+    /// [`TensorPredictOp::predict_multi`] into a preallocated output buffer
+    /// (`k_rhs` planes of `n_test` scores).
+    pub fn predict_multi_into(&self, duals: &[f64], k_rhs: usize, out: &mut [f64]) {
+        assert_eq!(
+            duals.len(),
+            self.n_train() * k_rhs,
+            "expected {} coefficient planes of length {}, got {} values",
+            k_rhs,
+            self.n_train(),
+            duals.len()
+        );
+        assert_eq!(
+            out.len(),
+            self.n_test() * k_rhs,
+            "expected {} output planes of length {}, got {} slots",
+            k_rhs,
+            self.n_test(),
+            out.len()
+        );
+        let (refs, trefs) = self.factor_refs();
+        self.pool.with(|ws| {
+            self.engine.apply_chain_multi(&refs, &trefs, &self.plan, duals, out, k_rhs, ws, None);
+        });
+    }
+}
+
 /// Zero-shot prediction operator `p = R̂(Ĝ⊗K̂)Rᵀ a` (§3.1).
 ///
 /// `K̂ ∈ R^{u×m}` holds kernel evaluations between the `u` *test* start
@@ -361,19 +626,14 @@ impl<Op: LinOp> LinOp for SvmNewtonOp<'_, Op> {
 /// Cost `O(min(v·n + m·t, u·n + q·t))`, and with a sparse dual vector the
 /// `n` terms become `‖a‖₀` (eq. 5) because stage 1 skips zeros.
 ///
+/// A thin `D = 2` wrapper over [`TensorPredictOp`]: the chain plan
+/// delegates to the unmodified two-factor pipeline, so predictions are
+/// **bitwise identical to the pre-chain operator** at every thread count.
 /// Like [`KronKernelOp`], the operator is `Sync` and shards each prediction
 /// across threads via [`KronPredictOp::with_threads`] — this is what lets
 /// the serving coordinator score batches with one shared trained model.
 pub struct KronPredictOp {
-    ghat: Matrix,
-    khat: Matrix,
-    ghat_t: Matrix,
-    khat_t: Matrix,
-    test_idx: KronIndex,
-    train_idx: Arc<KronIndex>,
-    plan: Arc<EdgePlan>,
-    engine: GvtEngine,
-    pool: Arc<WorkspacePool>,
+    inner: TensorPredictOp,
 }
 
 impl KronPredictOp {
@@ -434,44 +694,46 @@ impl KronPredictOp {
             train_idx.len(),
             "edge plan was built for a different train index"
         );
+        let chain = ChainPlan::from_shared_kron(
+            Arc::new(test_idx),
+            train_idx,
+            plan,
+            [ghat.rows(), khat.rows()],
+            [ghat.cols(), khat.cols()],
+        );
         let ghat_t = ghat.transpose();
         let khat_t = khat.transpose();
         KronPredictOp {
-            ghat,
-            khat,
-            ghat_t,
-            khat_t,
-            test_idx,
-            train_idx,
-            plan,
-            engine: GvtEngine::serial(),
-            pool,
+            inner: TensorPredictOp::from_parts(
+                vec![ghat, khat],
+                vec![ghat_t, khat_t],
+                Arc::new(chain),
+                pool,
+            ),
         }
     }
 
     /// Shard every prediction over `threads` worker threads (`0` = all
     /// cores, `1` = serial).
     pub fn with_threads(mut self, threads: usize) -> Self {
-        self.engine = GvtEngine::new(threads);
+        self.inner = self.inner.with_threads(threads);
         self
     }
 
     /// Number of test edges `t`.
     pub fn n_test(&self) -> usize {
-        self.test_idx.len()
+        self.inner.n_test()
     }
 
     /// Number of training edges `n` (the required dual-coefficient length).
     pub fn n_train(&self) -> usize {
-        self.train_idx.len()
+        self.inner.n_train()
     }
 
     /// Predict scores for all test edges from dual coefficients `a` (length
     /// n). Zero coefficients are skipped.
     pub fn predict(&self, a: &[f64]) -> Vec<f64> {
-        let mut p = vec![0.0; self.test_idx.len()];
-        self.predict_into(a, &mut p);
-        p
+        self.inner.predict(a)
     }
 
     /// [`KronPredictOp::predict`] into a preallocated output buffer.
@@ -481,35 +743,7 @@ impl KronPredictOp {
     /// otherwise index out of bounds inside stage 1 or silently truncate the
     /// scores.
     pub fn predict_into(&self, a: &[f64], out: &mut [f64]) {
-        assert_eq!(
-            a.len(),
-            self.train_idx.len(),
-            "dual coefficient vector has length {} but the model was trained on {} edges",
-            a.len(),
-            self.train_idx.len()
-        );
-        assert_eq!(
-            out.len(),
-            self.test_idx.len(),
-            "output buffer has length {} but {} test edges were requested",
-            out.len(),
-            self.test_idx.len()
-        );
-        self.pool.with(|ws| {
-            self.engine.apply_planned(
-                &self.ghat,
-                &self.khat,
-                &self.ghat_t,
-                &self.khat_t,
-                &self.test_idx,
-                &self.train_idx,
-                &self.plan,
-                a,
-                out,
-                ws,
-                None,
-            );
-        });
+        self.inner.predict_into(a, out);
     }
 
     /// Predict scores for `k_rhs` dual-coefficient vectors (stacked as
@@ -520,46 +754,13 @@ impl KronPredictOp {
     /// `j`. This is the multi-model / multi-λ serving path (Viljanen et
     /// al.'s multi-output setting).
     pub fn predict_multi(&self, duals: &[f64], k_rhs: usize) -> Vec<f64> {
-        let mut out = vec![0.0; self.test_idx.len() * k_rhs];
-        self.predict_multi_into(duals, k_rhs, &mut out);
-        out
+        self.inner.predict_multi(duals, k_rhs)
     }
 
     /// [`KronPredictOp::predict_multi`] into a preallocated output buffer
     /// (`k_rhs` planes of `n_test` scores).
     pub fn predict_multi_into(&self, duals: &[f64], k_rhs: usize, out: &mut [f64]) {
-        assert_eq!(
-            duals.len(),
-            self.train_idx.len() * k_rhs,
-            "expected {} coefficient planes of length {}, got {} values",
-            k_rhs,
-            self.train_idx.len(),
-            duals.len()
-        );
-        assert_eq!(
-            out.len(),
-            self.test_idx.len() * k_rhs,
-            "expected {} output planes of length {}, got {} slots",
-            k_rhs,
-            self.test_idx.len(),
-            out.len()
-        );
-        self.pool.with(|ws| {
-            self.engine.apply_planned_multi(
-                &self.ghat,
-                &self.khat,
-                &self.ghat_t,
-                &self.khat_t,
-                &self.test_idx,
-                &self.train_idx,
-                &self.plan,
-                duals,
-                out,
-                k_rhs,
-                ws,
-                None,
-            );
-        });
+        self.inner.predict_multi_into(duals, k_rhs, out);
     }
 }
 
@@ -594,6 +795,8 @@ mod tests {
 
     #[test]
     fn operators_are_sync() {
+        assert_sync::<TensorKernelOp>();
+        assert_sync::<TensorPredictOp>();
         assert_sync::<KronKernelOp>();
         assert_sync::<KronPredictOp>();
         assert_sync::<RidgeSystemOp<'static>>();
@@ -911,7 +1114,8 @@ mod tests {
         let ghat = Matrix::from_fn(v_test, q, |_, _| rng.normal());
         let khat = Matrix::from_fn(u_test, m, |_, _| rng.normal());
         let a = rng.normal_vec(n);
-        let op = KronPredictOp::new(ghat.clone(), khat.clone(), test_idx.clone(), train_idx.clone());
+        let op =
+            KronPredictOp::new(ghat.clone(), khat.clone(), test_idx.clone(), train_idx.clone());
         let fast = op.predict(&a);
         let slow = explicit_apply(&ghat, &khat, &test_idx, &train_idx, &a);
         assert_allclose(&fast, &slow, 1e-10, 1e-10);
@@ -989,9 +1193,102 @@ mod tests {
                 *ai = 0.0;
             }
         }
-        let op = KronPredictOp::new(ghat.clone(), khat.clone(), test_idx.clone(), train_idx.clone());
+        let op =
+            KronPredictOp::new(ghat.clone(), khat.clone(), test_idx.clone(), train_idx.clone());
         let fast = op.predict(&a);
         let slow = explicit_apply(&ghat, &khat, &test_idx, &train_idx, &a);
         assert_allclose(&fast, &slow, 1e-10, 1e-10);
+    }
+
+    /// Elementwise oracle: `u_h = Σ_l Π_d K_d[rows_d[h], cols_d[l]] · v_l`.
+    fn chain_oracle(
+        factors: &[&Matrix],
+        rows: &TensorIndex,
+        cols: &TensorIndex,
+        v: &[f64],
+    ) -> Vec<f64> {
+        (0..rows.len())
+            .map(|h| {
+                (0..cols.len())
+                    .map(|l| {
+                        let w: f64 = factors
+                            .iter()
+                            .enumerate()
+                            .map(|(d, k)| {
+                                k.get(rows.modes[d][h] as usize, cols.modes[d][l] as usize)
+                            })
+                            .product();
+                        w * v[l]
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+
+    fn random_tensor_edges(rng: &mut Pcg32, dims: &[usize], n_edges: usize) -> TensorIndex {
+        TensorIndex::new(
+            dims.iter()
+                .map(|&d| (0..n_edges).map(|_| rng.below(d) as u32).collect())
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn tensor_kernel_op_matches_oracle_and_diagonal() {
+        let mut rng = Pcg32::seeded(93);
+        let dims = [4usize, 3, 5];
+        let n = 22;
+        let factors: Vec<Arc<Matrix>> =
+            dims.iter().map(|&d| Arc::new(random_kernel(&mut rng, d))).collect();
+        let idx = random_tensor_edges(&mut rng, &dims, n);
+        let v = rng.normal_vec(n);
+        let refs: Vec<&Matrix> = factors.iter().map(|f| f.as_ref()).collect();
+        let want = chain_oracle(&refs, &idx, &idx, &v);
+        for threads in [1, 2, 4] {
+            let op =
+                TensorKernelOp::new(factors.clone(), idx.clone()).with_threads(threads);
+            assert_eq!(op.order(), 3);
+            assert_eq!(op.n_edges(), n);
+            assert_allclose(&op.apply_vec(&v), &want, 1e-10, 1e-10);
+        }
+        let op = TensorKernelOp::new(factors.clone(), idx.clone());
+        for (h, &d) in op.diagonal().iter().enumerate() {
+            let explicit: f64 = factors
+                .iter()
+                .zip(&idx.modes)
+                .map(|(k, col)| k.get(col[h] as usize, col[h] as usize))
+                .product();
+            assert!((d - explicit).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn tensor_predict_op_matches_oracle() {
+        let mut rng = Pcg32::seeded(94);
+        let train_dims = [4usize, 3, 4];
+        let test_dims = [3usize, 2, 5];
+        let (n, t) = (17, 9);
+        let train_idx = random_tensor_edges(&mut rng, &train_dims, n);
+        let test_idx = random_tensor_edges(&mut rng, &test_dims, t);
+        let factors: Vec<Matrix> = test_dims
+            .iter()
+            .zip(&train_dims)
+            .map(|(&u, &m)| Matrix::from_fn(u, m, |_, _| rng.normal()))
+            .collect();
+        let a = rng.normal_vec(n);
+        let refs: Vec<&Matrix> = factors.iter().collect();
+        let want = chain_oracle(&refs, &test_idx, &train_idx, &a);
+        let op = TensorPredictOp::new(factors, test_idx, train_idx);
+        assert_eq!(op.order(), 3);
+        assert_eq!((op.n_test(), op.n_train()), (t, n));
+        assert_allclose(&op.predict(&a), &want, 1e-10, 1e-10);
+        // batched planes are bitwise equal to single predictions
+        let k_rhs = 3;
+        let duals = rng.normal_vec(n * k_rhs);
+        let multi = op.predict_multi(&duals, k_rhs);
+        for j in 0..k_rhs {
+            let single = op.predict(&duals[j * n..(j + 1) * n]);
+            assert_eq!(&multi[j * t..(j + 1) * t], single.as_slice(), "plane {j}");
+        }
     }
 }

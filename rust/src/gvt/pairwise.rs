@@ -434,6 +434,55 @@ impl PairwiseOp {
         })
     }
 
+    /// Convenience training constructor that computes every kernel /
+    /// identity block from raw vertex features — the **single checked seam**
+    /// all trainers (ridge, SVM, Newton) build their dual operators through.
+    /// Validates the vertex domains once
+    /// ([`PairwiseKernelKind::validate_vertex_domains`]) and assembles the
+    /// per-family auxiliary blocks exactly as the prediction-side
+    /// [`PairwiseOp::prediction_from_features`] does, so the trained and
+    /// scored kernels can never drift apart. Blocks are built with the
+    /// threaded GEMM and the returned operator shards its applies over the
+    /// same `threads`.
+    pub fn training_from_features(
+        kind: PairwiseKernelKind,
+        kernel_d: KernelKind,
+        kernel_t: KernelKind,
+        start_features: &Matrix,
+        end_features: &Matrix,
+        idx: KronIndex,
+        threads: usize,
+    ) -> Result<PairwiseOp, String> {
+        kind.validate_vertex_domains(
+            kernel_d,
+            kernel_t,
+            start_features.cols(),
+            end_features.cols(),
+        )?;
+        let k = Arc::new(kernel_d.square_matrix_threaded(start_features, threads));
+        let g = Arc::new(kernel_t.square_matrix_threaded(end_features, threads));
+        let (aux_g, aux_k) = match kind {
+            PairwiseKernelKind::Kronecker => (None, None),
+            PairwiseKernelKind::SymmetricKron | PairwiseKernelKind::AntiSymmetricKron => (
+                Some(Arc::new(kernel_matrix_threaded(
+                    kernel_t,
+                    end_features,
+                    start_features,
+                    threads,
+                ))),
+                None,
+            ),
+            // Feature-equality δ blocks (not the index identity), so the
+            // trained kernel agrees with what the prediction path scores when
+            // distinct vertex indices carry identical feature rows.
+            PairwiseKernelKind::Cartesian => (
+                Some(Arc::new(delta_matrix(end_features, end_features))),
+                Some(Arc::new(delta_matrix(start_features, start_features))),
+            ),
+        };
+        Self::training(kind, g, k, aux_g, aux_k, idx).map(|op| op.with_threads(threads))
+    }
+
     /// Build the rectangular prediction operator from precomputed kernel
     /// blocks. `ghat` (`v×q`) and `khat` (`u×m`) are the test-vs-train
     /// blocks every family uses; the auxiliary blocks depend on the kind:

@@ -1,0 +1,302 @@
+//! D-way tensor-product index sequences — the generalization of
+//! [`KronIndex`](super::KronIndex) from two-factor Kronecker products
+//! `M ⊗ N` to chains `K₁ ⊗ K₂ ⊗ … ⊗ K_D`.
+//!
+//! A [`TensorIndex`] holds one index column per mode: entry `h` of mode `d`
+//! selects a row (or column) of factor `K_d`, so the whole tuple
+//! `(i¹_h, …, i^D_h)` names one row (or column) of the chain product under
+//! row-major tuple ordering — exactly Lemma 2 of the paper applied
+//! recursively. The two-factor `KronIndex` is the `D = 2` special case
+//! ([`TensorIndex::from_kron`] / [`TensorIndex::to_kron`]).
+//!
+//! All dimension products use **checked arithmetic**: a chain over modes of
+//! sizes `d₁·d₂·…·d_D` overflows `usize` long before memory runs out, and a
+//! silently wrapped product would alias unrelated grid cells. Every helper
+//! that multiplies dimensions either returns an `Option`/`Result` or panics
+//! with an explicit overflow message.
+
+use super::KronIndex;
+
+/// Index sequences selecting rows (or columns) of a D-way tensor-product
+/// chain `K₁ ⊗ … ⊗ K_D` by per-factor indices. 0-based; mode `d` indexes
+/// factor `K_d`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorIndex {
+    /// One column per mode; `modes[d][h]` indexes factor `d` for edge `h`.
+    /// All columns have equal length (the number of edges).
+    pub modes: Vec<Vec<u32>>,
+}
+
+/// Product of `dims` with overflow checking.
+pub(crate) fn checked_product(dims: &[usize]) -> Option<usize> {
+    dims.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d))
+}
+
+impl TensorIndex {
+    /// Construct from per-mode index columns, validating that at least one
+    /// mode is present and all columns have equal length.
+    pub fn new(modes: Vec<Vec<u32>>) -> TensorIndex {
+        assert!(!modes.is_empty(), "tensor index needs at least one mode");
+        let len = modes[0].len();
+        for (d, col) in modes.iter().enumerate() {
+            assert_eq!(
+                col.len(),
+                len,
+                "mode {d} has {} entries but mode 0 has {len}",
+                col.len()
+            );
+        }
+        TensorIndex { modes }
+    }
+
+    /// Construct from usize slices (convenience).
+    pub fn from_usize(modes: &[&[usize]]) -> TensorIndex {
+        TensorIndex::new(
+            modes.iter().map(|col| col.iter().map(|&i| i as u32).collect()).collect(),
+        )
+    }
+
+    /// The `D = 2` embedding: `left` becomes mode 0, `right` mode 1.
+    pub fn from_kron(idx: &KronIndex) -> TensorIndex {
+        TensorIndex { modes: vec![idx.left.clone(), idx.right.clone()] }
+    }
+
+    /// Back to a two-factor [`KronIndex`] — `Some` only when `order() == 2`.
+    pub fn to_kron(&self) -> Option<KronIndex> {
+        if self.modes.len() != 2 {
+            return None;
+        }
+        Some(KronIndex::new(self.modes[0].clone(), self.modes[1].clone()))
+    }
+
+    /// Number of modes `D` in the chain.
+    pub fn order(&self) -> usize {
+        self.modes.len()
+    }
+
+    /// Number of indexed rows/columns (edges).
+    pub fn len(&self) -> usize {
+        self.modes[0].len()
+    }
+
+    /// Whether the index selects zero rows/columns.
+    pub fn is_empty(&self) -> bool {
+        self.modes[0].is_empty()
+    }
+
+    /// Check the mode count matches `dims` and every index is in-bounds for
+    /// its mode's dimension.
+    pub fn validate(&self, dims: &[usize]) -> Result<(), String> {
+        if dims.len() != self.order() {
+            return Err(format!(
+                "tensor index has {} modes but {} dimensions were given",
+                self.order(),
+                dims.len()
+            ));
+        }
+        for (d, (col, &dim)) in self.modes.iter().zip(dims).enumerate() {
+            for (h, &i) in col.iter().enumerate() {
+                if i as usize >= dim {
+                    return Err(format!("edge {h}: mode {d} index {i} out of bounds ({dim})"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether every mode's column is surjective onto `[0, dims[d])`
+    /// separately (the D-way analogue of the Theorem 1 assumption).
+    pub fn is_surjective(&self, dims: &[usize]) -> bool {
+        if dims.len() != self.order() {
+            return false;
+        }
+        self.modes.iter().zip(dims).all(|(col, &dim)| {
+            let mut seen = vec![false; dim];
+            for &i in col {
+                if (i as usize) < dim {
+                    seen[i as usize] = true;
+                } else {
+                    return false;
+                }
+            }
+            seen.iter().all(|&s| s)
+        })
+    }
+
+    /// The flat row-major index of each edge's tuple in the chain product:
+    /// `((i¹·d₂ + i²)·d₃ + i³)·…`. Panics with an explicit message if the
+    /// grid size overflows `usize` (checked arithmetic throughout).
+    pub fn flat(&self, dims: &[usize]) -> Vec<usize> {
+        assert_eq!(dims.len(), self.order(), "one dimension per mode required");
+        checked_product(dims).unwrap_or_else(|| {
+            panic!("tensor grid size {dims:?} overflows usize")
+        });
+        (0..self.len())
+            .map(|h| {
+                let mut acc = 0usize;
+                for (col, &dim) in self.modes.iter().zip(dims) {
+                    acc = acc
+                        .checked_mul(dim)
+                        .and_then(|a| a.checked_add(col[h] as usize))
+                        .unwrap_or_else(|| {
+                            panic!("flat index overflow at edge {h} for grid {dims:?}")
+                        });
+                }
+                acc
+            })
+            .collect()
+    }
+
+    /// Flat row-major keys over a contiguous *subrange* of modes
+    /// (`mode_lo..mode_hi`), as `u32` — the form the engine's stage-1
+    /// bucketing and final gather consume. Errors if the subgrid size
+    /// exceeds `u32::MAX` (bucket keys are 32-bit) or overflows.
+    pub(crate) fn flat_range_u32(
+        &self,
+        dims: &[usize],
+        mode_lo: usize,
+        mode_hi: usize,
+    ) -> Result<Vec<u32>, String> {
+        let sub = &dims[mode_lo..mode_hi];
+        let total = checked_product(sub)
+            .ok_or_else(|| format!("tensor subgrid {sub:?} overflows usize"))?;
+        if total > u32::MAX as usize {
+            return Err(format!(
+                "tensor subgrid {sub:?} has {total} cells, exceeding the 32-bit bucket-key limit"
+            ));
+        }
+        Ok((0..self.len())
+            .map(|h| {
+                let mut acc = 0usize;
+                for d in mode_lo..mode_hi {
+                    acc = acc * dims[d] + self.modes[d][h] as usize;
+                }
+                acc as u32
+            })
+            .collect())
+    }
+
+    /// If this index enumerates the **complete grid**
+    /// `[0,d₁) × … × [0,d_D)` — every cell exactly once, in any order —
+    /// return the layout mapping each flat row-major cell to the edge
+    /// position `h` covering it; otherwise `None`. The D-way analogue of
+    /// [`KronIndex::complete_layout`], and the condition under which the
+    /// index matrix `R` is a permutation of the full grid.
+    pub fn complete_layout(&self, dims: &[usize]) -> Option<Vec<u32>> {
+        if dims.len() != self.order() {
+            return None;
+        }
+        let total = checked_product(dims)?;
+        if total == 0 || self.len() != total || total > u32::MAX as usize {
+            return None;
+        }
+        let mut layout = vec![u32::MAX; total];
+        for h in 0..self.len() {
+            let mut pos = 0usize;
+            for (col, &dim) in self.modes.iter().zip(dims) {
+                let i = col[h] as usize;
+                if i >= dim {
+                    return None;
+                }
+                pos = pos * dim + i;
+            }
+            if layout[pos] != u32::MAX {
+                return None; // duplicate cell
+            }
+            layout[pos] = h as u32;
+        }
+        // len == total and no duplicates ⇒ every cell covered (pigeonhole).
+        Some(layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_index_basics() {
+        let idx = TensorIndex::from_usize(&[&[0, 1, 2], &[1, 0, 1], &[0, 1, 1]]);
+        assert_eq!(idx.order(), 3);
+        assert_eq!(idx.len(), 3);
+        assert!(!idx.is_empty());
+        assert!(idx.validate(&[3, 2, 2]).is_ok());
+        assert!(idx.validate(&[2, 2, 2]).is_err());
+        assert!(idx.validate(&[3, 2]).is_err());
+        assert!(idx.is_surjective(&[3, 2, 2]));
+        assert!(!idx.is_surjective(&[4, 2, 2]));
+        // flat = (i1*2 + i2)*2 + i3
+        assert_eq!(idx.flat(&[3, 2, 2]), vec![2, 5, 11]);
+    }
+
+    #[test]
+    fn round_trips_with_kron_index() {
+        let kron = KronIndex::from_usize(&[0, 1, 2], &[1, 0, 1]);
+        let tensor = TensorIndex::from_kron(&kron);
+        assert_eq!(tensor.order(), 2);
+        assert_eq!(tensor.to_kron(), Some(kron.clone()));
+        // flat agrees with the two-factor definition
+        assert_eq!(tensor.flat(&[3, 2]), kron.flat(2));
+        let d3 = TensorIndex::from_usize(&[&[0], &[0], &[0]]);
+        assert_eq!(d3.to_kron(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "mode 1 has")]
+    fn mismatched_mode_lengths_panic() {
+        TensorIndex::new(vec![vec![0, 1], vec![0]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows usize")]
+    fn flat_overflow_panics_with_message() {
+        let idx = TensorIndex::from_usize(&[&[0], &[0], &[0]]);
+        idx.flat(&[usize::MAX, usize::MAX, 2]);
+    }
+
+    #[test]
+    fn flat_range_u32_is_the_row_major_subkey() {
+        let idx = TensorIndex::from_usize(&[&[1, 0], &[2, 1], &[0, 3]]);
+        let dims = [2, 3, 4];
+        // full range matches flat()
+        let full = idx.flat_range_u32(&dims, 0, 3).unwrap();
+        assert_eq!(
+            full.iter().map(|&k| k as usize).collect::<Vec<_>>(),
+            idx.flat(&dims)
+        );
+        // trailing range (modes 1..3): key = i2*4 + i3
+        let rest = idx.flat_range_u32(&dims, 1, 3).unwrap();
+        assert_eq!(rest, vec![8, 7]);
+        // leading range (modes 0..2): key = i1*3 + i2
+        let prefix = idx.flat_range_u32(&dims, 0, 2).unwrap();
+        assert_eq!(prefix, vec![5, 1]);
+        // over-u32 subgrid is rejected with a clear error
+        let big = [usize::MAX / 2, 3, 4];
+        assert!(idx.flat_range_u32(&big, 0, 2).unwrap_err().contains("32-bit"));
+    }
+
+    #[test]
+    fn complete_layout_detects_full_grids() {
+        // 2×2×2 grid enumerated in scrambled order.
+        let idx = TensorIndex::from_usize(&[
+            &[1, 0, 0, 1, 0, 1, 0, 1],
+            &[0, 0, 1, 1, 0, 0, 1, 1],
+            &[1, 0, 0, 1, 1, 0, 1, 0],
+        ]);
+        let layout = idx.complete_layout(&[2, 2, 2]).expect("complete");
+        for (pos, &h) in layout.iter().enumerate() {
+            assert_eq!(idx.flat(&[2, 2, 2])[h as usize], pos);
+        }
+        // missing + duplicate cell
+        let dup = TensorIndex::from_usize(&[&[0, 0], &[0, 0], &[0, 0]]);
+        assert!(dup.complete_layout(&[1, 1, 2]).is_none());
+        // wrong edge count
+        let short = TensorIndex::from_usize(&[&[0], &[0], &[0]]);
+        assert!(short.complete_layout(&[2, 1, 1]).is_none());
+        // wrong mode count
+        assert!(short.complete_layout(&[1, 1]).is_none());
+        // empty grid is never complete
+        let empty = TensorIndex::new(vec![vec![], vec![]]);
+        assert!(empty.complete_layout(&[0, 0]).is_none());
+    }
+}

@@ -8,6 +8,7 @@
 //!              --lambda 0.0078125 --outer 10 --inner 10 --save model.json
 //! kronvt predict --model model.json --data checker     # fresh-process scoring
 //! kronvt cv --data gpcr --method kronridge --lambda 1e-4
+//! kronvt train --data grid --factors 20x15x12 --kernel gaussian:1   # D-way chain
 //! kronvt serve --model model.json --requests 100       # serve without retraining
 //! kronvt artifacts                         # artifact registry status
 //! ```
@@ -20,7 +21,7 @@ use std::path::Path;
 use kronvt::api::{Compute, Learner, TrainedModel};
 use kronvt::baselines::{ExplicitSvm, ExplicitSvmConfig, KnnConfig, KnnModel, SgdConfig, SgdLossKind, SgdModel};
 use kronvt::coordinator::{run_cv_jobs, run_cv_path_jobs, PredictServer, ServerConfig};
-use kronvt::data::{checkerboard, dti, Dataset};
+use kronvt::data::{checkerboard, dti, Dataset, GridCheckerboardConfig};
 use kronvt::eval::auc::auc;
 use kronvt::gvt::PairwiseKernelKind;
 use kronvt::kernels::KernelKind;
@@ -54,11 +55,41 @@ fn load_dataset(name: &str, seed: u64, scale: f64) -> Result<Dataset, String> {
         "e" => dti::e(seed).generate(),
         other => {
             return Err(format!(
-                "unknown dataset '{other}' (checker, checker+, homo, ki, gpcr, ic, e)"
+                "unknown dataset '{other}' (checker, checker+, homo, ki, gpcr, ic, e; \
+                 --data grid takes the tensor-chain path)"
             ))
         }
     };
     Ok(ds)
+}
+
+/// Parse a `--factors AxBxC` grid spec into per-mode vertex counts.
+fn parse_factors(spec: &str) -> Result<Vec<usize>, String> {
+    let dims: Vec<usize> = spec
+        .split('x')
+        .map(|t| {
+            t.parse::<usize>()
+                .ok()
+                .filter(|&d| d > 0)
+                .ok_or_else(|| format!("bad --factors '{spec}': '{t}' is not a positive integer"))
+        })
+        .collect::<Result<_, _>>()?;
+    if dims.len() < 2 {
+        return Err(format!("--factors '{spec}' needs at least two 'x'-separated modes"));
+    }
+    Ok(dims)
+}
+
+/// Build the spatio-temporal checkerboard grid the `--data grid` path
+/// trains and scores on (deterministic given the flags).
+fn grid_config(args: &Args, seed: u64) -> Result<GridCheckerboardConfig, String> {
+    Ok(GridCheckerboardConfig {
+        dims: parse_factors(&args.get_str("factors", "20x15x12"))?,
+        density: args.get_f64("density", 0.25)?,
+        noise: args.get_f64("noise", 0.2)?,
+        feature_range: 8.0,
+        seed,
+    })
 }
 
 /// A fully parsed training method: every flag is validated up front, so a
@@ -160,12 +191,63 @@ fn cmd_datasets(args: &Args) -> Result<(), String> {
 
 const TRAIN_FLAGS: &[&str] = &[
     "data", "method", "seed", "scale", "test-frac", "lambda", "kernel", "pairwise", "solver",
-    "threads", "outer", "inner", "iterations", "c", "updates", "k", "save",
+    "threads", "outer", "inner", "iterations", "c", "updates", "k", "save", "factors", "density",
+    "noise",
 ];
+
+/// `train --data grid`: D-way tensor-chain ridge on the spatio-temporal
+/// checkerboard — the factor-list analogue of the two-factor train path,
+/// with the same AUC / score_sum / `--save` reporting (v2 artifact).
+fn train_grid(args: &Args) -> Result<(), String> {
+    let method = args.get_str("method", "kronridge");
+    if method != "kronridge" {
+        return Err(format!("--data grid trains with --method kronridge only (got '{method}')"));
+    }
+    let seed = args.get_u64("seed", 1)?;
+    let compute = Compute::threads(args.get_usize("threads", 1)?);
+    let ds = grid_config(args, seed)?.generate();
+    let (train, test) = ds.holdout_split(args.get_f64("test-frac", 0.25)?, seed);
+    println!(
+        "dataset={} dims={:?} train: n={}; test: n={}",
+        ds.name,
+        train.dims(),
+        train.n_edges(),
+        test.n_edges()
+    );
+    let learner = Learner::ridge()
+        .iterations(args.get_usize("iterations", 100)?)
+        .lambda(args.get_f64("lambda", 1e-4)?)
+        .kernel(KernelKind::parse(&args.get_str("kernel", "gaussian:1"))?)
+        .compute(compute);
+    let timer = Timer::start();
+    let model = learner.fit_tensor(&train)?;
+    let scores = model.predict_tensor(&test, &compute)?;
+    let auc_val = auc(&test.labels, &scores);
+    println!(
+        "method=kronridge(tensor) D={} AUC={auc_val:.4} time={:.2}s",
+        train.order(),
+        timer.elapsed_secs()
+    );
+    let score_sum: f64 = scores.iter().sum();
+    println!("test n={} score_sum={score_sum}", test.n_edges());
+    if let Some(path) = args.get("save") {
+        model.save(Path::new(path))?;
+        println!("saved kronvt-model/v2 artifact to {path}");
+    }
+    Ok(())
+}
 
 fn cmd_train(args: &Args) -> Result<(), String> {
     args.expect_known("train", TRAIN_FLAGS)?;
     let data = args.get_str("data", "checker");
+    if data == "grid" {
+        return train_grid(args);
+    }
+    for flag in ["factors", "density", "noise"] {
+        if args.has(flag) {
+            return Err(format!("--{flag} applies to --data grid only (got --data {data})"));
+        }
+    }
     let method = args.get_str("method", "kronsvm");
     let seed = args.get_u64("seed", 1)?;
     // GVT matvec parallelism (0 = all cores); results are identical for
@@ -207,13 +289,54 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-const PREDICT_FLAGS: &[&str] = &["model", "data", "seed", "scale", "test-frac", "threads"];
+const PREDICT_FLAGS: &[&str] = &[
+    "model", "data", "seed", "scale", "test-frac", "threads", "factors", "density", "noise",
+];
+
+/// `predict --data grid`: score a saved tensor-chain (v2) artifact on the
+/// regenerated grid test split — same determinism contract as the
+/// two-factor path (matching score_sum lines prove the bitwise round trip).
+fn predict_grid(args: &Args, path: &str, model: TrainedModel) -> Result<(), String> {
+    if model.as_tensor().is_none() {
+        return Err(format!(
+            "--data grid scores tensor-chain models, but {path} holds a {} model",
+            model.kind_name()
+        ));
+    }
+    let seed = args.get_u64("seed", 1)?;
+    let ds = grid_config(args, seed)?.generate();
+    let (_, test) = ds.holdout_split(args.get_f64("test-frac", 0.25)?, seed);
+    let compute = Compute::threads(args.get_usize("threads", 1)?);
+    let timer = Timer::start();
+    let scores = model.predict_tensor(&test, &compute)?;
+    let auc_val = auc(&test.labels, &scores);
+    println!(
+        "model={path} kind={} lambda={} AUC={auc_val:.4} time={:.2}s",
+        model.kind_name(),
+        model.lambda(),
+        timer.elapsed_secs()
+    );
+    let score_sum: f64 = scores.iter().sum();
+    println!("test n={} score_sum={score_sum}", test.n_edges());
+    Ok(())
+}
 
 fn cmd_predict(args: &Args) -> Result<(), String> {
     args.expect_known("predict", PREDICT_FLAGS)?;
     let path = args.get("model").ok_or("predict requires --model PATH")?;
     let model = TrainedModel::load(Path::new(path))?;
     let data = args.get_str("data", "checker");
+    if model.as_tensor().is_some() && args.has("data") && data != "grid" {
+        return Err(format!("{path} holds a tensor-chain model; score it with --data grid"));
+    }
+    if data == "grid" || model.as_tensor().is_some() {
+        return predict_grid(args, path, model);
+    }
+    for flag in ["factors", "density", "noise"] {
+        if args.has(flag) {
+            return Err(format!("--{flag} applies to --data grid only (got --data {data})"));
+        }
+    }
     let seed = args.get_u64("seed", 1)?;
     // Defaults mirror `train`, so the same seed reproduces the same split —
     // matching score_sum lines prove the save → load round trip is bitwise.
@@ -487,7 +610,7 @@ fn usage() -> ! {
            serve      batched zero-shot prediction server; --model PATH serves a\n\
                       saved artifact without retraining\n\
            artifacts  show the PJRT artifact registry status\n\
-         common flags: --data checker|checker+|homo|ki|gpcr|ic|e --method kronsvm|kronridge|libsvm|sgd-hinge|sgd-logistic|knn\n\
+         common flags: --data checker|checker+|homo|ki|gpcr|ic|e|grid --method kronsvm|kronridge|libsvm|sgd-hinge|sgd-logistic|knn\n\
                        --kernel linear|gaussian:G --lambda L --seed S --scale F\n\
                        --pairwise kron|symmetric|antisymmetric|cartesian\n\
                                      pairwise kernel family (kronsvm/kronridge; symmetric and\n\
@@ -499,6 +622,10 @@ fn usage() -> ! {
                        --fold-workers N   (cv only) train folds concurrently\n\
                        --lambdas a,b,c    (cv + kronridge) batched λ-grid CV: one block-CG solve\n\
                                           and one multi-RHS prediction per fold covers every λ\n\
+         grid flags:   --data grid takes the D-way tensor-chain path (train/predict, kronridge):\n\
+                       --factors AxBxC    per-mode vertex counts (default 20x15x12; any D >= 2)\n\
+                       --density F        labeled fraction of the grid cells (default 0.25)\n\
+                       --noise F          label-flip probability (default 0.2)\n\
          model flags:  --save PATH   (train) persist the trained model artifact\n\
                        --model PATH  (predict/serve) load a saved artifact\n\
          serve flags:  --serve-workers N   scoring-pool threads (batches scored concurrently)\n\

@@ -5,9 +5,14 @@
 //!   ("Baseline") prediction path for the Fig. 6 comparison.
 //! * [`primal`] — the primal model `f(d,t) = ⟨d ⊗ t, w⟩` for linear vertex
 //!   kernels, and the matrix-free primal operators of Algorithm 3.
+//! * [`tensor`] — the D-way tensor-chain dual model
+//!   `f(x¹,…,x^D) = Σᵢ aᵢ Π_d k_d(x^d_{iᵈ}, x^d)`, the generalization of
+//!   the dual model to tensor-product grids.
 
 pub mod dual;
 pub mod primal;
+pub mod tensor;
 
 pub use dual::{predict_path, DualModel, PredictContext};
 pub use primal::{PrimalKronOp, PrimalModel};
+pub use tensor::TensorModel;

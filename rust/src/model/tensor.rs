@@ -1,0 +1,239 @@
+//! [`TensorModel`] — the trained dual model of a **D-way tensor-product
+//! chain**: dual coefficients over the training cells plus the per-mode
+//! training features and kernels needed to score new cells through
+//! [`TensorPredictOp`].
+//!
+//! The D-way analogue of [`DualModel`](super::DualModel): prediction builds
+//! one rectangular test–train kernel block **per mode** and pushes the dual
+//! vector through the chained GVT apply — the `(K̂₁⊗…⊗K̂_D)` product is
+//! never materialized.
+
+use crate::data::TensorDataset;
+use crate::gvt::{TensorIndex, TensorPredictOp};
+use crate::kernels::{kernel_matrix_threaded, KernelKind};
+use crate::linalg::Matrix;
+
+/// A trained D-way tensor-chain dual model.
+///
+/// Produced by [`TensorRidge`](crate::train::TensorRidge) (or directly);
+/// scores a [`TensorDataset`] of test cells on the same per-mode vertex
+/// domains via [`TensorModel::predict`].
+#[derive(Debug, Clone)]
+pub struct TensorModel {
+    /// Dual coefficients, one per training cell.
+    pub dual_coef: Vec<f64>,
+    /// Per-mode training vertex features; `train_features[d]` has one row
+    /// per mode-`d` vertex.
+    pub train_features: Vec<Matrix>,
+    /// Per-mode vertex columns of the training cells.
+    pub train_idx: TensorIndex,
+    /// One kernel per mode, applied to that mode's features.
+    pub kernels: Vec<KernelKind>,
+}
+
+impl TensorModel {
+    /// Number of modes `D` in the chain.
+    pub fn order(&self) -> usize {
+        self.train_features.len()
+    }
+
+    /// Number of training cells (length of the dual vector).
+    pub fn n_train(&self) -> usize {
+        self.dual_coef.len()
+    }
+
+    /// Number of nonzero dual coefficients (drives the sparse prediction
+    /// shortcut of eq. 5).
+    pub fn nnz(&self) -> usize {
+        self.dual_coef.iter().filter(|&&a| a != 0.0).count()
+    }
+
+    /// Per-mode training vertex counts.
+    pub fn mode_dims(&self) -> Vec<usize> {
+        self.train_features.iter().map(|f| f.rows()).collect()
+    }
+
+    /// Structural validation: mode counts agree across features / index /
+    /// kernels, the dual vector covers every indexed cell, indices in
+    /// bounds.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.train_features.len() < 2 {
+            return Err(format!(
+                "tensor model needs at least two modes, got {}",
+                self.train_features.len()
+            ));
+        }
+        if self.train_features.len() != self.train_idx.order() {
+            return Err(format!(
+                "{} feature matrices but the training index has {} modes",
+                self.train_features.len(),
+                self.train_idx.order()
+            ));
+        }
+        if self.kernels.len() != self.train_features.len() {
+            return Err(format!(
+                "{} mode kernels but {} modes",
+                self.kernels.len(),
+                self.train_features.len()
+            ));
+        }
+        if self.dual_coef.len() != self.train_idx.len() {
+            return Err(format!(
+                "dual vector has {} entries but the model was trained on {} cells",
+                self.dual_coef.len(),
+                self.train_idx.len()
+            ));
+        }
+        self.train_idx.validate(&self.mode_dims())
+    }
+
+    /// Check that `test` lives on compatible per-mode feature domains.
+    fn check_test(&self, test: &TensorDataset) -> Result<(), String> {
+        if test.order() != self.order() {
+            return Err(format!(
+                "test data has {} modes but the model was trained on {}",
+                test.order(),
+                self.order()
+            ));
+        }
+        for (d, (te, tr)) in test.features.iter().zip(&self.train_features).enumerate() {
+            if te.cols() != tr.cols() {
+                return Err(format!(
+                    "mode {d} test features have {} columns but training used {}",
+                    te.cols(),
+                    tr.cols()
+                ));
+            }
+        }
+        test.index.validate(&test.dims()).map_err(|e| format!("test index: {e}"))
+    }
+
+    /// Build the rectangular prediction operator for the cells of `test`:
+    /// one `t_d × m_d` test–train kernel block per mode, composed into a
+    /// [`TensorPredictOp`] sharded over `threads`.
+    pub fn predict_op(
+        &self,
+        test: &TensorDataset,
+        threads: usize,
+    ) -> Result<TensorPredictOp, String> {
+        self.check_test(test)?;
+        let blocks: Vec<Matrix> = self
+            .kernels
+            .iter()
+            .zip(&test.features)
+            .zip(&self.train_features)
+            .map(|((&k, te), tr)| kernel_matrix_threaded(k, te, tr, threads))
+            .collect();
+        Ok(TensorPredictOp::new(blocks, test.index.clone(), self.train_idx.clone())
+            .with_threads(threads))
+    }
+
+    /// Predict scores for every cell of `test` (serial).
+    pub fn predict(&self, test: &TensorDataset) -> Result<Vec<f64>, String> {
+        self.predict_threaded(test, 1)
+    }
+
+    /// [`TensorModel::predict`] with the kernel-block builds and the chained
+    /// GVT matvec sharded over `threads` (bitwise identical to serial).
+    pub fn predict_threaded(
+        &self,
+        test: &TensorDataset,
+        threads: usize,
+    ) -> Result<Vec<f64>, String> {
+        Ok(self.predict_op(test, threads)?.predict(&self.dual_coef))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::GridCheckerboardConfig;
+    use crate::linalg::vecops::assert_allclose;
+    use crate::util::rng::Pcg32;
+
+    fn toy_model_and_data(seed: u64) -> (TensorModel, TensorDataset, TensorDataset) {
+        let ds = GridCheckerboardConfig {
+            dims: vec![5, 4, 6],
+            density: 0.5,
+            noise: 0.1,
+            feature_range: 4.0,
+            seed,
+        }
+        .generate();
+        let (train, test) = ds.holdout_split(0.3, seed ^ 1);
+        let mut rng = Pcg32::seeded(seed ^ 2);
+        let model = TensorModel {
+            dual_coef: rng.normal_vec(train.n_edges()),
+            train_features: train.features.clone(),
+            train_idx: train.index.clone(),
+            kernels: vec![
+                KernelKind::Gaussian { gamma: 0.5 },
+                KernelKind::Linear,
+                KernelKind::Gaussian { gamma: 0.25 },
+            ],
+        };
+        model.validate().unwrap();
+        (model, train, test)
+    }
+
+    /// Brute-force oracle: score_h = Σ_l a_l · Π_d K̂_d[i^d_h, j^d_l].
+    fn oracle(model: &TensorModel, test: &TensorDataset) -> Vec<f64> {
+        let blocks: Vec<Matrix> = model
+            .kernels
+            .iter()
+            .zip(&test.features)
+            .zip(&model.train_features)
+            .map(|((&k, te), tr)| kernel_matrix_threaded(k, te, tr, 1))
+            .collect();
+        (0..test.n_edges())
+            .map(|h| {
+                (0..model.n_train())
+                    .map(|l| {
+                        model.dual_coef[l]
+                            * blocks
+                                .iter()
+                                .enumerate()
+                                .map(|(d, b)| {
+                                    b.get(
+                                        test.index.modes[d][h] as usize,
+                                        model.train_idx.modes[d][l] as usize,
+                                    )
+                                })
+                                .product::<f64>()
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn predict_matches_brute_force_oracle() {
+        let (model, _train, test) = toy_model_and_data(21);
+        let want = oracle(&model, &test);
+        let got = model.predict(&test).unwrap();
+        assert_allclose(&got, &want, 1e-10, 1e-10);
+        // threaded predictions are bitwise identical to serial
+        for threads in [2, 4] {
+            assert_eq!(model.predict_threaded(&test, threads).unwrap(), got);
+        }
+    }
+
+    #[test]
+    fn predict_rejects_incompatible_test_data() {
+        let (model, train, test) = toy_model_and_data(22);
+        // wrong mode count
+        let mut two_mode = test.clone();
+        two_mode.features.truncate(2);
+        two_mode.index = TensorIndex::new(two_mode.index.modes[..2].to_vec());
+        assert!(model.predict(&two_mode).is_err());
+        // wrong feature width on one mode
+        let mut wide = test.clone();
+        wide.features[1] = Matrix::zeros(wide.features[1].rows(), 3);
+        assert!(model.predict(&wide).is_err());
+        // malformed model
+        let mut short = model.clone();
+        short.dual_coef.pop();
+        assert!(short.validate().is_err());
+        drop(train);
+    }
+}

@@ -9,13 +9,18 @@
 //! * per-iteration tracing of regularized risk and validation AUC (the data
 //!   behind Figs. 3–5);
 //! * early stopping on validation AUC (§3.3, §5.2).
+//!
+//! [`tensor`] extends the ridge case study to D-way tensor-product chains:
+//! the same CG machinery over a [`TensorKernelOp`](crate::gvt::TensorKernelOp).
 
 pub mod trace;
 pub mod ridge;
 pub mod svm;
 pub mod newton;
+pub mod tensor;
 
 pub use ridge::{KronRidge, RidgeConfig, RidgeSolver};
 pub use svm::{KronSvm, SvmConfig};
 pub use newton::{NewtonConfig, NewtonTrainer};
+pub use tensor::{TensorRidge, TensorRidgeConfig};
 pub use trace::{IterRecord, TrainTrace};

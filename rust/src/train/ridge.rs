@@ -27,13 +27,11 @@
 //! [`RidgeSolver::PrecondCg`]. Solver choice is [`RidgeSolver`]; the default
 //! `Auto` picks the closed form whenever it applies.
 
-use std::sync::Arc;
-
 use crate::api::Compute;
 use crate::data::Dataset;
 use crate::eval::auc::auc;
-use crate::gvt::{delta_matrix, KronSpectralPrecond, PairwiseKernelKind, PairwiseOp};
-use crate::kernels::{kernel_matrix_threaded, KernelKind};
+use crate::gvt::{KronSpectralPrecond, PairwiseKernelKind, PairwiseOp};
+use crate::kernels::KernelKind;
 use crate::linalg::eig::{eigh, EigH};
 use crate::linalg::solvers::{
     block_cg, block_pcg, cg_cb, minres_cb, pcg_cb, Preconditioner, SolverConfig,
@@ -163,37 +161,20 @@ pub(crate) fn dual_kernel_op(
     pairwise: PairwiseKernelKind,
     compute: &Compute,
 ) -> Result<PairwiseOp, String> {
-    let threads = compute.threads;
-    pairwise.validate_vertex_domains(
+    // One shared checked constructor with the prediction path
+    // (`validation_op` below): domain validation and per-family block
+    // assembly live in `PairwiseOp::training_from_features`, so the trained
+    // and scored kernels share a single seam.
+    Ok(PairwiseOp::training_from_features(
+        pairwise,
         kernel_d,
         kernel_t,
-        train.start_features.cols(),
-        train.end_features.cols(),
-    )?;
-    let k = Arc::new(kernel_d.square_matrix_threaded(&train.start_features, threads));
-    let g = Arc::new(kernel_t.square_matrix_threaded(&train.end_features, threads));
-    let (aux_g, aux_k) = match pairwise {
-        PairwiseKernelKind::Kronecker => (None, None),
-        PairwiseKernelKind::SymmetricKron | PairwiseKernelKind::AntiSymmetricKron => (
-            Some(Arc::new(kernel_matrix_threaded(
-                kernel_t,
-                &train.end_features,
-                &train.start_features,
-                threads,
-            ))),
-            None,
-        ),
-        // Feature-equality δ blocks (not the index identity), so the trained
-        // kernel agrees with what the prediction path scores when distinct
-        // vertex indices carry identical feature rows.
-        PairwiseKernelKind::Cartesian => (
-            Some(Arc::new(delta_matrix(&train.end_features, &train.end_features))),
-            Some(Arc::new(delta_matrix(&train.start_features, &train.start_features))),
-        ),
-    };
-    Ok(PairwiseOp::training(pairwise, g, k, aux_g, aux_k, train.kron_index())?
-        .with_threads(threads)
-        .with_pool_retention(compute.workspace_retention))
+        &train.start_features,
+        &train.end_features,
+        train.kron_index(),
+        compute.threads,
+    )?
+    .with_pool_retention(compute.workspace_retention))
 }
 
 /// Build a zero-shot prediction operator from training to validation edges

@@ -1,0 +1,219 @@
+//! Acceptance suite for the D-way tensor-product chain generalization:
+//!
+//! 1. the D = 2 chain apply is **bitwise identical** to the two-factor
+//!    [`KronKernelOp`] at every thread count, single- and multi-RHS — the
+//!    pre-refactor operator is literally the `D = 2` special case;
+//! 2. the D = 3 chain apply matches a dense triple-Kronecker oracle to
+//!    1e-10;
+//! 3. the grid generator's complete/incomplete split is detected by
+//!    [`TensorDataset::is_complete_grid`];
+//! 4. a D = 3 ridge model trains end to end through
+//!    [`Learner::fit_tensor`] on the spatio-temporal checkerboard, with
+//!    predictions matching a dense Kronecker oracle (SPD solve + explicit
+//!    cross-kernel products) to 1e-10 and a finite test AUC.
+
+use std::sync::Arc;
+
+use kronvt::api::{Compute, Learner};
+use kronvt::data::{GridCheckerboardConfig, TensorDataset};
+use kronvt::eval::auc::auc;
+use kronvt::gvt::{KronKernelOp, TensorIndex, TensorKernelOp};
+use kronvt::kernels::{kernel_matrix, KernelKind};
+use kronvt::linalg::vecops::assert_allclose;
+use kronvt::linalg::Matrix;
+use kronvt::util::rng::Pcg32;
+
+const GAUSS: KernelKind = KernelKind::Gaussian { gamma: 0.5 };
+
+/// A random Gaussian kernel matrix over `n` vertices with 3-dim features.
+fn random_kernel(rng: &mut Pcg32, n: usize) -> Matrix {
+    let x = Matrix::from_fn(n, 3, |_, _| rng.normal());
+    GAUSS.square_matrix(&x)
+}
+
+/// A random edge index over the given per-mode vertex counts.
+fn random_index(rng: &mut Pcg32, dims: &[usize], n: usize) -> TensorIndex {
+    TensorIndex::new(
+        dims.iter().map(|&d| (0..n).map(|_| rng.below(d) as u32).collect()).collect(),
+    )
+}
+
+#[test]
+fn two_mode_chain_is_bitwise_identical_to_kron_op() {
+    let mut rng = Pcg32::seeded(0x7C2);
+    let (m, q, n) = (17, 13, 300);
+    let k = Arc::new(random_kernel(&mut rng, m));
+    let g = Arc::new(random_kernel(&mut rng, q));
+    let idx = random_index(&mut rng, &[m, q], n);
+    let kron_idx = idx.to_kron().expect("two-mode index converts");
+    let v = rng.normal_vec(n);
+    const K_RHS: usize = 5;
+    let vs = rng.normal_vec(n * K_RHS);
+
+    for threads in [1, 2, 4] {
+        let chain = TensorKernelOp::new(vec![k.clone(), g.clone()], idx.clone())
+            .with_threads(threads);
+        let kron = KronKernelOp::new(k.clone(), g.clone(), kron_idx.clone())
+            .with_threads(threads);
+
+        let mut u_chain = vec![0.0; n];
+        let mut u_kron = vec![0.0; n];
+        chain.apply_into(&v, &mut u_chain);
+        kron.apply_into(&v, &mut u_kron);
+        assert_eq!(u_chain, u_kron, "single-RHS diverged at {threads} threads");
+
+        let mut us_chain = vec![0.0; n * K_RHS];
+        let mut us_kron = vec![0.0; n * K_RHS];
+        chain.apply_multi_into(&vs, K_RHS, &mut us_chain);
+        kron.apply_multi_into(&vs, K_RHS, &mut us_kron);
+        assert_eq!(us_chain, us_kron, "multi-RHS diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn three_mode_chain_matches_dense_oracle() {
+    let mut rng = Pcg32::seeded(0x7C3);
+    let dims = [7, 6, 5];
+    let factors: Vec<Arc<Matrix>> =
+        dims.iter().map(|&d| Arc::new(random_kernel(&mut rng, d))).collect();
+    let n = 120;
+    let idx = random_index(&mut rng, &dims, n);
+    let v = rng.normal_vec(n);
+
+    // Dense oracle: Q[h][h'] = Π_d K_d[i_d(h), i_d(h')], no chain code.
+    let q = Matrix::from_fn(n, n, |h1, h2| {
+        (0..dims.len())
+            .map(|d| {
+                factors[d].get(idx.modes[d][h1] as usize, idx.modes[d][h2] as usize)
+            })
+            .product()
+    });
+    let want = q.matvec(&v);
+
+    for threads in [1, 4] {
+        let op = TensorKernelOp::new(factors.clone(), idx.clone()).with_threads(threads);
+        let mut got = vec![0.0; n];
+        op.apply_into(&v, &mut got);
+        assert_allclose(&got, &want, 1e-10, 1e-10);
+    }
+    // The diagonal shortcut agrees with the oracle's diagonal too.
+    let op = TensorKernelOp::new(factors.clone(), idx.clone());
+    let diag: Vec<f64> = (0..n).map(|h| q.get(h, h)).collect();
+    assert_allclose(&op.diagonal(), &diag, 1e-12, 1e-12);
+}
+
+#[test]
+fn grid_generator_complete_and_incomplete_are_detected() {
+    let cfg = GridCheckerboardConfig {
+        dims: vec![5, 4, 3],
+        density: 0.4,
+        noise: 0.1,
+        feature_range: 8.0,
+        seed: 11,
+    };
+    let complete = cfg.generate_complete();
+    assert!(complete.is_complete_grid(), "generate_complete must cover every cell");
+    assert_eq!(complete.n_edges(), 5 * 4 * 3);
+    complete.validate().expect("complete grid validates");
+
+    let sparse = cfg.generate();
+    sparse.validate().expect("sampled grid validates");
+    assert!(sparse.n_edges() < complete.n_edges());
+    assert!(!sparse.is_complete_grid(), "a 40% sample must not be a complete grid");
+}
+
+/// Dense end-to-end oracle: materialize the D-way training kernel, solve
+/// `(Q + λI) a = y` with the dense SPD factorization, and score test cells
+/// with explicit per-mode cross-kernel products.
+fn dense_ridge_oracle(train: &TensorDataset, test: &TensorDataset, lambda: f64) -> Vec<f64> {
+    let order = train.order();
+    let kernels: Vec<Matrix> =
+        train.features.iter().map(|f| GAUSS.square_matrix(f)).collect();
+    let n = train.n_edges();
+    let mut sys = Matrix::from_fn(n, n, |h1, h2| {
+        (0..order)
+            .map(|d| {
+                kernels[d]
+                    .get(train.index.modes[d][h1] as usize, train.index.modes[d][h2] as usize)
+            })
+            .product()
+    });
+    for h in 0..n {
+        let q_hh = sys.get(h, h);
+        sys.set(h, h, q_hh + lambda);
+    }
+    let a = sys.solve_spd(&train.labels).expect("ridge system is SPD");
+
+    let cross: Vec<Matrix> = (0..order)
+        .map(|d| kernel_matrix(GAUSS, &test.features[d], &train.features[d]))
+        .collect();
+    (0..test.n_edges())
+        .map(|t| {
+            (0..n)
+                .map(|h| {
+                    a[h] * (0..order)
+                        .map(|d| {
+                            cross[d].get(
+                                test.index.modes[d][t] as usize,
+                                train.index.modes[d][h] as usize,
+                            )
+                        })
+                        .product::<f64>()
+                })
+                .sum()
+        })
+        .collect()
+}
+
+#[test]
+fn three_mode_ridge_trains_end_to_end_and_matches_dense_oracle() {
+    let data = GridCheckerboardConfig {
+        dims: vec![8, 6, 5],
+        density: 0.5,
+        noise: 0.1,
+        feature_range: 8.0,
+        seed: 23,
+    }
+    .generate();
+    let (train, test) = data.holdout_split(0.3, 23);
+    assert_eq!(train.order(), 3);
+    assert!(test.n_edges() > 0);
+
+    let lambda = 0.1;
+    let model = Learner::ridge()
+        .lambda(lambda)
+        .kernel(GAUSS)
+        .iterations(800)
+        .tol(1e-14)
+        .fit_tensor(&train)
+        .expect("D=3 ridge trains through the Learner");
+    assert_eq!(model.kind_name(), "tensor");
+    assert_eq!(model.as_tensor().expect("tensor model").order(), 3);
+
+    let scores = model.predict_tensor(&test, &Compute::default()).expect("predicts");
+    let oracle = dense_ridge_oracle(&train, &test, lambda);
+    assert_allclose(&scores, &oracle, 1e-10, 1e-10);
+
+    let test_auc = auc(&test.labels, &scores);
+    assert!(test_auc.is_finite(), "AUC must be finite, got {test_auc}");
+    assert!(
+        test_auc > 0.5,
+        "the Gaussian tensor ridge should beat chance on the grid checkerboard \
+         (AUC = {test_auc})"
+    );
+
+    // Thread count is transparent to both training and prediction.
+    for threads in [2, 4] {
+        let par = Learner::ridge()
+            .lambda(lambda)
+            .kernel(GAUSS)
+            .iterations(800)
+            .tol(1e-14)
+            .compute(Compute::threads(threads))
+            .fit_tensor(&train)
+            .expect("parallel fit");
+        let par_scores =
+            par.predict_tensor(&test, &Compute::threads(threads)).expect("predicts");
+        assert_eq!(scores, par_scores, "predictions diverged at {threads} threads");
+    }
+}
