@@ -34,6 +34,9 @@ run cargo test -q
 # pins (both also run as part of `cargo test -q` above).
 run cargo test -q --test eigen_paths
 run cargo test -q --test tensor_chain
+# The serving fault-tolerance suite by name: deadlines, worker respawn,
+# typed overload, and zero-downtime hot swap must never be filtered out.
+run cargo test -q --test serving_faults
 run cargo test --doc
 run env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
@@ -62,5 +65,18 @@ fi
 for f in "${bench_files[@]}"; do
     run python3 -m json.tool "$f" > /dev/null
 done
+
+# The serving bench must record the overload scenario with its full schema
+# (shed / deadline-expired / latency tail), not just parse as JSON.
+run python3 - <<'EOF'
+import json
+doc = json.load(open("../BENCH_serving.json"))
+overload = doc.get("overload")
+assert overload is not None, "BENCH_serving.json is missing the 'overload' section"
+for key in ("offered", "accepted", "rejected_overload", "deadline_expired",
+            "shed", "request_timeout_ms", "p50_secs", "p99_secs"):
+    assert key in overload, f"BENCH_serving.json overload section is missing '{key}'"
+print("BENCH_serving.json overload schema ok")
+EOF
 
 echo "ci.sh: all checks passed"

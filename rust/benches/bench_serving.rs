@@ -15,14 +15,18 @@
 //!
 //! Both paths produce bitwise-identical scores (asserted); on repeat-vertex
 //! traffic the warm path is expected ≥2× faster per batch. A third section
-//! measures end-to-end [`PredictServer`] throughput (merger + scoring pool).
-//! Results go to `BENCH_serving.json` at the repo root under `"serving"` —
-//! the perf-trajectory convention of `docs/BENCHMARKS.md`.
+//! measures end-to-end [`PredictServer`] throughput (merger + scoring pool),
+//! and a fourth throws the whole stream at a deliberately under-provisioned
+//! server (1 worker, tiny queue, 50ms deadline) to record overload behavior:
+//! typed `Overloaded` rejections, deadline expiries / shed work, and the
+//! p50/p99 completion latency of accepted requests. Results go to
+//! `BENCH_serving.json` at the repo root under `"serving"` and `"overload"`
+//! — the perf-trajectory convention of `docs/BENCHMARKS.md`.
 //!
 //! Run: `cargo bench --bench bench_serving [-- --full --threads N --workers W]`
 
 use kronvt::api::Compute;
-use kronvt::coordinator::{PredictServer, ServerConfig};
+use kronvt::coordinator::{PredictError, PredictRequest, PredictServer, ServerConfig};
 use kronvt::data::dti::DtiConfig;
 use kronvt::data::Dataset;
 use kronvt::kernels::KernelKind;
@@ -146,7 +150,7 @@ fn main() {
 
     // ---- end-to-end server throughput (merger + scoring pool + cache) ----
     let server = PredictServer::start(
-        model,
+        model.clone(),
         ServerConfig {
             workers,
             compute: Compute::threads(threads).with_cache_vertices(cache_cap),
@@ -193,6 +197,88 @@ fn main() {
     match update_json_file(&out, "serving", section) {
         Ok(()) => println!("\nwrote cold-vs-warm serving results to {}", out.display()),
         Err(err) => eprintln!("\nfailed to write {}: {err}", out.display()),
+    }
+
+    // ---- overload: offered load far beyond capacity ----
+    // One worker, a tiny queue, one request per batch, and a 50ms default
+    // deadline; the whole stream is thrown at the server at once via
+    // try_submit. Measures what the robustness layer does under saturation:
+    // typed Overloaded rejections at the queue, deadline expiries (some shed
+    // un-computed on the worker), and the completion-latency tail of the
+    // accepted requests.
+    let timeout_ms = 50u64;
+    let server = PredictServer::start(
+        model,
+        ServerConfig {
+            workers: 1,
+            max_queue: 8,
+            max_batch_edges: edges_per_request, // one request per merged batch
+            request_timeout_ms: timeout_ms,
+            compute: Compute::threads(threads).with_cache_vertices(cache_cap),
+        },
+    );
+    let mut accepted = Vec::new();
+    let mut rejected = 0usize;
+    for b in &batches {
+        let sf: Vec<Vec<f64>> = (0..b.m()).map(|i| b.start_features.row(i).to_vec()).collect();
+        let ef: Vec<Vec<f64>> = (0..b.q()).map(|i| b.end_features.row(i).to_vec()).collect();
+        let edges: Vec<(u32, u32)> =
+            b.start_idx.iter().zip(&b.end_idx).map(|(&s, &e)| (s, e)).collect();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let sent_at = std::time::Instant::now();
+        match server.try_submit(PredictRequest::new(sf, ef, edges, tx)) {
+            Ok(()) => accepted.push((rx, sent_at)),
+            Err(PredictError::Overloaded) => rejected += 1,
+            Err(err) => panic!("unexpected admission error: {err}"),
+        }
+    }
+    let offered = batches.len();
+    let mut completed_latencies = Vec::new();
+    let mut expired = 0usize;
+    for (rx, sent_at) in accepted.iter() {
+        match rx.recv().expect("every accepted request is answered").result {
+            Ok(scores) => {
+                assert_eq!(scores.len(), edges_per_request);
+                completed_latencies.push(sent_at.elapsed().as_secs_f64());
+            }
+            Err(PredictError::DeadlineExceeded) => expired += 1,
+            Err(err) => panic!("unexpected serving error under overload: {err}"),
+        }
+    }
+    completed_latencies.sort_by(f64::total_cmp);
+    // Empty-set percentiles report 0.0: JSON cannot encode NaN, and an
+    // all-expired run is a legitimate (if extreme) overload outcome.
+    let pct = |p: f64| -> f64 {
+        let idx = ((completed_latencies.len() as f64 - 1.0) * p).round() as usize;
+        completed_latencies.get(idx).copied().unwrap_or(0.0)
+    };
+    let (p50, p99) = (pct(0.50), pct(0.99));
+    let st = server.stats();
+    let shed = st.shed.load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "overload (1 worker, queue 8, {timeout_ms}ms deadline): offered {offered}, \
+         accepted {}, rejected {rejected}, expired {expired} ({shed} shed unscored), \
+         p50 {} p99 {}",
+        accepted.len(),
+        fmt_secs(p50),
+        fmt_secs(p99)
+    );
+    let overload = Json::obj(vec![
+        ("bench", Json::from("bench_serving")),
+        ("full", Json::from(full)),
+        ("offered", Json::from(offered)),
+        ("accepted", Json::from(accepted.len())),
+        ("rejected_overload", Json::from(rejected)),
+        ("deadline_expired", Json::from(expired)),
+        ("shed", Json::from(shed)),
+        ("request_timeout_ms", Json::from(timeout_ms as usize)),
+        ("p50_secs", Json::from(p50)),
+        ("p99_secs", Json::from(p99)),
+    ]);
+    server.shutdown();
+    match update_json_file(&out, "overload", overload) {
+        Ok(()) => println!("wrote overload results to {}", out.display()),
+        Err(err) => eprintln!("failed to write {}: {err}", out.display()),
     }
     println!("bench_serving done");
 }

@@ -23,6 +23,8 @@
 //!
 //! See `docs/API.md` for the full schema.
 
+use std::path::{Path, PathBuf};
+
 use crate::gvt::{KronIndex, PairwiseKernelKind, TensorIndex};
 use crate::kernels::KernelKind;
 use crate::linalg::Matrix;
@@ -422,6 +424,50 @@ fn tensor_from_json(json: &Json) -> Result<TensorModel, String> {
         ensure_finite_kernel(k, &format!("mode_kernels[{d}]"))?;
     }
     Ok(model)
+}
+
+/// The temporary sibling `save_atomic` stages through: the artifact path
+/// with `.tmp` appended (`model.json` → `model.json.tmp`). The loader
+/// refuses to read these and sweeps stale ones left by a crashed save.
+pub(crate) fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// Crash-safe file write: stage the full document in a `.tmp` sibling,
+/// `fsync` it, then `rename` over the destination. On POSIX the rename is
+/// atomic, so a crash at any point leaves either the previous artifact
+/// intact or the complete new one — never a torn file at `path`. Any
+/// failure cleans up the staging file before returning the error.
+pub(crate) fn save_atomic(path: &Path, text: &str) -> Result<(), String> {
+    use std::io::Write as _;
+
+    let tmp = tmp_sibling(path);
+    let staged = (|| -> std::io::Result<()> {
+        let mut file = std::fs::File::create(&tmp)?;
+        file.write_all(text.as_bytes())?;
+        // Durability, not just atomicity: rename may be reordered before
+        // the data blocks unless the staged file is synced first.
+        file.sync_all()?;
+        Ok(())
+    })();
+    if let Err(e) = staged {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(format!("cannot stage artifact {}: {e}", tmp.display()));
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(format!("cannot install artifact {}: {e}", path.display()));
+    }
+    // Best-effort directory fsync so the rename itself is durable; not all
+    // platforms allow opening a directory for sync, so errors are ignored.
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]

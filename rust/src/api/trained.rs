@@ -222,10 +222,15 @@ impl TrainedModel {
     /// primal models, `kronvt-model/v2` for tensor-chain models). Errors if
     /// any model parameter is non-finite (the artifact format refuses lossy
     /// `NaN`/`inf` encodings) or on I/O failure.
+    ///
+    /// The write is **crash-safe**: the document is staged in a `.tmp`
+    /// sibling, fsynced, and renamed over `path`, so a crash at any point
+    /// leaves either the previous artifact or the complete new one — never
+    /// a torn file. A save that fails (e.g. non-finite parameters) leaves
+    /// an existing artifact at `path` untouched.
     pub fn save(&self, path: &Path) -> Result<(), String> {
         let text = artifact::to_json(self)?.dump()?;
-        std::fs::write(path, format!("{text}\n"))
-            .map_err(|e| format!("write {}: {e}", path.display()))
+        artifact::save_atomic(path, &format!("{text}\n"))
     }
 
     /// Load a `kronvt-model/v1` or `/v2` artifact written by
@@ -233,11 +238,26 @@ impl TrainedModel {
     /// The loaded model predicts **bitwise identically** to the one that was
     /// saved. Corrupted documents, schema violations, and unsupported
     /// versions are rejected with a clear error.
+    ///
+    /// `.tmp` staging files are never valid load targets (they may be
+    /// mid-write from a crashed save) and are rejected by name; after a
+    /// successful load, a stale `.tmp` sibling of `path` is swept away.
     pub fn load(path: &Path) -> Result<TrainedModel, String> {
+        if path.extension().is_some_and(|e| e == "tmp") {
+            return Err(format!(
+                "{}: refusing to load a .tmp staging file (possibly a torn write \
+                 from a crashed save); load the real artifact path instead",
+                path.display()
+            ));
+        }
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("read {}: {e}", path.display()))?;
         let json = crate::util::json::Json::parse(&text)
             .map_err(|e| format!("{}: invalid JSON: {e}", path.display()))?;
-        artifact::from_json(&json).map_err(|e| format!("{}: {e}", path.display()))
+        let model = artifact::from_json(&json).map_err(|e| format!("{}: {e}", path.display()))?;
+        // The artifact at `path` is good — a stale sibling can only be junk
+        // from a save that crashed between staging and rename.
+        let _ = std::fs::remove_file(artifact::tmp_sibling(path));
+        Ok(model)
     }
 }

@@ -1,0 +1,187 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a seeded, repeatable schedule of failures the
+//! [`PredictServer`](super::PredictServer) trips on purpose — worker panics
+//! on the Nth merged batch, stalls that push a batch past its requests'
+//! deadlines, and queue-admission rejections — so the fault-tolerance
+//! guarantees (supervised respawn, deadline shedding, typed overload
+//! errors) are provable by ordinary integration tests instead of depending
+//! on timing luck.
+//!
+//! The plan is compiled unconditionally (a `cfg(test)` gate would hide it
+//! from the `rust/tests/` integration crates, which build this library
+//! without `cfg(test)`), but an empty plan — what
+//! [`PredictServer::start`](super::PredictServer::start) installs — costs
+//! one branch per hook and allocates nothing. Injection applies to requests
+//! entering through the server's own submit APIs and to batches reaching
+//! the scoring pool; traffic submitted through a raw
+//! [`sender`](super::PredictServer::sender) handle bypasses the admission
+//! hook.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::rng::Pcg32;
+
+/// A deterministic schedule of injected serving faults. Build one with the
+/// chained setters and pass it to
+/// [`PredictServer::start_with_faults`](super::PredictServer::start_with_faults):
+///
+/// ```
+/// use kronvt::coordinator::FaultPlan;
+///
+/// // panic the worker scoring batch 1, stall batch 3 for 50ms, and reject
+/// // the 2nd admitted request at the queue
+/// let plan = FaultPlan::seeded(7).panic_on_batch(1).sleep_on_batch(3, 50).reject_request(2);
+/// assert!(!plan.is_empty());
+/// ```
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// 1-based ordinals of merged batches whose scoring worker panics.
+    panic_batches: Vec<u64>,
+    /// Per-batch panic probability, drawn from the seeded RNG.
+    panic_probability: f64,
+    /// 1-based batch ordinals that stall before scoring, and for how long
+    /// (milliseconds) — the straggler / deadline-expiry injection.
+    sleep_batches: Vec<(u64, u64)>,
+    /// 1-based ordinals of admitted requests rejected at the queue.
+    reject_requests: Vec<u64>,
+    rng: Option<Mutex<Pcg32>>,
+    batch_seq: AtomicU64,
+    request_seq: AtomicU64,
+}
+
+impl FaultPlan {
+    /// The empty plan: every hook is a no-op (what a production server runs).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// An empty plan carrying a seeded [`Pcg32`] for probabilistic triggers
+    /// ([`FaultPlan::panic_with_probability`]); the deterministic Nth-event
+    /// triggers work with or without the seed.
+    pub fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan { rng: Some(Mutex::new(Pcg32::seeded(seed))), ..Default::default() }
+    }
+
+    /// Panic the scoring worker on the `n`th merged batch (1-based).
+    pub fn panic_on_batch(mut self, n: u64) -> FaultPlan {
+        self.panic_batches.push(n);
+        self
+    }
+
+    /// Panic the scoring worker on each batch with probability `p` (needs a
+    /// [`FaultPlan::seeded`] plan; a plan without an RNG never trips this).
+    pub fn panic_with_probability(mut self, p: f64) -> FaultPlan {
+        self.panic_probability = p;
+        self
+    }
+
+    /// Stall the `n`th merged batch (1-based) for `ms` milliseconds before
+    /// scoring — long enough and the batch's requests expire their
+    /// deadlines, proving score-time shedding.
+    pub fn sleep_on_batch(mut self, n: u64, ms: u64) -> FaultPlan {
+        self.sleep_batches.push((n, ms));
+        self
+    }
+
+    /// Reject the `n`th admitted request (1-based) at the queue, as if the
+    /// bounded queue were full — the server answers it `Overloaded`.
+    pub fn reject_request(mut self, n: u64) -> FaultPlan {
+        self.reject_requests.push(n);
+        self
+    }
+
+    /// True when no trigger is armed — the hooks reduce to one branch.
+    pub fn is_empty(&self) -> bool {
+        self.panic_batches.is_empty()
+            && self.sleep_batches.is_empty()
+            && self.reject_requests.is_empty()
+            && self.panic_probability == 0.0
+    }
+
+    /// Queue-admission hook: `true` tells the server to reject this request
+    /// as `Overloaded`. Called once per request admitted through the
+    /// server's submit APIs.
+    pub fn trip_queue_rejection(&self) -> bool {
+        if self.reject_requests.is_empty() {
+            return false;
+        }
+        let n = self.request_seq.fetch_add(1, Ordering::Relaxed) + 1;
+        self.reject_requests.contains(&n)
+    }
+
+    /// Batch-start hook: may stall (straggler injection) and then panic
+    /// (worker-crash injection) according to the plan. Called by the scoring
+    /// worker before it touches the batch, so a planned panic costs exactly
+    /// that batch and nothing else.
+    pub fn trip_batch_start(&self) {
+        if self.is_empty() {
+            return;
+        }
+        let n = self.batch_seq.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(&(_, ms)) = self.sleep_batches.iter().find(|&&(b, _)| b == n) {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        assert!(!self.panic_batches.contains(&n), "fault injection: planned panic on batch {n}");
+        if self.panic_probability > 0.0 {
+            if let Some(rng) = &self.rng {
+                let trip = rng
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner())
+                    .bernoulli(self.panic_probability);
+                assert!(!trip, "fault injection: probabilistic panic on batch {n}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_trips_nothing() {
+        let plan = FaultPlan::none();
+        assert!(plan.is_empty());
+        for _ in 0..100 {
+            assert!(!plan.trip_queue_rejection());
+            plan.trip_batch_start(); // must not panic or sleep
+        }
+    }
+
+    #[test]
+    fn nth_request_rejection_is_deterministic() {
+        let plan = FaultPlan::seeded(3).reject_request(2).reject_request(4);
+        let trips: Vec<bool> = (0..6).map(|_| plan.trip_queue_rejection()).collect();
+        assert_eq!(trips, [false, true, false, true, false, false]);
+    }
+
+    #[test]
+    fn planned_batch_panic_fires_on_its_ordinal_only() {
+        let plan = FaultPlan::seeded(4).panic_on_batch(3);
+        plan.trip_batch_start(); // batch 1
+        plan.trip_batch_start(); // batch 2
+        let crash = std::thread::spawn(move || plan.trip_batch_start()); // batch 3
+        assert!(crash.join().is_err(), "batch 3 must panic");
+    }
+
+    #[test]
+    fn probabilistic_panics_are_reproducible_across_same_seed_plans() {
+        let outcomes = |seed: u64| -> Vec<bool> {
+            let plan = std::sync::Arc::new(FaultPlan::seeded(seed).panic_with_probability(0.3));
+            (0..32)
+                .map(|_| {
+                    let plan = plan.clone();
+                    std::thread::spawn(move || plan.trip_batch_start()).join().is_err()
+                })
+                .collect()
+        };
+        // same seed → the same batches panic, run after run
+        let a = outcomes(9);
+        assert_eq!(a, outcomes(9));
+        let trips = a.iter().filter(|&&p| p).count();
+        assert!((1..32).contains(&trips), "p=0.3 over 32 draws should mix: {trips} trips");
+    }
+}

@@ -3,11 +3,46 @@
 //! ordering — plus a small long-lived [`WorkerPool`] used by the serving
 //! coordinator's scoring shards.
 
-use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::data::Dataset;
+
+/// Respawn policy for a supervised [`WorkerPool`]: how many panicked
+/// workers the pool replaces, how quickly, and where the fault counters are
+/// published (owners like `ServerStats` pass their own atomics, mirroring
+/// the kernel-row-cache counter pattern).
+#[derive(Debug, Clone)]
+pub struct RespawnPolicy {
+    /// Pool-wide budget of worker respawns. Once exhausted, a panicking
+    /// worker stays dead — the guard against a deterministic panic (a
+    /// poison-pill job) respawning forever.
+    pub max_respawns: usize,
+    /// Backoff before the first respawn of a slot, in milliseconds.
+    pub backoff_base_ms: u64,
+    /// Backoff cap: a slot's delay doubles on every consecutive panic up to
+    /// this bound.
+    pub backoff_cap_ms: u64,
+    /// Handler panics observed by the supervisors.
+    pub panics: Arc<AtomicUsize>,
+    /// Workers respawned after a panic.
+    pub respawns: Arc<AtomicUsize>,
+}
+
+impl Default for RespawnPolicy {
+    fn default() -> Self {
+        RespawnPolicy {
+            max_respawns: 16,
+            backoff_base_ms: 5,
+            backoff_cap_ms: 200,
+            panics: Arc::new(AtomicUsize::new(0)),
+            respawns: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+}
 
 /// A small, long-lived pool of worker threads draining jobs from one shared
 /// bounded queue.
@@ -19,6 +54,13 @@ use crate::data::Dataset;
 /// [`WorkerPool::submit`] blocks when the pool is saturated (backpressure
 /// that propagates to upstream submitters).
 ///
+/// The pool is **supervised**: every worker runs on a child thread watched
+/// by a per-slot supervisor, and a handler panic costs only the job that
+/// panicked — the supervisor observes the crash through `join`, counts it,
+/// and respawns the worker (capped budget, exponential backoff) so pool
+/// capacity never silently shrinks. The panicked job itself is lost; its
+/// owner observes that through whatever reply channel the job carried.
+///
 /// Dropping the pool is a graceful shutdown: the queue disconnects, workers
 /// finish whatever is already queued, and the drop joins them.
 pub struct WorkerPool<J: Send + 'static> {
@@ -27,38 +69,45 @@ pub struct WorkerPool<J: Send + 'static> {
 }
 
 impl<J: Send + 'static> WorkerPool<J> {
-    /// Spawn `workers` threads (min 1) running `handler` on each job.
-    /// `queue_cap` bounds the number of submitted-but-unclaimed jobs.
+    /// Spawn `workers` supervised threads (min 1) running `handler` on each
+    /// job, with the default [`RespawnPolicy`]. `queue_cap` bounds the
+    /// number of submitted-but-unclaimed jobs.
     pub fn spawn<F>(workers: usize, queue_cap: usize, handler: F) -> WorkerPool<J>
+    where
+        F: Fn(J) + Send + Sync + 'static,
+    {
+        WorkerPool::spawn_supervised(workers, queue_cap, RespawnPolicy::default(), handler)
+    }
+
+    /// [`WorkerPool::spawn`] with an explicit supervision policy — the
+    /// prediction server passes its `ServerStats` counters here.
+    pub fn spawn_supervised<F>(
+        workers: usize,
+        queue_cap: usize,
+        policy: RespawnPolicy,
+        handler: F,
+    ) -> WorkerPool<J>
     where
         F: Fn(J) + Send + Sync + 'static,
     {
         let (tx, rx) = sync_channel::<J>(queue_cap.max(1));
         let rx = Arc::new(Mutex::new(rx));
         let handler = Arc::new(handler);
+        let budget = Arc::new(AtomicUsize::new(policy.max_respawns));
         let workers = (0..workers.max(1))
             .map(|_| {
                 let rx = Arc::clone(&rx);
                 let handler = Arc::clone(&handler);
-                std::thread::spawn(move || loop {
-                    // Hold the lock only while waiting for one job; recv
-                    // returns Err once the pool (the only sender) is dropped.
-                    let job = {
-                        let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
-                        guard.recv()
-                    };
-                    match job {
-                        Ok(job) => handler(job),
-                        Err(_) => return,
-                    }
-                })
+                let policy = policy.clone();
+                let budget = Arc::clone(&budget);
+                std::thread::spawn(move || supervise(rx, handler, policy, budget))
             })
             .collect();
         WorkerPool { tx: Some(tx), workers }
     }
 
     /// Submit one job, blocking while the queue is full. `Err` only after
-    /// every worker has exited (panic in the handler).
+    /// every worker has exited (respawn budget exhausted by panics).
     pub fn submit(&self, job: J) -> Result<(), String> {
         self.tx
             .as_ref()
@@ -70,7 +119,7 @@ impl<J: Send + 'static> WorkerPool<J> {
     /// Non-blocking [`WorkerPool::submit`]: [`TrySendError::Full`] returns
     /// the job back when the queue is full so the caller can shed load
     /// instead of waiting; [`TrySendError::Disconnected`] means every worker
-    /// has exited (panic in the handler) and retrying is pointless.
+    /// has exited (the respawn budget ran out) and retrying is pointless.
     pub fn try_submit(&self, job: J) -> Result<(), TrySendError<J>> {
         self.tx.as_ref().expect("pool running").try_send(job)
     }
@@ -105,6 +154,71 @@ impl<J: Send + 'static> WorkerPool<J> {
 impl<J: Send + 'static> Drop for WorkerPool<J> {
     fn drop(&mut self) {
         self.join();
+    }
+}
+
+/// One supervisor slot: run the worker loop on a child thread and, while
+/// the pool-wide respawn budget lasts, replace the child whenever it
+/// panics. Panic isolation is the thread boundary itself — no
+/// `catch_unwind`, no `UnwindSafe` bounds on the handler — and a clean
+/// child exit (queue disconnected) ends the supervisor too.
+fn supervise<J, F>(
+    rx: Arc<Mutex<Receiver<J>>>,
+    handler: Arc<F>,
+    policy: RespawnPolicy,
+    budget: Arc<AtomicUsize>,
+) where
+    J: Send + 'static,
+    F: Fn(J) + Send + Sync + 'static,
+{
+    let mut consecutive: u32 = 0;
+    loop {
+        let child = {
+            let rx = Arc::clone(&rx);
+            let handler = Arc::clone(&handler);
+            std::thread::spawn(move || worker_loop(rx, handler))
+        };
+        if child.join().is_ok() {
+            return; // clean exit: every sender dropped and the queue drained
+        }
+        // The child panicked mid-job. That job is lost (its owner sees the
+        // dropped reply channel); the pool's *capacity* must not be.
+        policy.panics.fetch_add(1, Ordering::Relaxed);
+        let within_budget = budget
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |b| b.checked_sub(1))
+            .is_ok();
+        if !within_budget {
+            return; // budget exhausted — this slot stays dead
+        }
+        let delay = policy
+            .backoff_base_ms
+            .saturating_mul(1u64 << consecutive.min(16))
+            .min(policy.backoff_cap_ms);
+        consecutive += 1;
+        if delay > 0 {
+            std::thread::sleep(Duration::from_millis(delay));
+        }
+        policy.respawns.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The actual worker: drain jobs until every sender is gone. The queue lock
+/// is held only while waiting for one job — never across `handler`, so a
+/// handler panic cannot poison the queue for the survivors.
+fn worker_loop<J, F>(rx: Arc<Mutex<Receiver<J>>>, handler: Arc<F>)
+where
+    J: Send + 'static,
+    F: Fn(J),
+{
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
+            guard.recv()
+        };
+        match job {
+            Ok(job) => handler(job),
+            Err(_) => return,
+        }
     }
 }
 
@@ -235,24 +349,39 @@ pub fn mean_auc(results: &[CvJobResult]) -> f64 {
     results.iter().map(|r| r.auc).sum::<f64>() / results.len() as f64
 }
 
-/// Per-λ mean AUC across path fold results (entry `j` averages `aucs[j]`
-/// over the folds). Panics if folds disagree on the grid length.
-pub fn mean_auc_path(results: &[CvPathJobResult]) -> Vec<f64> {
-    let Some(first) = results.first() else {
-        return Vec::new();
-    };
-    let k = first.aucs.len();
-    let mut means = vec![0.0; k];
+/// Per-λ mean AUC across path fold results: entry `j` averages `aucs[j]`
+/// over the folds that evaluated the expected `grid_len`-sized λ grid.
+///
+/// A fold whose job returned a different number of AUCs (a diverged or
+/// mis-configured fold) is **skipped with a note on stderr** instead of
+/// aborting the whole CV run; `Err` only when *no* fold matches the grid.
+pub fn mean_auc_path(results: &[CvPathJobResult], grid_len: usize) -> Result<Vec<f64>, String> {
+    let mut means = vec![0.0; grid_len];
+    let mut used = 0usize;
     for r in results {
-        assert_eq!(r.aucs.len(), k, "folds evaluated different λ grids");
+        if r.aucs.len() != grid_len {
+            eprintln!(
+                "mean_auc_path: skipping fold {} — it returned {} AUCs for a {grid_len}-λ grid",
+                r.fold,
+                r.aucs.len()
+            );
+            continue;
+        }
         for (m, &a) in means.iter_mut().zip(&r.aucs) {
             *m += a;
         }
+        used += 1;
+    }
+    if used == 0 {
+        return Err(format!(
+            "mean_auc_path: none of the {} fold results evaluated the expected {grid_len}-λ grid",
+            results.len()
+        ));
     }
     for m in &mut means {
-        *m /= results.len() as f64;
+        *m /= used as f64;
     }
-    means
+    Ok(means)
 }
 
 #[cfg(test)]
@@ -341,9 +470,75 @@ mod tests {
             assert_eq!(a.aucs, b.aucs);
             assert!(a.train_edges > 0 && a.test_edges > 0);
         }
-        let means = mean_auc_path(&seq);
+        let means = mean_auc_path(&seq, 2).expect("every fold evaluated the 2-λ grid");
         assert_eq!(means.len(), 2);
-        assert!(mean_auc_path(&[]).is_empty());
+        assert!(mean_auc_path(&[], 2).is_err(), "no folds at all is an error");
+    }
+
+    /// One bad fold (wrong λ-grid length) must be skipped, not abort the
+    /// aggregate — and a grid no fold matches is a clean `Err`, not a panic.
+    #[test]
+    fn mean_auc_path_skips_mismatched_folds() {
+        let mk = |fold, aucs: Vec<f64>| CvPathJobResult {
+            fold,
+            aucs,
+            train_secs: 0.0,
+            train_edges: 1,
+            test_edges: 1,
+        };
+        let results = vec![mk(0, vec![0.6, 0.8]), mk(1, vec![0.5]), mk(2, vec![0.8, 0.6])];
+        let means = mean_auc_path(&results, 2).expect("two folds match the grid");
+        assert!((means[0] - 0.7).abs() < 1e-12 && (means[1] - 0.7).abs() < 1e-12);
+        assert!(mean_auc_path(&results, 3).is_err(), "no fold evaluated a 3-λ grid");
+    }
+
+    /// Regression for the silent capacity-loss bug: a handler panic used to
+    /// kill the worker thread forever. A supervised pool must respawn the
+    /// worker and still complete every non-poison job at full worker count.
+    #[test]
+    fn pool_survives_handler_panics_and_completes_jobs() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let done = Arc::new(AtomicUsize::new(0));
+        let policy = RespawnPolicy { backoff_base_ms: 0, ..Default::default() };
+        let (panics, respawns) = (policy.panics.clone(), policy.respawns.clone());
+        let pool = {
+            let done = done.clone();
+            WorkerPool::spawn_supervised(2, 2, policy, move |j: usize| {
+                assert!(j % 10 != 3, "poison job {j}");
+                done.fetch_add(1, Ordering::Relaxed);
+            })
+        };
+        assert_eq!(pool.workers(), 2);
+        for j in 0..40 {
+            pool.submit(j).expect("pool stays alive through panics");
+        }
+        pool.shutdown(); // joins → every queued job ran or panicked
+        assert_eq!(done.load(Ordering::Relaxed), 36, "the 36 non-poison jobs all ran");
+        assert_eq!(panics.load(Ordering::Relaxed), 4, "jobs 3/13/23/33 each panicked once");
+        assert_eq!(respawns.load(Ordering::Relaxed), 4, "each panic was answered by a respawn");
+    }
+
+    /// When the respawn budget runs out, the pool winds down instead of
+    /// looping: submissions start failing rather than hanging.
+    #[test]
+    fn exhausted_respawn_budget_stops_the_pool() {
+        let policy = RespawnPolicy { max_respawns: 1, backoff_base_ms: 0, ..Default::default() };
+        let respawns = policy.respawns.clone();
+        let pool = WorkerPool::spawn_supervised(1, 1, policy, move |_: usize| {
+            panic!("every job is poison");
+        });
+        // 1 initial worker + 1 respawn can consume at most 2 jobs; after
+        // both died the queue disconnects and submit reports it.
+        let mut stopped = false;
+        for j in 0..100 {
+            if pool.submit(j).is_err() {
+                stopped = true;
+                break;
+            }
+        }
+        assert!(stopped, "an unsupervisable pool must refuse work, not hang");
+        assert_eq!(respawns.load(std::sync::atomic::Ordering::Relaxed), 1);
+        pool.shutdown();
     }
 
     #[test]

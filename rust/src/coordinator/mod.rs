@@ -1,11 +1,20 @@
 //! Layer-3 coordinator: routing between the native GVT loops and the PJRT
-//! dense path, a batched + cached + sharded zero-shot prediction server, and
-//! the training-job orchestrator behind the CLI.
+//! dense path, a batched + cached + sharded + fault-tolerant zero-shot
+//! prediction server (typed errors, deadlines, supervised workers,
+//! zero-downtime hot swap), the deterministic fault-injection harness that
+//! proves those guarantees, and the training-job orchestrator behind the
+//! CLI.
 
+pub mod faults;
+pub mod jobs;
 pub mod router;
 pub mod server;
-pub mod jobs;
 
+pub use faults::FaultPlan;
+pub use jobs::{
+    run_cv_jobs, run_cv_path_jobs, CvJobResult, CvPathJobResult, RespawnPolicy, WorkerPool,
+};
 pub use router::{Route, Router, RouterConfig};
-pub use server::{PredictRequest, PredictServer, ServerConfig, ServerStats};
-pub use jobs::{run_cv_jobs, run_cv_path_jobs, CvJobResult, CvPathJobResult, WorkerPool};
+pub use server::{
+    PredictError, PredictReply, PredictRequest, PredictServer, ServerConfig, ServerStats,
+};

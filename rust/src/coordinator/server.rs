@@ -1,4 +1,5 @@
-//! Batched, cache-aware, sharded zero-shot prediction server.
+//! Batched, cache-aware, sharded, fault-tolerant zero-shot prediction
+//! server.
 //!
 //! Serving is where the paper's eq. (5) shortcut pays off operationally: a
 //! request carries *novel* vertices (features never seen in training) plus
@@ -10,19 +11,34 @@
 //! Architecture (three stages, backpressure end to end):
 //!
 //! 1. Submitters push [`PredictRequest`]s onto a **bounded** MPSC queue
-//!    ([`ServerConfig::max_queue`]); when the pipeline is saturated, sends
-//!    block — load shedding belongs to the caller via
-//!    [`PredictServer::sender`]'s `try_send`.
+//!    ([`ServerConfig::max_queue`]); when the pipeline is saturated,
+//!    [`PredictServer::submit`] blocks and [`PredictServer::try_submit`]
+//!    answers [`PredictError::Overloaded`] — typed load shedding instead of
+//!    a hang.
 //! 2. A **merger** thread drains whatever is queued (up to
-//!    [`ServerConfig::max_batch_edges`]), validates and merges it into one
-//!    batch dataset with offset vertex indices.
-//! 3. A small **scoring pool** ([`ServerConfig::workers`], a
-//!    [`WorkerPool`]) shards merged batches across workers. All workers
-//!    share one [`PredictContext`]: the pruned model, the prebuilt train-side
-//!    `EdgePlan`, pooled workspaces, and the per-vertex kernel-row LRU cache
-//!    (`compute.cache_vertices` of the shared [`Compute`] policy) — vertices
-//!    repeated across requests never recompute their `K̂`/`Ĝ` rows. Each
-//!    batch's matvec is itself sharded over `compute.threads`.
+//!    [`ServerConfig::max_batch_edges`]), stamps the default deadline
+//!    ([`ServerConfig::request_timeout_ms`]) on requests that carry none,
+//!    validates, and merges the batch into one dataset with offset vertex
+//!    indices. Invalid and already-expired requests are excluded here — no
+//!    kernel row is ever computed for them.
+//! 3. A small **supervised scoring pool** ([`ServerConfig::workers`], a
+//!    [`WorkerPool`]) shards merged batches across workers: a panicking
+//!    worker costs one batch (its requests observe the dropped reply
+//!    channel as [`PredictError::ShuttingDown`]) and is respawned under the
+//!    pool's [`RespawnPolicy`], with `panics`/`respawns` surfaced in
+//!    [`ServerStats`]. All workers share one
+//!    [`PredictContext`] behind a swappable slot — see
+//!    [`PredictServer::swap_model`] — including the per-vertex kernel-row
+//!    LRU cache (`compute.cache_vertices` of the shared [`Compute`]
+//!    policy). Each batch's matvec is itself sharded over
+//!    `compute.threads`.
+//!
+//! Every request is answered exactly once with a typed
+//! [`PredictReply`]: the scores, or a [`PredictError`] naming what happened
+//! (invalid request, expired deadline, overload, shutdown) — the old
+//! silent-NaN convention is gone. Deadlines are enforced twice: at merge
+//! time and again on the scoring worker, so work that expired waiting in a
+//! queue is shed, not computed.
 //!
 //! Scores are **bitwise identical** for a given batch whether the cache is
 //! cold, warm, or disabled, and for every `threads`/`workers` setting (the
@@ -31,19 +47,86 @@
 //! in any dynamic batcher; submit one request at a time for fully
 //! reproducible runs.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TryRecvError};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError, TrySendError,
+};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-use super::jobs::WorkerPool;
+use super::faults::FaultPlan;
+use super::jobs::{RespawnPolicy, WorkerPool};
 use crate::api::Compute;
 use crate::data::Dataset;
 use crate::linalg::Matrix;
 use crate::model::{DualModel, PredictContext};
 
+/// Extra time a blocking caller waits past its request's deadline for the
+/// typed `DeadlineExceeded` reply to drain back (the reply is produced by
+/// the scoring worker, not conjured at the deadline instant).
+const REPLY_DRAIN_SLACK: Duration = Duration::from_millis(2_000);
+
+/// Why a request was not scored. Every non-score outcome is typed — the
+/// pre-robustness server answered invalid requests with silent NaN vectors
+/// and had no vocabulary at all for timeouts, overload, or faults.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PredictError {
+    /// The request failed validation (the reason names what): wrong feature
+    /// dimensionality, or an edge referencing a vertex the request does not
+    /// carry.
+    InvalidRequest(String),
+    /// The request's deadline passed before it was scored; its work was
+    /// shed, not computed.
+    DeadlineExceeded,
+    /// The bounded request queue was full at admission
+    /// ([`PredictServer::try_submit`]) — the load-shedding signal. Back off
+    /// and retry.
+    Overloaded,
+    /// The server went away before a reply was produced — a shutdown, or a
+    /// scoring worker crashing mid-batch (the supervisor respawns the
+    /// worker; this request's batch is the one casualty). Retry against a
+    /// live server.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for PredictError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PredictError::InvalidRequest(reason) => write!(f, "invalid request: {reason}"),
+            PredictError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            PredictError::Overloaded => write!(f, "server overloaded"),
+            PredictError::ShuttingDown => write!(f, "server shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for PredictError {}
+
+impl From<PredictError> for String {
+    fn from(e: PredictError) -> String {
+        e.to_string()
+    }
+}
+
+/// One reply per request: the scores or a typed error, stamped with the
+/// **generation** of the model that handled it — after a
+/// [`PredictServer::swap_model`], callers can tell old-model from new-model
+/// scores. A reply is never torn across generations: the scoring worker
+/// pins one context for the whole batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PredictReply {
+    /// Scores (one per edge, in request order) or the typed refusal.
+    pub result: Result<Vec<f64>, PredictError>,
+    /// Generation of the model that handled the request: `0` for the model
+    /// the server started with, incremented by every successful
+    /// [`PredictServer::swap_model`].
+    pub generation: u64,
+}
+
 /// One prediction request: a private bipartite graph (novel vertices +
-/// edges) to score against the trained model.
+/// edges) to score against the trained model, plus the typed reply channel
+/// and an optional deadline.
 pub struct PredictRequest {
     /// Start-vertex feature rows (u × d, flattened row-major).
     pub start_features: Vec<Vec<f64>>,
@@ -51,14 +134,51 @@ pub struct PredictRequest {
     pub end_features: Vec<Vec<f64>>,
     /// Edges as (start_row, end_row) into the request's own vertex lists.
     pub edges: Vec<(u32, u32)>,
-    /// Reply channel for the scores (one per edge, in order).
-    pub reply: Sender<Vec<f64>>,
+    /// Reply channel: scores or a [`PredictError`], stamped with the
+    /// scoring generation. Answered exactly once — unless the scoring
+    /// worker dies mid-batch, in which case the sender is dropped and the
+    /// receiver observes a disconnect.
+    pub reply: Sender<PredictReply>,
+    /// Absolute deadline. Past it the request is answered
+    /// [`PredictError::DeadlineExceeded`] and its work shed (checked at
+    /// merge time and again before scoring). `None` = no deadline, though
+    /// [`ServerConfig::request_timeout_ms`] may stamp a default at
+    /// admission.
+    pub deadline: Option<Instant>,
+}
+
+impl PredictRequest {
+    /// Build a request with no explicit deadline.
+    pub fn new(
+        start_features: Vec<Vec<f64>>,
+        end_features: Vec<Vec<f64>>,
+        edges: Vec<(u32, u32)>,
+        reply: Sender<PredictReply>,
+    ) -> PredictRequest {
+        PredictRequest { start_features, end_features, edges, reply, deadline: None }
+    }
+
+    /// Set an absolute deadline `ms` milliseconds from now. `0` expires the
+    /// request immediately — useful for deterministic shed tests.
+    pub fn with_deadline_ms(mut self, ms: u64) -> PredictRequest {
+        self.deadline = Some(Instant::now() + Duration::from_millis(ms));
+        self
+    }
+
+    fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// Deliver the reply (ignoring a hung-up caller).
+    fn answer(&self, result: Result<Vec<f64>, PredictError>, generation: u64) {
+        let _ = self.reply.send(PredictReply { result, generation });
+    }
 }
 
 /// Server configuration. Serving-topology knobs (batching, pool size,
-/// backpressure) live here; the per-batch execution policy — matvec
-/// threads, kernel-row cache capacity, workspace retention — is the shared
-/// [`Compute`] policy, not re-declared per subsystem.
+/// backpressure, deadlines) live here; the per-batch execution policy —
+/// matvec threads, kernel-row cache capacity, workspace retention — is the
+/// shared [`Compute`] policy, not re-declared per subsystem.
 #[derive(Debug, Clone, Copy)]
 pub struct ServerConfig {
     /// Edge budget per merged batch.
@@ -68,8 +188,14 @@ pub struct ServerConfig {
     /// *within* one batch; `workers` overlaps independent batches.
     pub workers: usize,
     /// Bound on queued-but-unmerged requests. Submission blocks (or
-    /// `try_send` fails) once the queue is full — the backpressure knob.
+    /// [`PredictServer::try_submit`] answers `Overloaded`) once the queue
+    /// is full — the backpressure knob.
     pub max_queue: usize,
+    /// Default per-request deadline in milliseconds, stamped at admission
+    /// on requests that don't carry their own ([`PredictRequest::deadline`]
+    /// wins when set). `0` disables the default — requests then wait as
+    /// long as it takes.
+    pub request_timeout_ms: u64,
     /// Execution policy for the shared [`PredictContext`]:
     /// `compute.threads` shards each merged batch's matvec (`0` = all
     /// cores), `compute.cache_vertices` bounds each side's kernel-row LRU
@@ -85,35 +211,74 @@ impl Default for ServerConfig {
             max_batch_edges: 65_536,
             workers: 1,
             max_queue: 1024,
+            request_timeout_ms: 0,
             compute: Compute::default(),
         }
     }
 }
 
-/// Running counters.
+/// Running counters. The robustness counters (`deadline_expired`, `shed`,
+/// `rejected_overload`, `panics`, `respawns`, `generation`) quantify every
+/// fault path the server survives — see `docs/BENCHMARKS.md`.
 #[derive(Debug, Default)]
 pub struct ServerStats {
-    /// Requests answered.
+    /// Requests answered (scores and typed errors alike).
     pub requests: AtomicUsize,
     /// Merged batches executed.
     pub batches: AtomicUsize,
     /// Total edges scored.
     pub edges_scored: AtomicUsize,
-    /// Kernel-row cache hits (start + end side). Shared with the context's
-    /// caches, hence the `Arc`.
+    /// Requests answered [`PredictError::DeadlineExceeded`] (expired at
+    /// merge time or on the scoring worker).
+    pub deadline_expired: AtomicUsize,
+    /// Requests whose merged work was dropped **un-computed** on the
+    /// scoring worker — they expired between merging and scoring (a subset
+    /// of `deadline_expired`).
+    pub shed: AtomicUsize,
+    /// Requests answered [`PredictError::Overloaded`] at admission (full
+    /// queue via [`PredictServer::try_submit`], or injected).
+    pub rejected_overload: AtomicUsize,
+    /// Scoring-worker panics observed by the pool supervisors. Shared with
+    /// the pool's [`RespawnPolicy`], hence the `Arc`.
+    pub panics: Arc<AtomicUsize>,
+    /// Scoring workers respawned after a panic.
+    pub respawns: Arc<AtomicUsize>,
+    /// Current model generation (bumped by every successful
+    /// [`PredictServer::swap_model`]).
+    pub generation: AtomicU64,
+    /// Kernel-row cache hits (start + end side, cumulative across
+    /// generations). Shared with the context's caches, hence the `Arc`.
     pub cache_hits: Arc<AtomicUsize>,
     /// Kernel-row cache misses (start + end side).
     pub cache_misses: Arc<AtomicUsize>,
 }
 
+/// Per-request outcome of merging (re-checked before scoring).
+enum Verdict {
+    /// Valid and in the merged dataset.
+    Ok,
+    /// Failed validation; answered `InvalidRequest` with this reason.
+    Invalid(String),
+    /// Deadline passed; answered `DeadlineExceeded`, work shed.
+    Expired,
+}
+
 /// A validated, merged batch en route to the scoring pool.
 struct MergedBatch {
     ds: Option<Dataset>,
-    /// Edge count per request (0 for invalid ones).
+    /// Edge count per request (0 for non-`Ok` ones).
     spans: Vec<usize>,
-    /// Requests flagged invalid during merging (replied to with NaNs).
-    bad: Vec<bool>,
+    verdicts: Vec<Verdict>,
     requests: Vec<PredictRequest>,
+}
+
+/// The swappable model slot: the live context and its generation. Workers
+/// hold the lock only long enough to clone the `Arc` (an `arc-swap`
+/// emulated with a mutex — the zero-dependency constraint), so neither a
+/// swap nor a slow batch ever blocks the other for more than that clone.
+struct ContextSlot {
+    generation: u64,
+    ctx: Arc<PredictContext>,
 }
 
 /// Handle to a running prediction server.
@@ -122,35 +287,80 @@ pub struct PredictServer {
     merger: Option<JoinHandle<()>>,
     pool: Option<WorkerPool<MergedBatch>>,
     stats: Arc<ServerStats>,
+    slot: Arc<Mutex<ContextSlot>>,
+    compute: Compute,
+    dims: (usize, usize),
+    request_timeout_ms: u64,
+    faults: Arc<FaultPlan>,
 }
 
 impl PredictServer {
-    /// Spawn the merger thread and scoring pool around a trained model.
+    /// Spawn the merger thread and supervised scoring pool around a trained
+    /// model.
     pub fn start(model: DualModel, cfg: ServerConfig) -> PredictServer {
+        PredictServer::start_with_faults(model, cfg, FaultPlan::none())
+    }
+
+    /// [`PredictServer::start`] with a deterministic [`FaultPlan`] — the
+    /// test harness for the fault-tolerance guarantees. An empty plan is
+    /// free; production servers use [`PredictServer::start`].
+    pub fn start_with_faults(
+        model: DualModel,
+        cfg: ServerConfig,
+        faults: FaultPlan,
+    ) -> PredictServer {
         let stats = Arc::new(ServerStats::default());
+        let faults = Arc::new(faults);
         let ctx = Arc::new(
             model
                 .predict_context(&cfg.compute)
                 .with_cache_counters(stats.cache_hits.clone(), stats.cache_misses.clone()),
         );
-        let (d, r) = ctx_dims(&model);
+        let dims = ctx.feature_dims();
+        let slot = Arc::new(Mutex::new(ContextSlot { generation: 0, ctx }));
         let pool = {
             let stats = stats.clone();
-            WorkerPool::spawn(cfg.workers, cfg.workers.max(1) * 2, move |batch: MergedBatch| {
-                score_batch(&ctx, batch, &stats)
-            })
+            let slot = slot.clone();
+            let faults = faults.clone();
+            let policy = RespawnPolicy {
+                panics: stats.panics.clone(),
+                respawns: stats.respawns.clone(),
+                ..Default::default()
+            };
+            WorkerPool::spawn_supervised(
+                cfg.workers,
+                cfg.workers.max(1) * 2,
+                policy,
+                move |batch: MergedBatch| score_batch(&slot, batch, &stats, &faults, dims),
+            )
         };
         let (tx, rx) = sync_channel::<PredictRequest>(cfg.max_queue.max(1));
         let merger = {
             let pool_tx = pool.sender();
-            std::thread::spawn(move || merger_loop(d, r, cfg.max_batch_edges, rx, pool_tx))
+            let timeout_ms = cfg.request_timeout_ms;
+            std::thread::spawn(move || {
+                merger_loop(dims.0, dims.1, cfg.max_batch_edges, timeout_ms, rx, pool_tx)
+            })
         };
-        PredictServer { tx: Some(tx), merger: Some(merger), pool: Some(pool), stats }
+        PredictServer {
+            tx: Some(tx),
+            merger: Some(merger),
+            pool: Some(pool),
+            stats,
+            slot,
+            compute: cfg.compute,
+            dims,
+            request_timeout_ms: cfg.request_timeout_ms,
+            faults,
+        }
     }
 
     /// Sender handle for asynchronous submission from other threads. The
     /// queue is bounded: `send` blocks when the server is saturated,
-    /// `try_send` fails instead (caller-side load shedding).
+    /// `try_send` fails instead. Raw-sender traffic skips the admission
+    /// hooks ([`PredictServer::submit`] / [`PredictServer::try_submit`]
+    /// stamp default deadlines and count overload rejections); the merger
+    /// still stamps the default deadline on requests that carry none.
     ///
     /// NOTE: every clone must be dropped before [`PredictServer::shutdown`]
     /// can complete — the merger exits when all senders disconnect.
@@ -158,20 +368,125 @@ impl PredictServer {
         self.tx.as_ref().expect("server running").clone()
     }
 
+    /// Submit one request, blocking while the bounded queue is full
+    /// (backpressure). Stamps the config's default deadline when the
+    /// request has none. On failure the request's reply channel is answered
+    /// with the same typed error this returns, so no consumer path hangs.
+    pub fn submit(&self, req: PredictRequest) -> Result<(), PredictError> {
+        let req = self.admit(req)?;
+        match self.tx.as_ref().expect("server running").send(req) {
+            Ok(()) => Ok(()),
+            Err(std::sync::mpsc::SendError(req)) => {
+                Err(self.refuse(req, PredictError::ShuttingDown))
+            }
+        }
+    }
+
+    /// Non-blocking [`PredictServer::submit`]: a full queue answers (and
+    /// returns) [`PredictError::Overloaded`] instead of blocking — the
+    /// caller-side load-shedding path, guaranteed never to hang.
+    pub fn try_submit(&self, req: PredictRequest) -> Result<(), PredictError> {
+        let req = self.admit(req)?;
+        match self.tx.as_ref().expect("server running").try_send(req) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(req)) => {
+                self.stats.rejected_overload.fetch_add(1, Ordering::Relaxed);
+                Err(self.refuse(req, PredictError::Overloaded))
+            }
+            Err(TrySendError::Disconnected(req)) => {
+                Err(self.refuse(req, PredictError::ShuttingDown))
+            }
+        }
+    }
+
+    /// Shared admission: default-deadline stamping plus the injected queue
+    /// fault (which mimics a full queue).
+    fn admit(&self, mut req: PredictRequest) -> Result<PredictRequest, PredictError> {
+        if req.deadline.is_none() && self.request_timeout_ms > 0 {
+            req = req.with_deadline_ms(self.request_timeout_ms);
+        }
+        if self.faults.trip_queue_rejection() {
+            self.stats.rejected_overload.fetch_add(1, Ordering::Relaxed);
+            return Err(self.refuse(req, PredictError::Overloaded));
+        }
+        Ok(req)
+    }
+
+    /// Answer a refused request on its reply channel and hand the error
+    /// back to the submitter.
+    fn refuse(&self, req: PredictRequest, err: PredictError) -> PredictError {
+        req.answer(Err(err.clone()), self.stats.generation.load(Ordering::Relaxed));
+        err
+    }
+
     /// Convenience: submit one request and block for its scores.
+    ///
+    /// The wait is bounded: a dropped reply (scoring worker crashed
+    /// mid-batch, server stopped) returns [`PredictError::ShuttingDown`]
+    /// instead of hanging forever, and when the request carries a deadline
+    /// (explicit or the config default) the wait is additionally capped at
+    /// the deadline plus a drain allowance.
     pub fn predict_blocking(
         &self,
         start_features: Vec<Vec<f64>>,
         end_features: Vec<Vec<f64>>,
         edges: Vec<(u32, u32)>,
-    ) -> Result<Vec<f64>, String> {
+    ) -> Result<Vec<f64>, PredictError> {
+        Ok(self.predict_reply(start_features, end_features, edges)?.result?)
+    }
+
+    /// [`PredictServer::predict_blocking`], but returning the full
+    /// [`PredictReply`] so the caller sees the scoring generation.
+    pub fn predict_reply(
+        &self,
+        start_features: Vec<Vec<f64>>,
+        end_features: Vec<Vec<f64>>,
+        edges: Vec<(u32, u32)>,
+    ) -> Result<PredictReply, PredictError> {
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
-        self.tx
-            .as_ref()
-            .expect("server running")
-            .send(PredictRequest { start_features, end_features, edges, reply: reply_tx })
-            .map_err(|_| "server stopped".to_string())?;
-        reply_rx.recv().map_err(|_| "server dropped request".to_string())
+        let mut req = PredictRequest::new(start_features, end_features, edges, reply_tx);
+        if req.deadline.is_none() && self.request_timeout_ms > 0 {
+            req = req.with_deadline_ms(self.request_timeout_ms);
+        }
+        let deadline = req.deadline;
+        self.submit(req)?;
+        wait_reply(&reply_rx, deadline)
+    }
+
+    /// Atomically install a new model with **zero downtime**. In-flight
+    /// batches finish on the generation they started with; batches that
+    /// begin after the swap score on the new model; every reply carries the
+    /// generation that scored it (never torn across models). Returns the
+    /// new generation, also visible as [`ServerStats::generation`].
+    ///
+    /// The incoming model must be a dual (kernel) model whose start/end
+    /// feature dimensions match the serving one — the merger validates
+    /// requests against those dimensions for the server's lifetime. The
+    /// kernel-row caches start cold for the new generation (old-model rows
+    /// must never score new-model requests); the hit/miss counters keep
+    /// accumulating.
+    pub fn swap_model(&self, model: crate::api::TrainedModel) -> Result<u64, String> {
+        let dual = model.into_dual().map_err(|e| format!("cannot hot-swap: {e}"))?;
+        let dims = (dual.train_start_features.cols(), dual.train_end_features.cols());
+        if dims != self.dims {
+            return Err(format!(
+                "cannot hot-swap: the server validates requests against feature dims \
+                 (d, r) = {:?}, but the new model expects {:?}",
+                self.dims, dims
+            ));
+        }
+        let ctx = Arc::new(
+            dual.predict_context(&self.compute)
+                .with_cache_counters(self.stats.cache_hits.clone(), self.stats.cache_misses.clone()),
+        );
+        let generation = {
+            let mut guard = self.slot.lock().unwrap_or_else(|p| p.into_inner());
+            guard.generation += 1;
+            guard.ctx = ctx;
+            guard.generation
+        };
+        self.stats.generation.store(generation, Ordering::Relaxed);
+        Ok(generation)
     }
 
     /// Observability counters.
@@ -201,22 +516,48 @@ impl Drop for PredictServer {
     }
 }
 
-/// Trained-side feature dimensions `(d, r)` the merger validates against.
-fn ctx_dims(model: &DualModel) -> (usize, usize) {
-    (model.train_start_features.cols(), model.train_end_features.cols())
+/// Bounded reply wait: map a disconnected reply channel (worker crash,
+/// shutdown) to `ShuttingDown`, and cap the wait at the deadline plus
+/// [`REPLY_DRAIN_SLACK`] when one is set — a blocking caller can never
+/// hang on a request the pipeline dropped.
+fn wait_reply(
+    rx: &Receiver<PredictReply>,
+    deadline: Option<Instant>,
+) -> Result<PredictReply, PredictError> {
+    match deadline {
+        None => rx.recv().map_err(|_| PredictError::ShuttingDown),
+        Some(d) => {
+            let wait = d.saturating_duration_since(Instant::now()) + REPLY_DRAIN_SLACK;
+            match rx.recv_timeout(wait) {
+                Ok(reply) => Ok(reply),
+                Err(RecvTimeoutError::Timeout) => Err(PredictError::DeadlineExceeded),
+                Err(RecvTimeoutError::Disconnected) => Err(PredictError::ShuttingDown),
+            }
+        }
+    }
 }
 
 fn merger_loop(
     d: usize,
     r: usize,
     max_batch_edges: usize,
+    timeout_ms: u64,
     rx: Receiver<PredictRequest>,
     pool_tx: SyncSender<MergedBatch>,
 ) {
+    // Default-deadline stamp for raw-sender traffic (requests admitted
+    // through the server's submit APIs were already stamped at submission,
+    // so their time in the queue counts against the deadline).
+    let stamp = |mut req: PredictRequest| -> PredictRequest {
+        if req.deadline.is_none() && timeout_ms > 0 {
+            req = req.with_deadline_ms(timeout_ms);
+        }
+        req
+    };
     loop {
         // Block for the first request of the batch.
         let first = match rx.recv() {
-            Ok(req) => req,
+            Ok(req) => stamp(req),
             Err(_) => return, // all senders gone
         };
         let mut batch = vec![first];
@@ -225,6 +566,7 @@ fn merger_loop(
         while edge_count < max_batch_edges {
             match rx.try_recv() {
                 Ok(req) => {
+                    let req = stamp(req);
                     edge_count += req.edges.len();
                     batch.push(req);
                 }
@@ -234,32 +576,63 @@ fn merger_loop(
         // Blocks when the scoring pool is saturated — backpressure that
         // propagates to the bounded request queue and its submitters.
         if pool_tx.send(merge_batch(d, r, batch)).is_err() {
-            return; // scoring pool gone (worker panic)
+            return; // scoring pool gone (respawn budget exhausted)
         }
     }
 }
 
-/// Validate each request and merge the batch into one dataset with offset
-/// vertex indices. Invalid requests are flagged and excluded from scoring —
-/// the merged matrices are sized to the *valid* requests only, so no kernel
-/// row is ever computed (or cached) for a phantom vertex.
-fn merge_batch(d: usize, r: usize, batch: Vec<PredictRequest>) -> MergedBatch {
-    let bad: Vec<bool> = batch
+/// Validate one request against the trained-side feature dimensions.
+fn validate(d: usize, r: usize, req: &PredictRequest) -> Verdict {
+    if req.expired() {
+        return Verdict::Expired;
+    }
+    if let Some(f) = req.start_features.iter().find(|f| f.len() != d) {
+        return Verdict::Invalid(format!(
+            "start-vertex features must have {d} columns, got {}",
+            f.len()
+        ));
+    }
+    if let Some(f) = req.end_features.iter().find(|f| f.len() != r) {
+        return Verdict::Invalid(format!(
+            "end-vertex features must have {r} columns, got {}",
+            f.len()
+        ));
+    }
+    let (u, v) = (req.start_features.len(), req.end_features.len());
+    if let Some(&(s, e)) = req
+        .edges
         .iter()
-        .map(|req| {
-            let valid = req.start_features.iter().all(|f| f.len() == d)
-                && req.end_features.iter().all(|f| f.len() == r)
-                && req.edges.iter().all(|&(s, e)| {
-                    (s as usize) < req.start_features.len()
-                        && (e as usize) < req.end_features.len()
-                });
-            !valid
-        })
-        .collect();
-    let valid_reqs = || batch.iter().zip(&bad).filter(|(_, &b)| !b).map(|(req, _)| req);
-    let total_starts: usize = valid_reqs().map(|b| b.start_features.len()).sum();
-    let total_ends: usize = valid_reqs().map(|b| b.end_features.len()).sum();
-    let total_edges: usize = valid_reqs().map(|b| b.edges.len()).sum();
+        .find(|&&(s, e)| s as usize >= u || e as usize >= v)
+    {
+        return Verdict::Invalid(format!(
+            "edge ({s}, {e}) references a vertex outside the request's {u}×{v} vertex lists"
+        ));
+    }
+    Verdict::Ok
+}
+
+/// Validate each request and merge the batch into one dataset with offset
+/// vertex indices. Invalid and expired requests are excluded from scoring —
+/// the merged matrices are sized to the surviving requests only, so no
+/// kernel row is ever computed (or cached) for a phantom vertex.
+fn merge_batch(d: usize, r: usize, batch: Vec<PredictRequest>) -> MergedBatch {
+    let verdicts: Vec<Verdict> = batch.iter().map(|req| validate(d, r, req)).collect();
+    let (ds, spans) = build_dataset(d, r, &batch, &verdicts);
+    MergedBatch { ds, spans, verdicts, requests: batch }
+}
+
+/// Build the merged dataset over the `Verdict::Ok` requests.
+fn build_dataset(
+    d: usize,
+    r: usize,
+    batch: &[PredictRequest],
+    verdicts: &[Verdict],
+) -> (Option<Dataset>, Vec<usize>) {
+    let ok = |i: usize| matches!(verdicts[i], Verdict::Ok);
+    let ok_reqs = || batch.iter().enumerate().filter(|&(i, _)| ok(i)).map(|(_, req)| req);
+    let total_starts: usize = ok_reqs().map(|b| b.start_features.len()).sum();
+    let total_ends: usize = ok_reqs().map(|b| b.end_features.len()).sum();
+    let total_edges: usize = ok_reqs().map(|b| b.edges.len()).sum();
 
     let mut start_features = Matrix::zeros(total_starts, d);
     let mut end_features = Matrix::zeros(total_ends, r);
@@ -269,13 +642,13 @@ fn merge_batch(d: usize, r: usize, batch: Vec<PredictRequest>) -> MergedBatch {
     let mut end_off = 0u32;
     let mut spans = Vec::with_capacity(batch.len());
 
-    for (req, &is_bad) in batch.iter().zip(&bad) {
-        if is_bad {
+    for (i, req) in batch.iter().enumerate() {
+        if !ok(i) {
             spans.push(0);
             continue;
         }
-        for (i, f) in req.start_features.iter().enumerate() {
-            start_features.row_mut(start_off as usize + i).copy_from_slice(f);
+        for (j, f) in req.start_features.iter().enumerate() {
+            start_features.row_mut(start_off as usize + j).copy_from_slice(f);
         }
         for (j, f) in req.end_features.iter().enumerate() {
             end_features.row_mut(end_off as usize + j).copy_from_slice(f);
@@ -298,33 +671,75 @@ fn merge_batch(d: usize, r: usize, batch: Vec<PredictRequest>) -> MergedBatch {
         labels: vec![0.0; n_scored],
         name: "server-batch".into(),
     });
-    MergedBatch { ds, spans, bad, requests: batch }
+    (ds, spans)
 }
 
-/// Score one merged batch on a pool worker and scatter the replies.
-fn score_batch(ctx: &PredictContext, batch: MergedBatch, stats: &ServerStats) {
+/// Score one merged batch on a pool worker and scatter the typed replies.
+fn score_batch(
+    slot: &Mutex<ContextSlot>,
+    mut batch: MergedBatch,
+    stats: &ServerStats,
+    faults: &FaultPlan,
+    dims: (usize, usize),
+) {
+    // Injected faults first: a planned panic must cost exactly this batch
+    // (the supervisor respawns the worker), a planned stall models a
+    // straggler that pushes requests past their deadlines.
+    faults.trip_batch_start();
+
+    // Second deadline pass: shed whatever expired after merging (queueing
+    // to the pool, or an injected stall) instead of computing it.
+    let mut newly_expired = false;
+    for (req, v) in batch.requests.iter().zip(batch.verdicts.iter_mut()) {
+        if matches!(v, Verdict::Ok) && req.expired() {
+            *v = Verdict::Expired;
+            newly_expired = true;
+            stats.shed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    if newly_expired {
+        let (ds, spans) = build_dataset(dims.0, dims.1, &batch.requests, &batch.verdicts);
+        batch.ds = ds;
+        batch.spans = spans;
+    }
+
+    // Pin one generation for the whole batch: a concurrent swap_model takes
+    // effect from the next batch on, and no reply mixes two models. The
+    // slot lock is held only for the Arc clone.
+    let (generation, ctx) = {
+        let guard = slot.lock().unwrap_or_else(|p| p.into_inner());
+        (guard.generation, Arc::clone(&guard.ctx))
+    };
     let scores = match &batch.ds {
         Some(ds) => ctx.predict_batch(ds),
         None => Vec::new(),
     };
     let n_scored = scores.len();
+    let expired = batch.verdicts.iter().filter(|v| matches!(v, Verdict::Expired)).count();
 
     // Update stats BEFORE delivering replies so a client that observed its
     // reply also observes the counters.
     stats.requests.fetch_add(batch.requests.len(), Ordering::Relaxed);
     stats.batches.fetch_add(1, Ordering::Relaxed);
     stats.edges_scored.fetch_add(n_scored, Ordering::Relaxed);
+    stats.deadline_expired.fetch_add(expired, Ordering::Relaxed);
 
     let mut cursor = 0usize;
-    for (req, (&span, &is_bad)) in
-        batch.requests.iter().zip(batch.spans.iter().zip(&batch.bad))
+    for (req, (&span, verdict)) in
+        batch.requests.iter().zip(batch.spans.iter().zip(&batch.verdicts))
     {
-        if is_bad {
-            let _ = req.reply.send(vec![f64::NAN; req.edges.len()]);
-            continue;
+        match verdict {
+            Verdict::Ok => {
+                req.answer(Ok(scores[cursor..cursor + span].to_vec()), generation);
+                cursor += span;
+            }
+            Verdict::Invalid(reason) => {
+                req.answer(Err(PredictError::InvalidRequest(reason.clone())), generation);
+            }
+            Verdict::Expired => {
+                req.answer(Err(PredictError::DeadlineExceeded), generation);
+            }
         }
-        let _ = req.reply.send(scores[cursor..cursor + span].to_vec());
-        cursor += span;
     }
 }
 
@@ -433,14 +848,14 @@ mod tests {
         for _ in 0..20 {
             let (sf, ef, edges) = request_data(&mut rng, 3, 3, 6);
             let (tx, rx) = channel();
-            sender
-                .send(PredictRequest { start_features: sf, end_features: ef, edges, reply: tx })
-                .unwrap();
+            sender.send(PredictRequest::new(sf, ef, edges, tx)).unwrap();
             replies.push(rx);
         }
         drop(sender); // release our clone so shutdown() can disconnect the merger
         for rx in replies {
-            let scores = rx.recv().unwrap();
+            let reply = rx.recv().unwrap();
+            assert_eq!(reply.generation, 0, "no swap happened");
+            let scores = reply.result.unwrap();
             assert_eq!(scores.len(), 6);
             assert!(scores.iter().all(|s| s.is_finite()));
         }
@@ -450,21 +865,52 @@ mod tests {
     }
 
     #[test]
-    fn invalid_request_gets_nan_reply_without_poisoning_batch() {
+    fn invalid_request_gets_typed_error_without_poisoning_batch() {
         let model = toy_model(1104);
         let server = PredictServer::start(model, ServerConfig::default());
         // bad: edge references missing vertex
         let bad = server.predict_blocking(vec![vec![0.0; 3]], vec![vec![0.0; 2]], vec![(0, 5)]);
-        let scores = bad.unwrap();
-        assert!(scores[0].is_nan());
+        match bad {
+            Err(PredictError::InvalidRequest(reason)) => {
+                assert!(reason.contains("edge (0, 5)"), "{reason}")
+            }
+            other => panic!("expected InvalidRequest, got {other:?}"),
+        }
         // bad: wrong feature dimension
-        let bad_dim = server.predict_blocking(vec![vec![0.0; 7]], vec![vec![0.0; 2]], vec![(0, 0)]);
-        assert!(bad_dim.unwrap()[0].is_nan());
+        let bad_dim =
+            server.predict_blocking(vec![vec![0.0; 7]], vec![vec![0.0; 2]], vec![(0, 0)]);
+        match bad_dim {
+            Err(PredictError::InvalidRequest(reason)) => {
+                assert!(reason.contains("3 columns"), "{reason}")
+            }
+            other => panic!("expected InvalidRequest, got {other:?}"),
+        }
         // a good request still works afterwards
         let mut rng = Pcg32::seeded(1105);
         let (sf, ef, edges) = request_data(&mut rng, 2, 2, 3);
         let good = server.predict_blocking(sf, ef, edges).unwrap();
         assert!(good.iter().all(|s| s.is_finite()));
+        server.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_is_typed_and_sheds_work() {
+        let model = toy_model(1110);
+        let mut rng = Pcg32::seeded(1111);
+        let (sf, ef, edges) = request_data(&mut rng, 3, 3, 5);
+        let server = PredictServer::start(model, ServerConfig::default());
+        let (tx, rx) = channel();
+        let req = PredictRequest::new(sf.clone(), ef.clone(), edges.clone(), tx)
+            .with_deadline_ms(0); // expired on arrival — deterministic
+        server.submit(req).unwrap();
+        let reply = rx.recv().unwrap();
+        assert_eq!(reply.result, Err(PredictError::DeadlineExceeded));
+        let st = server.stats();
+        assert_eq!(st.deadline_expired.load(Ordering::Relaxed), 1);
+        assert_eq!(st.edges_scored.load(Ordering::Relaxed), 0, "expired work is never computed");
+        // an undeadlined request on the same server still scores
+        let ok = server.predict_blocking(sf, ef, edges).unwrap();
+        assert_eq!(ok.len(), 5);
         server.shutdown();
     }
 
@@ -478,6 +924,7 @@ mod tests {
                 workers: 4,
                 max_queue: 8,
                 compute: Compute::serial().with_cache_vertices(16),
+                ..Default::default()
             },
         );
         let mut rng = Pcg32::seeded(1109);
@@ -486,16 +933,14 @@ mod tests {
         for _ in 0..40 {
             let (sf, ef, edges) = request_data(&mut rng, 2, 2, 4);
             let (tx, rx) = channel();
-            sender
-                .send(PredictRequest { start_features: sf, end_features: ef, edges, reply: tx })
-                .unwrap();
+            sender.send(PredictRequest::new(sf, ef, edges, tx)).unwrap();
             replies.push(rx);
         }
         drop(sender);
         server.shutdown(); // graceful: drains queue + pool before returning
         for rx in replies {
-            let scores = rx.recv().expect("reply delivered before shutdown completed");
-            assert_eq!(scores.len(), 4);
+            let reply = rx.recv().expect("reply delivered before shutdown completed");
+            assert_eq!(reply.result.expect("scored").len(), 4);
         }
     }
 }

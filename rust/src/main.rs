@@ -441,7 +441,7 @@ fn cmd_cv(args: &Args) -> Result<(), String> {
                 r.train_secs
             );
         }
-        let means = kronvt::coordinator::jobs::mean_auc_path(&results);
+        let means = kronvt::coordinator::jobs::mean_auc_path(&results, lambdas.len())?;
         let mut best = 0;
         for (j, &m) in means.iter().enumerate() {
             println!("lambda={:<12} mean AUC={m:.4}", lambdas[j]);
@@ -481,7 +481,8 @@ fn cmd_cv(args: &Args) -> Result<(), String> {
 
 const SERVE_FLAGS: &[&str] = &[
     "data", "seed", "scale", "lambda", "threads", "pairwise", "model", "requests",
-    "serve-workers", "cache-vertices", "max-queue", "vertex-pool",
+    "serve-workers", "cache-vertices", "max-queue", "vertex-pool", "request-timeout-ms",
+    "swap-watch",
 ];
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
@@ -530,6 +531,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let server: PredictServer = model.serve(ServerConfig {
         workers: args.get_usize("serve-workers", 2)?,
         max_queue: args.get_usize("max-queue", 1024)?,
+        request_timeout_ms: args.get_u64("request-timeout-ms", 0)?,
         compute,
         ..Default::default()
     })?;
@@ -544,15 +546,53 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         (0..pool_size).map(|_| rng.uniform_vec(d, 0.0, 100.0)).collect();
     let end_pool: Vec<Vec<f64>> = (0..pool_size).map(|_| rng.uniform_vec(r, 0.0, 100.0)).collect();
     let timer = Timer::start();
-    for _ in 0..n_requests {
-        let sf: Vec<Vec<f64>> =
-            (0..4).map(|_| start_pool[rng.below(pool_size)].clone()).collect();
-        let ef: Vec<Vec<f64>> = (0..4).map(|_| end_pool[rng.below(pool_size)].clone()).collect();
-        let edges: Vec<(u32, u32)> =
-            (0..8).map(|_| (rng.below(4) as u32, rng.below(4) as u32)).collect();
-        let scores = server.predict_blocking(sf, ef, edges)?;
-        assert_eq!(scores.len(), 8);
-    }
+    // `--swap-watch PATH` hot-swaps the serving model whenever the artifact
+    // at PATH changes (200ms mtime poll) — zero downtime, in-flight batches
+    // finish on the generation they started with. Scoped so the watcher
+    // borrows the server and always joins before shutdown.
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    std::thread::scope(|scope| -> Result<(), String> {
+        if let Some(watch) = args.get("swap-watch") {
+            let (server, stop) = (&server, &stop);
+            scope.spawn(move || {
+                let path = Path::new(watch);
+                let mtime = |p: &Path| std::fs::metadata(p).and_then(|m| m.modified()).ok();
+                let mut last = mtime(path);
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    std::thread::sleep(std::time::Duration::from_millis(200));
+                    let now = mtime(path);
+                    if now.is_some() && now != last {
+                        last = now;
+                        // A failed load/swap must not kill serving: report
+                        // it and keep the current generation live.
+                        match TrainedModel::load(path).and_then(|m| server.swap_model(m)) {
+                            Ok(generation) => {
+                                println!("hot-swapped model from {watch} (generation {generation})")
+                            }
+                            Err(e) => eprintln!("swap-watch {watch}: {e}"),
+                        }
+                    }
+                }
+            });
+        }
+        let run = (|| -> Result<(), String> {
+            for _ in 0..n_requests {
+                let sf: Vec<Vec<f64>> =
+                    (0..4).map(|_| start_pool[rng.below(pool_size)].clone()).collect();
+                let ef: Vec<Vec<f64>> =
+                    (0..4).map(|_| end_pool[rng.below(pool_size)].clone()).collect();
+                let edges: Vec<(u32, u32)> =
+                    (0..8).map(|_| (rng.below(4) as u32, rng.below(4) as u32)).collect();
+                let scores = server.predict_blocking(sf, ef, edges)?;
+                assert_eq!(scores.len(), 8);
+            }
+            Ok(())
+        })();
+        // Set on every exit path, or a `?` above would leave the watcher
+        // spinning and the scope joining forever.
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        run
+    })?;
     let secs = timer.elapsed_secs();
     let st = server.stats();
     let hits = st.cache_hits.load(std::sync::atomic::Ordering::Relaxed);
@@ -568,6 +608,16 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     println!(
         "kernel-row cache: {hits} hits / {misses} misses ({:.0}% hit rate)",
         100.0 * hits as f64 / (hits + misses).max(1) as f64
+    );
+    println!(
+        "robustness: generation {} — {} deadline-expired ({} shed unscored), {} overload-rejected, \
+         {} worker panics / {} respawns",
+        st.generation.load(std::sync::atomic::Ordering::Relaxed),
+        st.deadline_expired.load(std::sync::atomic::Ordering::Relaxed),
+        st.shed.load(std::sync::atomic::Ordering::Relaxed),
+        st.rejected_overload.load(std::sync::atomic::Ordering::Relaxed),
+        st.panics.load(std::sync::atomic::Ordering::Relaxed),
+        st.respawns.load(std::sync::atomic::Ordering::Relaxed),
     );
     server.shutdown();
     Ok(())
@@ -631,7 +681,11 @@ fn usage() -> ! {
          serve flags:  --serve-workers N   scoring-pool threads (batches scored concurrently)\n\
                        --cache-vertices N  per-side kernel-row LRU capacity (0 = off)\n\
                        --max-queue N       request-queue bound (backpressure)\n\
-                       --vertex-pool P     distinct request vertices per side (repeat-vertex traffic)"
+                       --vertex-pool P     distinct request vertices per side (repeat-vertex traffic)\n\
+                       --request-timeout-ms MS  default per-request deadline (0 = none); expired\n\
+                                           requests answer DeadlineExceeded and are shed unscored\n\
+                       --swap-watch PATH   hot-swap the serving model when the artifact at PATH\n\
+                                           changes (zero downtime, generation counter in stats)"
     );
     std::process::exit(2)
 }

@@ -339,6 +339,14 @@ impl PredictContext {
         self.dual_coef.len()
     }
 
+    /// Trained-side feature dimensions `(d, r)` — what request vertex rows
+    /// must match. The prediction server validates against these and
+    /// requires them to be stable across [hot
+    /// swaps](crate::coordinator::PredictServer::swap_model).
+    pub fn feature_dims(&self) -> (usize, usize) {
+        (self.train_start_features.cols(), self.train_end_features.cols())
+    }
+
     /// Worker threads used per batch matvec.
     pub fn threads(&self) -> usize {
         self.threads

@@ -219,6 +219,59 @@ fn non_finite_models_refuse_to_save() {
     assert!(!path.exists(), "nothing may be written for a non-finite model");
 }
 
+/// Crash-safety of the artifact lifecycle: saves stage through a fsynced
+/// `.tmp` sibling and rename into place, so a torn write (a crash mid-save)
+/// can never corrupt a previously good artifact; the loader refuses `.tmp`
+/// paths outright and sweeps stale staging files.
+#[test]
+fn atomic_save_survives_torn_writes_and_cleans_stale_tmp() {
+    let (train, test) = hetero_data().zero_shot_split(0.3, 23);
+    let model = Learner::ridge().iterations(10).fit(&train).unwrap();
+    let expected = model.predict(&test);
+    let path = temp_path("atomic");
+    let tmp = PathBuf::from(format!("{}.tmp", path.display()));
+
+    model.save(&path).expect("save");
+    assert!(!tmp.exists(), "a completed save leaves no staging file behind");
+    let good = std::fs::read_to_string(&path).unwrap();
+
+    // Simulated crash mid-save: a torn (truncated) staging file next to the
+    // good artifact. Loading the artifact still works, and the stale .tmp
+    // is swept.
+    std::fs::write(&tmp, &good[..good.len() / 2]).unwrap();
+    let loaded = TrainedModel::load(&path).expect("good artifact loads past a torn .tmp sibling");
+    assert_eq!(loaded.predict(&test), expected, "bitwise despite the torn sibling");
+    assert!(!tmp.exists(), "a successful load sweeps the stale staging file");
+
+    // The staging file itself is never a valid load target, even when its
+    // content is a complete document.
+    std::fs::write(&tmp, &good).unwrap();
+    let err = TrainedModel::load(&tmp).unwrap_err();
+    assert!(err.contains(".tmp"), "refusal must name the staging suffix: {err}");
+    std::fs::remove_file(&tmp).ok();
+
+    // A save that fails (non-finite parameters) is all-or-nothing: the
+    // previous artifact is untouched and no staging file is left behind.
+    let mut dual = model.as_dual().unwrap().clone();
+    dual.dual_coef[0] = f64::INFINITY;
+    let broken = TrainedModel::from_dual(dual, model.lambda());
+    assert!(broken.save(&path).is_err());
+    assert!(!tmp.exists(), "failed save leaves no staging file");
+    assert_eq!(
+        std::fs::read_to_string(&path).unwrap(),
+        good,
+        "failed save leaves the previous artifact byte-identical"
+    );
+
+    // Re-saving over an existing artifact is also all-or-nothing: after the
+    // save, the file is exactly the new document (rename, not append/trunc).
+    model.save(&path).expect("re-save");
+    assert_eq!(std::fs::read_to_string(&path).unwrap(), good, "same model → same document");
+    let reloaded = TrainedModel::load(&path).expect("reload");
+    assert_eq!(reloaded.predict(&test), expected);
+    std::fs::remove_file(&path).ok();
+}
+
 /// The real acceptance path: a **fresh process** (the CLI binary) loads what
 /// another process saved and reproduces the training process's test scores
 /// bitwise — asserted by comparing the shortest-round-trip `score_sum`

@@ -1,13 +1,15 @@
 //! Integration tests for the vertex-cached, sharded prediction pipeline:
 //! bitwise equivalence of cold / warm / uncached / sharded serving, mixed
-//! valid-and-invalid traffic under the scoring pool, and LRU behavior under
-//! eviction pressure.
+//! valid-and-invalid traffic under the scoring pool (invalid requests get
+//! typed `InvalidRequest` errors), and LRU behavior under eviction
+//! pressure. Fault-path guarantees (deadlines, panics, overload, hot swap)
+//! live in `serving_faults.rs`.
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::channel;
 
 use kronvt::api::Compute;
-use kronvt::coordinator::{PredictRequest, PredictServer, ServerConfig};
+use kronvt::coordinator::{PredictError, PredictRequest, PredictServer, ServerConfig};
 use kronvt::data::checkerboard::CheckerboardConfig;
 use kronvt::data::Dataset;
 use kronvt::kernels::KernelKind;
@@ -164,7 +166,8 @@ fn eviction_pressure_never_corrupts_scores() {
 }
 
 /// Mixed valid/invalid requests under the sharded worker pool: invalid ones
-/// get NaN replies, valid ones exact scores, nothing is lost or misrouted.
+/// get typed `InvalidRequest` errors, valid ones exact scores, nothing is
+/// lost or misrouted.
 #[test]
 fn mixed_traffic_under_sharded_pool() {
     let model = trained_model();
@@ -187,41 +190,37 @@ fn mixed_traffic_under_sharded_pool() {
         if i % 5 == 2 {
             // invalid: edge references a vertex the request doesn't carry
             sender
-                .send(PredictRequest {
-                    start_features: vec![vec![0.5]],
-                    end_features: vec![vec![0.5]],
-                    edges: vec![(0, 9)],
-                    reply: tx,
-                })
+                .send(PredictRequest::new(vec![vec![0.5]], vec![vec![0.5]], vec![(0, 9)], tx))
                 .unwrap();
             expected.push(None);
         } else if i % 7 == 3 {
             // invalid: wrong feature dimensionality
             sender
-                .send(PredictRequest {
-                    start_features: vec![vec![0.5, 0.5, 0.5]],
-                    end_features: vec![vec![0.5]],
-                    edges: vec![(0, 0), (0, 0)],
-                    reply: tx,
-                })
+                .send(PredictRequest::new(
+                    vec![vec![0.5, 0.5, 0.5]],
+                    vec![vec![0.5]],
+                    vec![(0, 0), (0, 0)],
+                    tx,
+                ))
                 .unwrap();
             expected.push(None);
         } else {
             let (sf, ef, edges) = request_data(&mut rng, 3, 3, 7);
             expected.push(Some(direct_predict(&model, &sf, &ef, &edges)));
-            sender
-                .send(PredictRequest { start_features: sf, end_features: ef, edges, reply: tx })
-                .unwrap();
+            sender.send(PredictRequest::new(sf, ef, edges, tx)).unwrap();
         }
         replies.push(rx);
     }
     drop(sender);
 
     for (i, (rx, want)) in replies.into_iter().zip(&expected).enumerate() {
-        let got = rx.recv().expect("every request answered");
+        let got = rx.recv().expect("every request answered").result;
         match want {
-            None => assert!(got.iter().all(|s| s.is_nan()), "request {i} must get NaNs"),
-            Some(want) => assert_eq!(&got, want, "request {i}"),
+            None => match got {
+                Err(PredictError::InvalidRequest(_)) => {}
+                other => panic!("request {i} must get InvalidRequest, got {other:?}"),
+            },
+            Some(want) => assert_eq!(got.as_ref().expect("scored"), want, "request {i}"),
         }
     }
     let st = server.stats();
@@ -241,6 +240,7 @@ fn backpressure_burst_is_lossless() {
             max_queue: 4,
             max_batch_edges: 32,
             compute: Compute::serial().with_cache_vertices(16),
+            ..Default::default()
         },
     );
     let mut rng = Pcg32::seeded(104);
@@ -252,17 +252,12 @@ fn backpressure_burst_is_lossless() {
                 let mut rxs = Vec::new();
                 for (sf, ef, edges) in reqs {
                     let (tx, rx) = channel();
-                    sender
-                        .send(PredictRequest {
-                            start_features: sf,
-                            end_features: ef,
-                            edges,
-                            reply: tx,
-                        })
-                        .unwrap();
+                    sender.send(PredictRequest::new(sf, ef, edges, tx)).unwrap();
                     rxs.push(rx);
                 }
-                rxs.into_iter().map(|rx| rx.recv().unwrap().len()).sum::<usize>()
+                rxs.into_iter()
+                    .map(|rx| rx.recv().unwrap().result.expect("scored").len())
+                    .sum::<usize>()
             });
         }
     });

@@ -1,0 +1,333 @@
+//! Fault-tolerance guarantees of the prediction server, proven under
+//! deterministic fault injection ([`FaultPlan`]) instead of timing luck:
+//!
+//! * expired deadlines answer `DeadlineExceeded` and their work is shed,
+//!   never computed (checked at merge time and again on the scoring worker);
+//! * a panicking scoring worker costs exactly its batch, is respawned by the
+//!   pool supervisor, and subsequent traffic scores bitwise-correctly;
+//! * overload (`try_submit` against a full queue, or an injected rejection)
+//!   answers `Overloaded` immediately — never a hang;
+//! * `swap_model` under concurrent traffic loses zero requests, stamps every
+//!   reply with the generation that scored it (old or new, never torn), and
+//!   post-swap scores are bitwise identical to a fresh server on the new
+//!   model.
+//!
+//! Everything runs under scoring-pool sizes {1, 4}: supervision and swap
+//! correctness must not depend on spare workers.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::channel;
+
+use kronvt::api::{Compute, TrainedModel};
+use kronvt::coordinator::{
+    FaultPlan, PredictError, PredictRequest, PredictServer, ServerConfig,
+};
+use kronvt::data::Dataset;
+use kronvt::gvt::{KronIndex, PairwiseKernelKind};
+use kronvt::kernels::KernelKind;
+use kronvt::linalg::Matrix;
+use kronvt::model::DualModel;
+use kronvt::util::rng::Pcg32;
+
+const WORKER_COUNTS: [usize; 2] = [1, 4];
+
+/// A tiny dual model built directly (no training) — different seeds give
+/// different models with identical feature dims, which is exactly what the
+/// hot-swap tests need.
+fn toy_model(seed: u64) -> DualModel {
+    let mut rng = Pcg32::seeded(seed);
+    let (m, q, n) = (6, 5, 15);
+    DualModel {
+        dual_coef: rng.normal_vec(n),
+        train_start_features: Matrix::from_fn(m, 3, |_, _| rng.normal()),
+        train_end_features: Matrix::from_fn(q, 2, |_, _| rng.normal()),
+        train_idx: KronIndex::new(
+            (0..n).map(|_| rng.below(q) as u32).collect(),
+            (0..n).map(|_| rng.below(m) as u32).collect(),
+        ),
+        kernel_d: KernelKind::Gaussian { gamma: 0.3 },
+        kernel_t: KernelKind::Gaussian { gamma: 0.3 },
+        pairwise: PairwiseKernelKind::Kronecker,
+    }
+}
+
+fn request_data(
+    rng: &mut Pcg32,
+    u: usize,
+    v: usize,
+    t: usize,
+) -> (Vec<Vec<f64>>, Vec<Vec<f64>>, Vec<(u32, u32)>) {
+    let sf: Vec<Vec<f64>> = (0..u).map(|_| rng.normal_vec(3)).collect();
+    let ef: Vec<Vec<f64>> = (0..v).map(|_| rng.normal_vec(2)).collect();
+    let edges: Vec<(u32, u32)> =
+        (0..t).map(|_| (rng.below(u) as u32, rng.below(v) as u32)).collect();
+    (sf, ef, edges)
+}
+
+fn direct_predict(
+    model: &DualModel,
+    sf: &[Vec<f64>],
+    ef: &[Vec<f64>],
+    edges: &[(u32, u32)],
+) -> Vec<f64> {
+    let ds = Dataset {
+        start_features: Matrix::from_fn(sf.len(), sf[0].len(), |i, j| sf[i][j]),
+        end_features: Matrix::from_fn(ef.len(), ef[0].len(), |i, j| ef[i][j]),
+        start_idx: edges.iter().map(|&(s, _)| s).collect(),
+        end_idx: edges.iter().map(|&(_, e)| e).collect(),
+        labels: vec![0.0; edges.len()],
+        name: "direct".into(),
+    };
+    model.predict(&ds)
+}
+
+fn config(workers: usize) -> ServerConfig {
+    ServerConfig { workers, compute: Compute::serial(), ..Default::default() }
+}
+
+/// An already-expired deadline (0 ms) gets `DeadlineExceeded` without a
+/// single edge being scored, and the server keeps serving afterwards.
+#[test]
+fn expired_deadline_is_shed_not_scored() {
+    for workers in WORKER_COUNTS {
+        let model = toy_model(41);
+        let mut rng = Pcg32::seeded(42);
+        let (sf, ef, edges) = request_data(&mut rng, 3, 3, 6);
+        let expected = direct_predict(&model, &sf, &ef, &edges);
+        let server = PredictServer::start(model, config(workers));
+
+        let (tx, rx) = channel();
+        let req =
+            PredictRequest::new(sf.clone(), ef.clone(), edges.clone(), tx).with_deadline_ms(0);
+        server.submit(req).unwrap();
+        let reply = rx.recv().expect("expired requests are still answered");
+        assert_eq!(reply.result, Err(PredictError::DeadlineExceeded), "workers={workers}");
+
+        let st = server.stats();
+        assert_eq!(st.deadline_expired.load(Ordering::Relaxed), 1);
+        assert_eq!(st.edges_scored.load(Ordering::Relaxed), 0, "expired work is never computed");
+
+        // same data without a deadline: scored, bitwise-correct
+        let ok = server.predict_blocking(sf, ef, edges).unwrap();
+        assert_eq!(ok, expected, "workers={workers}");
+        server.shutdown();
+    }
+}
+
+/// An injected straggler (the scoring worker stalls past the request's
+/// deadline) triggers the *score-time* expiry pass: the batch was merged
+/// while still live, and the stall sheds it on the worker.
+#[test]
+fn sleep_fault_expires_queued_requests() {
+    let model = toy_model(43);
+    let mut rng = Pcg32::seeded(44);
+    let (sf, ef, edges) = request_data(&mut rng, 3, 3, 6);
+    let server = PredictServer::start_with_faults(
+        model,
+        config(1),
+        FaultPlan::seeded(5).sleep_on_batch(1, 400),
+    );
+    let (tx, rx) = channel();
+    let req = PredictRequest::new(sf, ef, edges, tx).with_deadline_ms(100);
+    server.submit(req).unwrap();
+    let reply = rx.recv().expect("stalled requests are still answered");
+    assert_eq!(reply.result, Err(PredictError::DeadlineExceeded));
+
+    let st = server.stats();
+    assert_eq!(st.deadline_expired.load(Ordering::Relaxed), 1);
+    assert_eq!(st.shed.load(Ordering::Relaxed), 1, "expired after merging → shed on the worker");
+    assert_eq!(st.edges_scored.load(Ordering::Relaxed), 0);
+    server.shutdown();
+}
+
+/// A panicking scoring worker costs exactly its batch — whose requests
+/// observe `ShuttingDown` through the dropped reply channel instead of a
+/// hang — and is respawned: the very next request scores bitwise-correctly,
+/// with the panic and the respawn counted.
+#[test]
+fn panicking_worker_is_respawned_and_traffic_continues() {
+    for workers in WORKER_COUNTS {
+        let model = toy_model(45);
+        let mut rng = Pcg32::seeded(46);
+        let (sf, ef, edges) = request_data(&mut rng, 4, 3, 8);
+        let expected = direct_predict(&model, &sf, &ef, &edges);
+        let server = PredictServer::start_with_faults(
+            model,
+            config(workers),
+            FaultPlan::seeded(6).panic_on_batch(1),
+        );
+
+        // batch 1: the worker panics before touching it; predict_blocking
+        // maps the dropped reply to a typed error instead of hanging.
+        let crashed = server.predict_blocking(sf.clone(), ef.clone(), edges.clone());
+        assert_eq!(crashed, Err(PredictError::ShuttingDown), "workers={workers}");
+
+        // batch 2: the respawned worker scores it, bit for bit.
+        let scores = server.predict_blocking(sf, ef, edges).expect("respawned worker serves");
+        assert_eq!(scores, expected, "workers={workers}");
+
+        let st = server.stats();
+        assert_eq!(st.panics.load(Ordering::Relaxed), 1, "workers={workers}");
+        assert_eq!(st.respawns.load(Ordering::Relaxed), 1, "workers={workers}");
+        server.shutdown();
+    }
+}
+
+/// Offered load far beyond capacity (one stalled worker, tiny queues):
+/// `try_submit` answers `Overloaded` on the spot — reply already waiting,
+/// no hang — while every accepted request still completes.
+#[test]
+fn overload_returns_typed_error_never_hangs() {
+    let model = toy_model(47);
+    let mut rng = Pcg32::seeded(48);
+    let (sf, ef, edges) = request_data(&mut rng, 2, 2, 4);
+    let server = PredictServer::start_with_faults(
+        model,
+        ServerConfig {
+            workers: 1,
+            max_queue: 2,
+            max_batch_edges: edges.len(), // one request per batch
+            compute: Compute::serial(),
+            ..Default::default()
+        },
+        // The only worker stalls on its first batch, so the pool queue, the
+        // merger, and then the bounded request queue all back up.
+        FaultPlan::seeded(7).sleep_on_batch(1, 300),
+    );
+
+    let mut accepted = Vec::new();
+    let mut rejected = 0usize;
+    for _ in 0..40 {
+        let (tx, rx) = channel();
+        match server.try_submit(PredictRequest::new(sf.clone(), ef.clone(), edges.clone(), tx)) {
+            Ok(()) => accepted.push(rx),
+            Err(PredictError::Overloaded) => {
+                // the refusal is answered before try_submit returns
+                let reply = rx.try_recv().expect("Overloaded reply is immediate");
+                assert_eq!(reply.result, Err(PredictError::Overloaded));
+                rejected += 1;
+            }
+            Err(other) => panic!("unexpected admission error: {other:?}"),
+        }
+    }
+    assert!(rejected > 0, "40 instant requests against a stalled 1-worker server must overflow");
+    assert!(!accepted.is_empty(), "the queue admits up to its bound");
+
+    // every accepted request completes with real scores — nothing hangs
+    for rx in accepted {
+        let reply = rx.recv().expect("accepted requests are answered");
+        assert_eq!(reply.result.expect("scored").len(), edges.len());
+    }
+    let st = server.stats();
+    assert_eq!(st.rejected_overload.load(Ordering::Relaxed), rejected);
+    server.shutdown();
+}
+
+/// The queue-rejection injection is deterministic: exactly the planned
+/// request ordinal is refused `Overloaded`, everything else scores.
+#[test]
+fn injected_queue_rejection_refuses_exactly_the_planned_request() {
+    let model = toy_model(49);
+    let mut rng = Pcg32::seeded(50);
+    let server =
+        PredictServer::start_with_faults(model, config(1), FaultPlan::seeded(8).reject_request(2));
+    for i in 1..=4u64 {
+        let (sf, ef, edges) = request_data(&mut rng, 2, 2, 3);
+        let got = server.predict_blocking(sf, ef, edges);
+        if i == 2 {
+            assert_eq!(got, Err(PredictError::Overloaded), "request {i} is the planned rejection");
+        } else {
+            assert_eq!(got.expect("scored").len(), 3, "request {i}");
+        }
+    }
+    assert_eq!(server.stats().rejected_overload.load(Ordering::Relaxed), 1);
+    server.shutdown();
+}
+
+/// Zero-downtime hot swap under concurrent traffic: no request is lost, every
+/// reply's generation is the old or the new one (never torn — generation-0
+/// replies are bitwise model A, generation-1 replies bitwise model B), and
+/// the swapped server matches a fresh server on the new model bit for bit.
+#[test]
+fn hot_swap_under_traffic_loses_nothing_and_generations_are_never_torn() {
+    for workers in WORKER_COUNTS {
+        let model_a = toy_model(51);
+        let model_b = toy_model(52); // same dims, different parameters
+        let mut rng = Pcg32::seeded(53);
+        let (sf, ef, edges) = request_data(&mut rng, 4, 3, 8);
+        let expect_a = direct_predict(&model_a, &sf, &ef, &edges);
+        let expect_b = direct_predict(&model_b, &sf, &ef, &edges);
+        assert_ne!(expect_a, expect_b, "the two models must be distinguishable");
+
+        let server = PredictServer::start(model_a, config(workers));
+        let (senders, per_sender) = (3, 60);
+        std::thread::scope(|scope| {
+            for _ in 0..senders {
+                let server = &server;
+                let (sf, ef, edges) = (sf.clone(), ef.clone(), edges.clone());
+                let (expect_a, expect_b) = (&expect_a, &expect_b);
+                scope.spawn(move || {
+                    for _ in 0..per_sender {
+                        let reply = server
+                            .predict_reply(sf.clone(), ef.clone(), edges.clone())
+                            .expect("submitted");
+                        let scores = reply.result.expect("no request may be lost in a swap");
+                        match reply.generation {
+                            0 => assert_eq!(&scores, expect_a, "generation 0 is model A"),
+                            1 => assert_eq!(&scores, expect_b, "generation 1 is model B"),
+                            g => panic!("impossible generation {g}"),
+                        }
+                    }
+                });
+            }
+            // swap mid-traffic
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            let generation = server
+                .swap_model(TrainedModel::from_dual(model_b.clone(), 0.1))
+                .expect("same-dims swap succeeds");
+            assert_eq!(generation, 1);
+        });
+
+        let st = server.stats();
+        assert_eq!(st.requests.load(Ordering::Relaxed), senders * per_sender);
+        assert_eq!(st.generation.load(Ordering::Relaxed), 1);
+
+        // post-swap, the live server is bitwise a fresh server on model B
+        let swapped = server.predict_blocking(sf.clone(), ef.clone(), edges.clone()).unwrap();
+        let fresh = PredictServer::start(model_b, config(workers));
+        let fresh_scores = fresh.predict_blocking(sf, ef, edges).unwrap();
+        assert_eq!(swapped, fresh_scores, "workers={workers}");
+        assert_eq!(swapped, expect_b);
+        fresh.shutdown();
+        server.shutdown();
+    }
+}
+
+/// A model with different feature dimensions can never be swapped in — the
+/// merger validates requests against the dims fixed at startup.
+#[test]
+fn hot_swap_rejects_mismatched_feature_dims() {
+    let server = PredictServer::start(toy_model(54), config(1));
+    let mut rng = Pcg32::seeded(55);
+    let (m, q, n) = (6, 5, 15);
+    let wrong_dims = DualModel {
+        dual_coef: rng.normal_vec(n),
+        train_start_features: Matrix::from_fn(m, 4, |_, _| rng.normal()), // 4 ≠ 3
+        train_end_features: Matrix::from_fn(q, 2, |_, _| rng.normal()),
+        train_idx: KronIndex::new(
+            (0..n).map(|_| rng.below(q) as u32).collect(),
+            (0..n).map(|_| rng.below(m) as u32).collect(),
+        ),
+        kernel_d: KernelKind::Gaussian { gamma: 0.3 },
+        kernel_t: KernelKind::Gaussian { gamma: 0.3 },
+        pairwise: PairwiseKernelKind::Kronecker,
+    };
+    let err = server.swap_model(TrainedModel::from_dual(wrong_dims, 0.1)).unwrap_err();
+    assert!(err.contains("hot-swap"), "{err}");
+    assert_eq!(server.stats().generation.load(Ordering::Relaxed), 0, "generation unchanged");
+
+    // the original model still serves
+    let (sf, ef, edges) = request_data(&mut rng, 2, 2, 3);
+    assert_eq!(server.predict_blocking(sf, ef, edges).unwrap().len(), 3);
+    server.shutdown();
+}
