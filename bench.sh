@@ -29,7 +29,9 @@ for arg in "$@"; do
 done
 
 if [[ "$SMOKE" == 1 ]]; then
-    BENCHES=(bench_gemm bench_gvt_micro)
+    # bench_net is loopback-TCP only, quick mode is fast — keep the wire
+    # bench (and BENCH_net.json) from bit-rotting too.
+    BENCHES=(bench_gemm bench_gvt_micro bench_net)
     echo "==> cargo bench --bench bench_convergence -- --smoke"
     cargo bench --bench bench_convergence -- --smoke
 else
@@ -41,6 +43,7 @@ else
         bench_checkerboard
         bench_drug_target
         bench_serving
+        bench_net
         bench_table6
     )
 fi

@@ -37,6 +37,10 @@ run cargo test -q --test tensor_chain
 # The serving fault-tolerance suite by name: deadlines, worker respawn,
 # typed overload, and zero-downtime hot swap must never be filtered out.
 run cargo test -q --test serving_faults
+# The networked-serving suite by name: wire scores bitwise-identical to
+# in-process, typed errors round-tripping the socket, protocol edge cases,
+# and the 2-shard router (identical to unsharded, dead-shard ejection).
+run cargo test -q --test net_serving
 run cargo test --doc
 run env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
@@ -77,6 +81,45 @@ for key in ("offered", "accepted", "rejected_overload", "deadline_expired",
             "shed", "request_timeout_ms", "p50_secs", "p99_secs"):
     assert key in overload, f"BENCH_serving.json overload section is missing '{key}'"
 print("BENCH_serving.json overload schema ok")
+EOF
+
+# The network bench must record the sustained mixed-traffic run (latency
+# tail, error mix, wire faithfulness) and the warm-vs-cold-swap scenario.
+run python3 - <<'EOF'
+import json
+doc = json.load(open("../BENCH_net.json"))
+net = doc.get("net")
+assert net is not None, "BENCH_net.json is missing the 'net' section"
+for key in ("offered", "scored", "deadline_expired", "invalid", "other_errors",
+            "throughput_rps", "p50_secs", "p95_secs", "p99_secs",
+            "cache_hits", "cache_misses", "bitwise_identical"):
+    assert key in net, f"BENCH_net.json net section is missing '{key}'"
+swap = doc.get("swap")
+assert swap is not None, "BENCH_net.json is missing the 'swap' section"
+for key in ("swaps", "warm_p50_secs", "cold_first_mean_secs", "cold_first_max_secs"):
+    assert key in swap, f"BENCH_net.json swap section is missing '{key}'"
+print("BENCH_net.json net/swap schema ok")
+EOF
+
+# Doc consistency: every CLI flag the binary accepts (the per-subcommand
+# allowlists in src/main.rs) must be documented in README.md or docs/*.md,
+# and every --flag named in usage() must be a flag some subcommand accepts.
+run python3 - <<'EOF'
+import glob, re
+src = open("src/main.rs").read()
+allow = set()
+for arrays in re.findall(r"const [A-Z_]+_FLAGS: &\[&str\] = &\[(.*?)\];", src, re.S):
+    allow.update(re.findall(r'"([a-z][a-z0-9-]*)"', arrays))
+assert allow, "found no *_FLAGS allowlists in src/main.rs"
+
+docs = "".join(open(p).read() for p in ["../README.md"] + sorted(glob.glob("../docs/*.md")))
+undocumented = sorted(f for f in allow if not re.search(r"--" + re.escape(f) + r"(?![a-z0-9-])", docs))
+assert not undocumented, f"CLI flags accepted by src/main.rs but absent from README.md/docs/*.md: {undocumented}"
+
+usage = re.search(r"fn usage\(\).*?std::process::exit", src, re.S).group(0)
+phantom = sorted(set(re.findall(r"--([a-z][a-z0-9-]*)", usage)) - allow)
+assert not phantom, f"usage() advertises flags no subcommand accepts: {phantom}"
+print(f"CLI flag docs consistent ({len(allow)} flags)")
 EOF
 
 echo "ci.sh: all checks passed"

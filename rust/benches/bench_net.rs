@@ -1,0 +1,287 @@
+//! Network-serving benchmark: sustained mixed traffic over the TCP/JSON
+//! lines protocol (`coordinator::net`), measuring the end-to-end latency a
+//! remote client actually sees — parse + merge + score + serialize + two
+//! socket hops — rather than the in-process numbers of `bench_serving`.
+//!
+//! Two sections go to `BENCH_net.json` at the repo root:
+//!
+//! * **net** — C concurrent loopback clients replay a request stream drawn
+//!   from a bounded vertex pool, mixed the way real traffic is: mostly
+//!   plain predicts, a slice with aggressive deadlines (some of which
+//!   expire into typed `deadline_exceeded` lines), and a slice of invalid
+//!   requests (`invalid_request` lines). Reported: p50/p95/p99 completion
+//!   latency of scored requests, throughput, and the error mix. Scores are
+//!   asserted bitwise-equal to in-process `predict_blocking` on a sample.
+//! * **swap** — steady-state (warm kernel-row cache) p50 vs the latency of
+//!   the first request after a `swap_model` (new generation, cold cache),
+//!   over several swaps: the price of a zero-downtime deploy as seen from
+//!   the wire.
+//!
+//! Run: `cargo bench --bench bench_net [-- --full --threads N --workers W --clients C]`
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use kronvt::api::{Compute, TrainedModel};
+use kronvt::coordinator::{
+    NetClient, NetServer, NetServerConfig, PredictError, PredictServer, ServerConfig,
+};
+use kronvt::data::dti::DtiConfig;
+use kronvt::kernels::KernelKind;
+use kronvt::train::{KronRidge, RidgeConfig};
+use kronvt::util::args::Args;
+use kronvt::util::json::{update_json_file, Json};
+use kronvt::util::rng::Pcg32;
+use kronvt::util::timer::{fmt_secs, Timer};
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    // Empty-set percentiles report 0.0: JSON cannot encode NaN.
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted.get(idx).copied().unwrap_or(0.0)
+}
+
+fn main() {
+    let args = Args::parse();
+    args.expect_known("bench_net", &["bench", "full", "quick", "threads", "workers", "clients"])
+        .expect("flags");
+    let full = args.has("full");
+    let threads = args.get_usize("threads", 1).expect("--threads");
+    let workers = args.get_usize("workers", 2).expect("--workers");
+    let clients = args.get_usize("clients", 4).expect("--clients");
+    let (dti, per_client, pool_size, swaps) = if full {
+        (kronvt::data::dti::gpcr(7), 200, 48, 5)
+    } else {
+        (
+            DtiConfig { m: 90, q: 70, n: 1800, positives: 120, seed: 7, ..Default::default() },
+            40,
+            24,
+            3,
+        )
+    };
+
+    let data = dti.generate();
+    println!("training KronRidge on {} ({} edges)...", data.name, data.n_edges());
+    let (train, _) = data.zero_shot_split(0.2, 5);
+    let gaussian = KernelKind::Gaussian { gamma: 0.5 };
+    let model = KronRidge::new(RidgeConfig {
+        lambda: 2f64.powi(-4),
+        kernel_d: gaussian,
+        kernel_t: gaussian,
+        iterations: 50,
+        ..Default::default()
+    })
+    .with_compute(Compute::threads(threads))
+    .fit(&train)
+    .expect("training");
+    let d = model.train_start_features.cols();
+    let r = model.train_end_features.cols();
+
+    let server = Arc::new(PredictServer::start(
+        model.clone(),
+        ServerConfig {
+            workers,
+            compute: Compute::threads(threads).with_cache_vertices(4 * pool_size),
+            ..Default::default()
+        },
+    ));
+    let net = NetServer::start(server.clone(), NetServerConfig::default()).expect("listener");
+    let addr = net.local_addr().to_string();
+    println!("listening on {addr}; {clients} clients x {per_client} requests");
+
+    // Bounded vertex pool: repeat-vertex traffic keeps the kernel-row
+    // cache relevant, exactly as in bench_serving.
+    let mut rng = Pcg32::seeded(1234);
+    let start_pool: Vec<Vec<f64>> =
+        (0..pool_size).map(|_| rng.normal_vec(d).iter().map(|x| 0.3 * x).collect()).collect();
+    let end_pool: Vec<Vec<f64>> =
+        (0..pool_size).map(|_| rng.normal_vec(r).iter().map(|x| 0.3 * x).collect()).collect();
+
+    // ---- sustained mixed traffic ----
+    let timer = Timer::start();
+    let outcomes: Vec<(Vec<f64>, usize, usize, usize)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let (addr, start_pool, end_pool) = (&addr, &start_pool, &end_pool);
+                scope.spawn(move || {
+                    let mut rng = Pcg32::seeded(9000 + c as u64);
+                    let mut client = NetClient::connect(addr).expect("client connect");
+                    let mut ok_latencies = Vec::new();
+                    let (mut expired, mut invalid, mut other) = (0usize, 0usize, 0usize);
+                    for i in 0..per_client {
+                        let sf: Vec<Vec<f64>> =
+                            (0..4).map(|_| start_pool[rng.below(pool_size)].clone()).collect();
+                        let ef: Vec<Vec<f64>> =
+                            (0..4).map(|_| end_pool[rng.below(pool_size)].clone()).collect();
+                        let mut edges: Vec<(u32, u32)> = (0..8)
+                            .map(|_| (rng.below(4) as u32, rng.below(4) as u32))
+                            .collect();
+                        // The mix: ~1/10 invalid (dangling edge), ~1/10 on
+                        // a deadline tight enough that some expire.
+                        let deadline = match i % 10 {
+                            3 => {
+                                edges[0].0 = 99; // references no request vertex
+                                None
+                            }
+                            7 => Some(1u64),
+                            _ => None,
+                        };
+                        let t = Timer::start();
+                        let reply =
+                            client.predict(&sf, &ef, &edges, deadline).expect("transport");
+                        match reply.result {
+                            Ok(scores) => {
+                                assert_eq!(scores.len(), 8);
+                                ok_latencies.push(t.elapsed_secs());
+                            }
+                            Err(PredictError::DeadlineExceeded) => expired += 1,
+                            Err(PredictError::InvalidRequest(_)) => invalid += 1,
+                            Err(_) => other += 1,
+                        }
+                    }
+                    (ok_latencies, expired, invalid, other)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    let wall_secs = timer.elapsed_secs();
+    let mut latencies: Vec<f64> = outcomes.iter().flat_map(|o| o.0.iter().copied()).collect();
+    let expired: usize = outcomes.iter().map(|o| o.1).sum();
+    let invalid: usize = outcomes.iter().map(|o| o.2).sum();
+    let other: usize = outcomes.iter().map(|o| o.3).sum();
+    latencies.sort_by(f64::total_cmp);
+    let offered = clients * per_client;
+    let scored = latencies.len();
+    let (p50, p95, p99) =
+        (percentile(&latencies, 0.50), percentile(&latencies, 0.95), percentile(&latencies, 0.99));
+    let rps = scored as f64 / wall_secs;
+    println!(
+        "mixed traffic: offered {offered}, scored {scored}, expired {expired}, \
+         invalid {invalid}, other {other} in {}",
+        fmt_secs(wall_secs)
+    );
+    println!(
+        "latency p50 {} p95 {} p99 {}  ({rps:.0} scored req/s)",
+        fmt_secs(p50),
+        fmt_secs(p95),
+        fmt_secs(p99)
+    );
+
+    // Wire faithfulness spot check: one batch scored over TCP must equal
+    // the in-process path bitwise.
+    {
+        let sf: Vec<Vec<f64>> = (0..4).map(|i| start_pool[i].clone()).collect();
+        let ef: Vec<Vec<f64>> = (0..4).map(|i| end_pool[i].clone()).collect();
+        let edges: Vec<(u32, u32)> = (0..4).map(|i| (i as u32, (3 - i) as u32)).collect();
+        let mut client = NetClient::connect(&addr).expect("check connect");
+        let wire = client
+            .predict(&sf, &ef, &edges, None)
+            .expect("transport")
+            .result
+            .expect("scored");
+        let local = server
+            .predict_blocking(sf, ef, edges)
+            .expect("in-process scored");
+        assert_eq!(wire, local, "wire scores must be bitwise-identical to in-process");
+    }
+
+    let st = server.stats();
+    let host_threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let section = Json::obj(vec![
+        ("bench", Json::from("bench_net")),
+        ("full", Json::from(full)),
+        ("host_threads", Json::from(host_threads)),
+        ("threads", Json::from(threads)),
+        ("workers", Json::from(workers)),
+        ("clients", Json::from(clients)),
+        ("offered", Json::from(offered)),
+        ("scored", Json::from(scored)),
+        ("deadline_expired", Json::from(expired)),
+        ("invalid", Json::from(invalid)),
+        ("other_errors", Json::from(other)),
+        ("wall_secs", Json::from(wall_secs)),
+        ("throughput_rps", Json::from(rps)),
+        ("p50_secs", Json::from(p50)),
+        ("p95_secs", Json::from(p95)),
+        ("p99_secs", Json::from(p99)),
+        ("cache_hits", Json::from(st.cache_hits.load(Ordering::Relaxed))),
+        ("cache_misses", Json::from(st.cache_misses.load(Ordering::Relaxed))),
+        ("bitwise_identical", Json::from(true)),
+    ]);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_net.json");
+    match update_json_file(&out, "net", section) {
+        Ok(()) => println!("wrote mixed-traffic results to {}", out.display()),
+        Err(err) => eprintln!("failed to write {}: {err}", out.display()),
+    }
+
+    // ---- warm vs cold-after-swap latency ----
+    // Steady state first: one client, fixed vertices, so every kernel row
+    // is a cache hit. Then swap the model (same weights — the cost under
+    // measure is the generation change: fresh context, cold cache) and
+    // time the first request against the new generation.
+    let mut client = NetClient::connect(&addr).expect("swap client");
+    let sf: Vec<Vec<f64>> = (0..4).map(|i| start_pool[i].clone()).collect();
+    let ef: Vec<Vec<f64>> = (0..4).map(|i| end_pool[i].clone()).collect();
+    let edges: Vec<(u32, u32)> = (0..8).map(|i| ((i % 4) as u32, ((i + 1) % 4) as u32)).collect();
+    let mut warm = Vec::new();
+    for _ in 0..20 {
+        let t = Timer::start();
+        let reply = client.predict(&sf, &ef, &edges, None).expect("transport");
+        reply.result.expect("warm request scored");
+        warm.push(t.elapsed_secs());
+    }
+    warm.sort_by(f64::total_cmp);
+    let warm_p50 = percentile(&warm, 0.50);
+
+    let mut cold_firsts = Vec::new();
+    for _ in 0..swaps {
+        let generation = server
+            .swap_model(TrainedModel::from_dual(model.clone(), 2f64.powi(-4)))
+            .expect("hot swap");
+        let t = Timer::start();
+        let reply = client.predict(&sf, &ef, &edges, None).expect("transport");
+        let scores = reply.result.expect("post-swap request scored");
+        assert_eq!(scores.len(), 8);
+        assert_eq!(reply.generation, generation, "first reply already on the new generation");
+        cold_firsts.push(t.elapsed_secs());
+        // Re-warm so the next swap measures from steady state again.
+        for _ in 0..5 {
+            client.predict(&sf, &ef, &edges, None).expect("transport").result.expect("rewarm");
+        }
+    }
+    cold_firsts.sort_by(f64::total_cmp);
+    let cold_mean = cold_firsts.iter().sum::<f64>() / cold_firsts.len().max(1) as f64;
+    let cold_max = cold_firsts.last().copied().unwrap_or(0.0);
+    println!(
+        "hot swap x{swaps}: warm p50 {}, cold first mean {} max {}",
+        fmt_secs(warm_p50),
+        fmt_secs(cold_mean),
+        fmt_secs(cold_max)
+    );
+    let swap_section = Json::obj(vec![
+        ("bench", Json::from("bench_net")),
+        ("full", Json::from(full)),
+        ("swaps", Json::from(swaps)),
+        ("warm_p50_secs", Json::from(warm_p50)),
+        ("cold_first_mean_secs", Json::from(cold_mean)),
+        ("cold_first_max_secs", Json::from(cold_max)),
+    ]);
+    match update_json_file(&out, "swap", swap_section) {
+        Ok(()) => println!("wrote warm-vs-cold swap results to {}", out.display()),
+        Err(err) => eprintln!("failed to write {}: {err}", out.display()),
+    }
+
+    let ns = net.stats();
+    println!(
+        "wire: {} connections, {} lines, {} replies ({} errors)",
+        ns.connections.load(Ordering::Relaxed),
+        ns.lines.load(Ordering::Relaxed),
+        ns.replies.load(Ordering::Relaxed),
+        ns.wire_errors.load(Ordering::Relaxed),
+    );
+    net.shutdown();
+    if let Ok(server) = Arc::try_unwrap(server) {
+        server.shutdown();
+    }
+    println!("bench_net done");
+}

@@ -1,17 +1,19 @@
 //! The fluent [`Learner`] builder and the [`Estimator`] trait — one
 //! training entry point for every model family in the crate.
 //!
-//! ```no_run
+//! ```
 //! use kronvt::api::{Compute, Learner};
 //! use kronvt::data::checkerboard::CheckerboardConfig;
 //! use kronvt::gvt::PairwiseKernelKind;
 //! # let data = CheckerboardConfig { m: 40, q: 40, density: 0.25, noise: 0.2, feature_range: 8.0, seed: 1 }.generate();
 //! let model = Learner::ridge()
 //!     .lambda(1e-2)
+//!     .iterations(50)
 //!     .pairwise(PairwiseKernelKind::Kronecker)
-//!     .compute(Compute::threads(4))
+//!     .compute(Compute::threads(2))
 //!     .fit(&data)
 //!     .unwrap();
+//! assert_eq!(model.predict(&data).len(), data.n_edges());
 //! ```
 
 use super::{Compute, TrainedModel};

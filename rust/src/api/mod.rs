@@ -14,16 +14,20 @@
 //! * [`Estimator`] + [`Learner`] — the uniform trainer interface and its
 //!   fluent builder:
 //!
-//!   ```no_run
+//!   ```
 //!   # use kronvt::api::{Compute, Learner};
 //!   # use kronvt::gvt::PairwiseKernelKind;
-//!   # use kronvt::data::checkerboard::CheckerboardConfig;
-//!   # let data = CheckerboardConfig { m: 30, q: 30, density: 0.25, noise: 0.2, feature_range: 8.0, seed: 1 }.generate();
+//!   # use kronvt::data::checkerboard::HomogeneousConfig;
+//!   # // Symmetric pairwise kernels need a homogeneous graph: both edge
+//!   # // roles index one shared vertex set.
+//!   # let data = HomogeneousConfig { vertices: 60, density: 0.25, noise: 0.2, feature_range: 100.0, seed: 1 }.generate();
 //!   let model = Learner::ridge()
 //!       .lambda(1e-2)
+//!       .iterations(50)
 //!       .pairwise(PairwiseKernelKind::SymmetricKron)
-//!       .compute(Compute::threads(4))
+//!       .compute(Compute::threads(2))
 //!       .fit(&data)?;
+//!   # assert!(model.as_dual().is_some());
 //!   # Ok::<(), String>(())
 //!   ```
 //!

@@ -40,6 +40,26 @@ pub(crate) enum ModelInner {
 /// [`TrainedModel::load`]) with **bitwise-identical** predictions after
 /// reload — every `f64` (duals, features, kernel hyperparameters) is
 /// serialized with exact shortest-round-trip encoding.
+///
+/// ```
+/// use kronvt::api::{Compute, Learner, TrainedModel};
+/// use kronvt::data::checkerboard::CheckerboardConfig;
+///
+/// let data = CheckerboardConfig { m: 30, q: 30, density: 0.25, noise: 0.2, feature_range: 8.0, seed: 3 }
+///     .generate();
+/// let model = Learner::ridge()
+///     .lambda(1e-2)
+///     .iterations(50)
+///     .compute(Compute::serial())
+///     .fit(&data)
+///     .unwrap();
+///
+/// let path = std::env::temp_dir().join(format!("kronvt_trained_doc_{}.json", std::process::id()));
+/// model.save(&path).unwrap();
+/// let loaded = TrainedModel::load(&path).unwrap();
+/// std::fs::remove_file(&path).ok();
+/// assert_eq!(loaded.predict(&data), model.predict(&data)); // bitwise
+/// ```
 #[derive(Debug, Clone)]
 pub struct TrainedModel {
     pub(crate) inner: ModelInner,

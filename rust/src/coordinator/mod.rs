@@ -1,20 +1,37 @@
 //! Layer-3 coordinator: routing between the native GVT loops and the PJRT
 //! dense path, a batched + cached + sharded + fault-tolerant zero-shot
 //! prediction server (typed errors, deadlines, supervised workers,
-//! zero-downtime hot swap), the deterministic fault-injection harness that
-//! proves those guarantees, and the training-job orchestrator behind the
-//! CLI.
+//! zero-downtime hot swap), a TCP/JSON-lines network front-end with a
+//! vertex-affine shard router on top, the deterministic fault-injection
+//! harness that proves those guarantees, and the training-job orchestrator
+//! behind the CLI.
+//!
+//! The serving stack, bottom to top (dataflow in `docs/ARCHITECTURE.md`,
+//! wire grammar in `docs/SERVING.md`):
+//!
+//! 1. [`server::PredictServer`] — merger + supervised scoring pool over one
+//!    hot-swappable [`PredictContext`](crate::model::PredictContext);
+//! 2. [`net::NetServer`] — newline-delimited JSON over TCP, one acceptor +
+//!    per-connection reader/writer threads, every [`PredictError`] mapped
+//!    to a wire error code;
+//! 3. [`shard::ShardRouter`] — rendezvous-hash routing by start-vertex
+//!    content across N backends, scatter/merge, failure ejection +
+//!    re-probe.
 
 pub mod faults;
 pub mod jobs;
+pub mod net;
 pub mod router;
 pub mod server;
+pub mod shard;
 
 pub use faults::FaultPlan;
 pub use jobs::{
     run_cv_jobs, run_cv_path_jobs, CvJobResult, CvPathJobResult, RespawnPolicy, WorkerPool,
 };
+pub use net::{NetClient, NetServer, NetServerConfig, NetStats};
 pub use router::{Route, Router, RouterConfig};
 pub use server::{
     PredictError, PredictReply, PredictRequest, PredictServer, ServerConfig, ServerStats,
 };
+pub use shard::{LocalShard, NetShard, RouterStats, ShardBackend, ShardRouter, ShardRouterConfig};

@@ -1,0 +1,962 @@
+//! TCP front-end for the prediction server: a newline-delimited JSON
+//! protocol over `std::net` — zero dependencies, like everything else in
+//! the crate.
+//!
+//! One request per line, one response per line, in request order per
+//! connection (clients may pipeline). The full wire grammar, every error
+//! code, and a copy-pasteable `nc` session live in `docs/SERVING.md`; the
+//! short form:
+//!
+//! ```text
+//! → {"id": 1, "rows": [[...d floats...], ...], "cols": [[...r floats...], ...],
+//!    "edges": [[0, 0], [1, 2]], "deadline_ms": 250}
+//! ← {"generation": 0, "id": 1, "scores": [0.41, -1.73]}
+//! ← {"error": {"code": "deadline_exceeded", "message": "...", "retryable": true},
+//!    "generation": 0, "id": 2}
+//! ```
+//!
+//! The design goal is that PR 8's robustness semantics **survive
+//! serialization**: every [`PredictError`] variant maps onto a wire error
+//! code (and back, in [`NetClient`]), deadlines ride the request and are
+//! enforced by the same merge-time/score-time checks as in-process
+//! traffic, and replies carry the scoring generation so hot swaps stay
+//! observable across the wire. Scores are serialized with the shortest
+//! round-trip `f64` encoding ([`Json::dump`]), so a remote client reads
+//! back **bitwise-identical** values to an in-process
+//! [`PredictServer::predict_blocking`] call.
+//!
+//! Threading: one acceptor thread; per connection, a reader thread (parse
+//! + submit into the server's bounded queue) and a writer thread (drain
+//! replies FIFO). Admission uses [`PredictServer::try_submit`], so a
+//! saturated queue answers `overloaded` on the wire instead of stalling
+//! the reader. Shutdown is a graceful drain: readers stop taking new
+//! lines, writers flush every pending reply, the acceptor joins them all.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::server::{wait_reply, PredictError, PredictReply, PredictRequest, PredictServer};
+use crate::util::json::Json;
+
+/// How often blocked reads re-check the stop flag. Bounds shutdown drain
+/// latency without burning CPU on idle connections.
+const POLL_TICK: Duration = Duration::from_millis(50);
+
+/// Extra client-side wait past a request's deadline for the typed
+/// `deadline_exceeded` reply to cross the wire (mirrors the in-process
+/// reply-drain slack).
+const CLIENT_DRAIN_SLACK_MS: u64 = 5_000;
+
+/// Network front-end configuration.
+#[derive(Debug, Clone)]
+pub struct NetServerConfig {
+    /// Bind address, e.g. `"127.0.0.1:7878"`. Port `0` asks the OS for a
+    /// free port — read the result from [`NetServer::local_addr`].
+    pub addr: String,
+    /// Connection cap: further connects are answered with one `overloaded`
+    /// error line and closed.
+    pub max_connections: usize,
+    /// Idle timeout per connection: a connection that sends no bytes for
+    /// this long is closed. `0` disables.
+    pub idle_timeout_ms: u64,
+    /// Per-write timeout on response lines; a stuck peer loses its
+    /// connection instead of wedging a writer thread.
+    pub write_timeout_ms: u64,
+    /// Request-line size cap in bytes. An oversized line is answered with
+    /// a `bad_request` error and discarded through its terminating
+    /// newline; the connection survives.
+    pub max_line_bytes: usize,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_connections: 256,
+            idle_timeout_ms: 300_000,
+            write_timeout_ms: 10_000,
+            max_line_bytes: 4 << 20,
+        }
+    }
+}
+
+/// Wire-level counters, all monotone except `open_connections`.
+#[derive(Debug, Default)]
+pub struct NetStats {
+    /// Connections accepted (excluding capped ones).
+    pub connections: AtomicUsize,
+    /// Currently open connections.
+    pub open_connections: AtomicUsize,
+    /// Connects refused by the connection cap.
+    pub rejected_connections: AtomicUsize,
+    /// Complete request lines received (well- or ill-formed).
+    pub lines: AtomicUsize,
+    /// Lines that failed at the wire layer: malformed JSON, invalid UTF-8,
+    /// oversized, truncated by a mid-line disconnect.
+    pub bad_lines: AtomicUsize,
+    /// Response lines written (scores and errors alike).
+    pub replies: AtomicUsize,
+    /// Responses that carried an error object.
+    pub wire_errors: AtomicUsize,
+}
+
+/// The TCP listener fronting one [`PredictServer`]. Owns the acceptor
+/// thread; dropping (or [`NetServer::shutdown`]) stops accepting, drains
+/// every in-flight reply, and joins all connection threads. The fronted
+/// `PredictServer` is shared via `Arc`, so the owner can keep calling
+/// [`PredictServer::swap_model`] / [`PredictServer::stats`] while the
+/// listener serves.
+pub struct NetServer {
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    stats: Arc<NetStats>,
+}
+
+impl NetServer {
+    /// Bind and start serving. Fails on bind errors (address in use,
+    /// permission) with the address in the message.
+    pub fn start(server: Arc<PredictServer>, cfg: NetServerConfig) -> Result<NetServer, String> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| format!("cannot bind {}: {e}", cfg.addr))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| format!("cannot read bound address: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("cannot set listener non-blocking: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(NetStats::default());
+        let acceptor = {
+            let stop = stop.clone();
+            let stats = stats.clone();
+            std::thread::Builder::new()
+                .name("net-acceptor".into())
+                .spawn(move || accept_loop(listener, server, cfg, stop, stats))
+                .map_err(|e| format!("cannot spawn acceptor: {e}"))?
+        };
+        Ok(NetServer { local, stop, acceptor: Some(acceptor), stats })
+    }
+
+    /// The bound address (resolves port `0` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Wire-level counters.
+    pub fn stats(&self) -> &NetStats {
+        &self.stats
+    }
+
+    /// Graceful drain: stop accepting, let every connection flush its
+    /// pending replies, join all threads. The fronted [`PredictServer`] is
+    /// left running — shut it down after this returns.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    server: Arc<PredictServer>,
+    cfg: NetServerConfig,
+    stop: Arc<AtomicBool>,
+    stats: Arc<NetStats>,
+) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                conns.retain(|h| !h.is_finished());
+                if stats.open_connections.load(Ordering::SeqCst) >= cfg.max_connections {
+                    stats.rejected_connections.fetch_add(1, Ordering::Relaxed);
+                    refuse_connection(stream, cfg.write_timeout_ms);
+                    continue;
+                }
+                stats.connections.fetch_add(1, Ordering::Relaxed);
+                stats.open_connections.fetch_add(1, Ordering::SeqCst);
+                let server = server.clone();
+                let cfg = cfg.clone();
+                let stop = stop.clone();
+                let stats = stats.clone();
+                let spawned = std::thread::Builder::new().name("net-conn".into()).spawn(
+                    move || {
+                        serve_connection(stream, &server, &cfg, &stop, &stats);
+                        stats.open_connections.fetch_sub(1, Ordering::SeqCst);
+                    },
+                );
+                match spawned {
+                    Ok(h) => conns.push(h),
+                    Err(_) => {
+                        // Spawn failure: treat like a capped connection.
+                        stats.open_connections.fetch_sub(1, Ordering::SeqCst);
+                        stats.rejected_connections.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::sleep(POLL_TICK),
+            Err(_) => std::thread::sleep(POLL_TICK),
+        }
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// Answer a capped connection with a single `overloaded` line and close.
+fn refuse_connection(mut stream: TcpStream, write_timeout_ms: u64) {
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(write_timeout_ms.max(1))));
+    let line = error_response(&Json::Null, "overloaded", "connection limit reached", true, 0);
+    let _ = stream.write_all(line.as_bytes());
+    let _ = stream.write_all(b"\n");
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// What the reader hands the writer, in request order.
+enum Outgoing {
+    /// A response already built at parse time (wire errors, info replies).
+    Ready(String),
+    /// A submitted predict request: the writer waits for its reply (bounded
+    /// by the deadline plus drain slack) and serializes it.
+    Pending { id: Json, rx: Receiver<PredictReply>, deadline: Option<Instant> },
+}
+
+fn serve_connection(
+    stream: TcpStream,
+    server: &PredictServer,
+    cfg: &NetServerConfig,
+    stop: &AtomicBool,
+    stats: &Arc<NetStats>,
+) {
+    let _ = stream.set_read_timeout(Some(POLL_TICK));
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(cfg.write_timeout_ms.max(1))));
+    let (out_tx, out_rx) = channel::<Outgoing>();
+    let conn_dead = Arc::new(AtomicBool::new(false));
+    let writer = {
+        let stream = stream.try_clone();
+        let conn_dead = conn_dead.clone();
+        let stats = stats.clone();
+        match stream {
+            Ok(s) => std::thread::Builder::new()
+                .name("net-writer".into())
+                .spawn(move || writer_loop(s, out_rx, conn_dead, stats))
+                .ok(),
+            Err(_) => None,
+        }
+    };
+    if writer.is_some() {
+        reader_loop(&stream, server, cfg, stop, stats, &out_tx, &conn_dead);
+    }
+    // Dropping the sender ends the writer after it drains pending replies.
+    drop(out_tx);
+    if let Some(h) = writer {
+        let _ = h.join();
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+fn writer_loop(
+    mut stream: TcpStream,
+    rx: Receiver<Outgoing>,
+    conn_dead: Arc<AtomicBool>,
+    stats: Arc<NetStats>,
+) {
+    while let Ok(item) = rx.recv() {
+        let line = match item {
+            Outgoing::Ready(line) => line,
+            Outgoing::Pending { id, rx, deadline } => {
+                let reply = wait_reply(&rx, deadline).unwrap_or_else(|e| PredictReply {
+                    result: Err(e),
+                    generation: 0,
+                });
+                if reply.result.is_err() {
+                    stats.wire_errors.fetch_add(1, Ordering::Relaxed);
+                }
+                reply_response(&id, &reply)
+            }
+        };
+        if conn_dead.load(Ordering::SeqCst) {
+            continue; // peer is gone; keep draining so reply channels close cleanly
+        }
+        if stream.write_all(line.as_bytes()).is_err()
+            || stream.write_all(b"\n").is_err()
+            || stream.flush().is_err()
+        {
+            conn_dead.store(true, Ordering::SeqCst);
+        }
+    }
+}
+
+fn reader_loop(
+    stream: &TcpStream,
+    server: &PredictServer,
+    cfg: &NetServerConfig,
+    stop: &AtomicBool,
+    stats: &NetStats,
+    out: &Sender<Outgoing>,
+    conn_dead: &AtomicBool,
+) {
+    let mut rd = LineReader::new(stream, cfg.max_line_bytes, cfg.idle_timeout_ms);
+    loop {
+        if conn_dead.load(Ordering::SeqCst) {
+            return;
+        }
+        let raw = match rd.next_line(stop) {
+            LineOutcome::Line(raw) => raw,
+            LineOutcome::TooLong => {
+                stats.lines.fetch_add(1, Ordering::Relaxed);
+                stats.bad_lines.fetch_add(1, Ordering::Relaxed);
+                send_error(out, stats, &Json::Null, "bad_request", "request line too long", server);
+                continue;
+            }
+            LineOutcome::TruncatedEof => {
+                // Mid-line disconnect: nothing to answer (the peer is gone),
+                // but the protocol violation is counted.
+                stats.bad_lines.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            LineOutcome::Eof | LineOutcome::Stopped | LineOutcome::IdleTimeout => return,
+        };
+        stats.lines.fetch_add(1, Ordering::Relaxed);
+        let text = match String::from_utf8(raw) {
+            Ok(t) => t,
+            Err(_) => {
+                stats.bad_lines.fetch_add(1, Ordering::Relaxed);
+                send_error(out, stats, &Json::Null, "bad_request", "request is not UTF-8", server);
+                continue;
+            }
+        };
+        if text.trim().is_empty() {
+            continue; // blank keep-alive lines are ignored
+        }
+        let parsed = match Json::parse(&text) {
+            Ok(v) => v,
+            Err(e) => {
+                stats.bad_lines.fetch_add(1, Ordering::Relaxed);
+                send_error(
+                    out,
+                    stats,
+                    &Json::Null,
+                    "bad_request",
+                    &format!("malformed JSON: {e}"),
+                    server,
+                );
+                continue;
+            }
+        };
+        handle_request(parsed, server, out, stats);
+    }
+}
+
+/// Decode one parsed request object, submit or answer it, and enqueue the
+/// (eventual) response — always exactly one response per line, in order.
+fn handle_request(v: Json, server: &PredictServer, out: &Sender<Outgoing>, stats: &NetStats) {
+    let id = v.get("id").cloned().unwrap_or(Json::Null);
+    if v.as_obj().is_none() {
+        stats.bad_lines.fetch_add(1, Ordering::Relaxed);
+        send_error(out, stats, &Json::Null, "bad_request", "request must be a JSON object", server);
+        return;
+    }
+    match v.get("op").map(|o| o.as_str()) {
+        None | Some(Some("predict")) => {}
+        Some(Some("info")) => {
+            let (d, r) = server.feature_dims();
+            let generation = server.stats().generation.load(Ordering::Relaxed);
+            let body = Json::obj(vec![
+                ("generation", Json::from(generation)),
+                ("id", id.clone()),
+                (
+                    "info",
+                    Json::obj(vec![
+                        ("dims", Json::Arr(vec![Json::from(d), Json::from(r)])),
+                        ("generation", Json::from(generation)),
+                    ]),
+                ),
+            ]);
+            stats.replies.fetch_add(1, Ordering::Relaxed);
+            let _ = out.send(Outgoing::Ready(dump_or_internal(&id, body, generation)));
+            return;
+        }
+        Some(Some(other)) => {
+            let msg = format!("unknown op {other:?} (expected \"predict\" or \"info\")");
+            send_error(out, stats, &id, "invalid_request", &msg, server);
+            return;
+        }
+        Some(None) => {
+            send_error(out, stats, &id, "invalid_request", "\"op\" must be a string", server);
+            return;
+        }
+    }
+    let (rows, cols, edges, deadline_ms) = match decode_predict(&v) {
+        Ok(parts) => parts,
+        Err(msg) => {
+            send_error(out, stats, &id, "invalid_request", &msg, server);
+            return;
+        }
+    };
+    let (reply_tx, reply_rx) = channel();
+    let mut req = PredictRequest::new(rows, cols, edges, reply_tx);
+    match deadline_ms {
+        Some(ms) => req = req.with_deadline_ms(ms),
+        None if server.request_timeout_ms() > 0 => {
+            req = req.with_deadline_ms(server.request_timeout_ms());
+        }
+        None => {}
+    }
+    let deadline = req.deadline;
+    stats.replies.fetch_add(1, Ordering::Relaxed);
+    // Enqueue the pending slot BEFORE submission so responses keep request
+    // order; if admission refuses the request, `try_submit` has already
+    // answered the reply channel and the writer serializes the typed error.
+    let _ = out.send(Outgoing::Pending { id, rx: reply_rx, deadline });
+    let _ = server.try_submit(req);
+}
+
+/// Pull `rows` / `cols` / `edges` / `deadline_ms` out of a request object
+/// with precise error messages. Unknown fields are ignored (forward
+/// compatibility); semantic validation against the model's feature dims is
+/// the server's job and arrives as `invalid_request` from the merger.
+#[allow(clippy::type_complexity)]
+fn decode_predict(
+    v: &Json,
+) -> Result<(Vec<Vec<f64>>, Vec<Vec<f64>>, Vec<(u32, u32)>, Option<u64>), String> {
+    let feature_rows = |key: &str| -> Result<Vec<Vec<f64>>, String> {
+        let arr = v
+            .get(key)
+            .ok_or_else(|| format!("missing field {key:?}"))?
+            .as_arr()
+            .ok_or_else(|| format!("{key:?} must be an array of feature rows"))?;
+        arr.iter()
+            .enumerate()
+            .map(|(i, row)| {
+                let row =
+                    row.as_arr().ok_or_else(|| format!("{key}[{i}] must be a number array"))?;
+                row.iter()
+                    .map(|x| x.as_f64().ok_or_else(|| format!("{key}[{i}] holds a non-number")))
+                    .collect()
+            })
+            .collect()
+    };
+    let rows = feature_rows("rows")?;
+    let cols = feature_rows("cols")?;
+    let edges = v
+        .get("edges")
+        .ok_or("missing field \"edges\"")?
+        .as_arr()
+        .ok_or("\"edges\" must be an array of [start, end] pairs")?
+        .iter()
+        .enumerate()
+        .map(|(i, pair)| {
+            let pair = pair.as_arr().filter(|p| p.len() == 2).ok_or_else(|| {
+                format!("edges[{i}] must be a [start, end] pair")
+            })?;
+            let idx = |side: usize| -> Result<u32, String> {
+                pair[side]
+                    .as_u64()
+                    .and_then(|n| u32::try_from(n).ok())
+                    .ok_or_else(|| format!("edges[{i}] index out of range"))
+            };
+            Ok((idx(0)?, idx(1)?))
+        })
+        .collect::<Result<Vec<(u32, u32)>, String>>()?;
+    let deadline_ms = match v.get("deadline_ms") {
+        None | Some(Json::Null) => None,
+        Some(n) => Some(n.as_u64().ok_or("\"deadline_ms\" must be a non-negative integer")?),
+    };
+    Ok((rows, cols, edges, deadline_ms))
+}
+
+fn send_error(
+    out: &Sender<Outgoing>,
+    stats: &NetStats,
+    id: &Json,
+    code: &str,
+    message: &str,
+    server: &PredictServer,
+) {
+    let generation = server.stats().generation.load(Ordering::Relaxed);
+    stats.replies.fetch_add(1, Ordering::Relaxed);
+    stats.wire_errors.fetch_add(1, Ordering::Relaxed);
+    let _ = out.send(Outgoing::Ready(error_response(id, code, message, false, generation)));
+}
+
+/// Serialize a response body, downgrading non-encodable payloads (scores
+/// containing NaN/inf) to a typed error line rather than dropping the
+/// response and desynchronizing the stream.
+fn dump_or_internal(id: &Json, body: Json, generation: u64) -> String {
+    body.dump().unwrap_or_else(|e| {
+        error_response(
+            id,
+            "invalid_request",
+            &format!("response not JSON-encodable: {e}"),
+            false,
+            generation,
+        )
+    })
+}
+
+/// The wire error code for a typed [`PredictError`].
+pub fn wire_code(e: &PredictError) -> &'static str {
+    match e {
+        PredictError::InvalidRequest(_) => "invalid_request",
+        PredictError::DeadlineExceeded => "deadline_exceeded",
+        PredictError::Overloaded => "overloaded",
+        PredictError::ShuttingDown => "shutting_down",
+    }
+}
+
+/// Whether a retry against the same (or another) server can succeed.
+/// Matches the retryability documented on [`PredictError`]: overload and
+/// shutdown are transient, a deadline can be retried with a fresh budget,
+/// an invalid request never heals on its own.
+pub fn wire_retryable(e: &PredictError) -> bool {
+    !matches!(e, PredictError::InvalidRequest(_))
+}
+
+/// Map a wire error code back to the typed error ([`NetClient`] uses this
+/// so remote callers see the same `Result<_, PredictError>` surface as
+/// in-process ones). `bad_request` — the wire-only code for lines that
+/// never parsed far enough to have semantics — maps to `InvalidRequest`.
+pub fn error_from_wire(code: &str, message: &str) -> Option<PredictError> {
+    match code {
+        "invalid_request" | "bad_request" => {
+            Some(PredictError::InvalidRequest(message.to_string()))
+        }
+        "deadline_exceeded" => Some(PredictError::DeadlineExceeded),
+        "overloaded" => Some(PredictError::Overloaded),
+        "shutting_down" => Some(PredictError::ShuttingDown),
+        _ => None,
+    }
+}
+
+fn error_response(id: &Json, code: &str, message: &str, retryable: bool, generation: u64) -> String {
+    let body = Json::obj(vec![
+        (
+            "error",
+            Json::obj(vec![
+                ("code", Json::from(code)),
+                ("message", Json::from(message)),
+                ("retryable", Json::from(retryable)),
+            ]),
+        ),
+        ("generation", Json::from(generation)),
+        ("id", id.clone()),
+    ]);
+    body.dump().expect("error responses contain no non-finite numbers")
+}
+
+/// Serialize a [`PredictReply`] (scores or typed error) as a response line.
+fn reply_response(id: &Json, reply: &PredictReply) -> String {
+    match &reply.result {
+        Ok(scores) => {
+            let body = Json::obj(vec![
+                ("generation", Json::from(reply.generation)),
+                ("id", id.clone()),
+                ("scores", Json::num_arr(scores)),
+            ]);
+            dump_or_internal(id, body, reply.generation)
+        }
+        Err(e) => {
+            error_response(id, wire_code(e), &e.to_string(), wire_retryable(e), reply.generation)
+        }
+    }
+}
+
+/// Build a predict request line body (shared by [`NetClient`], the shard
+/// router, and `bench_net`).
+pub fn encode_request(
+    id: u64,
+    rows: &[Vec<f64>],
+    cols: &[Vec<f64>],
+    edges: &[(u32, u32)],
+    deadline_ms: Option<u64>,
+) -> Json {
+    let features = |rows: &[Vec<f64>]| {
+        Json::Arr(rows.iter().map(|r| Json::num_arr(r)).collect())
+    };
+    let mut pairs = vec![
+        ("cols", features(cols)),
+        (
+            "edges",
+            Json::Arr(
+                edges
+                    .iter()
+                    .map(|&(s, e)| {
+                        Json::Arr(vec![Json::from(s as usize), Json::from(e as usize)])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("id", Json::from(id)),
+        ("rows", features(rows)),
+    ];
+    if let Some(ms) = deadline_ms {
+        pairs.push(("deadline_ms", Json::from(ms)));
+    }
+    Json::obj(pairs)
+}
+
+/// Parse a response line into the typed reply. Transport-shaped problems
+/// (unknown error code, missing fields) come back as `Err(String)` —
+/// distinct from a typed [`PredictError`], which means the *server*
+/// answered.
+pub fn decode_reply(v: &Json) -> Result<PredictReply, String> {
+    let generation = v.get("generation").and_then(Json::as_u64).unwrap_or(0);
+    if let Some(scores) = v.get("scores") {
+        let scores = scores
+            .as_arr()
+            .ok_or("\"scores\" must be an array")?
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| "non-number score".to_string()))
+            .collect::<Result<Vec<f64>, String>>()?;
+        return Ok(PredictReply { result: Ok(scores), generation });
+    }
+    if let Some(err) = v.get("error") {
+        let code = err.get("code").and_then(Json::as_str).ok_or("error without code")?;
+        let message = err.get("message").and_then(Json::as_str).unwrap_or("");
+        let typed = error_from_wire(code, message)
+            .ok_or_else(|| format!("unknown wire error code {code:?}"))?;
+        return Ok(PredictReply { result: Err(typed), generation });
+    }
+    Err("response carries neither scores nor error".into())
+}
+
+/// A blocking client for the line protocol: connect, pipeline requests,
+/// read responses in order. Used by the CLI demo traffic, the shard
+/// router's remote backends, the loopback tests, and `bench_net`.
+pub struct NetClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    next_id: u64,
+    /// Baseline receive timeout for requests without a deadline.
+    pub recv_timeout_ms: u64,
+}
+
+impl NetClient {
+    /// Connect with a default 30 s receive timeout.
+    pub fn connect(addr: &str) -> Result<NetClient, String> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| format!("cannot connect to {addr}: {e}"))?;
+        stream
+            .set_read_timeout(Some(POLL_TICK))
+            .map_err(|e| format!("cannot set read timeout: {e}"))?;
+        stream
+            .set_write_timeout(Some(Duration::from_millis(10_000)))
+            .map_err(|e| format!("cannot set write timeout: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        Ok(NetClient { stream, buf: Vec::new(), next_id: 1, recv_timeout_ms: 30_000 })
+    }
+
+    /// Score a batch over the wire. Returns the typed reply (scores or
+    /// [`PredictError`]) on a protocol-level success; `Err(String)` means
+    /// transport failure — connection refused/reset, response timeout, or
+    /// an unparseable response.
+    pub fn predict(
+        &mut self,
+        rows: &[Vec<f64>],
+        cols: &[Vec<f64>],
+        edges: &[(u32, u32)],
+        deadline_ms: Option<u64>,
+    ) -> Result<PredictReply, String> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let line = encode_request(id, rows, cols, edges, deadline_ms)
+            .dump()
+            .map_err(|e| format!("request not JSON-encodable: {e}"))?;
+        self.send_raw(&line)?;
+        let wait = deadline_ms.map_or(self.recv_timeout_ms, |ms| ms + CLIENT_DRAIN_SLACK_MS);
+        let v = self.recv_json(wait)?;
+        let echoed = v.get("id").and_then(Json::as_u64);
+        if echoed != Some(id) {
+            return Err(format!("response id {echoed:?} does not echo request id {id}"));
+        }
+        decode_reply(&v)
+    }
+
+    /// Query the server's feature dims and current generation (`op: info`).
+    pub fn info(&mut self) -> Result<((usize, usize), u64), String> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let line = Json::obj(vec![("id", Json::from(id)), ("op", Json::from("info"))])
+            .dump()
+            .expect("info request is finite");
+        self.send_raw(&line)?;
+        let v = self.recv_json(self.recv_timeout_ms)?;
+        let info = v.get("info").ok_or_else(|| {
+            v.get("error")
+                .and_then(|e| e.get("message"))
+                .and_then(Json::as_str)
+                .map_or("response carries no info".to_string(), |m| format!("info refused: {m}"))
+        })?;
+        let dims = info.get("dims").and_then(Json::as_arr).ok_or("info without dims")?;
+        let d = dims.first().and_then(Json::as_usize).ok_or("bad dims")?;
+        let r = dims.get(1).and_then(Json::as_usize).ok_or("bad dims")?;
+        let generation = info.get("generation").and_then(Json::as_u64).unwrap_or(0);
+        Ok(((d, r), generation))
+    }
+
+    /// Write one raw line (newline appended). Public so protocol tests can
+    /// send deliberately malformed traffic.
+    pub fn send_raw(&mut self, line: &str) -> Result<(), String> {
+        self.stream
+            .write_all(line.as_bytes())
+            .and_then(|_| self.stream.write_all(b"\n"))
+            .and_then(|_| self.stream.flush())
+            .map_err(|e| format!("send failed: {e}"))
+    }
+
+    /// Write raw bytes verbatim (no newline appended) — for tests that
+    /// need invalid UTF-8 or truncated lines on the wire.
+    pub fn send_bytes(&mut self, bytes: &[u8]) -> Result<(), String> {
+        self.stream
+            .write_all(bytes)
+            .and_then(|_| self.stream.flush())
+            .map_err(|e| format!("send failed: {e}"))
+    }
+
+    /// Read one response line within `timeout_ms` and parse it as JSON.
+    pub fn recv_json(&mut self, timeout_ms: u64) -> Result<Json, String> {
+        let line = self.recv_line(timeout_ms)?;
+        Json::parse(&line).map_err(|e| format!("unparseable response: {e}"))
+    }
+
+    /// Read one raw response line within `timeout_ms`.
+    pub fn recv_line(&mut self, timeout_ms: u64) -> Result<String, String> {
+        let deadline = Instant::now() + Duration::from_millis(timeout_ms);
+        loop {
+            if let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+                let mut line: Vec<u8> = self.buf.drain(..=pos).collect();
+                line.pop(); // the newline
+                return String::from_utf8(line).map_err(|_| "response is not UTF-8".into());
+            }
+            if Instant::now() >= deadline {
+                return Err("timed out waiting for response".into());
+            }
+            let mut chunk = [0u8; 16 * 1024];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Err("connection closed by server".into()),
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {}
+                Err(e) => return Err(format!("receive failed: {e}")),
+            }
+        }
+    }
+}
+
+/// What one blocking line read produced.
+enum LineOutcome {
+    /// A complete line (newline stripped), within the size cap.
+    Line(Vec<u8>),
+    /// A line exceeded the cap; it has been discarded through its newline.
+    TooLong,
+    /// Clean EOF at a line boundary.
+    Eof,
+    /// EOF with unterminated bytes pending — a truncated request.
+    TruncatedEof,
+    /// The server's stop flag was observed.
+    Stopped,
+    /// No bytes for the configured idle timeout.
+    IdleTimeout,
+}
+
+/// Incremental line reader over a non-blocking-ish socket (short read
+/// timeouts as poll ticks): accumulates bytes, hands out newline-delimited
+/// lines, enforces the size cap by switching into discard mode until the
+/// offending line's newline passes.
+struct LineReader<'a> {
+    stream: &'a TcpStream,
+    buf: Vec<u8>,
+    max_line: usize,
+    idle_timeout: Option<Duration>,
+    last_activity: Instant,
+    discarding: bool,
+}
+
+impl<'a> LineReader<'a> {
+    fn new(stream: &'a TcpStream, max_line: usize, idle_timeout_ms: u64) -> LineReader<'a> {
+        LineReader {
+            stream,
+            buf: Vec::new(),
+            max_line,
+            idle_timeout: (idle_timeout_ms > 0).then(|| Duration::from_millis(idle_timeout_ms)),
+            last_activity: Instant::now(),
+            discarding: false,
+        }
+    }
+
+    fn next_line(&mut self, stop: &AtomicBool) -> LineOutcome {
+        loop {
+            // Drain complete lines already buffered before touching the
+            // socket again.
+            if let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+                let mut line: Vec<u8> = self.buf.drain(..=pos).collect();
+                line.pop();
+                if self.discarding {
+                    self.discarding = false;
+                    return LineOutcome::TooLong;
+                }
+                if line.len() > self.max_line {
+                    return LineOutcome::TooLong;
+                }
+                return LineOutcome::Line(line);
+            }
+            if self.buf.len() > self.max_line && !self.discarding {
+                // Stop buffering a line that can never be served; remember
+                // to report it once its newline (or EOF) arrives.
+                self.discarding = true;
+                self.buf.clear();
+            } else if self.discarding {
+                self.buf.clear();
+            }
+            if stop.load(Ordering::SeqCst) {
+                return LineOutcome::Stopped;
+            }
+            if let Some(limit) = self.idle_timeout {
+                if self.last_activity.elapsed() >= limit {
+                    return LineOutcome::IdleTimeout;
+                }
+            }
+            let mut chunk = [0u8; 16 * 1024];
+            let mut sock = self.stream; // `Read` is implemented for `&TcpStream`
+            match sock.read(&mut chunk) {
+                Ok(0) => {
+                    return if self.buf.is_empty() && !self.discarding {
+                        LineOutcome::Eof
+                    } else {
+                        LineOutcome::TruncatedEof
+                    };
+                }
+                Ok(n) => {
+                    self.buf.extend_from_slice(&chunk[..n]);
+                    self.last_activity = Instant::now();
+                }
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {}
+                Err(_) => return LineOutcome::TruncatedEof,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_codes_round_trip_every_variant() {
+        let variants = [
+            PredictError::InvalidRequest("dims".into()),
+            PredictError::DeadlineExceeded,
+            PredictError::Overloaded,
+            PredictError::ShuttingDown,
+        ];
+        for e in variants {
+            let code = wire_code(&e);
+            let back = error_from_wire(code, &e.to_string()).expect("known code");
+            match (&e, &back) {
+                (PredictError::InvalidRequest(_), PredictError::InvalidRequest(_)) => {}
+                _ => assert_eq!(&e, &back, "code {code} must round-trip"),
+            }
+        }
+        assert!(error_from_wire("no_such_code", "").is_none());
+        assert!(matches!(
+            error_from_wire("bad_request", "junk"),
+            Some(PredictError::InvalidRequest(_))
+        ));
+        assert!(!wire_retryable(&PredictError::InvalidRequest("x".into())));
+        assert!(wire_retryable(&PredictError::Overloaded));
+        assert!(wire_retryable(&PredictError::ShuttingDown));
+        assert!(wire_retryable(&PredictError::DeadlineExceeded));
+    }
+
+    #[test]
+    fn request_encoding_decodes_structurally() {
+        let rows = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let cols = vec![vec![0.5]];
+        let edges = vec![(0, 0), (1, 0)];
+        let v = encode_request(7, &rows, &cols, &edges, Some(250));
+        let (drows, dcols, dedges, dl) = decode_predict(&v).expect("round trip");
+        assert_eq!(drows, rows);
+        assert_eq!(dcols, cols);
+        assert_eq!(dedges, edges);
+        assert_eq!(dl, Some(250));
+        assert_eq!(v.get("id").and_then(Json::as_u64), Some(7));
+    }
+
+    #[test]
+    fn decode_predict_rejects_structural_garbage() {
+        let bad = [
+            r#"{"cols": [], "edges": []}"#,                                  // missing rows
+            r#"{"rows": 3, "cols": [], "edges": []}"#,                       // rows not array
+            r#"{"rows": [[1]], "cols": [["x"]], "edges": []}"#,              // non-number feature
+            r#"{"rows": [[1]], "cols": [[1]], "edges": [[0]]}"#,             // 1-ary edge
+            r#"{"rows": [[1]], "cols": [[1]], "edges": [[0, -1]]}"#,         // negative index
+            r#"{"rows": [[1]], "cols": [[1]], "edges": [[0, 4294967296]]}"#, // > u32
+            r#"{"rows": [[1]], "cols": [[1]], "edges": [[0,0]], "deadline_ms": -5}"#,
+        ];
+        for src in bad {
+            let v = Json::parse(src).unwrap();
+            assert!(decode_predict(&v).is_err(), "must reject {src}");
+        }
+        // unknown fields are ignored
+        let v = Json::parse(
+            r#"{"rows": [[1]], "cols": [[1]], "edges": [[0,0]], "future_knob": {"x": 1}}"#,
+        )
+        .unwrap();
+        assert!(decode_predict(&v).is_ok());
+    }
+
+    #[test]
+    fn reply_serialization_round_trips() {
+        let ok = PredictReply { result: Ok(vec![0.125, -3.5]), generation: 4 };
+        let line = reply_response(&Json::from(9_u64), &ok);
+        let back = decode_reply(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, ok);
+
+        let err = PredictReply { result: Err(PredictError::Overloaded), generation: 2 };
+        let line = reply_response(&Json::Null, &err);
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str), Some("overloaded"));
+        assert_eq!(
+            v.get("error").and_then(|e| e.get("retryable")),
+            Some(&Json::Bool(true))
+        );
+        let back = decode_reply(&v).unwrap();
+        assert_eq!(back.result, Err(PredictError::Overloaded));
+        assert_eq!(back.generation, 2);
+    }
+
+    #[test]
+    fn non_finite_scores_become_a_typed_error_line() {
+        let reply = PredictReply { result: Ok(vec![f64::NAN]), generation: 1 };
+        let line = reply_response(&Json::from(3_u64), &reply);
+        let v = Json::parse(&line).expect("still a valid response line");
+        assert!(v.get("scores").is_none());
+        assert_eq!(
+            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("invalid_request")
+        );
+    }
+}

@@ -494,6 +494,22 @@ impl PredictServer {
         &self.stats
     }
 
+    /// The configured default request timeout
+    /// ([`ServerConfig::request_timeout_ms`]); `0` means none. The network
+    /// front-end uses this to stamp the same default deadline the merger
+    /// would, so its reply waits stay bounded.
+    pub fn request_timeout_ms(&self) -> u64 {
+        self.request_timeout_ms
+    }
+
+    /// Feature dimensions `(d, r)` the server validates requests against —
+    /// fixed for the server's lifetime (hot swaps must match them). The
+    /// wire protocol exposes these through the `info` operation so remote
+    /// clients and load generators can shape traffic without a model file.
+    pub fn feature_dims(&self) -> (usize, usize) {
+        self.dims
+    }
+
     /// Graceful shutdown: waits for queued work to finish.
     pub fn shutdown(mut self) {
         self.stop();
@@ -520,7 +536,7 @@ impl Drop for PredictServer {
 /// shutdown) to `ShuttingDown`, and cap the wait at the deadline plus
 /// [`REPLY_DRAIN_SLACK`] when one is set — a blocking caller can never
 /// hang on a request the pipeline dropped.
-fn wait_reply(
+pub(crate) fn wait_reply(
     rx: &Receiver<PredictReply>,
     deadline: Option<Instant>,
 ) -> Result<PredictReply, PredictError> {

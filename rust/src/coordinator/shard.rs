@@ -1,0 +1,624 @@
+//! Shard routing: fan one logical prediction service out over N serving
+//! backends (remote [`NetClient`] connections or in-process servers),
+//! with vertex-affine routing, scatter/merge for batches that span
+//! shards, and per-shard health tracking.
+//!
+//! **Why vertex-affine routing.** The serving hot path is dominated by
+//! kernel rows k(x_new, X_train), and [`PredictContext`] keeps a
+//! content-keyed LRU of them. Vertex identity *is* feature content, so the
+//! router hashes each start-vertex feature row (FNV-1a over the exact
+//! `f64` bit patterns) and picks its shard by rendezvous hashing — the
+//! same vertex always lands on the same shard while that shard is
+//! healthy, keeping each shard's cache hot for its slice of the vertex
+//! universe, and shard loss only remaps the dead shard's slice.
+//!
+//! **Scatter/merge.** A batch whose edges hash to several shards is split
+//! into per-shard sub-requests (feature rows deduplicated, edge indices
+//! remapped), dispatched concurrently, and merged back into request
+//! order. Per-edge scores depend only on the model and that edge's
+//! feature rows — never on batch composition — so the merged result is
+//! **bitwise identical** to scoring the whole batch on one unsharded
+//! server with the same model.
+//!
+//! **Health.** A transport failure (connect refused, reset, response
+//! timeout) or a `shutting_down` reply counts against a shard;
+//! `eject_after` consecutive failures eject it for `probe_cooldown_ms`,
+//! after which the next batch re-probes it (half-open). Typed
+//! non-shutdown errors — invalid request, deadline, overload — mean the
+//! shard is alive and are *not* health failures. Failed sub-batches are
+//! re-routed to the surviving shards within the same call.
+//!
+//! [`PredictContext`]: crate::model::PredictContext
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::net::NetClient;
+use super::server::{PredictError, PredictReply, PredictServer};
+
+/// One serving backend the router can score a sub-batch on.
+pub trait ShardBackend: Send + Sync {
+    /// Human-readable backend name (address or label) for logs and errors.
+    fn name(&self) -> String;
+
+    /// Score a batch. `Ok` carries the server's typed reply (scores or
+    /// [`PredictError`]); `Err(String)` is a transport failure — the
+    /// backend could not be reached or did not answer.
+    fn predict(
+        &self,
+        rows: &[Vec<f64>],
+        cols: &[Vec<f64>],
+        edges: &[(u32, u32)],
+        deadline_ms: Option<u64>,
+    ) -> Result<PredictReply, String>;
+}
+
+/// An in-process shard: a [`PredictServer`] behind the backend trait.
+/// Used by tests and single-process multi-shard setups.
+pub struct LocalShard {
+    server: Arc<PredictServer>,
+    label: String,
+}
+
+impl LocalShard {
+    /// Wrap a running server as a shard backend.
+    pub fn new(server: Arc<PredictServer>, label: &str) -> LocalShard {
+        LocalShard { server, label: label.to_string() }
+    }
+}
+
+impl ShardBackend for LocalShard {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn predict(
+        &self,
+        rows: &[Vec<f64>],
+        cols: &[Vec<f64>],
+        edges: &[(u32, u32)],
+        deadline_ms: Option<u64>,
+    ) -> Result<PredictReply, String> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut req = super::server::PredictRequest::new(
+            rows.to_vec(),
+            cols.to_vec(),
+            edges.to_vec(),
+            tx,
+        );
+        if let Some(ms) = deadline_ms {
+            req = req.with_deadline_ms(ms);
+        } else if self.server.request_timeout_ms() > 0 {
+            req = req.with_deadline_ms(self.server.request_timeout_ms());
+        }
+        let deadline = req.deadline;
+        let _ = self.server.try_submit(req); // refusals answered on the reply channel
+        super::server::wait_reply(&rx, deadline)
+            .map(Ok)
+            .unwrap_or_else(|e| Ok(PredictReply { result: Err(e), generation: 0 }))
+    }
+}
+
+/// A remote shard: one lazily-(re)connected [`NetClient`] per backend.
+/// A transport failure drops the cached connection, so the next attempt
+/// (including a health re-probe) dials fresh.
+pub struct NetShard {
+    addr: String,
+    conn: Mutex<Option<NetClient>>,
+}
+
+impl NetShard {
+    /// A shard at a `host:port` address. No connection is made until the
+    /// first request.
+    pub fn new(addr: &str) -> NetShard {
+        NetShard { addr: addr.to_string(), conn: Mutex::new(None) }
+    }
+}
+
+impl ShardBackend for NetShard {
+    fn name(&self) -> String {
+        self.addr.clone()
+    }
+
+    fn predict(
+        &self,
+        rows: &[Vec<f64>],
+        cols: &[Vec<f64>],
+        edges: &[(u32, u32)],
+        deadline_ms: Option<u64>,
+    ) -> Result<PredictReply, String> {
+        let mut guard = self.conn.lock().unwrap_or_else(|p| p.into_inner());
+        if guard.is_none() {
+            *guard = Some(NetClient::connect(&self.addr)?);
+        }
+        let client = guard.as_mut().expect("connection populated above");
+        let out = client.predict(rows, cols, edges, deadline_ms);
+        if out.is_err() {
+            *guard = None; // reconnect on the next attempt
+        }
+        out
+    }
+}
+
+/// Router health / ejection policy.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardRouterConfig {
+    /// Consecutive failures after which a shard is ejected.
+    pub eject_after: usize,
+    /// How long an ejected shard sits out before the next batch re-probes
+    /// it (half-open).
+    pub probe_cooldown_ms: u64,
+}
+
+impl Default for ShardRouterConfig {
+    fn default() -> Self {
+        ShardRouterConfig { eject_after: 3, probe_cooldown_ms: 1_000 }
+    }
+}
+
+/// Router observability counters.
+#[derive(Debug, Default)]
+pub struct RouterStats {
+    /// Batches routed (one per [`ShardRouter::predict`] call).
+    pub routed: AtomicUsize,
+    /// Batches whose edges spanned more than one shard (scatter/merge).
+    pub scattered: AtomicUsize,
+    /// Sub-batch failures charged against a shard's health.
+    pub shard_failures: AtomicUsize,
+    /// Shards ejected (consecutive-failure threshold crossed).
+    pub ejections: AtomicUsize,
+    /// Re-probes of ejected shards after their cooldown.
+    pub reprobes: AtomicUsize,
+}
+
+struct Health {
+    consecutive_failures: usize,
+    ejected_until: Option<Instant>,
+}
+
+/// Vertex-affine scatter/merge router over N shard backends.
+pub struct ShardRouter {
+    shards: Vec<Box<dyn ShardBackend>>,
+    health: Vec<Mutex<Health>>,
+    cfg: ShardRouterConfig,
+    stats: RouterStats,
+}
+
+impl ShardRouter {
+    /// Build a router over the given backends (at least one).
+    pub fn new(
+        shards: Vec<Box<dyn ShardBackend>>,
+        cfg: ShardRouterConfig,
+    ) -> Result<ShardRouter, String> {
+        if shards.is_empty() {
+            return Err("a shard router needs at least one backend".into());
+        }
+        let health = shards
+            .iter()
+            .map(|_| Mutex::new(Health { consecutive_failures: 0, ejected_until: None }))
+            .collect();
+        Ok(ShardRouter { shards, health, cfg, stats: RouterStats::default() })
+    }
+
+    /// Number of configured shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shards currently considered routable (not ejected, or past their
+    /// re-probe cooldown).
+    pub fn healthy_count(&self) -> usize {
+        (0..self.shards.len()).filter(|&i| self.routable(i)).count()
+    }
+
+    /// Router counters.
+    pub fn stats(&self) -> &RouterStats {
+        &self.stats
+    }
+
+    /// Score a batch across the shards: hash-route each edge by its
+    /// start-vertex feature row, dispatch per-shard sub-requests
+    /// concurrently, merge scores back into request order. Sub-batches
+    /// that fail on a shard (transport error or `shutting_down`) are
+    /// re-routed to surviving shards within this call; `Err(String)` is
+    /// returned only when every routable shard has been exhausted.
+    pub fn predict(
+        &self,
+        rows: &[Vec<f64>],
+        cols: &[Vec<f64>],
+        edges: &[(u32, u32)],
+        deadline_ms: Option<u64>,
+    ) -> Result<PredictReply, String> {
+        self.stats.routed.fetch_add(1, Ordering::Relaxed);
+        // Pre-validate edge indices: the router must index `rows` to hash
+        // vertices, so out-of-range edges are answered with the same typed
+        // error the server itself would produce.
+        for &(s, e) in edges {
+            if s as usize >= rows.len() || e as usize >= cols.len() {
+                let msg = format!(
+                    "edge ({s}, {e}) references a vertex outside the request \
+                     ({} start rows, {} end rows)",
+                    rows.len(),
+                    cols.len()
+                );
+                return Ok(PredictReply {
+                    result: Err(PredictError::InvalidRequest(msg)),
+                    generation: 0,
+                });
+            }
+        }
+        // Hash each distinct start vertex once.
+        let keys: Vec<u64> = rows.iter().map(|row| vertex_key(row)).collect();
+
+        let mut merged = vec![0.0_f64; edges.len()];
+        let mut generation = 0_u64;
+        // Edges still awaiting scores, as original positions.
+        let mut unresolved: Vec<usize> = (0..edges.len()).collect();
+        let mut excluded: Vec<bool> = vec![false; self.shards.len()];
+        let mut shards_spanned = 0_usize;
+        let mut last_failure = String::new();
+        while !unresolved.is_empty() {
+            let routable: Vec<usize> = (0..self.shards.len())
+                .filter(|&i| !excluded[i] && self.routable(i))
+                .collect();
+            if routable.is_empty() {
+                return Err(format!(
+                    "no routable shard left for {} edge(s) (last failure: {})",
+                    unresolved.len(),
+                    if last_failure.is_empty() { "none" } else { &last_failure }
+                ));
+            }
+            for &i in &routable {
+                self.note_probe(i);
+            }
+            let subs = partition(rows, cols, edges, &keys, &unresolved, &routable);
+            shards_spanned = shards_spanned.max(subs.len());
+            let results: Vec<(usize, Result<PredictReply, String>, Vec<usize>)> =
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = subs
+                        .into_iter()
+                        .map(|sub| {
+                            let shard = &self.shards[sub.shard];
+                            scope.spawn(move || {
+                                let out = shard.predict(
+                                    &sub.rows,
+                                    &sub.cols,
+                                    &sub.edges,
+                                    deadline_ms,
+                                );
+                                (sub.shard, out, sub.positions)
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().expect("shard dispatch")).collect()
+                });
+            unresolved.clear();
+            for (shard, out, positions) in results {
+                match out {
+                    Ok(PredictReply { result: Ok(scores), generation: g }) => {
+                        self.note_success(shard);
+                        if scores.len() != positions.len() {
+                            return Err(format!(
+                                "shard {} answered {} scores for {} edges",
+                                self.shards[shard].name(),
+                                scores.len(),
+                                positions.len()
+                            ));
+                        }
+                        generation = generation.max(g);
+                        for (&pos, &score) in positions.iter().zip(&scores) {
+                            merged[pos] = score;
+                        }
+                    }
+                    Ok(PredictReply { result: Err(PredictError::ShuttingDown), .. }) => {
+                        // The backend is going away — treat like transport
+                        // loss: charge health, re-route the sub-batch.
+                        self.note_failure(shard);
+                        last_failure =
+                            format!("{}: shutting down", self.shards[shard].name());
+                        excluded[shard] = true;
+                        unresolved.extend(positions);
+                    }
+                    Ok(PredictReply { result: Err(e), generation: g }) => {
+                        // Typed refusal from a live shard: the whole batch
+                        // fails with that error, as it would unsharded.
+                        self.note_success(shard);
+                        return Ok(PredictReply {
+                            result: Err(e),
+                            generation: generation.max(g),
+                        });
+                    }
+                    Err(transport) => {
+                        self.note_failure(shard);
+                        last_failure =
+                            format!("{}: {transport}", self.shards[shard].name());
+                        excluded[shard] = true;
+                        unresolved.extend(positions);
+                    }
+                }
+            }
+            unresolved.sort_unstable();
+        }
+        if shards_spanned > 1 {
+            self.stats.scattered.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(PredictReply { result: Ok(merged), generation })
+    }
+
+    /// Whether shard `i` may receive traffic right now.
+    fn routable(&self, i: usize) -> bool {
+        let h = self.health[i].lock().unwrap_or_else(|p| p.into_inner());
+        match h.ejected_until {
+            None => true,
+            Some(t) => Instant::now() >= t,
+        }
+    }
+
+    /// Count a re-probe when routing to a shard that sat out its cooldown.
+    fn note_probe(&self, i: usize) {
+        let h = self.health[i].lock().unwrap_or_else(|p| p.into_inner());
+        if h.ejected_until.is_some() {
+            self.stats.reprobes.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn note_success(&self, i: usize) {
+        let mut h = self.health[i].lock().unwrap_or_else(|p| p.into_inner());
+        h.consecutive_failures = 0;
+        h.ejected_until = None;
+    }
+
+    fn note_failure(&self, i: usize) {
+        self.stats.shard_failures.fetch_add(1, Ordering::Relaxed);
+        let mut h = self.health[i].lock().unwrap_or_else(|p| p.into_inner());
+        h.consecutive_failures += 1;
+        if h.consecutive_failures >= self.cfg.eject_after && h.ejected_until.is_none() {
+            h.ejected_until =
+                Some(Instant::now() + Duration::from_millis(self.cfg.probe_cooldown_ms));
+            self.stats.ejections.fetch_add(1, Ordering::Relaxed);
+        } else if h.ejected_until.is_some() {
+            // A failed re-probe restarts the cooldown.
+            h.ejected_until =
+                Some(Instant::now() + Duration::from_millis(self.cfg.probe_cooldown_ms));
+        }
+    }
+}
+
+/// One shard's slice of a batch: deduplicated feature rows, remapped
+/// edges, and the original edge positions for the merge.
+struct SubRequest {
+    shard: usize,
+    rows: Vec<Vec<f64>>,
+    cols: Vec<Vec<f64>>,
+    edges: Vec<(u32, u32)>,
+    positions: Vec<usize>,
+}
+
+/// Partition `unresolved` edge positions across `routable` shards by
+/// start-vertex hash. Sub-request edge order follows the original request
+/// order (positions are visited ascending), so per-shard results merge
+/// deterministically.
+fn partition(
+    rows: &[Vec<f64>],
+    cols: &[Vec<f64>],
+    edges: &[(u32, u32)],
+    keys: &[u64],
+    unresolved: &[usize],
+    routable: &[usize],
+) -> Vec<SubRequest> {
+    let mut by_shard: HashMap<usize, SubRequest> = HashMap::new();
+    let mut row_maps: HashMap<usize, HashMap<u32, u32>> = HashMap::new();
+    let mut col_maps: HashMap<usize, HashMap<u32, u32>> = HashMap::new();
+    for &pos in unresolved {
+        let (s, e) = edges[pos];
+        let shard = rendezvous(keys[s as usize], routable);
+        let sub = by_shard.entry(shard).or_insert_with(|| SubRequest {
+            shard,
+            rows: Vec::new(),
+            cols: Vec::new(),
+            edges: Vec::new(),
+            positions: Vec::new(),
+        });
+        let row_map = row_maps.entry(shard).or_default();
+        let col_map = col_maps.entry(shard).or_default();
+        let ls = *row_map.entry(s).or_insert_with(|| {
+            sub.rows.push(rows[s as usize].clone());
+            (sub.rows.len() - 1) as u32
+        });
+        let le = *col_map.entry(e).or_insert_with(|| {
+            sub.cols.push(cols[e as usize].clone());
+            (sub.cols.len() - 1) as u32
+        });
+        sub.edges.push((ls, le));
+        sub.positions.push(pos);
+    }
+    let mut subs: Vec<SubRequest> = by_shard.into_values().collect();
+    subs.sort_by_key(|s| s.shard);
+    subs
+}
+
+/// FNV-1a over the exact bit patterns of a feature row — the same notion
+/// of vertex identity the kernel-row cache uses (content, not position).
+pub fn vertex_key(row: &[f64]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325_u64;
+    for &x in row {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Rendezvous (highest-random-weight) hashing: each candidate shard gets
+/// a mixed weight for this key; the highest wins. Adding or losing a
+/// shard only remaps the vertices whose winner changed — no global
+/// reshuffle.
+pub fn rendezvous(key: u64, shard_ids: &[usize]) -> usize {
+    *shard_ids
+        .iter()
+        .max_by_key(|&&s| mix(key, s as u64))
+        .expect("rendezvous over a non-empty shard set")
+}
+
+/// SplitMix64-style finalizer over (key, shard).
+fn mix(key: u64, shard: u64) -> u64 {
+    let mut z = key ^ shard.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    /// Deterministic fake backend: score(edge) = f(start_row[0], end_row[0]),
+    /// so merged results are checkable without a model. Fails the first
+    /// `fail_first` calls with a transport error.
+    struct MockShard {
+        label: String,
+        calls: AtomicUsize,
+        fail_first: usize,
+        generation: u64,
+    }
+
+    impl MockShard {
+        fn new(label: &str, fail_first: usize) -> MockShard {
+            MockShard {
+                label: label.into(),
+                calls: AtomicUsize::new(0),
+                fail_first,
+                generation: 0,
+            }
+        }
+    }
+
+    impl ShardBackend for MockShard {
+        fn name(&self) -> String {
+            self.label.clone()
+        }
+
+        fn predict(
+            &self,
+            rows: &[Vec<f64>],
+            cols: &[Vec<f64>],
+            edges: &[(u32, u32)],
+            _deadline_ms: Option<u64>,
+        ) -> Result<PredictReply, String> {
+            let call = self.calls.fetch_add(1, Ordering::SeqCst);
+            if call < self.fail_first {
+                return Err("injected transport failure".into());
+            }
+            let scores = edges
+                .iter()
+                .map(|&(s, e)| rows[s as usize][0] * 1000.0 + cols[e as usize][0])
+                .collect();
+            Ok(PredictReply { result: Ok(scores), generation: self.generation })
+        }
+    }
+
+    /// 32 distinct start vertices: enough that every shard in a 2- or
+    /// 3-way split certainly receives traffic (the routing is a fixed
+    /// deterministic hash, so this either always holds or never does —
+    /// and with 32 keys, no shard going empty is the only realistic
+    /// outcome).
+    fn sample_batch() -> (Vec<Vec<f64>>, Vec<Vec<f64>>, Vec<(u32, u32)>) {
+        let rows: Vec<Vec<f64>> = (0..32).map(|i| vec![i as f64, 0.5]).collect();
+        let cols: Vec<Vec<f64>> = (0..3).map(|j| vec![j as f64]).collect();
+        let edges: Vec<(u32, u32)> =
+            (0..32).flat_map(|s| (0..3).map(move |e| (s as u32, e as u32))).collect();
+        (rows, cols, edges)
+    }
+
+    fn expected(rows: &[Vec<f64>], cols: &[Vec<f64>], edges: &[(u32, u32)]) -> Vec<f64> {
+        edges.iter().map(|&(s, e)| rows[s as usize][0] * 1000.0 + cols[e as usize][0]).collect()
+    }
+
+    #[test]
+    fn scatter_merge_preserves_request_order() {
+        let shards: Vec<Box<dyn ShardBackend>> = (0..3)
+            .map(|i| Box::new(MockShard::new(&format!("s{i}"), 0)) as Box<dyn ShardBackend>)
+            .collect();
+        let router = ShardRouter::new(shards, ShardRouterConfig::default()).unwrap();
+        let (rows, cols, edges) = sample_batch();
+        let reply = router.predict(&rows, &cols, &edges, None).unwrap();
+        assert_eq!(reply.result.unwrap(), expected(&rows, &cols, &edges));
+        assert_eq!(router.stats().scattered.load(Ordering::SeqCst), 1, "32 vertices span shards");
+    }
+
+    #[test]
+    fn same_vertex_routes_to_same_shard() {
+        let ids = vec![0, 1, 2];
+        let key = vertex_key(&[3.25, -1.5]);
+        let first = rendezvous(key, &ids);
+        for _ in 0..10 {
+            assert_eq!(rendezvous(key, &ids), first);
+        }
+        // Removing a non-winning shard must not move this vertex.
+        let without: Vec<usize> = ids.iter().copied().filter(|&s| s != (first + 1) % 3).collect();
+        assert_eq!(rendezvous(key, &without), first);
+    }
+
+    #[test]
+    fn dead_shard_is_ejected_and_traffic_continues() {
+        let shards: Vec<Box<dyn ShardBackend>> = vec![
+            Box::new(MockShard::new("ok", 0)),
+            Box::new(MockShard::new("dead", usize::MAX)),
+        ];
+        let cfg = ShardRouterConfig { eject_after: 2, probe_cooldown_ms: 60_000 };
+        let router = ShardRouter::new(shards, cfg).unwrap();
+        let (rows, cols, edges) = sample_batch();
+        let want = expected(&rows, &cols, &edges);
+        for _ in 0..4 {
+            let reply = router.predict(&rows, &cols, &edges, None).unwrap();
+            assert_eq!(reply.result.unwrap(), want, "every batch still scores fully");
+        }
+        assert_eq!(router.stats().ejections.load(Ordering::SeqCst), 1);
+        assert_eq!(router.healthy_count(), 1, "dead shard sits out its cooldown");
+        assert!(router.stats().shard_failures.load(Ordering::SeqCst) >= 2);
+    }
+
+    #[test]
+    fn ejected_shard_is_reprobed_after_cooldown() {
+        // Fails twice (ejection at eject_after=2), then recovers.
+        let shards: Vec<Box<dyn ShardBackend>> = vec![
+            Box::new(MockShard::new("flaky", 2)),
+            Box::new(MockShard::new("ok", 0)),
+        ];
+        let cfg = ShardRouterConfig { eject_after: 2, probe_cooldown_ms: 1 };
+        let router = ShardRouter::new(shards, cfg).unwrap();
+        let (rows, cols, edges) = sample_batch();
+        let want = expected(&rows, &cols, &edges);
+        for _ in 0..2 {
+            let reply = router.predict(&rows, &cols, &edges, None).unwrap();
+            assert_eq!(reply.result.clone().unwrap(), want);
+        }
+        assert_eq!(router.stats().ejections.load(Ordering::SeqCst), 1);
+        std::thread::sleep(Duration::from_millis(5));
+        let reply = router.predict(&rows, &cols, &edges, None).unwrap();
+        assert_eq!(reply.result.unwrap(), want);
+        assert!(router.stats().reprobes.load(Ordering::SeqCst) >= 1, "cooldown elapsed: probed");
+        assert_eq!(router.healthy_count(), 2, "recovered shard is healthy again");
+    }
+
+    #[test]
+    fn all_shards_down_is_a_transport_error() {
+        let shards: Vec<Box<dyn ShardBackend>> =
+            vec![Box::new(MockShard::new("dead", usize::MAX))];
+        let router = ShardRouter::new(shards, ShardRouterConfig::default()).unwrap();
+        let (rows, cols, edges) = sample_batch();
+        assert!(router.predict(&rows, &cols, &edges, None).is_err());
+    }
+
+    #[test]
+    fn out_of_range_edge_is_typed_invalid() {
+        let shards: Vec<Box<dyn ShardBackend>> = vec![Box::new(MockShard::new("s", 0))];
+        let router = ShardRouter::new(shards, ShardRouterConfig::default()).unwrap();
+        let reply = router.predict(&[vec![1.0]], &[vec![1.0]], &[(0, 7)], None).unwrap();
+        assert!(matches!(reply.result, Err(PredictError::InvalidRequest(_))));
+    }
+}

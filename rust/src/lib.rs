@@ -41,36 +41,43 @@
 //! ## Quickstart
 //!
 //! One builder-based lifecycle — **fit → save → load → serve** — covers
-//! every trainer ([`api`]):
+//! every trainer ([`api`]). This example runs as a doc test (`cargo test
+//! --doc`):
 //!
-//! ```no_run
+//! ```
 //! use kronvt::api::{Compute, Learner, TrainedModel};
 //! use kronvt::data::checkerboard::CheckerboardConfig;
 //! use kronvt::eval::auc::auc;
 //! use kronvt::kernels::KernelKind;
 //!
-//! let data = CheckerboardConfig { m: 100, q: 100, density: 0.25, noise: 0.2, feature_range: 12.0, seed: 7 }
+//! let data = CheckerboardConfig { m: 90, q: 90, density: 0.25, noise: 0.2, feature_range: 20.0, seed: 42 }
 //!     .generate();
-//! let (train, test) = data.zero_shot_split(0.25, 42);
+//! let (train, test) = data.zero_shot_split(0.25, 7);
 //!
 //! // fit: the fluent Learner builder over ridge / SVM / Newton trainers.
 //! let model = Learner::ridge()
 //!     .lambda(2f64.powi(-7))
 //!     .kernel(KernelKind::Gaussian { gamma: 1.0 })
 //!     .iterations(100)
-//!     .compute(Compute::all_cores()) // shard every GVT matvec; bitwise-identical results
+//!     .compute(Compute::threads(2)) // shard every GVT matvec; bitwise-identical results
 //!     .fit(&train)
 //!     .unwrap();
 //! let scores = model.predict(&test);
-//! println!("AUC = {:.3}", auc(&test.labels, &scores));
+//! assert!(auc(&test.labels, &scores) > 0.6, "zero-shot AUC beats chance comfortably");
 //!
 //! // save → load: the portable `kronvt-model/v1` artifact predicts
 //! // bitwise-identically in a fresh process (`kronvt predict`, `kronvt
 //! // serve --model`).
-//! model.save(std::path::Path::new("model.json")).unwrap();
-//! let loaded = TrainedModel::load(std::path::Path::new("model.json")).unwrap();
+//! let path = std::env::temp_dir().join(format!("kronvt_doc_{}.json", std::process::id()));
+//! model.save(&path).unwrap();
+//! let loaded = TrainedModel::load(&path).unwrap();
+//! std::fs::remove_file(&path).ok();
 //! assert_eq!(loaded.predict(&test), scores);
 //! ```
+//!
+//! To serve that artifact over TCP instead of in-process, see
+//! [`coordinator::net`] and `docs/SERVING.md`; the module map from paper
+//! equations to code lives in `docs/ARCHITECTURE.md`.
 
 #![warn(missing_docs)]
 

@@ -10,6 +10,8 @@
 //! kronvt cv --data gpcr --method kronridge --lambda 1e-4
 //! kronvt train --data grid --factors 20x15x12 --kernel gaussian:1   # D-way chain
 //! kronvt serve --model model.json --requests 100       # serve without retraining
+//! kronvt serve --model model.json --listen 127.0.0.1:7878 --serve-secs 60   # TCP protocol
+//! kronvt serve --shards 127.0.0.1:7878,127.0.0.1:7879  # route across shard processes
 //! kronvt artifacts                         # artifact registry status
 //! ```
 //!
@@ -20,7 +22,10 @@ use std::path::Path;
 
 use kronvt::api::{Compute, Learner, TrainedModel};
 use kronvt::baselines::{ExplicitSvm, ExplicitSvmConfig, KnnConfig, KnnModel, SgdConfig, SgdLossKind, SgdModel};
-use kronvt::coordinator::{run_cv_jobs, run_cv_path_jobs, PredictServer, ServerConfig};
+use kronvt::coordinator::{
+    run_cv_jobs, run_cv_path_jobs, NetClient, NetServer, NetServerConfig, NetShard,
+    PredictServer, ServerConfig, ShardBackend, ShardRouter, ShardRouterConfig,
+};
 use kronvt::data::{checkerboard, dti, Dataset, GridCheckerboardConfig};
 use kronvt::eval::auc::auc;
 use kronvt::gvt::PairwiseKernelKind;
@@ -482,11 +487,85 @@ fn cmd_cv(args: &Args) -> Result<(), String> {
 const SERVE_FLAGS: &[&str] = &[
     "data", "seed", "scale", "lambda", "threads", "pairwise", "model", "requests",
     "serve-workers", "cache-vertices", "max-queue", "vertex-pool", "request-timeout-ms",
-    "swap-watch",
+    "swap-watch", "swap-poll-ms", "listen", "shards", "serve-secs",
 ];
+
+/// `serve --shards A,B,...`: route demo traffic across running listeners
+/// (started with `serve --listen`) through the vertex-affine
+/// [`ShardRouter`] — no model is loaded; feature dims come from the
+/// protocol's `info` operation.
+fn cmd_serve_shards(args: &Args, shards_csv: &str) -> Result<(), String> {
+    for flag in [
+        "data", "scale", "lambda", "pairwise", "model", "serve-workers", "cache-vertices",
+        "max-queue", "request-timeout-ms", "swap-watch", "swap-poll-ms", "listen",
+        "serve-secs", "threads",
+    ] {
+        if args.has(flag) {
+            return Err(format!(
+                "--{flag} has no effect with --shards (the shard processes own their \
+                 models and serving config); drop it"
+            ));
+        }
+    }
+    let seed = args.get_u64("seed", 1)?;
+    let addrs: Vec<&str> = shards_csv.split(',').filter(|a| !a.is_empty()).collect();
+    if addrs.is_empty() {
+        return Err("--shards needs a comma-separated list of host:port addresses".into());
+    }
+    // Probe feature dims over the wire so traffic is shaped correctly.
+    let mut dims = None;
+    for addr in &addrs {
+        if let Ok(((d, r), generation)) = NetClient::connect(addr).and_then(|mut c| c.info()) {
+            println!("shard {addr}: dims ({d}, {r}), generation {generation}");
+            dims = Some((d, r));
+            break;
+        }
+    }
+    let (d, r) = dims.ok_or("no shard answered the dims probe (op \"info\")")?;
+    let backends: Vec<Box<dyn ShardBackend>> =
+        addrs.iter().map(|a| Box::new(NetShard::new(a)) as Box<dyn ShardBackend>).collect();
+    let router = ShardRouter::new(backends, ShardRouterConfig::default())?;
+
+    let n_requests = args.get_usize("requests", 100)?;
+    let pool_size = args.get_usize("vertex-pool", 16)?.max(4);
+    let mut rng = Pcg32::seeded(seed ^ 0x5E7);
+    let start_pool: Vec<Vec<f64>> =
+        (0..pool_size).map(|_| rng.uniform_vec(d, 0.0, 100.0)).collect();
+    let end_pool: Vec<Vec<f64>> = (0..pool_size).map(|_| rng.uniform_vec(r, 0.0, 100.0)).collect();
+    let timer = Timer::start();
+    let mut scored = 0usize;
+    for _ in 0..n_requests {
+        let sf: Vec<Vec<f64>> = (0..4).map(|_| start_pool[rng.below(pool_size)].clone()).collect();
+        let ef: Vec<Vec<f64>> = (0..4).map(|_| end_pool[rng.below(pool_size)].clone()).collect();
+        let edges: Vec<(u32, u32)> =
+            (0..8).map(|_| (rng.below(4) as u32, rng.below(4) as u32)).collect();
+        let reply = router.predict(&sf, &ef, &edges, None)?;
+        let scores = reply.result.map_err(|e| e.to_string())?;
+        assert_eq!(scores.len(), 8);
+        scored += scores.len();
+    }
+    let st = router.stats();
+    use std::sync::atomic::Ordering::Relaxed;
+    println!(
+        "routed {n_requests} requests ({scored} edges) over {} shard(s) in {:.3}s — \
+         {} scattered, {} shard failures, {} ejections, {} re-probes, {} healthy",
+        router.shard_count(),
+        timer.elapsed_secs(),
+        st.scattered.load(Relaxed),
+        st.shard_failures.load(Relaxed),
+        st.ejections.load(Relaxed),
+        st.reprobes.load(Relaxed),
+        router.healthy_count(),
+    );
+    Ok(())
+}
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
     args.expect_known("serve", SERVE_FLAGS)?;
+    if let Some(shards) = args.get("shards") {
+        let shards = shards.to_string();
+        return cmd_serve_shards(args, &shards);
+    }
     let seed = args.get_u64("seed", 1)?;
     let compute = Compute::threads(args.get_usize("threads", 0)?)
         .with_cache_vertices(args.get_usize("cache-vertices", 1024)?);
@@ -535,6 +614,29 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         compute,
         ..Default::default()
     })?;
+    // Shared so the TCP front-end's connection threads can score against
+    // the same server the watcher hot-swaps.
+    let server = std::sync::Arc::new(server);
+
+    // `--listen ADDR` opens the TCP/JSON-lines front-end (protocol spec in
+    // docs/SERVING.md); the demo traffic below then exercises the full
+    // wire path through a loopback NetClient instead of in-process calls.
+    let net = match args.get("listen") {
+        Some(addr) => {
+            let net = NetServer::start(
+                server.clone(),
+                NetServerConfig { addr: addr.to_string(), ..Default::default() },
+            )?;
+            println!("listening on {} (newline-delimited JSON; see docs/SERVING.md)", net.local_addr());
+            Some(net)
+        }
+        None => {
+            if args.has("serve-secs") {
+                return Err("--serve-secs needs --listen (nothing to keep open otherwise)".into());
+            }
+            None
+        }
+    };
 
     // Real serving traffic repeats vertices across requests (the same drug
     // against new targets, the same user against new items); draw request
@@ -547,9 +649,14 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let end_pool: Vec<Vec<f64>> = (0..pool_size).map(|_| rng.uniform_vec(r, 0.0, 100.0)).collect();
     let timer = Timer::start();
     // `--swap-watch PATH` hot-swaps the serving model whenever the artifact
-    // at PATH changes (200ms mtime poll) — zero downtime, in-flight batches
-    // finish on the generation they started with. Scoped so the watcher
-    // borrows the server and always joins before shutdown.
+    // at PATH changes (mtime poll every --swap-poll-ms, default 200) —
+    // zero downtime, in-flight batches finish on the generation they
+    // started with. Scoped so the watcher borrows the server and always
+    // joins before shutdown.
+    let swap_poll_ms = args.get_u64("swap-poll-ms", 200)?.max(10);
+    if args.has("swap-poll-ms") && !args.has("swap-watch") {
+        return Err("--swap-poll-ms needs --swap-watch (it is the watcher's poll interval)".into());
+    }
     let stop = std::sync::atomic::AtomicBool::new(false);
     std::thread::scope(|scope| -> Result<(), String> {
         if let Some(watch) = args.get("swap-watch") {
@@ -559,16 +666,20 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                 let mtime = |p: &Path| std::fs::metadata(p).and_then(|m| m.modified()).ok();
                 let mut last = mtime(path);
                 while !stop.load(std::sync::atomic::Ordering::Relaxed) {
-                    std::thread::sleep(std::time::Duration::from_millis(200));
+                    std::thread::sleep(std::time::Duration::from_millis(swap_poll_ms));
                     let now = mtime(path);
                     if now.is_some() && now != last {
                         last = now;
                         // A failed load/swap must not kill serving: report
                         // it and keep the current generation live.
+                        let before = server
+                            .stats()
+                            .generation
+                            .load(std::sync::atomic::Ordering::Relaxed);
                         match TrainedModel::load(path).and_then(|m| server.swap_model(m)) {
-                            Ok(generation) => {
-                                println!("hot-swapped model from {watch} (generation {generation})")
-                            }
+                            Ok(generation) => println!(
+                                "hot-swap {watch}: generation {before} -> {generation}"
+                            ),
                             Err(e) => eprintln!("swap-watch {watch}: {e}"),
                         }
                     }
@@ -576,6 +687,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             });
         }
         let run = (|| -> Result<(), String> {
+            // With --listen, demo traffic goes over real TCP through the
+            // listener — a self-contained smoke test of the wire path.
+            let mut client = match &net {
+                Some(net) => Some(NetClient::connect(&net.local_addr().to_string())?),
+                None => None,
+            };
             for _ in 0..n_requests {
                 let sf: Vec<Vec<f64>> =
                     (0..4).map(|_| start_pool[rng.below(pool_size)].clone()).collect();
@@ -583,8 +700,21 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                     (0..4).map(|_| end_pool[rng.below(pool_size)].clone()).collect();
                 let edges: Vec<(u32, u32)> =
                     (0..8).map(|_| (rng.below(4) as u32, rng.below(4) as u32)).collect();
-                let scores = server.predict_blocking(sf, ef, edges)?;
+                let scores = match client.as_mut() {
+                    Some(c) => {
+                        c.predict(&sf, &ef, &edges, None)?.result.map_err(String::from)?
+                    }
+                    None => server.predict_blocking(sf, ef, edges)?,
+                };
                 assert_eq!(scores.len(), 8);
+            }
+            // `--serve-secs S` keeps the listener open for external
+            // clients (nc, curl, another `serve --shards` process) after
+            // the demo traffic.
+            let serve_secs = args.get_u64("serve-secs", 0)?;
+            if serve_secs > 0 {
+                println!("serving external traffic for {serve_secs}s...");
+                std::thread::sleep(std::time::Duration::from_secs(serve_secs));
             }
             Ok(())
         })();
@@ -619,7 +749,23 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         st.panics.load(std::sync::atomic::Ordering::Relaxed),
         st.respawns.load(std::sync::atomic::Ordering::Relaxed),
     );
-    server.shutdown();
+    // Drain the network layer first (connection threads hold Arc clones of
+    // the server), then the server itself.
+    if let Some(net) = net {
+        let ns = net.stats();
+        println!(
+            "wire: {} connection(s), {} line(s), {} bad line(s), {} replies ({} errors)",
+            ns.connections.load(std::sync::atomic::Ordering::Relaxed),
+            ns.lines.load(std::sync::atomic::Ordering::Relaxed),
+            ns.bad_lines.load(std::sync::atomic::Ordering::Relaxed),
+            ns.replies.load(std::sync::atomic::Ordering::Relaxed),
+            ns.wire_errors.load(std::sync::atomic::Ordering::Relaxed),
+        );
+        net.shutdown();
+    }
+    if let Ok(server) = std::sync::Arc::try_unwrap(server) {
+        server.shutdown();
+    }
     Ok(())
 }
 
@@ -649,7 +795,7 @@ fn cmd_artifacts(args: &Args) -> Result<(), String> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: kronvt <command> [--flags]\n\
+        "usage: kronvt <command> [options]\n\
          commands:\n\
            datasets   print Table-5 style dataset statistics\n\
            train      train one method on a zero-shot split, report AUC; --save PATH\n\
@@ -685,7 +831,18 @@ fn usage() -> ! {
                        --request-timeout-ms MS  default per-request deadline (0 = none); expired\n\
                                            requests answer DeadlineExceeded and are shed unscored\n\
                        --swap-watch PATH   hot-swap the serving model when the artifact at PATH\n\
-                                           changes (zero downtime, generation counter in stats)"
+                                           changes (zero downtime, generation counter in stats)\n\
+                       --swap-poll-ms MS   swap-watch mtime poll interval (default 200, min 10)\n\
+                       --requests N        demo requests to drive through the server (default 100)\n\
+         network flags (docs/SERVING.md):\n\
+                       --listen ADDR       serve the newline-delimited JSON protocol on ADDR\n\
+                                           (host:port; port 0 picks a free port and prints it);\n\
+                                           demo traffic then runs over loopback TCP\n\
+                       --serve-secs S      with --listen: stay up S seconds for external clients\n\
+                                           after the demo traffic\n\
+                       --shards A,B,...    route demo traffic across running --listen processes\n\
+                                           by start-vertex hash (scatter/merge, failure ejection);\n\
+                                           no model is loaded — dims come from the wire"
     );
     std::process::exit(2)
 }

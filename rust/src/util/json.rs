@@ -48,6 +48,20 @@ impl Json {
         }
     }
 
+    /// Numeric value as `u64`, under the same strictness as
+    /// [`Json::as_usize`]: exact non-negative integers only, and the
+    /// strict `< 2^64` bound rejects the saturating-cast edge case
+    /// (`u64::MAX as f64` rounds up to 2^64). Wire-protocol fields such as
+    /// request ids and `deadline_ms` go through this.
+    pub fn as_u64(&self) -> Option<u64> {
+        let n = self.as_f64()?;
+        if n >= 0.0 && n.fract() == 0.0 && n < u64::MAX as f64 {
+            Some(n as u64)
+        } else {
+            None
+        }
+    }
+
     /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
@@ -179,6 +193,11 @@ impl From<f64> for Json {
 }
 impl From<usize> for Json {
     fn from(n: usize) -> Self {
+        Json::Num(n as f64)
+    }
+}
+impl From<u64> for Json {
+    fn from(n: u64) -> Self {
         Json::Num(n as f64)
     }
 }
@@ -461,6 +480,17 @@ mod tests {
         assert_eq!(Json::parse("42").unwrap().as_usize(), Some(42));
         assert_eq!(Json::parse("1e3").unwrap().as_usize(), Some(1000));
         assert_eq!(Json::Str("3".into()).as_usize(), None, "strings are not numbers");
+    }
+
+    #[test]
+    fn as_u64_strictness_matches_as_usize() {
+        assert_eq!(Json::parse("-1").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("1.5").unwrap().as_u64(), None);
+        assert_eq!(Json::Num(f64::NAN).as_u64(), None);
+        assert_eq!(Json::Num(18_446_744_073_709_551_616.0).as_u64(), None, "2^64 saturates");
+        assert_eq!(Json::parse("0").unwrap().as_u64(), Some(0));
+        assert_eq!(Json::parse("9007199254740992").unwrap().as_u64(), Some(1 << 53));
+        assert_eq!(Json::from(7_u64), Json::Num(7.0));
     }
 
     #[test]

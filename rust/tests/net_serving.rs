@@ -1,0 +1,445 @@
+//! Networked-serving acceptance suite, all over real loopback TCP:
+//!
+//! * scores read back from the wire are **bitwise identical** to in-process
+//!   [`PredictServer::predict_blocking`] — the JSON layer round-trips every
+//!   `f64` exactly;
+//! * the full typed-error taxonomy survives serialization: invalid
+//!   requests, expired deadlines (including mid-flight expiry while a
+//!   request is queued behind an injected straggler), overload, and a
+//!   worker crash all come back as their wire error codes and map to the
+//!   same [`PredictError`] a local caller would see;
+//! * protocol edge cases answer errors without desynchronizing or killing
+//!   the connection: oversized lines, invalid UTF-8, malformed JSON,
+//!   non-object requests, truncated lines at disconnect; unknown request
+//!   fields are ignored (forward compatibility);
+//! * a 2-shard [`ShardRouter`] over two TCP listeners returns results
+//!   bitwise identical to one unsharded server, and keeps serving (with an
+//!   ejection) when one shard dies.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use kronvt::api::Compute;
+use kronvt::coordinator::{
+    FaultPlan, NetClient, NetServer, NetServerConfig, NetShard, PredictError, PredictServer,
+    RouterStats, ServerConfig, ShardBackend, ShardRouter, ShardRouterConfig,
+};
+use kronvt::data::Dataset;
+use kronvt::gvt::{KronIndex, PairwiseKernelKind};
+use kronvt::kernels::KernelKind;
+use kronvt::linalg::Matrix;
+use kronvt::model::DualModel;
+use kronvt::util::json::Json;
+use kronvt::util::rng::Pcg32;
+
+/// A tiny dual model built directly (no training) — deterministic scores,
+/// instant setup.
+fn toy_model(seed: u64) -> DualModel {
+    let mut rng = Pcg32::seeded(seed);
+    let (m, q, n) = (6, 5, 15);
+    DualModel {
+        dual_coef: rng.normal_vec(n),
+        train_start_features: Matrix::from_fn(m, 3, |_, _| rng.normal()),
+        train_end_features: Matrix::from_fn(q, 2, |_, _| rng.normal()),
+        train_idx: KronIndex::new(
+            (0..n).map(|_| rng.below(q) as u32).collect(),
+            (0..n).map(|_| rng.below(m) as u32).collect(),
+        ),
+        kernel_d: KernelKind::Gaussian { gamma: 0.3 },
+        kernel_t: KernelKind::Gaussian { gamma: 0.3 },
+        pairwise: PairwiseKernelKind::Kronecker,
+    }
+}
+
+fn request_data(
+    rng: &mut Pcg32,
+    u: usize,
+    v: usize,
+    t: usize,
+) -> (Vec<Vec<f64>>, Vec<Vec<f64>>, Vec<(u32, u32)>) {
+    let sf: Vec<Vec<f64>> = (0..u).map(|_| rng.normal_vec(3)).collect();
+    let ef: Vec<Vec<f64>> = (0..v).map(|_| rng.normal_vec(2)).collect();
+    let edges: Vec<(u32, u32)> =
+        (0..t).map(|_| (rng.below(u) as u32, rng.below(v) as u32)).collect();
+    (sf, ef, edges)
+}
+
+fn direct_predict(
+    model: &DualModel,
+    sf: &[Vec<f64>],
+    ef: &[Vec<f64>],
+    edges: &[(u32, u32)],
+) -> Vec<f64> {
+    let ds = Dataset {
+        start_features: Matrix::from_fn(sf.len(), sf[0].len(), |i, j| sf[i][j]),
+        end_features: Matrix::from_fn(ef.len(), ef[0].len(), |i, j| ef[i][j]),
+        start_idx: edges.iter().map(|&(s, _)| s).collect(),
+        end_idx: edges.iter().map(|&(_, e)| e).collect(),
+        labels: vec![0.0; edges.len()],
+        name: "direct".into(),
+    };
+    model.predict(&ds)
+}
+
+fn config(workers: usize) -> ServerConfig {
+    ServerConfig { workers, compute: Compute::serial(), ..Default::default() }
+}
+
+/// Start a listener over a fresh server for `model`, on an OS-chosen port.
+fn listen(model: DualModel, workers: usize) -> (Arc<PredictServer>, NetServer, String) {
+    listen_with(model, config(workers), NetServerConfig::default(), FaultPlan::none())
+}
+
+fn listen_with(
+    model: DualModel,
+    cfg: ServerConfig,
+    net_cfg: NetServerConfig,
+    faults: FaultPlan,
+) -> (Arc<PredictServer>, NetServer, String) {
+    let server = Arc::new(PredictServer::start_with_faults(model, cfg, faults));
+    let net = NetServer::start(server.clone(), net_cfg).expect("bind loopback");
+    let addr = net.local_addr().to_string();
+    (server, net, addr)
+}
+
+fn shutdown(server: Arc<PredictServer>, net: NetServer) {
+    net.shutdown();
+    if let Ok(server) = Arc::try_unwrap(server) {
+        server.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------- scores
+
+/// Concurrent clients over real TCP read back exactly the bytes the model
+/// produces: every score bitwise-equal to the in-process path, every reply
+/// id-matched under pipelining.
+#[test]
+fn wire_scores_bitwise_identical_to_in_process() {
+    let model = toy_model(11);
+    let (server, net, addr) = listen(model.clone(), 2);
+    std::thread::scope(|scope| {
+        for c in 0..4u64 {
+            let (addr, model, server) = (&addr, &model, &server);
+            scope.spawn(move || {
+                let mut rng = Pcg32::seeded(100 + c);
+                let mut client = NetClient::connect(addr).expect("connect");
+                for _ in 0..10 {
+                    let (sf, ef, edges) = request_data(&mut rng, 4, 4, 9);
+                    let expected = direct_predict(model, &sf, &ef, &edges);
+                    let wire = client
+                        .predict(&sf, &ef, &edges, None)
+                        .expect("transport")
+                        .result
+                        .expect("scored");
+                    assert_eq!(wire, expected, "wire scores must be bitwise identical");
+                    let local = server
+                        .predict_blocking(sf, ef, edges)
+                        .expect("in-process path");
+                    assert_eq!(wire, local);
+                }
+            });
+        }
+    });
+    assert_eq!(net.stats().bad_lines.load(Ordering::SeqCst), 0);
+    assert_eq!(net.stats().connections.load(Ordering::SeqCst), 4);
+    shutdown(server, net);
+}
+
+// ----------------------------------------------------------- typed errors
+
+/// Invalid request, expired deadline, and injected overload all round-trip
+/// the wire as their error codes and map back to the exact
+/// [`PredictError`] variants, on one connection, without desynchronizing
+/// the reply stream.
+#[test]
+fn typed_errors_round_trip_the_wire() {
+    let model = toy_model(21);
+    // The 3rd admitted request trips the injected queue rejection.
+    let (server, net, addr) = listen_with(
+        model.clone(),
+        config(1),
+        NetServerConfig::default(),
+        FaultPlan::seeded(7).reject_request(3),
+    );
+    let mut rng = Pcg32::seeded(22);
+    let (sf, ef, edges) = request_data(&mut rng, 3, 3, 6);
+    let mut client = NetClient::connect(&addr).expect("connect");
+
+    // 1: an edge referencing a vertex the request does not carry.
+    let mut bad_edges = edges.clone();
+    bad_edges[0].0 = 99;
+    let reply = client.predict(&sf, &ef, &bad_edges, None).expect("transport");
+    assert!(matches!(reply.result, Err(PredictError::InvalidRequest(_))), "{:?}", reply.result);
+
+    // 2: an already-expired deadline.
+    let reply = client.predict(&sf, &ef, &edges, Some(0)).expect("transport");
+    assert_eq!(reply.result, Err(PredictError::DeadlineExceeded));
+
+    // 3: the injected queue rejection — overload.
+    let reply = client.predict(&sf, &ef, &edges, None).expect("transport");
+    assert_eq!(reply.result, Err(PredictError::Overloaded));
+
+    // 4: same connection, same data — scored and bitwise-correct.
+    let reply = client.predict(&sf, &ef, &edges, None).expect("transport");
+    assert_eq!(reply.result.expect("scored"), direct_predict(&model, &sf, &ef, &edges));
+
+    // Retryability is visible on the wire itself.
+    let raw = kronvt::coordinator::net::encode_request(77, &sf, &ef, &edges, Some(0))
+        .dump()
+        .unwrap();
+    client.send_raw(&raw).expect("send");
+    let v = client.recv_json(5_000).expect("response");
+    let err = v.get("error").expect("error object");
+    assert_eq!(err.get("code").and_then(Json::as_str), Some("deadline_exceeded"));
+    assert_eq!(err.get("retryable"), Some(&Json::Bool(true)));
+    assert_eq!(v.get("id").and_then(Json::as_u64), Some(77));
+
+    shutdown(server, net);
+}
+
+/// A scoring-worker crash mid-batch surfaces as `shutting_down` on the
+/// wire (retryable), and the connection + respawned worker keep serving.
+#[test]
+fn worker_crash_round_trips_as_shutting_down() {
+    let model = toy_model(31);
+    let (server, net, addr) = listen_with(
+        model.clone(),
+        config(1),
+        NetServerConfig::default(),
+        FaultPlan::seeded(9).panic_on_batch(1),
+    );
+    let mut rng = Pcg32::seeded(32);
+    let (sf, ef, edges) = request_data(&mut rng, 3, 3, 6);
+    let mut client = NetClient::connect(&addr).expect("connect");
+
+    let reply = client.predict(&sf, &ef, &edges, Some(10_000)).expect("transport");
+    assert_eq!(reply.result, Err(PredictError::ShuttingDown), "crashed batch's casualty");
+
+    let reply = client.predict(&sf, &ef, &edges, Some(10_000)).expect("transport");
+    assert_eq!(
+        reply.result.expect("respawned worker scores"),
+        direct_predict(&model, &sf, &ef, &edges)
+    );
+    assert_eq!(server.stats().respawns.load(Ordering::Relaxed), 1);
+    shutdown(server, net);
+}
+
+/// A request that is valid at admission but expires while queued behind an
+/// injected straggler answers `deadline_exceeded` over the socket — the
+/// mid-flight expiry path, not the admission-time one.
+#[test]
+fn deadline_expires_mid_flight_over_the_socket() {
+    let model = toy_model(41);
+    let (server, net, addr) = listen_with(
+        model,
+        config(1),
+        NetServerConfig::default(),
+        FaultPlan::seeded(3).sleep_on_batch(1, 400),
+    );
+    let mut rng = Pcg32::seeded(42);
+    let (sf, ef, edges) = request_data(&mut rng, 3, 3, 6);
+    let mut client = NetClient::connect(&addr).expect("connect");
+    let reply = client.predict(&sf, &ef, &edges, Some(50)).expect("transport");
+    assert_eq!(reply.result, Err(PredictError::DeadlineExceeded));
+    assert!(server.stats().shed.load(Ordering::Relaxed) >= 1, "expired work shed unscored");
+    shutdown(server, net);
+}
+
+// -------------------------------------------------------- protocol edges
+
+/// Malformed lines answer `bad_request` without desynchronizing the
+/// stream; unknown fields are ignored; `op: info` reports feature dims.
+#[test]
+fn malformed_lines_answer_bad_request_and_connection_survives() {
+    let model = toy_model(51);
+    let (server, net, addr) = listen(model.clone(), 1);
+    let mut client = NetClient::connect(&addr).expect("connect");
+    let expect_code = |client: &mut NetClient, code: &str| {
+        let v = client.recv_json(5_000).expect("response");
+        assert_eq!(
+            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some(code),
+            "full response: {v}"
+        );
+        assert_eq!(v.get("id"), Some(&Json::Null), "unattributable lines echo a null id");
+    };
+
+    client.send_raw("this is not json").expect("send");
+    expect_code(&mut client, "bad_request");
+
+    client.send_raw("[1, 2, 3]").expect("send");
+    expect_code(&mut client, "bad_request");
+
+    client.send_bytes(b"{\"id\": 1, \"rows\": \xff\xfe}\n").expect("send");
+    expect_code(&mut client, "bad_request");
+
+    // Structurally wrong but attributable: typed invalid_request, id echoed.
+    client.send_raw(r#"{"id": 8, "rows": 3, "cols": [], "edges": []}"#).expect("send");
+    let v = client.recv_json(5_000).expect("response");
+    assert_eq!(
+        v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+        Some("invalid_request")
+    );
+    assert_eq!(v.get("id").and_then(Json::as_u64), Some(8));
+
+    client.send_raw(r#"{"id": 9, "op": "frobnicate"}"#).expect("send");
+    let v = client.recv_json(5_000).expect("response");
+    assert_eq!(
+        v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+        Some("invalid_request")
+    );
+
+    // Unknown fields are ignored (forward compatibility), request scores.
+    let mut rng = Pcg32::seeded(52);
+    let (sf, ef, edges) = request_data(&mut rng, 3, 3, 5);
+    let mut v = kronvt::coordinator::net::encode_request(10, &sf, &ef, &edges, None);
+    if let Json::Obj(map) = &mut v {
+        map.insert("future_knob".into(), Json::from("ignored"));
+        map.insert("priority".into(), Json::from(3usize));
+    }
+    client.send_raw(&v.dump().unwrap()).expect("send");
+    let v = client.recv_json(5_000).expect("response");
+    let scores: Vec<f64> =
+        v.get("scores").and_then(Json::as_arr).expect("scored").iter().filter_map(Json::as_f64).collect();
+    assert_eq!(scores, direct_predict(&model, &sf, &ef, &edges));
+
+    // op info: dims over the wire.
+    let (dims, generation) = client.info().expect("info");
+    assert_eq!(dims, (3, 2));
+    assert_eq!(generation, 0);
+
+    assert!(net.stats().bad_lines.load(Ordering::SeqCst) >= 3);
+    shutdown(server, net);
+}
+
+/// An oversized line is rejected and discarded through its newline; the
+/// same connection then serves a normal request.
+#[test]
+fn oversized_line_is_rejected_and_stream_resyncs() {
+    let model = toy_model(61);
+    let (server, net, addr) = listen_with(
+        model.clone(),
+        config(1),
+        NetServerConfig { max_line_bytes: 1024, ..Default::default() },
+        FaultPlan::none(),
+    );
+    let mut client = NetClient::connect(&addr).expect("connect");
+    let huge = format!("{{\"id\": 1, \"rows\": \"{}\"}}", "x".repeat(8 * 1024));
+    client.send_raw(&huge).expect("send");
+    let v = client.recv_json(5_000).expect("response");
+    assert_eq!(
+        v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+        Some("bad_request")
+    );
+
+    let mut rng = Pcg32::seeded(62);
+    let (sf, ef, edges) = request_data(&mut rng, 3, 3, 5);
+    let reply = client.predict(&sf, &ef, &edges, None).expect("transport");
+    assert_eq!(reply.result.expect("resynced"), direct_predict(&model, &sf, &ef, &edges));
+    shutdown(server, net);
+}
+
+/// A connection dropped mid-line is counted as a truncated bad line and
+/// does not disturb other connections.
+#[test]
+fn truncated_line_at_disconnect_is_counted_not_fatal() {
+    let model = toy_model(71);
+    let (server, net, addr) = listen(model.clone(), 1);
+    {
+        let mut client = NetClient::connect(&addr).expect("connect");
+        client.send_bytes(b"{\"id\": 1, \"rows\": [[0.1, 0.2").expect("send partial");
+        // dropped here: no newline ever arrives
+    }
+    // The reader notices EOF within a poll tick or two.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    while net.stats().bad_lines.load(Ordering::SeqCst) == 0 {
+        assert!(std::time::Instant::now() < deadline, "truncated line never counted");
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    // A fresh connection is unaffected.
+    let mut rng = Pcg32::seeded(72);
+    let (sf, ef, edges) = request_data(&mut rng, 3, 3, 5);
+    let mut client = NetClient::connect(&addr).expect("connect");
+    let reply = client.predict(&sf, &ef, &edges, None).expect("transport");
+    assert_eq!(reply.result.expect("scored"), direct_predict(&model, &sf, &ef, &edges));
+    shutdown(server, net);
+}
+
+// -------------------------------------------------------------- sharding
+
+fn router_over(addrs: &[String], cfg: ShardRouterConfig) -> ShardRouter {
+    let backends: Vec<Box<dyn ShardBackend>> =
+        addrs.iter().map(|a| Box::new(NetShard::new(a)) as Box<dyn ShardBackend>).collect();
+    ShardRouter::new(backends, cfg).expect("router")
+}
+
+/// A 2-shard router over two TCP listeners returns bitwise-identical
+/// results to a single unsharded server — scatter/merge preserves request
+/// order and per-edge scores exactly.
+#[test]
+fn two_shard_router_matches_unsharded_server() {
+    let model = toy_model(81);
+    let (server_a, net_a, addr_a) = listen(model.clone(), 1);
+    let (server_b, net_b, addr_b) = listen(model.clone(), 1);
+    let reference = PredictServer::start(model, config(2));
+    let router = router_over(&[addr_a, addr_b], ShardRouterConfig::default());
+
+    let mut rng = Pcg32::seeded(82);
+    for _ in 0..6 {
+        // 16 distinct start vertices: both shards essentially certainly
+        // receive traffic (fixed deterministic hash).
+        let (sf, ef, edges) = request_data(&mut rng, 16, 6, 40);
+        let routed = router.predict(&sf, &ef, &edges, None).expect("routable");
+        let unsharded = reference
+            .predict_blocking(sf, ef, edges)
+            .expect("reference path");
+        assert_eq!(routed.result.expect("scored"), unsharded, "sharded == unsharded, bitwise");
+    }
+    let st: &RouterStats = router.stats();
+    assert!(st.scattered.load(Ordering::SeqCst) >= 1, "batches spanned both shards");
+    assert_eq!(st.shard_failures.load(Ordering::SeqCst), 0);
+    reference.shutdown();
+    shutdown(server_a, net_a);
+    shutdown(server_b, net_b);
+}
+
+/// Shard loss: when one of two shards dies, the router charges its health,
+/// ejects it, and every batch still returns complete, correct scores via
+/// the survivor.
+#[test]
+fn router_ejects_dead_shard_and_traffic_continues() {
+    let model = toy_model(91);
+    let (server_a, net_a, addr_a) = listen(model.clone(), 1);
+    let (server_b, net_b, addr_b) = listen(model.clone(), 1);
+    let reference = PredictServer::start(model, config(2));
+    let router = router_over(
+        &[addr_a, addr_b],
+        ShardRouterConfig { eject_after: 1, probe_cooldown_ms: 60_000 },
+    );
+
+    let mut rng = Pcg32::seeded(92);
+    let (sf, ef, edges) = request_data(&mut rng, 16, 6, 40);
+    let expected = reference
+        .predict_blocking(sf.clone(), ef.clone(), edges.clone())
+        .expect("reference path");
+
+    // Healthy warm-up: both shards serving.
+    let routed = router.predict(&sf, &ef, &edges, None).expect("routable");
+    assert_eq!(routed.result.expect("scored"), expected);
+    assert_eq!(router.healthy_count(), 2);
+
+    // Kill shard B entirely (listener and server).
+    shutdown(server_b, net_b);
+
+    for _ in 0..3 {
+        let routed = router.predict(&sf, &ef, &edges, None).expect("survivor carries traffic");
+        assert_eq!(routed.result.expect("scored"), expected, "still complete and bitwise-equal");
+    }
+    assert_eq!(router.stats().ejections.load(Ordering::SeqCst), 1, "dead shard ejected");
+    assert_eq!(router.healthy_count(), 1);
+    assert!(router.stats().shard_failures.load(Ordering::SeqCst) >= 1);
+
+    reference.shutdown();
+    shutdown(server_a, net_a);
+}
