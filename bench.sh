@@ -8,6 +8,8 @@
 # (BENCH_tensor.json), so both --quick and --smoke refresh them.
 # bench_convergence writes the eigendecomposition fast-path comparison
 # (BENCH_eigen.json); in smoke mode only that JSON section runs (-- --smoke).
+# bench_stochastic writes the mini-batch-trainer-vs-CG comparison
+# (BENCH_stochastic.json); smoke mode runs its one small row (-- --smoke).
 #
 # Usage:
 #   ./bench.sh            # every bench target, quick mode
@@ -34,6 +36,8 @@ if [[ "$SMOKE" == 1 ]]; then
     BENCHES=(bench_gemm bench_gvt_micro bench_net)
     echo "==> cargo bench --bench bench_convergence -- --smoke"
     cargo bench --bench bench_convergence -- --smoke
+    echo "==> cargo bench --bench bench_stochastic -- --smoke"
+    cargo bench --bench bench_stochastic -- --smoke
 else
     BENCHES=(
         bench_gemm
@@ -44,6 +48,7 @@ else
         bench_drug_target
         bench_serving
         bench_net
+        bench_stochastic
         bench_table6
     )
 fi

@@ -41,6 +41,11 @@ run cargo test -q --test serving_faults
 # in-process, typed errors round-tripping the socket, protocol edge cases,
 # and the 2-shard router (identical to unsharded, dead-shard ejection).
 run cargo test -q --test net_serving
+# The stochastic-trainer suite by name: the batch-restricted GVT apply
+# pinned bitwise against full-apply rows at every thread count, fixed-seed
+# determinism (in-memory vs on-disk source included), and convergence to
+# the exact CG dual solution.
+run cargo test -q --test stochastic
 run cargo test --doc
 run env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
@@ -99,6 +104,23 @@ assert swap is not None, "BENCH_net.json is missing the 'swap' section"
 for key in ("swaps", "warm_p50_secs", "cold_first_mean_secs", "cold_first_max_secs"):
     assert key in swap, f"BENCH_net.json swap section is missing '{key}'"
 print("BENCH_net.json net/swap schema ok")
+EOF
+
+# The stochastic bench must record the trainer-vs-CG comparison with its
+# full schema (wall-clock, residuals, dual agreement), not just parse.
+run python3 - <<'EOF'
+import json
+doc = json.load(open("../BENCH_stochastic.json"))
+stoch = doc.get("stochastic")
+assert stoch is not None, "BENCH_stochastic.json is missing the 'stochastic' section"
+rows = stoch.get("rows")
+assert rows, "BENCH_stochastic.json stochastic section has no rows"
+for row in rows:
+    for key in ("side", "density", "n_edges", "batch_edges", "epochs_run",
+                "stoch_secs", "stoch_converged", "stoch_final_residual",
+                "cg_iters", "cg_secs", "cg_converged", "max_abs_diff_stoch_cg"):
+        assert key in row, f"BENCH_stochastic.json row is missing '{key}'"
+print("BENCH_stochastic.json stochastic schema ok")
 EOF
 
 # Doc consistency: every CLI flag the binary accepts (the per-subcommand

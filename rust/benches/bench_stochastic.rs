@@ -1,0 +1,149 @@
+//! Stochastic mini-batch trainer vs. exact CG: convergence against
+//! wall-clock on checkerboards scaled past the exact solver's comfortable
+//! size.
+//!
+//! Each row fits the same Kronecker ridge dual system twice — once with the
+//! mini-batch sampled-GVT block coordinate descent trainer
+//! ([`fit_stochastic_source`] over an in-memory streaming source) and once
+//! with plain CG on the full [`KronKernelOp`] — and reports wall-clock,
+//! epoch/iteration counts, final residuals, and the max-abs difference
+//! between the two dual solutions. Expected shape: CG wins on small boards;
+//! as the edge count grows the stochastic trainer's O(batch·m) steps and
+//! streaming access pattern close the gap while tracking the CG solution to
+//! within the residual tolerance.
+//!
+//! Results land in `BENCH_stochastic.json` (section `"stochastic"`, see
+//! `docs/BENCHMARKS.md`). `-- --smoke` runs one small row (what `ci.sh`
+//! exercises); `-- --full` scales the boards up.
+//!
+//! Run: `cargo bench --bench bench_stochastic [-- --full|--smoke] [--seed N]`
+
+use std::sync::Arc;
+
+use kronvt::api::Compute;
+use kronvt::data::checkerboard::CheckerboardConfig;
+use kronvt::data::stream::InMemorySource;
+use kronvt::gvt::operator::RidgeSystemOp;
+use kronvt::gvt::KronKernelOp;
+use kronvt::kernels::KernelKind;
+use kronvt::linalg::solvers::{cg, SolverConfig};
+use kronvt::linalg::vecops::max_abs_diff;
+use kronvt::train::{fit_stochastic_source, StochasticConfig};
+use kronvt::util::args::Args;
+use kronvt::util::json::{update_json_file, Json};
+use kronvt::util::timer::timeit;
+
+/// One comparison case: stochastic trainer vs. plain CG on the same
+/// checkerboard ridge dual system.
+fn row(side: usize, density: f64, batch_edges: usize, epochs: usize, seed: u64) -> Json {
+    let train = CheckerboardConfig {
+        m: side,
+        q: side,
+        density,
+        noise: 0.1,
+        feature_range: 8.0,
+        seed,
+    }
+    .generate();
+    let kernel = KernelKind::Gaussian { gamma: 0.3 };
+    let lambda = 1e-3;
+
+    let cfg = StochasticConfig {
+        lambda,
+        kernel_d: kernel,
+        kernel_t: kernel,
+        batch_edges,
+        epochs,
+        seed,
+        tol: 1e-6,
+        ..Default::default()
+    };
+    let source = InMemorySource::new(&train);
+    let compute = Compute::default();
+    let (stoch, stoch_secs) = timeit(|| {
+        fit_stochastic_source(
+            &source,
+            &train.start_features,
+            &train.end_features,
+            &cfg,
+            &compute,
+            None,
+        )
+        .unwrap()
+    });
+
+    // Exact CG reference on the same dual system (kernel builds included in
+    // the timing, mirroring what a fresh fit pays).
+    let ((cg_stats, x_cg, n), cg_secs) = timeit(|| {
+        let g = kernel.square_matrix(&train.end_features);
+        let k = kernel.square_matrix(&train.start_features);
+        let idx = train.kron_index();
+        let n = idx.len();
+        let op = KronKernelOp::new(Arc::new(g), Arc::new(k), idx);
+        let sys = RidgeSystemOp { op: &op, lambda };
+        let solver_cfg = SolverConfig { max_iters: 4000, tol: 1e-9 };
+        let mut x_cg = vec![0.0; n];
+        let stats = cg(&sys, &train.labels, &mut x_cg, &solver_cfg);
+        (stats, x_cg, n)
+    });
+
+    let diff = max_abs_diff(&stoch.duals, &x_cg);
+    println!(
+        "stochastic {side}x{side} density={density} n={n} batch={batch_edges}: \
+         stoch {} epochs {stoch_secs:.3}s (resid {:.2e}) | cg {} iters {cg_secs:.3}s | \
+         diff {diff:.2e}",
+        stoch.epochs_run, stoch.final_residual, cg_stats.iterations
+    );
+    Json::obj(vec![
+        ("side", Json::from(side)),
+        ("density", Json::from(density)),
+        ("n_edges", Json::from(n)),
+        ("batch_edges", Json::from(batch_edges)),
+        ("epochs_run", Json::from(stoch.epochs_run)),
+        ("stoch_secs", Json::from(stoch_secs)),
+        ("stoch_converged", Json::from(stoch.converged)),
+        ("stoch_final_residual", Json::from(stoch.final_residual)),
+        ("cg_iters", Json::from(cg_stats.iterations)),
+        ("cg_secs", Json::from(cg_secs)),
+        ("cg_converged", Json::from(cg_stats.converged)),
+        ("max_abs_diff_stoch_cg", Json::from(diff)),
+    ])
+}
+
+fn main() {
+    let args = Args::parse();
+    args.expect_known("bench_stochastic", &["bench", "full", "quick", "seed", "smoke"])
+        .expect("flags");
+    let full = args.has("full");
+    let smoke = args.has("smoke");
+    let seed = args.get_u64("seed", 1).expect("--seed");
+
+    println!("--- stochastic mini-batch trainer vs exact CG ---");
+    let rows = if smoke {
+        vec![row(16, 0.5, 128, 40, seed)]
+    } else if full {
+        vec![
+            row(64, 0.5, 512, 60, seed),
+            row(128, 0.5, 1024, 60, seed),
+            row(192, 0.4, 2048, 40, seed),
+        ]
+    } else {
+        vec![row(32, 0.5, 256, 50, seed), row(64, 0.5, 512, 40, seed)]
+    };
+
+    let host_threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let section = Json::obj(vec![
+        ("bench", Json::from("bench_stochastic")),
+        ("host_threads", Json::from(host_threads)),
+        ("smoke", Json::from(smoke)),
+        ("full", Json::from(full)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let out =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_stochastic.json");
+    match update_json_file(&out, "stochastic", section) {
+        Ok(()) => println!("wrote stochastic results to {}", out.display()),
+        Err(err) => eprintln!("failed to write {}: {err}", out.display()),
+    }
+    println!("\nbench_stochastic done");
+}

@@ -22,8 +22,8 @@ use crate::gvt::PairwiseKernelKind;
 use crate::kernels::KernelKind;
 use crate::losses::{L2SvmLoss, LogisticLoss, RankRlsLoss, RidgeLoss};
 use crate::train::{
-    KronRidge, KronSvm, NewtonConfig, NewtonTrainer, RidgeConfig, RidgeSolver, SvmConfig,
-    TensorRidge, TensorRidgeConfig,
+    fit_stochastic, KronRidge, KronSvm, NewtonConfig, NewtonTrainer, RidgeConfig, RidgeSolver,
+    SamplingMode, StepPolicy, StochasticConfig, SvmConfig, TensorRidge, TensorRidgeConfig,
 };
 
 /// Anything that trains a [`TrainedModel`] from a [`Dataset`] — the uniform
@@ -75,6 +75,19 @@ enum Kind {
     Ridge,
     Svm,
     Newton(NewtonLoss),
+    Stochastic,
+}
+
+impl Kind {
+    /// Short name for error messages.
+    fn describe(&self) -> &'static str {
+        match self {
+            Kind::Ridge => "ridge",
+            Kind::Svm => "svm",
+            Kind::Newton(_) => "newton",
+            Kind::Stochastic => "stochastic",
+        }
+    }
 }
 
 /// Fluent builder over every trainer in [`crate::train`]: Kronecker ridge
@@ -112,6 +125,14 @@ pub struct Learner {
     /// Tensor path only: one kernel per grid mode (empty = broadcast
     /// `kernel_d` to every mode).
     mode_kernels: Vec<KernelKind>,
+    /// Stochastic: sampler seed (default 1, the CLI `--seed` default).
+    seed: u64,
+    /// Stochastic: edges per mini-batch (default 512).
+    batch_edges: usize,
+    /// Stochastic: batch sampling mode.
+    sampling: SamplingMode,
+    /// Stochastic: step-size policy.
+    step: StepPolicy,
 }
 
 impl Learner {
@@ -133,6 +154,10 @@ impl Learner {
             solver: RidgeSolver::Auto,
             compute: Compute::default(),
             mode_kernels: Vec::new(),
+            seed: 1,
+            batch_edges: 512,
+            sampling: SamplingMode::EpochShuffle,
+            step: StepPolicy::Auto,
         }
     }
 
@@ -151,6 +176,43 @@ impl Learner {
     /// loss, default 10×10 iterations.
     pub fn newton(loss: NewtonLoss) -> Learner {
         Learner::new(Kind::Newton(loss), 10, 10)
+    }
+
+    /// Stochastic mini-batch dual ridge trainer
+    /// ([`crate::train::stochastic`]): sampled-GVT block coordinate
+    /// descent, default 30 epochs ([`Learner::iterations`] sets the epoch
+    /// budget). Tune with [`Learner::batch_edges`], [`Learner::seed`],
+    /// [`Learner::sampling`], and [`Learner::step`]; Kronecker pairwise
+    /// family and dual models only.
+    pub fn stochastic() -> Learner {
+        Learner::new(Kind::Stochastic, 30, 0)
+    }
+
+    /// Stochastic only: sampler seed (default 1, matching the CLI `--seed`
+    /// default — runs are reproducible even when the seed is never set).
+    pub fn seed(mut self, seed: u64) -> Learner {
+        self.seed = seed;
+        self
+    }
+
+    /// Stochastic only: edges per mini-batch (default 512).
+    pub fn batch_edges(mut self, batch_edges: usize) -> Learner {
+        self.batch_edges = batch_edges;
+        self
+    }
+
+    /// Stochastic only: batch sampling mode (default
+    /// [`SamplingMode::EpochShuffle`]).
+    pub fn sampling(mut self, sampling: SamplingMode) -> Learner {
+        self.sampling = sampling;
+        self
+    }
+
+    /// Stochastic only: step-size policy (default [`StepPolicy::Auto`],
+    /// the per-batch safe trace bound).
+    pub fn step(mut self, step: StepPolicy) -> Learner {
+        self.step = step;
+        self
     }
 
     /// Set the regularization parameter λ.
@@ -283,6 +345,22 @@ impl Learner {
         }
     }
 
+    fn stochastic_cfg(&self) -> StochasticConfig {
+        StochasticConfig {
+            lambda: self.lambda,
+            kernel_d: self.kernel_d,
+            kernel_t: self.kernel_t,
+            batch_edges: self.batch_edges,
+            epochs: self.iterations,
+            seed: self.seed,
+            sampling: self.sampling,
+            step: self.step,
+            tol: self.tol,
+            snapshot_every: 1,
+            patience: self.patience,
+        }
+    }
+
     fn newton_cfg(&self) -> NewtonConfig {
         NewtonConfig {
             lambda: self.lambda,
@@ -330,6 +408,23 @@ impl Learner {
                 }
             }
             Kind::Newton(loss) => self.fit_newton(loss, train, val),
+            Kind::Stochastic => {
+                if self.primal {
+                    return Err("the stochastic trainer is dual-only; drop .primal(true), or \
+                                use Learner::ridge().primal(true) for the primal CG path"
+                        .into());
+                }
+                if self.pairwise != PairwiseKernelKind::Kronecker {
+                    return Err(format!(
+                        "the stochastic trainer supports the Kronecker pairwise family only \
+                         (got '{}'); use Learner::ridge() for the other families",
+                        self.pairwise.name()
+                    ));
+                }
+                let (model, trace) =
+                    fit_stochastic(train, val, &self.stochastic_cfg(), &self.compute)?;
+                Ok(TrainedModel::from_dual(model, self.lambda).with_trace(trace))
+            }
         }
     }
 
@@ -373,7 +468,13 @@ impl Learner {
         lambdas: &[f64],
     ) -> Result<Vec<TrainedModel>, String> {
         if self.kind != Kind::Ridge || self.primal {
-            return Err("fit_path supports the dual ridge learner only".into());
+            return Err(format!(
+                "Learner::fit_path trains a regularization path for the dual ridge learner \
+                 only (this learner is {}{}); construct it with Learner::ridge() without \
+                 .primal(true), or train one model per λ through fit / fit_with_validation",
+                self.kind.describe(),
+                if self.primal { ", primal" } else { "" }
+            ));
         }
         let trainer = KronRidge::new(self.ridge_cfg())
             .with_pairwise(self.pairwise)
@@ -395,7 +496,13 @@ impl Learner {
 
     fn tensor_cfg(&self, order: usize) -> Result<TensorRidgeConfig, String> {
         if self.kind != Kind::Ridge || self.primal {
-            return Err("tensor-chain training supports the dual ridge learner only".into());
+            return Err(format!(
+                "Learner::fit_tensor / fit_tensor_path support the dual ridge learner only \
+                 (this learner is {}{}); construct it with Learner::ridge() without \
+                 .primal(true)",
+                self.kind.describe(),
+                if self.primal { ", primal" } else { "" }
+            ));
         }
         if self.pairwise != PairwiseKernelKind::Kronecker {
             return Err(format!(

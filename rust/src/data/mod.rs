@@ -11,13 +11,20 @@
 //!   rationale.
 //! * [`tensor`] — D-way grid datasets ([`TensorDataset`]) and the
 //!   spatio-temporal checkerboard generator for tensor-chain workloads.
+//! * [`stream`] — chunked [`StreamingEdgeSource`]s (in-memory adapter and
+//!   the `kronvt-edges/v1` on-disk format) feeding the stochastic trainer
+//!   without ever holding the full edge list in one allocation.
 
 pub mod dataset;
 pub mod checkerboard;
 pub mod dti;
 pub mod tensor;
+pub mod stream;
 
 pub use dataset::Dataset;
 pub use checkerboard::{CheckerboardConfig, HomogeneousConfig};
 pub use dti::DtiConfig;
+pub use stream::{
+    BinaryEdgeReader, BinaryEdgeWriter, EdgeChunk, InMemorySource, StreamingEdgeSource,
+};
 pub use tensor::{GridCheckerboardConfig, TensorDataset};

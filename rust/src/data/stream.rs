@@ -1,0 +1,459 @@
+//! Streaming edge sources: chunked, re-readable access to labeled edges so
+//! the stochastic trainer ([`crate::train::stochastic`]) never needs the
+//! full label vector or edge index in one allocation.
+//!
+//! Two implementations of [`StreamingEdgeSource`] ship:
+//!
+//! * [`InMemorySource`] — an adapter over any existing [`Dataset`], slicing
+//!   its edge arrays into fixed-size chunks;
+//! * [`BinaryEdgeReader`] — an on-disk reader for the `kronvt-edges/v1`
+//!   chunked binary format written by [`BinaryEdgeWriter`] (or the
+//!   [`write_dataset_edges`] converter), seeking straight to a chunk
+//!   without ever loading the whole edge set.
+//!
+//! Both sources chunk the *same* edge sequence identically for equal
+//! `chunk_edges`, and every value round-trips bit-for-bit (indices as
+//! little-endian `u32`, labels as little-endian `f64` bit patterns) — so a
+//! seeded stochastic fit is **bitwise identical** whether it streams from
+//! memory or from disk (pinned in `tests/stochastic.rs`).
+//!
+//! # `kronvt-edges/v1` on-disk layout
+//!
+//! ```text
+//! magic   8 bytes   b"KVTEDGS1"
+//! n       u64 LE    total edge count
+//! chunk   u64 LE    nominal edges per chunk (≥ 1; last chunk may be short)
+//! then, chunk-major, for each chunk of length L:
+//!   L × u32 LE      start-vertex indices
+//!   L × u32 LE      end-vertex indices
+//!   L × f64 LE      labels (raw IEEE-754 bit patterns)
+//! ```
+//!
+//! Every chunk except the last holds exactly `chunk` edges, so chunk `k`
+//! starts at byte `24 + 16·k·chunk` — random access needs no chunk table.
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use super::Dataset;
+
+/// Default chunk granularity for streaming sources: large enough to
+/// amortize per-chunk overhead (plans, bucketing), small enough that a
+/// chunk's arrays stay a bounded allocation (~1 MiB) independent of the
+/// total edge count.
+pub const DEFAULT_CHUNK_EDGES: usize = 65_536;
+
+/// Magic bytes opening a `kronvt-edges/v1` file.
+const MAGIC: &[u8; 8] = b"KVTEDGS1";
+
+/// Header length in bytes: magic + `n_edges` + `chunk_edges`.
+const HEADER_LEN: u64 = 24;
+
+/// Bytes per edge in the payload: two `u32` indices + one `f64` label.
+const EDGE_BYTES: u64 = 16;
+
+/// One contiguous run of labeled edges handed out by a
+/// [`StreamingEdgeSource`]; arrays are index-aligned.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EdgeChunk {
+    /// Edge start-vertex indices (rows of the start-feature matrix).
+    pub start_idx: Vec<u32>,
+    /// Edge end-vertex indices (rows of the end-feature matrix).
+    pub end_idx: Vec<u32>,
+    /// Edge labels.
+    pub labels: Vec<f64>,
+}
+
+impl EdgeChunk {
+    /// Number of edges in the chunk.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Whether the chunk holds zero edges.
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Check index bounds against the vertex counts (`start < m`,
+    /// `end < q`) and array alignment.
+    pub fn validate(&self, m: usize, q: usize) -> Result<(), String> {
+        if self.start_idx.len() != self.labels.len() || self.end_idx.len() != self.labels.len() {
+            return Err("edge chunk arrays have mismatched lengths".into());
+        }
+        for (i, (&s, &e)) in self.start_idx.iter().zip(&self.end_idx).enumerate() {
+            if s as usize >= m {
+                return Err(format!("chunk edge {i}: start index {s} ≥ m={m}"));
+            }
+            if e as usize >= q {
+                return Err(format!("chunk edge {i}: end index {e} ≥ q={q}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Chunked, re-readable access to a labeled edge sequence.
+///
+/// The contract the stochastic trainer relies on:
+///
+/// * chunks partition the edge sequence in order — chunk `k` covers global
+///   edge positions [`StreamingEdgeSource::chunk_range`]`(k)`;
+/// * every chunk except possibly the last holds exactly
+///   [`StreamingEdgeSource::chunk_edges`] edges;
+/// * [`StreamingEdgeSource::read_chunk`] is repeatable: reading the same
+///   chunk twice (e.g. once per epoch) yields identical values.
+pub trait StreamingEdgeSource {
+    /// Total number of labeled edges.
+    fn n_edges(&self) -> usize;
+
+    /// Nominal edges per chunk (the last chunk may be shorter).
+    fn chunk_edges(&self) -> usize;
+
+    /// Number of chunks covering the edge sequence.
+    fn n_chunks(&self) -> usize {
+        self.n_edges().div_ceil(self.chunk_edges())
+    }
+
+    /// Global edge-position range `[lo, hi)` covered by chunk `k`.
+    fn chunk_range(&self, k: usize) -> (usize, usize) {
+        let lo = k * self.chunk_edges();
+        (lo, (lo + self.chunk_edges()).min(self.n_edges()))
+    }
+
+    /// Read chunk `k` (`0 ≤ k <` [`StreamingEdgeSource::n_chunks`]).
+    fn read_chunk(&self, k: usize) -> Result<EdgeChunk, String>;
+}
+
+/// [`StreamingEdgeSource`] adapter over an in-memory [`Dataset`]: chunks
+/// are slices of the dataset's edge arrays, in edge order. With equal
+/// `chunk_edges` it yields the same chunk stream as a
+/// [`BinaryEdgeReader`] over a file converted from the same dataset.
+#[derive(Debug, Clone)]
+pub struct InMemorySource<'a> {
+    data: &'a Dataset,
+    chunk_edges: usize,
+}
+
+impl<'a> InMemorySource<'a> {
+    /// Adapter with the [`DEFAULT_CHUNK_EDGES`] granularity.
+    pub fn new(data: &'a Dataset) -> InMemorySource<'a> {
+        InMemorySource { data, chunk_edges: DEFAULT_CHUNK_EDGES }
+    }
+
+    /// Adapter with an explicit chunk granularity (must be ≥ 1).
+    pub fn with_chunk_edges(data: &'a Dataset, chunk_edges: usize) -> Result<Self, String> {
+        if chunk_edges == 0 {
+            return Err(
+                "streaming source chunk_edges must be ≥ 1 (got 0); \
+                 use InMemorySource::new for the default granularity"
+                    .into(),
+            );
+        }
+        Ok(InMemorySource { data, chunk_edges })
+    }
+}
+
+impl StreamingEdgeSource for InMemorySource<'_> {
+    fn n_edges(&self) -> usize {
+        self.data.n_edges()
+    }
+
+    fn chunk_edges(&self) -> usize {
+        self.chunk_edges
+    }
+
+    fn read_chunk(&self, k: usize) -> Result<EdgeChunk, String> {
+        let (lo, hi) = self.chunk_range(k);
+        if lo >= hi {
+            return Err(format!("chunk {k} out of range ({} chunks)", self.n_chunks()));
+        }
+        Ok(EdgeChunk {
+            start_idx: self.data.start_idx[lo..hi].to_vec(),
+            end_idx: self.data.end_idx[lo..hi].to_vec(),
+            labels: self.data.labels[lo..hi].to_vec(),
+        })
+    }
+}
+
+/// Incremental writer for the `kronvt-edges/v1` format: push edges one at a
+/// time (buffering one chunk, never the full edge set) and call
+/// [`BinaryEdgeWriter::finish`] to patch the header with the final count.
+#[derive(Debug)]
+pub struct BinaryEdgeWriter {
+    out: BufWriter<File>,
+    chunk_edges: usize,
+    start_buf: Vec<u32>,
+    end_buf: Vec<u32>,
+    label_buf: Vec<f64>,
+    written: u64,
+}
+
+impl BinaryEdgeWriter {
+    /// Create (truncating) `path` with the given chunk granularity (≥ 1).
+    pub fn create(path: &Path, chunk_edges: usize) -> Result<BinaryEdgeWriter, String> {
+        if chunk_edges == 0 {
+            return Err("edge-file chunk_edges must be ≥ 1 (got 0)".into());
+        }
+        let file = File::create(path)
+            .map_err(|e| format!("failed to create edge file {}: {e}", path.display()))?;
+        let mut out = BufWriter::new(file);
+        // n_edges is patched by finish(); write 0 so a crashed conversion
+        // reads back as an empty (not corrupt) edge set.
+        out.write_all(MAGIC)
+            .and_then(|()| out.write_all(&0u64.to_le_bytes()))
+            .and_then(|()| out.write_all(&(chunk_edges as u64).to_le_bytes()))
+            .map_err(|e| format!("failed to write edge-file header: {e}"))?;
+        Ok(BinaryEdgeWriter {
+            out,
+            chunk_edges,
+            start_buf: Vec::with_capacity(chunk_edges),
+            end_buf: Vec::with_capacity(chunk_edges),
+            label_buf: Vec::with_capacity(chunk_edges),
+            written: 0,
+        })
+    }
+
+    /// Append one labeled edge; flushes a full chunk to disk transparently.
+    pub fn push(&mut self, start: u32, end: u32, label: f64) -> Result<(), String> {
+        self.start_buf.push(start);
+        self.end_buf.push(end);
+        self.label_buf.push(label);
+        if self.label_buf.len() == self.chunk_edges {
+            self.flush_chunk()?;
+        }
+        Ok(())
+    }
+
+    /// Write the buffered chunk's three arrays in the chunk-major layout.
+    fn flush_chunk(&mut self) -> Result<(), String> {
+        for &s in &self.start_buf {
+            self.out
+                .write_all(&s.to_le_bytes())
+                .map_err(|e| format!("failed to write edge chunk: {e}"))?;
+        }
+        for &t in &self.end_buf {
+            self.out
+                .write_all(&t.to_le_bytes())
+                .map_err(|e| format!("failed to write edge chunk: {e}"))?;
+        }
+        for &y in &self.label_buf {
+            self.out
+                .write_all(&y.to_le_bytes())
+                .map_err(|e| format!("failed to write edge chunk: {e}"))?;
+        }
+        self.written += self.label_buf.len() as u64;
+        self.start_buf.clear();
+        self.end_buf.clear();
+        self.label_buf.clear();
+        Ok(())
+    }
+
+    /// Flush the trailing partial chunk, patch the header's edge count, and
+    /// sync the file. Returns the total edge count written.
+    pub fn finish(mut self) -> Result<usize, String> {
+        if !self.label_buf.is_empty() {
+            self.flush_chunk()?;
+        }
+        self.out.flush().map_err(|e| format!("failed to flush edge file: {e}"))?;
+        let file = self.out.get_mut();
+        file.seek(SeekFrom::Start(MAGIC.len() as u64))
+            .and_then(|_| file.write_all(&self.written.to_le_bytes()))
+            .and_then(|()| file.sync_all())
+            .map_err(|e| format!("failed to finalize edge-file header: {e}"))?;
+        Ok(self.written as usize)
+    }
+}
+
+/// Convert an in-memory [`Dataset`]'s edges to the `kronvt-edges/v1` format
+/// at `path`. Returns the edge count written. A [`BinaryEdgeReader`] over
+/// the result yields the same chunk stream as
+/// [`InMemorySource::with_chunk_edges`] on the dataset with equal
+/// `chunk_edges`.
+pub fn write_dataset_edges(
+    path: &Path,
+    data: &Dataset,
+    chunk_edges: usize,
+) -> Result<usize, String> {
+    let mut writer = BinaryEdgeWriter::create(path, chunk_edges)?;
+    for i in 0..data.n_edges() {
+        writer.push(data.start_idx[i], data.end_idx[i], data.labels[i])?;
+    }
+    writer.finish()
+}
+
+/// [`StreamingEdgeSource`] over a `kronvt-edges/v1` file: the header is
+/// validated once at open (magic, chunk granularity, exact payload length);
+/// each [`StreamingEdgeSource::read_chunk`] seeks straight to the chunk and
+/// reads only its bytes.
+#[derive(Debug, Clone)]
+pub struct BinaryEdgeReader {
+    path: PathBuf,
+    n_edges: usize,
+    chunk_edges: usize,
+}
+
+impl BinaryEdgeReader {
+    /// Open and validate the header of a `kronvt-edges/v1` file.
+    pub fn open(path: &Path) -> Result<BinaryEdgeReader, String> {
+        let mut file = File::open(path)
+            .map_err(|e| format!("failed to open edge file {}: {e}", path.display()))?;
+        let mut header = [0u8; HEADER_LEN as usize];
+        file.read_exact(&mut header)
+            .map_err(|e| format!("failed to read edge-file header of {}: {e}", path.display()))?;
+        if &header[..8] != MAGIC {
+            return Err(format!(
+                "{} is not a kronvt-edges/v1 file (bad magic)",
+                path.display()
+            ));
+        }
+        let n_edges = u64::from_le_bytes(header[8..16].try_into().expect("8 bytes"));
+        let chunk_edges = u64::from_le_bytes(header[16..24].try_into().expect("8 bytes"));
+        if chunk_edges == 0 {
+            return Err(format!("{}: chunk_edges is 0 in header", path.display()));
+        }
+        let expected = HEADER_LEN + n_edges * EDGE_BYTES;
+        let actual = file
+            .metadata()
+            .map_err(|e| format!("failed to stat {}: {e}", path.display()))?
+            .len();
+        if actual != expected {
+            return Err(format!(
+                "{}: truncated or oversized payload ({actual} bytes, expected {expected} for \
+                 {n_edges} edges)",
+                path.display()
+            ));
+        }
+        Ok(BinaryEdgeReader {
+            path: path.to_path_buf(),
+            n_edges: n_edges as usize,
+            chunk_edges: chunk_edges as usize,
+        })
+    }
+
+    /// The file this reader streams from.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl StreamingEdgeSource for BinaryEdgeReader {
+    fn n_edges(&self) -> usize {
+        self.n_edges
+    }
+
+    fn chunk_edges(&self) -> usize {
+        self.chunk_edges
+    }
+
+    fn read_chunk(&self, k: usize) -> Result<EdgeChunk, String> {
+        let (lo, hi) = self.chunk_range(k);
+        if lo >= hi {
+            return Err(format!("chunk {k} out of range ({} chunks)", self.n_chunks()));
+        }
+        let len = hi - lo;
+        let mut file = File::open(&self.path)
+            .map_err(|e| format!("failed to open edge file {}: {e}", self.path.display()))?;
+        file.seek(SeekFrom::Start(HEADER_LEN + lo as u64 * EDGE_BYTES))
+            .map_err(|e| format!("failed to seek edge file {}: {e}", self.path.display()))?;
+        let mut bytes = vec![0u8; len * EDGE_BYTES as usize];
+        file.read_exact(&mut bytes)
+            .map_err(|e| format!("failed to read chunk {k} of {}: {e}", self.path.display()))?;
+        let (starts, rest) = bytes.split_at(len * 4);
+        let (ends, labels) = rest.split_at(len * 4);
+        Ok(EdgeChunk {
+            start_idx: starts
+                .chunks_exact(4)
+                .map(|b| u32::from_le_bytes(b.try_into().expect("4 bytes")))
+                .collect(),
+            end_idx: ends
+                .chunks_exact(4)
+                .map(|b| u32::from_le_bytes(b.try_into().expect("4 bytes")))
+                .collect(),
+            labels: labels
+                .chunks_exact(8)
+                .map(|b| f64::from_le_bytes(b.try_into().expect("8 bytes")))
+                .collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::checkerboard::CheckerboardConfig;
+
+    fn temp_path(tag: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("kronvt-stream-{tag}-{}.edges", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn in_memory_chunks_cover_the_dataset() {
+        let ds = CheckerboardConfig { m: 12, q: 10, ..CheckerboardConfig::default() }.generate();
+        let src = InMemorySource::with_chunk_edges(&ds, 17).unwrap();
+        assert_eq!(src.n_edges(), ds.n_edges());
+        let mut seen = 0;
+        for k in 0..src.n_chunks() {
+            let (lo, hi) = src.chunk_range(k);
+            let chunk = src.read_chunk(k).unwrap();
+            assert_eq!(chunk.len(), hi - lo);
+            assert!(chunk.validate(ds.m(), ds.q()).is_ok());
+            assert_eq!(chunk.labels, &ds.labels[lo..hi]);
+            assert_eq!(chunk.start_idx, &ds.start_idx[lo..hi]);
+            assert_eq!(chunk.end_idx, &ds.end_idx[lo..hi]);
+            seen += chunk.len();
+        }
+        assert_eq!(seen, ds.n_edges());
+        assert!(InMemorySource::with_chunk_edges(&ds, 0).is_err());
+    }
+
+    #[test]
+    fn binary_round_trip_is_bitwise() {
+        let mut ds =
+            CheckerboardConfig { m: 9, q: 11, ..CheckerboardConfig::default() }.generate();
+        // exotic bit patterns must survive the trip untouched
+        ds.labels[0] = -0.0;
+        ds.labels[1] = f64::MIN_POSITIVE / 2.0; // subnormal
+        let path = temp_path("roundtrip");
+        let written = write_dataset_edges(&path, &ds, 13).unwrap();
+        assert_eq!(written, ds.n_edges());
+        let reader = BinaryEdgeReader::open(&path).unwrap();
+        assert_eq!(reader.n_edges(), ds.n_edges());
+        assert_eq!(reader.chunk_edges(), 13);
+        let mem = InMemorySource::with_chunk_edges(&ds, 13).unwrap();
+        assert_eq!(reader.n_chunks(), mem.n_chunks());
+        for k in 0..reader.n_chunks() {
+            let a = reader.read_chunk(k).unwrap();
+            let b = mem.read_chunk(k).unwrap();
+            assert_eq!(a.start_idx, b.start_idx, "chunk {k}");
+            assert_eq!(a.end_idx, b.end_idx, "chunk {k}");
+            let bits_a: Vec<u64> = a.labels.iter().map(|y| y.to_bits()).collect();
+            let bits_b: Vec<u64> = b.labels.iter().map(|y| y.to_bits()).collect();
+            assert_eq!(bits_a, bits_b, "chunk {k}");
+        }
+        // re-reading a chunk yields identical values
+        assert_eq!(reader.read_chunk(0).unwrap(), reader.read_chunk(0).unwrap());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn reader_rejects_corrupt_files() {
+        let ds = CheckerboardConfig { m: 6, q: 6, ..CheckerboardConfig::default() }.generate();
+        let path = temp_path("corrupt");
+        write_dataset_edges(&path, &ds, 8).unwrap();
+        // bad magic
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] = b'X';
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(BinaryEdgeReader::open(&path).unwrap_err().contains("bad magic"));
+        // truncated payload
+        bytes[0] = b'K';
+        bytes.pop();
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(BinaryEdgeReader::open(&path).unwrap_err().contains("truncated"));
+        std::fs::remove_file(&path).ok();
+    }
+}

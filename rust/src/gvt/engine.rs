@@ -16,6 +16,10 @@
 //!   blocks: each worker writes a contiguous slab of the destination.
 //! * **Stage 2** is embarrassingly parallel over the `f` output edges;
 //!   workers take contiguous chunks of `u`.
+//! * **Sampled batches** ([`BatchPlan`]) reuse the same stable bucketing for
+//!   the stochastic trainer: row-restricted applies bitwise-pinned to the
+//!   full apply, plus incremental scatter/gather against a persistent
+//!   stage-1 accumulator.
 //!
 //! Within a destination row, bucketed edges keep their original order, so
 //! every floating-point accumulation happens in exactly the same order as in
@@ -159,6 +163,111 @@ impl EdgePlan {
         match branch {
             Branch::T => Some((&self.t_out_order, &self.t_out_offsets)),
             Branch::S => Some((&self.s_out_order, &self.s_out_offsets)),
+        }
+    }
+}
+
+/// Stage-1/stage-2 bucketing of a **sampled edge batch** against a fixed
+/// full [`KronIndex`] — the stochastic-training analogue of [`EdgePlan`].
+///
+/// A batch is a list of *positions into a full index* (duplicates allowed,
+/// order significant — samplers with replacement produce both). The plan
+/// buckets those positions by their stage-1 destination row with the same
+/// stable counting sort [`EdgePlan`] uses for full edge sets, so the batched
+/// primitives on [`GvtEngine`] parallelize with conflict-free row ownership
+/// and stay bitwise identical to their serial batch-order replay:
+///
+/// * [`GvtEngine::apply_restricted`] — the planned apply with stage 2 cut
+///   down to the batch's output rows, **bitwise-pinned** to slicing the full
+///   apply (build the plan against the `rows` index);
+/// * [`GvtEngine::scatter_batch`] — add a batch coefficient update into a
+///   persistent stage-1 accumulator, touching only the batch's edges (build
+///   against the `cols` index);
+/// * [`GvtEngine::gather_batch`] — read the batch's output values back out
+///   of such an accumulator with strided dots (build against `rows`).
+///
+/// For the symmetric training operator `R(G⊗K)Rᵀ` the row and column
+/// indices coincide, so one plan per batch serves all three.
+#[derive(Debug, Clone)]
+pub struct BatchPlan {
+    /// Batch edge positions into the full index (may repeat).
+    edges: Vec<u32>,
+    /// Length of the full index the plan was built against.
+    full: usize,
+    /// Batch slots grouped by `index.right[edges[i]]` (branch T destination
+    /// rows, `right_bound` buckets).
+    t_order: Vec<u32>,
+    /// Bucket boundaries into [`BatchPlan::t_order`], length
+    /// `right_bound + 1`.
+    t_offsets: Vec<usize>,
+    /// Batch slots grouped by `index.left[edges[i]]` (branch S destination
+    /// rows, `left_bound` buckets).
+    s_order: Vec<u32>,
+    /// Bucket boundaries into [`BatchPlan::s_order`], length
+    /// `left_bound + 1`.
+    s_offsets: Vec<usize>,
+}
+
+impl BatchPlan {
+    /// Bucket the batch `positions` against `index` for both branches.
+    /// `left_bound` / `right_bound` bound the index's left / right entries —
+    /// pass `(b, d)` when `index` is a column index and `(a, c)` when it is
+    /// a row index (matching [`EdgePlan::build`]'s convention). Panics on an
+    /// out-of-range position.
+    pub fn build(
+        index: &KronIndex,
+        positions: &[u32],
+        left_bound: usize,
+        right_bound: usize,
+    ) -> BatchPlan {
+        let full = index.len();
+        let mut t_keys = Vec::with_capacity(positions.len());
+        let mut s_keys = Vec::with_capacity(positions.len());
+        for &pos in positions {
+            let l = pos as usize;
+            assert!(l < full, "batch position {l} out of range for a {full}-edge index");
+            t_keys.push(index.right[l]);
+            s_keys.push(index.left[l]);
+        }
+        let (t_order, t_offsets) = bucket_stable(&t_keys, right_bound);
+        let (s_order, s_offsets) = bucket_stable(&s_keys, left_bound);
+        BatchPlan {
+            edges: positions.to_vec(),
+            full,
+            t_order,
+            t_offsets,
+            s_order,
+            s_offsets,
+        }
+    }
+
+    /// Number of batch slots (with-replacement batches count duplicates).
+    pub fn len(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Whether the batch is empty.
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    /// The batch's edge positions into the full index, in sampling order.
+    pub fn positions(&self) -> &[u32] {
+        &self.edges
+    }
+
+    /// Length of the full index the plan was built against.
+    pub fn full_len(&self) -> usize {
+        self.full
+    }
+
+    /// `(order, offsets)` of the requested branch's stage-1 buckets: slots
+    /// grouped by destination row; `order` entries index the batch, not the
+    /// full edge set.
+    fn buckets(&self, branch: Branch) -> (&[u32], &[usize]) {
+        match branch {
+            Branch::T => (&self.t_order, &self.t_offsets),
+            Branch::S => (&self.s_order, &self.s_offsets),
         }
     }
 }
@@ -618,6 +727,231 @@ impl GvtEngine {
                 let s = &s_buf[..c * b];
                 stage2_parallel(u, &rows.left, &rows.right, threads, |p, q| {
                     dot(&s[q * b..(q + 1) * b], m.row(p))
+                });
+            }
+        }
+    }
+
+    /// [`GvtEngine::apply_planned`] restricted to a sampled subset of output
+    /// rows: stage 1 runs over the **full** column index exactly as the full
+    /// apply would, and stage 2 evaluates only the output edges named by
+    /// `batch` (built against this `rows` index), writing
+    /// `u[i] = (R(M⊗N)Cᵀv)[batch.positions()[i]]`.
+    ///
+    /// **Bitwise pin:** `u[i]` is bit-for-bit the value the full apply
+    /// writes at position `batch.positions()[i]`, for every thread count and
+    /// both branches — automatic branch selection uses the *full* output
+    /// length `f` (not the batch length) so restriction can never flip the
+    /// branch, stage 1 is shared verbatim, and each stage-2 output is an
+    /// independent dot against the shared stage-1 result. This is the
+    /// per-iteration operator contract the stochastic trainer's tests pin.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_restricted(
+        &self,
+        m: &Matrix,
+        n: &Matrix,
+        m_t: &Matrix,
+        n_t: &Matrix,
+        rows: &KronIndex,
+        cols: &KronIndex,
+        plan: &EdgePlan,
+        batch: &BatchPlan,
+        v: &[f64],
+        u: &mut [f64],
+        ws: &mut GvtWorkspace,
+        branch: Option<Branch>,
+    ) {
+        let (a, b) = (m.rows(), m.cols());
+        let (c, d) = (n.rows(), n.cols());
+        let e = cols.len();
+        let f = rows.len();
+        assert_eq!(plan.len(), e, "plan was built for a different column index");
+        assert_eq!(batch.full_len(), f, "batch was built for a different row index");
+        assert_eq!(v.len(), e, "v must have length e = |cols|");
+        assert_eq!(u.len(), batch.len(), "u must have one slot per batch position");
+        debug_assert_eq!(m_t.rows(), b);
+        debug_assert_eq!(m_t.cols(), a);
+        debug_assert_eq!(n_t.rows(), d);
+        debug_assert_eq!(n_t.cols(), c);
+        // Mirror the full apply's branch choice (which sees the full f) so
+        // the restricted result is a pure row-slice of the full result.
+        let branch = branch.unwrap_or_else(|| complexity::choose_branch(a, b, c, d, e, f));
+        let serial = self.threads <= 1 || e + batch.len() < MIN_PARALLEL_EDGES;
+        let threads = if serial { 1 } else { self.threads };
+        match branch {
+            Branch::T => {
+                let (t_buf, tt_buf) = ws.grab_uncleared(d * a, a * d);
+                if serial {
+                    // Original-order stage-1 replay: bitwise-equal to the
+                    // bucketed replay (per destination row both visit edges
+                    // in original order) and to the serial full apply.
+                    let t = &mut t_buf[..d * a];
+                    t.fill(0.0);
+                    for (l, &vl) in v.iter().enumerate() {
+                        if vl == 0.0 {
+                            continue; // sparse shortcut, eq. (5)
+                        }
+                        let row = cols.right[l] as usize;
+                        axpy(vl, m_t.row(cols.left[l] as usize), &mut t[row * a..(row + 1) * a]);
+                    }
+                } else {
+                    let (order, offsets) = plan.buckets(branch);
+                    stage1_parallel(t_buf, a, order, offsets, &cols.left, m_t, v, threads);
+                }
+                transpose_into_parallel(t_buf, d, a, tt_buf, threads);
+                let tt = &tt_buf[..a * d];
+                stage2_restricted(u, &batch.edges, &rows.left, &rows.right, threads, |p, q| {
+                    dot(n.row(q), &tt[p * d..(p + 1) * d])
+                });
+            }
+            Branch::S => {
+                let (st_buf, s_buf) = ws.grab_uncleared(b * c, c * b);
+                if serial {
+                    let st = &mut st_buf[..b * c];
+                    st.fill(0.0);
+                    for (l, &vl) in v.iter().enumerate() {
+                        if vl == 0.0 {
+                            continue; // sparse shortcut, eq. (5)
+                        }
+                        let row = cols.left[l] as usize;
+                        axpy(vl, n_t.row(cols.right[l] as usize), &mut st[row * c..(row + 1) * c]);
+                    }
+                } else {
+                    let (order, offsets) = plan.buckets(branch);
+                    stage1_parallel(st_buf, c, order, offsets, &cols.right, n_t, v, threads);
+                }
+                transpose_into_parallel(st_buf, b, c, s_buf, threads);
+                let s = &s_buf[..c * b];
+                stage2_restricted(u, &batch.edges, &rows.left, &rows.right, threads, |p, q| {
+                    dot(&s[q * b..(q + 1) * b], m.row(p))
+                });
+            }
+        }
+    }
+
+    /// Adds a batched stage-1 update into a **persistent accumulator**: for
+    /// each batch slot `i` naming edge `l = batch.positions()[i]`,
+    ///
+    /// * branch T: `acc[cols.right[l], :] += delta[i] · Mᵀ[cols.left[l], :]`
+    ///   with `acc ∈ R^{d×a}` (pass `factor_t = Mᵀ`),
+    /// * branch S: `acc[cols.left[l], :] += delta[i] · Nᵀ[cols.right[l], :]`
+    ///   with `acc ∈ R^{b×c}` (pass `factor_t = Nᵀ`).
+    ///
+    /// The accumulator is **not cleared** — this is the incremental update
+    /// the stochastic trainer uses to keep its stage-1 state current in
+    /// `O(|batch|)` work per step instead of `O(e)`. Workers own disjoint
+    /// destination-row ranges from the batch's stable buckets and replay
+    /// slots in batch order within each row, so the result is bitwise
+    /// identical to the serial batch-order replay at every thread count.
+    /// Zero deltas are skipped (eq. 5). `batch` must have been built against
+    /// this `cols` index.
+    pub fn scatter_batch(
+        &self,
+        factor_t: &Matrix,
+        cols: &KronIndex,
+        batch: &BatchPlan,
+        delta: &[f64],
+        acc: &mut [f64],
+        branch: Branch,
+    ) {
+        assert_eq!(batch.full_len(), cols.len(), "batch was built for a different column index");
+        assert_eq!(delta.len(), batch.len(), "delta must have one entry per batch position");
+        let (order, offsets) = batch.buckets(branch);
+        let (keys, gather): (&[u32], &[u32]) = match branch {
+            Branch::T => (&cols.right, &cols.left),
+            Branch::S => (&cols.left, &cols.right),
+        };
+        let rows_n = offsets.len() - 1;
+        let width = factor_t.cols();
+        assert!(acc.len() >= rows_n * width, "accumulator too small for this branch");
+        if self.threads <= 1 || batch.len() < MIN_PARALLEL_EDGES {
+            for (i, &di) in delta.iter().enumerate() {
+                if di == 0.0 {
+                    continue; // sparse shortcut, eq. (5)
+                }
+                let l = batch.edges[i] as usize;
+                let row = keys[l] as usize;
+                let dst = &mut acc[row * width..(row + 1) * width];
+                axpy(di, factor_t.row(gather[l] as usize), dst);
+            }
+            return;
+        }
+        let ranges = edge_balanced_chunks(offsets, self.threads);
+        std::thread::scope(|scope| {
+            let mut rest = &mut acc[..rows_n * width];
+            for &(r0, r1) in &ranges {
+                let (slab, tail) = rest.split_at_mut((r1 - r0) * width);
+                rest = tail;
+                scope.spawn(move || {
+                    for row in r0..r1 {
+                        let dst = &mut slab[(row - r0) * width..(row - r0 + 1) * width];
+                        for &i in &order[offsets[row]..offsets[row + 1]] {
+                            let di = delta[i as usize];
+                            if di == 0.0 {
+                                continue;
+                            }
+                            let l = batch.edges[i as usize] as usize;
+                            axpy(di, factor_t.row(gather[l] as usize), dst);
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    /// Reads the batch's output values out of a stage-1 accumulator
+    /// maintained by [`GvtEngine::scatter_batch`]: for each batch slot `i`
+    /// naming output edge `h = batch.positions()[i]` with
+    /// `p = rows.left[h]`, `q = rows.right[h]`,
+    ///
+    /// * branch T: `u[i] = Σ_t N[q, t] · acc[t·a + p]` — the strided
+    ///   column-`p` dot of the un-transposed `d×a` accumulator;
+    /// * branch S: `u[i] = Σ_r M[p, r] · acc[r·c + q]`.
+    ///
+    /// Each slot is an independent sequential-order sum, so the result is
+    /// deterministic for every thread count. It is numerically equal — not
+    /// bitwise — to the transposed, [`dot`]-reduced stage 2 of the full
+    /// apply (which reduces 4-way-unrolled); the bitwise-pinned restricted
+    /// operator is [`GvtEngine::apply_restricted`]. `batch` must have been
+    /// built against this `rows` index.
+    pub fn gather_batch(
+        &self,
+        m: &Matrix,
+        n: &Matrix,
+        rows: &KronIndex,
+        batch: &BatchPlan,
+        acc: &[f64],
+        u: &mut [f64],
+        branch: Branch,
+    ) {
+        assert_eq!(batch.full_len(), rows.len(), "batch was built for a different row index");
+        assert_eq!(u.len(), batch.len(), "u must have one slot per batch position");
+        let threads = if self.threads <= 1 || batch.len() < MIN_PARALLEL_EDGES {
+            1
+        } else {
+            self.threads
+        };
+        match branch {
+            Branch::T => {
+                let (a, d) = (m.rows(), n.cols());
+                assert!(acc.len() >= d * a, "accumulator too small for branch T");
+                stage2_restricted(u, &batch.edges, &rows.left, &rows.right, threads, |p, q| {
+                    let mut s = 0.0;
+                    for (t, &nqt) in n.row(q).iter().enumerate() {
+                        s += nqt * acc[t * a + p];
+                    }
+                    s
+                });
+            }
+            Branch::S => {
+                let (b, c) = (m.cols(), n.rows());
+                assert!(acc.len() >= b * c, "accumulator too small for branch S");
+                stage2_restricted(u, &batch.edges, &rows.left, &rows.right, threads, |p, q| {
+                    let mut s = 0.0;
+                    for (r, &mpr) in m.row(p).iter().enumerate() {
+                        s += mpr * acc[r * c + q];
+                    }
+                    s
                 });
             }
         }
@@ -1215,6 +1549,45 @@ fn stage2_parallel(
     });
 }
 
+/// Restricted stage-2 fan-out: like [`stage2_parallel`], but evaluating only
+/// the output rows named by `picks` (positions into `left`/`right`), writing
+/// `u[i] = score(left[picks[i]], right[picks[i]])`. Each output is an
+/// independent evaluation against the shared stage-1 result, so every value
+/// is bitwise the one the full stage 2 writes at the same position, for any
+/// thread count.
+fn stage2_restricted(
+    u: &mut [f64],
+    picks: &[u32],
+    left: &[u32],
+    right: &[u32],
+    threads: usize,
+    score: impl Fn(usize, usize) -> f64 + Sync,
+) {
+    debug_assert_eq!(u.len(), picks.len());
+    let ranges = even_chunks(u.len(), threads);
+    if ranges.len() <= 1 {
+        for (uh, &h) in u.iter_mut().zip(picks) {
+            let h = h as usize;
+            *uh = score(left[h] as usize, right[h] as usize);
+        }
+        return;
+    }
+    let score = &score;
+    std::thread::scope(|scope| {
+        let mut rest = u;
+        for &(i0, i1) in &ranges {
+            let (chunk, tail) = rest.split_at_mut(i1 - i0);
+            rest = tail;
+            scope.spawn(move || {
+                for (i, uh) in chunk.iter_mut().enumerate() {
+                    let h = picks[i0 + i] as usize;
+                    *uh = score(left[h] as usize, right[h] as usize);
+                }
+            });
+        }
+    });
+}
+
 /// Default retention bound for [`WorkspacePool`] — enough for a healthy
 /// scoring pool's steady state without letting a one-off concurrency burst
 /// pin its high-watermark of scratch memory forever.
@@ -1778,5 +2151,119 @@ mod tests {
         assert_eq!(ok.dims_a(), &[2, 2, 2]);
         assert_eq!(ok.dims_b(), &[2, 2, 2]);
         assert!(!ok.is_empty());
+    }
+
+    #[test]
+    fn batch_plan_buckets_are_stable_over_batch_slots() {
+        // index: right keys per edge position 0..5 are [2, 0, 2, 1, 0]
+        let idx = KronIndex::new(vec![0, 1, 0, 1, 0], vec![2, 0, 2, 1, 0]);
+        // batch picks positions [4, 0, 4, 2] — slot keys [0, 2, 0, 2]
+        let batch = BatchPlan::build(&idx, &[4, 0, 4, 2], 2, 3);
+        assert_eq!(batch.len(), 4);
+        assert!(!batch.is_empty());
+        assert_eq!(batch.positions(), &[4, 0, 4, 2]);
+        assert_eq!(batch.full_len(), 5);
+        let (order, offsets) = batch.buckets(Branch::T);
+        assert_eq!(offsets, &[0, 2, 2, 4]);
+        // bucket 0 holds slots 0, 2 in batch order; bucket 2 holds 1, 3
+        assert_eq!(order, &[0, 2, 1, 3]);
+    }
+
+    #[test]
+    fn restricted_apply_is_a_row_slice_of_the_full_apply() {
+        let mut rng = Pcg32::seeded(46);
+        let (a, b, c, d, e, f) = (7, 9, 6, 8, 4000, 3500);
+        let m = Matrix::from_fn(a, b, |_, _| rng.normal());
+        let n = Matrix::from_fn(c, d, |_, _| rng.normal());
+        let m_t = m.transpose();
+        let n_t = n.transpose();
+        let rows = KronIndex::new(
+            (0..f).map(|_| rng.below(a) as u32).collect(),
+            (0..f).map(|_| rng.below(c) as u32).collect(),
+        );
+        let cols = KronIndex::new(
+            (0..e).map(|_| rng.below(b) as u32).collect(),
+            (0..e).map(|_| rng.below(d) as u32).collect(),
+        );
+        let v = rng.normal_vec(e);
+        let plan = EdgePlan::build(&cols, b, d);
+        // duplicates and scrambled order on purpose
+        let picks: Vec<u32> = (0..600).map(|_| rng.below(f) as u32).collect();
+        let batch = BatchPlan::build(&rows, &picks, a, c);
+        let mut ws = GvtWorkspace::new();
+        for branch in [None, Some(Branch::T), Some(Branch::S)] {
+            for threads in [1usize, 2, 4] {
+                let engine = GvtEngine::new(threads);
+                let mut full = vec![0.0; f];
+                engine.apply_planned(
+                    &m, &n, &m_t, &n_t, &rows, &cols, &plan, &v, &mut full, &mut ws, branch,
+                );
+                let mut got = vec![f64::NAN; picks.len()];
+                engine.apply_restricted(
+                    &m, &n, &m_t, &n_t, &rows, &cols, &plan, &batch, &v, &mut got, &mut ws,
+                    branch,
+                );
+                let want: Vec<f64> = picks.iter().map(|&h| full[h as usize]).collect();
+                // bitwise identical, not just close
+                assert_eq!(got, want, "threads={threads} branch={branch:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_gather_batches_track_the_full_apply() {
+        // Build the dual coefficients incrementally through batched scatters
+        // and read values back through batched gathers; the accumulator must
+        // track the full planned apply, bitwise-identically across thread
+        // counts and numerically against the full pipeline.
+        let mut rng = Pcg32::seeded(47);
+        let (q, mm) = (9, 7); // G is q×q, K is mm×mm (square training case)
+        let g = Matrix::from_fn(q, q, |_, _| rng.normal());
+        let k = Matrix::from_fn(mm, mm, |_, _| rng.normal());
+        let g_t = g.transpose();
+        let k_t = k.transpose();
+        let e = 6000; // chunks of 3000 keep the parallel scatter path in play
+        let idx = KronIndex::new(
+            (0..e).map(|_| rng.below(q) as u32).collect(),
+            (0..e).map(|_| rng.below(mm) as u32).collect(),
+        );
+        let coef = rng.normal_vec(e);
+        let plan = EdgePlan::build(&idx, q, mm);
+        let all: Vec<u32> = (0..e as u32).collect();
+        let mut ws = GvtWorkspace::new();
+        for branch in [Branch::T, Branch::S] {
+            // branch T scatters Mᵀ = Gᵀ rows into a d×a = mm×q accumulator;
+            // branch S scatters Nᵀ = Kᵀ rows into a b×c = q×mm one
+            let factor_t = match branch {
+                Branch::T => &g_t,
+                Branch::S => &k_t,
+            };
+            let acc_len = mm * q;
+            // batched scatters must be bitwise identical serial vs parallel
+            let mut accs: Vec<Vec<f64>> = Vec::new();
+            for threads in [1usize, 4] {
+                let engine = GvtEngine::new(threads);
+                let mut acc = vec![0.0; acc_len];
+                for chunk in all.chunks(3000) {
+                    let batch = BatchPlan::build(&idx, chunk, q, mm);
+                    let delta: Vec<f64> = chunk.iter().map(|&l| coef[l as usize]).collect();
+                    engine.scatter_batch(factor_t, &idx, &batch, &delta, &mut acc, branch);
+                }
+                accs.push(acc);
+            }
+            assert_eq!(accs[0], accs[1], "scatter branch={branch:?} serial vs parallel");
+            // gathers over every edge must match the full planned apply
+            let mut full = vec![0.0; e];
+            GvtEngine::new(4).apply_planned(
+                &g, &k, &g_t, &k_t, &idx, &idx, &plan, &coef, &mut full, &mut ws, Some(branch),
+            );
+            let batch_all = BatchPlan::build(&idx, &all, q, mm);
+            for threads in [1usize, 4] {
+                let mut got = vec![f64::NAN; e];
+                GvtEngine::new(threads)
+                    .gather_batch(&g, &k, &idx, &batch_all, &accs[0], &mut got, branch);
+                assert_allclose(&got, &full, 1e-10, 1e-10);
+            }
+        }
     }
 }

@@ -45,7 +45,7 @@ pub mod complexity;
 pub use algorithm::{
     gvt_apply, gvt_apply_into, gvt_apply_into_parallel, gvt_apply_multi_into, Branch, GvtWorkspace,
 };
-pub use engine::{ChainPlan, EdgePlan, GvtEngine, WorkspacePool};
+pub use engine::{BatchPlan, ChainPlan, EdgePlan, GvtEngine, WorkspacePool};
 pub use operator::{
     KronKernelOp, KronPredictOp, KronSpectralPrecond, SvmNewtonOp, TensorKernelOp, TensorPredictOp,
 };

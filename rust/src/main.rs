@@ -118,6 +118,15 @@ fn parse_method(method: &str, args: &Args, compute: Compute) -> Result<MethodPla
     if args.has("solver") && method != "kronridge" {
         return Err(format!("--solver applies to --method kronridge only (got '{method}')"));
     }
+    let solver = args.get_str("solver", "auto");
+    let stochastic = method == "kronridge" && solver == "stochastic";
+    for flag in ["batch-edges", "epochs"] {
+        if args.has(flag) && !stochastic {
+            return Err(format!(
+                "--{flag} applies to --method kronridge with --solver stochastic only"
+            ));
+        }
+    }
     match method {
         "kronsvm" => Ok(MethodPlan::Kron(
             Learner::svm()
@@ -128,13 +137,34 @@ fn parse_method(method: &str, args: &Args, compute: Compute) -> Result<MethodPla
                 .pairwise(pairwise)
                 .compute(compute),
         )),
+        "kronridge" if stochastic => {
+            // The stochastic trainer's budget is epochs (full data passes),
+            // not solver iterations — reject the wrong knob loudly.
+            if args.has("iterations") {
+                return Err(
+                    "--solver stochastic trains in epochs; use --epochs (default 30), \
+                     not --iterations"
+                        .into(),
+                );
+            }
+            Ok(MethodPlan::Kron(
+                Learner::stochastic()
+                    .iterations(args.get_usize("epochs", 30)?)
+                    .batch_edges(args.get_usize("batch-edges", 512)?)
+                    .seed(args.get_u64("seed", 1)?)
+                    .lambda(lambda)
+                    .kernel(kernel)
+                    .pairwise(pairwise)
+                    .compute(compute),
+            ))
+        }
         "kronridge" => Ok(MethodPlan::Kron(
             Learner::ridge()
                 .iterations(args.get_usize("iterations", 100)?)
                 .lambda(lambda)
                 .kernel(kernel)
                 .pairwise(pairwise)
-                .solver(RidgeSolver::parse(&args.get_str("solver", "auto"))?)
+                .solver(RidgeSolver::parse(&solver)?)
                 .compute(compute),
         )),
         _ if pairwise != PairwiseKernelKind::Kronecker => Err(format!(
@@ -197,7 +227,7 @@ fn cmd_datasets(args: &Args) -> Result<(), String> {
 const TRAIN_FLAGS: &[&str] = &[
     "data", "method", "seed", "scale", "test-frac", "lambda", "kernel", "pairwise", "solver",
     "threads", "outer", "inner", "iterations", "c", "updates", "k", "save", "factors", "density",
-    "noise",
+    "noise", "batch-edges", "epochs",
 ];
 
 /// `train --data grid`: D-way tensor-chain ridge on the spatio-temporal
@@ -811,9 +841,13 @@ fn usage() -> ! {
                        --pairwise kron|symmetric|antisymmetric|cartesian\n\
                                      pairwise kernel family (kronsvm/kronridge; symmetric and\n\
                                      antisymmetric need one shared vertex domain, e.g. --data homo)\n\
-                       --solver auto|exact|minres|cg|precond-cg\n\
+                       --solver auto|exact|minres|cg|precond-cg|stochastic\n\
                                      kronridge dual solver; auto takes the closed-form\n\
-                                     eigendecomposition path on complete training graphs\n\
+                                     eigendecomposition path on complete training graphs;\n\
+                                     stochastic is the mini-batch sampled-GVT trainer\n\
+                       --batch-edges N    (--solver stochastic) edges per mini-batch (default 512)\n\
+                       --epochs N         (--solver stochastic) full data passes (default 30;\n\
+                                          --seed, default 1, fixes the sampling schedule)\n\
                        --threads N   GVT matvec worker threads (0 = all cores; identical results, just faster)\n\
                        --fold-workers N   (cv only) train folds concurrently\n\
                        --lambdas a,b,c    (cv + kronridge) batched λ-grid CV: one block-CG solve\n\

@@ -12,15 +12,25 @@
 //!
 //! [`tensor`] extends the ridge case study to D-way tensor-product chains:
 //! the same CG machinery over a [`TensorKernelOp`](crate::gvt::TensorKernelOp).
+//!
+//! [`stochastic`] scales past the exact solvers: mini-batch sampled-GVT
+//! block coordinate descent over a streaming edge source
+//! ([`crate::data::stream`]), never holding the label vector or edge index
+//! in one allocation.
 
 pub mod trace;
 pub mod ridge;
 pub mod svm;
 pub mod newton;
 pub mod tensor;
+pub mod stochastic;
 
 pub use ridge::{KronRidge, RidgeConfig, RidgeSolver};
 pub use svm::{KronSvm, SvmConfig};
 pub use newton::{NewtonConfig, NewtonTrainer};
+pub use stochastic::{
+    fit_stochastic, fit_stochastic_source, EdgeSampler, SamplingMode, StepPolicy,
+    StochasticConfig, StochasticResult,
+};
 pub use tensor::{TensorRidge, TensorRidgeConfig};
 pub use trace::{IterRecord, TrainTrace};

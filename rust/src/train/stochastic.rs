@@ -1,0 +1,589 @@
+//! Stochastic mini-batch dual training (sampled vec trick, arXiv
+//! 2606.16979): randomized **block coordinate descent** on the dual ridge
+//! objective
+//!
+//! ```text
+//! J(a) = ½ aᵀ(Q + λI)a − yᵀa ,    Q = R(G⊗K)Rᵀ ,
+//! ```
+//!
+//! where every per-iteration operator touch is the GVT apply restricted to a
+//! sampled edge batch ([`BatchPlan`]) instead of the full `O(e(q+m))` apply:
+//!
+//! * a persistent stage-1 accumulator `T ∈ R^{m×q}` (the scatter of the
+//!   *entire* current dual vector) makes the batch gradient **exact**:
+//!   `g_B = (Qa)_B + λ a_B − y_B` costs only a strided gather
+//!   ([`GvtEngine::gather_batch`], `O(|B|·m)`);
+//! * after the block step `a_B ← a_B − η_B g_B`, the accumulator is patched
+//!   incrementally ([`GvtEngine::scatter_batch`], `O(|B|·q)`) — no full
+//!   re-scatter per batch;
+//! * because the gradient is exact (not an unbiased estimate), the descent
+//!   is monotone with no stochastic noise floor: the *randomness* is only in
+//!   the visit order, the *iterates* are a deterministic function of the
+//!   seed.
+//!
+//! Edges arrive through a [`StreamingEdgeSource`]
+//! ([`crate::data::stream`]), chunk-major: per epoch the chunk visit order
+//! is shuffled, each loaded chunk is sampled into batches
+//! ([`EdgeSampler`]), and only the dual vector (length `e`) plus one chunk
+//! ever need a full allocation — the label vector and edge index never do.
+//!
+//! Step sizes ([`StepPolicy::Auto`]) use the per-batch trace bound
+//! `η_B = 1 / (λ + Σ_{h∈B} Q_hh)` with `Q_hh = G[t_h,t_h]·K[s_h,s_h]`:
+//! since `λmax(Q_BB + λI) ≤ λ + trace(Q_BB)`, the exact-gradient block step
+//! can never overshoot. Conservative by design; [`StepPolicy::Fixed`]
+//! overrides it when the spectrum is known.
+//!
+//! Per epoch the trainer re-scatters the accumulator from scratch
+//! ([`StochasticConfig::snapshot_every`]) — the SVRG-style snapshot that
+//! bounds float drift from millions of incremental patches — and runs one
+//! streaming monitor pass producing the residual `‖y − (Q+λI)a‖` for the
+//! [`Stopping`]-compatible convergence test plus the same regularized-risk
+//! trace the exact solvers record.
+
+use crate::api::Compute;
+use crate::data::stream::{InMemorySource, StreamingEdgeSource};
+use crate::data::Dataset;
+use crate::eval::auc::auc;
+use crate::gvt::{BatchPlan, Branch, GvtEngine, KronIndex, PairwiseKernelKind, PairwiseOp};
+use crate::kernels::KernelKind;
+use crate::linalg::solvers::{SolverConfig, Stopping};
+use crate::linalg::Matrix;
+use crate::model::DualModel;
+use crate::train::trace::{IterRecord, TrainTrace};
+use crate::util::rng::Pcg32;
+use crate::util::timer::Timer;
+
+/// How [`EdgeSampler`] draws batches within each loaded chunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SamplingMode {
+    /// Shuffle the chunk's edges once per epoch and cut consecutive
+    /// batches: every edge is visited exactly once per epoch (the mode that
+    /// makes the descent a true block *coordinate* pass).
+    #[default]
+    EpochShuffle,
+    /// Draw `⌈chunk/batch⌉` batches of `batch_edges` positions uniformly
+    /// with replacement from the loaded chunk (classic SGD sampling; edges
+    /// may repeat within and across batches).
+    WithReplacement,
+}
+
+impl SamplingMode {
+    /// Parse a CLI name: `epoch-shuffle` or `with-replacement`.
+    pub fn parse(s: &str) -> Result<SamplingMode, String> {
+        match s {
+            "epoch-shuffle" => Ok(SamplingMode::EpochShuffle),
+            "with-replacement" => Ok(SamplingMode::WithReplacement),
+            other => Err(format!(
+                "unknown sampling mode '{other}' (expected epoch-shuffle or with-replacement)"
+            )),
+        }
+    }
+
+    /// CLI name of this mode.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplingMode::EpochShuffle => "epoch-shuffle",
+            SamplingMode::WithReplacement => "with-replacement",
+        }
+    }
+}
+
+/// Step-size policy for the block update.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum StepPolicy {
+    /// Per-batch safe step `1 / (λ + Σ_{h∈B} Q_hh)` (trace bound on
+    /// `λmax(Q_BB + λI)`); never overshoots, at the price of conservatism
+    /// on ill-conditioned batches.
+    #[default]
+    Auto,
+    /// Fixed step size (must be positive and finite; the caller owns
+    /// stability).
+    Fixed(f64),
+}
+
+/// Configuration of the stochastic dual trainer.
+#[derive(Debug, Clone, Copy)]
+pub struct StochasticConfig {
+    /// Regularization parameter λ (must be positive: strong convexity is
+    /// what the step policy and the convergence argument lean on).
+    pub lambda: f64,
+    /// Start-vertex kernel `k`.
+    pub kernel_d: KernelKind,
+    /// End-vertex kernel `g`.
+    pub kernel_t: KernelKind,
+    /// Edges per mini-batch (must be ≥ 1).
+    pub batch_edges: usize,
+    /// Maximum training epochs (must be ≥ 1); one epoch streams every
+    /// chunk once.
+    pub epochs: usize,
+    /// Sampler seed. Defaults to **1** — the same default the CLI `--seed`
+    /// flag documents — so an unconfigured run is still reproducible.
+    pub seed: u64,
+    /// Batch sampling mode.
+    pub sampling: SamplingMode,
+    /// Step-size policy.
+    pub step: StepPolicy,
+    /// Relative residual tolerance: stop when `‖y − (Q+λI)a‖ ≤ tol·‖y‖`
+    /// at an epoch boundary.
+    pub tol: f64,
+    /// Rebuild the stage-1 accumulator from scratch every this many epochs
+    /// (0 = never): bounds float drift from incremental patches. Default 1.
+    pub snapshot_every: usize,
+    /// Early-stopping patience on validation AUC (0 disables).
+    pub patience: usize,
+}
+
+impl Default for StochasticConfig {
+    fn default() -> Self {
+        StochasticConfig {
+            lambda: 1.0,
+            kernel_d: KernelKind::Linear,
+            kernel_t: KernelKind::Linear,
+            batch_edges: 512,
+            epochs: 30,
+            seed: 1,
+            sampling: SamplingMode::EpochShuffle,
+            step: StepPolicy::Auto,
+            tol: 1e-6,
+            snapshot_every: 1,
+            patience: 0,
+        }
+    }
+}
+
+impl StochasticConfig {
+    /// Validate the configuration, naming the offending field, the value it
+    /// got, and a fix in every error.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.batch_edges == 0 {
+            return Err("stochastic config: batch_edges must be ≥ 1 (got 0); \
+                        512 is the CLI --batch-edges default"
+                .into());
+        }
+        if self.epochs == 0 {
+            return Err("stochastic config: epochs must be ≥ 1 (got 0); \
+                        each epoch streams every edge chunk once"
+                .into());
+        }
+        if !(self.lambda > 0.0 && self.lambda.is_finite()) {
+            return Err(format!(
+                "stochastic config: lambda must be positive and finite (got {}); the dual \
+                 objective is strongly convex — and the auto step safe — only for lambda > 0",
+                self.lambda
+            ));
+        }
+        if !(self.tol >= 0.0 && self.tol.is_finite()) {
+            return Err(format!(
+                "stochastic config: tol must be ≥ 0 and finite (got {}); use 0 to always run \
+                 the full epoch budget",
+                self.tol
+            ));
+        }
+        if let StepPolicy::Fixed(s) = self.step {
+            if !(s > 0.0 && s.is_finite()) {
+                return Err(format!(
+                    "stochastic config: fixed step must be positive and finite (got {s}); \
+                     use StepPolicy::Auto for the safe per-batch trace bound"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Deterministic seeded batch sampler: given the same seed, mode, and
+/// chunk geometry it emits the same chunk visit order and the same batch
+/// position lists on every run (the fixed-seed reproducibility the tests
+/// pin). One sampler instance carries the RNG stream across epochs, so
+/// epochs differ from each other but the whole schedule is a pure function
+/// of the seed.
+#[derive(Debug, Clone)]
+pub struct EdgeSampler {
+    rng: Pcg32,
+    mode: SamplingMode,
+}
+
+impl EdgeSampler {
+    /// Sampler with the given seed and mode.
+    pub fn new(seed: u64, mode: SamplingMode) -> EdgeSampler {
+        EdgeSampler { rng: Pcg32::seeded(seed), mode }
+    }
+
+    /// Shuffled chunk visit order for one epoch (both modes randomize it:
+    /// chunk-major streaming fixes *which* edges are co-resident, the order
+    /// across chunks is free).
+    pub fn chunk_order(&mut self, n_chunks: usize) -> Vec<u32> {
+        let mut order: Vec<u32> = (0..n_chunks as u32).collect();
+        self.rng.shuffle(&mut order);
+        order
+    }
+
+    /// Batch position lists (chunk-local, 0-based) covering one loaded
+    /// chunk for one epoch. Under [`SamplingMode::EpochShuffle`] the lists
+    /// partition `0..chunk_len` (the last may be short); under
+    /// [`SamplingMode::WithReplacement`] there are `⌈chunk_len/batch⌉`
+    /// lists of exactly `batch_edges` draws each.
+    pub fn chunk_batches(&mut self, chunk_len: usize, batch_edges: usize) -> Vec<Vec<u32>> {
+        assert!(batch_edges > 0, "batch_edges must be ≥ 1");
+        assert!(chunk_len > 0, "cannot sample an empty chunk");
+        match self.mode {
+            SamplingMode::EpochShuffle => {
+                let mut pos: Vec<u32> = (0..chunk_len as u32).collect();
+                self.rng.shuffle(&mut pos);
+                pos.chunks(batch_edges).map(|b| b.to_vec()).collect()
+            }
+            SamplingMode::WithReplacement => {
+                let n_batches = chunk_len.div_ceil(batch_edges);
+                (0..n_batches)
+                    .map(|_| {
+                        (0..batch_edges).map(|_| self.rng.below(chunk_len) as u32).collect()
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Everything a stochastic fit produces besides the model itself.
+#[derive(Debug, Clone)]
+pub struct StochasticResult {
+    /// Final dual coefficients, in global edge order.
+    pub duals: Vec<f64>,
+    /// Per-epoch monitor records (risk, optional validation AUC,
+    /// wall-clock) — same schema as the exact solvers' traces.
+    pub trace: TrainTrace,
+    /// Epochs actually run (≤ `cfg.epochs`).
+    pub epochs_run: usize,
+    /// Whether the residual tolerance was met before the epoch budget.
+    pub converged: bool,
+    /// Final residual norm `‖y − (Q+λI)a‖`.
+    pub final_residual: f64,
+}
+
+/// One streamed pass rebuilding the stage-1 accumulator from the full dual
+/// vector (chunks in natural order — the rebuild is sampler-independent).
+fn rebuild_accumulator(
+    source: &dyn StreamingEdgeSource,
+    engine: &GvtEngine,
+    g_t: &Matrix,
+    duals: &[f64],
+    q_v: usize,
+    m_v: usize,
+    acc: &mut [f64],
+) -> Result<(), String> {
+    acc.fill(0.0);
+    for k in 0..source.n_chunks() {
+        let (lo, hi) = source.chunk_range(k);
+        let chunk = source.read_chunk(k)?;
+        let idx = KronIndex::new(chunk.end_idx, chunk.start_idx);
+        let positions: Vec<u32> = (0..(hi - lo) as u32).collect();
+        let plan = BatchPlan::build(&idx, &positions, q_v, m_v);
+        engine.scatter_batch(g_t, &idx, &plan, &duals[lo..hi], acc, Branch::T);
+    }
+    Ok(())
+}
+
+/// Train dual ridge coefficients against a [`StreamingEdgeSource`] — the
+/// core the [`fit_stochastic`] wrapper and the CLI both call. Only the
+/// duals (length `e`), the `m×q` accumulator, and one chunk are ever
+/// resident; the source is re-read each epoch.
+///
+/// `val` optionally supplies a prediction operator plus labels for the
+/// per-epoch validation AUC (and early stopping via `cfg.patience`).
+///
+/// Given identical sources (same values, same `chunk_edges`), the result
+/// is **bitwise identical** across thread counts and across
+/// in-memory/on-disk sources: every parallel primitive underneath is
+/// pinned to its serial order, and the sampling schedule depends only on
+/// the seed and the chunk geometry.
+pub fn fit_stochastic_source(
+    source: &dyn StreamingEdgeSource,
+    start_features: &Matrix,
+    end_features: &Matrix,
+    cfg: &StochasticConfig,
+    compute: &Compute,
+    val: Option<(&PairwiseOp, &[f64])>,
+) -> Result<StochasticResult, String> {
+    cfg.validate()?;
+    let n = source.n_edges();
+    if n == 0 {
+        return Err("empty training set".into());
+    }
+    let m_v = start_features.rows();
+    let q_v = end_features.rows();
+    let timer = Timer::start();
+
+    // Kernel factor matrices (threaded build is bitwise identical to
+    // serial); the trainer runs branch T exclusively: M = G, N = K, scatter
+    // factor Gᵀ, accumulator T ∈ R^{m_v × q_v}.
+    let g = cfg.kernel_t.square_matrix_threaded(end_features, compute.threads);
+    let k = cfg.kernel_d.square_matrix_threaded(start_features, compute.threads);
+    let g_t = g.transpose();
+    let engine = GvtEngine::new(compute.threads);
+
+    // Validation + ‖y‖ pre-pass (streamed; also catches out-of-bounds
+    // vertex indices before any arithmetic).
+    let mut b2 = 0.0;
+    for kk in 0..source.n_chunks() {
+        let chunk = source.read_chunk(kk)?;
+        chunk.validate(m_v, q_v).map_err(|e| format!("edge chunk {kk}: {e}"))?;
+        b2 += chunk.labels.iter().map(|y| y * y).sum::<f64>();
+    }
+    // `Stopping` expects the RHS vector, but a streamed trainer only has
+    // the accumulated norm — a one-element slice round-trips it exactly
+    // (‖[x]‖ = |x|), keeping the stopping rule shared with the Krylov
+    // solvers.
+    let solver_cfg = SolverConfig { max_iters: cfg.epochs, tol: cfg.tol };
+    let stopping = Stopping::new(&solver_cfg, &[b2.sqrt()]);
+    let mut duals = vec![0.0; n];
+    if stopping.zero_rhs() {
+        return Ok(StochasticResult {
+            duals,
+            trace: TrainTrace::default(),
+            epochs_run: 0,
+            converged: true,
+            final_residual: 0.0,
+        });
+    }
+
+    let mut acc = vec![0.0; m_v * q_v];
+    let mut sampler = EdgeSampler::new(cfg.seed, cfg.sampling);
+    let mut trace = TrainTrace::default();
+    let mut converged = false;
+    let mut final_residual = f64::INFINITY;
+    let mut epochs_run = 0;
+
+    for epoch in 0..cfg.epochs {
+        epochs_run = epoch + 1;
+        for &ck in &sampler.chunk_order(source.n_chunks()) {
+            let (lo, hi) = source.chunk_range(ck as usize);
+            let chunk = source.read_chunk(ck as usize)?;
+            let labels = chunk.labels;
+            let idx = KronIndex::new(chunk.end_idx, chunk.start_idx);
+            for positions in sampler.chunk_batches(hi - lo, cfg.batch_edges) {
+                let plan = BatchPlan::build(&idx, &positions, q_v, m_v);
+                let mut qa = vec![0.0; positions.len()];
+                engine.gather_batch(&g, &k, &idx, &plan, &acc, &mut qa, Branch::T);
+                let eta = match cfg.step {
+                    StepPolicy::Fixed(s) => s,
+                    StepPolicy::Auto => {
+                        let diag: f64 = positions
+                            .iter()
+                            .map(|&pos| {
+                                let l = pos as usize;
+                                let t = idx.left[l] as usize;
+                                let s = idx.right[l] as usize;
+                                g.get(t, t) * k.get(s, s)
+                            })
+                            .sum();
+                        1.0 / (cfg.lambda + diag)
+                    }
+                };
+                // Exact block gradient at the pre-step iterate (duplicate
+                // positions under with-replacement sampling see the same
+                // iterate and simply double the step on that coordinate).
+                let delta: Vec<f64> = positions
+                    .iter()
+                    .zip(&qa)
+                    .map(|(&pos, &qah)| {
+                        let h = lo + pos as usize;
+                        -eta * (qah + cfg.lambda * duals[h] - labels[pos as usize])
+                    })
+                    .collect();
+                for (&pos, &di) in positions.iter().zip(&delta) {
+                    duals[lo + pos as usize] += di;
+                }
+                engine.scatter_batch(&g_t, &idx, &plan, &delta, &mut acc, Branch::T);
+            }
+        }
+
+        // SVRG-style snapshot: periodically re-scatter the accumulator from
+        // the full dual vector so incremental-patch float drift cannot
+        // compound across epochs.
+        if cfg.snapshot_every > 0 && (epoch + 1) % cfg.snapshot_every == 0 {
+            rebuild_accumulator(source, &engine, &g_t, &duals, q_v, m_v, &mut acc)?;
+        }
+
+        // Streamed monitor pass: exact residual and regularized risk from
+        // full-chunk gathers against the (fresh or patched) accumulator.
+        let mut resid2 = 0.0;
+        let mut loss = 0.0;
+        let mut reg = 0.0;
+        for kk in 0..source.n_chunks() {
+            let (lo, hi) = source.chunk_range(kk);
+            let chunk = source.read_chunk(kk)?;
+            let idx = KronIndex::new(chunk.end_idx, chunk.start_idx);
+            let positions: Vec<u32> = (0..(hi - lo) as u32).collect();
+            let plan = BatchPlan::build(&idx, &positions, q_v, m_v);
+            let mut qa = vec![0.0; positions.len()];
+            engine.gather_batch(&g, &k, &idx, &plan, &acc, &mut qa, Branch::T);
+            for (i, (&p, &y)) in qa.iter().zip(&chunk.labels).enumerate() {
+                let ah = duals[lo + i];
+                let r = y - p - cfg.lambda * ah;
+                resid2 += r * r;
+                loss += (p - y) * (p - y);
+                reg += ah * p;
+            }
+        }
+        final_residual = resid2.sqrt();
+        let risk = 0.5 * loss + 0.5 * cfg.lambda * reg;
+        let val_auc = val.map(|(op, y)| auc(y, &op.predict(&duals)));
+        trace.push(IterRecord {
+            iter: epoch + 1,
+            risk,
+            val_auc,
+            elapsed_secs: timer.elapsed_secs(),
+        });
+
+        if stopping.converged(final_residual) {
+            converged = true;
+            break;
+        }
+        if trace.should_stop(cfg.patience) {
+            break;
+        }
+    }
+
+    Ok(StochasticResult { duals, trace, epochs_run, converged, final_residual })
+}
+
+/// Train a portable [`DualModel`] stochastically from an in-memory
+/// [`Dataset`] (Kronecker pairwise family), tracing per-epoch risk and —
+/// when `val` is given — zero-shot validation AUC with early stopping via
+/// `cfg.patience`. Thin wrapper over [`fit_stochastic_source`] with an
+/// [`InMemorySource`]; training from the same edges through an on-disk
+/// [`crate::data::stream::BinaryEdgeReader`] with equal `chunk_edges`
+/// produces bitwise-identical duals.
+pub fn fit_stochastic(
+    train: &Dataset,
+    val: Option<&Dataset>,
+    cfg: &StochasticConfig,
+    compute: &Compute,
+) -> Result<(DualModel, TrainTrace), String> {
+    train.validate()?;
+    let val_op = val
+        .map(|v| {
+            super::ridge::validation_op(
+                train,
+                v,
+                cfg.kernel_d,
+                cfg.kernel_t,
+                PairwiseKernelKind::Kronecker,
+                compute,
+            )
+        })
+        .transpose()?;
+    let source = InMemorySource::new(train);
+    let result = fit_stochastic_source(
+        &source,
+        &train.start_features,
+        &train.end_features,
+        cfg,
+        compute,
+        val_op.as_ref().zip(val).map(|(op, v)| (op, v.labels.as_slice())),
+    )?;
+    let model = DualModel {
+        dual_coef: result.duals,
+        train_start_features: train.start_features.clone(),
+        train_end_features: train.end_features.clone(),
+        train_idx: train.kron_index(),
+        kernel_d: cfg.kernel_d,
+        kernel_t: cfg.kernel_t,
+        pairwise: PairwiseKernelKind::Kronecker,
+    };
+    Ok((model, result.trace))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::assert_allclose;
+    use crate::train::ridge::{ridge_exact_dual, RidgeConfig};
+    use crate::util::proptest::complete_dataset;
+
+    #[test]
+    fn config_validation_names_field_value_and_fix() {
+        let bad = StochasticConfig { batch_edges: 0, ..Default::default() };
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("batch_edges") && err.contains("got 0"), "{err}");
+        let bad = StochasticConfig { epochs: 0, ..Default::default() };
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("epochs") && err.contains("got 0"), "{err}");
+        let bad = StochasticConfig { lambda: -1.0, ..Default::default() };
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("lambda") && err.contains("-1"), "{err}");
+        let bad = StochasticConfig { step: StepPolicy::Fixed(0.0), ..Default::default() };
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("step") && err.contains("Auto"), "{err}");
+        assert!(StochasticConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn sampling_mode_names_roundtrip() {
+        for mode in [SamplingMode::EpochShuffle, SamplingMode::WithReplacement] {
+            assert_eq!(SamplingMode::parse(mode.name()).unwrap(), mode);
+        }
+        assert!(SamplingMode::parse("importance").unwrap_err().contains("importance"));
+    }
+
+    #[test]
+    fn sampler_is_deterministic_and_epoch_shuffle_partitions() {
+        let mut a = EdgeSampler::new(7, SamplingMode::EpochShuffle);
+        let mut b = EdgeSampler::new(7, SamplingMode::EpochShuffle);
+        assert_eq!(a.chunk_order(5), b.chunk_order(5));
+        let batches = a.chunk_batches(23, 6);
+        assert_eq!(batches, b.chunk_batches(23, 6));
+        // exactly once per epoch, last batch short
+        let mut seen: Vec<u32> = batches.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..23).collect::<Vec<u32>>());
+        assert_eq!(batches.last().unwrap().len(), 23 % 6);
+        // a different seed produces a different schedule
+        let mut c = EdgeSampler::new(8, SamplingMode::EpochShuffle);
+        assert_ne!(c.chunk_batches(23, 6), batches);
+        // with-replacement: full-size batches, in-bounds draws
+        let mut d = EdgeSampler::new(7, SamplingMode::WithReplacement);
+        let wr = d.chunk_batches(10, 4);
+        assert_eq!(wr.len(), 3);
+        assert!(wr.iter().all(|b| b.len() == 4 && b.iter().all(|&p| p < 10)));
+    }
+
+    #[test]
+    fn converges_to_the_exact_dual_solution() {
+        let mut rng = Pcg32::seeded(500);
+        let train = complete_dataset(&mut rng, 5, 4);
+        let cfg = StochasticConfig {
+            lambda: 2.0,
+            batch_edges: 4,
+            epochs: 2000,
+            tol: 1e-10,
+            ..Default::default()
+        };
+        let (model, trace) = fit_stochastic(&train, None, &cfg, &Compute::serial()).unwrap();
+        let exact = ridge_exact_dual(
+            &train,
+            &RidgeConfig { lambda: cfg.lambda, ..Default::default() },
+            PairwiseKernelKind::Kronecker,
+        );
+        assert_allclose(&model.dual_coef, &exact, 1e-5, 1e-5);
+        // monotone risk: the exact-gradient block step never overshoots
+        let risks: Vec<f64> = trace.records.iter().map(|r| r.risk).collect();
+        assert!(risks.windows(2).all(|w| w[1] <= w[0] + 1e-12), "risk not monotone");
+    }
+
+    #[test]
+    fn fixed_seed_runs_are_bitwise_identical_across_threads() {
+        let mut rng = Pcg32::seeded(501);
+        let train = complete_dataset(&mut rng, 6, 5);
+        let cfg = StochasticConfig { epochs: 12, batch_edges: 7, ..Default::default() };
+        let (serial, _) = fit_stochastic(&train, None, &cfg, &Compute::serial()).unwrap();
+        let (again, _) = fit_stochastic(&train, None, &cfg, &Compute::serial()).unwrap();
+        assert_eq!(serial.dual_coef, again.dual_coef);
+        let (par, _) = fit_stochastic(&train, None, &cfg, &Compute::threads(4)).unwrap();
+        assert_eq!(serial.dual_coef, par.dual_coef);
+        // a different seed walks a different trajectory
+        let reseeded = StochasticConfig { seed: 99, ..cfg };
+        let (other, _) = fit_stochastic(&train, None, &reseeded, &Compute::serial()).unwrap();
+        assert_ne!(serial.dual_coef, other.dual_coef);
+    }
+}

@@ -1,0 +1,228 @@
+//! Integration tests for the stochastic mini-batch trainer and its
+//! streaming edge sources: the batch-restricted GVT apply pinned bitwise
+//! against row-slicing the full apply at every thread count, fixed-seed
+//! determinism (including in-memory vs on-disk source equivalence),
+//! convergence to the exact CG dual solution, and end-to-end zero-shot
+//! accuracy plus the `kronvt-model/v1` artifact round trip.
+
+use kronvt::api::{Compute, Learner, TrainedModel};
+use kronvt::data::checkerboard::CheckerboardConfig;
+use kronvt::data::stream::{write_dataset_edges, BinaryEdgeReader, InMemorySource};
+use kronvt::eval::auc::auc;
+use kronvt::gvt::{BatchPlan, Branch, EdgePlan, GvtEngine, GvtWorkspace, KronIndex};
+use kronvt::kernels::KernelKind;
+use kronvt::linalg::vecops::assert_allclose;
+use kronvt::linalg::Matrix;
+use kronvt::train::{
+    fit_stochastic, fit_stochastic_source, KronRidge, RidgeConfig, RidgeSolver, SamplingMode,
+    StochasticConfig,
+};
+use kronvt::util::proptest::complete_dataset;
+use kronvt::util::rng::Pcg32;
+
+#[test]
+fn restricted_apply_matches_full_apply_rows_bitwise_at_every_thread_count() {
+    let mut rng = Pcg32::seeded(900);
+    let (a, b, c, d) = (6usize, 8usize, 5usize, 7usize);
+    let (e, f) = (3000usize, 2600usize);
+    let m = Matrix::from_fn(a, b, |_, _| rng.normal());
+    let n = Matrix::from_fn(c, d, |_, _| rng.normal());
+    let (m_t, n_t) = (m.transpose(), n.transpose());
+    let rows = KronIndex::new(
+        (0..f).map(|_| rng.below(a) as u32).collect(),
+        (0..f).map(|_| rng.below(c) as u32).collect(),
+    );
+    let cols = KronIndex::new(
+        (0..e).map(|_| rng.below(b) as u32).collect(),
+        (0..e).map(|_| rng.below(d) as u32).collect(),
+    );
+    let v: Vec<f64> = (0..e).map(|_| rng.normal()).collect();
+    let plan = EdgePlan::build_full(&rows, &cols, a, b, c, d);
+
+    // Batch positions with deliberate duplicates, as with-replacement
+    // sampling produces.
+    let picks: Vec<u32> = (0..400).map(|_| rng.below(f) as u32).collect();
+    let batch = BatchPlan::build(&rows, &picks, a, c);
+
+    for threads in [1usize, 2, 4] {
+        let engine = GvtEngine::new(threads);
+        let mut full = vec![0.0; f];
+        let mut ws = GvtWorkspace::new();
+        for branch in [None, Some(Branch::T), Some(Branch::S)] {
+            engine.apply_planned(
+                &m, &n, &m_t, &n_t, &rows, &cols, &plan, &v, &mut full, &mut ws, branch,
+            );
+            let want: Vec<f64> = picks.iter().map(|&h| full[h as usize]).collect();
+            let mut got = vec![0.0; picks.len()];
+            engine.apply_restricted(
+                &m, &n, &m_t, &n_t, &rows, &cols, &plan, &batch, &v, &mut got, &mut ws, branch,
+            );
+            assert_eq!(got, want, "threads={threads} branch={branch:?}");
+        }
+    }
+}
+
+fn small_board(seed: u64) -> kronvt::data::Dataset {
+    CheckerboardConfig {
+        m: 24,
+        q: 24,
+        density: 0.5,
+        noise: 0.15,
+        feature_range: 8.0,
+        seed,
+    }
+    .generate()
+}
+
+#[test]
+fn fixed_seed_epochs_are_deterministic_across_runs_and_threads() {
+    let ds = small_board(11);
+    let cfg = StochasticConfig { batch_edges: 64, epochs: 8, ..Default::default() };
+    let (one, trace_one) = fit_stochastic(&ds, None, &cfg, &Compute::serial()).unwrap();
+    let (two, trace_two) = fit_stochastic(&ds, None, &cfg, &Compute::serial()).unwrap();
+    assert_eq!(one.dual_coef, two.dual_coef);
+    assert_eq!(trace_one.records.len(), trace_two.records.len());
+    for threads in [2usize, 4] {
+        let (par, _) = fit_stochastic(&ds, None, &cfg, &Compute::threads(threads)).unwrap();
+        assert_eq!(one.dual_coef, par.dual_coef, "threads={threads}");
+    }
+    // and both sampling modes react to the seed
+    for sampling in [SamplingMode::EpochShuffle, SamplingMode::WithReplacement] {
+        let base = StochasticConfig { sampling, ..cfg };
+        let reseeded = StochasticConfig { seed: 77, ..base };
+        let (x, _) = fit_stochastic(&ds, None, &base, &Compute::serial()).unwrap();
+        let (y, _) = fit_stochastic(&ds, None, &reseeded, &Compute::serial()).unwrap();
+        assert_ne!(x.dual_coef, y.dual_coef, "{sampling:?}");
+    }
+}
+
+#[test]
+fn on_disk_source_trains_bitwise_identically_to_in_memory() {
+    let ds = small_board(12);
+    let cfg = StochasticConfig { batch_edges: 48, epochs: 6, ..Default::default() };
+    let compute = Compute::threads(2);
+    // Small chunks so the schedule spans several chunks per epoch.
+    let mem = InMemorySource::with_chunk_edges(&ds, 128).unwrap();
+    let from_mem = fit_stochastic_source(
+        &mem,
+        &ds.start_features,
+        &ds.end_features,
+        &cfg,
+        &compute,
+        None,
+    )
+    .unwrap();
+    let mut path = std::env::temp_dir();
+    path.push(format!("kronvt-stochastic-{}.edges", std::process::id()));
+    write_dataset_edges(&path, &ds, 128).unwrap();
+    let disk = BinaryEdgeReader::open(&path).unwrap();
+    let from_disk = fit_stochastic_source(
+        &disk,
+        &ds.start_features,
+        &ds.end_features,
+        &cfg,
+        &compute,
+        None,
+    )
+    .unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(from_mem.duals, from_disk.duals);
+    assert_eq!(from_mem.epochs_run, from_disk.epochs_run);
+    let mem_risks: Vec<u64> = from_mem.trace.records.iter().map(|r| r.risk.to_bits()).collect();
+    let disk_risks: Vec<u64> = from_disk.trace.records.iter().map(|r| r.risk.to_bits()).collect();
+    assert_eq!(mem_risks, disk_risks);
+}
+
+#[test]
+fn converges_to_the_exact_cg_dual_solution_on_a_complete_graph() {
+    let mut rng = Pcg32::seeded(910);
+    let train = complete_dataset(&mut rng, 6, 5);
+    let lambda = 2.0;
+    // Exact CG reference.
+    let ridge_cfg =
+        RidgeConfig { lambda, iterations: 800, tol: 1e-13, ..Default::default() };
+    let exact = KronRidge::new(ridge_cfg).with_solver(RidgeSolver::Cg).fit(&train).unwrap();
+    // Stochastic: generous epoch budget, residual tolerance 1e-8; the
+    // documented acceptance tolerance against the exact duals is 1e-5.
+    let cfg = StochasticConfig {
+        lambda,
+        batch_edges: 5,
+        epochs: 5000,
+        tol: 1e-8,
+        ..Default::default()
+    };
+    let source = InMemorySource::new(&train);
+    let result = fit_stochastic_source(
+        &source,
+        &train.start_features,
+        &train.end_features,
+        &cfg,
+        &Compute::serial(),
+        None,
+    )
+    .unwrap();
+    assert!(
+        result.converged,
+        "no convergence in {} epochs (residual {})",
+        result.epochs_run, result.final_residual
+    );
+    assert!(result.epochs_run < cfg.epochs, "tolerance should stop the run early");
+    assert_allclose(&result.duals, &exact.dual_coef, 1e-5, 1e-5);
+}
+
+#[test]
+fn zero_shot_split_gets_finite_above_chance_auc_and_a_v1_artifact_round_trip() {
+    let data = CheckerboardConfig {
+        m: 40,
+        q: 40,
+        density: 0.4,
+        noise: 0.1,
+        feature_range: 8.0,
+        seed: 13,
+    }
+    .generate();
+    let (train, test) = data.zero_shot_split(0.3, 9);
+    let compute = Compute::threads(2);
+    let model = Learner::stochastic()
+        .lambda(2f64.powi(-5))
+        .kernel(KernelKind::Gaussian { gamma: 1.0 })
+        .iterations(25)
+        .batch_edges(64)
+        .seed(4)
+        .compute(compute)
+        .fit(&train)
+        .unwrap();
+    let scores = model.predict_batch(&test, &compute);
+    let auc_val = auc(&test.labels, &scores);
+    assert!(auc_val.is_finite() && auc_val > 0.55, "AUC={auc_val}");
+    // The stochastic trainer produces a plain dual model, so the
+    // kronvt-model/v1 artifact path applies unchanged.
+    let mut path = std::env::temp_dir();
+    path.push(format!("kronvt-stochastic-model-{}.json", std::process::id()));
+    model.save(&path).unwrap();
+    let loaded = TrainedModel::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(scores, loaded.predict_batch(&test, &compute));
+}
+
+#[test]
+fn validation_monitoring_records_auc_and_patience_stops_early() {
+    let data = small_board(14);
+    let (train, val) = data.zero_shot_split(0.3, 2);
+    let cfg = StochasticConfig {
+        lambda: 1e-6,
+        batch_edges: 32,
+        epochs: 60,
+        tol: 0.0,
+        patience: 1,
+        ..Default::default()
+    };
+    let (_, trace) = fit_stochastic(&train, Some(&val), &cfg, &Compute::serial()).unwrap();
+    assert!(!trace.records.is_empty());
+    assert!(trace.records.iter().all(|r| r.val_auc.is_some()));
+    assert!(
+        trace.records.len() < 60,
+        "expected validation-AUC early stop, ran {} epochs",
+        trace.records.len()
+    );
+}
